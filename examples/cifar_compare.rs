@@ -1,0 +1,47 @@
+//! Reproduce the paper's CIFAR-10 experiment (§7.1, Table 2 / Figures 6-7)
+//! on the synthetic CIFAR lookalike — the paper's "harder optimisation
+//! problem" where the hybrid's advantage is largest.
+//!
+//!     cargo run --release --example cifar_compare -- --secs 20 --rounds 1
+
+use hybrid_sgd::experiments::config::{DatasetKind, ExpConfig};
+use hybrid_sgd::experiments::figures::comparison_charts;
+use hybrid_sgd::experiments::runner::{run_comparison, Algo};
+use hybrid_sgd::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(false);
+    let mut cfg = ExpConfig::default_for(DatasetKind::Cifar);
+    cfg.secs = args.f64_or("secs", cfg.secs);
+    cfg.rounds = args.usize_or("rounds", 1);
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.batch = args.usize_or("batch", cfg.batch);
+    cfg.step_mult = args.f64_or("step-mult", 3.0);
+
+    println!(
+        "CIFAR-10 comparison: {} workers, batch {}, schedule {}, {}s x {} rounds",
+        cfg.workers,
+        cfg.batch,
+        cfg.schedule(),
+        cfg.secs,
+        cfg.rounds
+    );
+    let cmp = run_comparison(&cfg)?;
+    println!("{}", comparison_charts("CIFAR-10 (synthetic)", &cmp));
+
+    let d = cmp.diff_vs(Algo::Async);
+    println!("hybrid − async, averaged over the training interval:");
+    println!("  test accuracy : {:+.3}   (paper Table 2 @(300,32): +4.849)", d.test_acc);
+    println!("  test loss     : {:+.3}   (paper: -0.137)", d.test_loss);
+    println!("  train loss    : {:+.3}   (paper: -0.139)", d.train_loss);
+    for (algo, avg) in &cmp.averaged {
+        println!(
+            "  {:<7} final acc {:>6.2}%  ({:.1} grads/s, {:.0} updates)",
+            algo.name(),
+            avg.test_acc.last().copied().unwrap_or(f64::NAN),
+            avg.grads_per_sec,
+            avg.updates_total
+        );
+    }
+    Ok(())
+}

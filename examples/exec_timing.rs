@@ -1,0 +1,26 @@
+use hybrid_sgd::engine::GradEngine;
+use hybrid_sgd::runtime::{init_params, Manifest, XlaEngine};
+use hybrid_sgd::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts")?;
+    for (model, batch, xd) in [("mlp", 32usize, 20usize), ("cnn_mnist", 32, 784), ("cnn_cifar", 32, 3072), ("transformer", 8, 64)] {
+        let mut rng = Pcg64::seeded(1);
+        let entry = man.model(model)?;
+        let params = init_params(entry, &mut rng)?;
+        let mut eng = XlaEngine::new(&man, model, Some(batch), "jnp", false)?;
+        let mut x = vec![0.1f32; batch * xd];
+        rng.fill_normal(&mut x, 1.0);
+        if model == "transformer" { for v in x.iter_mut() { *v = (v.abs() * 60.0).min(63.0).floor(); } }
+        let ydim = if model == "transformer" { 64 } else { 1 };
+        let y: Vec<i32> = (0..batch * ydim).map(|i| (i % 10) as i32).collect();
+        let mut g = vec![0.0f32; params.len()];
+        eng.grad(&params, &x, &y, &mut g)?; // warmup
+        let t0 = Instant::now();
+        let n = 20;
+        for _ in 0..n { eng.grad(&params, &x, &y, &mut g)?; }
+        println!("{model:<12} b{batch}: {:.2} ms/grad", t0.elapsed().as_secs_f64() * 1000.0 / n as f64);
+    }
+    Ok(())
+}

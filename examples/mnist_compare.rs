@@ -1,0 +1,47 @@
+//! Reproduce the paper's MNIST experiment (§7.1, Table 1 / Figures 4-5):
+//! train the CNN under all three aggregation policies from identical
+//! initialisation and print the metric curves + interval-mean differences.
+//!
+//!     cargo run --release --example mnist_compare -- --secs 12 --rounds 1
+
+use hybrid_sgd::experiments::config::{DatasetKind, ExpConfig};
+use hybrid_sgd::experiments::figures::comparison_charts;
+use hybrid_sgd::experiments::runner::{run_comparison, Algo};
+use hybrid_sgd::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(false);
+    let mut cfg = ExpConfig::default_for(DatasetKind::Mnist);
+    cfg.secs = args.f64_or("secs", cfg.secs);
+    cfg.rounds = args.usize_or("rounds", 1);
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.batch = args.usize_or("batch", cfg.batch);
+    cfg.step_mult = args.f64_or("step-mult", 3.0); // paper: step 300
+
+    println!(
+        "MNIST comparison: {} workers, batch {}, schedule {}, {}s x {} rounds",
+        cfg.workers,
+        cfg.batch,
+        cfg.schedule(),
+        cfg.secs,
+        cfg.rounds
+    );
+    let cmp = run_comparison(&cfg)?;
+    println!("{}", comparison_charts("MNIST (synthetic)", &cmp));
+
+    let d = cmp.diff_vs(Algo::Async);
+    println!("hybrid − async, averaged over the training interval:");
+    println!("  test accuracy : {:+.3}   (paper Table 1 @(300,32): +1.374)", d.test_acc);
+    println!("  test loss     : {:+.3}   (paper: -0.047)", d.test_loss);
+    println!("  train loss    : {:+.3}   (paper: -0.047)", d.train_loss);
+    for (algo, avg) in &cmp.averaged {
+        println!(
+            "  {:<7} final acc {:>6.2}%  ({:.1} grads/s, staleness {:.2})",
+            algo.name(),
+            avg.test_acc.last().copied().unwrap_or(f64::NAN),
+            avg.grads_per_sec,
+            avg.mean_staleness
+        );
+    }
+    Ok(())
+}

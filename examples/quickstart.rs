@@ -1,0 +1,103 @@
+//! Quickstart: train a small MLP on the paper's random-cluster dataset with
+//! the smooth-switch hybrid parameter server, through the full AOT/XLA
+//! stack, and print the learning curve.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Flags: --secs F --workers N --policy <async|sync|hybrid:step:133>
+
+use hybrid_sgd::coordinator::{train, DelayModel, EvalSet, Policy, RunInputs, Schedule, TrainConfig};
+use hybrid_sgd::data::{random_cluster, Batcher};
+use hybrid_sgd::runtime::{default_artifact_dir, engine_factories, init_params, Manifest};
+use hybrid_sgd::util::cli::Args;
+use hybrid_sgd::util::plot::{render, Curve};
+use hybrid_sgd::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(false);
+    let secs = args.f64_or("secs", 8.0);
+    let workers = args.usize_or("workers", 6);
+    let policy = Policy::parse(&args.str_or("policy", "hybrid:step:150"))?;
+
+    // 1. Data: the paper's random 20-dim 10-class Gaussian clusters.
+    let mut rng = Pcg64::seeded(7);
+    let spec = random_cluster::ClusterSpec::default(); // 10k samples
+    let full = random_cluster::generate(&spec, &mut rng);
+    let (train_set, test_set) = full.split(0.8, &mut rng);
+    println!(
+        "dataset: {} train / {} test, {} dims, {} classes",
+        train_set.len(),
+        test_set.len(),
+        train_set.dim,
+        train_set.classes
+    );
+
+    // 2. Engines: AOT-compiled XLA executables (built by `make artifacts`).
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let init = init_params(manifest.model("mlp")?, &mut rng)?;
+    let (worker_engine, eval_engine) = engine_factories(&dir, "mlp", 32, "jnp")?;
+
+    // 3. Wire up the parameter server run.
+    let test = EvalSet::from_dataset(&test_set, 500, &mut rng);
+    let probe = EvalSet::from_dataset(&train_set, 500, &mut rng);
+    let train_arc = Arc::new(train_set);
+    let shards = train_arc.shard_indices(workers);
+    let inputs = RunInputs {
+        worker_engine,
+        eval_engine,
+        batch_source: Arc::new(move |id| {
+            Box::new(Batcher::new(
+                Arc::clone(&train_arc),
+                shards[id].clone(),
+                32,
+                Pcg64::new(1234, id as u64),
+            )) as Box<dyn hybrid_sgd::coordinator::worker::BatchSource>
+        }),
+        init_params: &init,
+        test: &test,
+        train_probe: &probe,
+    };
+    let cfg = TrainConfig {
+        policy,
+        workers,
+        lr: 0.01,
+        duration: Duration::from_secs_f64(secs),
+        delay: DelayModel::paper_default(),
+        seed: 7,
+        eval_interval: Duration::from_millis(400),
+        k_max: None,
+        compute_floor: Duration::from_millis(20),
+    };
+    let _ = Schedule::Step { step: 1 }; // (see threshold.rs for all schedules)
+
+    // 4. Train and report.
+    let m = train(&cfg, &inputs)?;
+    println!(
+        "\n{} gradients, {} updates, {} flushes, {:.1} grads/s, mean staleness {:.2}",
+        m.gradients_total,
+        m.updates_total,
+        m.flushes,
+        m.grads_per_sec(),
+        m.mean_staleness
+    );
+    println!(
+        "{}",
+        render(
+            "test accuracy (%)",
+            &[Curve {
+                label: "hybrid",
+                t: &m.test_acc.t,
+                v: &m.test_acc.v,
+            }],
+            64,
+            12
+        )
+    );
+    if let Some((tr, te, acc)) = m.final_metrics() {
+        println!("final: train loss {tr:.4}, test loss {te:.4}, test acc {acc:.2}%");
+    }
+    Ok(())
+}

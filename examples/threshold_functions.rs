@@ -1,0 +1,117 @@
+//! Paper §9 (future work): "Different monotonically increasing functions can
+//! also be used to see if all such functions can be straightaway plugged in
+//! without much change in performance."
+//!
+//! This example plugs every [`Schedule`] the framework implements into the
+//! hybrid policy and compares them on the random-cluster workload under
+//! identical initialisation.
+//!
+//!     cargo run --release --example threshold_functions -- --secs 8
+
+use hybrid_sgd::coordinator::{
+    train, DelayModel, EvalSet, Policy, RunInputs, Schedule, TrainConfig,
+};
+use hybrid_sgd::data::{random_cluster, Batcher};
+use hybrid_sgd::runtime::{default_artifact_dir, engine_factories, init_params, Manifest};
+use hybrid_sgd::util::cli::Args;
+use hybrid_sgd::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(false);
+    let secs = args.f64_or("secs", 8.0);
+    let workers = args.usize_or("workers", 6);
+
+    // Schedules tuned to reach K = workers around the same point of the run
+    // (~1600 expected arrivals at 200/s x 8 s).
+    let schedules: Vec<(&str, Schedule)> = vec![
+        ("step (paper)", Schedule::Step { step: 150 }),
+        ("linear", Schedule::Linear { rate: 1.0 / 150.0 }),
+        (
+            "exponential",
+            Schedule::Exponential {
+                step: 350,
+                growth: 2.0,
+            },
+        ),
+        (
+            "sigmoid",
+            Schedule::Sigmoid {
+                mid: 700.0,
+                scale: 180.0,
+            },
+        ),
+        ("constant k=1 (async)", Schedule::Constant { k: 1 }),
+    ];
+
+    let mut rng = Pcg64::seeded(21);
+    let spec = random_cluster::ClusterSpec::default();
+    let full = random_cluster::generate(&spec, &mut rng);
+    let (train_set, test_set) = full.split(0.8, &mut rng);
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let init = init_params(manifest.model("mlp")?, &mut rng)?;
+    let test = EvalSet::from_dataset(&test_set, 500, &mut rng);
+    let probe = EvalSet::from_dataset(&train_set, 500, &mut rng);
+    let train_arc = Arc::new(train_set);
+
+    println!("schedule comparison on the random dataset ({secs}s each, identical init):\n");
+    let mut results = Vec::new();
+    for (name, schedule) in schedules {
+        let (worker_engine, eval_engine) = engine_factories(&dir, "mlp", 32, "jnp")?;
+        let shards = train_arc.shard_indices(workers);
+        let train_arc2 = Arc::clone(&train_arc);
+        let inputs = RunInputs {
+            worker_engine,
+            eval_engine,
+            batch_source: Arc::new(move |id| {
+                Box::new(Batcher::new(
+                    Arc::clone(&train_arc2),
+                    shards[id].clone(),
+                    32,
+                    Pcg64::new(5555, id as u64),
+                )) as Box<dyn hybrid_sgd::coordinator::worker::BatchSource>
+            }),
+            init_params: &init,
+            test: &test,
+            train_probe: &probe,
+        };
+        let cfg = TrainConfig {
+            policy: Policy::Hybrid {
+                schedule: schedule.clone(),
+                strict: false,
+            },
+            workers,
+            lr: 0.01,
+            duration: Duration::from_secs_f64(secs),
+            delay: DelayModel::paper_default(),
+            seed: 21,
+            eval_interval: Duration::from_millis(400),
+            k_max: None,
+            compute_floor: Duration::from_millis(20),
+        };
+        let m = train(&cfg, &inputs)?;
+        let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+        println!(
+            "  {name:<22} final acc {acc:>6.2}%  test loss {te:.4}  train loss {tr:.4}  ({} updates, {} flushes)",
+            m.updates_total, m.flushes
+        );
+        results.push((name, acc));
+    }
+
+    let (best, best_acc) = results
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let (worst, worst_acc) = results
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "\nbest: {best} ({best_acc:.2}%), worst: {worst} ({worst_acc:.2}%) — \
+         if the monotone schedules cluster together (and above async), §9's \
+         conjecture holds on this workload"
+    );
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile package: L1 kernels, L2 models, AOT lowering."""

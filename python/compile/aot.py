@@ -1,0 +1,189 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts + manifest.json.
+
+This is the only place Python runs in the whole system, and it runs once
+(`make artifacts`). Every (model, graph, batch, variant) combination in SPECS
+is lowered with `jax.jit(...).lower(...)` and serialised as **HLO text** —
+not `HloModuleProto.serialize()`: jax >= 0.5 emits protos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+The manifest carries everything the Rust runtime needs to use the artifacts
+without Python: tensor shapes, the flat parameter layout with init specs,
+and dataset dims.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (model, graph-kind, batch, variant). The jnp variants are the runtime
+# defaults; pallas variants exist for the kernel-equivalence tests and the
+# runtime ablation bench (identical numerics, different HLO).
+SPECS = [
+    # mlp: the paper's random-dataset experiments sweep batch sizes (Table 3)
+    *[("mlp", "grad", b, "jnp") for b in (8, 16, 32, 64, 128)],
+    ("mlp", "grad", 32, "pallas"),
+    ("mlp", "eval", 100, "jnp"),
+    # cnn_mnist: Tables 1, Fig 4-5 use batch 32 and 64
+    ("cnn_mnist", "grad", 32, "jnp"),
+    ("cnn_mnist", "grad", 64, "jnp"),
+    ("cnn_mnist", "grad", 32, "pallas"),
+    ("cnn_mnist", "eval", 100, "jnp"),
+    # cnn_cifar: Table 2, Fig 6-7
+    ("cnn_cifar", "grad", 32, "jnp"),
+    ("cnn_cifar", "grad", 64, "jnp"),
+    ("cnn_cifar", "eval", 100, "jnp"),
+    # transformer: the end-to-end driver
+    ("transformer", "grad", 8, "jnp"),
+    ("transformer", "eval", 8, "jnp"),
+]
+
+# Parameter-server ops (L1 kernels as standalone artifacts), per model size.
+UPDATE_SPECS = [("mlp", "pallas"), ("mlp", "jnp")]
+REDUCE_K = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_graph(model, kind: str, batch: int, variant: str) -> str:
+    p = jax.ShapeDtypeStruct((M.param_count(model),), jnp.float32)
+    x = jax.ShapeDtypeStruct((batch, model.x_dim), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch, model.y_dim), jnp.int32)
+    if model.kind == "transformer":
+        # x is [B, S] token ids (as f32), y is [B, S]
+        x = jax.ShapeDtypeStruct((batch, model.seq_len), jnp.float32)
+        y = jax.ShapeDtypeStruct((batch, model.seq_len), jnp.int32)
+    fn = M.make_grad(model, variant) if kind == "grad" else M.make_eval(model, variant)
+    return to_hlo_text(jax.jit(fn).lower(p, x, y))
+
+
+def lower_update(pcount: int, variant: str) -> str:
+    from .kernels import ref, sgd_update
+
+    p = jax.ShapeDtypeStruct((pcount,), jnp.float32)
+    g = jax.ShapeDtypeStruct((pcount,), jnp.float32)
+    s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    fn = sgd_update.sgd_update if variant == "pallas" else ref.sgd_update_ref
+    return to_hlo_text(jax.jit(lambda a, b, c: (fn(a, b, c),)).lower(p, g, s))
+
+
+def lower_reduce(pcount: int, k: int, variant: str) -> str:
+    from .kernels import ref, sgd_update
+
+    st = jax.ShapeDtypeStruct((k, pcount), jnp.float32)
+    fn = sgd_update.buffer_reduce if variant == "pallas" else ref.buffer_reduce_ref
+    return to_hlo_text(jax.jit(lambda a: (fn(a),)).lower(st))
+
+
+def layer_json(spec: M.LayerSpec) -> dict:
+    return {
+        "name": spec.name,
+        "shape": list(spec.shape),
+        "init": spec.init,
+        "fan_in": spec.fan_in,
+        "fan_out": spec.fan_out,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated model filter (e.g. 'mlp,cnn_mnist') for faster rebuilds",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"format_version": 1, "models": {}, "artifacts": [], "ops": []}
+
+    for name in M.MODEL_NAMES:
+        if only and name not in only:
+            continue
+        model = M.build(name)
+        entry = {
+            "kind": model.kind,
+            "x_dim": model.x_dim,
+            "y_dim": model.y_dim,
+            "classes": model.classes,
+            "param_count": M.param_count(model),
+            "layers": [layer_json(s) for s in model.layers],
+        }
+        if model.kind == "transformer":
+            entry["vocab"] = model.vocab
+            entry["seq_len"] = model.seq_len
+        manifest["models"][name] = entry
+
+    for name, kind, batch, variant in SPECS:
+        if only and name not in only:
+            continue
+        model = M.build(name)
+        fname = f"{name}_{kind}_b{batch}_{variant}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        print(f"lowering {fname} ...", flush=True)
+        text = lower_graph(model, kind, batch, variant)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "model": name,
+                "kind": kind,
+                "batch": batch,
+                "variant": variant,
+                "path": fname,
+                "param_count": M.param_count(model),
+                "x_dim": model.x_dim if model.kind != "transformer" else model.seq_len,
+                "y_dim": model.y_dim,
+            }
+        )
+
+    for name, variant in UPDATE_SPECS:
+        if only and name not in only:
+            continue
+        model = M.build(name)
+        pc = M.param_count(model)
+        for op, lower in (("sgd_update", lower_update), ("buffer_reduce", None)):
+            fname = f"{op}_{name}_{variant}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            print(f"lowering {fname} ...", flush=True)
+            if op == "sgd_update":
+                text = lower_update(pc, variant)
+            else:
+                text = lower_reduce(pc, REDUCE_K, variant)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["ops"].append(
+                {
+                    "op": op,
+                    "model": name,
+                    "variant": variant,
+                    "path": fname,
+                    "param_count": pc,
+                    "k": REDUCE_K if op == "buffer_reduce" else 0,
+                }
+            )
+            _ = lower
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}: {len(manifest['artifacts'])} graphs, {len(manifest['ops'])} ops")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from . import matmul, ref, sgd_update
+
+__all__ = ["matmul", "ref", "sgd_update"]

@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + ReLU (dense layer).
+
+Hardware adaptation (DESIGN.md §6): the paper's workloads are dense-layer
+dominated; on TPU the dense layer is an MXU systolic-array matmul. The kernel
+tiles the output into (bm × bn) VMEM blocks over a 2-D grid; the K dimension
+stays resident per block (weights stream HBM→VMEM once per (i, j) tile via
+the BlockSpec index maps). f32 accumulation throughout.
+
+CPU execution uses `interpret=True` (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run); the VMEM-footprint estimate
+printed by `vmem_footprint` is the TPU-viability check.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (bm, bn) output tile: x_tile[bm, K] @ w_tile[K, bn] + b[bn]."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest block <= target; dims are padded to a multiple of it."""
+    return min(dim, target)
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad), size
+
+
+def _dense_impl(x, w, b, relu: bool, bm: int = 128, bn: int = 128):
+    """Fused dense layer via the Pallas kernel.
+
+    x: [m, k], w: [k, n], b: [n] -> [m, n] (f32). Arbitrary shapes are
+    supported by zero-padding m and n up to the block multiple and slicing
+    the result back (K needs no padding: it is loaded whole per tile).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm_ = _pick_block(m, bm)
+    bn_ = _pick_block(n, bn)
+    xp, m0 = _pad_to(x, 0, bm_)
+    wp, n0 = _pad_to(w, 1, bn_)
+    bp = jnp.pad(b, (0, wp.shape[1] - n))[None, :]  # [1, n_pad]
+    grid = (xp.shape[0] // bm_, wp.shape[1] // bn_)
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m0, :n0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu: bool = False):
+    """Differentiable fused dense layer (forward AND backward run the Pallas
+    kernel).
+
+    interpret-mode `pallas_call` has no built-in autodiff rule, so the VJP is
+    supplied explicitly — which is also the TPU-honest formulation: the
+    backward pass is two more MXU matmuls (dy·wᵀ and xᵀ·dy) through the same
+    tiled kernel.
+    """
+    return _dense_impl(x, w, b, relu)
+
+
+def _dense_fwd(x, w, b, relu):
+    y = _dense_impl(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _dense_bwd(relu, res, dy):
+    x, w, y = res
+    if relu:
+        dy = dy * (y > 0.0).astype(dy.dtype)
+    zb_k = jnp.zeros((w.shape[0],), jnp.float32)
+    zb_n = jnp.zeros((w.shape[1],), jnp.float32)
+    dx = _dense_impl(dy, w.T, zb_k, False)
+    dw = _dense_impl(x.T, dy, zb_n, False)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def matmul(x, w):
+    """Plain matmul through the same kernel (zero bias, no ReLU)."""
+    return dense(x, w, jnp.zeros((w.shape[1],), jnp.float32), False)
+
+
+def vmem_footprint(m: int, k: int, n: int, bm: int = 128, bn: int = 128) -> int:
+    """Bytes of VMEM one grid step touches (x-tile + w-tile + out-tile + bias).
+
+    TPU v4 VMEM is ~16 MiB/core; DESIGN.md §Perf uses this to argue the
+    chosen tiling is TPU-viable for every layer in the model zoo.
+    """
+    bm_ = min(m, bm)
+    bn_ = min(n, bn)
+    floats = bm_ * k + k * bn_ + bm_ * bn_ + bn_
+    return 4 * floats
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, bm: int = 128, bn: int = 128) -> float:
+    """Fraction of 128x128 MXU lanes a tile keeps busy (structural estimate).
+
+    interpret-mode wall time is *not* a TPU proxy; this ratio (tile area vs
+    MXU area, capped at 1) is what EXPERIMENTS.md §Perf reports per layer.
+    """
+    bm_ = min(m, bm)
+    bn_ = min(n, bn)
+    return min(1.0, (bm_ * bn_) / (128.0 * 128.0)) * min(1.0, k / 128.0)

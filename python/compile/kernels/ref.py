@@ -1,0 +1,37 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+Each Pallas kernel in this package has a `*_ref` twin here with identical
+semantics; `python/tests/test_kernels.py` sweeps shapes/dtypes with
+hypothesis and asserts allclose. The L2 model can be built against either
+implementation (the `variant` argument of `model.build`), which is also how
+the jnp-vs-pallas artifact pair for the runtime benches is produced.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul: [m, k] @ [k, n] -> [m, n]."""
+    return jnp.matmul(x, w)
+
+
+def dense_ref(x, w, b, relu: bool):
+    """Fused dense layer: x @ w + b, optional ReLU."""
+    y = jnp.matmul(x, w) + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def sgd_update_ref(params, grad_sum, scale):
+    """Fused parameter-server update: theta - scale * grad_sum.
+
+    `scale` = lr / k for a flush of k buffered gradients. Shapes: all [p],
+    scale broadcastable scalar (shape [1]).
+    """
+    return params - scale * grad_sum
+
+
+def buffer_reduce_ref(stacked):
+    """Sum k stacked gradients: [k, p] -> [p]."""
+    return jnp.sum(stacked, axis=0)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused parameter-server update  theta - scale * grad_sum.
+
+The aggregation step the paper's contribution centres on: after a hybrid
+flush of k buffered gradients the PS applies one averaged SGD step. Fusing
+the scale-and-subtract into a single 1-D tiled kernel keeps the update
+bandwidth-bound with exactly one read of theta, one read of grad_sum and one
+write — the roofline for this op.
+
+Also here: the buffer-reduction kernel summing k stacked gradients (the
+flush's other half, exposed separately so the runtime bench can compare the
+XLA path against the Rust-native accumulating buffer).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(p_ref, g_ref, s_ref, o_ref):
+    o_ref[...] = p_ref[...] - s_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def sgd_update(params, grad_sum, scale, bp: int = 4096):
+    """params, grad_sum: [p]; scale: [1] (lr / k). Returns updated [p]."""
+    (p,) = params.shape
+    bp_ = min(p, bp)
+    rem = p % bp_
+    pad = 0 if rem == 0 else bp_ - rem
+    pp = jnp.pad(params, (0, pad))
+    gp = jnp.pad(grad_sum, (0, pad))
+    grid = (pp.shape[0] // bp_,)
+    out = pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp_,), lambda i: (i,)),
+            pl.BlockSpec((bp_,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(pp.shape, jnp.float32),
+        interpret=True,
+    )(pp, gp, scale)
+    return out[:p]
+
+
+def _reduce_kernel(s_ref, o_ref):
+    o_ref[...] = jnp.sum(s_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def buffer_reduce(stacked, bp: int = 4096):
+    """Sum k stacked gradients: [k, p] -> [p], tiled along p."""
+    k, p = stacked.shape
+    bp_ = min(p, bp)
+    rem = p % bp_
+    pad = 0 if rem == 0 else bp_ - rem
+    sp = jnp.pad(stacked, ((0, 0), (0, pad)))
+    grid = (sp.shape[1] // bp_,)
+    out = pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bp_), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bp_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sp.shape[1],), jnp.float32),
+        interpret=True,
+    )(sp)
+    return out[:p]
+
+
+def update_vmem_footprint(p: int, bp: int = 4096) -> int:
+    """Bytes of VMEM per grid step (theta + grad + out tiles)."""
+    bp_ = min(p, bp)
+    return 4 * (3 * bp_ + 1)

@@ -1,0 +1,379 @@
+"""L2: the paper's models as JAX functions over a single flat parameter
+vector, plus their grad/eval graphs.
+
+Every model exposes the same AOT interface, which is what the Rust runtime
+compiles and calls:
+
+    grad(params f32[P], x f32[B, x_dim], y s32[B, y_dim]) -> (loss f32, grads f32[P])
+    eval(params f32[P], x f32[B, x_dim], y s32[B, y_dim]) -> (sum_loss f32, correct f32)
+
+The flat-parameter layout is defined by `Model.layers` (name, shape, init)
+in order; the same specs are exported into `manifest.json` so the Rust side
+can initialise parameters without running Python (`runtime/init.rs`
+replicates the init distributions with its own RNG — the *distribution*
+matters for the experiments, not bit-equality).
+
+`variant` selects the dense-layer implementation: `jnp` (pure XLA ops — the
+fast runtime default) or `pallas` (the L1 kernel; convolution is lowered to
+im2col + the same kernel, the TPU hardware adaptation of DESIGN.md §6).
+pytest asserts the two variants agree numerically.
+"""
+
+import dataclasses
+import math
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pallas_matmul
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One parameter tensor in the flat layout."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "glorot_uniform" | "zeros" | "ones" | "normal:<std>"
+    fan_in: int = 0
+    fan_out: int = 0
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def glorot(name, shape, fan_in, fan_out):
+    return LayerSpec(name, tuple(shape), "glorot_uniform", fan_in, fan_out)
+
+
+def zeros(name, shape):
+    return LayerSpec(name, tuple(shape), "zeros")
+
+
+def ones(name, shape):
+    return LayerSpec(name, tuple(shape), "ones")
+
+
+def normal(name, shape, std):
+    return LayerSpec(name, tuple(shape), f"normal:{std}")
+
+
+def unpack(params, specs: List[LayerSpec]):
+    """Slice the flat vector into the per-layer tensors."""
+    out = []
+    off = 0
+    for s in specs:
+        out.append(params[off : off + s.size].reshape(s.shape))
+        off += s.size
+    assert off == params.shape[0], f"param count mismatch: {off} vs {params.shape[0]}"
+    return out
+
+
+def _dense(variant: str, x, w, b, relu: bool):
+    if variant == "pallas":
+        return pallas_matmul.dense(x, w, b, relu)
+    return kref.dense_ref(x, w, b, relu)
+
+
+# --------------------------------------------------------------------------
+# MLP (the paper's random-dataset workload, §7.2-7.4)
+# --------------------------------------------------------------------------
+
+
+class Mlp:
+    """Fully-connected ReLU net over `dims`, NLL loss."""
+
+    kind = "mlp"
+
+    def __init__(self, name: str, dims: List[int]):
+        self.name = name
+        self.dims = dims
+        self.x_dim = dims[0]
+        self.classes = dims[-1]
+        self.y_dim = 1
+        self.layers: List[LayerSpec] = []
+        for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+            self.layers.append(glorot(f"w{i}", (di, do), di, do))
+            self.layers.append(zeros(f"b{i}", (do,)))
+
+    def logits(self, params, x, variant):
+        ts = unpack(params, self.layers)
+        h = x
+        n = len(self.dims) - 1
+        for i in range(n):
+            w, b = ts[2 * i], ts[2 * i + 1]
+            h = _dense(variant, h, w, b, relu=(i + 1 < n))
+        return h
+
+    def per_item_nll_and_pred(self, params, x, y, variant):
+        lg = self.logits(params, x, variant)
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(lp, y, axis=-1)[:, 0]
+        pred = jnp.argmax(lg, axis=-1)
+        return nll, pred, y[:, 0]
+
+
+# --------------------------------------------------------------------------
+# CNNs (the paper's MNIST / CIFAR-10 workloads, §7.1)
+# --------------------------------------------------------------------------
+
+
+class Cnn:
+    """conv(3x3, same) -> relu -> maxpool2, twice; then dense head.
+
+    Input is the flat planar image (C*H*W), reshaped to NCHW. In the pallas
+    variant convolutions run as im2col + the L1 matmul kernel (conv ->
+    MXU-shaped GEMM), dense layers via the same kernel.
+    """
+
+    kind = "cnn"
+
+    def __init__(self, name, channels, side, conv_ch: List[int], hidden: int, classes: int):
+        self.name = name
+        self.c, self.side = channels, side
+        self.conv_ch = conv_ch
+        self.hidden = hidden
+        self.classes = classes
+        self.x_dim = channels * side * side
+        self.y_dim = 1
+        side_out = side // (2 ** len(conv_ch))
+        self.flat_dim = conv_ch[-1] * side_out * side_out
+        self.layers = []
+        ic = channels
+        for i, oc in enumerate(conv_ch):
+            rf = ic * 9
+            self.layers.append(glorot(f"conv{i}_w", (oc, ic, 3, 3), rf, oc * 9))
+            self.layers.append(zeros(f"conv{i}_b", (oc,)))
+            ic = oc
+        self.layers.append(glorot("fc0_w", (self.flat_dim, hidden), self.flat_dim, hidden))
+        self.layers.append(zeros("fc0_b", (hidden,)))
+        self.layers.append(glorot("fc1_w", (hidden, classes), hidden, classes))
+        self.layers.append(zeros("fc1_b", (classes,)))
+
+    def _conv(self, variant, x, w, b):
+        """x: [B, C, H, W]; w: [OC, IC, 3, 3]. 'same' padding."""
+        if variant == "pallas":
+            b_, c, h, wd = x.shape
+            oc = w.shape[0]
+            patches = jax.lax.conv_general_dilated_patches(
+                x,
+                filter_shape=(3, 3),
+                window_strides=(1, 1),
+                padding="SAME",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )  # [B, C*9, H, W]
+            cols = patches.transpose(0, 2, 3, 1).reshape(b_ * h * wd, c * 9)
+            wmat = w.reshape(oc, c * 9).T  # [C*9, OC]
+            out = pallas_matmul.dense(cols, wmat, b, relu=False)
+            return out.reshape(b_, h, wd, oc).transpose(0, 3, 1, 2)
+        out = jax.lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        return out + b[None, :, None, None]
+
+    @staticmethod
+    def _pool2(x):
+        return jax.lax.reduce_window(
+            x,
+            -jnp.inf,
+            jax.lax.max,
+            window_dimensions=(1, 1, 2, 2),
+            window_strides=(1, 1, 2, 2),
+            padding="VALID",
+        )
+
+    def logits(self, params, x, variant):
+        ts = unpack(params, self.layers)
+        b = x.shape[0]
+        h = x.reshape(b, self.c, self.side, self.side)
+        idx = 0
+        for _ in self.conv_ch:
+            h = self._conv(variant, h, ts[idx], ts[idx + 1])
+            idx += 2
+            h = jnp.maximum(h, 0.0)
+            h = self._pool2(h)
+        h = h.reshape(b, self.flat_dim)
+        h = _dense(variant, h, ts[idx], ts[idx + 1], relu=True)
+        h = _dense(variant, h, ts[idx + 2], ts[idx + 3], relu=False)
+        return h
+
+    per_item_nll_and_pred = Mlp.per_item_nll_and_pred
+
+
+# --------------------------------------------------------------------------
+# Decoder-only transformer LM (the end-to-end driver workload)
+# --------------------------------------------------------------------------
+
+
+class Transformer:
+    """Pre-LN causal transformer; tied-free head; NLL over all positions.
+
+    x arrives as f32 token ids [B, S] (the runtime's uniform f32 feature
+    interface) and is cast to int for the embedding gather.
+    """
+
+    kind = "transformer"
+
+    def __init__(self, name, vocab, seq_len, d_model, heads, depth, d_ff=None):
+        assert d_model % heads == 0
+        self.name = name
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.d = d_model
+        self.heads = heads
+        self.depth = depth
+        self.d_ff = d_ff or 4 * d_model
+        self.x_dim = seq_len
+        self.y_dim = seq_len
+        self.classes = vocab
+        self.layers = [
+            normal("embed", (vocab, d_model), 0.02),
+            normal("pos", (seq_len, d_model), 0.02),
+        ]
+        for l in range(depth):
+            p = f"blk{l}_"
+            self.layers += [
+                ones(p + "ln1_g", (d_model,)),
+                zeros(p + "ln1_b", (d_model,)),
+                glorot(p + "wq", (d_model, d_model), d_model, d_model),
+                glorot(p + "wk", (d_model, d_model), d_model, d_model),
+                glorot(p + "wv", (d_model, d_model), d_model, d_model),
+                glorot(p + "wo", (d_model, d_model), d_model, d_model),
+                ones(p + "ln2_g", (d_model,)),
+                zeros(p + "ln2_b", (d_model,)),
+                glorot(p + "w1", (d_model, self.d_ff), d_model, self.d_ff),
+                zeros(p + "b1", (self.d_ff,)),
+                glorot(p + "w2", (self.d_ff, d_model), self.d_ff, d_model),
+                zeros(p + "b2", (d_model,)),
+            ]
+        self.layers += [
+            ones("lnf_g", (d_model,)),
+            zeros("lnf_b", (d_model,)),
+            glorot("head_w", (d_model, vocab), d_model, vocab),
+            zeros("head_b", (vocab,)),
+        ]
+
+    @staticmethod
+    def _ln(x, g, b):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+    def _dense2(self, variant, x, w, b, relu=False):
+        """Dense over the last axis of a [B, S, d] tensor."""
+        b_, s, din = x.shape
+        y = _dense(variant, x.reshape(b_ * s, din), w, b, relu)
+        return y.reshape(b_, s, w.shape[1])
+
+    def logits(self, params, x, variant):
+        ts = unpack(params, self.layers)
+        it = iter(ts)
+        embed, pos = next(it), next(it)
+        b, s = x.shape
+        ids = x.astype(jnp.int32)
+        h = embed[ids] + pos[None, :s, :]
+        mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+        for _ in range(self.depth):
+            ln1_g, ln1_b = next(it), next(it)
+            wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+            ln2_g, ln2_b = next(it), next(it)
+            w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+            zb = jnp.zeros((self.d,), jnp.float32)
+            zf = jnp.zeros((self.d_ff,), jnp.float32)
+            a_in = self._ln(h, ln1_g, ln1_b)
+            q = self._dense2(variant, a_in, wq, zb)
+            k = self._dense2(variant, a_in, wk, zb)
+            v = self._dense2(variant, a_in, wv, zb)
+            hd = self.d // self.heads
+            q = q.reshape(b, s, self.heads, hd).transpose(0, 2, 1, 3)
+            k = k.reshape(b, s, self.heads, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(b, s, self.heads, hd).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+            att = jnp.where(mask[None, None] > 0, att, -1e30)
+            att = jax.nn.softmax(att, axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, self.d)
+            h = h + self._dense2(variant, ctx, wo, zb)
+            m_in = self._ln(h, ln2_g, ln2_b)
+            m = self._dense2(variant, m_in, w1, b1, relu=True)
+            _ = zf
+            h = h + self._dense2(variant, m, w2, b2)
+        lnf_g, lnf_b = next(it), next(it)
+        head_w, head_b = next(it), next(it)
+        h = self._ln(h, lnf_g, lnf_b)
+        return self._dense2(variant, h, head_w, head_b)  # [B, S, V]
+
+    def per_item_nll_and_pred(self, params, x, y, variant):
+        lg = self.logits(params, x, variant)  # [B, S, V]
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(lp, y[..., None], axis=-1)[..., 0]  # [B, S]
+        pred = jnp.argmax(lg, axis=-1)
+        return nll.reshape(-1), pred.reshape(-1), y.reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# The grad / eval graphs shared by every model
+# --------------------------------------------------------------------------
+
+
+def param_count(model) -> int:
+    return sum(s.size for s in model.layers)
+
+
+def make_loss(model, variant: str) -> Callable:
+    def loss_fn(params, x, y):
+        nll, _, _ = model.per_item_nll_and_pred(params, x, y, variant)
+        return jnp.mean(nll)
+
+    return loss_fn
+
+
+def make_grad(model, variant: str) -> Callable:
+    """(params, x, y) -> (loss, grads) — the worker hot-path graph."""
+    loss_fn = make_loss(model, variant)
+
+    def grad_fn(params, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        return loss, grads
+
+    return grad_fn
+
+
+def make_eval(model, variant: str) -> Callable:
+    """(params, x, y) -> (sum_nll, correct_count) over all label items."""
+
+    def eval_fn(params, x, y):
+        nll, pred, target = model.per_item_nll_and_pred(params, x, y, variant)
+        sum_loss = jnp.sum(nll)
+        correct = jnp.sum((pred == target).astype(jnp.float32))
+        return sum_loss, correct
+
+    return eval_fn
+
+
+# --------------------------------------------------------------------------
+# The model zoo (names referenced by aot.py and the Rust manifest)
+# --------------------------------------------------------------------------
+
+
+def build(name: str):
+    if name == "mlp":
+        # The paper's random-dataset model: 20-dim, 10 classes.
+        return Mlp("mlp", [20, 64, 64, 10])
+    if name == "cnn_mnist":
+        return Cnn("cnn_mnist", channels=1, side=28, conv_ch=[8, 16], hidden=64, classes=10)
+    if name == "cnn_cifar":
+        return Cnn("cnn_cifar", channels=3, side=32, conv_ch=[16, 32], hidden=64, classes=10)
+    if name == "transformer":
+        return Transformer("transformer", vocab=64, seq_len=64, d_model=64, heads=4, depth=2)
+    raise ValueError(f"unknown model {name!r}")
+
+
+MODEL_NAMES = ["mlp", "cnn_mnist", "cnn_cifar", "transformer"]

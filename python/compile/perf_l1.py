@@ -1,0 +1,71 @@
+"""L1 perf analysis: block-size sweep for the Pallas dense kernel.
+
+interpret=True wall time is a *functional* check only (it simulates the grid
+on CPU); the TPU-relevant outputs are the structural metrics — VMEM bytes
+per grid step and the MXU-utilisation estimate — for every dense shape the
+model zoo actually runs. Usage:
+
+    cd python && python -m compile.perf_l1
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+# every (m, k, n) dense shape in the model zoo at its training batch
+SHAPES = [
+    ("mlp l0 b32", 32, 20, 64),
+    ("mlp l1 b32", 32, 64, 64),
+    ("mlp head b128", 128, 64, 10),
+    ("cnn_mnist conv1 im2col", 32 * 28 * 28, 9, 8),
+    ("cnn_mnist conv2 im2col", 32 * 14 * 14, 72, 16),
+    ("cnn_mnist fc0", 32, 784, 64),
+    ("cnn_cifar fc0", 32, 2048, 64),
+    ("transformer qkv b8", 8 * 64, 64, 64),
+    ("transformer mlp b8", 8 * 64, 64, 256),
+]
+
+BLOCKS = [(32, 32), (64, 64), (128, 128), (256, 128)]
+VMEM = 16 * 1024 * 1024  # TPU v4 per-core VMEM
+
+
+def main() -> None:
+    print(f"{'shape':<26} {'(m,k,n)':<20} {'blocks':<10} {'VMEM/step':<12} "
+          f"{'MXU est':<8} {'interp ms':<10}")
+    for name, m, k, n in SHAPES:
+        best = None
+        for bm, bn in BLOCKS:
+            fp = matmul.vmem_footprint(m, k, n, bm, bn)
+            util = matmul.mxu_utilization_estimate(m, k, n, bm, bn)
+            if fp > VMEM // 2:
+                continue  # leave headroom for double-buffering
+            score = util
+            if best is None or score > best[2]:
+                best = (bm, bn, util, fp)
+        bm, bn, util, fp = best
+        x = jnp.ones((m, k), jnp.float32)
+        w = jnp.ones((k, n), jnp.float32)
+        b = jnp.zeros((n,), jnp.float32)
+        f = jax.jit(lambda x, w, b: matmul._dense_impl(x, w, b, False, bm, bn))
+        f(x, w, b).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            f(x, w, b).block_until_ready()
+        ms = (time.perf_counter() - t0) / 3 * 1000
+        print(
+            f"{name:<26} {str((m, k, n)):<20} {f'{bm}x{bn}':<10} "
+            f"{fp / 1024:>8.0f} KiB {util:>7.2f} {ms:>9.2f}"
+        )
+    print(
+        "\nAll selected tilings fit < 1/2 VMEM (double-buffer headroom); the"
+        "\nsmall-K im2col conv tiles are bandwidth-bound on MXU (util < 0.1) —"
+        "\nexpected for 3x3 convs; the fc / attention GEMMs reach the usable"
+        "\nrange. interpret-ms is functional only (not a TPU proxy)."
+    )
+
+
+if __name__ == "__main__":
+    main()

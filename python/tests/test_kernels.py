@@ -1,0 +1,133 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle (`ref.py`).
+
+hypothesis sweeps shapes; fixed cases pin the paper-relevant sizes. All
+kernels run interpret=True (the only executable mode on CPU PJRT).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref, sgd_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- dense ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 50),
+    n=st.integers(1, 40),
+    relu=st.booleans(),
+)
+def test_dense_matches_ref_shapes(m, k, n, relu):
+    x = rand(m * 7919 + 1, (m, k))
+    w = rand(k * 104729 + 2, (k, n))
+    b = rand(n + 3, (n,))
+    got = matmul.dense(x, w, b, relu)
+    want = ref.dense_ref(x, w, b, relu)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (32, 20, 64),     # mlp layer 0 at batch 32
+        (128, 64, 10),    # mlp head at batch 128
+        (100, 784, 64),   # cnn_mnist fc0 at eval batch
+        (256, 128, 128),  # block-aligned case
+        (1, 1, 1),        # degenerate
+    ],
+)
+def test_dense_paper_shapes(m, k, n):
+    x = rand(1, (m, k))
+    w = rand(2, (k, n))
+    b = rand(3, (n,))
+    got = matmul.dense(x, w, b, True)
+    want = ref.dense_ref(x, w, b, True)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)
+
+
+def test_dense_gradients_match_ref():
+    x = rand(1, (9, 13))
+    w = rand(2, (13, 5))
+    b = rand(3, (5,))
+
+    def f(x, w, b):
+        return jnp.sum(matmul.dense(x, w, b, True) ** 2)
+
+    def fr(x, w, b):
+        return jnp.sum(ref.dense_ref(x, w, b, True) ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g, gr):
+        np.testing.assert_allclose(np.array(a), np.array(c), rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_wrapper():
+    x = rand(4, (17, 6))
+    w = rand(5, (6, 11))
+    np.testing.assert_allclose(
+        np.array(matmul.matmul(x, w)), np.array(ref.matmul_ref(x, w)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_vmem_footprint_fits_tpu():
+    """Every dense layer in the model zoo must fit VMEM comfortably."""
+    VMEM = 16 * 1024 * 1024
+    for (m, k, n) in [(128, 784, 64), (128, 2048, 64), (512, 64, 256), (512, 64, 64)]:
+        assert matmul.vmem_footprint(m, k, n) < VMEM // 2, (m, k, n)
+
+
+def test_mxu_estimate_monotone():
+    small = matmul.mxu_utilization_estimate(8, 8, 8)
+    big = matmul.mxu_utilization_estimate(128, 128, 128)
+    assert 0.0 < small < big <= 1.0
+
+
+# ----------------------------------------------------------- sgd_update ---
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(1, 9000), scale=st.floats(0.0001, 1.0))
+def test_sgd_update_matches_ref(p, scale):
+    params = rand(p + 10, (p,))
+    gsum = rand(p + 11, (p,))
+    s = jnp.array([scale], jnp.float32)
+    got = sgd_update.sgd_update(params, gsum, s)
+    want = ref.sgd_update_ref(params, gsum, s)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-6)
+
+
+def test_sgd_update_paper_sizes():
+    # exact parameter counts of the model zoo
+    for p in (6154, 52138, 111936):
+        params = rand(p, (p,))
+        gsum = rand(p + 1, (p,))
+        s = jnp.array([0.01 / 8], jnp.float32)  # lr / k for a flush of 8
+        got = sgd_update.sgd_update(params, gsum, s)
+        want = ref.sgd_update_ref(params, gsum, s)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 12), p=st.integers(1, 5000))
+def test_buffer_reduce_matches_ref(k, p):
+    st_ = rand(k * 31 + p, (k, p))
+    got = sgd_update.buffer_reduce(st_)
+    want = ref.buffer_reduce_ref(st_)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_update_footprint():
+    assert sgd_update.update_vmem_footprint(111936) < 1024 * 1024

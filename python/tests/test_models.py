@@ -1,0 +1,123 @@
+"""L2 model correctness: shapes, gradient sanity, variant equivalence,
+and the flat-parameter layout contract the Rust runtime depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def init_like_rust(model, key=0, scale=None):
+    """Initialise a flat vector per the layer specs (mirrors runtime/init.rs)."""
+    rng = np.random.default_rng(key)
+    parts = []
+    for s in model.layers:
+        if s.init == "zeros":
+            parts.append(np.zeros(s.size, np.float32))
+        elif s.init == "ones":
+            parts.append(np.ones(s.size, np.float32))
+        elif s.init == "glorot_uniform":
+            limit = np.sqrt(6.0 / (s.fan_in + s.fan_out))
+            parts.append(rng.uniform(-limit, limit, s.size).astype(np.float32))
+        elif s.init.startswith("normal:"):
+            std = float(s.init.split(":")[1])
+            parts.append((rng.standard_normal(s.size) * std).astype(np.float32))
+        else:
+            raise ValueError(s.init)
+    return jnp.array(np.concatenate(parts))
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_param_count_matches_layers(name):
+    m = M.build(name)
+    assert M.param_count(m) == sum(s.size for s in m.layers)
+    # layout contract: every layer has positive size and a known init
+    for s in m.layers:
+        assert s.size > 0
+        assert s.init in ("zeros", "ones", "glorot_uniform") or s.init.startswith("normal:")
+
+
+@pytest.mark.parametrize("name,batch", [("mlp", 4), ("cnn_mnist", 2), ("cnn_cifar", 2)])
+def test_grad_shapes_and_loss(name, batch):
+    m = M.build(name)
+    params = init_like_rust(m)
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.uniform(0, 1, (batch, m.x_dim)).astype(np.float32))
+    y = jnp.array(rng.integers(0, m.classes, (batch, 1)).astype(np.int32))
+    loss, grads = M.make_grad(m, "jnp")(params, x, y)
+    assert grads.shape == params.shape
+    # fresh init → near-uniform predictions → loss ≈ ln(10)
+    assert 1.8 < float(loss) < 2.9
+    assert float(jnp.linalg.norm(grads)) > 0.0
+
+
+def test_transformer_grad_shapes():
+    m = M.build("transformer")
+    params = init_like_rust(m)
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.integers(0, m.vocab, (2, m.seq_len)).astype(np.float32))
+    y = jnp.array(rng.integers(0, m.vocab, (2, m.seq_len)).astype(np.int32))
+    loss, grads = M.make_grad(m, "jnp")(params, x, y)
+    assert grads.shape == params.shape
+    # ln(64) ≈ 4.16 at init
+    assert 3.5 < float(loss) < 4.8
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn_mnist"])
+def test_variants_agree(name):
+    m = M.build(name)
+    params = init_like_rust(m)
+    rng = np.random.default_rng(3)
+    batch = 4
+    x = jnp.array(rng.uniform(0, 1, (batch, m.x_dim)).astype(np.float32))
+    y = jnp.array(rng.integers(0, m.classes, (batch, 1)).astype(np.int32))
+    l1, g1 = M.make_grad(m, "jnp")(params, x, y)
+    l2, g2 = M.make_grad(m, "pallas")(params, x, y)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+    np.testing.assert_allclose(np.array(g1), np.array(g2), rtol=2e-2, atol=2e-4)
+
+
+def test_eval_counts():
+    m = M.build("mlp")
+    params = init_like_rust(m)
+    rng = np.random.default_rng(4)
+    n = 16
+    x = jnp.array(rng.uniform(0, 1, (n, m.x_dim)).astype(np.float32))
+    y = jnp.array(rng.integers(0, m.classes, (n, 1)).astype(np.int32))
+    sum_loss, correct = M.make_eval(m, "jnp")(params, x, y)
+    assert 0 <= int(correct) <= n
+    assert float(sum_loss) / n == pytest.approx(2.30, abs=0.6)
+
+
+def test_sgd_on_mlp_reduces_loss():
+    """A few hundred sequential SGD steps must learn a separable toy task."""
+    m = M.Mlp("toy", [4, 16, 2])
+    params = init_like_rust(m, key=5)
+    grad = jax.jit(lambda p, x, y: M.make_grad(m, "jnp")(p, x, y))
+    rng = np.random.default_rng(6)
+
+    def batch():
+        x = rng.standard_normal((16, 4)).astype(np.float32)
+        y = (x[:, 0] > x[:, 1]).astype(np.int32)[:, None]
+        return jnp.array(x), jnp.array(y)
+
+    x0, y0 = batch()
+    first, _ = grad(params, x0, y0)
+    for _ in range(200):
+        x, y = batch()
+        loss, g = grad(params, x, y)
+        params = params - 0.1 * g
+    x1, y1 = batch()
+    last, _ = grad(params, x1, y1)
+    assert float(last) < float(first) * 0.6
+
+
+def test_unpack_rejects_wrong_size():
+    m = M.build("mlp")
+    bad = jnp.zeros((M.param_count(m) + 1,), jnp.float32)
+    with pytest.raises(AssertionError):
+        m.logits(bad, jnp.zeros((1, m.x_dim)), "jnp")

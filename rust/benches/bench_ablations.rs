@@ -1,0 +1,219 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   1. smooth vs strict hybrid (does blocking help or hurt?)
+//!   2. threshold-function family (paper §9: are monotone schedules
+//!      interchangeable?)
+//!   3. engine ablation: native-Rust backprop vs AOT XLA executables at the
+//!      coordinator level (how much does the engine choice move end metrics?)
+//!
+//! Runs on the native engine by default (fast, no artifacts needed);
+//! ablation 3 requires artifacts and skips without them.
+
+use hybrid_sgd::coordinator::worker::BatchSource;
+use hybrid_sgd::coordinator::{
+    train, DelayModel, EvalSet, Policy, RunInputs, RunMetrics, Schedule, TrainConfig,
+};
+use hybrid_sgd::data::{random_cluster, Batcher, Dataset};
+use hybrid_sgd::engine::{factory, GradEngine};
+use hybrid_sgd::native::MlpEngine;
+use hybrid_sgd::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIMS: [usize; 4] = [20, 64, 64, 10];
+
+struct Fixture {
+    train_set: Arc<Dataset>,
+    test: EvalSet,
+    probe: EvalSet,
+    init: Vec<f32>,
+}
+
+fn fixture() -> Fixture {
+    let mut rng = Pcg64::seeded(77);
+    let spec = random_cluster::ClusterSpec::default();
+    let full = random_cluster::generate(&spec, &mut rng);
+    let (train_set, test_set) = full.split(0.8, &mut rng);
+    Fixture {
+        test: EvalSet::from_dataset(&test_set, 400, &mut rng),
+        probe: EvalSet::from_dataset(&train_set, 400, &mut rng),
+        init: MlpEngine::init_params(&DIMS, &mut rng),
+        train_set: Arc::new(train_set),
+    }
+}
+
+fn run_native(fx: &Fixture, policy: Policy, secs: f64, compute_ms: f64) -> RunMetrics {
+    let workers = 6;
+    let batch = 32;
+    let dims: Vec<usize> = DIMS.to_vec();
+    let dims2 = dims.clone();
+    let shards = fx.train_set.shard_indices(workers);
+    let train_arc = Arc::clone(&fx.train_set);
+    let inputs = RunInputs {
+        worker_engine: factory(move || {
+            Ok(Box::new(MlpEngine::new(dims.clone(), batch)) as Box<dyn GradEngine>)
+        }),
+        eval_engine: factory(move || {
+            Ok(Box::new(MlpEngine::new(dims2.clone(), 100)) as Box<dyn GradEngine>)
+        }),
+        batch_source: Arc::new(move |id| {
+            Box::new(Batcher::new(
+                Arc::clone(&train_arc),
+                shards[id].clone(),
+                batch,
+                Pcg64::new(7, id as u64),
+            )) as Box<dyn BatchSource>
+        }),
+        init_params: &fx.init,
+        test: &fx.test,
+        train_probe: &fx.probe,
+    };
+    let cfg = TrainConfig {
+        policy,
+        workers,
+        lr: 0.01,
+        duration: Duration::from_secs_f64(secs),
+        delay: DelayModel::paper_default(),
+        seed: 7,
+        eval_interval: Duration::from_millis(300),
+        k_max: None,
+        compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
+    };
+    train(&cfg, &inputs).expect("run failed")
+}
+
+fn report(name: &str, m: &RunMetrics) {
+    let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+    println!(
+        "  {name:<28} acc {acc:>6.2}%  test-loss {te:.4}  train-loss {tr:.4}  \
+         ({} grads, {} updates, staleness {:.2})",
+        m.gradients_total, m.updates_total, m.mean_staleness
+    );
+}
+
+fn main() {
+    hybrid_sgd::util::logging::set_level(hybrid_sgd::util::logging::Level::Off);
+    let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+    let secs = if quick { 1.5 } else { 8.0 };
+    let compute_ms = if quick { 0.0 } else { 20.0 };
+    let step = if quick { 30 } else { 150 };
+    let fx = fixture();
+
+    println!("== ablation 1: smooth vs strict hybrid ({secs}s each) ==");
+    for strict in [false, true] {
+        let m = run_native(
+            &fx,
+            Policy::Hybrid {
+                schedule: Schedule::Step { step },
+                strict,
+            },
+            secs,
+            compute_ms,
+        );
+        report(if strict { "strict (blocking)" } else { "smooth (paper default)" }, &m);
+    }
+
+    println!("\n== ablation 2: threshold-function family (paper §9) ==");
+    let schedules: Vec<(&str, Schedule)> = vec![
+        ("step (paper)", Schedule::Step { step }),
+        (
+            "linear",
+            Schedule::Linear {
+                rate: 1.0 / step as f64,
+            },
+        ),
+        (
+            "exponential",
+            Schedule::Exponential {
+                step: step * 2,
+                growth: 2.0,
+            },
+        ),
+        (
+            "sigmoid",
+            Schedule::Sigmoid {
+                mid: (step * 4) as f64,
+                scale: step as f64,
+            },
+        ),
+        ("const k=1 (async)", Schedule::Constant { k: 1 }),
+        ("const k=W (batched)", Schedule::Constant { k: 6 }),
+    ];
+    for (name, schedule) in schedules {
+        let m = run_native(
+            &fx,
+            Policy::Hybrid {
+                schedule,
+                strict: false,
+            },
+            secs,
+            compute_ms,
+        );
+        report(name, &m);
+    }
+    {
+        // §9 heuristic: staleness-driven adaptive K (no tuned step size)
+        let m = run_native(
+            &fx,
+            Policy::HybridAdaptive {
+                cfg: hybrid_sgd::coordinator::AdaptiveConfig::default(),
+                strict: false,
+            },
+            secs,
+            compute_ms,
+        );
+        report("adaptive (staleness-EWMA)", &m);
+    }
+
+    println!("\n== ablation 3: engine choice (native vs XLA) under hybrid ==");
+    {
+        let m = run_native(
+            &fx,
+            Policy::Hybrid {
+                schedule: Schedule::Step { step },
+                strict: false,
+            },
+            secs,
+            compute_ms,
+        );
+        report("native backprop", &m);
+    }
+    match hybrid_sgd::runtime::engine_factories("artifacts", "mlp", 32, "jnp") {
+        Ok((worker_engine, eval_engine)) => {
+            let workers = 6;
+            let shards = fx.train_set.shard_indices(workers);
+            let train_arc = Arc::clone(&fx.train_set);
+            let inputs = RunInputs {
+                worker_engine,
+                eval_engine,
+                batch_source: Arc::new(move |id| {
+                    Box::new(Batcher::new(
+                        Arc::clone(&train_arc),
+                        shards[id].clone(),
+                        32,
+                        Pcg64::new(7, id as u64),
+                    )) as Box<dyn BatchSource>
+                }),
+                init_params: &fx.init,
+                test: &fx.test,
+                train_probe: &fx.probe,
+            };
+            let cfg = TrainConfig {
+                policy: Policy::Hybrid {
+                    schedule: Schedule::Step { step },
+                    strict: false,
+                },
+                workers,
+                lr: 0.01,
+                duration: Duration::from_secs_f64(secs),
+                delay: DelayModel::paper_default(),
+                seed: 7,
+                eval_interval: Duration::from_millis(300),
+                k_max: None,
+                compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
+            };
+            let m = train(&cfg, &inputs).expect("xla run failed");
+            report("AOT XLA (jnp)", &m);
+        }
+        Err(e) => println!("  AOT XLA: SKIP ({e})"),
+    }
+}

@@ -1,0 +1,99 @@
+//! L3 hot-path micro-benchmarks: the parameter-server operations that run
+//! once per gradient arrival. Targets (DESIGN.md §7): PS cost ≪ grad
+//! latency (≥ ~0.2 ms), no allocation in the per-gradient loop.
+//!
+//!     cargo bench --bench bench_hotpath          # full
+//!     BENCH_QUICK=1 cargo bench ...              # smoke
+
+use hybrid_sgd::coordinator::buffer::GradientBuffer;
+use hybrid_sgd::coordinator::params::ParamStore;
+use hybrid_sgd::coordinator::{Aggregator, Policy, Schedule};
+use hybrid_sgd::util::bench::{black_box, Bencher};
+use hybrid_sgd::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== L3 parameter-server hot path ==");
+
+    // Parameter sizes of the model zoo.
+    for &dim in &[6_154usize, 52_138, 111_936] {
+        let mut rng = Pcg64::seeded(1);
+        let mut grad = vec![0.0f32; dim];
+        rng.fill_normal(&mut grad, 1.0);
+
+        let mut ps = ParamStore::new(vec![0.1; dim], 0.01);
+        b.bench(&format!("apply_single d={dim}"), || {
+            ps.apply_single(black_box(&grad));
+        });
+
+        let mut buffer = GradientBuffer::new(dim, 8);
+        b.bench(&format!("buffer_push d={dim}"), || {
+            buffer.push(black_box(&grad), 3, 0, 0);
+            if buffer.len() >= 64 {
+                buffer.clear();
+            }
+        });
+
+        let mut ps2 = ParamStore::new(vec![0.1; dim], 0.01);
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: Schedule::Step { step: 100 },
+                strict: false,
+            },
+            dim,
+            8,
+        );
+        let mut w = 0usize;
+        b.bench(&format!("hybrid on_gradient d={dim}"), || {
+            let v = ps2.version();
+            agg.on_gradient(&mut ps2, black_box(&grad), w % 8, v, 1.0);
+            w += 1;
+        });
+
+        // The reply copy (θ cloned into the channel message).
+        let theta = vec![0.1f32; dim];
+        b.bench(&format!("reply param copy d={dim}"), || {
+            black_box(theta.clone());
+        });
+    }
+
+    // Policy comparison at fixed dim: per-arrival overhead must be flat.
+    let dim = 52_138;
+    let mut rng = Pcg64::seeded(2);
+    let mut grad = vec![0.0f32; dim];
+    rng.fill_normal(&mut grad, 1.0);
+    for (name, policy) in [
+        ("async", Policy::Async),
+        ("sync", Policy::Sync),
+        (
+            "hybrid",
+            Policy::Hybrid {
+                schedule: Schedule::Step { step: 50 },
+                strict: false,
+            },
+        ),
+    ] {
+        let mut ps = ParamStore::new(vec![0.1; dim], 0.01);
+        let mut agg = Aggregator::new(policy, dim, 8);
+        let mut w = 0usize;
+        b.bench(&format!("on_gradient policy={name}"), || {
+            let v = ps.version();
+            agg.on_gradient(&mut ps, black_box(&grad), w % 8, v, 1.0);
+            w += 1;
+        });
+    }
+
+    b.summary();
+    // Headline check: the hybrid PS step on the largest model must be far
+    // below the cheapest gradient latency (~0.2 ms for the mlp artifact).
+    let hot = b
+        .results
+        .iter()
+        .find(|r| r.name.contains("hybrid on_gradient d=111936"))
+        .unwrap();
+    println!(
+        "\nPS overhead on the largest model: {:.1} µs/gradient ({}x below the 0.2 ms mlp grad)",
+        hot.mean_ns / 1e3,
+        (200_000.0 / hot.mean_ns) as u64
+    );
+}

@@ -1,0 +1,111 @@
+//! Runtime-layer benchmarks: AOT executable latency per model and variant
+//! (L2), the fused PS-update kernel vs the native loop (L1 vs L3), and the
+//! native-Rust engine as the baseline comparator.
+//!
+//! Skips gracefully when `artifacts/` is absent.
+
+use hybrid_sgd::engine::GradEngine;
+use hybrid_sgd::native::MlpEngine;
+use hybrid_sgd::runtime::{init_params, Manifest, UpdateOp, XlaEngine};
+use hybrid_sgd::util::bench::{black_box, Bencher};
+use hybrid_sgd::util::rng::Pcg64;
+
+fn main() {
+    let Ok(man) = Manifest::load("artifacts") else {
+        println!("SKIP bench_runtime: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let mut b = Bencher::new();
+    println!("== runtime: AOT executable latency (grad, per call) ==");
+
+    for (model, batch, xd, yd) in [
+        ("mlp", 32usize, 20usize, 1usize),
+        ("cnn_mnist", 32, 784, 1),
+        ("cnn_cifar", 32, 3072, 1),
+        ("transformer", 8, 64, 64),
+    ] {
+        let mut rng = Pcg64::seeded(3);
+        let entry = man.model(model).unwrap();
+        let params = init_params(entry, &mut rng).unwrap();
+        let mut x = vec![0.0f32; batch * xd];
+        rng.fill_normal(&mut x, 0.5);
+        if model == "transformer" {
+            for v in x.iter_mut() {
+                *v = (v.abs() * 60.0).min(63.0).floor();
+            }
+        }
+        let y: Vec<i32> = (0..batch * yd).map(|i| (i % 10) as i32).collect();
+        let mut g = vec![0.0f32; params.len()];
+        let mut eng = XlaEngine::new(&man, model, Some(batch), "jnp", false).unwrap();
+        let r = b.bench(&format!("grad {model} b{batch} jnp"), || {
+            black_box(eng.grad(&params, &x, &y, &mut g).unwrap());
+        });
+        let samples = if model == "transformer" { batch * yd } else { batch };
+        println!(
+            "      -> {:.0} samples/s",
+            r.throughput(samples as f64)
+        );
+    }
+
+    println!("\n== L1 ablation: pallas vs jnp variants (identical numerics) ==");
+    for variant in ["jnp", "pallas"] {
+        for model in ["mlp", "cnn_mnist"] {
+            if man.graph(model, "grad", 32, variant).is_err() {
+                continue;
+            }
+            let mut rng = Pcg64::seeded(4);
+            let entry = man.model(model).unwrap();
+            let params = init_params(entry, &mut rng).unwrap();
+            let xd = entry.x_dim;
+            let mut x = vec![0.0f32; 32 * xd];
+            rng.fill_normal(&mut x, 0.5);
+            let y: Vec<i32> = (0..32).map(|i| (i % 10) as i32).collect();
+            let mut g = vec![0.0f32; params.len()];
+            let mut eng = XlaEngine::new(&man, model, Some(32), variant, false).unwrap();
+            b.bench(&format!("grad {model} b32 {variant}"), || {
+                black_box(eng.grad(&params, &x, &y, &mut g).unwrap());
+            });
+        }
+    }
+
+    println!("\n== PS update: fused AOT kernel vs native loop ==");
+    {
+        let mut rng = Pcg64::seeded(5);
+        let n = man.model("mlp").unwrap().param_count;
+        let mut params = vec![0.1f32; n];
+        let mut gsum = vec![0.0f32; n];
+        rng.fill_normal(&mut gsum, 1.0);
+        for variant in ["jnp", "pallas"] {
+            if man.op("sgd_update", "mlp", variant).is_err() {
+                continue;
+            }
+            let mut op = UpdateOp::new(&man, "mlp", variant).unwrap();
+            b.bench(&format!("sgd_update xla {variant} d={n}"), || {
+                op.apply(&mut params, &gsum, 0.00125).unwrap();
+            });
+        }
+        b.bench(&format!("sgd_update native loop d={n}"), || {
+            for (p, &gv) in params.iter_mut().zip(&gsum) {
+                *p -= 0.00125 * gv;
+            }
+            black_box(&params);
+        });
+    }
+
+    println!("\n== native baseline engine (coordinator benches use this) ==");
+    {
+        let mut rng = Pcg64::seeded(6);
+        let dims = vec![20usize, 64, 64, 10];
+        let params = MlpEngine::init_params(&dims, &mut rng);
+        let mut eng = MlpEngine::new(dims, 32);
+        let mut x = vec![0.0f32; 32 * 20];
+        rng.fill_normal(&mut x, 1.0);
+        let y: Vec<i32> = (0..32).map(|i| (i % 10) as i32).collect();
+        let mut g = vec![0.0f32; params.len()];
+        b.bench("grad mlp b32 native-rust", || {
+            black_box(eng.grad(&params, &x, &y, &mut g).unwrap());
+        });
+    }
+
+    b.summary();
+}

@@ -1,0 +1,83 @@
+//! End-to-end benchmark: regenerate every paper table at reduced scale and
+//! report the measured hybrid−async differences next to the paper's values.
+//! This is the per-table/figure harness mandated by the reproduction: one
+//! bench case per table (figures 8-10 derive from tables 3-5; figures 4-7
+//! derive from the table 1-2 comparisons — the `all` CLI command writes
+//! their CSVs).
+//!
+//! Scale: `BENCH_QUICK=1` → seconds (native engine); default → a few
+//! minutes (XLA engine, reduced budgets); `BENCH_PAPER=1` → the paper's
+//! full 25x5x100 s protocol (hours).
+
+use hybrid_sgd::experiments::config::{DatasetKind, EngineKind, ExpConfig};
+use hybrid_sgd::experiments::tables::run_table;
+use std::time::Instant;
+
+fn base_for(id: usize, quick: bool, paper: bool) -> ExpConfig {
+    let dataset = match id {
+        1 => DatasetKind::Mnist,
+        2 => DatasetKind::Cifar,
+        _ => DatasetKind::Random,
+    };
+    let mut cfg = ExpConfig::default_for(dataset);
+    if paper {
+        cfg = cfg.paper_scale();
+    } else if quick {
+        cfg = cfg.quick();
+        cfg.engine = EngineKind::Native;
+        if dataset != DatasetKind::Random {
+            // native engine only implements the MLP; quick mode exercises
+            // the pipeline shape, not the CNN numerics
+            cfg.dataset = DatasetKind::Random;
+            cfg.compute_ms = 0.0;
+        }
+        cfg.secs = 2.0;
+        cfg.rounds = 1;
+    } else {
+        // container-scale defaults, single round to keep `cargo bench` sane
+        cfg.rounds = 1;
+    }
+    cfg
+}
+
+fn main() {
+    hybrid_sgd::util::logging::set_level(hybrid_sgd::util::logging::Level::Warn);
+    let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+    let paper = std::env::var("BENCH_PAPER").map_or(false, |v| v == "1");
+    println!(
+        "== table regeneration ({}) ==",
+        if paper {
+            "paper scale"
+        } else if quick {
+            "quick / native"
+        } else {
+            "container scale / XLA"
+        }
+    );
+
+    let mut wins = 0usize;
+    let mut cols = 0usize;
+    for id in 1..=5usize {
+        let cfg = base_for(id, quick, paper);
+        let t0 = Instant::now();
+        match run_table(id, &cfg) {
+            Ok(table) => {
+                println!("{}", table.to_markdown());
+                println!(
+                    "table {id}: {:.1}s wall, hybrid wins accuracy in {:.0}% of columns\n",
+                    t0.elapsed().as_secs_f64(),
+                    table.win_fraction() * 100.0
+                );
+                wins += table
+                    .measured
+                    .iter()
+                    .filter(|d| d.test_acc > 0.0)
+                    .count();
+                cols += table.measured.len();
+            }
+            Err(e) => println!("table {id}: SKIP ({e})\n"),
+        }
+    }
+    println!("== overall: hybrid beats async on accuracy in {wins}/{cols} configurations ==");
+    println!("(paper: 23/24 across Tables 1-5; shape target is a clear majority)");
+}

@@ -1,0 +1,192 @@
+//! Adaptive threshold controller — the paper's §9 future work:
+//! "Currently, finding the threshold for aggregating parameters is based
+//! upon experimental data. However, a good heuristic can be devised which
+//! can form a base for selecting the aggregation threshold for different
+//! types of models and datasets."
+//!
+//! The heuristic implemented here closes the loop on the quantity the
+//! algorithm is actually trading off: **observed gradient staleness**. The
+//! controller keeps an EWMA of the staleness of applied gradients and of the
+//! per-flush loss trend, and moves K:
+//!
+//! - staleness above target ⇒ the async component is hurting ⇒ raise K
+//!   (more synchronous aggregation);
+//! - staleness below target *and* the loss still falling steeply ⇒ cheap
+//!   asynchronous progress is available ⇒ lower K;
+//! - loss plateaued ⇒ drift K towards `k_max` (variance reduction is all
+//!   that is left to gain).
+//!
+//! K moves by at most ±1 per adjustment window, so the transition stays
+//! smooth — the same property the paper's step schedule has by construction.
+
+/// Configuration for the adaptive controller.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Target mean staleness of applied gradients (in parameter versions).
+    /// The natural scale is O(workers): async sits near `W − 1`, sync at 0.
+    pub target_staleness: f64,
+    /// Gradient arrivals per adjustment window.
+    pub window: usize,
+    /// EWMA smoothing for staleness / loss (0 < alpha ≤ 1).
+    pub alpha: f64,
+    /// Relative loss-improvement per window below which the run counts as
+    /// plateaued.
+    pub plateau_eps: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            target_staleness: 2.0,
+            window: 64,
+            alpha: 0.2,
+            plateau_eps: 0.005,
+        }
+    }
+}
+
+/// Stateful K controller driven by per-arrival observations.
+#[derive(Clone, Debug)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    k: usize,
+    seen_in_window: usize,
+    staleness_ewma: f64,
+    loss_ewma: f64,
+    prev_window_loss: f64,
+    initialized: bool,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        AdaptiveController {
+            cfg,
+            k: 1,
+            seen_in_window: 0,
+            staleness_ewma: 0.0,
+            loss_ewma: 0.0,
+            prev_window_loss: f64::INFINITY,
+            initialized: false,
+        }
+    }
+
+    /// Current threshold.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn staleness_ewma(&self) -> f64 {
+        self.staleness_ewma
+    }
+
+    /// Observe one gradient arrival (staleness in versions, training loss
+    /// reported by the worker). Returns the possibly-updated K, clamped to
+    /// `[1, k_max]`.
+    pub fn observe(&mut self, staleness: u64, loss: f32, k_max: usize) -> usize {
+        let a = self.cfg.alpha;
+        if !self.initialized {
+            self.staleness_ewma = staleness as f64;
+            self.loss_ewma = loss as f64;
+            self.initialized = true;
+        } else {
+            self.staleness_ewma = (1.0 - a) * self.staleness_ewma + a * staleness as f64;
+            self.loss_ewma = (1.0 - a) * self.loss_ewma + a * loss as f64;
+        }
+        self.seen_in_window += 1;
+        if self.seen_in_window >= self.cfg.window {
+            self.seen_in_window = 0;
+            self.adjust();
+        }
+        self.k = self.k.clamp(1, k_max.max(1));
+        self.k
+    }
+
+    fn adjust(&mut self) {
+        let improving = if self.prev_window_loss.is_finite() && self.prev_window_loss.abs() > 1e-12
+        {
+            (self.prev_window_loss - self.loss_ewma) / self.prev_window_loss.abs()
+        } else {
+            1.0
+        };
+        self.prev_window_loss = self.loss_ewma;
+
+        if self.staleness_ewma > self.cfg.target_staleness {
+            // stale updates dominate: get more synchronous
+            self.k += 1;
+        } else if improving < self.cfg.plateau_eps {
+            // plateau: buy variance reduction
+            self.k += 1;
+        } else if self.staleness_ewma < self.cfg.target_staleness * 0.5 && self.k > 1 {
+            // plenty of fresh progress available: allow more asynchrony
+            self.k -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_async() {
+        let c = AdaptiveController::new(AdaptiveConfig::default());
+        assert_eq!(c.k(), 1);
+    }
+
+    #[test]
+    fn high_staleness_raises_k() {
+        let mut c = AdaptiveController::new(AdaptiveConfig {
+            window: 10,
+            ..Default::default()
+        });
+        // staleness 8 ≫ target 2, loss falling fast (no plateau trigger)
+        let mut loss = 10.0f32;
+        for _ in 0..100 {
+            c.observe(8, loss, 16);
+            loss *= 0.95;
+        }
+        assert!(c.k() >= 5, "K should climb under high staleness: {}", c.k());
+    }
+
+    #[test]
+    fn fresh_gradients_keep_k_low() {
+        let mut c = AdaptiveController::new(AdaptiveConfig {
+            window: 10,
+            ..Default::default()
+        });
+        let mut loss = 10.0f32;
+        for _ in 0..200 {
+            c.observe(0, loss, 16);
+            loss *= 0.9; // steady improvement, zero staleness
+        }
+        assert!(c.k() <= 2, "K should stay low: {}", c.k());
+    }
+
+    #[test]
+    fn plateau_drifts_k_up() {
+        let mut c = AdaptiveController::new(AdaptiveConfig {
+            window: 10,
+            ..Default::default()
+        });
+        for _ in 0..300 {
+            c.observe(1, 1.0, 8); // constant loss = plateau, low staleness
+        }
+        assert_eq!(c.k(), 8, "plateau should saturate K at k_max");
+    }
+
+    #[test]
+    fn k_respects_bounds_and_moves_by_one() {
+        let mut c = AdaptiveController::new(AdaptiveConfig {
+            window: 5,
+            ..Default::default()
+        });
+        let mut prev = c.k();
+        for i in 0..500 {
+            let stale = if i % 2 == 0 { 10 } else { 0 };
+            let k = c.observe(stale, 1.0, 6);
+            assert!((1..=6).contains(&k));
+            assert!(k.abs_diff(prev) <= 1, "K jumped {prev} -> {k}");
+            prev = k;
+        }
+    }
+}

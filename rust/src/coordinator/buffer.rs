@@ -1,0 +1,131 @@
+//! The gradient buffer at the heart of the hybrid algorithm.
+//!
+//! Arriving gradients are *summed in place* into one pre-allocated vector —
+//! the PS hot path never allocates and never stores k individual gradients
+//! (an O(k·d) memory / O(d) flush-time win over the naive list-of-gradients
+//! the paper sketches; `bench_hotpath` quantifies it). Staleness bookkeeping
+//! records, per buffered gradient, how many versions behind the gradient's
+//! base version was at arrival — the quantity the paper's narrative is about.
+
+/// Accumulating gradient buffer with staleness statistics.
+pub struct GradientBuffer {
+    sum: Vec<f32>,
+    count: usize,
+    /// Number of gradients per contributing worker in the current epoch.
+    per_worker: Vec<u32>,
+    /// Σ (current_version − base_version) over buffered gradients.
+    staleness_sum: u64,
+    max_staleness: u64,
+}
+
+impl GradientBuffer {
+    pub fn new(dim: usize, workers: usize) -> Self {
+        GradientBuffer {
+            sum: vec![0.0; dim],
+            count: 0,
+            per_worker: vec![0; workers],
+            staleness_sum: 0,
+            max_staleness: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Accumulate one gradient computed at `base_version` by `worker`,
+    /// with `current_version` the PS version at arrival.
+    pub fn push(&mut self, grad: &[f32], worker: usize, base_version: u64, current_version: u64) {
+        debug_assert_eq!(grad.len(), self.sum.len());
+        for (s, &g) in self.sum.iter_mut().zip(grad) {
+            *s += g;
+        }
+        self.count += 1;
+        self.per_worker[worker] += 1;
+        let stale = current_version.saturating_sub(base_version);
+        self.staleness_sum += stale;
+        self.max_staleness = self.max_staleness.max(stale);
+    }
+
+    /// Summed gradient (valid while count > 0).
+    pub fn sum(&self) -> &[f32] {
+        &self.sum
+    }
+
+    /// How many distinct workers contributed this epoch.
+    pub fn distinct_workers(&self) -> usize {
+        self.per_worker.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Mean staleness of buffered gradients.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.max_staleness
+    }
+
+    /// Reset for the next epoch. O(d) but only on flush boundaries.
+    pub fn clear(&mut self) {
+        self.sum.fill(0.0);
+        self.count = 0;
+        self.per_worker.fill(0);
+        self.staleness_sum = 0;
+        self.max_staleness = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_sums() {
+        let mut b = GradientBuffer::new(3, 2);
+        b.push(&[1.0, 2.0, 3.0], 0, 0, 0);
+        b.push(&[0.5, 0.5, 0.5], 1, 0, 0);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.sum(), &[1.5, 2.5, 3.5]);
+        assert_eq!(b.distinct_workers(), 2);
+    }
+
+    #[test]
+    fn staleness_tracking() {
+        let mut b = GradientBuffer::new(1, 3);
+        b.push(&[0.0], 0, 5, 5); // fresh
+        b.push(&[0.0], 1, 2, 5); // 3 behind
+        b.push(&[0.0], 2, 0, 6); // 6 behind
+        assert_eq!(b.mean_staleness(), 3.0);
+        assert_eq!(b.max_staleness(), 6);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut b = GradientBuffer::new(2, 2);
+        b.push(&[1.0, 1.0], 0, 0, 4);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.sum(), &[0.0, 0.0]);
+        assert_eq!(b.distinct_workers(), 0);
+        assert_eq!(b.mean_staleness(), 0.0);
+        assert_eq!(b.max_staleness(), 0);
+    }
+
+    #[test]
+    fn same_worker_multiple_contributions() {
+        let mut b = GradientBuffer::new(1, 2);
+        b.push(&[1.0], 0, 0, 0);
+        b.push(&[1.0], 0, 0, 0);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.distinct_workers(), 1);
+    }
+}

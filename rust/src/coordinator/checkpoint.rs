@@ -1,0 +1,174 @@
+//! Run checkpointing: persist/restore parameters + run metadata.
+//!
+//! Format: a little-endian binary parameter file (`<name>.params.bin`,
+//! magic + version + dim + f32 payload + xor checksum) next to a JSON
+//! metadata file (`<name>.meta.json`) with the model name, PS version,
+//! policy string and metric summary. A production deployment would
+//! checkpoint periodically from the PS thread; here checkpointing is offered
+//! at run boundaries (`Checkpoint::save` / `load`) and covered by tests.
+
+use crate::util::json::{parse, Json};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"HSGDCKPT";
+const FORMAT_VERSION: u32 = 1;
+
+/// A saved training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub policy: String,
+    pub ps_version: u64,
+    pub params: Vec<f32>,
+}
+
+fn xor_checksum(data: &[u8]) -> u64 {
+    let mut acc = 0xDEADBEEFu64;
+    for chunk in data.chunks(8) {
+        let mut buf = [0u8; 8];
+        buf[..chunk.len()].copy_from_slice(chunk);
+        acc = acc.rotate_left(13) ^ u64::from_le_bytes(buf);
+    }
+    acc
+}
+
+impl Checkpoint {
+    /// Write `<dir>/<name>.params.bin` + `<dir>/<name>.meta.json`.
+    pub fn save(&self, dir: impl AsRef<Path>, name: &str) -> anyhow::Result<(PathBuf, PathBuf)> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let bin_path = dir.join(format!("{name}.params.bin"));
+        let meta_path = dir.join(format!("{name}.meta.json"));
+
+        let payload: Vec<u8> = self
+            .params
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let mut f = std::fs::File::create(&bin_path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&FORMAT_VERSION.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        f.write_all(&payload)?;
+        f.write_all(&xor_checksum(&payload).to_le_bytes())?;
+
+        let meta = Json::from_pairs(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("ps_version", Json::Num(self.ps_version as f64)),
+            ("param_count", Json::Num(self.params.len() as f64)),
+        ]);
+        std::fs::write(&meta_path, meta.to_string_pretty())?;
+        Ok((bin_path, meta_path))
+    }
+
+    /// Load and verify a checkpoint pair.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> anyhow::Result<Checkpoint> {
+        let dir = dir.as_ref();
+        let bin_path = dir.join(format!("{name}.params.bin"));
+        let meta_path = dir.join(format!("{name}.meta.json"));
+
+        let mut f = std::fs::File::open(&bin_path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", bin_path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
+        let mut v4 = [0u8; 4];
+        f.read_exact(&mut v4)?;
+        anyhow::ensure!(
+            u32::from_le_bytes(v4) == FORMAT_VERSION,
+            "unsupported checkpoint version"
+        );
+        let mut n8 = [0u8; 8];
+        f.read_exact(&mut n8)?;
+        let n = u64::from_le_bytes(n8) as usize;
+        let mut payload = vec![0u8; n * 4];
+        f.read_exact(&mut payload)?;
+        let mut ck = [0u8; 8];
+        f.read_exact(&mut ck)?;
+        anyhow::ensure!(
+            u64::from_le_bytes(ck) == xor_checksum(&payload),
+            "checkpoint checksum mismatch (corrupt file)"
+        );
+        let params: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let meta = parse(&std::fs::read_to_string(&meta_path)?)?;
+        anyhow::ensure!(
+            meta.usize_field("param_count")? == n,
+            "meta/binary param_count mismatch"
+        );
+        Ok(Checkpoint {
+            model: meta.str_field("model")?,
+            policy: meta.str_field("policy")?,
+            ps_version: meta.usize_field("ps_version")? as u64,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hsgd_ckpt_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model: "mlp".into(),
+            policy: "hybrid:step:500".into(),
+            ps_version: 1234,
+            params: (0..1000).map(|i| (i as f32).sin()).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = tmpdir("rt");
+        let ck = sample();
+        ck.save(&dir, "run1").unwrap();
+        let back = Checkpoint::load(&dir, "run1").unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmpdir("corrupt");
+        let ck = sample();
+        let (bin, _) = ck.save(&dir, "run1").unwrap();
+        // flip a payload byte
+        let mut bytes = std::fs::read(&bin).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&bin, bytes).unwrap();
+        let err = Checkpoint::load(&dir, "run1").unwrap_err();
+        assert!(err.to_string().contains("checksum"));
+    }
+
+    #[test]
+    fn missing_files_error() {
+        let dir = tmpdir("missing");
+        assert!(Checkpoint::load(&dir, "nope").is_err());
+    }
+
+    #[test]
+    fn meta_mismatch_detected() {
+        let dir = tmpdir("meta");
+        let ck = sample();
+        let (_, meta) = ck.save(&dir, "run1").unwrap();
+        std::fs::write(
+            &meta,
+            r#"{"model":"mlp","policy":"async","ps_version":1,"param_count":7}"#,
+        )
+        .unwrap();
+        let err = Checkpoint::load(&dir, "run1").unwrap_err();
+        assert!(err.to_string().contains("mismatch"));
+    }
+}

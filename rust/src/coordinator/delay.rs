@@ -1,0 +1,116 @@
+//! Worker heterogeneity / communication-delay injection.
+//!
+//! The paper (§6): "to simulate the communication delays and faster/slower
+//! workers, we randomly introduced execution delays in 50% gradient workers.
+//! The execution delays were sampled randomly from a normal distribution with
+//! a mean of 0 and a standard deviation of 0.25 during each gradient
+//! calculated by the worker." Negative draws are clamped to zero (a delay
+//! cannot be negative), matching the only sane reading.
+
+use crate::util::rng::Pcg64;
+use std::time::Duration;
+
+/// Delay model for one training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DelayModel {
+    /// Fraction of workers subject to delays (paper: 0.5).
+    pub affected_fraction: f64,
+    /// Normal(mean, std) in seconds, clamped at 0 (paper: mean 0, σ 0.25).
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl DelayModel {
+    /// The paper's default configuration.
+    pub fn paper_default() -> Self {
+        DelayModel {
+            affected_fraction: 0.5,
+            mean: 0.0,
+            std: 0.25,
+        }
+    }
+
+    /// No delays at all.
+    pub fn none() -> Self {
+        DelayModel {
+            affected_fraction: 0.0,
+            mean: 0.0,
+            std: 0.0,
+        }
+    }
+
+    /// Same parameters with a different σ (Table 5 sweeps σ).
+    pub fn with_std(mut self, std: f64) -> Self {
+        self.std = std;
+        self
+    }
+
+    /// Decide (deterministically, from the run RNG) which workers are slow.
+    pub fn assign(&self, workers: usize, rng: &mut Pcg64) -> Vec<bool> {
+        let n_affected = (workers as f64 * self.affected_fraction).round() as usize;
+        let mut flags = vec![false; workers];
+        for f in flags.iter_mut().take(n_affected) {
+            *f = true;
+        }
+        rng.shuffle(&mut flags);
+        flags
+    }
+
+    /// Sample the delay for one gradient computation of an affected worker.
+    pub fn sample(&self, rng: &mut Pcg64) -> Duration {
+        if self.std == 0.0 && self.mean <= 0.0 {
+            return Duration::ZERO;
+        }
+        let secs = rng.normal_ms(self.mean, self.std).max(0.0);
+        Duration::from_secs_f64(secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_affects_half() {
+        let m = DelayModel::paper_default();
+        let flags = m.assign(26, &mut Pcg64::seeded(1));
+        assert_eq!(flags.iter().filter(|&&f| f).count(), 13);
+    }
+
+    #[test]
+    fn none_is_zero() {
+        let m = DelayModel::none();
+        let mut rng = Pcg64::seeded(2);
+        assert_eq!(m.sample(&mut rng), Duration::ZERO);
+        assert!(m.assign(8, &mut rng).iter().all(|&f| !f));
+    }
+
+    #[test]
+    fn samples_clamped_nonnegative_with_correct_tail() {
+        let m = DelayModel::paper_default();
+        let mut rng = Pcg64::seeded(3);
+        let n = 10_000;
+        let mut zeros = 0;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let d = m.sample(&mut rng).as_secs_f64();
+            assert!(d >= 0.0);
+            if d == 0.0 {
+                zeros += 1;
+            }
+            sum += d;
+        }
+        // N(0, .25) clamped at 0: ~half the mass at 0, mean = σ/√(2π) ≈ 0.0997
+        let frac0 = zeros as f64 / n as f64;
+        assert!((frac0 - 0.5).abs() < 0.03, "zero fraction {frac0}");
+        let mean = sum / n as f64;
+        assert!((mean - 0.0997).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn with_std_overrides() {
+        let m = DelayModel::paper_default().with_std(1.25);
+        assert_eq!(m.std, 1.25);
+        assert_eq!(m.affected_fraction, 0.5);
+    }
+}

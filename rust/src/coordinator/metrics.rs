@@ -1,0 +1,154 @@
+//! Metric recording for training runs.
+//!
+//! The evaluator thread records (wall-time, train-loss, test-loss, test-acc)
+//! samples; the server loop records the threshold/buffer trajectory. A
+//! finished run is summarised in [`RunMetrics`], exportable as JSON and
+//! consumable by the experiment runner (resampling + round averaging happens
+//! in `experiments::runner`).
+
+use crate::util::json::Json;
+use crate::util::stats::Series;
+
+/// Everything measured during one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Mean NLL on the fixed train probe subset, vs wall-clock seconds.
+    pub train_loss: Series,
+    /// Mean NLL on the test set.
+    pub test_loss: Series,
+    /// Accuracy (%) on the test set — the paper reports percentages.
+    pub test_acc: Series,
+    /// Threshold K observed at flush boundaries.
+    pub k_trajectory: Series,
+    /// Parameter version over time (update progress).
+    pub version_trajectory: Series,
+
+    // run-level counters
+    pub gradients_total: u64,
+    pub updates_total: u64,
+    pub flushes: u64,
+    pub mean_staleness: f64,
+    pub wall_time: f64,
+    pub per_worker_grads: Vec<u64>,
+}
+
+impl RunMetrics {
+    /// Gradient throughput over the whole run.
+    pub fn grads_per_sec(&self) -> f64 {
+        if self.wall_time > 0.0 {
+            self.gradients_total as f64 / self.wall_time
+        } else {
+            0.0
+        }
+    }
+
+    /// Imbalance: max/min gradients produced per worker (∞ if a worker
+    /// produced none). 1.0 = perfectly even.
+    pub fn worker_imbalance(&self) -> f64 {
+        let max = self.per_worker_grads.iter().copied().max().unwrap_or(0);
+        let min = self.per_worker_grads.iter().copied().min().unwrap_or(0);
+        if min == 0 {
+            f64::INFINITY
+        } else {
+            max as f64 / min as f64
+        }
+    }
+
+    /// Final (last-sample) metric triple, if any evaluation happened.
+    pub fn final_metrics(&self) -> Option<(f64, f64, f64)> {
+        if self.test_acc.is_empty() {
+            return None;
+        }
+        Some((
+            *self.train_loss.v.last()?,
+            *self.test_loss.v.last()?,
+            *self.test_acc.v.last()?,
+        ))
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn series(s: &Series) -> Json {
+            Json::from_pairs(vec![("t", Json::arr_f64(&s.t)), ("v", Json::arr_f64(&s.v))])
+        }
+        Json::from_pairs(vec![
+            ("train_loss", series(&self.train_loss)),
+            ("test_loss", series(&self.test_loss)),
+            ("test_acc", series(&self.test_acc)),
+            ("k_trajectory", series(&self.k_trajectory)),
+            ("version_trajectory", series(&self.version_trajectory)),
+            ("gradients_total", Json::Num(self.gradients_total as f64)),
+            ("updates_total", Json::Num(self.updates_total as f64)),
+            ("flushes", Json::Num(self.flushes as f64)),
+            ("mean_staleness", Json::Num(self.mean_staleness)),
+            ("wall_time", Json::Num(self.wall_time)),
+            ("grads_per_sec", Json::Num(self.grads_per_sec())),
+            (
+                "per_worker_grads",
+                Json::Arr(
+                    self.per_worker_grads
+                        .iter()
+                        .map(|&g| Json::Num(g as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunMetrics {
+        let mut m = RunMetrics::default();
+        m.train_loss.push(0.0, 2.3);
+        m.train_loss.push(1.0, 1.5);
+        m.test_loss.push(0.0, 2.3);
+        m.test_loss.push(1.0, 1.6);
+        m.test_acc.push(0.0, 10.0);
+        m.test_acc.push(1.0, 45.0);
+        m.gradients_total = 100;
+        m.updates_total = 80;
+        m.wall_time = 2.0;
+        m.per_worker_grads = vec![30, 40, 30];
+        m
+    }
+
+    #[test]
+    fn throughput_and_finals() {
+        let m = sample();
+        assert_eq!(m.grads_per_sec(), 50.0);
+        let (tr, te, acc) = m.final_metrics().unwrap();
+        assert_eq!((tr, te, acc), (1.5, 1.6, 45.0));
+    }
+
+    #[test]
+    fn imbalance() {
+        let m = sample();
+        assert!((m.worker_imbalance() - 40.0 / 30.0).abs() < 1e-12);
+        let empty = RunMetrics {
+            per_worker_grads: vec![5, 0],
+            ..Default::default()
+        };
+        assert!(empty.worker_imbalance().is_infinite());
+    }
+
+    #[test]
+    fn json_roundtrips_fields() {
+        let m = sample();
+        let j = m.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.usize_field("gradients_total").unwrap(), 100);
+        assert_eq!(
+            parsed
+                .get("test_acc")
+                .unwrap()
+                .get("v")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            2
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! L3 — the parameter-server coordinator (the paper's contribution).
+//!
+//! Layering, bottom-up:
+//! - [`threshold`] — monotone threshold schedules `K(n)` (paper Algorithm 1
+//!   step 3; §9 pluggable variants).
+//! - [`params`] / [`buffer`] — versioned parameter store and the summing
+//!   gradient buffer.
+//! - [`policy`] — the pure aggregation state machine: async / sync /
+//!   hybrid(smooth|strict).
+//! - [`delay`] — the paper's worker-heterogeneity injection model.
+//! - [`server`] / [`worker`] — the threaded parameter-server protocol.
+//! - [`trainer`] — one-call orchestration of a full training run.
+//! - [`metrics`] — metric time series and run summaries.
+
+pub mod adaptive;
+pub mod buffer;
+pub mod checkpoint;
+pub mod compress;
+pub mod delay;
+pub mod metrics;
+pub mod params;
+pub mod policy;
+pub mod server;
+pub mod threshold;
+pub mod trainer;
+pub mod worker;
+
+pub use adaptive::{AdaptiveConfig, AdaptiveController};
+pub use delay::DelayModel;
+pub use metrics::RunMetrics;
+pub use policy::{Aggregator, Outcome, Policy};
+pub use threshold::Schedule;
+pub use trainer::{train, EvalSet, RunInputs, TrainConfig};

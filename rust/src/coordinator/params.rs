@@ -1,0 +1,148 @@
+//! The parameter store: versioned flat parameter vector + SGD application.
+//!
+//! Owned by the parameter-server thread; a read-only snapshot is shared with
+//! the evaluator through a mutex (snapshots happen a few times per second,
+//! updates thousands of times — the lock is uncontended by design: the PS
+//! only takes it when publishing, see `publish_every`).
+
+use std::sync::{Arc, Mutex};
+
+/// Versioned parameters with in-place SGD updates.
+pub struct ParamStore {
+    theta: Vec<f32>,
+    version: u64,
+    lr: f32,
+    /// Shared snapshot for the evaluator thread (param vector + version).
+    snapshot: Arc<Mutex<(Vec<f32>, u64)>>,
+    /// Publish the snapshot every this many updates (and on demand).
+    publish_every: u64,
+}
+
+impl ParamStore {
+    pub fn new(init: Vec<f32>, lr: f32) -> Self {
+        let snapshot = Arc::new(Mutex::new((init.clone(), 0)));
+        Self::with_shared(init, lr, snapshot)
+    }
+
+    /// Construct around an externally created snapshot cell (the trainer
+    /// hands the same cell to the evaluator thread).
+    pub fn with_shared(init: Vec<f32>, lr: f32, snapshot: Arc<Mutex<(Vec<f32>, u64)>>) -> Self {
+        {
+            let mut s = snapshot.lock().unwrap();
+            s.0.clear();
+            s.0.extend_from_slice(&init);
+            s.1 = 0;
+        }
+        ParamStore {
+            theta: init,
+            version: 0,
+            lr,
+            snapshot,
+            publish_every: 8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.theta.is_empty()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Handle the evaluator uses to read snapshots.
+    pub fn snapshot_handle(&self) -> Arc<Mutex<(Vec<f32>, u64)>> {
+        Arc::clone(&self.snapshot)
+    }
+
+    /// θ ← θ − lr · g  (single gradient; the asynchronous application).
+    pub fn apply_single(&mut self, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.theta.len());
+        for (t, &g) in self.theta.iter_mut().zip(grad) {
+            *t -= self.lr * g;
+        }
+        self.bump();
+    }
+
+    /// θ ← θ − lr · (Σ grads) / count  (aggregated synchronous application).
+    /// `sum` is the pre-summed gradient buffer.
+    pub fn apply_mean(&mut self, sum: &[f32], count: usize) {
+        debug_assert_eq!(sum.len(), self.theta.len());
+        debug_assert!(count > 0);
+        let scale = self.lr / count as f32;
+        for (t, &s) in self.theta.iter_mut().zip(sum) {
+            *t -= scale * s;
+        }
+        self.bump();
+    }
+
+    fn bump(&mut self) {
+        self.version += 1;
+        if self.version % self.publish_every == 0 {
+            self.publish();
+        }
+    }
+
+    /// Push the current θ into the shared snapshot (called on flush
+    /// boundaries and at shutdown so the evaluator never lags far).
+    pub fn publish(&self) {
+        let mut snap = self.snapshot.lock().unwrap();
+        snap.0.copy_from_slice(&self.theta);
+        snap.1 = self.version;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_update_is_sgd() {
+        let mut ps = ParamStore::new(vec![1.0, 2.0], 0.1);
+        ps.apply_single(&[10.0, -10.0]);
+        assert_eq!(ps.theta(), &[0.0, 3.0]);
+        assert_eq!(ps.version(), 1);
+    }
+
+    #[test]
+    fn mean_update_averages() {
+        let mut ps = ParamStore::new(vec![0.0, 0.0], 1.0);
+        // sum of 4 gradients, each [1, 2] → mean [1, 2]
+        ps.apply_mean(&[4.0, 8.0], 4);
+        assert_eq!(ps.theta(), &[-1.0, -2.0]);
+    }
+
+    #[test]
+    fn snapshot_publishes() {
+        let mut ps = ParamStore::new(vec![5.0], 0.5);
+        let handle = ps.snapshot_handle();
+        ps.apply_single(&[2.0]);
+        ps.publish();
+        let snap = handle.lock().unwrap();
+        assert_eq!(snap.0, vec![4.0]);
+        assert_eq!(snap.1, 1);
+    }
+
+    #[test]
+    fn snapshot_auto_publishes_every_n() {
+        let mut ps = ParamStore::new(vec![0.0], 1.0);
+        let handle = ps.snapshot_handle();
+        for _ in 0..8 {
+            ps.apply_single(&[1.0]);
+        }
+        let snap = handle.lock().unwrap();
+        assert_eq!(snap.1, 8, "auto-publish at version 8");
+    }
+}

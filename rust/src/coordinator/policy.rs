@@ -1,0 +1,461 @@
+//! Aggregation policies: the decision core of the paper.
+//!
+//! [`Aggregator`] is a *pure* state machine (no threads, no channels) driven
+//! by the parameter-server loop with one call per gradient arrival — which
+//! makes the paper's algorithm directly unit- and property-testable. The
+//! server layer (`server.rs`) only routes messages.
+//!
+//! Semantics (DESIGN.md §2):
+//! - **Async** — apply every gradient on arrival (HOGWILD-style parameter
+//!   server, the paper's asynchronous baseline).
+//! - **Sync** — one gradient per worker per round; workers block at the
+//!   barrier; flush when all `W` contributed (the synchronous baseline).
+//! - **Hybrid smooth** (paper's Algorithm 1, default) — buffer every arrival;
+//!   flush an averaged update when `len(buffer) ≥ K(n)`; submitters never
+//!   block. Because θ is frozen between flushes, all buffered gradients
+//!   share one base version: sync-quality aggregation at async throughput.
+//! - **Hybrid strict** — same, but a worker that already contributed to the
+//!   current epoch blocks until the flush; at `K = W` this *is* sync.
+
+use super::adaptive::{AdaptiveConfig, AdaptiveController};
+use super::buffer::GradientBuffer;
+use super::params::ParamStore;
+use super::threshold::Schedule;
+
+/// Which aggregation algorithm the parameter server runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    Async,
+    Sync,
+    Hybrid { schedule: Schedule, strict: bool },
+    /// §9 future work: K driven by the observed-staleness controller
+    /// instead of a fixed schedule (see [`super::adaptive`]).
+    HybridAdaptive { cfg: AdaptiveConfig, strict: bool },
+}
+
+impl Policy {
+    /// Parse CLI syntax: `async`, `sync`, `hybrid:<schedule>`,
+    /// `hybrid-strict:<schedule>`.
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        if s == "async" {
+            return Ok(Policy::Async);
+        }
+        if s == "sync" {
+            return Ok(Policy::Sync);
+        }
+        if let Some(rest) = s.strip_prefix("hybrid-strict:") {
+            return Ok(Policy::Hybrid {
+                schedule: Schedule::parse(rest)?,
+                strict: true,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("hybrid:") {
+            return Ok(Policy::Hybrid {
+                schedule: Schedule::parse(rest)?,
+                strict: false,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("adaptive") {
+            let mut cfg = AdaptiveConfig::default();
+            if let Some(t) = rest.strip_prefix(':') {
+                cfg.target_staleness = t.parse().map_err(|_| {
+                    anyhow::anyhow!("bad adaptive target staleness `{t}`")
+                })?;
+            }
+            return Ok(Policy::HybridAdaptive { cfg, strict: false });
+        }
+        anyhow::bail!("unknown policy `{s}` (async | sync | hybrid:<sched> | hybrid-strict:<sched>)")
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::Async => write!(f, "async"),
+            Policy::Sync => write!(f, "sync"),
+            Policy::Hybrid { schedule, strict } => {
+                if *strict {
+                    write!(f, "hybrid-strict:{schedule}")
+                } else {
+                    write!(f, "hybrid:{schedule}")
+                }
+            }
+            Policy::HybridAdaptive { cfg, strict } => {
+                write!(
+                    f,
+                    "adaptive:{}{}",
+                    cfg.target_staleness,
+                    if *strict { ":strict" } else { "" }
+                )
+            }
+        }
+    }
+}
+
+/// What the server should do after one gradient arrival.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    /// Update applied immediately — reply to the submitter with fresh θ.
+    AppliedNow,
+    /// Gradient buffered — reply to the submitter with the *current* θ
+    /// (a stale read in the paper's terms); it keeps working.
+    Buffered,
+    /// Gradient buffered — the submitter must block until the next flush.
+    BufferedBlocked,
+    /// This arrival triggered a flush: an averaged update of `count`
+    /// gradients was applied. Reply to the submitter AND release everyone
+    /// blocked in this epoch.
+    Flushed {
+        count: usize,
+        distinct_workers: usize,
+        mean_staleness: f64,
+        k_at_flush: usize,
+    },
+}
+
+/// Statistics the aggregator keeps for the metrics pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct AggStats {
+    pub arrivals: u64,
+    pub applied_async: u64,
+    pub flushes: u64,
+    pub flushed_gradients: u64,
+    pub staleness_sum: f64,
+    pub blocked_total: u64,
+}
+
+/// The policy state machine.
+pub struct Aggregator {
+    policy: Policy,
+    buffer: GradientBuffer,
+    workers: usize,
+    k_max: usize,
+    adaptive: Option<AdaptiveController>,
+    pub stats: AggStats,
+}
+
+impl Aggregator {
+    pub fn new(policy: Policy, dim: usize, workers: usize) -> Self {
+        let adaptive = match &policy {
+            Policy::HybridAdaptive { cfg, .. } => {
+                Some(AdaptiveController::new(cfg.clone()))
+            }
+            _ => None,
+        };
+        Aggregator {
+            policy,
+            buffer: GradientBuffer::new(dim, workers),
+            workers,
+            k_max: workers,
+            adaptive,
+            stats: AggStats::default(),
+        }
+    }
+
+    /// Override the threshold cap (default = worker count).
+    pub fn with_k_max(mut self, k_max: usize) -> Self {
+        self.k_max = k_max.max(1);
+        self
+    }
+
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+
+    /// Current threshold value (1 for the baselines).
+    pub fn current_k(&self) -> usize {
+        match &self.policy {
+            Policy::Async => 1,
+            Policy::Sync => self.workers,
+            Policy::Hybrid { schedule, .. } => schedule.k(self.stats.arrivals, self.k_max),
+            Policy::HybridAdaptive { .. } => {
+                self.adaptive.as_ref().map(|a| a.k()).unwrap_or(1)
+            }
+        }
+    }
+
+    /// Number of gradients currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Feed one gradient; mutates `store` according to the policy.
+    /// `loss` is the worker-reported mini-batch loss (used by the adaptive
+    /// controller; pass anything for the fixed policies).
+    pub fn on_gradient(
+        &mut self,
+        store: &mut ParamStore,
+        grad: &[f32],
+        worker: usize,
+        base_version: u64,
+        loss: f32,
+    ) -> Outcome {
+        self.stats.arrivals += 1;
+        let stale = store.version().saturating_sub(base_version);
+        self.stats.staleness_sum += stale as f64;
+        if let Some(ctrl) = self.adaptive.as_mut() {
+            ctrl.observe(stale, loss, self.k_max);
+        }
+        match &self.policy {
+            Policy::Async => {
+                store.apply_single(grad);
+                self.stats.applied_async += 1;
+                Outcome::AppliedNow
+            }
+            Policy::Sync => {
+                self.buffer
+                    .push(grad, worker, base_version, store.version());
+                if self.buffer.distinct_workers() >= self.workers {
+                    self.flush(store)
+                } else {
+                    self.stats.blocked_total += 1;
+                    Outcome::BufferedBlocked
+                }
+            }
+            Policy::Hybrid { schedule, strict } => {
+                let k = schedule.k(self.stats.arrivals - 1, self.k_max);
+                self.buffer
+                    .push(grad, worker, base_version, store.version());
+                if self.buffer.len() >= k {
+                    self.flush(store)
+                } else if *strict {
+                    self.stats.blocked_total += 1;
+                    Outcome::BufferedBlocked
+                } else {
+                    Outcome::Buffered
+                }
+            }
+            Policy::HybridAdaptive { strict, .. } => {
+                let k = self.adaptive.as_ref().map(|a| a.k()).unwrap_or(1);
+                self.buffer
+                    .push(grad, worker, base_version, store.version());
+                if self.buffer.len() >= k {
+                    self.flush(store)
+                } else if *strict {
+                    self.stats.blocked_total += 1;
+                    Outcome::BufferedBlocked
+                } else {
+                    Outcome::Buffered
+                }
+            }
+        }
+    }
+
+    fn flush(&mut self, store: &mut ParamStore) -> Outcome {
+        let count = self.buffer.len();
+        let distinct = self.buffer.distinct_workers();
+        let mean_staleness = self.buffer.mean_staleness();
+        store.apply_mean(self.buffer.sum(), count);
+        store.publish();
+        self.buffer.clear();
+        self.stats.flushes += 1;
+        self.stats.flushed_gradients += count as u64;
+        Outcome::Flushed {
+            count,
+            distinct_workers: distinct,
+            mean_staleness,
+            k_at_flush: self.current_k(),
+        }
+    }
+
+    /// Force-flush whatever is buffered (shutdown path) so no gradient is
+    /// silently dropped. Returns the flushed count.
+    pub fn drain(&mut self, store: &mut ParamStore) -> usize {
+        if self.buffer.is_empty() {
+            return 0;
+        }
+        let n = self.buffer.len();
+        self.flush(store);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(d: usize) -> ParamStore {
+        ParamStore::new(vec![0.0; d], 0.1)
+    }
+
+    #[test]
+    fn async_applies_every_gradient() {
+        let mut agg = Aggregator::new(Policy::Async, 2, 4);
+        let mut ps = store(2);
+        for i in 0..10 {
+            let v = ps.version();
+            let out = agg.on_gradient(&mut ps, &[1.0, 1.0], i % 4, v, 1.0);
+            assert_eq!(out, Outcome::AppliedNow);
+        }
+        assert_eq!(ps.version(), 10);
+        // 10 updates of lr·1 = 0.1 each
+        assert!((ps.theta()[0] + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sync_waits_for_all_workers() {
+        let w = 3;
+        let mut agg = Aggregator::new(Policy::Sync, 1, w);
+        let mut ps = store(1);
+        assert_eq!(
+            agg.on_gradient(&mut ps, &[3.0], 0, 0, 1.0),
+            Outcome::BufferedBlocked
+        );
+        assert_eq!(
+            agg.on_gradient(&mut ps, &[3.0], 1, 0, 1.0),
+            Outcome::BufferedBlocked
+        );
+        // duplicate from worker 0 does NOT complete the barrier
+        assert_eq!(
+            agg.on_gradient(&mut ps, &[3.0], 0, 0, 1.0),
+            Outcome::BufferedBlocked
+        );
+        let out = agg.on_gradient(&mut ps, &[3.0], 2, 0, 1.0);
+        match out {
+            Outcome::Flushed {
+                count,
+                distinct_workers,
+                ..
+            } => {
+                assert_eq!(count, 4);
+                assert_eq!(distinct_workers, 3);
+            }
+            o => panic!("expected flush, got {o:?}"),
+        }
+        assert_eq!(ps.version(), 1);
+        // mean of four gradients of 3.0 = 3.0; θ = -0.1·3
+        assert!((ps.theta()[0] + 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hybrid_k1_equals_async_numerically() {
+        let sched = Schedule::Constant { k: 1 };
+        let mut hyb = Aggregator::new(
+            Policy::Hybrid {
+                schedule: sched,
+                strict: false,
+            },
+            2,
+            4,
+        );
+        let mut asy = Aggregator::new(Policy::Async, 2, 4);
+        let mut ps_h = store(2);
+        let mut ps_a = store(2);
+        let grads = [[1.0f32, -2.0], [0.5, 0.5], [-1.0, 3.0]];
+        for (i, g) in grads.iter().enumerate() {
+            let (vh, va) = (ps_h.version(), ps_a.version());
+            hyb.on_gradient(&mut ps_h, g, i % 4, vh, 1.0);
+            asy.on_gradient(&mut ps_a, g, i % 4, va, 1.0);
+        }
+        assert_eq!(ps_h.theta(), ps_a.theta());
+        assert_eq!(ps_h.version(), ps_a.version());
+    }
+
+    #[test]
+    fn hybrid_buffers_then_flushes_at_k() {
+        // step so small that K jumps to 2 after 2 arrivals, 3 after 4 ...
+        let sched = Schedule::Step { step: 2 };
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: sched,
+                strict: false,
+            },
+            1,
+            8,
+        );
+        let mut ps = store(1);
+        // arrival 1: K(0)=1 → immediate flush of 1 (async-like)
+        match agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0) {
+            Outcome::Flushed { count: 1, .. } => {}
+            o => panic!("{o:?}"),
+        }
+        // arrival 2: K(1)=1 → flush of 1
+        match agg.on_gradient(&mut ps, &[1.0], 1, 1, 1.0) {
+            Outcome::Flushed { count: 1, .. } => {}
+            o => panic!("{o:?}"),
+        }
+        // arrival 3: K(2)=2 → buffered
+        assert_eq!(agg.on_gradient(&mut ps, &[1.0], 0, 2, 1.0), Outcome::Buffered);
+        // arrival 4: K(3)=2 → flush of 2
+        match agg.on_gradient(&mut ps, &[1.0], 1, 2, 1.0) {
+            Outcome::Flushed { count: 2, .. } => {}
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn hybrid_buffered_gradients_share_base_version() {
+        // Between flushes θ is frozen ⇒ staleness within a flush is 0 when
+        // workers fetch after the last flush.
+        let sched = Schedule::Constant { k: 3 };
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: sched,
+                strict: false,
+            },
+            1,
+            4,
+        );
+        let mut ps = store(1);
+        agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0);
+        agg.on_gradient(&mut ps, &[1.0], 1, 0, 1.0);
+        let out = agg.on_gradient(&mut ps, &[1.0], 2, 0, 1.0);
+        match out {
+            Outcome::Flushed {
+                mean_staleness, ..
+            } => assert_eq!(mean_staleness, 0.0),
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn strict_blocks_submitters() {
+        let sched = Schedule::Constant { k: 2 };
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: sched,
+                strict: true,
+            },
+            1,
+            4,
+        );
+        let mut ps = store(1);
+        assert_eq!(
+            agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0),
+            Outcome::BufferedBlocked
+        );
+        match agg.on_gradient(&mut ps, &[1.0], 1, 0, 1.0) {
+            Outcome::Flushed { count: 2, .. } => {}
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_flushes_leftovers() {
+        let sched = Schedule::Constant { k: 10 };
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: sched,
+                strict: false,
+            },
+            1,
+            4,
+        );
+        let mut ps = store(1);
+        agg.on_gradient(&mut ps, &[2.0], 0, 0, 1.0);
+        agg.on_gradient(&mut ps, &[4.0], 1, 0, 1.0);
+        assert_eq!(agg.drain(&mut ps), 2);
+        assert_eq!(ps.version(), 1);
+        assert!((ps.theta()[0] + 0.1 * 3.0).abs() < 1e-6); // mean(2,4)=3
+        assert_eq!(agg.drain(&mut ps), 0);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for s in ["async", "sync", "hybrid:step:500", "hybrid-strict:const:4"] {
+            let p = Policy::parse(s).unwrap();
+            assert_eq!(Policy::parse(&p.to_string()).unwrap(), p);
+        }
+        assert!(Policy::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! The parameter-server thread: message routing around the [`Aggregator`].
+//!
+//! One `mpsc` channel carries gradients from all workers; each worker owns a
+//! private reply channel. The server applies the policy per arrival and
+//! replies with either fresh parameters (after an update), a cheap
+//! "unchanged" token (smooth-hybrid buffering while θ is frozen — no copy),
+//! or defers the reply until the flush (barrier semantics).
+//!
+//! Buffer-recycling protocol: gradient vectors travel worker→server inside
+//! [`GradMsg`] and return inside the reply, so the steady state allocates
+//! nothing on either side.
+
+use super::metrics::RunMetrics;
+use super::params::ParamStore;
+use super::policy::{Aggregator, Outcome, Policy};
+use crate::log_debug;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// A gradient submission.
+pub struct GradMsg {
+    pub worker: usize,
+    /// Parameter version the gradient was computed against.
+    pub base_version: u64,
+    /// Training loss observed on the mini-batch (telemetry only).
+    pub loss: f32,
+    pub grad: Vec<f32>,
+}
+
+/// Server → worker reply.
+pub enum Reply {
+    /// Parameters changed: here is a fresh copy (+ your recycled buffer).
+    Fresh {
+        theta: Vec<f32>,
+        version: u64,
+        recycled: Vec<f32>,
+    },
+    /// Parameters did not change since `base_version`; keep your copy.
+    Unchanged { recycled: Vec<f32> },
+}
+
+/// Server-side configuration.
+pub struct ServerConfig {
+    pub policy: Policy,
+    pub workers: usize,
+    pub lr: f32,
+    /// Threshold cap; defaults to the worker count.
+    pub k_max: Option<usize>,
+    /// Sample the (t, K) / (t, version) trajectories at most this often.
+    pub trace_interval: Duration,
+    /// Shared cell the evaluator reads parameter snapshots from; created by
+    /// the trainer. `None` → the store creates a private one.
+    pub snapshot: Option<std::sync::Arc<std::sync::Mutex<(Vec<f32>, u64)>>>,
+    /// Reply with a cheap `Unchanged` token (no θ copy) when a buffered
+    /// gradient arrives and the submitter already holds the current version.
+    /// On by default; disable (`HYBRID_SGD_NO_REPLY_OPT=1` via trainer) to
+    /// measure the copy cost — see EXPERIMENTS.md §Perf.
+    pub reply_unchanged_optim: bool,
+}
+
+/// What the server hands back when the run ends.
+pub struct ServerReport {
+    pub final_params: Vec<f32>,
+    pub updates_total: u64,
+    pub gradients_total: u64,
+    pub flushes: u64,
+    pub mean_staleness: f64,
+    pub per_worker_grads: Vec<u64>,
+    pub k_trajectory: crate::util::stats::Series,
+    pub version_trajectory: crate::util::stats::Series,
+}
+
+impl ServerReport {
+    /// Merge server counters into a [`RunMetrics`].
+    pub fn fill(&self, m: &mut RunMetrics) {
+        m.gradients_total = self.gradients_total;
+        m.updates_total = self.updates_total;
+        m.flushes = self.flushes;
+        m.mean_staleness = self.mean_staleness;
+        m.per_worker_grads = self.per_worker_grads.clone();
+        m.k_trajectory = self.k_trajectory.clone();
+        m.version_trajectory = self.version_trajectory.clone();
+    }
+}
+
+/// Run the parameter server until every worker sender disconnects.
+///
+/// Call on a dedicated thread. `reply_txs[i]` is worker i's reply channel;
+/// `stop` is the trainer's shutdown flag (used to release barrier-blocked
+/// workers so they can observe the flag).
+pub fn run_server(
+    init: Vec<f32>,
+    cfg: &ServerConfig,
+    grad_rx: Receiver<GradMsg>,
+    reply_txs: Vec<Sender<Reply>>,
+    stop: &AtomicBool,
+    start: Instant,
+) -> ServerReport {
+    let dim = init.len();
+    let mut store = match &cfg.snapshot {
+        Some(cell) => ParamStore::with_shared(init, cfg.lr, std::sync::Arc::clone(cell)),
+        None => ParamStore::new(init, cfg.lr),
+    };
+    let mut agg = Aggregator::new(cfg.policy.clone(), dim, cfg.workers);
+    if let Some(k) = cfg.k_max {
+        agg = agg.with_k_max(k);
+    }
+    // Reply slots for workers blocked at a barrier: (worker, recycled buf).
+    let mut blocked: Vec<(usize, Vec<f32>)> = Vec::with_capacity(cfg.workers);
+    let mut per_worker = vec![0u64; cfg.workers];
+    let mut k_traj = crate::util::stats::Series::new();
+    let mut v_traj = crate::util::stats::Series::new();
+    let mut last_trace = Instant::now() - cfg.trace_interval;
+    let mut released_on_stop = false;
+
+    loop {
+        match grad_rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(msg) => {
+                per_worker[msg.worker] += 1;
+                let outcome = agg.on_gradient(&mut store, &msg.grad, msg.worker, msg.base_version, 1.0);
+                let recycled = msg.grad;
+                match outcome {
+                    Outcome::AppliedNow => {
+                        send_fresh(&reply_txs[msg.worker], &store, recycled);
+                    }
+                    Outcome::Buffered => {
+                        // θ frozen since the last flush: if the worker already
+                        // has this version, skip the copy entirely.
+                        if cfg.reply_unchanged_optim && msg.base_version == store.version() {
+                            let _ = reply_txs[msg.worker].send(Reply::Unchanged { recycled });
+                        } else {
+                            send_fresh(&reply_txs[msg.worker], &store, recycled);
+                        }
+                    }
+                    Outcome::BufferedBlocked => {
+                        blocked.push((msg.worker, recycled));
+                    }
+                    Outcome::Flushed { count, k_at_flush, .. } => {
+                        log_debug!(
+                            "server",
+                            "flush of {count} gradients at K={k_at_flush}, v={}",
+                            store.version()
+                        );
+                        send_fresh(&reply_txs[msg.worker], &store, recycled);
+                        for (w, buf) in blocked.drain(..) {
+                            send_fresh(&reply_txs[w], &store, buf);
+                        }
+                        let t = start.elapsed().as_secs_f64();
+                        k_traj.push(t, agg.current_k() as f64);
+                    }
+                }
+                if last_trace.elapsed() >= cfg.trace_interval {
+                    last_trace = Instant::now();
+                    v_traj.push(start.elapsed().as_secs_f64(), store.version() as f64);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        if stop.load(Ordering::Relaxed) && !released_on_stop {
+            // Release barrier-blocked workers so they can see the stop flag.
+            for (w, buf) in blocked.drain(..) {
+                send_fresh(&reply_txs[w], &store, buf);
+            }
+            released_on_stop = true;
+        }
+    }
+
+    // Apply whatever is still buffered so no gradient is silently dropped.
+    agg.drain(&mut store);
+    store.publish();
+    v_traj.push(start.elapsed().as_secs_f64(), store.version() as f64);
+
+    let stats = &agg.stats;
+    ServerReport {
+        updates_total: store.version(),
+        gradients_total: stats.arrivals,
+        flushes: stats.flushes,
+        mean_staleness: if stats.arrivals > 0 {
+            stats.staleness_sum / stats.arrivals as f64
+        } else {
+            0.0
+        },
+        per_worker_grads: per_worker,
+        k_trajectory: k_traj,
+        version_trajectory: v_traj,
+        final_params: store.theta().to_vec(),
+    }
+}
+
+fn send_fresh(tx: &Sender<Reply>, store: &ParamStore, recycled: Vec<f32>) {
+    // A send error means the worker already exited (shutdown race): fine.
+    let _ = tx.send(Reply::Fresh {
+        theta: store.theta().to_vec(),
+        version: store.version(),
+        recycled,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::threshold::Schedule;
+    use std::sync::mpsc;
+
+    /// Drive the server with scripted messages on the current thread pool.
+    fn run_scripted(policy: Policy, workers: usize, msgs: Vec<GradMsg>) -> (ServerReport, Vec<Vec<Reply>>) {
+        let (gtx, grx) = mpsc::channel();
+        let mut rtxs = Vec::new();
+        let mut rrxs = Vec::new();
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel();
+            rtxs.push(tx);
+            rrxs.push(rx);
+        }
+        let stop = AtomicBool::new(false);
+        let cfg = ServerConfig {
+            policy,
+            workers,
+            lr: 0.1,
+            k_max: None,
+            trace_interval: Duration::from_millis(1),
+            snapshot: None,
+            reply_unchanged_optim: true,
+        };
+        for m in msgs {
+            gtx.send(m).unwrap();
+        }
+        drop(gtx);
+        let report = run_server(vec![0.0; 2], &cfg, grx, rtxs, &stop, Instant::now());
+        let replies: Vec<Vec<Reply>> = rrxs
+            .into_iter()
+            .map(|rx| rx.try_iter().collect())
+            .collect();
+        (report, replies)
+    }
+
+    fn msg(worker: usize, v: u64) -> GradMsg {
+        GradMsg {
+            worker,
+            base_version: v,
+            loss: 1.0,
+            grad: vec![1.0, 1.0],
+        }
+    }
+
+    #[test]
+    fn async_replies_fresh_every_time() {
+        let (report, replies) = run_scripted(Policy::Async, 2, vec![msg(0, 0), msg(1, 1), msg(0, 2)]);
+        assert_eq!(report.gradients_total, 3);
+        assert_eq!(report.updates_total, 3);
+        assert_eq!(replies[0].len(), 2);
+        assert_eq!(replies[1].len(), 1);
+        for r in replies.iter().flatten() {
+            assert!(matches!(r, Reply::Fresh { .. }));
+        }
+    }
+
+    #[test]
+    fn sync_defers_until_barrier() {
+        let (report, replies) =
+            run_scripted(Policy::Sync, 3, vec![msg(0, 0), msg(1, 0), msg(2, 0)]);
+        assert_eq!(report.updates_total, 1);
+        assert_eq!(report.flushes, 1);
+        // every worker got exactly one Fresh reply, all carrying version 1
+        for r in &replies {
+            assert_eq!(r.len(), 1);
+            match &r[0] {
+                Reply::Fresh { version, theta, .. } => {
+                    assert_eq!(*version, 1);
+                    // mean grad = 1 → θ = -0.1
+                    assert!((theta[0] + 0.1).abs() < 1e-6);
+                }
+                _ => panic!("expected Fresh"),
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_unchanged_replies_skip_param_copy() {
+        let policy = Policy::Hybrid {
+            schedule: Schedule::Constant { k: 3 },
+            strict: false,
+        };
+        let (report, replies) = run_scripted(policy, 3, vec![msg(0, 0), msg(1, 0), msg(2, 0)]);
+        assert_eq!(report.flushes, 1);
+        assert!(matches!(replies[0][0], Reply::Unchanged { .. }));
+        assert!(matches!(replies[1][0], Reply::Unchanged { .. }));
+        assert!(matches!(replies[2][0], Reply::Fresh { .. }));
+    }
+
+    #[test]
+    fn leftover_buffer_drained_at_shutdown() {
+        let policy = Policy::Hybrid {
+            schedule: Schedule::Constant { k: 10 },
+            strict: false,
+        };
+        let (report, _) = run_scripted(policy, 2, vec![msg(0, 0), msg(1, 0)]);
+        // no flush during the run, but drain applies the 2 buffered grads
+        assert_eq!(report.updates_total, 1);
+        assert_eq!(report.gradients_total, 2);
+        assert!((report.final_params[0] + 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stop_releases_blocked_workers() {
+        let (gtx, grx) = mpsc::channel();
+        let (rtx, rrx) = mpsc::channel();
+        let (rtx2, _rrx2) = mpsc::channel();
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let cfg = ServerConfig {
+            policy: Policy::Sync,
+            workers: 2,
+            lr: 0.1,
+            k_max: None,
+            trace_interval: Duration::from_millis(1),
+            snapshot: None,
+            reply_unchanged_optim: true,
+        };
+        let stop2 = std::sync::Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            run_server(vec![0.0], &cfg, grx, vec![rtx, rtx2], &stop2, Instant::now())
+        });
+        // worker 0 submits and would block forever (worker 1 never arrives)
+        gtx.send(GradMsg {
+            worker: 0,
+            base_version: 0,
+            loss: 0.0,
+            grad: vec![1.0],
+        })
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(rrx.try_recv().is_err(), "should be blocked at barrier");
+        stop.store(true, Ordering::Relaxed);
+        let reply = rrx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(matches!(reply, Reply::Fresh { .. }));
+        drop(gtx);
+        let report = h.join().unwrap();
+        // the lone buffered gradient was drained into one update
+        assert_eq!(report.updates_total, 1);
+    }
+}

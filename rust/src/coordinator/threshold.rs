@@ -1,0 +1,170 @@
+//! Threshold functions `K(n)` controlling the async→sync transition.
+//!
+//! The paper's Algorithm 1 grows a threshold K with the number of gradient
+//! updates; its experiments use a **step function** whose step size is a
+//! multiple of `1/learning-rate` (§6). §9 (future work) asks whether other
+//! monotonically increasing functions can be plugged in unchanged — we
+//! implement several and benchmark them in `bench_ablations`.
+//!
+//! Contract: `k(n)` is a non-decreasing function of the number of gradient
+//! arrivals `n`, with `k(0) ≥ 1`, clamped to `[1, k_max]`. `k_max` defaults
+//! to the worker count (beyond that a flush can never trigger before every
+//! worker contributed at least once on average).
+
+/// A monotone threshold schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    /// Fixed K — `Constant(1)` is exactly the asynchronous baseline.
+    Constant { k: usize },
+    /// The paper's choice: K = 1 + ⌊n / step⌋.
+    Step { step: usize },
+    /// K = 1 + rate·n (rate ≪ 1).
+    Linear { rate: f64 },
+    /// K = growth^(n / step): doubles every `step` arrivals for growth=2.
+    Exponential { step: usize, growth: f64 },
+    /// Smooth sigmoid ramp from 1 to k_max centred at `mid` arrivals.
+    Sigmoid { mid: f64, scale: f64 },
+}
+
+impl Schedule {
+    /// Threshold after `n` gradient arrivals, clamped to [1, k_max].
+    pub fn k(&self, n: u64, k_max: usize) -> usize {
+        let raw: f64 = match self {
+            Schedule::Constant { k } => *k as f64,
+            Schedule::Step { step } => 1.0 + (n / (*step).max(1) as u64) as f64,
+            Schedule::Linear { rate } => 1.0 + rate * n as f64,
+            Schedule::Exponential { step, growth } => {
+                growth.powf(n as f64 / (*step).max(1) as f64)
+            }
+            Schedule::Sigmoid { mid, scale } => {
+                let z = (n as f64 - mid) / scale.max(1e-9);
+                1.0 + (k_max.saturating_sub(1) as f64) / (1.0 + (-z).exp())
+            }
+        };
+        (raw.floor() as usize).clamp(1, k_max.max(1))
+    }
+
+    /// Parse from CLI syntax: `step:500`, `const:1`, `linear:0.002`,
+    /// `exp:500:2`, `sigmoid:2000:400`.
+    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let err = || anyhow::anyhow!("bad schedule spec `{s}`");
+        match parts.as_slice() {
+            ["const", k] => Ok(Schedule::Constant {
+                k: k.parse().map_err(|_| err())?,
+            }),
+            ["step", step] => Ok(Schedule::Step {
+                step: step.parse().map_err(|_| err())?,
+            }),
+            ["linear", rate] => Ok(Schedule::Linear {
+                rate: rate.parse().map_err(|_| err())?,
+            }),
+            ["exp", step, growth] => Ok(Schedule::Exponential {
+                step: step.parse().map_err(|_| err())?,
+                growth: growth.parse().map_err(|_| err())?,
+            }),
+            ["sigmoid", mid, scale] => Ok(Schedule::Sigmoid {
+                mid: mid.parse().map_err(|_| err())?,
+                scale: scale.parse().map_err(|_| err())?,
+            }),
+            _ => Err(err()),
+        }
+    }
+
+    /// The paper's parameterisation: step size as `multiple × (1/lr)`.
+    pub fn paper_step(multiple: f64, lr: f64) -> Schedule {
+        Schedule::Step {
+            step: (multiple / lr).round().max(1.0) as usize,
+        }
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Schedule::Constant { k } => write!(f, "const:{k}"),
+            Schedule::Step { step } => write!(f, "step:{step}"),
+            Schedule::Linear { rate } => write!(f, "linear:{rate}"),
+            Schedule::Exponential { step, growth } => write!(f, "exp:{step}:{growth}"),
+            Schedule::Sigmoid { mid, scale } => write!(f, "sigmoid:{mid}:{scale}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_matches_paper_formula() {
+        let s = Schedule::Step { step: 300 };
+        assert_eq!(s.k(0, 25), 1);
+        assert_eq!(s.k(299, 25), 1);
+        assert_eq!(s.k(300, 25), 2);
+        assert_eq!(s.k(2999, 25), 10);
+        assert_eq!(s.k(1_000_000, 25), 25); // clamped at k_max
+    }
+
+    #[test]
+    fn paper_step_uses_reciprocal_lr() {
+        // step size "3 × (1/lr)" with lr = 0.01 → 300 arrivals per increment
+        let s = Schedule::paper_step(3.0, 0.01);
+        assert_eq!(s, Schedule::Step { step: 300 });
+        assert_eq!(Schedule::paper_step(5.0, 0.01), Schedule::Step { step: 500 });
+    }
+
+    #[test]
+    fn all_schedules_monotone_and_bounded() {
+        let schedules = [
+            Schedule::Constant { k: 3 },
+            Schedule::Step { step: 100 },
+            Schedule::Linear { rate: 0.01 },
+            Schedule::Exponential {
+                step: 200,
+                growth: 2.0,
+            },
+            Schedule::Sigmoid {
+                mid: 500.0,
+                scale: 100.0,
+            },
+        ];
+        for s in &schedules {
+            let mut prev = 0;
+            for n in (0..5000).step_by(17) {
+                let k = s.k(n, 16);
+                assert!((1..=16).contains(&k), "{s} out of range at n={n}: {k}");
+                assert!(k >= prev, "{s} not monotone at n={n}");
+                prev = k;
+            }
+        }
+    }
+
+    #[test]
+    fn constant_one_is_async() {
+        let s = Schedule::Constant { k: 1 };
+        for n in [0u64, 10, 1000] {
+            assert_eq!(s.k(n, 25), 1);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for spec in ["const:1", "step:500", "linear:0.002", "exp:500:2", "sigmoid:2000:400"] {
+            let s = Schedule::parse(spec).unwrap();
+            let again = Schedule::parse(&s.to_string()).unwrap();
+            assert_eq!(s, again);
+        }
+        assert!(Schedule::parse("bogus").is_err());
+        assert!(Schedule::parse("step:x").is_err());
+    }
+
+    #[test]
+    fn sigmoid_saturates_at_kmax() {
+        let s = Schedule::Sigmoid {
+            mid: 100.0,
+            scale: 10.0,
+        };
+        assert_eq!(s.k(10_000, 8), 8);
+        assert_eq!(s.k(0, 8), 1);
+    }
+}

@@ -1,0 +1,406 @@
+//! End-to-end training orchestration: spawn the parameter server, W gradient
+//! workers and an evaluator; run for a wall-clock budget; return the metric
+//! series. This is the function every example, experiment and benchmark
+//! drives.
+
+use super::delay::DelayModel;
+use super::metrics::RunMetrics;
+use super::policy::Policy;
+use super::server::{run_server, GradMsg, Reply, ServerConfig};
+use super::worker::{run_worker, BatchSource, WorkerConfig};
+use crate::data::Dataset;
+use crate::engine::EngineFactory;
+use crate::log_info;
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Evaluation tensors: `n` samples of `x_dim` features and `y_dim` label
+/// items each (`y_dim = 1` for classification, `seq_len` for LM targets).
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub x_dim: usize,
+    pub y_dim: usize,
+}
+
+impl EvalSet {
+    /// Build from a supervised dataset, capped at `max_n` samples.
+    pub fn from_dataset(d: &Dataset, max_n: usize, rng: &mut Pcg64) -> EvalSet {
+        let sub = if d.len() > max_n {
+            d.subsample(max_n, rng)
+        } else {
+            d.clone()
+        };
+        EvalSet {
+            n: sub.len(),
+            x_dim: sub.dim,
+            y_dim: 1,
+            x: sub.x,
+            y: sub.y,
+        }
+    }
+
+    /// Build from token windows (LM): each sample is a window; labels are
+    /// the `seq_len` next-token targets.
+    pub fn from_tokens(
+        d: &crate::data::tokens::TokenDataset,
+        windows: &[usize],
+        max_n: usize,
+    ) -> EvalSet {
+        let n = windows.len().min(max_n);
+        let l = d.seq_len;
+        let mut x = vec![0.0f32; n * l];
+        let mut y = vec![0i32; n * l];
+        let mut inp = vec![0i32; l];
+        for (j, &w) in windows.iter().take(n).enumerate() {
+            d.window(w, &mut inp, &mut y[j * l..(j + 1) * l]);
+            for (o, &t) in x[j * l..(j + 1) * l].iter_mut().zip(&inp) {
+                *o = t as f32;
+            }
+        }
+        EvalSet {
+            x,
+            y,
+            n,
+            x_dim: l,
+            y_dim: l,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Clone)]
+pub struct TrainConfig {
+    pub policy: Policy,
+    pub workers: usize,
+    pub lr: f32,
+    /// Wall-clock training budget.
+    pub duration: Duration,
+    pub delay: DelayModel,
+    pub seed: u64,
+    /// How often the evaluator samples metrics.
+    pub eval_interval: Duration,
+    /// Cap on the threshold K (None → worker count).
+    pub k_max: Option<usize>,
+    /// Per-gradient compute-cost floor applied to every worker
+    /// (see `WorkerConfig::min_iter`).
+    pub compute_floor: Duration,
+}
+
+impl TrainConfig {
+    pub fn quick(policy: Policy, workers: usize, secs: f64) -> TrainConfig {
+        TrainConfig {
+            policy,
+            workers,
+            lr: 0.01,
+            duration: Duration::from_secs_f64(secs),
+            delay: DelayModel::paper_default(),
+            seed: 0,
+            eval_interval: Duration::from_millis(500),
+            k_max: None,
+            compute_floor: Duration::ZERO,
+        }
+    }
+}
+
+/// Everything a run needs besides the config: per-worker engines + batch
+/// sources (constructed inside the worker threads) and eval data.
+pub struct RunInputs<'a> {
+    /// Engine factory for gradient workers (batch-size of the training batch).
+    pub worker_engine: EngineFactory,
+    /// Engine factory for the evaluator (its batch size defines eval chunks).
+    pub eval_engine: EngineFactory,
+    /// Builds worker `id`'s batch source (seeded shard sampler).
+    pub batch_source: Arc<dyn Fn(usize) -> Box<dyn BatchSource> + Send + Sync>,
+    /// Initial flat parameters (identical across compared algorithms).
+    pub init_params: &'a [f32],
+    /// Test set for test-loss/accuracy.
+    pub test: &'a EvalSet,
+    /// Fixed train subset for the train-loss probe.
+    pub train_probe: &'a EvalSet,
+}
+
+/// Run one training job; blocks until the budget elapses and all threads
+/// join. Deterministic given (config.seed, inputs) up to OS scheduling.
+pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics> {
+    let start = Instant::now();
+    let stop = AtomicBool::new(false);
+    let snapshot = Arc::new(Mutex::new((inputs.init_params.to_vec(), 0u64)));
+    let (grad_tx, grad_rx) = mpsc::channel::<GradMsg>();
+    let mut reply_txs = Vec::with_capacity(cfg.workers);
+    let mut reply_rxs = Vec::with_capacity(cfg.workers);
+    for _ in 0..cfg.workers {
+        let (tx, rx) = mpsc::channel::<Reply>();
+        reply_txs.push(tx);
+        reply_rxs.push(Some(rx));
+    }
+    let mut delay_rng = Pcg64::new(cfg.seed, 7);
+    let delayed_flags = cfg.delay.assign(cfg.workers, &mut delay_rng);
+
+    let server_cfg = ServerConfig {
+        policy: cfg.policy.clone(),
+        workers: cfg.workers,
+        lr: cfg.lr,
+        k_max: cfg.k_max,
+        trace_interval: Duration::from_millis(200),
+        snapshot: Some(Arc::clone(&snapshot)),
+        reply_unchanged_optim: std::env::var("HYBRID_SGD_NO_REPLY_OPT").map_or(true, |v| v != "1"),
+    };
+
+    let mut metrics = RunMetrics::default();
+    let result: anyhow::Result<()> = std::thread::scope(|s| {
+        // --- parameter server ---
+        let init = inputs.init_params.to_vec();
+        let stop_ref = &stop;
+        let server = s.spawn(move || run_server(init, &server_cfg, grad_rx, reply_txs, stop_ref, start));
+
+        // --- workers ---
+        let mut worker_handles = Vec::new();
+        for id in 0..cfg.workers {
+            let reply_rx = reply_rxs[id].take().unwrap();
+            let gtx = grad_tx.clone();
+            let wcfg = WorkerConfig {
+                id,
+                delayed: delayed_flags[id],
+                delay: cfg.delay.clone(),
+                seed: cfg.seed.wrapping_add(1000 + id as u64),
+                min_iter: cfg.compute_floor,
+            };
+            let factory = Arc::clone(&inputs.worker_engine);
+            let source_factory = Arc::clone(&inputs.batch_source);
+            let init = inputs.init_params.to_vec();
+            let stop_ref = &stop;
+            worker_handles.push(s.spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        crate::log_warn!("trainer", "worker {id} engine init failed: {e:#}");
+                        return super::worker::WorkerReport::default();
+                    }
+                };
+                let source = source_factory(id);
+                run_worker(&wcfg, engine, source, init, gtx, reply_rx, stop_ref)
+            }));
+        }
+        drop(grad_tx); // server exits when the last worker sender drops
+
+        // --- evaluator (this thread) ---
+        let mut eval_engine = (inputs.eval_engine)()?;
+        let mut eval_metrics = EvalLoop {
+            engine: eval_engine.as_mut(),
+            test: inputs.test,
+            train_probe: inputs.train_probe,
+            snapshot: &snapshot,
+            start,
+        };
+        let mut params_buf = inputs.init_params.to_vec();
+        // t=0 sample, then periodic until the budget elapses.
+        eval_metrics.sample(&mut metrics, &mut params_buf)?;
+        while start.elapsed() < cfg.duration {
+            let remaining = cfg.duration.saturating_sub(start.elapsed());
+            std::thread::sleep(cfg.eval_interval.min(remaining));
+            eval_metrics.sample(&mut metrics, &mut params_buf)?;
+        }
+
+        stop.store(true, Ordering::Relaxed);
+        for h in worker_handles {
+            let _ = h.join();
+        }
+        let report = server.join().expect("server thread panicked");
+        report.fill(&mut metrics);
+        // Final sample on the drained parameters.
+        eval_metrics.sample(&mut metrics, &mut params_buf)?;
+        Ok(())
+    });
+    result?;
+    metrics.wall_time = start.elapsed().as_secs_f64();
+    log_info!(
+        "trainer",
+        "{} done: {} grads, {} updates, {:.1} grads/s, final acc {:.2}%",
+        cfg.policy,
+        metrics.gradients_total,
+        metrics.updates_total,
+        metrics.grads_per_sec(),
+        metrics.final_metrics().map(|m| m.2).unwrap_or(f64::NAN)
+    );
+    Ok(metrics)
+}
+
+/// The evaluator: reads a parameter snapshot and computes metrics over the
+/// eval sets in engine-batch chunks.
+struct EvalLoop<'a> {
+    engine: &'a mut dyn crate::engine::GradEngine,
+    test: &'a EvalSet,
+    train_probe: &'a EvalSet,
+    snapshot: &'a Mutex<(Vec<f32>, u64)>,
+    start: Instant,
+}
+
+impl<'a> EvalLoop<'a> {
+    fn sample(&mut self, m: &mut RunMetrics, params_buf: &mut Vec<f32>) -> anyhow::Result<()> {
+        let t = {
+            let snap = self.snapshot.lock().unwrap();
+            params_buf.clear();
+            params_buf.extend_from_slice(&snap.0);
+            self.start.elapsed().as_secs_f64()
+        };
+        let (test_loss, test_acc) = eval_on(self.engine, params_buf, self.test)?;
+        let (train_loss, _) = eval_on(self.engine, params_buf, self.train_probe)?;
+        m.test_loss.push(t, test_loss);
+        m.test_acc.push(t, test_acc * 100.0);
+        m.train_loss.push(t, train_loss);
+        Ok(())
+    }
+}
+
+/// Evaluate `params` over an [`EvalSet`] in engine-batch chunks; returns
+/// (mean loss per label item, accuracy fraction). Samples beyond the last
+/// full chunk are dropped (the sets are sized as multiples in practice).
+pub fn eval_on(
+    engine: &mut dyn crate::engine::GradEngine,
+    params: &[f32],
+    set: &EvalSet,
+) -> anyhow::Result<(f64, f64)> {
+    let chunk = engine.eval_batch_size();
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    let mut items = 0usize;
+    let mut samples = 0usize;
+    let n_chunks = set.n / chunk;
+    anyhow::ensure!(n_chunks > 0, "eval set smaller than eval batch");
+    for c in 0..n_chunks {
+        let xs = &set.x[c * chunk * set.x_dim..(c + 1) * chunk * set.x_dim];
+        let ys = &set.y[c * chunk * set.y_dim..(c + 1) * chunk * set.y_dim];
+        let (l, corr) = engine.eval(params, xs, ys)?;
+        loss_sum += l;
+        correct += corr;
+        items += chunk * set.y_dim;
+        samples += chunk;
+    }
+    let _ = samples;
+    Ok((loss_sum / items as f64, correct as f64 / items as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::threshold::Schedule;
+    use crate::data::random_cluster::{generate, ClusterSpec};
+    use crate::engine::factory;
+    use crate::native::MlpEngine;
+
+    fn mlp_inputs<'a>(
+        train: Arc<Dataset>,
+        test: &'a EvalSet,
+        probe: &'a EvalSet,
+        init: &'a [f32],
+        dims: Vec<usize>,
+        batch: usize,
+        workers: usize,
+    ) -> RunInputs<'a> {
+        // Note: lifetimes tie to test/probe/init.
+        let dims_w = dims.clone();
+        let shards = train.shard_indices(workers);
+        RunInputs {
+            worker_engine: factory(move || Ok(Box::new(MlpEngine::new(dims_w.clone(), batch)))),
+            eval_engine: {
+                let dims_e = dims.clone();
+                factory(move || Ok(Box::new(MlpEngine::new(dims_e.clone(), 50))))
+            },
+            batch_source: Arc::new(move |id| {
+                Box::new(crate::data::Batcher::new(
+                    Arc::clone(&train),
+                    shards[id].clone(),
+                    batch,
+                    Pcg64::new(42, id as u64),
+                )) as Box<dyn BatchSource>
+            }),
+            init_params: init,
+            test,
+            train_probe: probe,
+        }
+    }
+
+    fn short_run(policy: Policy) -> RunMetrics {
+        let spec = ClusterSpec {
+            n_samples: 600,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(11);
+        let full = generate(&spec, &mut rng);
+        let (train, test) = full.split(0.8, &mut rng);
+        let dims = vec![20, 32, 10];
+        let init = MlpEngine::init_params(&dims, &mut rng);
+        let test_set = EvalSet::from_dataset(&test, 100, &mut rng);
+        let probe = EvalSet::from_dataset(&train, 100, &mut rng);
+        let train = Arc::new(train);
+        let inputs = mlp_inputs(train, &test_set, &probe, &init, dims, 16, 3);
+        let mut cfg = TrainConfig::quick(policy, 3, 1.0);
+        cfg.delay = DelayModel::none();
+        cfg.lr = 0.05;
+        train_run(&cfg, &inputs)
+    }
+
+    fn train_run(cfg: &TrainConfig, inputs: &RunInputs) -> RunMetrics {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        train(cfg, inputs).expect("train failed")
+    }
+
+    #[test]
+    fn async_run_learns_and_reports() {
+        let m = short_run(Policy::Async);
+        assert!(m.gradients_total > 20, "too few gradients: {}", m.gradients_total);
+        assert_eq!(m.updates_total, m.gradients_total);
+        let first_acc = m.test_acc.v[0];
+        let last_acc = *m.test_acc.v.last().unwrap();
+        assert!(
+            last_acc > first_acc + 10.0,
+            "accuracy did not improve: {first_acc} → {last_acc}"
+        );
+    }
+
+    #[test]
+    fn sync_run_applies_barrier_updates() {
+        let m = short_run(Policy::Sync);
+        assert!(m.flushes > 0);
+        assert!(m.updates_total <= m.gradients_total / 2);
+    }
+
+    #[test]
+    fn hybrid_run_flushes_and_learns() {
+        let m = short_run(Policy::Hybrid {
+            schedule: Schedule::Step { step: 50 },
+            strict: false,
+        });
+        assert!(m.flushes > 0);
+        assert!(m.gradients_total > 20);
+        let last_acc = *m.test_acc.v.last().unwrap();
+        assert!(last_acc > 20.0, "acc {last_acc}");
+        // K trajectory must be monotone non-decreasing
+        for w in m.k_trajectory.v.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn eval_on_counts_chunks() {
+        let dims = vec![4, 3];
+        let mut eng = MlpEngine::new(dims.clone(), 5);
+        let params = vec![0.0f32; MlpEngine::n_params(&dims)];
+        let set = EvalSet {
+            x: vec![0.1; 10 * 4],
+            y: vec![0; 10],
+            n: 10,
+            x_dim: 4,
+            y_dim: 1,
+        };
+        let (loss, acc) = eval_on(&mut eng, &params, &set).unwrap();
+        // zero params → uniform logits → loss = ln(3)
+        assert!((loss - (3.0f64).ln()).abs() < 1e-5);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

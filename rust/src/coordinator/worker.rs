@@ -1,0 +1,254 @@
+//! The gradient-worker loop and batch sources.
+//!
+//! A worker owns: a local parameter copy, a [`GradEngine`] (constructed
+//! inside the thread — PJRT clients are not `Send`), a [`BatchSource`], and
+//! its half of the channel protocol. Per iteration it computes a gradient,
+//! optionally sleeps an injected delay (the paper's heterogeneity model),
+//! submits, and waits for the server's reply.
+
+use super::delay::DelayModel;
+use super::server::{GradMsg, Reply};
+use crate::data::tokens::TokenBatcher;
+use crate::data::Batcher;
+use crate::engine::GradEngine;
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Produces mini-batches as (features, labels) slices. Implementations must
+/// reuse internal buffers (the worker loop is allocation-free).
+pub trait BatchSource: Send {
+    fn next(&mut self) -> (&[f32], &[i32]);
+}
+
+impl BatchSource for Batcher {
+    fn next(&mut self) -> (&[f32], &[i32]) {
+        self.next_batch()
+    }
+}
+
+/// Adapter: token windows → f32 features (token ids are exactly
+/// representable in f32 for any realistic vocab; the L2 model casts back to
+/// int32 before the embedding lookup).
+pub struct TokenBatchSource {
+    inner: TokenBatcher,
+    x_buf: Vec<f32>,
+}
+
+impl TokenBatchSource {
+    pub fn new(inner: TokenBatcher, batch: usize, seq_len: usize) -> Self {
+        TokenBatchSource {
+            inner,
+            x_buf: vec![0.0; batch * seq_len],
+        }
+    }
+}
+
+impl BatchSource for TokenBatchSource {
+    fn next(&mut self) -> (&[f32], &[i32]) {
+        let (inp, tgt) = self.inner.next_batch();
+        for (o, &t) in self.x_buf.iter_mut().zip(inp) {
+            *o = t as f32;
+        }
+        (&self.x_buf, tgt)
+    }
+}
+
+/// Per-worker configuration.
+pub struct WorkerConfig {
+    pub id: usize,
+    /// Whether this worker is in the delayed 50% (paper §6).
+    pub delayed: bool,
+    pub delay: DelayModel,
+    pub seed: u64,
+    /// Minimum wall time per gradient iteration. Simulates the paper's
+    /// per-gradient compute cost (ray + PyTorch on their cluster) for models
+    /// whose AOT executables run much faster here; zero = no floor.
+    /// See DESIGN.md §1 (substitutions).
+    pub min_iter: Duration,
+}
+
+/// Worker-side counters returned at join.
+#[derive(Debug, Default, Clone)]
+pub struct WorkerReport {
+    pub grads_sent: u64,
+    pub fresh_replies: u64,
+    pub unchanged_replies: u64,
+    pub delay_slept: f64,
+}
+
+/// Run one worker until `stop` is set. Call on a dedicated thread.
+pub fn run_worker(
+    cfg: &WorkerConfig,
+    mut engine: Box<dyn GradEngine>,
+    mut source: Box<dyn BatchSource>,
+    init_params: Vec<f32>,
+    grad_tx: Sender<GradMsg>,
+    reply_rx: Receiver<Reply>,
+    stop: &AtomicBool,
+) -> WorkerReport {
+    let mut report = WorkerReport::default();
+    let mut params = init_params;
+    let mut version: u64 = 0;
+    let dim = params.len();
+    let mut grad_buf = vec![0.0f32; dim];
+    let mut spare = vec![0.0f32; dim];
+    let mut rng = Pcg64::new(cfg.seed, cfg.id as u64 + 1);
+
+    while !stop.load(Ordering::Relaxed) {
+        let iter_start = std::time::Instant::now();
+        let (x, y) = source.next();
+        let loss = match engine.grad(&params, x, y, &mut grad_buf) {
+            Ok(l) => l,
+            Err(e) => {
+                crate::log_warn!("worker", "worker {} grad failed: {e:#}", cfg.id);
+                break;
+            }
+        };
+        if cfg.delayed {
+            let d = cfg.delay.sample(&mut rng);
+            if !d.is_zero() {
+                report.delay_slept += d.as_secs_f64();
+                // Sleep in small slices so shutdown stays responsive even
+                // with multi-second injected delays.
+                let deadline = std::time::Instant::now() + d;
+                while std::time::Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(5).min(d));
+                }
+            }
+        }
+        // Enforce the compute-cost floor (paper-regime pacing).
+        if !cfg.min_iter.is_zero() {
+            let elapsed = iter_start.elapsed();
+            if elapsed < cfg.min_iter && !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(cfg.min_iter - elapsed);
+            }
+        }
+        // Ship the gradient; swap in the spare so we keep an owned buffer.
+        let outgoing = std::mem::replace(&mut grad_buf, std::mem::take(&mut spare));
+        if grad_tx
+            .send(GradMsg {
+                worker: cfg.id,
+                base_version: version,
+                loss,
+                grad: outgoing,
+            })
+            .is_err()
+        {
+            break; // server gone
+        }
+        report.grads_sent += 1;
+
+        // Await the reply (with stop checks: barrier waits can span seconds).
+        loop {
+            match reply_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(Reply::Fresh {
+                    theta,
+                    version: v,
+                    recycled,
+                }) => {
+                    params.copy_from_slice(&theta);
+                    version = v;
+                    spare = recycled;
+                    report.fresh_replies += 1;
+                    break;
+                }
+                Ok(Reply::Unchanged { recycled }) => {
+                    spare = recycled;
+                    report.unchanged_replies += 1;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::Relaxed) {
+                        return report;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return report,
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::QuadraticEngine;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    struct ConstSource {
+        x: Vec<f32>,
+        y: Vec<i32>,
+    }
+
+    impl BatchSource for ConstSource {
+        fn next(&mut self) -> (&[f32], &[i32]) {
+            (&self.x, &self.y)
+        }
+    }
+
+    #[test]
+    fn worker_submits_and_applies_replies() {
+        let (gtx, grx) = mpsc::channel::<GradMsg>();
+        let (rtx, rrx) = mpsc::channel::<Reply>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = WorkerConfig {
+            id: 0,
+            delayed: false,
+            delay: DelayModel::none(),
+            seed: 1,
+            min_iter: Duration::ZERO,
+        };
+        let stop2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            let engine = Box::new(QuadraticEngine::new(vec![1.0, 1.0], 1, 0.0, 0));
+            let source = Box::new(ConstSource {
+                x: vec![],
+                y: vec![],
+            });
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], gtx, rrx, &stop2)
+        });
+        // Act as the server for 3 round trips.
+        for i in 0..3u64 {
+            let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(msg.worker, 0);
+            assert_eq!(msg.base_version, i);
+            rtx.send(Reply::Fresh {
+                theta: vec![0.5, 0.5],
+                version: i + 1,
+                recycled: msg.grad,
+            })
+            .unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        // Consume anything in flight, then drop our ends.
+        while grx.recv_timeout(Duration::from_millis(100)).is_ok() {}
+        drop(rtx);
+        let report = h.join().unwrap();
+        assert!(report.grads_sent >= 3);
+        assert!(report.fresh_replies >= 3);
+    }
+
+    #[test]
+    fn token_source_converts_to_f32() {
+        use crate::data::tokens::{generate, CorpusSpec, TokenBatcher};
+        let spec = CorpusSpec {
+            length: 2000,
+            seq_len: 8,
+            ..Default::default()
+        };
+        let d = Arc::new(generate(&spec, &mut Pcg64::seeded(1)));
+        let shard: Vec<usize> = (0..d.num_windows()).collect();
+        let tb = TokenBatcher::new(Arc::clone(&d), shard, 2, Pcg64::seeded(2));
+        let mut src = TokenBatchSource::new(tb, 2, 8);
+        let (x, y) = src.next();
+        assert_eq!(x.len(), 16);
+        assert_eq!(y.len(), 16);
+        for &v in x {
+            assert_eq!(v, v.round());
+            assert!((0.0..64.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Datasets, sharding and batching.
+//!
+//! All supervised datasets share one in-memory layout: row-major flat f32
+//! features (`dim` per sample) and i32 class labels — exactly the tensor
+//! interface the AOT grad/eval executables take. Generators are fully
+//! procedural and seeded (the image has no network access; see DESIGN.md §1.2
+//! for the MNIST/CIFAR substitution rationale).
+
+pub mod random_cluster;
+pub mod synth_cifar;
+pub mod synth_mnist;
+pub mod tokens;
+
+use crate::util::rng::Pcg64;
+
+/// An in-memory supervised dataset: `n` samples of `dim` features + label.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    pub classes: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature row of sample `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Split into (train, test) by a shuffled index permutation.
+    /// `train_frac` in (0, 1); the paper's random-dataset experiments use 0.8.
+    pub fn split(&self, train_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&train_frac) && train_frac > 0.0);
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let take = |ids: &[usize], tag: &str| {
+            let mut x = Vec::with_capacity(ids.len() * self.dim);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset {
+                name: format!("{}-{tag}", self.name),
+                dim: self.dim,
+                classes: self.classes,
+                x,
+                y,
+            }
+        };
+        (take(&idx[..n_train], "train"), take(&idx[n_train..], "test"))
+    }
+
+    /// Contiguous shards for `w` workers (round-robin so class balance is
+    /// preserved regardless of generation order).
+    pub fn shard_indices(&self, w: usize) -> Vec<Vec<usize>> {
+        let mut shards = vec![Vec::new(); w];
+        for i in 0..self.len() {
+            shards[i % w].push(i);
+        }
+        shards
+    }
+
+    /// Subsample `n` rows (seeded) — used for the fixed train-loss probe set.
+    pub fn subsample(&self, n: usize, rng: &mut Pcg64) -> Dataset {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(n.min(self.len()));
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in &idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset {
+            name: format!("{}-sub{n}", self.name),
+            dim: self.dim,
+            classes: self.classes,
+            x,
+            y,
+        }
+    }
+}
+
+/// Mini-batch sampler over a worker's shard: reshuffles each epoch, yields
+/// `(x, y)` buffers of exactly `batch` samples (wraps across epochs so every
+/// draw is full-size, as PyTorch's `drop_last=False` + cycling would).
+///
+/// Owns an `Arc<Dataset>` so it can move into a worker thread.
+pub struct Batcher {
+    data: std::sync::Arc<Dataset>,
+    shard: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    rng: Pcg64,
+    /// Reused output buffers: the worker hot loop must not allocate.
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+}
+
+impl Batcher {
+    pub fn new(
+        data: std::sync::Arc<Dataset>,
+        shard: Vec<usize>,
+        batch: usize,
+        mut rng: Pcg64,
+    ) -> Self {
+        assert!(!shard.is_empty(), "empty shard");
+        assert!(batch > 0);
+        let mut shard = shard;
+        rng.shuffle(&mut shard);
+        Batcher {
+            x_buf: vec![0.0; batch * data.dim],
+            y_buf: vec![0; batch],
+            data,
+            shard,
+            batch,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    /// Next mini-batch; returns borrowed buffers valid until the next call.
+    pub fn next_batch(&mut self) -> (&[f32], &[i32]) {
+        let dim = self.data.dim;
+        for j in 0..self.batch {
+            if self.cursor == self.shard.len() {
+                self.rng.shuffle(&mut self.shard);
+                self.cursor = 0;
+            }
+            let i = self.shard[self.cursor];
+            self.cursor += 1;
+            self.x_buf[j * dim..(j + 1) * dim].copy_from_slice(self.data.row(i));
+            self.y_buf[j] = self.data.y[i];
+        }
+        (&self.x_buf, &self.y_buf)
+    }
+}
+
+/// Per-class counts — used by generator tests to assert balance.
+pub fn class_histogram(y: &[i32], classes: usize) -> Vec<usize> {
+    let mut h = vec![0usize; classes];
+    for &c in y {
+        h[c as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            dim: 2,
+            classes: 2,
+            x: (0..n * 2).map(|i| i as f32).collect(),
+            y: (0..n).map(|i| (i % 2) as i32).collect(),
+        }
+    }
+
+    #[test]
+    fn split_preserves_samples() {
+        let d = toy(100);
+        let (tr, te) = d.split(0.8, &mut Pcg64::seeded(1));
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.dim, 2);
+        // every row of tr/te exists in d
+        let all_first: std::collections::BTreeSet<i64> =
+            (0..d.len()).map(|i| d.row(i)[0] as i64).collect();
+        for i in 0..tr.len() {
+            assert!(all_first.contains(&(tr.row(i)[0] as i64)));
+        }
+    }
+
+    #[test]
+    fn shards_partition() {
+        let d = toy(10);
+        let shards = d.shard_indices(3);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 10);
+        let mut seen = vec![false; 10];
+        for s in &shards {
+            for &i in s {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn batcher_wraps_epochs() {
+        let d = toy(5);
+        let mut b = Batcher::new(std::sync::Arc::new(d), (0..5).collect(), 3, Pcg64::seeded(2));
+        for _ in 0..10 {
+            let (x, y) = b.next_batch();
+            assert_eq!(x.len(), 6);
+            assert_eq!(y.len(), 3);
+        }
+    }
+
+    #[test]
+    fn batcher_covers_shard_within_epoch() {
+        let d = toy(6);
+        let mut b = Batcher::new(std::sync::Arc::new(d), (0..6).collect(), 2, Pcg64::seeded(3));
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            let (x, _) = b.next_batch();
+            seen.insert(x[0] as i64);
+            seen.insert(x[2] as i64);
+        }
+        // 3 batches x 2 samples = one full epoch: all 6 distinct rows seen
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let d = toy(10);
+        assert_eq!(class_histogram(&d.y, 2), vec![5, 5]);
+    }
+}

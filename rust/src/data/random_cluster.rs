@@ -1,0 +1,183 @@
+//! The paper's randomly generated dataset (§6): n-dimensional points drawn
+//! from class-conditional Gaussian clusters.
+//!
+//! "we used randomly generated datasets with 20 dimensions and 10 classes
+//! containing 10k samples with 80:20 train to test split. A newly sampled
+//! dataset was used for each configuration."
+//!
+//! Class centroids are drawn uniformly in a hypercube with pairwise margin
+//! enforced by rejection, then samples are centroid + N(0, σ²) noise. The
+//! separation/σ ratio controls problem difficulty: defaults give a problem a
+//! linear classifier reaches ~85–95 % on — optimisable but not instant, like
+//! the paper's setup.
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub n_samples: usize,
+    pub dim: usize,
+    pub classes: usize,
+    /// Centroid coordinates drawn from U(-box_half, box_half).
+    pub box_half: f64,
+    /// Minimum pairwise centroid distance (rejection sampled).
+    pub min_margin: f64,
+    /// Per-coordinate sample noise σ.
+    pub noise: f64,
+}
+
+impl Default for ClusterSpec {
+    /// The paper's configuration: 10 k samples, 20-dim, 10 classes.
+    fn default() -> Self {
+        ClusterSpec {
+            n_samples: 10_000,
+            dim: 20,
+            classes: 10,
+            box_half: 2.0,
+            min_margin: 2.0,
+            noise: 1.0,
+        }
+    }
+}
+
+/// Generate a dataset from the spec. Classes are balanced (n/classes each,
+/// remainder spread over the first classes) and rows are emitted shuffled.
+pub fn generate(spec: &ClusterSpec, rng: &mut Pcg64) -> Dataset {
+    let centroids = sample_centroids(spec, rng);
+    let mut x = Vec::with_capacity(spec.n_samples * spec.dim);
+    let mut y = Vec::with_capacity(spec.n_samples);
+    for i in 0..spec.n_samples {
+        let c = i % spec.classes;
+        y.push(c as i32);
+        let base = &centroids[c * spec.dim..(c + 1) * spec.dim];
+        for &b in base {
+            x.push((b + rng.normal_ms(0.0, spec.noise)) as f32);
+        }
+    }
+    // Shuffle rows jointly.
+    let mut idx: Vec<usize> = (0..spec.n_samples).collect();
+    rng.shuffle(&mut idx);
+    let mut xs = Vec::with_capacity(x.len());
+    let mut ys = Vec::with_capacity(y.len());
+    for &i in &idx {
+        xs.extend_from_slice(&x[i * spec.dim..(i + 1) * spec.dim]);
+        ys.push(y[i]);
+    }
+    Dataset {
+        name: format!("random{}d{}c", spec.dim, spec.classes),
+        dim: spec.dim,
+        classes: spec.classes,
+        x: xs,
+        y: ys,
+    }
+}
+
+fn sample_centroids(spec: &ClusterSpec, rng: &mut Pcg64) -> Vec<f64> {
+    let mut centroids: Vec<f64> = Vec::with_capacity(spec.classes * spec.dim);
+    let mut attempts = 0;
+    while centroids.len() < spec.classes * spec.dim {
+        let cand: Vec<f64> = (0..spec.dim)
+            .map(|_| rng.uniform(-spec.box_half, spec.box_half))
+            .collect();
+        let ok = centroids.chunks(spec.dim).all(|c| {
+            let d2: f64 = c
+                .iter()
+                .zip(&cand)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            d2.sqrt() >= spec.min_margin
+        });
+        attempts += 1;
+        if ok || attempts > 10_000 {
+            // In high dimension rejection almost never triggers; the attempt
+            // cap guards degenerate specs (margin too large for the box).
+            centroids.extend(cand);
+            attempts = 0;
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::class_histogram;
+
+    #[test]
+    fn paper_spec_shapes() {
+        let spec = ClusterSpec {
+            n_samples: 1000,
+            ..Default::default()
+        };
+        let d = generate(&spec, &mut Pcg64::seeded(42));
+        assert_eq!(d.len(), 1000);
+        assert_eq!(d.dim, 20);
+        assert_eq!(d.classes, 10);
+        let h = class_histogram(&d.y, 10);
+        assert!(h.iter().all(|&c| c == 100), "balanced classes: {h:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = ClusterSpec {
+            n_samples: 100,
+            ..Default::default()
+        };
+        let a = generate(&spec, &mut Pcg64::seeded(7));
+        let b = generate(&spec, &mut Pcg64::seeded(7));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = generate(&spec, &mut Pcg64::seeded(8));
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn clusters_are_separable_by_centroid_distance() {
+        // Nearest-centroid classification on held-out data should beat 60 %
+        // by a wide margin if clusters are real.
+        let spec = ClusterSpec {
+            n_samples: 2000,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(3);
+        let d = generate(&spec, &mut rng);
+        // Estimate centroids from the first half, classify the second half.
+        let half = d.len() / 2;
+        let mut cent = vec![0.0f64; 10 * d.dim];
+        let mut count = vec![0usize; 10];
+        for i in 0..half {
+            let c = d.y[i] as usize;
+            count[c] += 1;
+            for (k, &v) in d.row(i).iter().enumerate() {
+                cent[c * d.dim + k] += v as f64;
+            }
+        }
+        for c in 0..10 {
+            for k in 0..d.dim {
+                cent[c * d.dim + k] /= count[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in half..d.len() {
+            let row = d.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..10 {
+                let d2: f64 = row
+                    .iter()
+                    .zip(&cent[c * d.dim..(c + 1) * d.dim])
+                    .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            if best.1 == d.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / half as f64;
+        assert!(acc > 0.6, "nearest-centroid accuracy too low: {acc}");
+    }
+}

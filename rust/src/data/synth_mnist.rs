@@ -1,0 +1,290 @@
+//! Procedural MNIST lookalike: 28×28 grayscale handwritten-style digits.
+//!
+//! No network access ⇒ no real MNIST. Each digit class is a set of stroke
+//! segments (roughly the pen strokes of the glyph); every sample renders the
+//! strokes through a random affine jitter (translate / scale / rotate /
+//! shear), random stroke thickness, and additive pixel noise. This yields a
+//! 10-class image problem with real intra-class variation that a small CNN
+//! fits in minutes but not instantly — the role MNIST plays in the paper.
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+
+/// Stroke endpoints in glyph-local unit coordinates (x right, y down).
+type Seg = ((f32, f32), (f32, f32));
+
+/// Pen strokes per digit. Hand-authored to mimic the topology of each glyph
+/// (loops approximated by polylines).
+fn strokes(digit: usize) -> &'static [Seg] {
+    const O: &[Seg] = &[
+        ((0.25, 0.15), (0.75, 0.15)),
+        ((0.75, 0.15), (0.85, 0.5)),
+        ((0.85, 0.5), (0.75, 0.85)),
+        ((0.75, 0.85), (0.25, 0.85)),
+        ((0.25, 0.85), (0.15, 0.5)),
+        ((0.15, 0.5), (0.25, 0.15)),
+    ];
+    const I: &[Seg] = &[((0.35, 0.25), (0.5, 0.1)), ((0.5, 0.1), (0.5, 0.9)), ((0.3, 0.9), (0.7, 0.9))];
+    const TWO: &[Seg] = &[
+        ((0.2, 0.25), (0.4, 0.1)),
+        ((0.4, 0.1), (0.7, 0.12)),
+        ((0.7, 0.12), (0.8, 0.35)),
+        ((0.8, 0.35), (0.2, 0.9)),
+        ((0.2, 0.9), (0.85, 0.9)),
+    ];
+    const THREE: &[Seg] = &[
+        ((0.2, 0.12), (0.75, 0.12)),
+        ((0.75, 0.12), (0.5, 0.45)),
+        ((0.5, 0.45), (0.8, 0.65)),
+        ((0.8, 0.65), (0.7, 0.88)),
+        ((0.7, 0.88), (0.2, 0.88)),
+    ];
+    const FOUR: &[Seg] = &[
+        ((0.6, 0.1), (0.15, 0.6)),
+        ((0.15, 0.6), (0.85, 0.6)),
+        ((0.62, 0.35), (0.62, 0.9)),
+    ];
+    const FIVE: &[Seg] = &[
+        ((0.8, 0.1), (0.25, 0.1)),
+        ((0.25, 0.1), (0.22, 0.45)),
+        ((0.22, 0.45), (0.7, 0.45)),
+        ((0.7, 0.45), (0.8, 0.68)),
+        ((0.8, 0.68), (0.65, 0.9)),
+        ((0.65, 0.9), (0.2, 0.88)),
+    ];
+    const SIX: &[Seg] = &[
+        ((0.7, 0.1), (0.35, 0.35)),
+        ((0.35, 0.35), (0.2, 0.65)),
+        ((0.2, 0.65), (0.35, 0.9)),
+        ((0.35, 0.9), (0.7, 0.88)),
+        ((0.7, 0.88), (0.78, 0.65)),
+        ((0.78, 0.65), (0.6, 0.52)),
+        ((0.6, 0.52), (0.25, 0.6)),
+    ];
+    const SEVEN: &[Seg] = &[
+        ((0.15, 0.12), (0.85, 0.12)),
+        ((0.85, 0.12), (0.45, 0.9)),
+        ((0.3, 0.5), (0.7, 0.5)),
+    ];
+    const EIGHT: &[Seg] = &[
+        ((0.5, 0.1), (0.75, 0.28)),
+        ((0.75, 0.28), (0.5, 0.48)),
+        ((0.5, 0.48), (0.25, 0.28)),
+        ((0.25, 0.28), (0.5, 0.1)),
+        ((0.5, 0.48), (0.8, 0.7)),
+        ((0.8, 0.7), (0.5, 0.9)),
+        ((0.5, 0.9), (0.2, 0.7)),
+        ((0.2, 0.7), (0.5, 0.48)),
+    ];
+    const NINE: &[Seg] = &[
+        ((0.75, 0.4), (0.55, 0.5)),
+        ((0.55, 0.5), (0.25, 0.4)),
+        ((0.25, 0.4), (0.3, 0.15)),
+        ((0.3, 0.15), (0.65, 0.1)),
+        ((0.65, 0.1), (0.75, 0.4)),
+        ((0.75, 0.4), (0.6, 0.9)),
+    ];
+    match digit {
+        0 => O,
+        1 => I,
+        2 => TWO,
+        3 => THREE,
+        4 => FOUR,
+        5 => FIVE,
+        6 => SIX,
+        7 => SEVEN,
+        8 => EIGHT,
+        9 => NINE,
+        _ => unreachable!("digit out of range"),
+    }
+}
+
+/// Random per-sample affine transform in glyph space.
+struct Jitter {
+    sx: f32,
+    sy: f32,
+    rot: f32,
+    shear: f32,
+    dx: f32,
+    dy: f32,
+    thick: f32,
+    gain: f32,
+}
+
+impl Jitter {
+    fn sample(rng: &mut Pcg64) -> Jitter {
+        Jitter {
+            sx: rng.uniform(0.75, 1.05) as f32,
+            sy: rng.uniform(0.75, 1.05) as f32,
+            rot: rng.uniform(-0.18, 0.18) as f32,
+            shear: rng.uniform(-0.15, 0.15) as f32,
+            dx: rng.uniform(-0.08, 0.08) as f32,
+            dy: rng.uniform(-0.08, 0.08) as f32,
+            thick: rng.uniform(0.045, 0.085) as f32,
+            gain: rng.uniform(0.75, 1.0) as f32,
+        }
+    }
+
+    fn apply(&self, p: (f32, f32)) -> (f32, f32) {
+        // centre, scale+shear+rotate, translate back
+        let (mut x, mut y) = (p.0 - 0.5, p.1 - 0.5);
+        x *= self.sx;
+        y *= self.sy;
+        x += self.shear * y;
+        let (c, s) = (self.rot.cos(), self.rot.sin());
+        let (xr, yr) = (c * x - s * y, s * x + c * y);
+        (xr + 0.5 + self.dx, yr + 0.5 + self.dy)
+    }
+}
+
+/// Render one digit into a DIM-length buffer (values in [0, 1]).
+pub fn render_digit(digit: usize, rng: &mut Pcg64, out: &mut [f32]) {
+    assert_eq!(out.len(), DIM);
+    out.fill(0.0);
+    let j = Jitter::sample(rng);
+    for &(a, b) in strokes(digit) {
+        let (ax, ay) = j.apply(a);
+        let (bx, by) = j.apply(b);
+        draw_segment(out, ax, ay, bx, by, j.thick, j.gain);
+    }
+    // Additive noise + clamp (sensor-style grain).
+    for v in out.iter_mut() {
+        let noise = rng.normal_ms(0.0, 0.03) as f32;
+        *v = (*v + noise).clamp(0.0, 1.0);
+    }
+}
+
+/// Splat a thick anti-aliased segment (unit coords) into the grid.
+fn draw_segment(out: &mut [f32], ax: f32, ay: f32, bx: f32, by: f32, thick: f32, gain: f32) {
+    let n = SIDE as f32;
+    let (x0, y0) = (ax * n, ay * n);
+    let (x1, y1) = (bx * n, by * n);
+    let r = thick * n;
+    let (dx, dy) = (x1 - x0, y1 - y0);
+    let len2 = dx * dx + dy * dy;
+    let min_x = (x0.min(x1) - r - 1.0).floor().max(0.0) as usize;
+    let max_x = (x0.max(x1) + r + 1.0).ceil().min(n - 1.0) as usize;
+    let min_y = (y0.min(y1) - r - 1.0).floor().max(0.0) as usize;
+    let max_y = (y0.max(y1) + r + 1.0).ceil().min(n - 1.0) as usize;
+    for py in min_y..=max_y {
+        for px in min_x..=max_x {
+            let (cx, cy) = (px as f32 + 0.5, py as f32 + 0.5);
+            // distance from pixel centre to segment
+            let t = if len2 > 0.0 {
+                (((cx - x0) * dx + (cy - y0) * dy) / len2).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let (qx, qy) = (x0 + t * dx, y0 + t * dy);
+            let d = ((cx - qx) * (cx - qx) + (cy - qy) * (cy - qy)).sqrt();
+            // soft falloff at the stroke edge
+            let a = (1.0 - (d - r * 0.5).max(0.0) / (r * 0.75)).clamp(0.0, 1.0);
+            let idx = py * SIDE + px;
+            out[idx] = out[idx].max(a * gain);
+        }
+    }
+}
+
+/// Generate a full dataset of `n` samples with balanced classes.
+pub fn generate(n: usize, rng: &mut Pcg64) -> Dataset {
+    let mut x = vec![0.0f32; n * DIM];
+    let mut y = Vec::with_capacity(n);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for (k, &slot) in order.iter().enumerate() {
+        let digit = k % 10;
+        render_digit(digit, rng, &mut x[slot * DIM..(slot + 1) * DIM]);
+        y.push(0); // placeholder; fill below by slot
+    }
+    // labels must line up with slots
+    let mut labels = vec![0i32; n];
+    for (k, &slot) in order.iter().enumerate() {
+        labels[slot] = (k % 10) as i32;
+    }
+    y.clear();
+    y.extend_from_slice(&labels);
+    Dataset {
+        name: "synth-mnist".into(),
+        dim: DIM,
+        classes: 10,
+        x,
+        y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::class_histogram;
+
+    #[test]
+    fn shapes_and_range() {
+        let d = generate(200, &mut Pcg64::seeded(1));
+        assert_eq!(d.len(), 200);
+        assert_eq!(d.dim, 784);
+        assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let h = class_histogram(&d.y, 10);
+        assert!(h.iter().all(|&c| c == 20), "{h:?}");
+    }
+
+    #[test]
+    fn digits_have_ink() {
+        let mut rng = Pcg64::seeded(2);
+        let mut buf = vec![0.0f32; DIM];
+        for digit in 0..10 {
+            render_digit(digit, &mut rng, &mut buf);
+            let ink: f32 = buf.iter().sum();
+            assert!(ink > 10.0, "digit {digit} nearly blank (ink={ink})");
+            assert!(ink < DIM as f32 * 0.6, "digit {digit} saturated");
+        }
+    }
+
+    #[test]
+    fn intra_class_variation_exists() {
+        let mut rng = Pcg64::seeded(3);
+        let mut a = vec![0.0f32; DIM];
+        let mut b = vec![0.0f32; DIM];
+        render_digit(5, &mut rng, &mut a);
+        render_digit(5, &mut rng, &mut b);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 5.0, "two renders of the same digit are identical");
+    }
+
+    #[test]
+    fn classes_are_distinguishable_by_template() {
+        // Mean image per class should differ meaningfully between classes.
+        let mut rng = Pcg64::seeded(4);
+        let mut means = vec![vec![0.0f32; DIM]; 10];
+        let reps = 20;
+        let mut buf = vec![0.0f32; DIM];
+        for digit in 0..10 {
+            for _ in 0..reps {
+                render_digit(digit, &mut rng, &mut buf);
+                for (m, &v) in means[digit].iter_mut().zip(&buf) {
+                    *m += v / reps as f32;
+                }
+            }
+        }
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d: f32 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(d > 8.0, "classes {a} and {b} too similar (L1={d})");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(50, &mut Pcg64::seeded(9));
+        let b = generate(50, &mut Pcg64::seeded(9));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

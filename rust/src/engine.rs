@@ -1,0 +1,51 @@
+//! The gradient-engine interface between the coordinator (L3) and whatever
+//! computes gradients.
+//!
+//! Two implementations exist:
+//! - [`crate::runtime::XlaEngine`] — the production path: AOT-compiled
+//!   JAX/Pallas executables run via PJRT.
+//! - [`crate::native::NativeEngine`] — pure-Rust analytic models (softmax
+//!   regression, MLP with manual backprop, quadratic bowl) used by tests,
+//!   property checks and coordinator micro-benchmarks, and as a no-artifact
+//!   fallback.
+//!
+//! PJRT clients are not `Send` (`Rc` internals), so engines are constructed
+//! *inside* each worker thread from a `Send` factory.
+
+/// Computes gradients and evaluation metrics for a fixed model architecture.
+///
+/// Parameters are a single flat `f32` vector (layout defined by the model's
+/// manifest / spec); features are row-major `batch × dim`; labels are class
+/// ids (for LM models, flattened target token ids).
+pub trait GradEngine {
+    /// Number of parameters (length of the flat vector).
+    fn param_count(&self) -> usize;
+
+    /// Mini-batch size this engine was compiled/configured for.
+    fn batch_size(&self) -> usize;
+
+    /// Compute mean loss over the batch and write `∂loss/∂θ` into
+    /// `grad_out` (len == param_count). Returns the loss.
+    fn grad(&mut self, params: &[f32], x: &[f32], y: &[i32], grad_out: &mut [f32])
+        -> anyhow::Result<f32>;
+
+    /// Evaluate on a batch: returns `(sum_loss, correct_count)` so callers
+    /// can aggregate over chunks.
+    fn eval(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<(f64, usize)>;
+
+    /// Eval-batch size (may differ from the training batch).
+    fn eval_batch_size(&self) -> usize {
+        self.batch_size()
+    }
+}
+
+/// Thread-safe constructor for per-thread engines.
+pub type EngineFactory = std::sync::Arc<dyn Fn() -> anyhow::Result<Box<dyn GradEngine>> + Send + Sync>;
+
+/// Convenience: wrap a closure as an [`EngineFactory`].
+pub fn factory<F>(f: F) -> EngineFactory
+where
+    F: Fn() -> anyhow::Result<Box<dyn GradEngine>> + Send + Sync + 'static,
+{
+    std::sync::Arc::new(f)
+}

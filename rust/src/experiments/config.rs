@@ -1,0 +1,231 @@
+//! Experiment configuration: one struct that fully determines a
+//! sync/async/hybrid comparison run (paper §6).
+//!
+//! Scale presets: the paper trains 25 workers × 5 rounds × 100 s per
+//! configuration on a 28-core node. This container has one core, so the
+//! default preset scales down (8 workers, 2 rounds, 10 s) while `--paper-scale`
+//! restores the original numbers; the *relative* comparison (identical init,
+//! identical budget across algorithms) is what the tables measure.
+
+use crate::coordinator::DelayModel;
+
+/// Which dataset feeds the run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DatasetKind {
+    /// Procedural MNIST lookalike (28×28 grayscale digits).
+    Mnist,
+    /// Procedural CIFAR lookalike (32×32 RGB scenes).
+    Cifar,
+    /// The paper's random 20-dim 10-class Gaussian clusters.
+    Random,
+}
+
+impl DatasetKind {
+    pub fn model(self) -> &'static str {
+        match self {
+            DatasetKind::Mnist => "cnn_mnist",
+            DatasetKind::Cifar => "cnn_cifar",
+            DatasetKind::Random => "mlp",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "mnist" => DatasetKind::Mnist,
+            "cifar" => DatasetKind::Cifar,
+            "random" => DatasetKind::Random,
+            _ => anyhow::bail!("unknown dataset `{s}` (mnist|cifar|random)"),
+        })
+    }
+}
+
+/// How gradients are computed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineKind {
+    /// AOT XLA artifacts (the production path). Variant: "jnp" | "pallas".
+    Xla { variant: String },
+    /// Pure-Rust backprop (mlp only) — coordinator-focused benches/tests.
+    Native,
+}
+
+/// One comparison configuration.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub dataset: DatasetKind,
+    pub engine: EngineKind,
+    pub workers: usize,
+    pub batch: usize,
+    pub lr: f32,
+    /// Threshold step = step_mult / lr gradient arrivals (paper notation:
+    /// step sizes as multiples of the reciprocal learning rate).
+    pub step_mult: f64,
+    pub rounds: usize,
+    pub secs: f64,
+    pub delay: DelayModel,
+    pub seed: u64,
+    /// Dataset sizes (the Random dataset is split 80:20 afterwards).
+    pub train_n: usize,
+    pub test_n: usize,
+    /// Eval probe caps.
+    pub eval_test_n: usize,
+    pub eval_probe_n: usize,
+    /// Metric grid resolution for round averaging.
+    pub grid_points: usize,
+    /// Per-gradient compute-cost floor in ms (simulates the paper's ray +
+    /// PyTorch per-iteration cost for models whose AOT executables are much
+    /// faster here; the CNNs are already in-regime and use 0).
+    pub compute_ms: f64,
+    /// Estimated gradient arrivals/sec for this (dataset, workers, budget)
+    /// on this container — used to scale the paper's threshold step sizes.
+    pub arrival_rate_est: f64,
+}
+
+/// The paper's K cap (25 workers) is reached after step×(25−1) arrivals; at
+/// their smallest step (300) that is 7200 arrivals over a 100 s run. We keep
+/// the async→sync transition spanning the same *fraction* of the training
+/// interval by scaling step sizes with the ratio of expected arrivals
+/// (DESIGN.md §1: scale substitutions preserve relative dynamics).
+pub const PAPER_ARRIVALS: f64 = 7500.0;
+
+/// The paper fixes lr = 0.01 (§6); step sizes are defined as multiples of
+/// its reciprocal. Our lr defaults may be budget-scaled per dataset, but the
+/// step-size *units* stay anchored to the paper's lr so Table 4's x-axis
+/// keeps its meaning.
+pub const PAPER_LR: f64 = 0.01;
+
+impl ExpConfig {
+    /// Container-scale defaults for a dataset.
+    pub fn default_for(dataset: DatasetKind) -> ExpConfig {
+        let (train_n, test_n) = match dataset {
+            DatasetKind::Mnist => (6_000, 1_000),
+            DatasetKind::Cifar => (4_000, 800),
+            DatasetKind::Random => (8_000, 2_000), // paper: 10k total, 80:20
+        };
+        ExpConfig {
+            dataset,
+            engine: EngineKind::Xla {
+                variant: "jnp".into(),
+            },
+            workers: 8,
+            batch: 32,
+            // The paper fixes 0.01 over 100 s on 28 cores; the CNN budgets
+            // here are ~10x shorter on 1 core, so their lr is budget-scaled.
+            lr: match dataset {
+                DatasetKind::Random => 0.01,
+                _ => 0.05,
+            },
+            step_mult: 5.0,
+            rounds: 2,
+            secs: match dataset {
+                DatasetKind::Random => 10.0,
+                DatasetKind::Mnist => 12.0,
+                DatasetKind::Cifar => 20.0,
+            },
+            delay: DelayModel::paper_default(),
+            seed: 42,
+            train_n,
+            test_n,
+            eval_test_n: 500,
+            eval_probe_n: 500,
+            grid_points: 41,
+            compute_ms: match dataset {
+                DatasetKind::Random => 20.0,
+                _ => 0.0,
+            },
+            arrival_rate_est: match dataset {
+                DatasetKind::Random => 200.0,
+                DatasetKind::Mnist => 34.0,
+                DatasetKind::Cifar => 12.0,
+            },
+        }
+    }
+
+    /// Step-size scale: expected arrivals this run / the paper's arrivals,
+    /// clamped to at most 1 (never *slow* the transition beyond the paper's).
+    pub fn step_scale(&self) -> f64 {
+        ((self.arrival_rate_est * self.secs) / PAPER_ARRIVALS).min(1.0)
+    }
+
+    /// The paper's full-scale settings (hours of wall clock on one core).
+    pub fn paper_scale(mut self) -> ExpConfig {
+        self.workers = 25;
+        self.rounds = 5;
+        self.secs = 100.0;
+        match self.dataset {
+            DatasetKind::Mnist => {
+                self.train_n = 60_000;
+                self.test_n = 10_000;
+            }
+            DatasetKind::Cifar => {
+                self.train_n = 50_000;
+                self.test_n = 10_000;
+            }
+            DatasetKind::Random => {
+                self.train_n = 8_000;
+                self.test_n = 2_000;
+            }
+        }
+        self
+    }
+
+    /// Smoke-test scale (seconds per table).
+    pub fn quick(mut self) -> ExpConfig {
+        self.rounds = 1;
+        self.secs = 3.0;
+        self.workers = 4;
+        self.train_n = self.train_n.min(2_000);
+        self.test_n = self.test_n.min(500);
+        self.eval_test_n = 300;
+        self.eval_probe_n = 300;
+        self
+    }
+
+    /// The threshold schedule: the paper's step (multiple of 1/paper-lr)
+    /// scaled to this container's arrival rate.
+    pub fn schedule(&self) -> crate::coordinator::Schedule {
+        let paper_step = self.step_mult / PAPER_LR;
+        let step = (paper_step * self.step_scale()).round().max(1.0) as usize;
+        crate::coordinator::Schedule::Step { step }
+    }
+
+    /// A short tag for file names / logs.
+    pub fn tag(&self) -> String {
+        format!(
+            "{}_s{}_b{}_w{}",
+            self.dataset.model(),
+            (self.step_mult / self.lr as f64).round() as i64,
+            self.batch,
+            self.workers
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ExpConfig::default_for(DatasetKind::Random);
+        assert_eq!(c.dataset.model(), "mlp");
+        // 200/s x 10s = 2000 expected arrivals; scale = 2000/7500
+        let expect = (500.0f64 * 2000.0 / 7500.0).round() as usize;
+        assert_eq!(c.schedule(), crate::coordinator::Schedule::Step { step: expect });
+        assert!(c.tag().contains("mlp_s500_b32"));
+    }
+
+    #[test]
+    fn paper_scale_restores_paper_numbers() {
+        let c = ExpConfig::default_for(DatasetKind::Mnist).paper_scale();
+        assert_eq!(c.workers, 25);
+        assert_eq!(c.rounds, 5);
+        assert_eq!(c.secs, 100.0);
+        assert_eq!(c.train_n, 60_000);
+    }
+
+    #[test]
+    fn dataset_parse() {
+        assert_eq!(DatasetKind::parse("mnist").unwrap(), DatasetKind::Mnist);
+        assert!(DatasetKind::parse("imagenet").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Regeneration of the paper's Figures 4–10.
+//!
+//! Figures 4–7 are the metric-vs-time curves (test accuracy, test loss,
+//! train loss for all three algorithms) on MNIST / CIFAR at each
+//! (step, batch) combination. Figures 8–10 plot the table 3/4/5 diffs
+//! against batch size / step size / delay σ. Output: CSV under `results/`
+//! plus ASCII charts on stdout (no plotting library offline).
+
+use super::config::{DatasetKind, ExpConfig};
+use super::runner::{run_comparison, Comparison};
+use super::tables::{run_table, Table};
+use crate::util::plot::{bars, render, Curve};
+
+/// A rendered figure: chart text + the CSV rows that back it.
+pub struct Figure {
+    pub id: usize,
+    pub title: String,
+    pub chart: String,
+    /// (filename, csv content) pairs.
+    pub csv: Vec<(String, String)>,
+}
+
+/// Figures 4/5 (MNIST) and 6/7 (CIFAR): one figure covers two batch sizes at
+/// one step multiple.
+pub fn curve_figure(id: usize, base: &ExpConfig) -> anyhow::Result<Figure> {
+    let (dataset, mult, label) = match id {
+        4 => (DatasetKind::Mnist, 3.0, "MNIST step 300"),
+        5 => (DatasetKind::Mnist, 5.0, "MNIST step 500"),
+        6 => (DatasetKind::Cifar, 3.0, "CIFAR-10 step 300"),
+        7 => (DatasetKind::Cifar, 5.0, "CIFAR-10 step 500"),
+        _ => anyhow::bail!("curve figures are 4-7"),
+    };
+    let mut chart = String::new();
+    let mut csv = Vec::new();
+    for batch in [32usize, 64] {
+        let mut cfg = base.clone();
+        cfg.dataset = dataset;
+        cfg.step_mult = mult;
+        cfg.batch = batch;
+        let cmp = run_comparison(&cfg)?;
+        chart.push_str(&comparison_charts(
+            &format!("Figure {id}: {label}, batch {batch}"),
+            &cmp,
+        ));
+        csv.push((
+            format!("figure{id}_b{batch}.csv"),
+            comparison_csv(&cmp),
+        ));
+    }
+    Ok(Figure {
+        id,
+        title: label.to_string(),
+        chart,
+        csv,
+    })
+}
+
+/// ASCII charts for one comparison (acc / test loss / train loss).
+pub fn comparison_charts(title: &str, cmp: &Comparison) -> String {
+    let mut out = String::new();
+    for (metric, get) in [
+        ("test accuracy (%)", 0usize),
+        ("test loss", 1),
+        ("train loss", 2),
+    ] {
+        let curves: Vec<Curve> = cmp
+            .averaged
+            .iter()
+            .map(|(algo, avg)| Curve {
+                label: algo.name(),
+                t: &avg.grid,
+                v: match get {
+                    0 => &avg.test_acc,
+                    1 => &avg.test_loss,
+                    _ => &avg.train_loss,
+                },
+            })
+            .collect();
+        out.push_str(&render(&format!("{title} — {metric}"), &curves, 64, 14));
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV with one row per grid point: t, then per-algo acc/test_loss/train_loss.
+pub fn comparison_csv(cmp: &Comparison) -> String {
+    let mut s = String::from("t");
+    for (algo, _) in &cmp.averaged {
+        let n = algo.name();
+        s.push_str(&format!(",{n}_acc,{n}_test_loss,{n}_train_loss"));
+    }
+    s.push('\n');
+    let grid = &cmp.averaged[0].1.grid;
+    for (i, t) in grid.iter().enumerate() {
+        s.push_str(&format!("{t:.3}"));
+        for (_, avg) in &cmp.averaged {
+            s.push_str(&format!(
+                ",{:.5},{:.5},{:.5}",
+                avg.test_acc[i], avg.test_loss[i], avg.train_loss[i]
+            ));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Figures 8/9/10: the table 3/4/5 metric diffs as bar charts.
+pub fn diff_figure(id: usize, base: &ExpConfig) -> anyhow::Result<Figure> {
+    let (table_id, xlabel) = match id {
+        8 => (3usize, "batch size"),
+        9 => (4, "step size"),
+        10 => (5, "delay (mean, std)"),
+        _ => anyhow::bail!("diff figures are 8-10"),
+    };
+    let table = run_table(table_id, base)?;
+    Ok(figure_from_table(id, xlabel, &table))
+}
+
+/// Build a diff figure from an already-computed table (avoids rerunning).
+pub fn figure_from_table(id: usize, xlabel: &str, table: &Table) -> Figure {
+    let mut chart = String::new();
+    for (metric, get) in [
+        ("Δ test accuracy", 0usize),
+        ("Δ test loss", 1),
+        ("Δ train loss", 2),
+    ] {
+        let items: Vec<(String, f64)> = table
+            .col_labels
+            .iter()
+            .zip(&table.measured)
+            .map(|(l, m)| {
+                (
+                    l.clone(),
+                    match get {
+                        0 => m.test_acc,
+                        1 => m.test_loss,
+                        _ => m.train_loss,
+                    },
+                )
+            })
+            .collect();
+        chart.push_str(&bars(
+            &format!("Figure {id}: {metric} (hybrid − async) vs {xlabel}"),
+            &items,
+            40,
+        ));
+        chart.push('\n');
+    }
+    let mut csv = format!("{xlabel},d_test_acc,d_test_loss,d_train_loss\n");
+    for (l, m) in table.col_labels.iter().zip(&table.measured) {
+        csv.push_str(&format!(
+            "{l},{:.5},{:.5},{:.5}\n",
+            m.test_acc, m.test_loss, m.train_loss
+        ));
+    }
+    Figure {
+        id,
+        title: format!("average metric difference vs {xlabel}"),
+        chart,
+        csv: vec![(format!("figure{id}.csv"), csv)],
+    }
+}
+
+/// Dispatch by figure number.
+pub fn run_figure(id: usize, base: &ExpConfig) -> anyhow::Result<Figure> {
+    match id {
+        4..=7 => curve_figure(id, base),
+        8..=10 => diff_figure(id, base),
+        _ => anyhow::bail!("figures are numbered 4-10"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::runner::DiffRow;
+
+    #[test]
+    fn figure_from_table_renders() {
+        let t = Table {
+            id: 3,
+            title: "demo".into(),
+            col_labels: vec!["8".into(), "16".into()],
+            measured: vec![
+                DiffRow {
+                    test_acc: 4.0,
+                    test_loss: -0.1,
+                    train_loss: -0.1,
+                },
+                DiffRow {
+                    test_acc: 2.0,
+                    test_loss: -0.05,
+                    train_loss: -0.04,
+                },
+            ],
+            paper: vec![],
+            comparisons: vec![],
+        };
+        let f = figure_from_table(8, "batch size", &t);
+        assert!(f.chart.contains("Figure 8"));
+        assert!(f.csv[0].1.contains("8,4.00000"));
+    }
+}

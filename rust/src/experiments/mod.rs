@@ -1,0 +1,13 @@
+//! Experiment harness: configurations, the multi-round runner, and the
+//! table/figure regeneration pipeline (paper §7).
+
+pub mod config;
+pub mod figures;
+pub mod report;
+pub mod runner;
+pub mod tables;
+
+/// CLI entrypoint (the `hybrid-sgd` binary delegates here).
+pub fn cli_main() -> anyhow::Result<()> {
+    report::cli_main()
+}

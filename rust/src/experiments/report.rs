@@ -1,0 +1,306 @@
+//! The `hybrid-sgd` CLI: single runs, comparisons, and table/figure
+//! regeneration with file output under `results/`.
+
+use super::config::{DatasetKind, EngineKind, ExpConfig};
+use super::figures::{comparison_charts, figure_from_table, run_figure};
+use super::runner::{run_comparison, Algo};
+use super::tables::run_table;
+use crate::coordinator::{DelayModel, Policy};
+use crate::util::cli::Args;
+use std::io::Write as _;
+use std::path::Path;
+
+const USAGE: &str = "\
+hybrid-sgd — parameter-server SGD with sync / async / smooth-switch hybrid aggregation
+
+USAGE:
+  hybrid-sgd <command> [options]
+
+COMMANDS:
+  inspect                      list models & artifacts from the manifest
+  train                        one training run, print metrics
+  compare                      run hybrid vs async vs sync, print charts
+  table <1-5>                  regenerate a paper table
+  figure <4-10>                regenerate a paper figure
+  all                          regenerate every table and figure
+  help                         this text
+
+COMMON OPTIONS:
+  --dataset mnist|cifar|random   workload (default per command)
+  --engine xla:jnp|xla:pallas|native
+  --policy async|sync|hybrid:step:500|hybrid-strict:<sched>  (train only)
+  --workers N      --batch N     --lr F        --secs F
+  --rounds N       --seed N      --step-mult F --delay-std F
+  --quick                        smoke scale (seconds)
+  --paper-scale                  the paper's 25 workers x 5 rounds x 100 s
+  --out DIR                      results directory (default results/)
+";
+
+/// Build an `ExpConfig` from CLI options.
+fn config_from(args: &Args, default_dataset: DatasetKind) -> anyhow::Result<ExpConfig> {
+    let dataset = match args.get("dataset") {
+        Some(d) => DatasetKind::parse(d)?,
+        None => default_dataset,
+    };
+    let mut cfg = ExpConfig::default_for(dataset);
+    if args.flag("quick") {
+        cfg = cfg.quick();
+    }
+    if args.flag("paper-scale") {
+        cfg = cfg.paper_scale();
+    }
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.batch = args.usize_or("batch", cfg.batch);
+    cfg.lr = args.f64_or("lr", cfg.lr as f64) as f32;
+    cfg.secs = args.f64_or("secs", cfg.secs);
+    cfg.rounds = args.usize_or("rounds", cfg.rounds);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.step_mult = args.f64_or("step-mult", cfg.step_mult);
+    cfg.arrival_rate_est = args.f64_or("arrival-rate", cfg.arrival_rate_est);
+    cfg.compute_ms = args.f64_or("compute-ms", cfg.compute_ms);
+    if let Some(std) = args.get("delay-std") {
+        cfg.delay = DelayModel::paper_default().with_std(std.parse()?);
+    }
+    cfg.engine = match args.str_or("engine", "xla:jnp").as_str() {
+        "native" => EngineKind::Native,
+        "xla:jnp" => EngineKind::Xla {
+            variant: "jnp".into(),
+        },
+        "xla:pallas" => EngineKind::Xla {
+            variant: "pallas".into(),
+        },
+        other => anyhow::bail!("unknown engine `{other}`"),
+    };
+    Ok(cfg)
+}
+
+fn results_dir(args: &Args) -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn save(dir: &Path, name: &str, content: &str) -> anyhow::Result<()> {
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(content.as_bytes())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+pub fn cli_main() -> anyhow::Result<()> {
+    let args = Args::parse(true);
+    match args.subcommand.as_deref() {
+        Some("inspect") => cmd_inspect(),
+        Some("train") => cmd_train(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("table") => cmd_table(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("all") => cmd_all(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_inspect() -> anyhow::Result<()> {
+    let dir = crate::runtime::default_artifact_dir();
+    let man = crate::runtime::Manifest::load(&dir)?;
+    println!("manifest: {}", dir.join("manifest.json").display());
+    println!("\nmodels:");
+    for m in &man.models {
+        println!(
+            "  {:<12} {:<12} params={:<8} x_dim={:<6} classes={} layers={}",
+            m.name,
+            m.kind,
+            m.param_count,
+            m.x_dim,
+            m.classes,
+            m.layers.len()
+        );
+    }
+    println!("\ngraph artifacts:");
+    for a in &man.artifacts {
+        println!(
+            "  {:<14} {:<5} batch={:<4} variant={:<7} {}",
+            a.model,
+            a.kind,
+            a.batch,
+            a.variant,
+            a.path.file_name().unwrap().to_string_lossy()
+        );
+    }
+    println!("\nops:");
+    for o in &man.ops {
+        println!(
+            "  {:<14} {:<8} variant={:<7} params={}",
+            o.op, o.model, o.variant, o.param_count
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args, DatasetKind::Random)?;
+    let policy = Policy::parse(&args.str_or("policy", &format!("hybrid:{}", cfg.schedule())))?;
+    let workload = super::runner::Workload::prepare(&cfg)?;
+    let tc = crate::coordinator::TrainConfig {
+        policy,
+        workers: cfg.workers,
+        lr: cfg.lr,
+        duration: std::time::Duration::from_secs_f64(cfg.secs),
+        delay: cfg.delay.clone(),
+        seed: cfg.seed,
+        eval_interval: std::time::Duration::from_millis(500),
+        k_max: None,
+        compute_floor: std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
+    };
+    let inputs = crate::coordinator::RunInputs {
+        worker_engine: std::sync::Arc::clone(&workload.worker_engine),
+        eval_engine: std::sync::Arc::clone(&workload.eval_engine),
+        batch_source: workload_batch_source(&workload, &cfg),
+        init_params: &workload.init,
+        test: &workload.test,
+        train_probe: &workload.probe,
+    };
+    let m = crate::coordinator::train(&tc, &inputs)?;
+    println!("policy          : {}", tc.policy);
+    println!("gradients       : {}", m.gradients_total);
+    println!("updates         : {}", m.updates_total);
+    println!("flushes         : {}", m.flushes);
+    println!("grads/sec       : {:.1}", m.grads_per_sec());
+    println!("mean staleness  : {:.2}", m.mean_staleness);
+    if let Some((tr, te, acc)) = m.final_metrics() {
+        println!("final train loss: {tr:.4}");
+        println!("final test loss : {te:.4}");
+        println!("final test acc  : {acc:.2}%");
+    }
+    Ok(())
+}
+
+fn workload_batch_source(
+    w: &super::runner::Workload,
+    cfg: &ExpConfig,
+) -> std::sync::Arc<dyn Fn(usize) -> Box<dyn crate::coordinator::worker::BatchSource> + Send + Sync>
+{
+    let shards = w.train_set.shard_indices(cfg.workers);
+    let train = std::sync::Arc::clone(&w.train_set);
+    let batch = cfg.batch;
+    let seed = cfg.seed;
+    std::sync::Arc::new(move |id| {
+        Box::new(crate::data::Batcher::new(
+            std::sync::Arc::clone(&train),
+            shards[id].clone(),
+            batch,
+            crate::util::rng::Pcg64::new(seed, id as u64),
+        )) as Box<dyn crate::coordinator::worker::BatchSource>
+    })
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args, DatasetKind::Random)?;
+    let cmp = run_comparison(&cfg)?;
+    println!("{}", comparison_charts(&format!("compare [{}]", cfg.tag()), &cmp));
+    println!("interval-mean diffs (hybrid − async):");
+    let d = cmp.diff_vs(Algo::Async);
+    println!("  test accuracy : {:+.3}", d.test_acc);
+    println!("  test loss     : {:+.3}", d.test_loss);
+    println!("  train loss    : {:+.3}", d.train_loss);
+    for (algo, avg) in &cmp.averaged {
+        println!(
+            "  {:<7} {:>8.1} grads/s, {:>8.1} updates, staleness {:.2}",
+            algo.name(),
+            avg.grads_per_sec,
+            avg.updates_total,
+            avg.mean_staleness
+        );
+    }
+    let dir = results_dir(args)?;
+    save(
+        &dir,
+        &format!("compare_{}.csv", cfg.tag()),
+        &super::figures::comparison_csv(&cmp),
+    )?;
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    let id: usize = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: table <1-5>"))?
+        .parse()?;
+    let base = config_from(args, DatasetKind::Random)?;
+    let table = run_table(id, &base)?;
+    let md = table.to_markdown();
+    println!("{md}");
+    println!(
+        "hybrid beats async on accuracy in {:.0}% of configurations",
+        table.win_fraction() * 100.0
+    );
+    let dir = results_dir(args)?;
+    save(&dir, &format!("table{id}.md"), &md)?;
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id: usize = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: figure <4-10>"))?
+        .parse()?;
+    let base = config_from(args, DatasetKind::Random)?;
+    let fig = run_figure(id, &base)?;
+    println!("{}", fig.chart);
+    let dir = results_dir(args)?;
+    for (name, csv) in &fig.csv {
+        save(&dir, name, csv)?;
+    }
+    Ok(())
+}
+
+fn cmd_all(args: &Args) -> anyhow::Result<()> {
+    let dir = results_dir(args)?;
+    let mut summary = String::from("# Regenerated tables and figures\n\n");
+    for id in 1..=5usize {
+        let base = config_from(args, DatasetKind::Random)?;
+        let table = run_table(id, &base)?;
+        let md = table.to_markdown();
+        println!("{md}");
+        summary.push_str(&md);
+        save(&dir, &format!("table{id}.md"), &md)?;
+        // figures 8-10 reuse tables 3-5
+        if let Some(fig_id) = match id {
+            3 => Some(8usize),
+            4 => Some(9),
+            5 => Some(10),
+            _ => None,
+        } {
+            let xlabel = match fig_id {
+                8 => "batch size",
+                9 => "step size",
+                _ => "delay (mean, std)",
+            };
+            let fig = figure_from_table(fig_id, xlabel, &table);
+            println!("{}", fig.chart);
+            for (name, csv) in &fig.csv {
+                save(&dir, name, csv)?;
+            }
+        }
+        // curve figures from tables 1-2 comparisons
+        if id <= 2 {
+            for (ci, cmp) in table.comparisons.iter().enumerate() {
+                let fig_id = if id == 1 { 4 + ci / 2 } else { 6 + ci / 2 };
+                let name = format!("figure{}_{}.csv", fig_id, cmp.cfg.tag());
+                save(&dir, &name, &super::figures::comparison_csv(cmp))?;
+            }
+        }
+    }
+    save(&dir, "summary.md", &summary)?;
+    Ok(())
+}

@@ -1,0 +1,344 @@
+//! The comparison runner: prepare a workload, run sync / async / hybrid from
+//! identical initialisation for the same wall-clock budget, average rounds on
+//! a common time grid, and compute the paper's interval-mean differences.
+
+use super::config::{DatasetKind, EngineKind, ExpConfig};
+use crate::coordinator::worker::BatchSource;
+use crate::coordinator::{
+    train, EvalSet, Policy, RunInputs, RunMetrics, Schedule, TrainConfig,
+};
+use crate::data::{random_cluster, synth_cifar, synth_mnist, Batcher, Dataset};
+use crate::engine::{factory, EngineFactory};
+use crate::log_info;
+use crate::native::MlpEngine;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{average_rows, interval_mean_diff, time_grid};
+use std::sync::Arc;
+
+/// The MLP dims shared by the JAX model, the native engine and the manifest.
+pub const MLP_DIMS: [usize; 4] = [20, 64, 64, 10];
+
+/// A prepared workload: datasets + engines + init, ready to train.
+pub struct Workload {
+    pub train_set: Arc<Dataset>,
+    pub test: EvalSet,
+    pub probe: EvalSet,
+    pub init: Vec<f32>,
+    pub worker_engine: EngineFactory,
+    pub eval_engine: EngineFactory,
+}
+
+impl Workload {
+    /// Generate datasets and engine factories for a config.
+    pub fn prepare(cfg: &ExpConfig) -> anyhow::Result<Workload> {
+        let mut rng = Pcg64::new(cfg.seed, 1);
+        let (train_set, test_set) = match cfg.dataset {
+            DatasetKind::Mnist => {
+                let tr = synth_mnist::generate(cfg.train_n, &mut rng);
+                let te = synth_mnist::generate(cfg.test_n, &mut rng);
+                (tr, te)
+            }
+            DatasetKind::Cifar => {
+                let tr = synth_cifar::generate(cfg.train_n, &mut rng);
+                let te = synth_cifar::generate(cfg.test_n, &mut rng);
+                (tr, te)
+            }
+            DatasetKind::Random => {
+                // Paper: 10k samples, 80:20 split, newly sampled per config.
+                let spec = random_cluster::ClusterSpec {
+                    n_samples: cfg.train_n + cfg.test_n,
+                    ..Default::default()
+                };
+                let full = random_cluster::generate(&spec, &mut rng);
+                full.split(
+                    cfg.train_n as f64 / (cfg.train_n + cfg.test_n) as f64,
+                    &mut rng,
+                )
+            }
+        };
+
+        let model = cfg.dataset.model();
+        let (worker_engine, eval_engine, init) = match &cfg.engine {
+            EngineKind::Xla { variant } => {
+                let dir = crate::runtime::default_artifact_dir();
+                let manifest = crate::runtime::Manifest::load(&dir)?;
+                let entry = manifest.model(model)?;
+                let init = crate::runtime::init_params(entry, &mut rng)?;
+                let (w, e) = crate::runtime::engine_factories(&dir, model, cfg.batch, variant)?;
+                (w, e, init)
+            }
+            EngineKind::Native => {
+                anyhow::ensure!(
+                    cfg.dataset == DatasetKind::Random,
+                    "native engine only implements the MLP (random dataset)"
+                );
+                let dims: Vec<usize> = MLP_DIMS.to_vec();
+                let init = MlpEngine::init_params(&dims, &mut rng);
+                let batch = cfg.batch;
+                let dims_w = dims.clone();
+                let w = factory(move || {
+                    Ok(Box::new(MlpEngine::new(dims_w.clone(), batch))
+                        as Box<dyn crate::engine::GradEngine>)
+                });
+                let dims_e = dims.clone();
+                let e = factory(move || {
+                    Ok(Box::new(MlpEngine::new(dims_e.clone(), 100))
+                        as Box<dyn crate::engine::GradEngine>)
+                });
+                (w, e, init)
+            }
+        };
+
+        let test = EvalSet::from_dataset(&test_set, cfg.eval_test_n, &mut rng);
+        let probe = EvalSet::from_dataset(&train_set, cfg.eval_probe_n, &mut rng);
+        Ok(Workload {
+            train_set: Arc::new(train_set),
+            test,
+            probe,
+            init,
+            worker_engine,
+            eval_engine,
+        })
+    }
+
+    /// Batch-source factory over this workload's shards.
+    fn batch_source(
+        &self,
+        cfg: &ExpConfig,
+        round: usize,
+    ) -> Arc<dyn Fn(usize) -> Box<dyn BatchSource> + Send + Sync> {
+        let shards = self.train_set.shard_indices(cfg.workers);
+        let train = Arc::clone(&self.train_set);
+        let batch = cfg.batch;
+        let seed = cfg.seed.wrapping_add(round as u64 * 7919);
+        Arc::new(move |id| {
+            Box::new(Batcher::new(
+                Arc::clone(&train),
+                shards[id].clone(),
+                batch,
+                Pcg64::new(seed, id as u64),
+            )) as Box<dyn BatchSource>
+        })
+    }
+}
+
+/// The three algorithms under comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Hybrid,
+    Async,
+    Sync,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 3] = [Algo::Hybrid, Algo::Async, Algo::Sync];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Hybrid => "hybrid",
+            Algo::Async => "async",
+            Algo::Sync => "sync",
+        }
+    }
+
+    fn policy(self, schedule: Schedule) -> Policy {
+        match self {
+            Algo::Hybrid => Policy::Hybrid {
+                schedule,
+                strict: false,
+            },
+            Algo::Async => Policy::Async,
+            Algo::Sync => Policy::Sync,
+        }
+    }
+}
+
+/// Round-averaged metric curves on the common grid.
+#[derive(Clone, Debug)]
+pub struct AveragedRun {
+    pub grid: Vec<f64>,
+    pub test_acc: Vec<f64>,
+    pub test_loss: Vec<f64>,
+    pub train_loss: Vec<f64>,
+    pub grads_per_sec: f64,
+    pub updates_total: f64,
+    pub mean_staleness: f64,
+}
+
+/// Result of one full comparison (all algos, all rounds).
+pub struct Comparison {
+    pub cfg: ExpConfig,
+    pub averaged: Vec<(Algo, AveragedRun)>,
+    pub raw: Vec<(Algo, Vec<RunMetrics>)>,
+}
+
+/// The paper's table statistic: interval means of (hybrid − baseline).
+#[derive(Clone, Copy, Debug)]
+pub struct DiffRow {
+    pub test_acc: f64,
+    pub test_loss: f64,
+    pub train_loss: f64,
+}
+
+impl Comparison {
+    pub fn averaged_for(&self, a: Algo) -> &AveragedRun {
+        &self.averaged.iter().find(|(x, _)| *x == a).unwrap().1
+    }
+
+    /// hybrid − baseline, averaged over the training interval.
+    pub fn diff_vs(&self, baseline: Algo) -> DiffRow {
+        let ours = self.averaged_for(Algo::Hybrid);
+        let base = self.averaged_for(baseline);
+        DiffRow {
+            test_acc: interval_mean_diff(&ours.test_acc, &base.test_acc),
+            test_loss: interval_mean_diff(&ours.test_loss, &base.test_loss),
+            train_loss: interval_mean_diff(&ours.train_loss, &base.train_loss),
+        }
+    }
+}
+
+/// Run the full comparison for a config.
+pub fn run_comparison(cfg: &ExpConfig) -> anyhow::Result<Comparison> {
+    run_comparison_algos(cfg, &Algo::ALL)
+}
+
+/// Run a chosen subset of algorithms (the paper drops sync after §7.1).
+pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<Comparison> {
+    let workload = Workload::prepare(cfg)?;
+    let grid = time_grid(cfg.secs, cfg.grid_points);
+    let mut raw: Vec<(Algo, Vec<RunMetrics>)> =
+        algos.iter().map(|&a| (a, Vec::new())).collect();
+
+    for round in 0..cfg.rounds {
+        // Fresh init per round, identical across algorithms (paper §6).
+        let mut round_rng = Pcg64::new(cfg.seed.wrapping_add(round as u64), 3);
+        let init = match &cfg.engine {
+            EngineKind::Xla { .. } => {
+                let dir = crate::runtime::default_artifact_dir();
+                let manifest = crate::runtime::Manifest::load(&dir)?;
+                crate::runtime::init_params(manifest.model(cfg.dataset.model())?, &mut round_rng)?
+            }
+            EngineKind::Native => MlpEngine::init_params(&MLP_DIMS, &mut round_rng),
+        };
+        for &algo in algos {
+            let tc = TrainConfig {
+                policy: algo.policy(cfg.schedule()),
+                workers: cfg.workers,
+                lr: cfg.lr,
+                duration: std::time::Duration::from_secs_f64(cfg.secs),
+                delay: cfg.delay.clone(),
+                seed: cfg.seed.wrapping_add(round as u64 * 31),
+                eval_interval: std::time::Duration::from_secs_f64(
+                    (cfg.secs / (cfg.grid_points as f64 - 1.0)).max(0.25),
+                ),
+                k_max: None,
+                compute_floor: std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
+            };
+            let inputs = RunInputs {
+                worker_engine: Arc::clone(&workload.worker_engine),
+                eval_engine: Arc::clone(&workload.eval_engine),
+                batch_source: workload.batch_source(cfg, round),
+                init_params: &init,
+                test: &workload.test,
+                train_probe: &workload.probe,
+            };
+            log_info!(
+                "runner",
+                "[{}] round {}/{} algo {}",
+                cfg.tag(),
+                round + 1,
+                cfg.rounds,
+                algo.name()
+            );
+            let m = train(&tc, &inputs)?;
+            raw.iter_mut().find(|(a, _)| *a == algo).unwrap().1.push(m);
+        }
+    }
+
+    let averaged = raw
+        .iter()
+        .map(|(algo, runs)| (*algo, average_runs(runs, &grid)))
+        .collect();
+    Ok(Comparison {
+        cfg: cfg.clone(),
+        averaged,
+        raw,
+    })
+}
+
+/// Average per-round series on the grid.
+pub fn average_runs(runs: &[RunMetrics], grid: &[f64]) -> AveragedRun {
+    assert!(!runs.is_empty());
+    let resample = |f: fn(&RunMetrics) -> &crate::util::stats::Series| {
+        let rows: Vec<Vec<f64>> = runs.iter().map(|r| f(r).resample(grid)).collect();
+        average_rows(&rows)
+    };
+    AveragedRun {
+        grid: grid.to_vec(),
+        test_acc: resample(|r| &r.test_acc),
+        test_loss: resample(|r| &r.test_loss),
+        train_loss: resample(|r| &r.train_loss),
+        grads_per_sec: runs.iter().map(|r| r.grads_per_sec()).sum::<f64>() / runs.len() as f64,
+        updates_total: runs.iter().map(|r| r.updates_total as f64).sum::<f64>() / runs.len() as f64,
+        mean_staleness: runs.iter().map(|r| r.mean_staleness).sum::<f64>() / runs.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_cfg() -> ExpConfig {
+        let mut c = ExpConfig::default_for(DatasetKind::Random).quick();
+        c.engine = EngineKind::Native;
+        c.secs = 1.0;
+        c.workers = 3;
+        c.train_n = 800;
+        c.test_n = 200;
+        c.delay = crate::coordinator::DelayModel::none();
+        c.lr = 0.05;
+        c.grid_points = 6;
+        c
+    }
+
+    #[test]
+    fn comparison_runs_all_algos_native() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let cfg = native_cfg();
+        let cmp = run_comparison(&cfg).unwrap();
+        assert_eq!(cmp.averaged.len(), 3);
+        for (_, avg) in &cmp.averaged {
+            assert_eq!(avg.test_acc.len(), cfg.grid_points);
+            assert!(avg.grads_per_sec > 0.0);
+        }
+        // diff rows are finite
+        let d = cmp.diff_vs(Algo::Async);
+        assert!(d.test_acc.is_finite() && d.test_loss.is_finite());
+    }
+
+    #[test]
+    fn subset_comparison_skips_sync() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let cfg = native_cfg();
+        let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async]).unwrap();
+        assert_eq!(cmp.averaged.len(), 2);
+    }
+
+    #[test]
+    fn average_runs_combines_rounds() {
+        let grid = vec![0.0, 1.0, 2.0];
+        let mut a = RunMetrics::default();
+        a.test_acc.push(0.0, 10.0);
+        a.test_acc.push(2.0, 30.0);
+        a.test_loss.push(0.0, 2.0);
+        a.test_loss.push(2.0, 1.0);
+        a.train_loss.push(0.0, 2.0);
+        a.train_loss.push(2.0, 1.0);
+        a.wall_time = 2.0;
+        a.gradients_total = 10;
+        let mut b = a.clone();
+        b.test_acc.v = vec![20.0, 40.0];
+        let avg = average_runs(&[a, b], &grid);
+        assert_eq!(avg.test_acc, vec![15.0, 25.0, 35.0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! `hybrid-sgd` CLI — train, compare algorithms, and regenerate the paper's
+//! tables and figures. See README.md for usage.
+
+fn main() {
+    if let Err(e) = hybrid_sgd::experiments::cli_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,260 @@
+//! Small dense linear algebra used by the native (pure-Rust) models.
+//!
+//! Row-major f32 matrices, no allocation inside the multiply kernels (callers
+//! pass output buffers). The GEMM is a cache-blocked ikj loop — fast enough
+//! that the *coordinator*, not the math, dominates native-engine benchmarks.
+
+/// out[m×n] = a[m×k] · b[k×n]  (out is overwritten)
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    // ikj order: innermost loop streams both b-row and out-row.
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[k×n] += aᵀ[k×m] · b[m×n]  — accumulating transpose-A multiply
+/// (the weight-gradient shape in backprop).
+pub fn matmul_at_b_accum(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m×k] = a[m×n] · bᵀ[n×k]  where b is [k×n] — the input-gradient shape.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (p, o) in orow.iter_mut().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// y = relu(x) in place; returns nothing. Callers that need the mask use
+/// `relu_backward`.
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// dx = dy ⊙ 1[x_post > 0], where `post` is the *post-activation* buffer.
+pub fn relu_backward(post: &[f32], dy: &mut [f32]) {
+    for (d, &p) in dy.iter_mut().zip(post) {
+        if p <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Row-wise log-softmax in place over `[rows × cols]`.
+pub fn log_softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v -= maxv;
+            sum += v.exp();
+        }
+        let lse = sum.ln();
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+/// Mean NLL loss over rows given log-probs, plus ∂loss/∂logits written into
+/// `dlogits` (softmax(logits) − one-hot, scaled by 1/rows). Returns
+/// (mean_loss, correct_count).
+pub fn nll_and_grad(
+    logp: &[f32],
+    y: &[i32],
+    dlogits: &mut [f32],
+    rows: usize,
+    cols: usize,
+) -> (f32, usize) {
+    assert_eq!(logp.len(), rows * cols);
+    assert_eq!(dlogits.len(), rows * cols);
+    assert_eq!(y.len(), rows);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let inv = 1.0 / rows as f32;
+    for r in 0..rows {
+        let row = &logp[r * cols..(r + 1) * cols];
+        let label = y[r] as usize;
+        loss -= row[label] as f64;
+        let mut best = 0usize;
+        for c in 1..cols {
+            if row[c] > row[best] {
+                best = c;
+            }
+        }
+        if best == label {
+            correct += 1;
+        }
+        let drow = &mut dlogits[r * cols..(r + 1) * cols];
+        for (c, d) in drow.iter_mut().enumerate() {
+            let p = row[c].exp();
+            *d = (p - if c == label { 1.0 } else { 0.0 }) * inv;
+        }
+    }
+    ((loss / rows as f64) as f32, correct)
+}
+
+/// out += x (axpy with a=1) — bias-gradient style accumulation.
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+/// Column-sum of `[rows × cols]` accumulated into `out[cols]`.
+pub fn col_sum_accum(x: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        add_assign(out, &x[r * cols..(r + 1) * cols]);
+    }
+}
+
+/// Broadcast-add a row vector to every row.
+pub fn add_row_broadcast(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        for (v, &b) in x[r * cols..(r + 1) * cols].iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1., 2., 3., 4.];
+        let b = [5., 6., 7., 8.];
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, &mut out, 2, 2, 2);
+        assert_eq!(out, [19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let m = 3;
+        let k = 2;
+        let n = 4;
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..m * n).map(|i| (i as f32).sin()).collect();
+        let mut got = vec![0.0f32; k * n];
+        matmul_at_b_accum(&a, &b, &mut got, m, k, n);
+        // explicit aᵀ
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let mut want = vec![0.0f32; k * n];
+        matmul(&at, &b, &mut want, k, m, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let m = 2;
+        let n = 3;
+        let k = 4;
+        let a: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.25).collect();
+        let mut got = vec![0.0f32; m * k];
+        matmul_a_bt(&a, &b, &mut got, m, n, k);
+        let mut bt = vec![0.0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let mut want = vec![0.0f32; m * k];
+        matmul(&a, &bt, &mut want, m, n, k);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalises() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 10.0, 10.0, 10.0];
+        log_softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // uniform row → log(1/3)
+        assert!((x[3] - (1.0f32 / 3.0).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nll_grad_sums_to_zero_per_row() {
+        let mut logits = vec![0.5f32, -0.2, 0.1, 0.9, 0.0, -1.0];
+        log_softmax_rows(&mut logits, 2, 3);
+        let mut d = vec![0.0f32; 6];
+        let (loss, _) = nll_and_grad(&logits, &[2, 0], &mut d, 2, 3);
+        assert!(loss > 0.0);
+        for r in 0..2 {
+            let s: f32 = d[r * 3..(r + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "grad row sum {s}");
+        }
+    }
+
+    #[test]
+    fn relu_roundtrip() {
+        let mut x = vec![-1.0f32, 2.0, -3.0, 4.0];
+        relu_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 2.0, 0.0, 4.0]);
+        let mut dy = vec![1.0f32; 4];
+        relu_backward(&x, &mut dy);
+        assert_eq!(dy, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Pure-Rust compute substrate: small dense linear algebra and analytic
+//! gradient engines (manual backprop). Used for coordinator tests, property
+//! checks, micro-benchmarks and as a no-artifact fallback; the production
+//! path is `runtime::XlaEngine`.
+
+pub mod linalg;
+pub mod models;
+
+pub use models::{MlpEngine, QuadraticEngine};

@@ -1,0 +1,203 @@
+//! PJRT execution: load HLO-text artifacts, compile once, run from the hot
+//! path.
+//!
+//! [`XlaEngine`] implements [`GradEngine`] over a grad and/or eval artifact.
+//! Engines are **not** `Send` (the PJRT client wrapper is `Rc`-based) and are
+//! constructed inside each worker thread via [`crate::engine::EngineFactory`].
+//! Input literals are allocated once and refilled with `copy_raw_from` every
+//! call — the steady-state hot path does no Rust-side allocation.
+
+use crate::engine::GradEngine;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Compile an HLO-text artifact on a fresh-or-shared client.
+pub fn compile(client: &PjRtClient, path: &std::path::Path) -> anyhow::Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))
+}
+
+/// One compiled (grad or eval) graph plus its reusable input literals.
+struct Graph {
+    exe: PjRtLoadedExecutable,
+    batch: usize,
+    x_dim: usize,
+    y_dim: usize,
+    p_lit: Literal,
+    x_lit: Literal,
+    y_lit: Literal,
+}
+
+impl Graph {
+    fn new(
+        client: &PjRtClient,
+        path: &std::path::Path,
+        param_count: usize,
+        batch: usize,
+        x_dim: usize,
+        y_dim: usize,
+    ) -> anyhow::Result<Graph> {
+        let exe = compile(client, path)?;
+        Ok(Graph {
+            exe,
+            batch,
+            x_dim,
+            y_dim,
+            p_lit: Literal::create_from_shape(xla::PrimitiveType::F32, &[param_count]),
+            x_lit: Literal::create_from_shape(xla::PrimitiveType::F32, &[batch, x_dim]),
+            y_lit: Literal::create_from_shape(xla::PrimitiveType::S32, &[batch, y_dim]),
+        })
+    }
+
+    /// Fill inputs and execute; returns the decomposed 2-tuple output.
+    fn run(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<(Literal, Literal)> {
+        anyhow::ensure!(
+            x.len() == self.batch * self.x_dim,
+            "x size {} != {}x{}",
+            x.len(),
+            self.batch,
+            self.x_dim
+        );
+        anyhow::ensure!(y.len() == self.batch * self.y_dim, "y size mismatch");
+        self.p_lit.copy_raw_from(params)?;
+        self.x_lit.copy_raw_from(x)?;
+        self.y_lit.copy_raw_from(y)?;
+        let res = self
+            .exe
+            .execute(&[&self.p_lit, &self.x_lit, &self.y_lit])?;
+        let out = res[0][0].to_literal_sync()?;
+        let (a, b) = out.to_tuple2()?;
+        Ok((a, b))
+    }
+}
+
+/// A [`GradEngine`] backed by AOT-compiled XLA executables.
+pub struct XlaEngine {
+    param_count: usize,
+    grad: Option<Graph>,
+    eval: Option<Graph>,
+    // Cold-path scratch for grad download.
+    grad_host: Vec<f32>,
+}
+
+impl XlaEngine {
+    /// Build from manifest entries. Either graph may be omitted.
+    pub fn new(
+        manifest: &super::manifest::Manifest,
+        model: &str,
+        grad_batch: Option<usize>,
+        variant: &str,
+        with_eval: bool,
+    ) -> anyhow::Result<XlaEngine> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let entry = manifest.model(model)?;
+        let grad = match grad_batch {
+            Some(b) => {
+                let a = manifest.graph(model, "grad", b, variant)?;
+                Some(Graph::new(&client, &a.path, a.param_count, a.batch, a.x_dim, a.y_dim)?)
+            }
+            None => None,
+        };
+        let eval = if with_eval {
+            let a = manifest.eval_graph(model)?;
+            Some(Graph::new(&client, &a.path, a.param_count, a.batch, a.x_dim, a.y_dim)?)
+        } else {
+            None
+        };
+        Ok(XlaEngine {
+            param_count: entry.param_count,
+            grad,
+            eval,
+            grad_host: Vec::new(),
+        })
+    }
+}
+
+impl GradEngine for XlaEngine {
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    fn batch_size(&self) -> usize {
+        self.grad.as_ref().map(|g| g.batch).unwrap_or(0)
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval
+            .as_ref()
+            .or(self.grad.as_ref())
+            .map(|g| g.batch)
+            .unwrap_or(0)
+    }
+
+    fn grad(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        let g = self
+            .grad
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("engine has no grad graph"))?;
+        let (loss, grads) = g.run(params, x, y)?;
+        let _ = &mut self.grad_host;
+        grads.copy_raw_to(grad_out)?;
+        Ok(loss.get_first_element::<f32>()?)
+    }
+
+    fn eval(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<(f64, usize)> {
+        let g = self
+            .eval
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("engine has no eval graph"))?;
+        let (sum_loss, correct) = g.run(params, x, y)?;
+        Ok((
+            sum_loss.get_first_element::<f32>()? as f64,
+            correct.get_first_element::<f32>()? as usize,
+        ))
+    }
+}
+
+/// A standalone parameter-server op (fused SGD update / buffer reduce) —
+/// used by the runtime benches to compare the XLA aggregation path against
+/// the native Rust one.
+pub struct UpdateOp {
+    exe: PjRtLoadedExecutable,
+    p_lit: Literal,
+    g_lit: Literal,
+    s_lit: Literal,
+    pub param_count: usize,
+}
+
+impl UpdateOp {
+    pub fn new(manifest: &super::manifest::Manifest, model: &str, variant: &str) -> anyhow::Result<UpdateOp> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let op = manifest.op("sgd_update", model, variant)?;
+        Ok(UpdateOp {
+            exe: compile(&client, &op.path)?,
+            p_lit: Literal::create_from_shape(xla::PrimitiveType::F32, &[op.param_count]),
+            g_lit: Literal::create_from_shape(xla::PrimitiveType::F32, &[op.param_count]),
+            s_lit: Literal::create_from_shape(xla::PrimitiveType::F32, &[1]),
+            param_count: op.param_count,
+        })
+    }
+
+    /// θ ← θ − scale · grad_sum, computed by the AOT kernel.
+    pub fn apply(&mut self, params: &mut [f32], grad_sum: &[f32], scale: f32) -> anyhow::Result<()> {
+        self.p_lit.copy_raw_from(params)?;
+        self.g_lit.copy_raw_from(grad_sum)?;
+        self.s_lit.copy_raw_from(&[scale])?;
+        let res = self.exe.execute(&[&self.p_lit, &self.g_lit, &self.s_lit])?;
+        let out = res[0][0].to_literal_sync()?.to_tuple1()?;
+        out.copy_raw_to(params)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,137 @@
+//! Parameter initialisation from manifest layer specs.
+//!
+//! Replicates the init *distributions* the L2 models declare (the layout and
+//! distribution matter for the experiments, not bit-equality with JAX):
+//! `glorot_uniform` (U(±√(6/(fan_in+fan_out)))), `zeros`, `ones`,
+//! `normal:<std>`.
+
+use super::manifest::ModelEntry;
+use crate::util::rng::Pcg64;
+
+/// Build the flat initial parameter vector for a model.
+pub fn init_params(model: &ModelEntry, rng: &mut Pcg64) -> anyhow::Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(model.param_count);
+    for layer in &model.layers {
+        let n = layer.size();
+        let start = out.len();
+        out.resize(start + n, 0.0);
+        let slice = &mut out[start..];
+        match layer.init.as_str() {
+            "zeros" => {}
+            "ones" => slice.fill(1.0),
+            "glorot_uniform" => {
+                anyhow::ensure!(
+                    layer.fan_in + layer.fan_out > 0,
+                    "glorot layer `{}` missing fan dims",
+                    layer.name
+                );
+                let limit = (6.0 / (layer.fan_in + layer.fan_out) as f64).sqrt() as f32;
+                rng.fill_uniform_sym(slice, limit);
+            }
+            other => {
+                if let Some(std) = other.strip_prefix("normal:") {
+                    let std: f32 = std
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad init `{other}`"))?;
+                    rng.fill_normal(slice, std);
+                } else {
+                    anyhow::bail!("unknown init `{other}` for layer `{}`", layer.name);
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        out.len() == model.param_count,
+        "layer sizes sum to {} but param_count is {}",
+        out.len(),
+        model.param_count
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayerSpec;
+
+    fn model() -> ModelEntry {
+        ModelEntry {
+            name: "t".into(),
+            kind: "mlp".into(),
+            x_dim: 2,
+            y_dim: 1,
+            classes: 2,
+            param_count: 16,
+            vocab: 0,
+            seq_len: 0,
+            layers: vec![
+                LayerSpec {
+                    name: "w".into(),
+                    shape: vec![2, 4],
+                    init: "glorot_uniform".into(),
+                    fan_in: 2,
+                    fan_out: 4,
+                },
+                LayerSpec {
+                    name: "b".into(),
+                    shape: vec![4],
+                    init: "zeros".into(),
+                    fan_in: 0,
+                    fan_out: 0,
+                },
+                LayerSpec {
+                    name: "g".into(),
+                    shape: vec![2],
+                    init: "ones".into(),
+                    fan_in: 0,
+                    fan_out: 0,
+                },
+                LayerSpec {
+                    name: "e".into(),
+                    shape: vec![2],
+                    init: "normal:0.02".into(),
+                    fan_in: 0,
+                    fan_out: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_respects_distributions() {
+        let m = model();
+        let mut rng = Pcg64::seeded(1);
+        let p = init_params(&m, &mut rng).unwrap();
+        assert_eq!(p.len(), 16);
+        let limit = (6.0f32 / 6.0).sqrt();
+        for &v in &p[..8] {
+            assert!(v.abs() <= limit);
+        }
+        assert!(p[..8].iter().any(|&v| v != 0.0));
+        assert_eq!(&p[8..12], &[0.0; 4]);
+        assert_eq!(&p[12..14], &[1.0; 2]);
+        for &v in &p[14..16] {
+            assert!(v.abs() < 0.2); // 10 sigma
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let m = model();
+        let a = init_params(&m, &mut Pcg64::seeded(5)).unwrap();
+        let b = init_params(&m, &mut Pcg64::seeded(5)).unwrap();
+        let c = init_params(&m, &mut Pcg64::seeded(6)).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn rejects_bad_counts() {
+        let mut m = model();
+        m.param_count = 99;
+        assert!(init_params(&m, &mut Pcg64::seeded(1)).is_err());
+        let mut m2 = model();
+        m2.layers[0].init = "mystery".into();
+        assert!(init_params(&m2, &mut Pcg64::seeded(1)).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! `artifacts/manifest.json` parsing — the contract between the build-time
+//! Python AOT pipeline and the Rust runtime.
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor in the flat layout (mirrors `model.LayerSpec`).
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+impl LayerSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A model entry: dims + the flat parameter layout.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    pub x_dim: usize,
+    pub y_dim: usize,
+    pub classes: usize,
+    pub param_count: usize,
+    pub layers: Vec<LayerSpec>,
+    /// Transformer-only extras (0 otherwise).
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+/// One lowered graph artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub model: String,
+    pub kind: String, // "grad" | "eval"
+    pub batch: usize,
+    pub variant: String, // "jnp" | "pallas"
+    pub path: PathBuf,
+    pub param_count: usize,
+    pub x_dim: usize,
+    pub y_dim: usize,
+}
+
+/// One parameter-server op artifact (fused update / buffer reduce).
+#[derive(Clone, Debug)]
+pub struct OpEntry {
+    pub op: String,
+    pub model: String,
+    pub variant: String,
+    pub path: PathBuf,
+    pub param_count: usize,
+    pub k: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub ops: Vec<OpEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
+        let root = parse(&text)?;
+        anyhow::ensure!(
+            root.usize_field("format_version")? == 1,
+            "unsupported manifest format"
+        );
+
+        let mut models = Vec::new();
+        for (name, m) in root.req("models")?.as_obj().unwrap() {
+            let mut layers = Vec::new();
+            for l in m.req("layers")?.as_arr().unwrap() {
+                layers.push(LayerSpec {
+                    name: l.str_field("name")?,
+                    shape: l
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.as_usize().unwrap())
+                        .collect(),
+                    init: l.str_field("init")?,
+                    fan_in: l.usize_field("fan_in")?,
+                    fan_out: l.usize_field("fan_out")?,
+                });
+            }
+            models.push(ModelEntry {
+                name: name.clone(),
+                kind: m.str_field("kind")?,
+                x_dim: m.usize_field("x_dim")?,
+                y_dim: m.usize_field("y_dim")?,
+                classes: m.usize_field("classes")?,
+                param_count: m.usize_field("param_count")?,
+                layers,
+                vocab: m.get("vocab").and_then(Json::as_usize).unwrap_or(0),
+                seq_len: m.get("seq_len").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root.req("artifacts")?.as_arr().unwrap() {
+            artifacts.push(ArtifactEntry {
+                model: a.str_field("model")?,
+                kind: a.str_field("kind")?,
+                batch: a.usize_field("batch")?,
+                variant: a.str_field("variant")?,
+                path: dir.join(a.str_field("path")?),
+                param_count: a.usize_field("param_count")?,
+                x_dim: a.usize_field("x_dim")?,
+                y_dim: a.usize_field("y_dim")?,
+            });
+        }
+
+        let mut ops = Vec::new();
+        for o in root.req("ops")?.as_arr().unwrap() {
+            ops.push(OpEntry {
+                op: o.str_field("op")?,
+                model: o.str_field("model")?,
+                variant: o.str_field("variant")?,
+                path: dir.join(o.str_field("path")?),
+                param_count: o.usize_field("param_count")?,
+                k: o.usize_field("k")?,
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            models,
+            artifacts,
+            ops,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("model `{name}` not in manifest"))
+    }
+
+    /// Find a graph artifact.
+    pub fn graph(
+        &self,
+        model: &str,
+        kind: &str,
+        batch: usize,
+        variant: &str,
+    ) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.kind == kind && a.batch == batch && a.variant == variant)
+            .ok_or_else(|| {
+                let avail: Vec<String> = self
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.model == model && a.kind == kind)
+                    .map(|a| format!("b{} {}", a.batch, a.variant))
+                    .collect();
+                anyhow::anyhow!(
+                    "no artifact {model}/{kind} batch={batch} variant={variant}; available: {avail:?}"
+                )
+            })
+    }
+
+    /// The eval artifact for a model (single per model, any batch).
+    pub fn eval_graph(&self, model: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.kind == "eval")
+            .ok_or_else(|| anyhow::anyhow!("no eval artifact for `{model}`"))
+    }
+
+    pub fn op(&self, op: &str, model: &str, variant: &str) -> anyhow::Result<&OpEntry> {
+        self.ops
+            .iter()
+            .find(|o| o.op == op && o.model == model && o.variant == variant)
+            .ok_or_else(|| anyhow::anyhow!("no op artifact {op}/{model}/{variant}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+ "format_version": 1,
+ "models": {
+  "mlp": {"kind": "mlp", "x_dim": 20, "y_dim": 1, "classes": 10,
+          "param_count": 14,
+          "layers": [
+            {"name": "w0", "shape": [2, 5], "init": "glorot_uniform", "fan_in": 2, "fan_out": 5},
+            {"name": "b0", "shape": [4], "init": "zeros", "fan_in": 0, "fan_out": 0}
+          ]}
+ },
+ "artifacts": [
+  {"model": "mlp", "kind": "grad", "batch": 32, "variant": "jnp",
+   "path": "mlp_grad_b32_jnp.hlo.txt", "param_count": 14, "x_dim": 20, "y_dim": 1},
+  {"model": "mlp", "kind": "eval", "batch": 100, "variant": "jnp",
+   "path": "mlp_eval_b100_jnp.hlo.txt", "param_count": 14, "x_dim": 20, "y_dim": 1}
+ ],
+ "ops": [
+  {"op": "sgd_update", "model": "mlp", "variant": "pallas",
+   "path": "sgd_update_mlp_pallas.hlo.txt", "param_count": 14, "k": 0}
+ ]
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join("hybrid_sgd_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(mlp.param_count, 14);
+        assert_eq!(mlp.layers[0].size(), 10);
+        assert_eq!(mlp.layers[0].init, "glorot_uniform");
+        let g = m.graph("mlp", "grad", 32, "jnp").unwrap();
+        assert!(g.path.ends_with("mlp_grad_b32_jnp.hlo.txt"));
+        assert!(m.graph("mlp", "grad", 7, "jnp").is_err());
+        assert!(m.eval_graph("mlp").is_ok());
+        assert!(m.op("sgd_update", "mlp", "pallas").is_ok());
+        assert!(m.op("sgd_update", "mlp", "jnp").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,52 @@
+//! Runtime layer: PJRT loading/execution of the AOT artifacts, manifest
+//! parsing, and parameter initialisation. Python never runs here — the
+//! artifacts under `artifacts/` are the entire L1/L2 contribution at runtime.
+
+pub mod exec;
+pub mod init;
+pub mod manifest;
+
+pub use exec::{UpdateOp, XlaEngine};
+pub use init::init_params;
+pub use manifest::Manifest;
+
+use crate::engine::{factory, EngineFactory};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Default artifact directory: `$HYBRID_SGD_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("HYBRID_SGD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Engine factories for a model: (worker grad engine, evaluator engine).
+///
+/// Each call of a factory creates a fresh PJRT client + compiled executable
+/// inside the calling thread (clients are not `Send`). Compilation is the
+/// per-thread startup cost; the hot path only executes.
+pub fn engine_factories(
+    dir: impl AsRef<Path>,
+    model: &str,
+    grad_batch: usize,
+    variant: &str,
+) -> anyhow::Result<(EngineFactory, EngineFactory)> {
+    let manifest = Arc::new(Manifest::load(dir)?);
+    // Validate up front so errors surface before threads spawn.
+    manifest.graph(model, "grad", grad_batch, variant)?;
+    manifest.eval_graph(model)?;
+    let m1 = Arc::clone(&manifest);
+    let model1 = model.to_string();
+    let variant1 = variant.to_string();
+    let worker = factory(move || {
+        Ok(Box::new(XlaEngine::new(&m1, &model1, Some(grad_batch), &variant1, false)?)
+            as Box<dyn crate::engine::GradEngine>)
+    });
+    let model2 = model.to_string();
+    let eval = factory(move || {
+        Ok(Box::new(XlaEngine::new(&manifest, &model2, None, "jnp", true)?)
+            as Box<dyn crate::engine::GradEngine>)
+    });
+    Ok((worker, eval))
+}

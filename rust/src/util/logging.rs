@@ -1,0 +1,99 @@
+//! Leveled stderr logging with wall-clock offsets.
+//!
+//! Tiny on purpose: the coordinator logs lifecycle events and per-flush
+//! diagnostics; `HYBRID_SGD_LOG=debug|info|warn|off` selects the level
+//! (default `info`). Timestamps are seconds since process start so traces
+//! from a training run line up with the metric series.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let parsed = match std::env::var("HYBRID_SGD_LOG").as_deref() {
+        Ok("off") => Level::Off,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Force a level (tests / quiet benches).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn elapsed_secs() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments) {
+    if (l as u8) <= level() && l != Level::Off {
+        eprintln!("[{:>9.3}s {:<5} {}] {}", elapsed_secs(), format!("{l:?}").to_lowercase(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($module:expr, $($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $module, format_args!($($fmt)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($module:expr, $($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $module, format_args!($($fmt)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($module:expr, $($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $module, format_args!($($fmt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Debug > Level::Info);
+        assert!(Level::Info > Level::Warn);
+        assert!(Level::Warn > Level::Off);
+    }
+
+    #[test]
+    fn set_level_silences() {
+        set_level(Level::Off);
+        log(Level::Info, "test", format_args!("should not print"));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn elapsed_monotonic() {
+        let a = elapsed_secs();
+        let b = elapsed_secs();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo (the offline image carries only
+//! the `xla` crate's dependency closure — no serde / clap / criterion /
+//! proptest / rand; see DESIGN.md §1.4).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,161 @@
+//! ASCII line charts.
+//!
+//! The figure-regeneration pipeline has no plotting library, so figures are
+//! emitted as (a) CSV files under `results/` and (b) terminal ASCII charts
+//! rendered by this module — enough to eyeball the paper's curve *shapes*
+//! (who leads, where curves cross).
+
+/// One labelled curve. Each curve gets a distinct glyph.
+pub struct Curve<'a> {
+    pub label: &'a str,
+    pub t: &'a [f64],
+    pub v: &'a [f64],
+}
+
+const GLYPHS: [char; 6] = ['*', '+', 'o', 'x', '#', '@'];
+
+/// Render curves into a `width` x `height` character grid with axes and a
+/// legend. Curves are linearly mapped into the shared bounding box.
+pub fn render(title: &str, curves: &[Curve], width: usize, height: usize) -> String {
+    assert!(width >= 16 && height >= 4);
+    let (mut tmin, mut tmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut vmin, mut vmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for c in curves {
+        for &t in c.t {
+            tmin = tmin.min(t);
+            tmax = tmax.max(t);
+        }
+        for &v in c.v {
+            if v.is_finite() {
+                vmin = vmin.min(v);
+                vmax = vmax.max(v);
+            }
+        }
+    }
+    if !tmin.is_finite() || !vmin.is_finite() {
+        return format!("{title}\n  (no data)\n");
+    }
+    if (vmax - vmin).abs() < 1e-12 {
+        vmax = vmin + 1.0;
+    }
+    if (tmax - tmin).abs() < 1e-12 {
+        tmax = tmin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (ci, c) in curves.iter().enumerate() {
+        let g = GLYPHS[ci % GLYPHS.len()];
+        for (&t, &v) in c.t.iter().zip(c.v) {
+            if !v.is_finite() {
+                continue;
+            }
+            let x = ((t - tmin) / (tmax - tmin) * (width - 1) as f64).round() as usize;
+            let y = ((v - vmin) / (vmax - vmin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - y.min(height - 1);
+            grid[row][x.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let axis_val = vmax - (vmax - vmin) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{axis_val:>10.4} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10}  {:<w$.2}{:>.2}\n",
+        "t(s)",
+        tmin,
+        tmax,
+        w = width - 4
+    ));
+    for (ci, c) in curves.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>12} {} = {}\n",
+            "",
+            GLYPHS[ci % GLYPHS.len()],
+            c.label
+        ));
+    }
+    out
+}
+
+/// Horizontal bar chart for (label, value) pairs — used by the table figures
+/// (Fig. 8–10 plot per-configuration averages).
+pub fn bars(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if items.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let maxabs = items
+        .iter()
+        .map(|(_, v)| v.abs())
+        .fold(f64::MIN_POSITIVE, f64::max);
+    let lw = items.iter().map(|(l, _)| l.len()).max().unwrap();
+    for (label, v) in items {
+        let n = ((v.abs() / maxabs) * width as f64).round() as usize;
+        let bar: String = std::iter::repeat(if *v >= 0.0 { '█' } else { '░' })
+            .take(n.max(1))
+            .collect();
+        out.push_str(&format!("  {label:>lw$} | {bar} {v:.4}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_single_curve() {
+        let t: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let v: Vec<f64> = t.iter().map(|x| (x / 5.0).sin()).collect();
+        let s = render(
+            "sine",
+            &[Curve {
+                label: "sin",
+                t: &t,
+                v: &v,
+            }],
+            60,
+            12,
+        );
+        assert!(s.contains("sine"));
+        assert!(s.contains("* = sin"));
+        assert!(s.lines().count() > 12);
+    }
+
+    #[test]
+    fn handles_empty_and_flat() {
+        let s = render("empty", &[], 20, 5);
+        assert!(s.contains("no data"));
+        let t = [0.0, 1.0];
+        let v = [2.0, 2.0];
+        let s = render(
+            "flat",
+            &[Curve {
+                label: "c",
+                t: &t,
+                v: &v,
+            }],
+            20,
+            5,
+        );
+        assert!(s.contains("flat"));
+    }
+
+    #[test]
+    fn bar_chart() {
+        let items = vec![("a".to_string(), 1.0), ("bb".to_string(), -0.5)];
+        let s = bars("diffs", &items, 20);
+        assert!(s.contains('█'));
+        assert!(s.contains('░'));
+    }
+}

@@ -1,0 +1,133 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Coordinator invariants are checked against many randomly generated
+//! configurations: a seeded [`Gen`] produces inputs, `check` runs the
+//! property over `cases` seeds, and on failure it retries with simpler
+//! inputs (halved sizes) to report a smaller counterexample, then panics
+//! with the failing seed so the case is replayable.
+
+use crate::util::rng::Pcg64;
+
+/// Input generator handed to properties; wraps a seeded RNG with sized
+/// sampling helpers. `size` shrinks during counterexample search.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub size: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi] scaled so that larger `size` explores larger values.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + ((hi - lo) * self.size.max(1)) / 100;
+        let hi_eff = hi_eff.clamp(lo, hi);
+        lo + self.rng.below((hi_eff - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        self.rng.fill_normal(&mut v, scale);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. The property returns
+/// `Err(message)` (or panics) to signal failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let mut gen = Gen {
+            rng: Pcg64::new(seed, 17),
+            size: 100,
+        };
+        if let Err(msg) = prop(&mut gen) {
+            // Shrink attempt: same seed at reduced sizes; report the smallest
+            // size that still fails.
+            let mut smallest = (100usize, msg.clone());
+            for size in [50usize, 25, 10, 5, 2, 1] {
+                let mut g = Gen {
+                    rng: Pcg64::new(seed, 17),
+                    size,
+                };
+                if let Err(m) = prop(&mut g) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property `{name}` failed (seed={seed}, smallest failing size={}): {}\n\
+                 replay with PROPTEST_SEED={seed}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("sum-commutes", 50, |g| {
+            count += 1;
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-12, "a+b != b+a");
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-small` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-small", 20, |g| {
+            let n = g.usize_in(0, 1000);
+            prop_assert!(n < 5, "n={n} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        let mut g = Gen {
+            rng: Pcg64::seeded(1),
+            size: 100,
+        };
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        let xs = g.vec_f32(16, 1.0);
+        assert_eq!(xs.len(), 16);
+    }
+}

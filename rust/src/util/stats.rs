@@ -1,0 +1,235 @@
+//! Numeric summaries and time-series utilities.
+//!
+//! Supports the experiment pipeline: metric series are recorded against
+//! wall-clock time per round, interpolated onto a common grid, averaged
+//! across rounds, and differenced between algorithms ("difference ... averaged
+//! over the entire training interval" — the paper's table metric).
+
+/// Mean of a slice. Returns 0 for the empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator). 0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    }
+}
+
+/// A sampled time series: strictly increasing times with one value each.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub t: Vec<f64>,
+    pub v: Vec<f64>,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        debug_assert!(self.t.last().map_or(true, |&last| t >= last));
+        self.t.push(t);
+        self.v.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// Piecewise-linear interpolation at time `t`, clamped to the endpoints
+    /// (constant extrapolation — matches how a monitor would report the last
+    /// known metric).
+    pub fn at(&self, t: f64) -> f64 {
+        assert!(!self.is_empty(), "interpolating empty series");
+        if t <= self.t[0] {
+            return self.v[0];
+        }
+        if t >= *self.t.last().unwrap() {
+            return *self.v.last().unwrap();
+        }
+        // binary search for the bracketing segment
+        let mut lo = 0;
+        let mut hi = self.t.len() - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.t[mid] <= t {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let (t0, t1) = (self.t[lo], self.t[hi]);
+        let (v0, v1) = (self.v[lo], self.v[hi]);
+        if t1 == t0 {
+            v0
+        } else {
+            v0 + (v1 - v0) * (t - t0) / (t1 - t0)
+        }
+    }
+
+    /// Resample onto an explicit grid.
+    pub fn resample(&self, grid: &[f64]) -> Vec<f64> {
+        grid.iter().map(|&t| self.at(t)).collect()
+    }
+}
+
+/// Uniform grid of `n` points over [0, horizon].
+pub fn time_grid(horizon: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| horizon * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Average several same-length sample vectors point-wise.
+pub fn average_rows(rows: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!rows.is_empty());
+    let n = rows[0].len();
+    let mut out = vec![0.0; n];
+    for row in rows {
+        assert_eq!(row.len(), n);
+        for (o, x) in out.iter_mut().zip(row) {
+            *o += x;
+        }
+    }
+    for o in &mut out {
+        *o /= rows.len() as f64;
+    }
+    out
+}
+
+/// The paper's table statistic: mean over the grid of `(ours - baseline)`.
+pub fn interval_mean_diff(ours: &[f64], baseline: &[f64]) -> f64 {
+    assert_eq!(ours.len(), baseline.len());
+    mean(&ours
+        .iter()
+        .zip(baseline)
+        .map(|(a, b)| a - b)
+        .collect::<Vec<_>>())
+}
+
+/// Online mean/max/count accumulator for hot-path counters.
+#[derive(Clone, Debug, Default)]
+pub struct Accum {
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Accum {
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 1e-3);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn series_interpolation() {
+        let mut s = Series::new();
+        s.push(0.0, 0.0);
+        s.push(2.0, 4.0);
+        s.push(4.0, 0.0);
+        assert_eq!(s.at(1.0), 2.0);
+        assert_eq!(s.at(3.0), 2.0);
+        assert_eq!(s.at(-1.0), 0.0); // clamp left
+        assert_eq!(s.at(10.0), 0.0); // clamp right
+        assert_eq!(s.at(2.0), 4.0); // exact knot
+    }
+
+    #[test]
+    fn grid_and_resample() {
+        let g = time_grid(10.0, 11);
+        assert_eq!(g.len(), 11);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[10], 10.0);
+        let mut s = Series::new();
+        s.push(0.0, 1.0);
+        s.push(10.0, 11.0);
+        let r = s.resample(&g);
+        assert!((r[5] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_average_and_diff() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(average_rows(&rows), vec![2.0, 3.0]);
+        assert_eq!(interval_mean_diff(&[2.0, 3.0], &[1.0, 1.0]), 1.5);
+    }
+
+    #[test]
+    fn accum_tracks_extremes() {
+        let mut a = Accum::default();
+        for x in [3.0, -1.0, 7.0] {
+            a.add(x);
+        }
+        assert_eq!(a.n, 3);
+        assert_eq!(a.min, -1.0);
+        assert_eq!(a.max, 7.0);
+        assert_eq!(a.mean(), 3.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Experiment-pipeline integration: quick-scale table/figure regeneration
+//! through the native engine (no artifacts needed), exercising the exact
+//! code path `hybrid-sgd table N` / `figure N` runs.
+
+use hybrid_sgd::experiments::config::{DatasetKind, EngineKind, ExpConfig};
+use hybrid_sgd::experiments::figures::{comparison_csv, figure_from_table};
+use hybrid_sgd::experiments::runner::{run_comparison_algos, Algo};
+use hybrid_sgd::experiments::tables::Table;
+
+fn quick_native() -> ExpConfig {
+    hybrid_sgd::util::logging::set_level(hybrid_sgd::util::logging::Level::Off);
+    let mut c = ExpConfig::default_for(DatasetKind::Random).quick();
+    c.engine = EngineKind::Native;
+    c.secs = 1.0;
+    c.workers = 3;
+    c.train_n = 600;
+    c.test_n = 200;
+    c.grid_points = 5;
+    c.compute_ms = 0.0;
+    c
+}
+
+#[test]
+fn comparison_to_csv_roundtrip() {
+    let cfg = quick_native();
+    let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async]).unwrap();
+    let csv = comparison_csv(&cmp);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), cfg.grid_points + 1);
+    assert!(lines[0].starts_with("t,hybrid_acc"));
+    // every data row parses as floats
+    for row in &lines[1..] {
+        for cell in row.split(',') {
+            cell.parse::<f64>().unwrap();
+        }
+    }
+}
+
+#[test]
+fn diff_row_shape_and_figure() {
+    let cfg = quick_native();
+    let mut measured = Vec::new();
+    let mut labels = Vec::new();
+    for batch in [8usize, 32] {
+        let mut c = cfg.clone();
+        c.batch = batch;
+        let cmp = run_comparison_algos(&c, &[Algo::Hybrid, Algo::Async]).unwrap();
+        measured.push(cmp.diff_vs(Algo::Async));
+        labels.push(batch.to_string());
+    }
+    let table = Table {
+        id: 3,
+        title: "quick batch sweep".into(),
+        col_labels: labels,
+        measured,
+        paper: vec![],
+        comparisons: vec![],
+    };
+    let md = table.to_markdown();
+    assert!(md.contains("Table 3"));
+    assert!(md.contains("Test Accuracy"));
+    let fig = figure_from_table(8, "batch size", &table);
+    assert!(fig.chart.contains("Figure 8"));
+    assert_eq!(fig.csv.len(), 1);
+    assert!(fig.csv[0].1.lines().count() >= 3);
+}
+
+#[test]
+fn paper_scale_flag_changes_config_only() {
+    let base = ExpConfig::default_for(DatasetKind::Random);
+    let paper = base.clone().paper_scale();
+    assert_eq!(paper.workers, 25);
+    assert!(paper.secs > base.secs);
+    // schedule scale adapts with secs (longer run → larger effective step)
+    let s_base = format!("{}", base.schedule());
+    let s_paper = format!("{}", paper.schedule());
+    assert_ne!(s_base, s_paper);
+}
+
+#[test]
+fn identical_init_across_algorithms() {
+    // The runner must hand every algorithm the same initial parameters per
+    // round: first evaluation samples (t=0) must coincide.
+    let cfg = quick_native();
+    let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async, Algo::Sync]).unwrap();
+    let accs: Vec<f64> = cmp.averaged.iter().map(|(_, a)| a.test_acc[0]).collect();
+    for w in accs.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() < 1e-9,
+            "t=0 accuracy differs across algorithms: {accs:?}"
+        );
+    }
+}

@@ -1,0 +1,334 @@
+//! Property tests over the coordinator invariants (mini-proptest harness;
+//! see `util::proptest` — the offline image has no proptest crate).
+
+use hybrid_sgd::coordinator::params::ParamStore;
+use hybrid_sgd::coordinator::{Aggregator, Outcome, Policy, Schedule};
+use hybrid_sgd::engine::GradEngine;
+use hybrid_sgd::native::QuadraticEngine;
+use hybrid_sgd::prop_assert;
+use hybrid_sgd::util::proptest::check;
+
+fn random_schedule(g: &mut hybrid_sgd::util::proptest::Gen) -> Schedule {
+    match g.rng.below(5) {
+        0 => Schedule::Constant {
+            k: g.usize_in(1, 16),
+        },
+        1 => Schedule::Step {
+            step: g.usize_in(1, 400),
+        },
+        2 => Schedule::Linear {
+            rate: g.f64_in(0.0001, 0.1),
+        },
+        3 => Schedule::Exponential {
+            step: g.usize_in(10, 400),
+            growth: g.f64_in(1.1, 3.0),
+        },
+        _ => Schedule::Sigmoid {
+            mid: g.f64_in(10.0, 1000.0),
+            scale: g.f64_in(1.0, 300.0),
+        },
+    }
+}
+
+/// K(n) is monotone non-decreasing and within [1, k_max] for every schedule.
+#[test]
+fn prop_schedules_monotone_bounded() {
+    check("schedules-monotone", 200, |g| {
+        let s = random_schedule(g);
+        let k_max = g.usize_in(1, 32);
+        let mut prev = 0usize;
+        let mut n = 0u64;
+        for _ in 0..200 {
+            n += g.rng.below(50);
+            let k = s.k(n, k_max);
+            prop_assert!((1..=k_max).contains(&k), "{s}: k={k} out of [1,{k_max}]");
+            prop_assert!(k >= prev, "{s}: not monotone at n={n}");
+            prev = k;
+        }
+        Ok(())
+    });
+}
+
+/// Conservation: every gradient fed to any policy is either applied (alone
+/// or inside a flush) or still buffered; after drain, applied == arrivals.
+#[test]
+fn prop_no_gradient_lost() {
+    check("no-gradient-lost", 100, |g| {
+        let workers = g.usize_in(1, 12);
+        let dim = g.usize_in(1, 40);
+        let policy = match g.rng.below(3) {
+            0 => Policy::Async,
+            1 => Policy::Sync,
+            _ => Policy::Hybrid {
+                schedule: random_schedule(g),
+                strict: g.bool(),
+            },
+        };
+        let mut agg = Aggregator::new(policy.clone(), dim, workers);
+        let mut ps = ParamStore::new(vec![0.0; dim], 0.01);
+        let n = g.usize_in(1, 300);
+        let mut accounted = 0u64;
+        for _ in 0..n {
+            let grad = g.vec_f32(dim, 1.0);
+            let worker = g.usize_in(0, workers - 1);
+            let v = ps.version();
+            match agg.on_gradient(&mut ps, &grad, worker, v, 1.0) {
+                Outcome::AppliedNow => accounted += 1,
+                Outcome::Flushed { count, .. } => accounted += count as u64,
+                Outcome::Buffered | Outcome::BufferedBlocked => {}
+            }
+        }
+        accounted += agg.drain(&mut ps) as u64;
+        prop_assert!(
+            accounted == n as u64,
+            "{policy}: accounted {accounted} != arrivals {n}"
+        );
+        Ok(())
+    });
+}
+
+/// The smooth hybrid with K=1 is numerically identical to async for any
+/// gradient stream.
+#[test]
+fn prop_hybrid_k1_equals_async() {
+    check("hybrid-k1-async", 100, |g| {
+        let dim = g.usize_in(1, 32);
+        let n = g.usize_in(1, 120);
+        let mut a = Aggregator::new(Policy::Async, dim, 4);
+        let mut h = Aggregator::new(
+            Policy::Hybrid {
+                schedule: Schedule::Constant { k: 1 },
+                strict: false,
+            },
+            dim,
+            4,
+        );
+        let mut psa = ParamStore::new(vec![0.5; dim], 0.02);
+        let mut psh = ParamStore::new(vec![0.5; dim], 0.02);
+        for _ in 0..n {
+            let grad = g.vec_f32(dim, 2.0);
+            let w = g.usize_in(0, 3);
+            let (va, vh) = (psa.version(), psh.version());
+            a.on_gradient(&mut psa, &grad, w, va, 1.0);
+            h.on_gradient(&mut psh, &grad, w, vh, 1.0);
+        }
+        prop_assert!(psa.version() == psh.version(), "version mismatch");
+        for (x, y) in psa.theta().iter().zip(psh.theta()) {
+            prop_assert!((x - y).abs() < 1e-6, "theta diverged: {x} vs {y}");
+        }
+        Ok(())
+    });
+}
+
+/// A flush applies exactly the mean of the buffered gradients.
+#[test]
+fn prop_flush_is_mean() {
+    check("flush-is-mean", 100, |g| {
+        let dim = g.usize_in(1, 24);
+        let k = g.usize_in(1, 10);
+        let lr = 0.1f32;
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: Schedule::Constant { k },
+                strict: false,
+            },
+            dim,
+            k.max(2),
+        );
+        let mut ps = ParamStore::new(vec![0.0; dim], lr);
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| g.vec_f32(dim, 1.0)).collect();
+        for (i, grad) in grads.iter().enumerate() {
+            let v = ps.version();
+            agg.on_gradient(&mut ps, grad, i % k.max(2), v, 1.0);
+        }
+        prop_assert!(ps.version() == 1, "expected exactly one flush");
+        for j in 0..dim {
+            let mean: f32 = grads.iter().map(|gr| gr[j]).sum::<f32>() / k as f32;
+            let want = -lr * mean;
+            prop_assert!(
+                (ps.theta()[j] - want).abs() < 1e-5,
+                "dim {j}: {} != {want}",
+                ps.theta()[j]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// On a convex quadratic, sequential hybrid aggregation converges for any
+/// monotone schedule (the paper's §3 convexity setting).
+#[test]
+fn prop_hybrid_converges_on_quadratic() {
+    check("hybrid-converges-quadratic", 60, |g| {
+        let dim = g.usize_in(2, 16);
+        let workers = g.usize_in(2, 6);
+        let schedule = random_schedule(g);
+        let mut target = vec![0.0f32; dim];
+        g.rng.fill_normal(&mut target, 3.0);
+        // guard against a pathological all-near-zero target
+        target[0] += 2.0;
+        let mut eng = QuadraticEngine::new(target.clone(), 1, 0.05, g.rng.next_u64());
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule,
+                strict: false,
+            },
+            dim,
+            workers,
+        );
+        let mut ps = ParamStore::new(vec![0.0; dim], 0.2);
+        let mut grad = vec![0.0f32; dim];
+        let d0: f64 = target
+            .iter()
+            .map(|&t| (t as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        for i in 0..800 {
+            eng.grad(ps.theta(), &[], &[], &mut grad).unwrap();
+            let v = ps.version();
+            agg.on_gradient(&mut ps, &grad, i % workers, v, 1.0);
+        }
+        agg.drain(&mut ps);
+        let d1: f64 = ps
+            .theta()
+            .iter()
+            .zip(&target)
+            .map(|(p, t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        prop_assert!(d1 < d0 * 0.5, "did not converge: {d0:.3} -> {d1:.3}");
+        Ok(())
+    });
+}
+
+/// The adaptive policy conserves gradients and keeps K within bounds while
+/// staleness and loss vary arbitrarily.
+#[test]
+fn prop_adaptive_conserves_and_bounds_k() {
+    use hybrid_sgd::coordinator::AdaptiveConfig;
+    check("adaptive-conserves", 60, |g| {
+        let workers = g.usize_in(2, 8);
+        let dim = g.usize_in(1, 16);
+        let mut agg = Aggregator::new(
+            Policy::HybridAdaptive {
+                cfg: AdaptiveConfig {
+                    window: g.usize_in(2, 40),
+                    ..Default::default()
+                },
+                strict: false,
+            },
+            dim,
+            workers,
+        );
+        let mut ps = ParamStore::new(vec![0.0; dim], 0.01);
+        let n = g.usize_in(1, 400);
+        let mut accounted = 0u64;
+        for _ in 0..n {
+            let grad = g.vec_f32(dim, 1.0);
+            let w = g.usize_in(0, workers - 1);
+            let v = ps.version().saturating_sub(g.rng.below(4));
+            let loss = g.f64_in(0.0, 5.0) as f32;
+            match agg.on_gradient(&mut ps, &grad, w, v, loss) {
+                Outcome::AppliedNow => accounted += 1,
+                Outcome::Flushed { count, .. } => accounted += count as u64,
+                _ => {}
+            }
+            prop_assert!(
+                (1..=workers).contains(&agg.current_k()),
+                "adaptive K out of bounds: {}",
+                agg.current_k()
+            );
+        }
+        accounted += agg.drain(&mut ps) as u64;
+        prop_assert!(accounted == n as u64, "lost gradients: {accounted}/{n}");
+        Ok(())
+    });
+}
+
+/// Sync flushes only when every worker contributed, regardless of order.
+#[test]
+fn prop_sync_barrier_requires_all_workers() {
+    check("sync-barrier", 100, |g| {
+        let workers = g.usize_in(2, 10);
+        let dim = 4;
+        let mut agg = Aggregator::new(Policy::Sync, dim, workers);
+        let mut ps = ParamStore::new(vec![0.0; dim], 0.1);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..10_000 {
+            let w = g.usize_in(0, workers - 1);
+            let grad = g.vec_f32(dim, 1.0);
+            let v = ps.version();
+            match agg.on_gradient(&mut ps, &grad, w, v, 1.0) {
+                Outcome::Flushed {
+                    distinct_workers, ..
+                } => {
+                    seen.insert(w);
+                    prop_assert!(
+                        distinct_workers == workers,
+                        "flushed with {distinct_workers}/{workers} distinct workers"
+                    );
+                    prop_assert!(
+                        seen.len() == workers,
+                        "flush before all workers arrived ({}/{workers})",
+                        seen.len()
+                    );
+                    return Ok(());
+                }
+                Outcome::BufferedBlocked => {
+                    seen.insert(w);
+                }
+                o => prop_assert!(false, "unexpected outcome {o:?}"),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Strict hybrid at K = W with exactly one outstanding gradient per worker
+/// behaves like sync: every flush contains W distinct workers.
+#[test]
+fn prop_strict_kw_is_sync_like() {
+    check("strict-kw-sync", 60, |g| {
+        let workers = g.usize_in(2, 8);
+        let dim = 3;
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: Schedule::Constant { k: workers },
+                strict: true,
+            },
+            dim,
+            workers,
+        );
+        let mut ps = ParamStore::new(vec![0.0; dim], 0.1);
+        // one gradient per worker, round-robin (the strict contract)
+        for round in 0..5 {
+            for w in 0..workers {
+                let grad = g.vec_f32(dim, 1.0);
+                let v = ps.version();
+                let out = agg.on_gradient(&mut ps, &grad, w, v, 1.0);
+                if w + 1 < workers {
+                    prop_assert!(
+                        matches!(out, Outcome::BufferedBlocked),
+                        "round {round}: worker {w} not blocked"
+                    );
+                } else {
+                    match out {
+                        Outcome::Flushed {
+                            count,
+                            distinct_workers,
+                            ..
+                        } => {
+                            prop_assert!(count == workers, "flush count {count}");
+                            prop_assert!(
+                                distinct_workers == workers,
+                                "distinct {distinct_workers}"
+                            );
+                        }
+                        o => prop_assert!(false, "round {round}: expected flush, got {o:?}"),
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

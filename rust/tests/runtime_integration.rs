@@ -1,0 +1,169 @@
+//! Integration tests across runtime + coordinator using the real AOT
+//! artifacts. Skipped (with a message) when `artifacts/` has not been built.
+
+use hybrid_sgd::coordinator::{train, DelayModel, EvalSet, Policy, RunInputs, Schedule, TrainConfig};
+use hybrid_sgd::data::{random_cluster, Batcher};
+use hybrid_sgd::engine::GradEngine;
+use hybrid_sgd::native::MlpEngine;
+use hybrid_sgd::runtime::{engine_factories, init_params, Manifest, UpdateOp, XlaEngine};
+use hybrid_sgd::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+/// The JAX MLP and the native Rust MLP share the flat parameter layout
+/// (per layer: W [in×out] row-major, then b). Gradients must agree.
+#[test]
+fn xla_mlp_grad_matches_native_backprop() {
+    let Some(man) = manifest() else { return };
+    let mut rng = Pcg64::seeded(7);
+    let entry = man.model("mlp").unwrap();
+    let params = init_params(entry, &mut rng).unwrap();
+
+    let batch = 8;
+    let mut xla = XlaEngine::new(&man, "mlp", Some(batch), "jnp", false).unwrap();
+    let mut native = MlpEngine::new(vec![20, 64, 64, 10], batch);
+    assert_eq!(xla.param_count(), native.param_count());
+
+    let mut x = vec![0.0f32; batch * 20];
+    rng.fill_normal(&mut x, 1.0);
+    let y: Vec<i32> = (0..batch).map(|i| (i % 10) as i32).collect();
+
+    let mut gx = vec![0.0f32; params.len()];
+    let mut gn = vec![0.0f32; params.len()];
+    let lx = xla.grad(&params, &x, &y, &mut gx).unwrap();
+    let ln = native.grad(&params, &x, &y, &mut gn).unwrap();
+
+    assert!((lx - ln).abs() < 1e-4, "loss mismatch: xla={lx} native={ln}");
+    let mut max_diff = 0.0f32;
+    for (a, b) in gx.iter().zip(&gn) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-3, "grad mismatch: max |Δ| = {max_diff}");
+}
+
+#[test]
+fn xla_pallas_variant_matches_jnp_variant() {
+    let Some(man) = manifest() else { return };
+    let mut rng = Pcg64::seeded(8);
+    let entry = man.model("mlp").unwrap();
+    let params = init_params(entry, &mut rng).unwrap();
+    let batch = 32;
+    let mut jnp = XlaEngine::new(&man, "mlp", Some(batch), "jnp", false).unwrap();
+    let mut pal = XlaEngine::new(&man, "mlp", Some(batch), "pallas", false).unwrap();
+    let mut x = vec![0.0f32; batch * 20];
+    rng.fill_normal(&mut x, 1.0);
+    let y: Vec<i32> = (0..batch).map(|i| (i % 10) as i32).collect();
+    let mut g1 = vec![0.0f32; params.len()];
+    let mut g2 = vec![0.0f32; params.len()];
+    let l1 = jnp.grad(&params, &x, &y, &mut g1).unwrap();
+    let l2 = pal.grad(&params, &x, &y, &mut g2).unwrap();
+    assert!((l1 - l2).abs() < 1e-4);
+    for (a, b) in g1.iter().zip(&g2) {
+        assert!((a - b).abs() < 1e-3, "pallas/jnp grads differ: {a} vs {b}");
+    }
+}
+
+#[test]
+fn xla_eval_reports_sane_metrics() {
+    let Some(man) = manifest() else { return };
+    let mut rng = Pcg64::seeded(9);
+    let entry = man.model("mlp").unwrap();
+    let params = init_params(entry, &mut rng).unwrap();
+    let mut eval = XlaEngine::new(&man, "mlp", None, "jnp", true).unwrap();
+    let b = eval.eval_batch_size();
+    assert_eq!(b, 100);
+    let mut x = vec![0.0f32; b * 20];
+    rng.fill_normal(&mut x, 1.0);
+    let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+    let (sum_loss, correct) = eval.eval(&params, &x, &y).unwrap();
+    // fresh glorot init → loss near ln(10), accuracy near chance
+    let mean = sum_loss / b as f64;
+    assert!((1.8..3.0).contains(&mean), "mean loss {mean}");
+    assert!(correct <= b);
+}
+
+#[test]
+fn update_op_applies_scaled_subtraction() {
+    let Some(man) = manifest() else { return };
+    for variant in ["jnp", "pallas"] {
+        let mut op = UpdateOp::new(&man, "mlp", variant).unwrap();
+        let n = op.param_count;
+        let mut params: Vec<f32> = (0..n).map(|i| i as f32 * 1e-3).collect();
+        let grads: Vec<f32> = (0..n).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let expect: Vec<f32> = params
+            .iter()
+            .zip(&grads)
+            .map(|(p, g)| p - 0.01 * g)
+            .collect();
+        op.apply(&mut params, &grads, 0.01).unwrap();
+        for (a, b) in params.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5, "{variant}: {a} vs {b}");
+        }
+    }
+}
+
+/// Full-stack smoke: hybrid training through real XLA executables learns the
+/// paper's random-cluster task.
+#[test]
+fn full_stack_hybrid_training_learns() {
+    let Some(_) = manifest() else { return };
+    let mut rng = Pcg64::seeded(10);
+    let spec = random_cluster::ClusterSpec {
+        n_samples: 1500,
+        ..Default::default()
+    };
+    let full = random_cluster::generate(&spec, &mut rng);
+    let (train_set, test_set) = full.split(0.8, &mut rng);
+
+    let man = Manifest::load("artifacts").unwrap();
+    let entry = man.model("mlp").unwrap();
+    let init = init_params(entry, &mut rng).unwrap();
+    let (worker_f, eval_f) = engine_factories("artifacts", "mlp", 16, "jnp").unwrap();
+
+    let test = EvalSet::from_dataset(&test_set, 200, &mut rng);
+    let probe = EvalSet::from_dataset(&train_set, 200, &mut rng);
+    let train_arc = Arc::new(train_set);
+    let shards = train_arc.shard_indices(3);
+    let inputs = RunInputs {
+        worker_engine: worker_f,
+        eval_engine: eval_f,
+        batch_source: Arc::new(move |id| {
+            Box::new(Batcher::new(
+                Arc::clone(&train_arc),
+                shards[id].clone(),
+                16,
+                Pcg64::new(99, id as u64),
+            )) as Box<dyn hybrid_sgd::coordinator::worker::BatchSource>
+        }),
+        init_params: &init,
+        test: &test,
+        train_probe: &probe,
+    };
+    let mut cfg = TrainConfig::quick(
+        Policy::Hybrid {
+            schedule: Schedule::Step { step: 100 },
+            strict: false,
+        },
+        3,
+        3.0,
+    );
+    cfg.lr = 0.05;
+    cfg.delay = DelayModel::none();
+    let m = train(&cfg, &inputs).unwrap();
+    assert!(m.gradients_total > 10, "only {} gradients", m.gradients_total);
+    let first = m.test_acc.v[0];
+    let last = *m.test_acc.v.last().unwrap();
+    assert!(
+        last > first + 15.0,
+        "no learning through the XLA stack: {first}% → {last}%"
+    );
+}
