@@ -77,6 +77,7 @@ fn run_native(fx: &Fixture, policy: Policy, secs: f64, compute_ms: f64) -> RunMe
         eval_interval: Duration::from_millis(300),
         k_max: None,
         compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
+        shards: 1,
     };
     train(&cfg, &inputs).expect("run failed")
 }
@@ -210,6 +211,7 @@ fn main() {
                 eval_interval: Duration::from_millis(300),
                 k_max: None,
                 compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
+                shards: 1,
             };
             let m = train(&cfg, &inputs).expect("xla run failed");
             report("AOT XLA (jnp)", &m);

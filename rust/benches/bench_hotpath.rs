@@ -7,7 +7,7 @@
 
 use hybrid_sgd::coordinator::buffer::GradientBuffer;
 use hybrid_sgd::coordinator::params::ParamStore;
-use hybrid_sgd::coordinator::{Aggregator, Policy, Schedule};
+use hybrid_sgd::coordinator::{Aggregator, Policy, Schedule, ShardedAggregator};
 use hybrid_sgd::util::bench::{black_box, Bencher};
 use hybrid_sgd::util::rng::Pcg64;
 
@@ -50,10 +50,22 @@ fn main() {
             w += 1;
         });
 
-        // The reply copy (θ cloned into the channel message).
-        let theta = vec![0.1f32; dim];
-        b.bench(&format!("reply param copy d={dim}"), || {
-            black_box(theta.clone());
+        // What replaced the per-reply θ clone: the server-side snapshot
+        // publish (one memcpy into a recycled buffer, amortised over all
+        // readers) and the reader-side refresh (Arc load + memcpy).
+        let mut ps3 = ParamStore::new(vec![0.1; dim], 0.01);
+        b.bench(&format!("snapshot publish d={dim}"), || {
+            ps3.apply_single(black_box(&grad)); // bump ⇒ publish
+        });
+        let cell = ps3.cell();
+        let mut local = vec![0.0f32; dim];
+        b.bench(&format!("snapshot refresh d={dim}"), || {
+            let snap = cell.load();
+            local.copy_from_slice(&snap.theta);
+            black_box(&local);
+        });
+        b.bench(&format!("snapshot load only d={dim}"), || {
+            black_box(cell.load().version);
         });
     }
 
@@ -81,6 +93,35 @@ fn main() {
             agg.on_gradient(&mut ps, black_box(&grad), w % 8, v, 1.0);
             w += 1;
         });
+    }
+
+    // Sharded state machine: the per-arrival cost of S shards driven
+    // sequentially must stay ~flat vs the unsharded machine (the win in the
+    // threaded server is that the shards run on S threads).
+    {
+        let dim = 111_936;
+        let mut rng = Pcg64::seeded(3);
+        let mut grad = vec![0.0f32; dim];
+        rng.fill_normal(&mut grad, 1.0);
+        let init = vec![0.1f32; dim];
+        for shards in [1usize, 4] {
+            let mut m = ShardedAggregator::new(
+                Policy::Hybrid {
+                    schedule: Schedule::Step { step: 100 },
+                    strict: false,
+                },
+                &init,
+                0.01,
+                8,
+                shards,
+            );
+            let mut w = 0usize;
+            b.bench(&format!("sharded on_gradient S={shards} d={dim}"), || {
+                let v = m.version();
+                m.on_gradient(black_box(&grad), w % 8, v, 1.0);
+                w += 1;
+            });
+        }
     }
 
     b.summary();

@@ -1,18 +1,82 @@
-//! Runtime-layer benchmarks: AOT executable latency per model and variant
-//! (L2), the fused PS-update kernel vs the native loop (L1 vs L3), and the
-//! native-Rust engine as the baseline comparator.
+//! Runtime-layer benchmarks: parameter-server shard-scaling on the native
+//! engine (no artifacts needed), AOT executable latency per model and
+//! variant (L2), the fused PS-update kernel vs the native loop (L1 vs L3),
+//! and the native-Rust engine as the baseline comparator.
 //!
-//! Skips gracefully when `artifacts/` is absent.
+//! The artifact-dependent sections skip gracefully when `artifacts/` is
+//! absent; the shard-scaling section always runs.
 
+use hybrid_sgd::coordinator::params::ParamStore;
+use hybrid_sgd::coordinator::{Aggregator, Policy, ShardLayout};
 use hybrid_sgd::engine::GradEngine;
 use hybrid_sgd::native::MlpEngine;
 use hybrid_sgd::runtime::{init_params, Manifest, UpdateOp, XlaEngine};
 use hybrid_sgd::util::bench::{black_box, Bencher};
 use hybrid_sgd::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Server-side throughput of the sharded parameter server: S shard threads
+/// each consume the identical stream of G full-dim gradients (their slice
+/// of it — exactly the per-arrival work `run_shard` does: aggregate +
+/// update + snapshot publish). Wall time is the slowest shard; throughput
+/// must grow monotonically from S = 1 to S = 4 on a multi-core host.
+fn bench_shard_scaling() {
+    println!("== sharded PS: server-side gradient throughput (native) ==");
+    let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+    let dim = 111_936; // transformer-scale flat θ
+    let grads_n = if quick { 200 } else { 1_000 };
+    let workers = 8;
+    let mut rng = Pcg64::seeded(42);
+    // A small recycled pool stands in for the arrival stream (distinct
+    // values, bounded memory: 16 × dim × 4 B ≈ 7 MB).
+    let pool: Vec<Arc<Vec<f32>>> = (0..16)
+        .map(|_| {
+            let mut g = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            Arc::new(g)
+        })
+        .collect();
+    let init = vec![0.1f32; dim];
+
+    let mut last = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let layout = ShardLayout::new(dim, shards);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for r in layout.ranges() {
+                let pool = &pool;
+                let init = &init[r.clone()];
+                s.spawn(move || {
+                    let mut store = ParamStore::new(init.to_vec(), 0.01);
+                    let mut agg = Aggregator::new(Policy::Async, r.len(), workers);
+                    for i in 0..grads_n {
+                        let g = &pool[i % pool.len()];
+                        let v = store.version();
+                        agg.on_gradient(&mut store, &g[r.clone()], i % workers, v, 1.0);
+                    }
+                    black_box(store.version());
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        let thr = grads_n as f64 / secs;
+        println!(
+            "  S={shards}: {:>8.0} grads/s  ({:.1} ms total{})",
+            thr,
+            secs * 1e3,
+            if thr > last { "" } else { "  [no scaling — core-bound?]" }
+        );
+        last = thr;
+    }
+    println!();
+}
 
 fn main() {
+    bench_shard_scaling();
+
     let Ok(man) = Manifest::load("artifacts") else {
-        println!("SKIP bench_runtime: artifacts/ not built (run `make artifacts`)");
+        println!("SKIP bench_runtime (AOT sections): artifacts/ not built (run `make artifacts`)");
         return;
     };
     let mut b = Bencher::new();

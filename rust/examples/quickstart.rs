@@ -4,7 +4,7 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Flags: --secs F --workers N --policy <async|sync|hybrid:step:133>
+//! Flags: --secs F --workers N --shards S --policy <async|sync|hybrid:step:133>
 
 use hybrid_sgd::coordinator::{train, DelayModel, EvalSet, Policy, RunInputs, Schedule, TrainConfig};
 use hybrid_sgd::data::{random_cluster, Batcher};
@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         eval_interval: Duration::from_millis(400),
         k_max: None,
         compute_floor: Duration::from_millis(20),
+        shards: args.usize_or("shards", 1),
     };
     let _ = Schedule::Step { step: 1 }; // (see threshold.rs for all schedules)
 

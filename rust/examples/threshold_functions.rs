@@ -90,6 +90,7 @@ fn main() -> anyhow::Result<()> {
             eval_interval: Duration::from_millis(400),
             k_max: None,
             compute_floor: Duration::from_millis(20),
+            shards: args.usize_or("shards", 1),
         };
         let m = train(&cfg, &inputs)?;
         let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));

@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
         eval_interval: Duration::from_secs_f64((secs / 20.0).max(1.0)),
         k_max: None,
         compute_floor: Duration::ZERO,
+        shards: args.usize_or("shards", 1),
     };
 
     println!("training for ~{secs:.0}s (~{steps} gradient steps) ...\n");

@@ -18,6 +18,16 @@
 //!
 //! K moves by at most ±1 per adjustment window, so the transition stays
 //! smooth — the same property the paper's step schedule has by construction.
+//!
+//! Sharding note: the sharded parameter server instantiates one controller
+//! per shard. The controller is a pure deterministic function of its
+//! observation stream, so replicas fed the identical stream hold the same K
+//! at every arrival — pinned by `identical_streams_keep_replicas_in_lockstep`
+//! below and by the sharded equivalence property tests (which drive the
+//! sequential machine). In the *threaded* server, concurrent sends can
+//! interleave differently per shard channel, and since the EWMA is
+//! order-sensitive the per-shard K may transiently diverge with `S > 1` —
+//! see `server.rs` module docs.
 
 /// Configuration for the adaptive controller.
 #[derive(Clone, Debug, PartialEq)]
@@ -172,6 +182,27 @@ mod tests {
             c.observe(1, 1.0, 8); // constant loss = plateau, low staleness
         }
         assert_eq!(c.k(), 8, "plateau should saturate K at k_max");
+    }
+
+    #[test]
+    fn identical_streams_keep_replicas_in_lockstep() {
+        // Per-shard controllers see the same (staleness, loss) stream; their
+        // K must agree at every step for sharding to be policy-invisible.
+        let cfg = AdaptiveConfig {
+            window: 8,
+            ..Default::default()
+        };
+        let mut a = AdaptiveController::new(cfg.clone());
+        let mut b = AdaptiveController::new(cfg);
+        let mut loss = 4.0f32;
+        for i in 0..500u64 {
+            let stale = (i * 7919) % 9;
+            let ka = a.observe(stale, loss, 12);
+            let kb = b.observe(stale, loss, 12);
+            assert_eq!(ka, kb, "replicas diverged at arrival {i}");
+            assert_eq!(a.staleness_ewma(), b.staleness_ewma());
+            loss = (loss * 0.99).max(0.5) + if i % 3 == 0 { 0.01 } else { 0.0 };
+        }
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! the paper sketches; `bench_hotpath` quantifies it). Staleness bookkeeping
 //! records, per buffered gradient, how many versions behind the gradient's
 //! base version was at arrival — the quantity the paper's narrative is about.
+//!
+//! Under the sharded parameter server each shard owns one buffer of its
+//! slice length (`dim = |shard|`), so the total buffered state stays O(d)
+//! across any shard count and each shard's flush is an O(d / S) scan.
 
 /// Accumulating gradient buffer with staleness statistics.
 pub struct GradientBuffer {

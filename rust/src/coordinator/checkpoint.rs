@@ -20,6 +20,10 @@ pub struct Checkpoint {
     pub model: String,
     pub policy: String,
     pub ps_version: u64,
+    /// Parameter-server shard count of the run that produced the params
+    /// (informational: the flat layout is shard-count independent, so a
+    /// checkpoint restores under any `S`). Pre-shard checkpoints load as 1.
+    pub shards: usize,
     pub params: Vec<f32>,
 }
 
@@ -57,6 +61,7 @@ impl Checkpoint {
             ("model", Json::Str(self.model.clone())),
             ("policy", Json::Str(self.policy.clone())),
             ("ps_version", Json::Num(self.ps_version as f64)),
+            ("shards", Json::Num(self.shards.max(1) as f64)),
             ("param_count", Json::Num(self.params.len() as f64)),
         ]);
         std::fs::write(&meta_path, meta.to_string_pretty())?;
@@ -105,6 +110,8 @@ impl Checkpoint {
             model: meta.str_field("model")?,
             policy: meta.str_field("policy")?,
             ps_version: meta.usize_field("ps_version")? as u64,
+            // Absent in pre-shard checkpoints: default to a single shard.
+            shards: meta.get("shards").and_then(Json::as_usize).unwrap_or(1),
             params,
         })
     }
@@ -125,6 +132,7 @@ mod tests {
             model: "mlp".into(),
             policy: "hybrid:step:500".into(),
             ps_version: 1234,
+            shards: 4,
             params: (0..1000).map(|i| (i as f32).sin()).collect(),
         }
     }
@@ -156,6 +164,25 @@ mod tests {
     fn missing_files_error() {
         let dir = tmpdir("missing");
         assert!(Checkpoint::load(&dir, "nope").is_err());
+    }
+
+    #[test]
+    fn pre_shard_meta_loads_as_single_shard() {
+        let dir = tmpdir("legacy");
+        let ck = sample();
+        let (_, meta) = ck.save(&dir, "run1").unwrap();
+        // Rewrite the meta without the `shards` key (pre-shard format).
+        std::fs::write(
+            &meta,
+            format!(
+                r#"{{"model":"mlp","policy":"hybrid:step:500","ps_version":1234,"param_count":{}}}"#,
+                ck.params.len()
+            ),
+        )
+        .unwrap();
+        let back = Checkpoint::load(&dir, "run1").unwrap();
+        assert_eq!(back.shards, 1);
+        assert_eq!(back.params, ck.params);
     }
 
     #[test]

@@ -38,6 +38,33 @@ impl SparseGrad {
     pub fn payload_bytes(&self) -> usize {
         self.idx.len() * (4 + 4)
     }
+
+    /// Split into per-shard sparse gradients with indices rebased to each
+    /// shard's local coordinate space — what a compressed submission to the
+    /// sharded parameter server fans out as. Indices are sorted, so this is
+    /// a single linear scan. Like the codecs themselves (see module docs),
+    /// this is exercised by tests/ablations, not the default dense
+    /// `Arc`-fan-out pipeline.
+    pub fn split_shards(&self, layout: &crate::coordinator::shard::ShardLayout) -> Vec<SparseGrad> {
+        assert_eq!(self.dim, layout.dim());
+        let mut out: Vec<SparseGrad> = layout
+            .ranges()
+            .map(|r| SparseGrad {
+                dim: r.len(),
+                idx: Vec::new(),
+                val: Vec::new(),
+            })
+            .collect();
+        let mut shard = 0usize;
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            while !layout.range(shard).contains(&(i as usize)) {
+                shard += 1;
+            }
+            out[shard].idx.push(i - layout.range(shard).start as u32);
+            out[shard].val.push(v);
+        }
+        out
+    }
 }
 
 /// Top-k sparsifier with error feedback. One instance per worker.
@@ -214,6 +241,30 @@ mod tests {
         let b = dequantize_i8(&q);
         assert!((b[0] - 127.0).abs() < 1.0);
         assert!((b[1] + 127.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn split_shards_partitions_and_rebases() {
+        use crate::coordinator::shard::ShardLayout;
+        let s = SparseGrad {
+            dim: 10,
+            idx: vec![0, 3, 4, 7, 9],
+            val: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        let layout = ShardLayout::new(10, 3); // ranges 0..4, 4..7, 7..10
+        let parts = s.split_shards(&layout);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].idx, vec![0, 3]);
+        assert_eq!(parts[0].val, vec![1.0, 2.0]);
+        assert_eq!(parts[1].idx, vec![0]);
+        assert_eq!(parts[1].val, vec![3.0]);
+        assert_eq!(parts[2].idx, vec![0, 2]);
+        assert_eq!(parts[2].val, vec![4.0, 5.0]);
+        // Dense reconstruction of the parts matches slicing the dense grad.
+        let dense = s.to_dense();
+        for (p, r) in parts.iter().zip(layout.ranges()) {
+            assert_eq!(p.to_dense(), dense[r]);
+        }
     }
 
     #[test]

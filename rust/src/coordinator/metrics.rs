@@ -30,6 +30,10 @@ pub struct RunMetrics {
     pub mean_staleness: f64,
     pub wall_time: f64,
     pub per_worker_grads: Vec<u64>,
+    /// Parameter-server shard count of the run (0 until the server reports).
+    pub shards: usize,
+    /// Updates applied by each shard (they agree up to in-flight messages).
+    pub per_shard_updates: Vec<u64>,
 }
 
 impl RunMetrics {
@@ -91,6 +95,16 @@ impl RunMetrics {
                         .collect(),
                 ),
             ),
+            ("shards", Json::Num(self.shards as f64)),
+            (
+                "per_shard_updates",
+                Json::Arr(
+                    self.per_shard_updates
+                        .iter()
+                        .map(|&u| Json::Num(u as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -111,6 +125,8 @@ mod tests {
         m.updates_total = 80;
         m.wall_time = 2.0;
         m.per_worker_grads = vec![30, 40, 30];
+        m.shards = 2;
+        m.per_shard_updates = vec![80, 80];
         m
     }
 
@@ -139,6 +155,16 @@ mod tests {
         let j = m.to_json();
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.usize_field("gradients_total").unwrap(), 100);
+        assert_eq!(parsed.usize_field("shards").unwrap(), 2);
+        assert_eq!(
+            parsed
+                .get("per_shard_updates")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            2
+        );
         assert_eq!(
             parsed
                 .get("test_acc")

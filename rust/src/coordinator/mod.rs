@@ -3,12 +3,15 @@
 //! Layering, bottom-up:
 //! - [`threshold`] — monotone threshold schedules `K(n)` (paper Algorithm 1
 //!   step 3; §9 pluggable variants).
-//! - [`params`] / [`buffer`] — versioned parameter store and the summing
-//!   gradient buffer.
+//! - [`params`] / [`buffer`] — versioned parameter store (with zero-copy
+//!   snapshot cells) and the summing gradient buffer.
 //! - [`policy`] — the pure aggregation state machine: async / sync /
 //!   hybrid(smooth|strict).
+//! - [`shard`] — contiguous θ sharding and the pure sharded state machine
+//!   (`S = 1` reproduces the unsharded semantics bitwise).
 //! - [`delay`] — the paper's worker-heterogeneity injection model.
-//! - [`server`] / [`worker`] — the threaded parameter-server protocol.
+//! - [`server`] / [`worker`] — the threaded sharded parameter-server
+//!   protocol (one server thread per shard, O(1) version-token replies).
 //! - [`trainer`] — one-call orchestration of a full training run.
 //! - [`metrics`] — metric time series and run summaries.
 
@@ -21,6 +24,7 @@ pub mod metrics;
 pub mod params;
 pub mod policy;
 pub mod server;
+pub mod shard;
 pub mod threshold;
 pub mod trainer;
 pub mod worker;
@@ -28,6 +32,8 @@ pub mod worker;
 pub use adaptive::{AdaptiveConfig, AdaptiveController};
 pub use delay::DelayModel;
 pub use metrics::RunMetrics;
+pub use params::{ParamSnapshot, SnapshotCell};
 pub use policy::{Aggregator, Outcome, Policy};
+pub use shard::{ShardLayout, ShardedAggregator};
 pub use threshold::Schedule;
 pub use trainer::{train, EvalSet, RunInputs, TrainConfig};

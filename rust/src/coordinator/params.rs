@@ -1,44 +1,95 @@
-//! The parameter store: versioned flat parameter vector + SGD application.
+//! The parameter store: versioned flat parameter vector (one per shard) with
+//! in-place SGD application and zero-copy snapshot publication.
 //!
-//! Owned by the parameter-server thread; a read-only snapshot is shared with
-//! the evaluator through a mutex (snapshots happen a few times per second,
-//! updates thousands of times — the lock is uncontended by design: the PS
-//! only takes it when publishing, see `publish_every`).
+//! Each shard-server thread owns one [`ParamStore`]. Readers (workers
+//! refreshing their local copy, the evaluator) never receive O(dim) copies
+//! over channels: the store publishes an immutable [`ParamSnapshot`] behind
+//! an [`SnapshotCell`] and readers take an `Arc` clone — a pointer read
+//! under a nanosecond-scale lock. The publisher pays one memcpy per update
+//! into a recycled buffer (no steady-state allocation); readers copy out
+//! only when the version actually changed.
 
 use std::sync::{Arc, Mutex};
 
-/// Versioned parameters with in-place SGD updates.
+/// An immutable published view of one shard's parameters.
+#[derive(Clone, Debug)]
+pub struct ParamSnapshot {
+    pub theta: Vec<f32>,
+    pub version: u64,
+}
+
+/// Single-writer / multi-reader snapshot slot: the writer swaps in a fresh
+/// `Arc<ParamSnapshot>`, readers clone the `Arc`. The mutex is held only for
+/// the pointer swap/clone, never for the O(dim) copy, so readers cannot
+/// stall the server and the server cannot stall readers.
+pub struct SnapshotCell {
+    slot: Mutex<Arc<ParamSnapshot>>,
+}
+
+impl SnapshotCell {
+    /// A cell holding version 0 of the given parameters.
+    pub fn new(init: Vec<f32>) -> SnapshotCell {
+        SnapshotCell {
+            slot: Mutex::new(Arc::new(ParamSnapshot {
+                theta: init,
+                version: 0,
+            })),
+        }
+    }
+
+    /// Current snapshot (cheap: one `Arc` clone under a short lock).
+    pub fn load(&self) -> Arc<ParamSnapshot> {
+        Arc::clone(&self.slot.lock().unwrap())
+    }
+
+    /// Published version without touching the payload.
+    pub fn version(&self) -> u64 {
+        self.slot.lock().unwrap().version
+    }
+
+    /// Swap in a new snapshot, returning the old one for buffer recycling.
+    fn swap(&self, snap: Arc<ParamSnapshot>) -> Arc<ParamSnapshot> {
+        std::mem::replace(&mut *self.slot.lock().unwrap(), snap)
+    }
+
+    /// Publish an explicit (θ, version) pair directly. Test/bench helper —
+    /// production code publishes through [`ParamStore`] for recycling.
+    pub(crate) fn publish_raw(&self, theta: Vec<f32>, version: u64) {
+        self.swap(Arc::new(ParamSnapshot { theta, version }));
+    }
+}
+
+/// Versioned parameters with in-place SGD updates (one shard's slice of θ).
 pub struct ParamStore {
     theta: Vec<f32>,
     version: u64,
     lr: f32,
-    /// Shared snapshot for the evaluator thread (param vector + version).
-    snapshot: Arc<Mutex<(Vec<f32>, u64)>>,
-    /// Publish the snapshot every this many updates (and on demand).
-    publish_every: u64,
+    /// Where snapshots are published for workers and the evaluator.
+    cell: Arc<SnapshotCell>,
+    /// Recycled buffer for the next publication (avoids re-allocating).
+    spare: Option<Vec<f32>>,
 }
 
 impl ParamStore {
     pub fn new(init: Vec<f32>, lr: f32) -> Self {
-        let snapshot = Arc::new(Mutex::new((init.clone(), 0)));
-        Self::with_shared(init, lr, snapshot)
+        let cell = Arc::new(SnapshotCell::new(init.clone()));
+        Self::with_cell(init, lr, cell)
     }
 
-    /// Construct around an externally created snapshot cell (the trainer
-    /// hands the same cell to the evaluator thread).
-    pub fn with_shared(init: Vec<f32>, lr: f32, snapshot: Arc<Mutex<(Vec<f32>, u64)>>) -> Self {
-        {
-            let mut s = snapshot.lock().unwrap();
-            s.0.clear();
-            s.0.extend_from_slice(&init);
-            s.1 = 0;
-        }
+    /// Construct around an externally created cell (the trainer hands the
+    /// same cell to the workers and the evaluator). The cell is reset to
+    /// version 0 with `init`.
+    pub fn with_cell(init: Vec<f32>, lr: f32, cell: Arc<SnapshotCell>) -> Self {
+        cell.swap(Arc::new(ParamSnapshot {
+            theta: init.clone(),
+            version: 0,
+        }));
         ParamStore {
             theta: init,
             version: 0,
             lr,
-            snapshot,
-            publish_every: 8,
+            cell,
+            spare: None,
         }
     }
 
@@ -62,9 +113,9 @@ impl ParamStore {
         &self.theta
     }
 
-    /// Handle the evaluator uses to read snapshots.
-    pub fn snapshot_handle(&self) -> Arc<Mutex<(Vec<f32>, u64)>> {
-        Arc::clone(&self.snapshot)
+    /// Handle readers use to follow this store's snapshots.
+    pub fn cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.cell)
     }
 
     /// θ ← θ − lr · g  (single gradient; the asynchronous application).
@@ -90,17 +141,28 @@ impl ParamStore {
 
     fn bump(&mut self) {
         self.version += 1;
-        if self.version % self.publish_every == 0 {
-            self.publish();
-        }
+        // Every version is published: replies carry only version numbers,
+        // so the snapshot must always be current when its version says so.
+        self.publish();
     }
 
-    /// Push the current θ into the shared snapshot (called on flush
-    /// boundaries and at shutdown so the evaluator never lags far).
-    pub fn publish(&self) {
-        let mut snap = self.snapshot.lock().unwrap();
-        snap.0.copy_from_slice(&self.theta);
-        snap.1 = self.version;
+    /// Push the current θ into the published snapshot. The buffer of the
+    /// previous snapshot is recycled once the last reader drops it, so the
+    /// steady state is one memcpy and zero allocations per update.
+    pub fn publish(&mut self) {
+        let mut buf = self
+            .spare
+            .take()
+            .unwrap_or_else(|| Vec::with_capacity(self.theta.len()));
+        buf.clear();
+        buf.extend_from_slice(&self.theta);
+        let old = self.cell.swap(Arc::new(ParamSnapshot {
+            theta: buf,
+            version: self.version,
+        }));
+        if let Ok(snap) = Arc::try_unwrap(old) {
+            self.spare = Some(snap.theta);
+        }
     }
 }
 
@@ -125,24 +187,52 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_publishes() {
+    fn snapshot_publishes_every_update() {
         let mut ps = ParamStore::new(vec![5.0], 0.5);
-        let handle = ps.snapshot_handle();
+        let cell = ps.cell();
+        assert_eq!(cell.load().version, 0);
         ps.apply_single(&[2.0]);
-        ps.publish();
-        let snap = handle.lock().unwrap();
-        assert_eq!(snap.0, vec![4.0]);
-        assert_eq!(snap.1, 1);
+        let snap = cell.load();
+        assert_eq!(snap.theta, vec![4.0]);
+        assert_eq!(snap.version, 1);
     }
 
     #[test]
-    fn snapshot_auto_publishes_every_n() {
+    fn readers_keep_old_snapshots_alive() {
         let mut ps = ParamStore::new(vec![0.0], 1.0);
-        let handle = ps.snapshot_handle();
-        for _ in 0..8 {
-            ps.apply_single(&[1.0]);
+        let cell = ps.cell();
+        let pinned = cell.load(); // a slow reader holding version 0
+        ps.apply_single(&[1.0]);
+        ps.apply_single(&[1.0]);
+        assert_eq!(pinned.version, 0);
+        assert_eq!(pinned.theta, vec![0.0]);
+        assert_eq!(cell.load().version, 2);
+        assert_eq!(cell.load().theta, vec![-2.0]);
+    }
+
+    #[test]
+    fn publish_recycles_buffers() {
+        let mut ps = ParamStore::new(vec![0.0; 64], 1.0);
+        // No reader pins snapshots, so after a warm-up update every further
+        // publish reuses the recycled buffer (observable via capacity).
+        ps.apply_single(&[1.0; 64]);
+        for _ in 0..100 {
+            ps.apply_single(&[1.0; 64]);
         }
-        let snap = handle.lock().unwrap();
-        assert_eq!(snap.1, 8, "auto-publish at version 8");
+        assert_eq!(ps.cell().load().version, 101);
+        assert!(ps.spare.is_some(), "publish should recycle the old buffer");
+    }
+
+    #[test]
+    fn with_cell_resets_external_cell() {
+        let cell = Arc::new(SnapshotCell::new(vec![9.0, 9.0]));
+        {
+            let mut ps = ParamStore::with_cell(vec![1.0, 2.0], 0.1, Arc::clone(&cell));
+            ps.apply_single(&[0.0, 0.0]);
+        }
+        let snap = cell.load();
+        assert_eq!(snap.theta, vec![1.0, 2.0]);
+        assert_eq!(snap.version, 1);
+        assert_eq!(cell.version(), 1);
     }
 }

@@ -56,15 +56,31 @@ impl Policy {
             });
         }
         if let Some(rest) = s.strip_prefix("adaptive") {
+            // Accept exactly `adaptive`, `adaptive:<target>` and
+            // `adaptive:<target>:strict` — anything else (e.g. a bare
+            // `adaptivegarbage`) is an error, not a silent default.
             let mut cfg = AdaptiveConfig::default();
-            if let Some(t) = rest.strip_prefix(':') {
-                cfg.target_staleness = t.parse().map_err(|_| {
-                    anyhow::anyhow!("bad adaptive target staleness `{t}`")
+            let mut strict = false;
+            if !rest.is_empty() {
+                let spec = rest.strip_prefix(':').ok_or_else(|| {
+                    anyhow::anyhow!("bad policy `{s}` (expected `adaptive` or `adaptive:<target>`)")
+                })?;
+                let target = match spec.strip_suffix(":strict") {
+                    Some(t) => {
+                        strict = true;
+                        t
+                    }
+                    None => spec,
+                };
+                cfg.target_staleness = target.parse().map_err(|_| {
+                    anyhow::anyhow!("bad adaptive target staleness `{target}`")
                 })?;
             }
-            return Ok(Policy::HybridAdaptive { cfg, strict: false });
+            return Ok(Policy::HybridAdaptive { cfg, strict });
         }
-        anyhow::bail!("unknown policy `{s}` (async | sync | hybrid:<sched> | hybrid-strict:<sched>)")
+        anyhow::bail!(
+            "unknown policy `{s}` (async | sync | hybrid:<sched> | hybrid-strict:<sched> | adaptive[:<target>[:strict]])"
+        )
     }
 }
 
@@ -245,8 +261,8 @@ impl Aggregator {
         let count = self.buffer.len();
         let distinct = self.buffer.distinct_workers();
         let mean_staleness = self.buffer.mean_staleness();
+        // apply_mean bumps the version, which publishes the new snapshot.
         store.apply_mean(self.buffer.sum(), count);
-        store.publish();
         self.buffer.clear();
         self.stats.flushes += 1;
         self.stats.flushed_gradients += count as u64;
@@ -452,10 +468,36 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for s in ["async", "sync", "hybrid:step:500", "hybrid-strict:const:4"] {
+        for s in [
+            "async",
+            "sync",
+            "hybrid:step:500",
+            "hybrid-strict:const:4",
+            "adaptive:3.5",
+            "adaptive:1.5:strict",
+        ] {
             let p = Policy::parse(s).unwrap();
             assert_eq!(Policy::parse(&p.to_string()).unwrap(), p);
         }
         assert!(Policy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn adaptive_parse_rejects_garbage() {
+        // Bare `adaptive` is the documented default form …
+        let p = Policy::parse("adaptive").unwrap();
+        assert_eq!(
+            p,
+            Policy::HybridAdaptive {
+                cfg: AdaptiveConfig::default(),
+                strict: false
+            }
+        );
+        // … but a non-`:` remainder must not silently parse as that default.
+        assert!(Policy::parse("adaptivegarbage").is_err());
+        assert!(Policy::parse("adaptive2").is_err());
+        assert!(Policy::parse("adaptive:").is_err());
+        assert!(Policy::parse("adaptive:notanumber").is_err());
+        assert!(Policy::parse("adaptive:2:bogus").is_err());
     }
 }

@@ -1,46 +1,67 @@
-//! The parameter-server thread: message routing around the [`Aggregator`].
+//! The sharded parameter-server threads: message routing around one
+//! [`Aggregator`] + [`ParamStore`] pair per shard.
 //!
-//! One `mpsc` channel carries gradients from all workers; each worker owns a
-//! private reply channel. The server applies the policy per arrival and
-//! replies with either fresh parameters (after an update), a cheap
-//! "unchanged" token (smooth-hybrid buffering while θ is frozen — no copy),
-//! or defers the reply until the flush (barrier semantics).
+//! Topology: the flat θ is split into `S` contiguous shards
+//! ([`super::shard::ShardLayout`]); each shard is owned by its own server
+//! thread running [`run_shard`]. A worker fans one gradient out to all `S`
+//! shard channels as `Arc` clones of a single buffer (zero-copy fan-out),
+//! and each shard consumes its slice, so every shard observes the same
+//! *set* of arrivals. For the count-triggered policies (async, sync,
+//! schedule-driven hybrid) the control flow depends only on arrival counts
+//! and contributing-worker sets — both order-insensitive — so per-shard
+//! `K(n)` state, barriers and flushes evolve in lockstep even though
+//! concurrent sends may interleave differently per channel, and `S = 1`
+//! reproduces the single-server semantics exactly. The adaptive policy's
+//! controller is order-sensitive (EWMA over its observation stream), so
+//! under threading its per-shard K can transiently diverge with `S > 1` —
+//! the same class of nondeterminism an asynchronous PS already has across
+//! runs; the sequential [`super::shard::ShardedAggregator`] is exactly
+//! equivalent for every policy.
 //!
-//! Buffer-recycling protocol: gradient vectors travel worker→server inside
-//! [`GradMsg`] and return inside the reply, so the steady state allocates
-//! nothing on either side.
+//! Reply protocol: replies are O(1) version tokens — never parameter
+//! copies. After an update the shard publishes an immutable snapshot into
+//! its [`SnapshotCell`] (one memcpy into a recycled buffer) and replies
+//! `Updated { version }`; workers refresh by a cheap `Arc` load and copy
+//! only the shard slices whose version actually changed. While θ is frozen
+//! (hybrid buffering) the reply is `Unchanged` and nobody copies anything.
 
 use super::metrics::RunMetrics;
-use super::params::ParamStore;
+use super::params::{ParamStore, SnapshotCell};
 use super::policy::{Aggregator, Outcome, Policy};
+use super::shard::ShardLayout;
 use crate::log_debug;
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A gradient submission.
-pub struct GradMsg {
+/// A gradient submission to one shard. The full-dim gradient buffer is
+/// shared across all shard messages of one submission; each shard reads its
+/// slice and drops the `Arc` so the worker can recycle the buffer.
+pub struct ShardMsg {
     pub worker: usize,
-    /// Parameter version the gradient was computed against.
+    /// Parameter version of this shard the gradient was computed against.
     pub base_version: u64,
-    /// Training loss observed on the mini-batch (telemetry only).
+    /// Training loss observed on the mini-batch (feeds the adaptive
+    /// controller; telemetry otherwise).
     pub loss: f32,
-    pub grad: Vec<f32>,
+    pub grad: Arc<Vec<f32>>,
 }
 
-/// Server → worker reply.
+/// Shard → worker reply. O(1): parameters travel through snapshot cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Reply {
-    /// Parameters changed: here is a fresh copy (+ your recycled buffer).
-    Fresh {
-        theta: Vec<f32>,
-        version: u64,
-        recycled: Vec<f32>,
-    },
-    /// Parameters did not change since `base_version`; keep your copy.
-    Unchanged { recycled: Vec<f32> },
+    /// The shard's parameters changed: refresh from its snapshot cell
+    /// (published version ≥ `version`).
+    Updated { shard: usize, version: u64 },
+    /// The shard's parameters did not change since `base_version`; keep
+    /// your copy.
+    Unchanged { shard: usize },
 }
 
-/// Server-side configuration.
+/// Server-side configuration, shared by all shard threads of a run.
+#[derive(Clone)]
 pub struct ServerConfig {
     pub policy: Policy,
     pub workers: usize,
@@ -49,17 +70,22 @@ pub struct ServerConfig {
     pub k_max: Option<usize>,
     /// Sample the (t, K) / (t, version) trajectories at most this often.
     pub trace_interval: Duration,
-    /// Shared cell the evaluator reads parameter snapshots from; created by
-    /// the trainer. `None` → the store creates a private one.
-    pub snapshot: Option<std::sync::Arc<std::sync::Mutex<(Vec<f32>, u64)>>>,
-    /// Reply with a cheap `Unchanged` token (no θ copy) when a buffered
-    /// gradient arrives and the submitter already holds the current version.
-    /// On by default; disable (`HYBRID_SGD_NO_REPLY_OPT=1` via trainer) to
-    /// measure the copy cost — see EXPERIMENTS.md §Perf.
-    pub reply_unchanged_optim: bool,
 }
 
-/// What the server hands back when the run ends.
+/// What one shard thread hands back when the run ends.
+pub struct ShardReport {
+    pub shard: usize,
+    pub final_params: Vec<f32>,
+    pub updates_total: u64,
+    pub gradients_total: u64,
+    pub flushes: u64,
+    pub mean_staleness: f64,
+    pub per_worker_grads: Vec<u64>,
+    pub k_trajectory: crate::util::stats::Series,
+    pub version_trajectory: crate::util::stats::Series,
+}
+
+/// The merged run-level report across all shards.
 pub struct ServerReport {
     pub final_params: Vec<f32>,
     pub updates_total: u64,
@@ -67,6 +93,7 @@ pub struct ServerReport {
     pub flushes: u64,
     pub mean_staleness: f64,
     pub per_worker_grads: Vec<u64>,
+    pub per_shard_updates: Vec<u64>,
     pub k_trajectory: crate::util::stats::Series,
     pub version_trajectory: crate::util::stats::Series,
 }
@@ -79,35 +106,68 @@ impl ServerReport {
         m.flushes = self.flushes;
         m.mean_staleness = self.mean_staleness;
         m.per_worker_grads = self.per_worker_grads.clone();
+        m.shards = self.per_shard_updates.len();
+        m.per_shard_updates = self.per_shard_updates.clone();
         m.k_trajectory = self.k_trajectory.clone();
         m.version_trajectory = self.version_trajectory.clone();
     }
 }
 
-/// Run the parameter server until every worker sender disconnects.
+/// Merge per-shard reports. Shard 0 is the canonical source for the logical
+/// counters and trajectories: all shards observe the same set of arrivals,
+/// and for count-triggered policies their counters can differ only by
+/// messages in flight at shutdown (the adaptive policy may additionally
+/// drift transiently across shards under threading — see the module docs;
+/// `per_shard_updates` exposes the spread). Final parameters are
+/// concatenated in shard order.
+pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> ServerReport {
+    assert_eq!(reports.len(), layout.shards());
+    reports.sort_by_key(|r| r.shard);
+    let mut final_params = Vec::with_capacity(layout.dim());
+    for r in &reports {
+        final_params.extend_from_slice(&r.final_params);
+    }
+    let per_shard_updates = reports.iter().map(|r| r.updates_total).collect();
+    let first = &reports[0];
+    ServerReport {
+        updates_total: first.updates_total,
+        gradients_total: first.gradients_total,
+        flushes: first.flushes,
+        mean_staleness: first.mean_staleness,
+        per_worker_grads: first.per_worker_grads.clone(),
+        k_trajectory: first.k_trajectory.clone(),
+        version_trajectory: first.version_trajectory.clone(),
+        per_shard_updates,
+        final_params,
+    }
+}
+
+/// Run one shard's server loop until every worker sender disconnects.
 ///
-/// Call on a dedicated thread. `reply_txs[i]` is worker i's reply channel;
-/// `stop` is the trainer's shutdown flag (used to release barrier-blocked
-/// workers so they can observe the flag).
-pub fn run_server(
+/// Call on a dedicated thread. `range` is this shard's slice of the flat θ,
+/// `init` the corresponding initial values, `reply_txs[i]` worker i's reply
+/// channel (shared with the other shards) and `stop` the trainer's shutdown
+/// flag (used to release barrier-blocked workers so they can observe it).
+#[allow(clippy::too_many_arguments)]
+pub fn run_shard(
+    shard: usize,
+    range: Range<usize>,
     init: Vec<f32>,
+    cell: Arc<SnapshotCell>,
     cfg: &ServerConfig,
-    grad_rx: Receiver<GradMsg>,
+    grad_rx: Receiver<ShardMsg>,
     reply_txs: Vec<Sender<Reply>>,
     stop: &AtomicBool,
     start: Instant,
-) -> ServerReport {
-    let dim = init.len();
-    let mut store = match &cfg.snapshot {
-        Some(cell) => ParamStore::with_shared(init, cfg.lr, std::sync::Arc::clone(cell)),
-        None => ParamStore::new(init, cfg.lr),
-    };
-    let mut agg = Aggregator::new(cfg.policy.clone(), dim, cfg.workers);
+) -> ShardReport {
+    debug_assert_eq!(init.len(), range.len());
+    let mut store = ParamStore::with_cell(init, cfg.lr, cell);
+    let mut agg = Aggregator::new(cfg.policy.clone(), range.len(), cfg.workers);
     if let Some(k) = cfg.k_max {
         agg = agg.with_k_max(k);
     }
-    // Reply slots for workers blocked at a barrier: (worker, recycled buf).
-    let mut blocked: Vec<(usize, Vec<f32>)> = Vec::with_capacity(cfg.workers);
+    // Workers blocked at a barrier, released on flush (or stop).
+    let mut blocked: Vec<usize> = Vec::with_capacity(cfg.workers);
     let mut per_worker = vec![0u64; cfg.workers];
     let mut k_traj = crate::util::stats::Series::new();
     let mut v_traj = crate::util::stats::Series::new();
@@ -117,37 +177,51 @@ pub fn run_server(
     loop {
         match grad_rx.recv_timeout(Duration::from_millis(20)) {
             Ok(msg) => {
-                per_worker[msg.worker] += 1;
-                let outcome = agg.on_gradient(&mut store, &msg.grad, msg.worker, msg.base_version, 1.0);
-                let recycled = msg.grad;
+                let ShardMsg {
+                    worker,
+                    base_version,
+                    loss,
+                    grad,
+                } = msg;
+                per_worker[worker] += 1;
+                let outcome =
+                    agg.on_gradient(&mut store, &grad[range.clone()], worker, base_version, loss);
+                // Release the shared gradient buffer before replying so the
+                // worker's `Arc::try_unwrap` recycling never races a shard.
+                drop(grad);
+                let updated = Reply::Updated {
+                    shard,
+                    version: store.version(),
+                };
                 match outcome {
                     Outcome::AppliedNow => {
-                        send_fresh(&reply_txs[msg.worker], &store, recycled);
+                        send(&reply_txs[worker], updated);
                     }
                     Outcome::Buffered => {
-                        // θ frozen since the last flush: if the worker already
-                        // has this version, skip the copy entirely.
-                        if cfg.reply_unchanged_optim && msg.base_version == store.version() {
-                            let _ = reply_txs[msg.worker].send(Reply::Unchanged { recycled });
+                        // θ frozen since the last flush: if the worker
+                        // already holds this version there is nothing to do.
+                        if base_version == store.version() {
+                            send(&reply_txs[worker], Reply::Unchanged { shard });
                         } else {
-                            send_fresh(&reply_txs[msg.worker], &store, recycled);
+                            send(&reply_txs[worker], updated);
                         }
                     }
                     Outcome::BufferedBlocked => {
-                        blocked.push((msg.worker, recycled));
+                        blocked.push(worker);
                     }
                     Outcome::Flushed { count, k_at_flush, .. } => {
-                        log_debug!(
-                            "server",
-                            "flush of {count} gradients at K={k_at_flush}, v={}",
-                            store.version()
-                        );
-                        send_fresh(&reply_txs[msg.worker], &store, recycled);
-                        for (w, buf) in blocked.drain(..) {
-                            send_fresh(&reply_txs[w], &store, buf);
+                        if shard == 0 {
+                            log_debug!(
+                                "server",
+                                "flush of {count} gradients at K={k_at_flush}, v={}",
+                                store.version()
+                            );
                         }
-                        let t = start.elapsed().as_secs_f64();
-                        k_traj.push(t, agg.current_k() as f64);
+                        send(&reply_txs[worker], updated);
+                        for w in blocked.drain(..) {
+                            send(&reply_txs[w], updated);
+                        }
+                        k_traj.push(start.elapsed().as_secs_f64(), agg.current_k() as f64);
                     }
                 }
                 if last_trace.elapsed() >= cfg.trace_interval {
@@ -160,8 +234,12 @@ pub fn run_server(
         }
         if stop.load(Ordering::Relaxed) && !released_on_stop {
             // Release barrier-blocked workers so they can see the stop flag.
-            for (w, buf) in blocked.drain(..) {
-                send_fresh(&reply_txs[w], &store, buf);
+            let reply = Reply::Updated {
+                shard,
+                version: store.version(),
+            };
+            for w in blocked.drain(..) {
+                send(&reply_txs[w], reply);
             }
             released_on_stop = true;
         }
@@ -173,7 +251,8 @@ pub fn run_server(
     v_traj.push(start.elapsed().as_secs_f64(), store.version() as f64);
 
     let stats = &agg.stats;
-    ServerReport {
+    ShardReport {
+        shard,
         updates_total: store.version(),
         gradients_total: stats.arrivals,
         flushes: stats.flushes,
@@ -189,13 +268,9 @@ pub fn run_server(
     }
 }
 
-fn send_fresh(tx: &Sender<Reply>, store: &ParamStore, recycled: Vec<f32>) {
+fn send(tx: &Sender<Reply>, reply: Reply) {
     // A send error means the worker already exited (shutdown race): fine.
-    let _ = tx.send(Reply::Fresh {
-        theta: store.theta().to_vec(),
-        version: store.version(),
-        recycled,
-    });
+    let _ = tx.send(reply);
 }
 
 #[cfg(test)]
@@ -204,8 +279,12 @@ mod tests {
     use crate::coordinator::threshold::Schedule;
     use std::sync::mpsc;
 
-    /// Drive the server with scripted messages on the current thread pool.
-    fn run_scripted(policy: Policy, workers: usize, msgs: Vec<GradMsg>) -> (ServerReport, Vec<Vec<Reply>>) {
+    /// Drive a single shard server with scripted messages.
+    fn run_scripted(
+        policy: Policy,
+        workers: usize,
+        msgs: Vec<ShardMsg>,
+    ) -> (ShardReport, Vec<Vec<Reply>>, Arc<SnapshotCell>) {
         let (gtx, grx) = mpsc::channel();
         let mut rtxs = Vec::new();
         let mut rrxs = Vec::new();
@@ -221,73 +300,92 @@ mod tests {
             lr: 0.1,
             k_max: None,
             trace_interval: Duration::from_millis(1),
-            snapshot: None,
-            reply_unchanged_optim: true,
         };
         for m in msgs {
             gtx.send(m).unwrap();
         }
         drop(gtx);
-        let report = run_server(vec![0.0; 2], &cfg, grx, rtxs, &stop, Instant::now());
-        let replies: Vec<Vec<Reply>> = rrxs
-            .into_iter()
-            .map(|rx| rx.try_iter().collect())
-            .collect();
-        (report, replies)
+        let cell = Arc::new(SnapshotCell::new(vec![0.0; 2]));
+        let report = run_shard(
+            0,
+            0..2,
+            vec![0.0; 2],
+            Arc::clone(&cell),
+            &cfg,
+            grx,
+            rtxs,
+            &stop,
+            Instant::now(),
+        );
+        let replies: Vec<Vec<Reply>> = rrxs.into_iter().map(|rx| rx.try_iter().collect()).collect();
+        (report, replies, cell)
     }
 
-    fn msg(worker: usize, v: u64) -> GradMsg {
-        GradMsg {
+    fn msg(worker: usize, v: u64) -> ShardMsg {
+        ShardMsg {
             worker,
             base_version: v,
             loss: 1.0,
-            grad: vec![1.0, 1.0],
+            grad: Arc::new(vec![1.0, 1.0]),
         }
     }
 
     #[test]
-    fn async_replies_fresh_every_time() {
-        let (report, replies) = run_scripted(Policy::Async, 2, vec![msg(0, 0), msg(1, 1), msg(0, 2)]);
+    fn async_replies_updated_every_time() {
+        let (report, replies, cell) =
+            run_scripted(Policy::Async, 2, vec![msg(0, 0), msg(1, 1), msg(0, 2)]);
         assert_eq!(report.gradients_total, 3);
         assert_eq!(report.updates_total, 3);
         assert_eq!(replies[0].len(), 2);
         assert_eq!(replies[1].len(), 1);
         for r in replies.iter().flatten() {
-            assert!(matches!(r, Reply::Fresh { .. }));
+            assert!(matches!(r, Reply::Updated { .. }));
         }
+        // The cell carries the final parameters without any reply copies.
+        let snap = cell.load();
+        assert_eq!(snap.version, 3);
+        assert!((snap.theta[0] + 0.3).abs() < 1e-6);
     }
 
     #[test]
     fn sync_defers_until_barrier() {
-        let (report, replies) =
+        let (report, replies, cell) =
             run_scripted(Policy::Sync, 3, vec![msg(0, 0), msg(1, 0), msg(2, 0)]);
         assert_eq!(report.updates_total, 1);
         assert_eq!(report.flushes, 1);
-        // every worker got exactly one Fresh reply, all carrying version 1
+        // every worker got exactly one Updated reply carrying version 1
         for r in &replies {
             assert_eq!(r.len(), 1);
-            match &r[0] {
-                Reply::Fresh { version, theta, .. } => {
-                    assert_eq!(*version, 1);
-                    // mean grad = 1 → θ = -0.1
-                    assert!((theta[0] + 0.1).abs() < 1e-6);
-                }
-                _ => panic!("expected Fresh"),
-            }
+            assert_eq!(r[0], Reply::Updated { shard: 0, version: 1 });
         }
+        // mean grad = 1 → θ = -0.1, readable via the snapshot cell
+        assert!((cell.load().theta[0] + 0.1).abs() < 1e-6);
     }
 
     #[test]
-    fn hybrid_unchanged_replies_skip_param_copy() {
+    fn hybrid_frozen_theta_replies_unchanged() {
         let policy = Policy::Hybrid {
             schedule: Schedule::Constant { k: 3 },
             strict: false,
         };
-        let (report, replies) = run_scripted(policy, 3, vec![msg(0, 0), msg(1, 0), msg(2, 0)]);
+        let (report, replies, _) = run_scripted(policy, 3, vec![msg(0, 0), msg(1, 0), msg(2, 0)]);
         assert_eq!(report.flushes, 1);
-        assert!(matches!(replies[0][0], Reply::Unchanged { .. }));
-        assert!(matches!(replies[1][0], Reply::Unchanged { .. }));
-        assert!(matches!(replies[2][0], Reply::Fresh { .. }));
+        assert_eq!(replies[0][0], Reply::Unchanged { shard: 0 });
+        assert_eq!(replies[1][0], Reply::Unchanged { shard: 0 });
+        assert_eq!(replies[2][0], Reply::Updated { shard: 0, version: 1 });
+    }
+
+    #[test]
+    fn stale_submitter_is_told_to_refresh_while_buffering() {
+        let policy = Policy::Hybrid {
+            schedule: Schedule::Constant { k: 4 },
+            strict: false,
+        };
+        // First arrival flushes nothing; the second pretends to be stale
+        // (base_version far behind) and must be told to refresh.
+        let (_, replies, _) = run_scripted(policy, 2, vec![msg(0, 0), msg(1, 5)]);
+        assert_eq!(replies[0][0], Reply::Unchanged { shard: 0 });
+        assert_eq!(replies[1][0], Reply::Updated { shard: 0, version: 0 });
     }
 
     #[test]
@@ -296,7 +394,7 @@ mod tests {
             schedule: Schedule::Constant { k: 10 },
             strict: false,
         };
-        let (report, _) = run_scripted(policy, 2, vec![msg(0, 0), msg(1, 0)]);
+        let (report, _, _) = run_scripted(policy, 2, vec![msg(0, 0), msg(1, 0)]);
         // no flush during the run, but drain applies the 2 buffered grads
         assert_eq!(report.updates_total, 1);
         assert_eq!(report.gradients_total, 2);
@@ -304,40 +402,92 @@ mod tests {
     }
 
     #[test]
+    fn grad_buffers_are_released_for_recycling() {
+        let shared = Arc::new(vec![1.0f32, 1.0]);
+        let (report, _, _) = run_scripted(
+            Policy::Async,
+            1,
+            vec![ShardMsg {
+                worker: 0,
+                base_version: 0,
+                loss: 1.0,
+                grad: Arc::clone(&shared),
+            }],
+        );
+        assert_eq!(report.gradients_total, 1);
+        // The shard dropped its clone before replying: ours is the last.
+        assert_eq!(Arc::strong_count(&shared), 1);
+    }
+
+    #[test]
     fn stop_releases_blocked_workers() {
         let (gtx, grx) = mpsc::channel();
         let (rtx, rrx) = mpsc::channel();
         let (rtx2, _rrx2) = mpsc::channel();
-        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
         let cfg = ServerConfig {
             policy: Policy::Sync,
             workers: 2,
             lr: 0.1,
             k_max: None,
             trace_interval: Duration::from_millis(1),
-            snapshot: None,
-            reply_unchanged_optim: true,
         };
-        let stop2 = std::sync::Arc::clone(&stop);
+        let stop2 = Arc::clone(&stop);
+        let cell = Arc::new(SnapshotCell::new(vec![0.0]));
+        let cell2 = Arc::clone(&cell);
         let h = std::thread::spawn(move || {
-            run_server(vec![0.0], &cfg, grx, vec![rtx, rtx2], &stop2, Instant::now())
+            run_shard(
+                0,
+                0..1,
+                vec![0.0],
+                cell2,
+                &cfg,
+                grx,
+                vec![rtx, rtx2],
+                &stop2,
+                Instant::now(),
+            )
         });
         // worker 0 submits and would block forever (worker 1 never arrives)
-        gtx.send(GradMsg {
+        gtx.send(ShardMsg {
             worker: 0,
             base_version: 0,
             loss: 0.0,
-            grad: vec![1.0],
+            grad: Arc::new(vec![1.0]),
         })
         .unwrap();
         std::thread::sleep(Duration::from_millis(50));
         assert!(rrx.try_recv().is_err(), "should be blocked at barrier");
         stop.store(true, Ordering::Relaxed);
         let reply = rrx.recv_timeout(Duration::from_secs(2)).unwrap();
-        assert!(matches!(reply, Reply::Fresh { .. }));
+        assert!(matches!(reply, Reply::Updated { .. }));
         drop(gtx);
         let report = h.join().unwrap();
         // the lone buffered gradient was drained into one update
         assert_eq!(report.updates_total, 1);
+    }
+
+    #[test]
+    fn merge_concatenates_shard_params() {
+        let layout = ShardLayout::new(4, 2);
+        let mk = |shard: usize, params: Vec<f32>| ShardReport {
+            shard,
+            final_params: params,
+            updates_total: 7,
+            gradients_total: 10,
+            flushes: 2,
+            mean_staleness: 0.5,
+            per_worker_grads: vec![5, 5],
+            k_trajectory: crate::util::stats::Series::new(),
+            version_trajectory: crate::util::stats::Series::new(),
+        };
+        // Deliberately out of order: merge must sort by shard id.
+        let merged = merge_reports(
+            &layout,
+            vec![mk(1, vec![3.0, 4.0]), mk(0, vec![1.0, 2.0])],
+        );
+        assert_eq!(merged.final_params, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(merged.updates_total, 7);
+        assert_eq!(merged.per_shard_updates, vec![7, 7]);
     }
 }

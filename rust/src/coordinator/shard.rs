@@ -1,0 +1,313 @@
+//! Shard layout and the pure sharded aggregation state machine.
+//!
+//! The sharded parameter server splits the flat θ into `S` contiguous
+//! shards. Every gradient is logically delivered to *every* shard (each
+//! shard consumes its slice), so each shard's [`Aggregator`] observes the
+//! identical arrival sequence: per-shard `K(n)` state, barriers and flushes
+//! evolve in lockstep, and the concatenation of shard parameters is bitwise
+//! identical to the unsharded path for any `S`. [`ShardedAggregator`] is the
+//! single-threaded embodiment of that invariant — property tests drive it
+//! against the unsharded `Aggregator` + `ParamStore` pair, and the threaded
+//! server (`server.rs`) runs one `Aggregator` + `ParamStore` per shard
+//! thread with exactly the same per-arrival calls. (In the threaded server
+//! the *order* of concurrent arrivals can differ per shard channel; the
+//! count-triggered policies are order-insensitive, while the adaptive
+//! controller may transiently diverge across shards — see `server.rs`.)
+
+use super::params::{ParamStore, SnapshotCell};
+use super::policy::{Aggregator, Outcome, Policy};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Balanced contiguous partition of a flat parameter vector.
+///
+/// The effective shard count is clamped to `[1, dim.max(1)]` so no shard is
+/// empty; the first `dim % shards` shards are one element longer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    /// Shard boundaries: `bounds[s]..bounds[s + 1]` is shard `s`.
+    bounds: Vec<usize>,
+}
+
+impl ShardLayout {
+    pub fn new(dim: usize, shards: usize) -> ShardLayout {
+        let shards = shards.clamp(1, dim.max(1));
+        let base = dim / shards;
+        let extra = dim % shards;
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut off = 0;
+        bounds.push(0);
+        for s in 0..shards {
+            off += base + usize::from(s < extra);
+            bounds.push(off);
+        }
+        debug_assert_eq!(off, dim);
+        ShardLayout { bounds }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Full parameter dimension.
+    pub fn dim(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Index range of shard `s`.
+    pub fn range(&self, s: usize) -> Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Iterate over all shard ranges.
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.shards()).map(|s| self.range(s))
+    }
+
+    /// Split a full-dim slice into per-shard owned vectors.
+    pub fn split(&self, full: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(full.len(), self.dim());
+        self.ranges().map(|r| full[r].to_vec()).collect()
+    }
+}
+
+/// Fresh per-shard snapshot cells for `init` (what the trainer hands to the
+/// shard servers, the workers and the evaluator).
+pub fn shard_cells(init: &[f32], layout: &ShardLayout) -> Vec<Arc<SnapshotCell>> {
+    layout
+        .ranges()
+        .map(|r| Arc::new(SnapshotCell::new(init[r].to_vec())))
+        .collect()
+}
+
+/// Assemble the full parameter vector from per-shard snapshot cells into
+/// `out`; returns the minimum published version across shards.
+pub fn assemble_params(
+    cells: &[Arc<SnapshotCell>],
+    layout: &ShardLayout,
+    out: &mut [f32],
+) -> u64 {
+    assert_eq!(out.len(), layout.dim());
+    assert_eq!(cells.len(), layout.shards());
+    let mut min_version = u64::MAX;
+    for (cell, r) in cells.iter().zip(layout.ranges()) {
+        let snap = cell.load();
+        out[r].copy_from_slice(&snap.theta);
+        min_version = min_version.min(snap.version);
+    }
+    min_version
+}
+
+/// The sharded policy state machine: one [`Aggregator`] + [`ParamStore`] per
+/// contiguous shard, driven sequentially. Semantically identical to a single
+/// `Aggregator` over the full vector for every `S` (see module docs).
+pub struct ShardedAggregator {
+    layout: ShardLayout,
+    shards: Vec<(Aggregator, ParamStore)>,
+}
+
+impl ShardedAggregator {
+    pub fn new(policy: Policy, init: &[f32], lr: f32, workers: usize, shards: usize) -> Self {
+        let layout = ShardLayout::new(init.len(), shards);
+        let shards = layout
+            .ranges()
+            .map(|r| {
+                let dim = r.len();
+                (
+                    Aggregator::new(policy.clone(), dim, workers),
+                    ParamStore::new(init[r].to_vec(), lr),
+                )
+            })
+            .collect();
+        ShardedAggregator { layout, shards }
+    }
+
+    /// Override the threshold cap on every shard (default = worker count).
+    pub fn with_k_max(mut self, k_max: usize) -> Self {
+        self.shards = self
+            .shards
+            .into_iter()
+            .map(|(agg, ps)| (agg.with_k_max(k_max), ps))
+            .collect();
+        self
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    /// Parameter version (identical across shards by construction).
+    pub fn version(&self) -> u64 {
+        self.shards[0].1.version()
+    }
+
+    /// Current threshold of shard 0 (identical across shards).
+    pub fn current_k(&self) -> usize {
+        self.shards[0].0.current_k()
+    }
+
+    /// Feed one full-dim gradient to every shard; returns shard 0's outcome
+    /// (all shards agree — checked in debug builds).
+    pub fn on_gradient(
+        &mut self,
+        grad: &[f32],
+        worker: usize,
+        base_version: u64,
+        loss: f32,
+    ) -> Outcome {
+        assert_eq!(grad.len(), self.layout.dim());
+        let mut first: Option<Outcome> = None;
+        for (s, r) in self.layout.ranges().enumerate() {
+            let (agg, ps) = &mut self.shards[s];
+            let out = agg.on_gradient(ps, &grad[r], worker, base_version, loss);
+            match &first {
+                None => first = Some(out),
+                Some(f) => debug_assert_eq!(
+                    std::mem::discriminant(f),
+                    std::mem::discriminant(&out),
+                    "shard {s} diverged from shard 0"
+                ),
+            }
+        }
+        first.unwrap()
+    }
+
+    /// Force-flush buffered gradients on every shard (shutdown path).
+    /// Returns the flushed count (identical across shards).
+    pub fn drain(&mut self) -> usize {
+        let mut n = 0;
+        for (agg, ps) in &mut self.shards {
+            n = agg.drain(ps);
+        }
+        n
+    }
+
+    /// Concatenated final parameters in shard order.
+    pub fn final_params(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.layout.dim());
+        for (_, ps) in &self.shards {
+            out.extend_from_slice(ps.theta());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::threshold::Schedule;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn layout_partitions_balanced() {
+        let l = ShardLayout::new(10, 4);
+        assert_eq!(l.shards(), 4);
+        assert_eq!(l.dim(), 10);
+        let lens: Vec<usize> = l.ranges().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+        assert_eq!(l.range(0), 0..3);
+        assert_eq!(l.range(3), 8..10);
+    }
+
+    #[test]
+    fn layout_clamps_degenerate_counts() {
+        assert_eq!(ShardLayout::new(3, 8).shards(), 3);
+        assert_eq!(ShardLayout::new(5, 0).shards(), 1);
+        assert_eq!(ShardLayout::new(0, 4).shards(), 1);
+        assert_eq!(ShardLayout::new(0, 4).dim(), 0);
+    }
+
+    #[test]
+    fn split_and_cells_round_trip() {
+        let full: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let l = ShardLayout::new(7, 3);
+        let parts = l.split(&full);
+        assert_eq!(parts.concat(), full);
+        let cells = shard_cells(&full, &l);
+        let mut out = vec![0.0f32; 7];
+        let v = assemble_params(&cells, &l, &mut out);
+        assert_eq!(out, full);
+        assert_eq!(v, 0);
+    }
+
+    /// Golden-trace equivalence: the S = 1 sharded machine reproduces the
+    /// unsharded `Aggregator` + `ParamStore` exactly — same update count,
+    /// bitwise-identical parameters and identical K at every arrival — for
+    /// a fixed seeded gradient stream.
+    #[test]
+    fn s1_matches_unsharded_golden_trace() {
+        let policy = Policy::Hybrid {
+            schedule: Schedule::Step { step: 7 },
+            strict: false,
+        };
+        let dim = 33;
+        let workers = 4;
+        let mut rng = Pcg64::seeded(1234);
+        let mut init = vec![0.0f32; dim];
+        rng.fill_normal(&mut init, 0.5);
+
+        let mut reference = Aggregator::new(policy.clone(), dim, workers);
+        let mut ref_ps = ParamStore::new(init.clone(), 0.05);
+        let mut sharded = ShardedAggregator::new(policy, &init, 0.05, workers, 1);
+
+        let mut grad = vec![0.0f32; dim];
+        for i in 0..200 {
+            rng.fill_normal(&mut grad, 1.0);
+            let w = i % workers;
+            let (vr, vs) = (ref_ps.version(), sharded.version());
+            assert_eq!(vr, vs, "version diverged at arrival {i}");
+            let out_ref = reference.on_gradient(&mut ref_ps, &grad, w, vr, 1.0);
+            let out_sh = sharded.on_gradient(&grad, w, vs, 1.0);
+            assert_eq!(out_ref, out_sh, "outcome diverged at arrival {i}");
+            assert_eq!(reference.current_k(), sharded.current_k());
+        }
+        reference.drain(&mut ref_ps);
+        sharded.drain();
+        assert_eq!(ref_ps.version(), sharded.version());
+        assert_eq!(ref_ps.theta(), &sharded.final_params()[..]);
+    }
+
+    /// Sharding is invisible to the math: S ∈ {2, 5} produce bitwise the
+    /// same parameters as S = 1 under async, sync and hybrid.
+    #[test]
+    fn shard_counts_agree_bitwise() {
+        for policy in [
+            Policy::Async,
+            Policy::Sync,
+            Policy::Hybrid {
+                schedule: Schedule::Step { step: 5 },
+                strict: true,
+            },
+        ] {
+            let dim = 17;
+            let workers = 3;
+            let mut rng = Pcg64::seeded(9);
+            let mut init = vec![0.0f32; dim];
+            rng.fill_normal(&mut init, 1.0);
+            let mut machines: Vec<ShardedAggregator> = [1usize, 2, 5]
+                .iter()
+                .map(|&s| ShardedAggregator::new(policy.clone(), &init, 0.1, workers, s))
+                .collect();
+            let mut grad = vec![0.0f32; dim];
+            for i in 0..120 {
+                rng.fill_normal(&mut grad, 1.0);
+                let w = i % workers;
+                let v = machines[0].version();
+                for m in &mut machines {
+                    assert_eq!(m.version(), v);
+                    m.on_gradient(&grad, w, v, 1.0);
+                }
+            }
+            let finals: Vec<Vec<f32>> = machines
+                .iter_mut()
+                .map(|m| {
+                    m.drain();
+                    m.final_params()
+                })
+                .collect();
+            assert_eq!(finals[0], finals[1], "{policy}: S=2 diverged");
+            assert_eq!(finals[0], finals[2], "{policy}: S=5 diverged");
+        }
+    }
+}

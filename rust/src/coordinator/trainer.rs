@@ -1,19 +1,20 @@
-//! End-to-end training orchestration: spawn the parameter server, W gradient
-//! workers and an evaluator; run for a wall-clock budget; return the metric
-//! series. This is the function every example, experiment and benchmark
-//! drives.
+//! End-to-end training orchestration: spawn `S` shard-server threads, `W`
+//! gradient workers and an evaluator; run for a wall-clock budget; return
+//! the metric series. This is the function every example, experiment and
+//! benchmark drives.
 
 use super::delay::DelayModel;
 use super::metrics::RunMetrics;
 use super::policy::Policy;
-use super::server::{run_server, GradMsg, Reply, ServerConfig};
-use super::worker::{run_worker, BatchSource, WorkerConfig};
+use super::server::{merge_reports, run_shard, Reply, ServerConfig, ShardMsg};
+use super::shard::{assemble_params, shard_cells, ShardLayout};
+use super::worker::{run_worker, BatchSource, ShardEndpoints, WorkerConfig};
 use crate::data::Dataset;
 use crate::engine::EngineFactory;
 use crate::log_info;
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Evaluation tensors: `n` samples of `x_dim` features and `y_dim` label
@@ -89,6 +90,9 @@ pub struct TrainConfig {
     /// Per-gradient compute-cost floor applied to every worker
     /// (see `WorkerConfig::min_iter`).
     pub compute_floor: Duration,
+    /// Parameter-server shard count (contiguous θ slices, one server
+    /// thread each). 1 reproduces the single-server semantics exactly.
+    pub shards: usize,
 }
 
 impl TrainConfig {
@@ -103,6 +107,7 @@ impl TrainConfig {
             eval_interval: Duration::from_millis(500),
             k_max: None,
             compute_floor: Duration::ZERO,
+            shards: 1,
         }
     }
 }
@@ -129,8 +134,18 @@ pub struct RunInputs<'a> {
 pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics> {
     let start = Instant::now();
     let stop = AtomicBool::new(false);
-    let snapshot = Arc::new(Mutex::new((inputs.init_params.to_vec(), 0u64)));
-    let (grad_tx, grad_rx) = mpsc::channel::<GradMsg>();
+    let layout = ShardLayout::new(inputs.init_params.len(), cfg.shards);
+    let cells = shard_cells(inputs.init_params, &layout);
+
+    // One gradient channel per shard; one reply channel per worker, its
+    // sender cloned into every shard thread.
+    let mut grad_txs = Vec::with_capacity(layout.shards());
+    let mut grad_rxs = Vec::with_capacity(layout.shards());
+    for _ in 0..layout.shards() {
+        let (tx, rx) = mpsc::channel::<ShardMsg>();
+        grad_txs.push(tx);
+        grad_rxs.push(Some(rx));
+    }
     let mut reply_txs = Vec::with_capacity(cfg.workers);
     let mut reply_rxs = Vec::with_capacity(cfg.workers);
     for _ in 0..cfg.workers {
@@ -147,28 +162,51 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         lr: cfg.lr,
         k_max: cfg.k_max,
         trace_interval: Duration::from_millis(200),
-        snapshot: Some(Arc::clone(&snapshot)),
-        reply_unchanged_optim: std::env::var("HYBRID_SGD_NO_REPLY_OPT").map_or(true, |v| v != "1"),
     };
+
+    // Ensure the stop flag is raised on *every* exit from the thread scope
+    // (including `?` error paths), or the scoped join would hang forever.
+    struct StopGuard<'a>(&'a AtomicBool);
+    impl Drop for StopGuard<'_> {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
 
     let mut metrics = RunMetrics::default();
     let result: anyhow::Result<()> = std::thread::scope(|s| {
-        // --- parameter server ---
-        let init = inputs.init_params.to_vec();
-        let stop_ref = &stop;
-        let server = s.spawn(move || run_server(init, &server_cfg, grad_rx, reply_txs, stop_ref, start));
+        let _stop_guard = StopGuard(&stop);
+        // --- shard-server threads ---
+        let mut shard_handles = Vec::with_capacity(layout.shards());
+        for shard in 0..layout.shards() {
+            let range = layout.range(shard);
+            let init = inputs.init_params[range.clone()].to_vec();
+            let cell = Arc::clone(&cells[shard]);
+            let scfg = server_cfg.clone();
+            let rtxs = reply_txs.clone();
+            let grad_rx = grad_rxs[shard].take().unwrap();
+            let stop_ref = &stop;
+            shard_handles.push(s.spawn(move || {
+                run_shard(shard, range, init, cell, &scfg, grad_rx, rtxs, stop_ref, start)
+            }));
+        }
+        drop(reply_txs); // shard threads own the only reply senders now
 
         // --- workers ---
         let mut worker_handles = Vec::new();
         for id in 0..cfg.workers {
             let reply_rx = reply_rxs[id].take().unwrap();
-            let gtx = grad_tx.clone();
             let wcfg = WorkerConfig {
                 id,
                 delayed: delayed_flags[id],
                 delay: cfg.delay.clone(),
                 seed: cfg.seed.wrapping_add(1000 + id as u64),
                 min_iter: cfg.compute_floor,
+            };
+            let endpoints = ShardEndpoints {
+                layout: layout.clone(),
+                grad_txs: grad_txs.clone(),
+                cells: cells.clone(),
             };
             let factory = Arc::clone(&inputs.worker_engine);
             let source_factory = Arc::clone(&inputs.batch_source);
@@ -183,71 +221,82 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
                     }
                 };
                 let source = source_factory(id);
-                run_worker(&wcfg, engine, source, init, gtx, reply_rx, stop_ref)
+                run_worker(&wcfg, engine, source, init, endpoints, reply_rx, stop_ref)
             }));
         }
-        drop(grad_tx); // server exits when the last worker sender drops
+        drop(grad_txs); // shard servers exit when the last worker sender drops
 
         // --- evaluator (this thread) ---
         let mut eval_engine = (inputs.eval_engine)()?;
-        let mut eval_metrics = EvalLoop {
+        let mut eval_loop = EvalLoop {
             engine: eval_engine.as_mut(),
             test: inputs.test,
             train_probe: inputs.train_probe,
-            snapshot: &snapshot,
+            cells: &cells,
+            layout: &layout,
             start,
         };
         let mut params_buf = inputs.init_params.to_vec();
         // t=0 sample, then periodic until the budget elapses.
-        eval_metrics.sample(&mut metrics, &mut params_buf)?;
+        eval_loop.sample(&mut metrics, &mut params_buf)?;
         while start.elapsed() < cfg.duration {
             let remaining = cfg.duration.saturating_sub(start.elapsed());
             std::thread::sleep(cfg.eval_interval.min(remaining));
-            eval_metrics.sample(&mut metrics, &mut params_buf)?;
+            eval_loop.sample(&mut metrics, &mut params_buf)?;
         }
 
         stop.store(true, Ordering::Relaxed);
         for h in worker_handles {
             let _ = h.join();
         }
-        let report = server.join().expect("server thread panicked");
-        report.fill(&mut metrics);
+        let reports = shard_handles
+            .into_iter()
+            .map(|h| h.join().expect("shard-server thread panicked"))
+            .collect::<Vec<_>>();
+        merge_reports(&layout, reports).fill(&mut metrics);
         // Final sample on the drained parameters.
-        eval_metrics.sample(&mut metrics, &mut params_buf)?;
+        eval_loop.sample(&mut metrics, &mut params_buf)?;
         Ok(())
     });
     result?;
     metrics.wall_time = start.elapsed().as_secs_f64();
     log_info!(
         "trainer",
-        "{} done: {} grads, {} updates, {:.1} grads/s, final acc {:.2}%",
+        "{} done: {} grads, {} updates, {} shards, {:.1} grads/s, final acc {:.2}%",
         cfg.policy,
         metrics.gradients_total,
         metrics.updates_total,
+        metrics.shards,
         metrics.grads_per_sec(),
         metrics.final_metrics().map(|m| m.2).unwrap_or(f64::NAN)
     );
     Ok(metrics)
 }
 
-/// The evaluator: reads a parameter snapshot and computes metrics over the
-/// eval sets in engine-batch chunks.
+/// The evaluator: assembles a parameter view from the per-shard snapshot
+/// cells (pointer reads + one memcpy per shard) and computes metrics over
+/// the eval sets in engine-batch chunks.
+///
+/// Consistency: each shard slice is internally consistent, but the view
+/// across shards is relaxed — cells are loaded one after another, so under
+/// concurrent updates the assembled θ can mix adjacent versions (the
+/// pre-shard evaluator read one throttled snapshot, which was equally stale
+/// just uniformly so). This is telemetry-grade sampling, not a training
+/// input; `assemble_params` returns the minimum version for callers that
+/// want to detect the spread.
 struct EvalLoop<'a> {
     engine: &'a mut dyn crate::engine::GradEngine,
     test: &'a EvalSet,
     train_probe: &'a EvalSet,
-    snapshot: &'a Mutex<(Vec<f32>, u64)>,
+    cells: &'a [Arc<super::params::SnapshotCell>],
+    layout: &'a ShardLayout,
     start: Instant,
 }
 
 impl<'a> EvalLoop<'a> {
-    fn sample(&mut self, m: &mut RunMetrics, params_buf: &mut Vec<f32>) -> anyhow::Result<()> {
-        let t = {
-            let snap = self.snapshot.lock().unwrap();
-            params_buf.clear();
-            params_buf.extend_from_slice(&snap.0);
-            self.start.elapsed().as_secs_f64()
-        };
+    fn sample(&mut self, m: &mut RunMetrics, params_buf: &mut [f32]) -> anyhow::Result<()> {
+        let _version = assemble_params(self.cells, self.layout, params_buf);
+        let t = self.start.elapsed().as_secs_f64();
         let (test_loss, test_acc) = eval_on(self.engine, params_buf, self.test)?;
         let (train_loss, _) = eval_on(self.engine, params_buf, self.train_probe)?;
         m.test_loss.push(t, test_loss);
@@ -269,7 +318,6 @@ pub fn eval_on(
     let mut loss_sum = 0.0f64;
     let mut correct = 0usize;
     let mut items = 0usize;
-    let mut samples = 0usize;
     let n_chunks = set.n / chunk;
     anyhow::ensure!(n_chunks > 0, "eval set smaller than eval batch");
     for c in 0..n_chunks {
@@ -279,9 +327,7 @@ pub fn eval_on(
         loss_sum += l;
         correct += corr;
         items += chunk * set.y_dim;
-        samples += chunk;
     }
-    let _ = samples;
     Ok((loss_sum / items as f64, correct as f64 / items as f64))
 }
 
@@ -326,6 +372,10 @@ mod tests {
     }
 
     fn short_run(policy: Policy) -> RunMetrics {
+        short_run_sharded(policy, 1)
+    }
+
+    fn short_run_sharded(policy: Policy, shards: usize) -> RunMetrics {
         let spec = ClusterSpec {
             n_samples: 600,
             ..Default::default()
@@ -342,6 +392,7 @@ mod tests {
         let mut cfg = TrainConfig::quick(policy, 3, 1.0);
         cfg.delay = DelayModel::none();
         cfg.lr = 0.05;
+        cfg.shards = shards;
         train_run(&cfg, &inputs)
     }
 
@@ -355,6 +406,7 @@ mod tests {
         let m = short_run(Policy::Async);
         assert!(m.gradients_total > 20, "too few gradients: {}", m.gradients_total);
         assert_eq!(m.updates_total, m.gradients_total);
+        assert_eq!(m.shards, 1);
         let first_acc = m.test_acc.v[0];
         let last_acc = *m.test_acc.v.last().unwrap();
         assert!(
@@ -384,6 +436,36 @@ mod tests {
         for w in m.k_trajectory.v.windows(2) {
             assert!(w[1] >= w[0]);
         }
+    }
+
+    #[test]
+    fn sharded_runs_complete_and_learn() {
+        for shards in [2usize, 4] {
+            let m = short_run_sharded(Policy::Async, shards);
+            assert_eq!(m.shards, shards, "effective shard count");
+            assert_eq!(m.per_shard_updates.len(), shards);
+            assert!(m.gradients_total > 20, "S={shards}: too few gradients");
+            let last_acc = *m.test_acc.v.last().unwrap();
+            assert!(last_acc > 25.0, "S={shards}: final acc {last_acc}");
+        }
+    }
+
+    #[test]
+    fn sharded_hybrid_flushes_on_every_shard() {
+        let m = short_run_sharded(
+            Policy::Hybrid {
+                schedule: Schedule::Step { step: 40 },
+                strict: false,
+            },
+            3,
+        );
+        assert!(m.flushes > 0);
+        // All shards see (nearly) the same arrival stream; their update
+        // counts can differ only by messages in flight at shutdown.
+        let max = *m.per_shard_updates.iter().max().unwrap();
+        let min = *m.per_shard_updates.iter().min().unwrap();
+        // At most one in-flight message per worker per shard at shutdown.
+        assert!(max - min <= 3, "shard updates diverged: {:?}", m.per_shard_updates);
     }
 
     #[test]

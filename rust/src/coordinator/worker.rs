@@ -2,18 +2,24 @@
 //!
 //! A worker owns: a local parameter copy, a [`GradEngine`] (constructed
 //! inside the thread — PJRT clients are not `Send`), a [`BatchSource`], and
-//! its half of the channel protocol. Per iteration it computes a gradient,
-//! optionally sleeps an injected delay (the paper's heterogeneity model),
-//! submits, and waits for the server's reply.
+//! its half of the sharded channel protocol. Per iteration it computes a
+//! gradient, optionally sleeps an injected delay (the paper's heterogeneity
+//! model), fans the gradient out to every shard server as `Arc` clones of
+//! one buffer, waits for all `S` shard replies, and refreshes only the
+//! shard slices whose parameters actually changed — via snapshot-cell
+//! pointer reads, never O(dim) channel payloads.
 
 use super::delay::DelayModel;
-use super::server::{GradMsg, Reply};
+use super::params::SnapshotCell;
+use super::server::{Reply, ShardMsg};
+use super::shard::ShardLayout;
 use crate::data::tokens::TokenBatcher;
 use crate::data::Batcher;
 use crate::engine::GradEngine;
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Produces mini-batches as (features, labels) slices. Implementations must
@@ -69,11 +75,22 @@ pub struct WorkerConfig {
     pub min_iter: Duration,
 }
 
+/// The worker's view of the sharded parameter server.
+pub struct ShardEndpoints {
+    pub layout: ShardLayout,
+    /// One gradient channel per shard, in shard order.
+    pub grad_txs: Vec<Sender<ShardMsg>>,
+    /// One snapshot cell per shard, in shard order.
+    pub cells: Vec<Arc<SnapshotCell>>,
+}
+
 /// Worker-side counters returned at join.
 #[derive(Debug, Default, Clone)]
 pub struct WorkerReport {
     pub grads_sent: u64,
-    pub fresh_replies: u64,
+    /// Shard-slice refreshes actually copied from snapshot cells.
+    pub refreshes: u64,
+    /// Shard replies that required no parameter copy.
     pub unchanged_replies: u64,
     pub delay_slept: f64,
 }
@@ -84,19 +101,25 @@ pub fn run_worker(
     mut engine: Box<dyn GradEngine>,
     mut source: Box<dyn BatchSource>,
     init_params: Vec<f32>,
-    grad_tx: Sender<GradMsg>,
+    endpoints: ShardEndpoints,
     reply_rx: Receiver<Reply>,
     stop: &AtomicBool,
 ) -> WorkerReport {
     let mut report = WorkerReport::default();
     let mut params = init_params;
-    let mut version: u64 = 0;
     let dim = params.len();
+    let shards = endpoints.layout.shards();
+    debug_assert_eq!(endpoints.grad_txs.len(), shards);
+    debug_assert_eq!(endpoints.cells.len(), shards);
+    // Per-shard version of the local parameter copy.
+    let mut versions = vec![0u64; shards];
+    // Which shards to refresh after the current round of replies.
+    let mut needs_refresh = vec![false; shards];
     let mut grad_buf = vec![0.0f32; dim];
     let mut spare = vec![0.0f32; dim];
     let mut rng = Pcg64::new(cfg.seed, cfg.id as u64 + 1);
 
-    while !stop.load(Ordering::Relaxed) {
+    'outer: while !stop.load(Ordering::Relaxed) {
         let iter_start = std::time::Instant::now();
         let (x, y) = source.next();
         let loss = match engine.grad(&params, x, y, &mut grad_buf) {
@@ -125,39 +148,36 @@ pub fn run_worker(
                 std::thread::sleep(cfg.min_iter - elapsed);
             }
         }
-        // Ship the gradient; swap in the spare so we keep an owned buffer.
-        let outgoing = std::mem::replace(&mut grad_buf, std::mem::take(&mut spare));
-        if grad_tx
-            .send(GradMsg {
+        // Fan the gradient out to every shard as Arc clones of one buffer;
+        // the spare swaps in so the worker always owns a compute buffer.
+        let shared = Arc::new(std::mem::replace(&mut grad_buf, std::mem::take(&mut spare)));
+        for (s, tx) in endpoints.grad_txs.iter().enumerate() {
+            let sent = tx.send(ShardMsg {
                 worker: cfg.id,
-                base_version: version,
+                base_version: versions[s],
                 loss,
-                grad: outgoing,
-            })
-            .is_err()
-        {
-            break; // server gone
+                grad: Arc::clone(&shared),
+            });
+            if sent.is_err() {
+                break 'outer; // server gone
+            }
         }
         report.grads_sent += 1;
 
-        // Await the reply (with stop checks: barrier waits can span seconds).
-        loop {
+        // Await one reply per shard (with stop checks: barrier waits can
+        // span seconds).
+        let mut pending = shards;
+        while pending > 0 {
             match reply_rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(Reply::Fresh {
-                    theta,
-                    version: v,
-                    recycled,
-                }) => {
-                    params.copy_from_slice(&theta);
-                    version = v;
-                    spare = recycled;
-                    report.fresh_replies += 1;
-                    break;
+                Ok(Reply::Updated { shard, version }) => {
+                    if version != versions[shard] {
+                        needs_refresh[shard] = true;
+                    }
+                    pending -= 1;
                 }
-                Ok(Reply::Unchanged { recycled }) => {
-                    spare = recycled;
+                Ok(Reply::Unchanged { .. }) => {
                     report.unchanged_replies += 1;
-                    break;
+                    pending -= 1;
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if stop.load(Ordering::Relaxed) {
@@ -165,6 +185,20 @@ pub fn run_worker(
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => return report,
+            }
+        }
+        // Every shard dropped its clone before replying: recycle the buffer
+        // (the fallback allocation only triggers on shutdown races).
+        spare = Arc::try_unwrap(shared).unwrap_or_else(|_| vec![0.0f32; dim]);
+        // Refresh changed shard slices from their snapshot cells: a pointer
+        // read per shard, one memcpy per *changed* shard.
+        for (s, flag) in needs_refresh.iter_mut().enumerate() {
+            if *flag {
+                let snap = endpoints.cells[s].load();
+                params[endpoints.layout.range(s)].copy_from_slice(&snap.theta);
+                versions[s] = snap.version;
+                report.refreshes += 1;
+                *flag = false;
             }
         }
     }
@@ -190,8 +224,8 @@ mod tests {
     }
 
     #[test]
-    fn worker_submits_and_applies_replies() {
-        let (gtx, grx) = mpsc::channel::<GradMsg>();
+    fn worker_submits_and_refreshes_from_snapshots() {
+        let (gtx, grx) = mpsc::channel::<ShardMsg>();
         let (rtx, rrx) = mpsc::channel::<Reply>();
         let stop = Arc::new(AtomicBool::new(false));
         let cfg = WorkerConfig {
@@ -201,6 +235,13 @@ mod tests {
             seed: 1,
             min_iter: Duration::ZERO,
         };
+        let layout = ShardLayout::new(2, 1);
+        let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
+        let endpoints = ShardEndpoints {
+            layout,
+            grad_txs: vec![gtx],
+            cells: vec![Arc::clone(&cell)],
+        };
         let stop2 = Arc::clone(&stop);
         let h = std::thread::spawn(move || {
             let engine = Box::new(QuadraticEngine::new(vec![1.0, 1.0], 1, 0.0, 0));
@@ -208,17 +249,18 @@ mod tests {
                 x: vec![],
                 y: vec![],
             });
-            run_worker(&cfg, engine, source, vec![0.0, 0.0], gtx, rrx, &stop2)
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2)
         });
-        // Act as the server for 3 round trips.
+        // Act as the shard server for 3 round trips, publishing snapshots.
         for i in 0..3u64 {
             let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();
             assert_eq!(msg.worker, 0);
             assert_eq!(msg.base_version, i);
-            rtx.send(Reply::Fresh {
-                theta: vec![0.5, 0.5],
+            drop(msg); // release the shared buffer like a real shard
+            publish(&cell, vec![0.5, 0.5], i + 1);
+            rtx.send(Reply::Updated {
+                shard: 0,
                 version: i + 1,
-                recycled: msg.grad,
             })
             .unwrap();
         }
@@ -228,7 +270,52 @@ mod tests {
         drop(rtx);
         let report = h.join().unwrap();
         assert!(report.grads_sent >= 3);
-        assert!(report.fresh_replies >= 3);
+        assert!(report.refreshes >= 3);
+    }
+
+    #[test]
+    fn unchanged_replies_skip_refresh() {
+        let (gtx, grx) = mpsc::channel::<ShardMsg>();
+        let (rtx, rrx) = mpsc::channel::<Reply>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = WorkerConfig {
+            id: 0,
+            delayed: false,
+            delay: DelayModel::none(),
+            seed: 2,
+            min_iter: Duration::ZERO,
+        };
+        let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
+        let endpoints = ShardEndpoints {
+            layout: ShardLayout::new(2, 1),
+            grad_txs: vec![gtx],
+            cells: vec![cell],
+        };
+        let stop2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            let engine = Box::new(QuadraticEngine::new(vec![1.0, 1.0], 1, 0.0, 0));
+            let source = Box::new(ConstSource {
+                x: vec![],
+                y: vec![],
+            });
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2)
+        });
+        for _ in 0..2 {
+            let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(msg.base_version, 0, "worker must keep version 0");
+            drop(msg);
+            rtx.send(Reply::Unchanged { shard: 0 }).unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        while grx.recv_timeout(Duration::from_millis(100)).is_ok() {}
+        drop(rtx);
+        let report = h.join().unwrap();
+        assert!(report.unchanged_replies >= 2);
+        assert_eq!(report.refreshes, 0);
+    }
+
+    fn publish(cell: &Arc<SnapshotCell>, theta: Vec<f32>, version: u64) {
+        cell.publish_raw(theta, version);
     }
 
     #[test]

@@ -78,6 +78,8 @@ pub struct ExpConfig {
     /// Estimated gradient arrivals/sec for this (dataset, workers, budget)
     /// on this container — used to scale the paper's threshold step sizes.
     pub arrival_rate_est: f64,
+    /// Parameter-server shard count (`--shards`); 1 = single server thread.
+    pub shards: usize,
 }
 
 /// The paper's K cap (25 workers) is reached after step×(25−1) arrivals; at
@@ -137,6 +139,7 @@ impl ExpConfig {
                 DatasetKind::Mnist => 34.0,
                 DatasetKind::Cifar => 12.0,
             },
+            shards: 1,
         }
     }
 

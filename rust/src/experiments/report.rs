@@ -28,9 +28,10 @@ COMMANDS:
 COMMON OPTIONS:
   --dataset mnist|cifar|random   workload (default per command)
   --engine xla:jnp|xla:pallas|native
-  --policy async|sync|hybrid:step:500|hybrid-strict:<sched>  (train only)
+  --policy async|sync|hybrid:step:500|hybrid-strict:<sched>|adaptive[:t]  (train only)
   --workers N      --batch N     --lr F        --secs F
   --rounds N       --seed N      --step-mult F --delay-std F
+  --shards N                     parameter-server shards (default 1)
   --quick                        smoke scale (seconds)
   --paper-scale                  the paper's 25 workers x 5 rounds x 100 s
   --out DIR                      results directory (default results/)
@@ -58,6 +59,7 @@ fn config_from(args: &Args, default_dataset: DatasetKind) -> anyhow::Result<ExpC
     cfg.step_mult = args.f64_or("step-mult", cfg.step_mult);
     cfg.arrival_rate_est = args.f64_or("arrival-rate", cfg.arrival_rate_est);
     cfg.compute_ms = args.f64_or("compute-ms", cfg.compute_ms);
+    cfg.shards = args.usize_or("shards", cfg.shards).max(1);
     if let Some(std) = args.get("delay-std") {
         cfg.delay = DelayModel::paper_default().with_std(std.parse()?);
     }
@@ -159,6 +161,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         eval_interval: std::time::Duration::from_millis(500),
         k_max: None,
         compute_floor: std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
+        shards: cfg.shards,
     };
     let inputs = crate::coordinator::RunInputs {
         worker_engine: std::sync::Arc::clone(&workload.worker_engine),
@@ -173,6 +176,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     println!("gradients       : {}", m.gradients_total);
     println!("updates         : {}", m.updates_total);
     println!("flushes         : {}", m.flushes);
+    println!("shards          : {}", m.shards);
     println!("grads/sec       : {:.1}", m.grads_per_sec());
     println!("mean staleness  : {:.2}", m.mean_staleness);
     if let Some((tr, te, acc)) = m.final_metrics() {

@@ -4,19 +4,24 @@
 //! Gradient Descent"* (Vora, Patel, Joshi; 2024) on a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! - **L3** (`coordinator`) — a Rust parameter server with three gradient
-//!   aggregation policies: synchronous (barrier), asynchronous
+//! - **L3** (`coordinator`) — a **sharded** Rust parameter server with three
+//!   gradient aggregation policies: synchronous (barrier), asynchronous
 //!   (apply-on-arrival) and the paper's **smooth-switch hybrid** (a growing
 //!   threshold `K(n)` batches buffered gradients into increasingly
-//!   synchronous aggregated updates).
+//!   synchronous aggregated updates). The flat θ splits into `S` contiguous
+//!   shards, each owned by its own server thread; workers receive O(1)
+//!   version-token replies and refresh parameters through zero-copy
+//!   `Arc`-swapped snapshots. `S = 1` reproduces the single-server
+//!   semantics bitwise, keeping the paper's comparisons valid.
 //! - **L2** (`python/compile/model.py`) — JAX forward/backward graphs for the
 //!   paper's workloads (MLP, CNN-MNIST, CNN-CIFAR, plus a transformer LM),
 //!   AOT-lowered to HLO text at build time.
 //! - **L1** (`python/compile/kernels/`) — Pallas kernels for the compute hot
 //!   spots (tiled matmul, fused SGD update, gradient-buffer reduction).
-//! - **runtime** — loads the AOT artifacts via the PJRT C API (`xla` crate)
-//!   and executes them from the Rust hot path. Python never runs at
-//!   training time.
+//! - **runtime** — loads the AOT artifacts via the PJRT C API (`xla` crate,
+//!   behind the off-by-default `pjrt` feature so the native backend builds
+//!   offline) and executes them from the Rust hot path. Python never runs
+//!   at training time.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

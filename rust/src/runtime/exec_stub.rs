@@ -1,0 +1,81 @@
+//! Offline stand-in for the PJRT execution layer (`exec.rs`), compiled when
+//! the `pjrt` feature is off. Presents the same public API; constructors
+//! fail with a clear error so every caller's "skip when artifacts/PJRT are
+//! unavailable" path engages. The inhabited-by-nothing `Infallible` field
+//! makes the post-construction methods statically unreachable.
+
+use crate::engine::GradEngine;
+use std::convert::Infallible;
+
+/// A [`GradEngine`] backed by AOT-compiled XLA executables (unavailable:
+/// built without the `pjrt` feature).
+pub struct XlaEngine {
+    never: Infallible,
+}
+
+impl XlaEngine {
+    /// Mirrors `exec::XlaEngine::new`; always errors in this build.
+    pub fn new(
+        _manifest: &super::manifest::Manifest,
+        _model: &str,
+        _grad_batch: Option<usize>,
+        _variant: &str,
+        _with_eval: bool,
+    ) -> anyhow::Result<XlaEngine> {
+        anyhow::bail!(
+            "XlaEngine unavailable: built without the `pjrt` feature \
+             (rebuild with `cargo build --features pjrt` and the real `xla` \
+             crate in rust/Cargo.toml to run AOT artifacts)"
+        )
+    }
+}
+
+impl GradEngine for XlaEngine {
+    fn param_count(&self) -> usize {
+        match self.never {}
+    }
+
+    fn batch_size(&self) -> usize {
+        match self.never {}
+    }
+
+    fn grad(
+        &mut self,
+        _params: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        match self.never {}
+    }
+
+    fn eval(&mut self, _params: &[f32], _x: &[f32], _y: &[i32]) -> anyhow::Result<(f64, usize)> {
+        match self.never {}
+    }
+}
+
+/// A standalone parameter-server op (fused SGD update / buffer reduce) —
+/// unavailable without the `pjrt` feature.
+pub struct UpdateOp {
+    pub param_count: usize,
+    never: Infallible,
+}
+
+impl UpdateOp {
+    /// Mirrors `exec::UpdateOp::new`; always errors in this build.
+    pub fn new(
+        _manifest: &super::manifest::Manifest,
+        _model: &str,
+        _variant: &str,
+    ) -> anyhow::Result<UpdateOp> {
+        anyhow::bail!(
+            "UpdateOp unavailable: built without the `pjrt` feature \
+             (rebuild with `cargo build --features pjrt`)"
+        )
+    }
+
+    /// θ ← θ − scale · grad_sum, computed by the AOT kernel.
+    pub fn apply(&mut self, _params: &mut [f32], _grad_sum: &[f32], _scale: f32) -> anyhow::Result<()> {
+        match self.never {}
+    }
+}

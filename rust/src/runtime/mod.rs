@@ -1,7 +1,16 @@
 //! Runtime layer: PJRT loading/execution of the AOT artifacts, manifest
 //! parsing, and parameter initialisation. Python never runs here — the
 //! artifacts under `artifacts/` are the entire L1/L2 contribution at runtime.
+//!
+//! The PJRT execution path is feature-gated: without `--features pjrt` the
+//! native backend builds and tests fully offline against an API-compatible
+//! stub whose constructors explain how to enable the real path (DESIGN.md
+//! §1.4).
 
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 pub mod exec;
 pub mod init;
 pub mod manifest;

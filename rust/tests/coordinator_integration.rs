@@ -42,6 +42,17 @@ fn fixture(seed: u64) -> Fixture {
 }
 
 fn run(fx: &Fixture, policy: Policy, workers: usize, secs: f64, delay: DelayModel) -> RunMetrics {
+    run_sharded(fx, policy, workers, secs, delay, 1)
+}
+
+fn run_sharded(
+    fx: &Fixture,
+    policy: Policy,
+    workers: usize,
+    secs: f64,
+    delay: DelayModel,
+    shards: usize,
+) -> RunMetrics {
     hybrid_sgd::util::logging::set_level(hybrid_sgd::util::logging::Level::Off);
     let batch = 16;
     let dims: Vec<usize> = DIMS.to_vec();
@@ -77,6 +88,7 @@ fn run(fx: &Fixture, policy: Policy, workers: usize, secs: f64, delay: DelayMode
         eval_interval: Duration::from_millis(200),
         k_max: None,
         compute_floor: Duration::ZERO,
+        shards,
     };
     train(&cfg, &inputs).expect("train failed")
 }
@@ -100,6 +112,33 @@ fn all_policies_complete_and_learn() {
         assert!(m.gradients_total > 10, "{policy}: {} grads", m.gradients_total);
         let last = *m.test_acc.v.last().unwrap();
         assert!(last > 30.0, "{policy}: final acc {last}");
+    }
+}
+
+#[test]
+fn sharded_server_completes_every_policy() {
+    // The tentpole invariant, end to end: the sharded parameter server with
+    // S ∈ {2, 4} trains every policy through the full threaded stack.
+    let fx = fixture(8);
+    for shards in [2usize, 4] {
+        for policy in [
+            Policy::Async,
+            Policy::Sync,
+            Policy::Hybrid {
+                schedule: Schedule::Step { step: 60 },
+                strict: false,
+            },
+        ] {
+            let m = run_sharded(&fx, policy.clone(), 3, 1.5, DelayModel::none(), shards);
+            assert_eq!(m.shards, shards, "{policy}: shard count");
+            assert!(
+                m.gradients_total > 10,
+                "{policy} S={shards}: {} grads",
+                m.gradients_total
+            );
+            let last = *m.test_acc.v.last().unwrap();
+            assert!(last > 30.0, "{policy} S={shards}: final acc {last}");
+        }
     }
 }
 

@@ -2,7 +2,7 @@
 //! see `util::proptest` — the offline image has no proptest crate).
 
 use hybrid_sgd::coordinator::params::ParamStore;
-use hybrid_sgd::coordinator::{Aggregator, Outcome, Policy, Schedule};
+use hybrid_sgd::coordinator::{Aggregator, Outcome, Policy, Schedule, ShardedAggregator};
 use hybrid_sgd::engine::GradEngine;
 use hybrid_sgd::native::QuadraticEngine;
 use hybrid_sgd::prop_assert;
@@ -83,6 +83,81 @@ fn prop_no_gradient_lost() {
             accounted == n as u64,
             "{policy}: accounted {accounted} != arrivals {n}"
         );
+        Ok(())
+    });
+}
+
+/// Sharded-store equivalence: for S ∈ {1, 2, 4} and every policy, driving
+/// the sharded state machine with the same seeded gradient stream as the
+/// unsharded `Aggregator` + `ParamStore` pair yields bitwise-identical
+/// final parameters, the same update count and the same K — the invariant
+/// that keeps the paper's sync/async/hybrid comparisons valid under the
+/// sharded parameter server.
+#[test]
+fn prop_sharded_store_matches_unsharded_bitwise() {
+    use hybrid_sgd::coordinator::AdaptiveConfig;
+    check("sharded-equivalence", 60, |g| {
+        let workers = g.usize_in(1, 8);
+        let dim = g.usize_in(1, 48);
+        let policy = match g.rng.below(4) {
+            0 => Policy::Async,
+            1 => Policy::Sync,
+            2 => Policy::Hybrid {
+                schedule: random_schedule(g),
+                strict: g.bool(),
+            },
+            _ => Policy::HybridAdaptive {
+                cfg: AdaptiveConfig {
+                    window: g.usize_in(2, 40),
+                    ..Default::default()
+                },
+                strict: false,
+            },
+        };
+        let lr = 0.05f32;
+        let init = g.vec_f32(dim, 1.0);
+        let mut reference = Aggregator::new(policy.clone(), dim, workers);
+        let mut ref_ps = ParamStore::new(init.clone(), lr);
+        let mut sharded: Vec<ShardedAggregator> = [1usize, 2, 4]
+            .iter()
+            .map(|&s| ShardedAggregator::new(policy.clone(), &init, lr, workers, s))
+            .collect();
+
+        let n = g.usize_in(1, 250);
+        for _ in 0..n {
+            let grad = g.vec_f32(dim, 1.0);
+            let worker = g.usize_in(0, workers - 1);
+            let loss = g.f64_in(0.0, 4.0) as f32;
+            let v = ref_ps.version();
+            let out_ref = reference.on_gradient(&mut ref_ps, &grad, worker, v, loss);
+            for m in sharded.iter_mut() {
+                prop_assert!(m.version() == v, "{policy}: version drifted");
+                let out = m.on_gradient(&grad, worker, v, loss);
+                prop_assert!(
+                    out == out_ref,
+                    "{policy}: outcome diverged ({out:?} vs {out_ref:?})"
+                );
+                prop_assert!(
+                    m.current_k() == reference.current_k(),
+                    "{policy}: K diverged"
+                );
+            }
+        }
+        reference.drain(&mut ref_ps);
+        for (m, s) in sharded.iter_mut().zip([1usize, 2, 4]) {
+            m.drain();
+            prop_assert!(
+                m.version() == ref_ps.version(),
+                "{policy} S={s}: update count {} != {}",
+                m.version(),
+                ref_ps.version()
+            );
+            let params = m.final_params();
+            prop_assert!(
+                params == ref_ps.theta(),
+                "{policy} S={s}: final params not bitwise identical"
+            );
+        }
         Ok(())
     });
 }

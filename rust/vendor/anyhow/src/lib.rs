@@ -1,0 +1,189 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container image carries no crates.io registry, so this path
+//! dependency implements exactly the subset of `anyhow` the workspace uses:
+//! [`Result`], [`Error`] (with `?`-conversion from any std error type),
+//! and the `anyhow!` / `bail!` / `ensure!` macros in their
+//! format-string forms. Swapping this for the real crate is a one-line
+//! change in `rust/Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaultable error type, like anyhow's.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed dynamic error. Deliberately does **not** implement
+/// `std::error::Error` so the blanket `From<E>` below cannot overlap the
+/// reflexive `From<Error> for Error`.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+
+    /// The root cause chain, starting at this error.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain {
+            next: Some(self.0.as_ref()),
+        }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)?;
+        // `{:#}` renders the source chain inline, like anyhow.
+        if f.alternate() {
+            let mut source = self.0.source();
+            while let Some(cause) = source {
+                write!(f, ": {cause}")?;
+                source = cause.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+/// Iterator over an error's cause chain (subset of anyhow's `Chain`).
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let current = self.next?;
+        self.next = current.source();
+        Some(current)
+    }
+}
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display> StdError for MessageError<M> {}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    fn checked(n: usize) -> Result<usize> {
+        ensure!(n < 10, "n too big: {n}");
+        if n == 7 {
+            bail!("seven is right out");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format_messages() {
+        let e = anyhow!("bad value `{}`", 42);
+        assert_eq!(e.to_string(), "bad value `42`");
+        assert_eq!(checked(3).unwrap(), 3);
+        assert!(checked(12).unwrap_err().to_string().contains("too big"));
+        assert!(checked(7).unwrap_err().to_string().contains("seven"));
+    }
+
+    #[test]
+    fn alternate_display_and_debug_render() {
+        let e = anyhow!("top level");
+        assert_eq!(format!("{e:#}"), "top level");
+        assert!(format!("{e:?}").contains("top level"));
+        assert_eq!(e.chain().count(), 1);
+    }
+}

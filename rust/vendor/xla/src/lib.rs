@@ -1,0 +1,143 @@
+//! Offline API stub for the `xla` (PJRT) crate.
+//!
+//! The offline image cannot carry the real PJRT dependency closure, so this
+//! stub mirrors the API surface `hybrid-sgd`'s runtime layer compiles
+//! against and fails at *runtime* with a clear message. A deployment with
+//! the real crate replaces the `xla` path dependency in `rust/Cargo.toml`;
+//! no source changes are needed.
+
+// Stub types are deliberately never constructed on the offline path.
+#![allow(dead_code)]
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Error type mirroring the real crate's (Display + std::error::Error).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (built against the offline `xla` \
+         stub; swap rust/vendor/xla for the real crate to run AOT artifacts)"
+    ))
+}
+
+/// Element types the runtime layer allocates literals for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Parsed HLO module (stub: parsing always fails — no artifacts offline).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parse HLO `{path}`")))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. `Rc` keeps the stub `!Send`, matching the real
+/// crate's threading contract (engines are built inside worker threads).
+pub struct PjRtClient(Rc<()>);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("create PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile executable"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(Rc<()>);
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// Device buffer returned by `execute`.
+pub struct PjRtBuffer(Rc<()>);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("download buffer"))
+    }
+}
+
+/// Host literal (input/output tensor).
+pub struct Literal {
+    len: usize,
+}
+
+impl Literal {
+    pub fn create_from_shape(_ty: PrimitiveType, dims: &[usize]) -> Literal {
+        Literal {
+            len: dims.iter().product(),
+        }
+    }
+
+    pub fn copy_raw_from<T: Copy>(&mut self, src: &[T]) -> Result<()> {
+        let _ = src;
+        Err(unavailable("upload literal"))
+    }
+
+    pub fn copy_raw_to<T: Copy>(&self, dst: &mut [T]) -> Result<()> {
+        let _ = dst;
+        Err(unavailable("download literal"))
+    }
+
+    pub fn get_first_element<T: Copy + Default>(&self) -> Result<T> {
+        Err(unavailable("read literal element"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("destructure 1-tuple"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("destructure 2-tuple"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_clear_errors() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline `xla` stub"));
+        let lit = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(lit.element_count(), 6);
+    }
+}
