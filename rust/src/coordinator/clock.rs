@@ -1,0 +1,133 @@
+//! Time as a capability: the [`Clock`] trait and its two implementations.
+//!
+//! Every coordinator layer that needs "what time is it?" or "wait this long"
+//! (the trainer's budget loop, the shard servers' trace throttling, the
+//! workers' delay/compute-floor pacing) takes a `&dyn Clock` instead of
+//! calling `Instant::now()` / `thread::sleep` directly:
+//!
+//! - [`RealClock`] — wall time anchored at run start; `sleep` blocks the
+//!   calling thread. The threaded trainer uses this.
+//! - [`VirtualClock`] — a shared nanosecond counter owned by the
+//!   discrete-event simulator ([`super::sim`]); `now` reads it and `sleep`
+//!   *advances* it, so simulated components experience the passage of time
+//!   without any wall-clock wait. The event loop is the only writer via
+//!   [`VirtualClock::set`], which keeps virtual time monotone because the
+//!   event queue pops in non-decreasing time order.
+//!
+//! All timestamps are [`Duration`]s since run start — a value both clock
+//! kinds can produce exactly, unlike `Instant`, which has no meaning in
+//! virtual time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A source of run-relative time plus the ability to wait.
+pub trait Clock: Send + Sync {
+    /// Time elapsed since the run started.
+    fn now(&self) -> Duration;
+
+    /// Wait for `d`: blocks the thread (real) or advances time (virtual).
+    fn sleep(&self, d: Duration);
+}
+
+/// Wall-clock time anchored at construction.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    /// Anchor a new clock at the current instant.
+    pub fn start() -> RealClock {
+        RealClock {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Simulated time: a shared nanosecond counter advanced by the event loop
+/// (or by `sleep` when a simulated component waits explicitly).
+///
+/// Nanosecond `u64` resolution covers ~584 years of virtual time — far
+/// beyond any scenario — and makes every timestamp exactly representable,
+/// which the bitwise-reproducibility guarantee relies on.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    /// A clock at t = 0.
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Jump to an absolute time (the event loop calls this with each popped
+    /// event's timestamp; event-queue ordering keeps it monotone).
+    pub fn set(&self, t: Duration) {
+        self.nanos.store(t.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Advance by a relative amount.
+    pub fn advance(&self, d: Duration) {
+        self.nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_advances_and_sleeps() {
+        let c = RealClock::start();
+        let t0 = c.now();
+        c.sleep(Duration::from_millis(5));
+        assert!(c.now() >= t0 + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn virtual_clock_is_free() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.set(Duration::from_secs(5));
+        assert_eq!(c.now(), Duration::from_secs(5));
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now(), Duration::from_millis(5250));
+        // sleep advances instead of blocking
+        let wall = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert!(wall.elapsed() < Duration::from_secs(1));
+        assert_eq!(c.now(), Duration::from_millis(3_605_250));
+    }
+
+    #[test]
+    fn dyn_clock_is_object_safe() {
+        let real = RealClock::start();
+        let virt = VirtualClock::new();
+        let clocks: [&dyn Clock; 2] = [&real, &virt];
+        for c in clocks {
+            let _ = c.now();
+        }
+    }
+}

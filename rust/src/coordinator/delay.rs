@@ -6,6 +6,14 @@
 //! a mean of 0 and a standard deviation of 0.25 during each gradient
 //! calculated by the worker." Negative draws are clamped to zero (a delay
 //! cannot be negative), matching the only sane reading.
+//!
+//! Determinism: the model owns no randomness and no timing. Which workers
+//! are affected and every per-gradient draw come from the *injected*
+//! `Pcg64` stream (the trainer derives it from `TrainConfig::seed`; seed
+//! derivations are documented in EXPERIMENTS.md), and the *wait* itself is
+//! served by the injected [`super::clock::Clock`] — wall sleep under the
+//! real clock, pure time advancement under the virtual one — so a §6-style
+//! delay experiment replays identically from its seed.
 
 use crate::util::rng::Pcg64;
 use std::time::Duration;
@@ -58,11 +66,16 @@ impl DelayModel {
 
     /// Sample the delay for one gradient computation of an affected worker.
     pub fn sample(&self, rng: &mut Pcg64) -> Duration {
+        Duration::from_secs_f64(self.sample_secs(rng))
+    }
+
+    /// Same draw in raw seconds — the virtual-time simulator composes the
+    /// value into event timestamps instead of sleeping it.
+    pub fn sample_secs(&self, rng: &mut Pcg64) -> f64 {
         if self.std == 0.0 && self.mean <= 0.0 {
-            return Duration::ZERO;
+            return 0.0;
         }
-        let secs = rng.normal_ms(self.mean, self.std).max(0.0);
-        Duration::from_secs_f64(secs)
+        rng.normal_ms(self.mean, self.std).max(0.0)
     }
 }
 
@@ -105,6 +118,16 @@ mod tests {
         assert!((frac0 - 0.5).abs() < 0.03, "zero fraction {frac0}");
         let mean = sum / n as f64;
         assert!((mean - 0.0997).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn sample_and_sample_secs_agree() {
+        let m = DelayModel::paper_default();
+        let mut a = Pcg64::seeded(7);
+        let mut b = Pcg64::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(m.sample(&mut a), Duration::from_secs_f64(m.sample_secs(&mut b)));
+        }
     }
 
     #[test]

@@ -36,6 +36,29 @@ pub struct RunMetrics {
     pub per_shard_updates: Vec<u64>,
 }
 
+/// Equality is exact — *bitwise* on every float (via [`Series`]'s bitwise
+/// comparison and `f64::to_bits` on the scalars), so `NaN == NaN` and even
+/// diverging runs replay-compare equal. The virtual-time simulator's
+/// reproducibility guarantee is stated as "identical `RunMetrics` for
+/// identical (seed, scenario)" and tested with plain `assert_eq!`.
+impl PartialEq for RunMetrics {
+    fn eq(&self, other: &Self) -> bool {
+        self.train_loss == other.train_loss
+            && self.test_loss == other.test_loss
+            && self.test_acc == other.test_acc
+            && self.k_trajectory == other.k_trajectory
+            && self.version_trajectory == other.version_trajectory
+            && self.gradients_total == other.gradients_total
+            && self.updates_total == other.updates_total
+            && self.flushes == other.flushes
+            && self.mean_staleness.to_bits() == other.mean_staleness.to_bits()
+            && self.wall_time.to_bits() == other.wall_time.to_bits()
+            && self.per_worker_grads == other.per_worker_grads
+            && self.shards == other.shards
+            && self.per_shard_updates == other.per_shard_updates
+    }
+}
+
 impl RunMetrics {
     /// Gradient throughput over the whole run.
     pub fn grads_per_sec(&self) -> f64 {

@@ -10,14 +10,20 @@
 //! - [`shard`] — contiguous θ sharding and the pure sharded state machine
 //!   (`S = 1` reproduces the unsharded semantics bitwise).
 //! - [`delay`] — the paper's worker-heterogeneity injection model.
+//! - [`clock`] — time as a capability: real + virtual clocks behind one
+//!   trait, threaded through every layer that paces or timestamps.
 //! - [`server`] / [`worker`] — the threaded sharded parameter-server
 //!   protocol (one server thread per shard, O(1) version-token replies).
 //! - [`trainer`] — one-call orchestration of a full training run.
+//! - [`sim`] — the deterministic virtual-time simulator: the same
+//!   pipeline single-threaded over an event queue, with fault injection
+//!   (crashes, stragglers, message loss, shard stalls) and a scenario DSL.
 //! - [`metrics`] — metric time series and run summaries.
 
 pub mod adaptive;
 pub mod buffer;
 pub mod checkpoint;
+pub mod clock;
 pub mod compress;
 pub mod delay;
 pub mod metrics;
@@ -25,15 +31,18 @@ pub mod params;
 pub mod policy;
 pub mod server;
 pub mod shard;
+pub mod sim;
 pub mod threshold;
 pub mod trainer;
 pub mod worker;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveController};
+pub use clock::{Clock, RealClock, VirtualClock};
 pub use delay::DelayModel;
 pub use metrics::RunMetrics;
 pub use params::{ParamSnapshot, SnapshotCell};
 pub use policy::{Aggregator, Outcome, Policy};
 pub use shard::{ShardLayout, ShardedAggregator};
+pub use sim::{simulate, FaultPlan, FaultSpec, Scenario, Simulation};
 pub use threshold::Schedule;
 pub use trainer::{train, EvalSet, RunInputs, TrainConfig};

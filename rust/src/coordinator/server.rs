@@ -25,6 +25,7 @@
 //! only the shard slices whose version actually changed. While θ is frozen
 //! (hybrid buffering) the reply is `Unchanged` and nobody copies anything.
 
+use super::clock::Clock;
 use super::metrics::RunMetrics;
 use super::params::{ParamStore, SnapshotCell};
 use super::policy::{Aggregator, Outcome, Policy};
@@ -34,7 +35,7 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A gradient submission to one shard. The full-dim gradient buffer is
 /// shared across all shard messages of one submission; each shard reads its
@@ -146,8 +147,9 @@ pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> Ser
 ///
 /// Call on a dedicated thread. `range` is this shard's slice of the flat θ,
 /// `init` the corresponding initial values, `reply_txs[i]` worker i's reply
-/// channel (shared with the other shards) and `stop` the trainer's shutdown
-/// flag (used to release barrier-blocked workers so they can observe it).
+/// channel (shared with the other shards), `stop` the trainer's shutdown
+/// flag (used to release barrier-blocked workers so they can observe it)
+/// and `clock` the run clock trace timestamps are read from.
 #[allow(clippy::too_many_arguments)]
 pub fn run_shard(
     shard: usize,
@@ -158,7 +160,7 @@ pub fn run_shard(
     grad_rx: Receiver<ShardMsg>,
     reply_txs: Vec<Sender<Reply>>,
     stop: &AtomicBool,
-    start: Instant,
+    clock: &dyn Clock,
 ) -> ShardReport {
     debug_assert_eq!(init.len(), range.len());
     let mut store = ParamStore::with_cell(init, cfg.lr, cell);
@@ -171,7 +173,8 @@ pub fn run_shard(
     let mut per_worker = vec![0u64; cfg.workers];
     let mut k_traj = crate::util::stats::Series::new();
     let mut v_traj = crate::util::stats::Series::new();
-    let mut last_trace = Instant::now() - cfg.trace_interval;
+    // `None` = no trace yet, so the first arrival always records one.
+    let mut last_trace: Option<Duration> = None;
     let mut released_on_stop = false;
 
     loop {
@@ -221,12 +224,13 @@ pub fn run_shard(
                         for w in blocked.drain(..) {
                             send(&reply_txs[w], updated);
                         }
-                        k_traj.push(start.elapsed().as_secs_f64(), agg.current_k() as f64);
+                        k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
                     }
                 }
-                if last_trace.elapsed() >= cfg.trace_interval {
-                    last_trace = Instant::now();
-                    v_traj.push(start.elapsed().as_secs_f64(), store.version() as f64);
+                let now = clock.now();
+                if last_trace.map_or(true, |lt| now.saturating_sub(lt) >= cfg.trace_interval) {
+                    last_trace = Some(now);
+                    v_traj.push(now.as_secs_f64(), store.version() as f64);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -248,7 +252,7 @@ pub fn run_shard(
     // Apply whatever is still buffered so no gradient is silently dropped.
     agg.drain(&mut store);
     store.publish();
-    v_traj.push(start.elapsed().as_secs_f64(), store.version() as f64);
+    v_traj.push(clock.now().as_secs_f64(), store.version() as f64);
 
     let stats = &agg.stats;
     ShardReport {
@@ -306,6 +310,7 @@ mod tests {
         }
         drop(gtx);
         let cell = Arc::new(SnapshotCell::new(vec![0.0; 2]));
+        let clock = crate::coordinator::clock::RealClock::start();
         let report = run_shard(
             0,
             0..2,
@@ -315,7 +320,7 @@ mod tests {
             grx,
             rtxs,
             &stop,
-            Instant::now(),
+            &clock,
         );
         let replies: Vec<Vec<Reply>> = rrxs.into_iter().map(|rx| rx.try_iter().collect()).collect();
         (report, replies, cell)
@@ -436,6 +441,7 @@ mod tests {
         let cell = Arc::new(SnapshotCell::new(vec![0.0]));
         let cell2 = Arc::clone(&cell);
         let h = std::thread::spawn(move || {
+            let clock = crate::coordinator::clock::RealClock::start();
             run_shard(
                 0,
                 0..1,
@@ -445,7 +451,7 @@ mod tests {
                 grx,
                 vec![rtx, rtx2],
                 &stop2,
-                Instant::now(),
+                &clock,
             )
         });
         // worker 0 submits and would block forever (worker 1 never arrives)

@@ -1,0 +1,859 @@
+//! The discrete-event simulator: the full PS + workers + evaluator
+//! pipeline, single-threaded in virtual time.
+//!
+//! The simulator reuses the *pure* building blocks the threaded stack is
+//! made of — one [`Aggregator`] + [`ParamStore`] pair per shard, the same
+//! engines and batch sources, the same seed derivations — and replaces
+//! threads and channels with an event queue. Because every state mutation
+//! happens at a totally ordered (time, sequence) point, a run is a pure
+//! function of (scenario, inputs): two runs of the same seed produce
+//! bitwise-identical [`RunMetrics`], which is what converts the paper's
+//! headline comparison (async vs sync vs hybrid under injected delays, §6)
+//! from a flaky minutes-long wall-clock test into a sub-second
+//! deterministic one.
+//!
+//! ## Event-queue ordering guarantees
+//!
+//! Events pop in ascending `(timestamp, sequence)` order, where `sequence`
+//! is a global insertion counter. Consequences:
+//!
+//! 1. Ties in virtual time resolve by insertion order — deterministic and
+//!    FIFO, so a shard processes same-instant arrivals in submission order.
+//! 2. A submission fans out to shards `0..S` with consecutive sequence
+//!    numbers, so every shard observes the *same arrival sequence* (the
+//!    lockstep invariant of DESIGN.md §2.1) even under stalls, which delay
+//!    processing but never reorder it.
+//! 3. Virtual time never goes backwards; the [`VirtualClock`] is advanced
+//!    only by the event loop.
+//!
+//! ## Protocol fidelity
+//!
+//! Per arrival the simulator mirrors `server::run_shard` exactly: the same
+//! `Aggregator::on_gradient` call, the same reply classification
+//! (`AppliedNow`/`Buffered`/`BufferedBlocked`/`Flushed`, including the
+//! stale-submitter refresh rule while buffering), the same blocked-worker
+//! release at flush, and the same end-of-run drain. Workers hold a local θ
+//! copy, refresh only shard slices whose version changed, and start their
+//! next gradient once all `S` shard replies are in — the zero-latency
+//! analogue of the channel protocol.
+
+use super::super::checkpoint::Checkpoint;
+use super::super::clock::{Clock, VirtualClock};
+use super::super::metrics::RunMetrics;
+use super::super::params::ParamStore;
+use super::super::policy::{Aggregator, Outcome};
+use super::super::shard::ShardLayout;
+use super::super::trainer::{eval_on, EvalSet, RunInputs, TrainConfig};
+use super::super::worker::BatchSource;
+use super::fault::{FaultPlan, FaultSpec};
+use super::scenario::Scenario;
+use crate::engine::GradEngine;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Series;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Trace-sampling throttle, matching the threaded `ServerConfig` default.
+const TRACE_INTERVAL: Duration = Duration::from_millis(200);
+
+/// What can happen at a point in virtual time.
+enum Event {
+    /// Worker finishes a gradient (compute + injected delay) and submits.
+    Submit { worker: usize, epoch: u64 },
+    /// One shard's copy of a submission reaches its server.
+    Deliver {
+        shard: usize,
+        worker: usize,
+        /// Worker lifetime the submission belongs to (stale after restart).
+        epoch: u64,
+        /// Duplicated deliveries are ghosts: aggregated by the server (it
+        /// cannot tell), but they produce no worker replies.
+        ghost: bool,
+        base_version: u64,
+        loss: f32,
+        grad: Arc<Vec<f32>>,
+    },
+    /// Fault: the worker dies.
+    Crash { worker: usize },
+    /// Fault: a crashed worker rejoins.
+    Restart { worker: usize },
+    /// The evaluator samples metrics.
+    Eval,
+}
+
+struct Scheduled {
+    at: Duration,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap of events ordered by `(time, insertion sequence)`.
+#[derive(Default)]
+struct EventQueue {
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn push(&mut self, at: Duration, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled {
+            at,
+            seq: self.seq,
+            ev,
+        }));
+    }
+
+    fn next_time(&self) -> Option<Duration> {
+        self.heap.peek().map(|Reverse(s)| s.at)
+    }
+
+    fn pop(&mut self) -> Option<(Duration, Event)> {
+        self.heap.pop().map(|Reverse(s)| (s.at, s.ev))
+    }
+}
+
+/// One simulated shard server: the identical state pair the threaded
+/// `run_shard` owns, plus the blocked-worker list and trace series.
+struct ShardSim {
+    agg: Aggregator,
+    store: ParamStore,
+    /// Workers parked at a barrier, with the epoch of their submission.
+    blocked: Vec<(usize, u64)>,
+    per_worker: Vec<u64>,
+    k_traj: Series,
+    v_traj: Series,
+    last_trace: Option<Duration>,
+}
+
+/// One simulated worker: local θ, per-shard versions, engine + data.
+struct WorkerSim {
+    params: Vec<f32>,
+    versions: Vec<u64>,
+    needs_refresh: Vec<bool>,
+    grad_buf: Vec<f32>,
+    engine: Box<dyn GradEngine>,
+    source: Box<dyn BatchSource>,
+    /// Delay + fault draws; same derivation as the threaded worker:
+    /// `Pcg64::new(seed + 1000 + id, id + 1)`.
+    rng: Pcg64,
+    delayed: bool,
+    crashed: bool,
+    /// Bumped on restart so in-flight events from the previous life are
+    /// ignored.
+    epoch: u64,
+    /// Outstanding shard replies for the current submission.
+    pending: usize,
+}
+
+/// A resumable simulated run. Construct with [`Simulation::new`], advance
+/// with [`Simulation::run_until`] (e.g. to checkpoint mid-run or sample
+/// [`Simulation::current_k`]), and finish with [`Simulation::finish`] —
+/// or use the one-call [`simulate`].
+pub struct Simulation<'a> {
+    train: TrainConfig,
+    grad_time: Duration,
+    faults: FaultPlan,
+    layout: ShardLayout,
+    shards: Vec<ShardSim>,
+    workers: Vec<WorkerSim>,
+    queue: EventQueue,
+    clock: VirtualClock,
+    metrics: RunMetrics,
+    eval_engine: Box<dyn GradEngine>,
+    test: &'a EvalSet,
+    probe: &'a EvalSet,
+    params_buf: Vec<f32>,
+    faults_dropped: u64,
+    faults_duplicated: u64,
+}
+
+impl<'a> Simulation<'a> {
+    /// Build the simulated pipeline: engines and batch sources come from
+    /// the same factories the threaded trainer uses, with the same seed
+    /// derivations (delay assignment from `Pcg64::new(seed, 7)`).
+    pub fn new(scn: &Scenario, inputs: &RunInputs<'a>) -> anyhow::Result<Simulation<'a>> {
+        scn.validate()?;
+        let train = scn.train.clone();
+        let dim = inputs.init_params.len();
+        anyhow::ensure!(dim > 0, "empty initial parameters");
+        let layout = ShardLayout::new(dim, train.shards);
+
+        let mut shards = Vec::with_capacity(layout.shards());
+        for range in layout.ranges() {
+            let mut agg = Aggregator::new(train.policy.clone(), range.len(), train.workers);
+            if let Some(k) = train.k_max {
+                agg = agg.with_k_max(k);
+            }
+            shards.push(ShardSim {
+                agg,
+                store: ParamStore::new(inputs.init_params[range].to_vec(), train.lr),
+                blocked: Vec::new(),
+                per_worker: vec![0; train.workers],
+                k_traj: Series::new(),
+                v_traj: Series::new(),
+                last_trace: None,
+            });
+        }
+
+        let mut assign_rng = Pcg64::new(train.seed, 7);
+        let delayed = train.delay.assign(train.workers, &mut assign_rng);
+        let mut workers = Vec::with_capacity(train.workers);
+        for id in 0..train.workers {
+            let wseed = train.seed.wrapping_add(1000 + id as u64);
+            workers.push(WorkerSim {
+                params: inputs.init_params.to_vec(),
+                versions: vec![0; layout.shards()],
+                needs_refresh: vec![false; layout.shards()],
+                grad_buf: vec![0.0; dim],
+                engine: (inputs.worker_engine)()?,
+                source: (inputs.batch_source)(id),
+                rng: Pcg64::new(wseed, id as u64 + 1),
+                delayed: delayed[id],
+                crashed: false,
+                epoch: 0,
+                pending: 0,
+            });
+        }
+
+        let mut sim = Simulation {
+            grad_time: scn.grad_time,
+            faults: scn.faults.clone(),
+            layout,
+            shards,
+            workers,
+            queue: EventQueue::default(),
+            clock: VirtualClock::new(),
+            metrics: RunMetrics::default(),
+            eval_engine: (inputs.eval_engine)()?,
+            test: inputs.test,
+            probe: inputs.train_probe,
+            params_buf: inputs.init_params.to_vec(),
+            faults_dropped: 0,
+            faults_duplicated: 0,
+            train,
+        };
+
+        // Prime the queue: t=0 metric sample, scheduled faults, and every
+        // worker's first gradient (ready after one iteration time).
+        sim.queue.push(Duration::ZERO, Event::Eval);
+        for spec in sim.faults.specs.clone() {
+            match spec {
+                FaultSpec::Crash { worker, at } => sim.queue.push(at, Event::Crash { worker }),
+                FaultSpec::Restart { worker, at } => {
+                    sim.queue.push(at, Event::Restart { worker })
+                }
+                _ => {}
+            }
+        }
+        for w in 0..sim.train.workers {
+            let d = sim.iter_time(w, Duration::ZERO);
+            sim.queue.push(d, Event::Submit { worker: w, epoch: 0 });
+        }
+        Ok(sim)
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Duration {
+        self.clock.now()
+    }
+
+    /// A [`Clock`] view of the simulated time (read-only for callers).
+    pub fn clock(&self) -> &dyn Clock {
+        &self.clock
+    }
+
+    /// Current threshold of one shard's aggregator.
+    pub fn current_k(&self, shard: usize) -> usize {
+        self.shards[shard].agg.current_k()
+    }
+
+    /// Gradient arrivals one shard has aggregated so far.
+    pub fn arrivals(&self, shard: usize) -> u64 {
+        self.shards[shard].agg.stats.arrivals
+    }
+
+    /// Effective shard count.
+    pub fn shard_count(&self) -> usize {
+        self.layout.shards()
+    }
+
+    /// Submissions lost to injected `drop` faults so far.
+    pub fn faults_dropped(&self) -> u64 {
+        self.faults_dropped
+    }
+
+    /// Submissions duplicated by injected `dup` faults so far.
+    pub fn faults_duplicated(&self) -> u64 {
+        self.faults_duplicated
+    }
+
+    /// Parameter-server version (shard 0; shards agree up to in-flight
+    /// deliveries).
+    pub fn ps_version(&self) -> u64 {
+        self.shards[0].store.version()
+    }
+
+    /// The assembled full-dimension parameter vector at the current virtual
+    /// time (exact: the event loop is quiescent between events, so unlike
+    /// the threaded evaluator this view never mixes versions mid-update).
+    pub fn assembled_params(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.layout.dim());
+        for sh in &self.shards {
+            out.extend_from_slice(sh.store.theta());
+        }
+        out
+    }
+
+    /// Snapshot the current training state as a [`Checkpoint`] (save it
+    /// with `Checkpoint::save`; reading state does not perturb the run).
+    pub fn checkpoint(&self, model: &str) -> Checkpoint {
+        Checkpoint {
+            model: model.to_string(),
+            policy: self.train.policy.to_string(),
+            ps_version: self.ps_version(),
+            shards: self.layout.shards(),
+            params: self.assembled_params(),
+        }
+    }
+
+    /// Advance virtual time to `min(limit, duration)`, processing every
+    /// event scheduled up to and including that instant.
+    pub fn run_until(&mut self, limit: Duration) -> anyhow::Result<()> {
+        let limit = limit.min(self.train.duration);
+        while let Some(at) = self.queue.next_time() {
+            if at > limit {
+                break;
+            }
+            let (at, ev) = self.queue.pop().expect("peeked event vanished");
+            self.clock.set(at);
+            self.handle(ev, at)?;
+        }
+        if self.clock.now() < limit {
+            self.clock.set(limit);
+        }
+        Ok(())
+    }
+
+    /// Run to the end of the virtual budget, drain buffered gradients
+    /// (mirroring the threaded shutdown path) and return the metrics.
+    pub fn finish(mut self) -> anyhow::Result<RunMetrics> {
+        let end = self.train.duration;
+        self.run_until(end)?;
+        let t = end.as_secs_f64();
+        for sh in &mut self.shards {
+            sh.agg.drain(&mut sh.store);
+            sh.v_traj.push(t, sh.store.version() as f64);
+        }
+        // Shard 0 is canonical for the logical counters, exactly as in
+        // `server::merge_reports`.
+        {
+            let sh0 = &mut self.shards[0];
+            self.metrics.updates_total = sh0.store.version();
+            self.metrics.gradients_total = sh0.agg.stats.arrivals;
+            self.metrics.flushes = sh0.agg.stats.flushes;
+            self.metrics.mean_staleness = if sh0.agg.stats.arrivals > 0 {
+                sh0.agg.stats.staleness_sum / sh0.agg.stats.arrivals as f64
+            } else {
+                0.0
+            };
+            self.metrics.per_worker_grads = sh0.per_worker.clone();
+            self.metrics.k_trajectory = std::mem::take(&mut sh0.k_traj);
+            self.metrics.version_trajectory = std::mem::take(&mut sh0.v_traj);
+        }
+        self.metrics.shards = self.layout.shards();
+        self.metrics.per_shard_updates =
+            self.shards.iter().map(|s| s.store.version()).collect();
+        self.sample_metrics(end)?;
+        self.metrics.wall_time = t;
+        Ok(self.metrics)
+    }
+
+    fn handle(&mut self, ev: Event, at: Duration) -> anyhow::Result<()> {
+        match ev {
+            Event::Submit { worker, epoch } => self.handle_submit(worker, epoch, at),
+            Event::Deliver {
+                shard,
+                worker,
+                epoch,
+                ghost,
+                base_version,
+                loss,
+                grad,
+            } => self.handle_deliver(shard, worker, epoch, ghost, base_version, loss, &grad, at),
+            Event::Crash { worker } => {
+                self.workers[worker].crashed = true;
+                Ok(())
+            }
+            Event::Restart { worker } => self.handle_restart(worker, at),
+            Event::Eval => self.handle_eval(at),
+        }
+    }
+
+    /// Iteration time for worker `w` starting at `at`: virtual compute cost
+    /// plus (for affected workers) a seeded delay draw, padded to the
+    /// compute-cost floor, times any active straggler-burst factor.
+    fn iter_time(&mut self, w: usize, at: Duration) -> Duration {
+        let factor = self.faults.slow_factor(w, at);
+        let wk = &mut self.workers[w];
+        let mut secs = self.grad_time.as_secs_f64();
+        if wk.delayed {
+            secs += self.train.delay.sample_secs(&mut wk.rng);
+        }
+        // `compute_floor` pads the whole iteration (compute + delay),
+        // exactly as the threaded worker enforces `min_iter`.
+        secs = secs.max(self.train.compute_floor.as_secs_f64());
+        Duration::from_secs_f64((secs * factor).max(1e-9))
+    }
+
+    fn handle_submit(&mut self, w: usize, epoch: u64, at: Duration) -> anyhow::Result<()> {
+        if self.workers[w].crashed || self.workers[w].epoch != epoch {
+            return Ok(());
+        }
+        // Compute the gradient against the worker's current local θ.
+        let loss = {
+            let wk = &mut self.workers[w];
+            let (x, y) = wk.source.next();
+            match wk.engine.grad(&wk.params, x, y, &mut wk.grad_buf) {
+                Ok(l) => l,
+                Err(e) => {
+                    crate::log_warn!("sim", "worker {w} grad failed: {e:#}");
+                    wk.crashed = true;
+                    return Ok(());
+                }
+            }
+        };
+        // Transport faults, drawn from the worker's seeded stream.
+        // (Server-side per_worker counters are the authoritative per-worker
+        // tally, as in the threaded stack.)
+        let drop_p = self.faults.drop_prob(w, at);
+        if drop_p > 0.0 && self.workers[w].rng.chance(drop_p) {
+            self.faults_dropped += 1;
+            let d = self.iter_time(w, at);
+            self.queue.push(at + d, Event::Submit { worker: w, epoch });
+            return Ok(());
+        }
+        let dup_p = self.faults.dup_prob(w, at);
+        let dup = dup_p > 0.0 && self.workers[w].rng.chance(dup_p);
+        if dup {
+            self.faults_duplicated += 1;
+        }
+
+        // Fan out to every shard (Arc clones of one buffer, like the
+        // threaded worker). Stalled shards receive late but in order.
+        let grad = Arc::new(self.workers[w].grad_buf.clone());
+        self.workers[w].pending = self.layout.shards();
+        for s in 0..self.layout.shards() {
+            let deliver_at = self.faults.deliver_time(s, at);
+            let base_version = self.workers[w].versions[s];
+            self.queue.push(
+                deliver_at,
+                Event::Deliver {
+                    shard: s,
+                    worker: w,
+                    epoch,
+                    ghost: false,
+                    base_version,
+                    loss,
+                    grad: Arc::clone(&grad),
+                },
+            );
+            if dup {
+                self.queue.push(
+                    deliver_at,
+                    Event::Deliver {
+                        shard: s,
+                        worker: w,
+                        epoch,
+                        ghost: true,
+                        base_version,
+                        loss,
+                        grad: Arc::clone(&grad),
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_deliver(
+        &mut self,
+        shard: usize,
+        worker: usize,
+        epoch: u64,
+        ghost: bool,
+        base_version: u64,
+        loss: f32,
+        grad: &Arc<Vec<f32>>,
+        at: Duration,
+    ) -> anyhow::Result<()> {
+        let range = self.layout.range(shard);
+        let t = at.as_secs_f64();
+        // (worker, epoch, parameters-changed) replies this arrival produces.
+        let mut replies: Vec<(usize, u64, bool)> = Vec::new();
+        {
+            let sh = &mut self.shards[shard];
+            sh.per_worker[worker] += 1;
+            let outcome =
+                sh.agg
+                    .on_gradient(&mut sh.store, &grad[range], worker, base_version, loss);
+            let version = sh.store.version();
+            match outcome {
+                Outcome::AppliedNow => {
+                    if !ghost {
+                        replies.push((worker, epoch, true));
+                    }
+                }
+                Outcome::Buffered => {
+                    // θ frozen since the last flush: refresh only a stale
+                    // submitter (same rule as the threaded server).
+                    if !ghost {
+                        replies.push((worker, epoch, base_version != version));
+                    }
+                }
+                Outcome::BufferedBlocked => {
+                    if !ghost {
+                        sh.blocked.push((worker, epoch));
+                    }
+                }
+                Outcome::Flushed { .. } => {
+                    if !ghost {
+                        replies.push((worker, epoch, true));
+                    }
+                    for (bw, be) in sh.blocked.drain(..) {
+                        replies.push((bw, be, true));
+                    }
+                    sh.k_traj.push(t, sh.agg.current_k() as f64);
+                }
+            }
+            if sh
+                .last_trace
+                .map_or(true, |lt| at.saturating_sub(lt) >= TRACE_INTERVAL)
+            {
+                sh.last_trace = Some(at);
+                sh.v_traj.push(t, sh.store.version() as f64);
+            }
+        }
+        let version = self.shards[shard].store.version();
+        for (rw, re, changed) in replies {
+            self.reply(rw, re, shard, changed, version, at)?;
+        }
+        Ok(())
+    }
+
+    /// Deliver one shard reply to a worker; when it is the last outstanding
+    /// reply, refresh changed slices and schedule the next gradient.
+    fn reply(
+        &mut self,
+        w: usize,
+        epoch: u64,
+        shard: usize,
+        changed: bool,
+        version: u64,
+        at: Duration,
+    ) -> anyhow::Result<()> {
+        {
+            let wk = &mut self.workers[w];
+            // Stale replies (crashed or restarted worker) are dropped, like
+            // sends to a disconnected channel in the threaded stack.
+            if wk.crashed || wk.epoch != epoch || wk.pending == 0 {
+                return Ok(());
+            }
+            if changed && version != wk.versions[shard] {
+                wk.needs_refresh[shard] = true;
+            }
+            wk.pending -= 1;
+            if wk.pending > 0 {
+                return Ok(());
+            }
+        }
+        self.refresh_worker(w);
+        let d = self.iter_time(w, at);
+        let epoch = self.workers[w].epoch;
+        self.queue.push(at + d, Event::Submit { worker: w, epoch });
+        Ok(())
+    }
+
+    /// Copy every flagged shard slice from its store into the worker's
+    /// local θ (the snapshot-cell refresh, without the cells).
+    fn refresh_worker(&mut self, w: usize) {
+        let Simulation {
+            workers,
+            shards,
+            layout,
+            ..
+        } = self;
+        let wk = &mut workers[w];
+        for (s, r) in layout.ranges().enumerate() {
+            if wk.needs_refresh[s] {
+                let store = &shards[s].store;
+                wk.params[r].copy_from_slice(store.theta());
+                wk.versions[s] = store.version();
+                wk.needs_refresh[s] = false;
+            }
+        }
+    }
+
+    fn handle_restart(&mut self, w: usize, at: Duration) -> anyhow::Result<()> {
+        {
+            let wk = &mut self.workers[w];
+            if !wk.crashed {
+                return Ok(()); // restart of a live worker is a no-op
+            }
+            wk.crashed = false;
+            wk.epoch += 1;
+            wk.pending = 0;
+            // A rejoining worker pulls the complete current θ.
+            for f in wk.needs_refresh.iter_mut() {
+                *f = true;
+            }
+        }
+        self.refresh_worker(w);
+        let d = self.iter_time(w, at);
+        let epoch = self.workers[w].epoch;
+        self.queue.push(at + d, Event::Submit { worker: w, epoch });
+        Ok(())
+    }
+
+    fn handle_eval(&mut self, at: Duration) -> anyhow::Result<()> {
+        self.sample_metrics(at)?;
+        let next = at + self.train.eval_interval;
+        if next < self.train.duration {
+            self.queue.push(next, Event::Eval);
+        }
+        Ok(())
+    }
+
+    fn sample_metrics(&mut self, at: Duration) -> anyhow::Result<()> {
+        let Simulation {
+            shards,
+            layout,
+            eval_engine,
+            params_buf,
+            test,
+            probe,
+            metrics,
+            ..
+        } = self;
+        for (s, r) in layout.ranges().enumerate() {
+            params_buf[r].copy_from_slice(shards[s].store.theta());
+        }
+        let t = at.as_secs_f64();
+        let (test_loss, test_acc) = eval_on(eval_engine.as_mut(), params_buf, *test)?;
+        let (train_loss, _) = eval_on(eval_engine.as_mut(), params_buf, *probe)?;
+        metrics.test_loss.push(t, test_loss);
+        metrics.test_acc.push(t, test_acc * 100.0);
+        metrics.train_loss.push(t, train_loss);
+        Ok(())
+    }
+}
+
+/// Run one scenario to completion and return its metrics. Bitwise
+/// deterministic: identical (scenario, inputs) ⇒ identical result.
+pub fn simulate(scn: &Scenario, inputs: &RunInputs) -> anyhow::Result<RunMetrics> {
+    Simulation::new(scn, inputs)?.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::factory;
+    use crate::native::QuadraticEngine;
+
+    /// Batch source for engines that ignore their data.
+    struct NullSource;
+    impl BatchSource for NullSource {
+        fn next(&mut self) -> (&[f32], &[i32]) {
+            (&[], &[])
+        }
+    }
+
+    fn quad_inputs<'a>(
+        init: &'a [f32],
+        eval: &'a EvalSet,
+        target: Vec<f32>,
+    ) -> RunInputs<'a> {
+        let t2 = target.clone();
+        RunInputs {
+            worker_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(target.clone(), 1, 0.0, 0))
+                    as Box<dyn GradEngine>)
+            }),
+            eval_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(t2.clone(), 1, 0.0, 0)) as Box<dyn GradEngine>)
+            }),
+            batch_source: Arc::new(|_| Box::new(NullSource) as Box<dyn BatchSource>),
+            init_params: init,
+            test: eval,
+            train_probe: eval,
+        }
+    }
+
+    fn quad_eval_set() -> EvalSet {
+        EvalSet {
+            x: vec![0.0],
+            y: vec![0],
+            n: 1,
+            x_dim: 1,
+            y_dim: 1,
+        }
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_insertion() {
+        let mut q = EventQueue::default();
+        q.push(Duration::from_secs(2), Event::Eval);
+        q.push(Duration::from_secs(1), Event::Crash { worker: 0 });
+        q.push(Duration::from_secs(1), Event::Crash { worker: 1 });
+        q.push(Duration::from_secs(1), Event::Crash { worker: 2 });
+        let mut order = Vec::new();
+        while let Some((at, ev)) = q.pop() {
+            match ev {
+                Event::Crash { worker } => order.push((at.as_secs(), worker)),
+                Event::Eval => order.push((at.as_secs(), 99)),
+                _ => unreachable!(),
+            }
+        }
+        // same-time events pop in insertion order; later times last
+        assert_eq!(order, vec![(1, 0), (1, 1), (1, 2), (2, 99)]);
+    }
+
+    #[test]
+    fn async_sim_counts_and_converges() {
+        let init = vec![0.0f32; 6];
+        let eval = quad_eval_set();
+        let target = vec![2.0f32; 6];
+        let inputs = quad_inputs(&init, &eval, target.clone());
+        let scn = Scenario::parse("workers=3 policy=async secs=2 grad-ms=10 lr=0.2").unwrap();
+        let m = simulate(&scn, &inputs).unwrap();
+        // 3 workers × (2 s / 10 ms) iterations, minus in-flight tails
+        assert!(m.gradients_total > 500, "{} grads", m.gradients_total);
+        assert_eq!(m.updates_total, m.gradients_total);
+        assert_eq!(m.shards, 1);
+        assert_eq!(m.per_worker_grads.len(), 3);
+        // converged to the bowl target
+        let final_loss = *m.test_loss.v.last().unwrap();
+        assert!(final_loss < 1e-3, "loss {final_loss}");
+        assert_eq!(m.wall_time, 2.0);
+    }
+
+    #[test]
+    fn sync_sim_barriers_like_the_threaded_server() {
+        let init = vec![0.0f32; 4];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 4]);
+        let scn = Scenario::parse("workers=4 policy=sync secs=1 grad-ms=10").unwrap();
+        let m = simulate(&scn, &inputs).unwrap();
+        // every flush needs all 4 workers, and each flush is one update
+        assert!(m.flushes > 10, "{} flushes", m.flushes);
+        assert_eq!(m.updates_total, m.flushes);
+        assert!(
+            m.gradients_total >= 4 * (m.flushes - 1),
+            "{} grads for {} flushes",
+            m.gradients_total,
+            m.flushes
+        );
+        assert!(m.updates_total <= m.gradients_total / 4 + 1);
+    }
+
+    #[test]
+    fn hybrid_sim_flushes_and_k_monotone() {
+        let init = vec![0.0f32; 8];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 8]);
+        let scn =
+            Scenario::parse("workers=4 policy=hybrid:step:30 secs=2 grad-ms=10").unwrap();
+        let m = simulate(&scn, &inputs).unwrap();
+        assert!(m.flushes > 0);
+        for w in m.k_trajectory.v.windows(2) {
+            assert!(w[1] >= w[0], "K reverted: {:?}", m.k_trajectory.v);
+        }
+    }
+
+    #[test]
+    fn sharded_sim_stays_in_lockstep() {
+        let init: Vec<f32> = (0..10).map(|i| i as f32 * 0.1).collect();
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 10]);
+        for spec in [
+            "workers=3 shards=3 policy=async secs=1 grad-ms=10",
+            "workers=3 shards=3 policy=sync secs=1 grad-ms=10",
+            "workers=3 shards=3 policy=hybrid:step:25 secs=1 grad-ms=10",
+        ] {
+            let scn = Scenario::parse(spec).unwrap();
+            let m = simulate(&scn, &inputs).unwrap();
+            assert_eq!(m.shards, 3);
+            assert_eq!(m.per_shard_updates.len(), 3);
+            let (min, max) = (
+                *m.per_shard_updates.iter().min().unwrap(),
+                *m.per_shard_updates.iter().max().unwrap(),
+            );
+            assert_eq!(min, max, "{spec}: shards diverged {:?}", m.per_shard_updates);
+        }
+    }
+
+    #[test]
+    fn crash_stops_and_restart_resumes_contribution() {
+        let init = vec![0.0f32; 4];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 4]);
+        let crash_only =
+            Scenario::parse("workers=2 policy=async secs=2 grad-ms=10 faults=crash:0@1").unwrap();
+        let m = simulate(&crash_only, &inputs).unwrap();
+        // worker 0 contributed for ~half the run, worker 1 throughout
+        assert!(m.per_worker_grads[0] < m.per_worker_grads[1]);
+        assert!(m.per_worker_grads[0] > 0);
+
+        let with_restart = Scenario::parse(
+            "workers=2 policy=async secs=2 grad-ms=10 faults=crash:0@1,restart:0@1.5",
+        )
+        .unwrap();
+        let r = simulate(&with_restart, &inputs).unwrap();
+        assert!(
+            r.per_worker_grads[0] > m.per_worker_grads[0],
+            "restart did not resume: {} vs {}",
+            r.per_worker_grads[0],
+            m.per_worker_grads[0]
+        );
+    }
+
+    #[test]
+    fn quiescent_params_match_metrics_view() {
+        let init = vec![0.5f32; 5];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 5]);
+        let scn = Scenario::parse("workers=2 shards=2 policy=async secs=1 grad-ms=20").unwrap();
+        let mut sim = Simulation::new(&scn, &inputs).unwrap();
+        sim.run_until(Duration::from_millis(500)).unwrap();
+        assert_eq!(sim.now(), Duration::from_millis(500));
+        let p = sim.assembled_params();
+        assert_eq!(p.len(), 5);
+        let ck = sim.checkpoint("quad");
+        assert_eq!(ck.params, p);
+        assert_eq!(ck.shards, 2);
+        assert_eq!(ck.ps_version, sim.ps_version());
+        // reading state must not perturb the run
+        let m = sim.finish().unwrap();
+        assert!(m.gradients_total > 0);
+    }
+}

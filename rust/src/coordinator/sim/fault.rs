@@ -1,0 +1,492 @@
+//! Fault specifications for simulated runs.
+//!
+//! A [`FaultPlan`] is a list of [`FaultSpec`] clauses parsed from a compact
+//! text encoding (one clause per comma-separated segment):
+//!
+//! | clause                | meaning                                              |
+//! |-----------------------|------------------------------------------------------|
+//! | `crash:W@T`           | worker `W` dies at `T` seconds                       |
+//! | `restart:W@T`         | worker `W` comes back at `T` (fresh θ from the PS)   |
+//! | `slow:W@T1..T2*F`     | straggler burst: `W` runs `F`× slower in `[T1, T2)`  |
+//! | `drop:W@T1..T2:P`     | each submission of `W` in the window is lost w.p. `P`|
+//! | `dup:W@T1..T2:P`      | each submission is delivered twice w.p. `P`          |
+//! | `stall:S@T1..T2`      | shard server `S` stalls; arrivals queue until `T2`   |
+//!
+//! `W` may be `*` (every worker). Times are seconds with an optional `s`
+//! suffix (`5`, `5s`, `1.5`). Example:
+//! `crash:3@5s,stall:0@1..1.5,slow:*@2..4*8`.
+//!
+//! Semantics notes (mirrored in DESIGN.md §2.4):
+//! - *Drop* loses the whole fan-out of one submission — every shard misses
+//!   it, never a subset — modelling a lost worker→PS message. The worker
+//!   moves on after its normal iteration time (send-and-forget transport).
+//! - *Duplicate* delivers the identical fan-out twice to every shard
+//!   (at-least-once transport); the ghost copy generates no worker replies.
+//! - *Stall* delays shard processing but preserves per-shard FIFO order, so
+//!   every shard still observes the same arrival sequence (the lockstep
+//!   invariant of DESIGN.md §2.1 survives every fault type).
+//! - Probabilistic clauses draw from the *worker's* seeded RNG stream, so a
+//!   fault scenario replays bit-identically from its seed.
+
+use std::time::Duration;
+
+/// One fault clause. Windows are half-open `[from, until)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Worker dies at `at`: no further submissions (under sync, the barrier
+    /// starves — deliberately observable).
+    Crash { worker: usize, at: Duration },
+    /// A crashed worker rejoins at `at` with parameters refreshed from the
+    /// current shard stores.
+    Restart { worker: usize, at: Duration },
+    /// Straggler burst: iteration time multiplied by `factor` inside the
+    /// window. `worker == None` affects every worker.
+    Slow {
+        worker: Option<usize>,
+        from: Duration,
+        until: Duration,
+        factor: f64,
+    },
+    /// Submissions inside the window are dropped with probability `prob`.
+    Drop {
+        worker: Option<usize>,
+        from: Duration,
+        until: Duration,
+        prob: f64,
+    },
+    /// Submissions inside the window are duplicated with probability `prob`.
+    Duplicate {
+        worker: Option<usize>,
+        from: Duration,
+        until: Duration,
+        prob: f64,
+    },
+    /// Shard server `shard` is unresponsive inside the window; arrivals are
+    /// processed at `until` in arrival order.
+    Stall {
+        shard: usize,
+        from: Duration,
+        until: Duration,
+    },
+}
+
+fn parse_secs(s: &str) -> anyhow::Result<Duration> {
+    let s = s.strip_suffix('s').unwrap_or(s);
+    let v: f64 = s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad time `{s}` (seconds, e.g. `5` or `1.5s`)"))?;
+    anyhow::ensure!(v >= 0.0 && v.is_finite(), "time `{s}` must be >= 0");
+    Ok(Duration::from_secs_f64(v))
+}
+
+fn parse_who(s: &str) -> anyhow::Result<Option<usize>> {
+    if s == "*" {
+        return Ok(None);
+    }
+    Ok(Some(s.parse().map_err(|_| {
+        anyhow::anyhow!("bad worker id `{s}` (index or `*`)")
+    })?))
+}
+
+/// Parse `T1..T2` into a non-empty half-open window.
+fn parse_window(s: &str) -> anyhow::Result<(Duration, Duration)> {
+    let (a, b) = s
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("bad window `{s}` (expected `T1..T2`)"))?;
+    let (from, until) = (parse_secs(a)?, parse_secs(b)?);
+    anyhow::ensure!(from < until, "empty window `{s}`");
+    Ok((from, until))
+}
+
+fn fmt_secs(d: &Duration) -> String {
+    format!("{}", d.as_secs_f64())
+}
+
+fn fmt_who(w: &Option<usize>) -> String {
+    match w {
+        Some(i) => i.to_string(),
+        None => "*".to_string(),
+    }
+}
+
+impl FaultSpec {
+    /// Parse one clause (see the module docs for the grammar).
+    pub fn parse(s: &str) -> anyhow::Result<FaultSpec> {
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad fault clause `{s}` (expected `kind:...`)"))?;
+        let err = || anyhow::anyhow!("bad fault clause `{s}`");
+        match kind {
+            "crash" | "restart" => {
+                let (who, at) = rest.split_once('@').ok_or_else(err)?;
+                let worker = parse_who(who)?
+                    .ok_or_else(|| anyhow::anyhow!("`{kind}` needs a concrete worker id"))?;
+                let at = parse_secs(at)?;
+                Ok(if kind == "crash" {
+                    FaultSpec::Crash { worker, at }
+                } else {
+                    FaultSpec::Restart { worker, at }
+                })
+            }
+            "slow" => {
+                let (who, rest) = rest.split_once('@').ok_or_else(err)?;
+                let (window, factor) = rest.rsplit_once('*').ok_or_else(err)?;
+                let worker = parse_who(who)?;
+                let (from, until) = parse_window(window)?;
+                let factor: f64 = factor.parse().map_err(|_| err())?;
+                anyhow::ensure!(
+                    factor > 0.0 && factor.is_finite(),
+                    "slow factor must be > 0, got `{factor}`"
+                );
+                Ok(FaultSpec::Slow {
+                    worker,
+                    from,
+                    until,
+                    factor,
+                })
+            }
+            "drop" | "dup" => {
+                let (who, rest) = rest.split_once('@').ok_or_else(err)?;
+                let (window, prob) = rest.rsplit_once(':').ok_or_else(err)?;
+                let worker = parse_who(who)?;
+                let (from, until) = parse_window(window)?;
+                let prob: f64 = prob.parse().map_err(|_| err())?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&prob),
+                    "probability must be in [0, 1], got `{prob}`"
+                );
+                Ok(if kind == "drop" {
+                    FaultSpec::Drop {
+                        worker,
+                        from,
+                        until,
+                        prob,
+                    }
+                } else {
+                    FaultSpec::Duplicate {
+                        worker,
+                        from,
+                        until,
+                        prob,
+                    }
+                })
+            }
+            "stall" => {
+                let (who, window) = rest.split_once('@').ok_or_else(err)?;
+                let shard: usize = who.parse().map_err(|_| err())?;
+                let (from, until) = parse_window(window)?;
+                Ok(FaultSpec::Stall { shard, from, until })
+            }
+            _ => anyhow::bail!(
+                "unknown fault kind `{kind}` (crash | restart | slow | drop | dup | stall)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultSpec::Crash { worker, at } => write!(f, "crash:{worker}@{}", fmt_secs(at)),
+            FaultSpec::Restart { worker, at } => write!(f, "restart:{worker}@{}", fmt_secs(at)),
+            FaultSpec::Slow {
+                worker,
+                from,
+                until,
+                factor,
+            } => write!(
+                f,
+                "slow:{}@{}..{}*{factor}",
+                fmt_who(worker),
+                fmt_secs(from),
+                fmt_secs(until)
+            ),
+            FaultSpec::Drop {
+                worker,
+                from,
+                until,
+                prob,
+            } => write!(
+                f,
+                "drop:{}@{}..{}:{prob}",
+                fmt_who(worker),
+                fmt_secs(from),
+                fmt_secs(until)
+            ),
+            FaultSpec::Duplicate {
+                worker,
+                from,
+                until,
+                prob,
+            } => write!(
+                f,
+                "dup:{}@{}..{}:{prob}",
+                fmt_who(worker),
+                fmt_secs(from),
+                fmt_secs(until)
+            ),
+            FaultSpec::Stall { shard, from, until } => {
+                write!(f, "stall:{shard}@{}..{}", fmt_secs(from), fmt_secs(until))
+            }
+        }
+    }
+}
+
+/// An ordered set of fault clauses plus the query helpers the event loop
+/// uses. Clause order is irrelevant to semantics (queries combine all
+/// matching clauses) but preserved for display.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated clause list; empty/whitespace input is the
+    /// empty plan.
+    pub fn parse(s: &str) -> anyhow::Result<FaultPlan> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(FaultPlan::default());
+        }
+        let specs = s
+            .split(',')
+            .map(|c| FaultSpec::parse(c.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(FaultPlan { specs })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    fn hits(who: &Option<usize>, worker: usize) -> bool {
+        who.map_or(true, |w| w == worker)
+    }
+
+    fn in_window(at: Duration, from: Duration, until: Duration) -> bool {
+        at >= from && at < until
+    }
+
+    /// Combined slowdown factor for `worker` at time `at` (product of all
+    /// active `slow` clauses; 1.0 = no burst).
+    pub fn slow_factor(&self, worker: usize, at: Duration) -> f64 {
+        let mut f = 1.0;
+        for s in &self.specs {
+            if let FaultSpec::Slow {
+                worker: who,
+                from,
+                until,
+                factor,
+            } = s
+            {
+                if Self::hits(who, worker) && Self::in_window(at, *from, *until) {
+                    f *= factor;
+                }
+            }
+        }
+        f
+    }
+
+    /// Probability that a submission of `worker` at `at` is dropped (max of
+    /// the active clauses).
+    pub fn drop_prob(&self, worker: usize, at: Duration) -> f64 {
+        let mut p: f64 = 0.0;
+        for s in &self.specs {
+            if let FaultSpec::Drop {
+                worker: who,
+                from,
+                until,
+                prob,
+            } = s
+            {
+                if Self::hits(who, worker) && Self::in_window(at, *from, *until) {
+                    p = p.max(*prob);
+                }
+            }
+        }
+        p
+    }
+
+    /// Probability that a submission of `worker` at `at` is duplicated.
+    pub fn dup_prob(&self, worker: usize, at: Duration) -> f64 {
+        let mut p: f64 = 0.0;
+        for s in &self.specs {
+            if let FaultSpec::Duplicate {
+                worker: who,
+                from,
+                until,
+                prob,
+            } = s
+            {
+                if Self::hits(who, worker) && Self::in_window(at, *from, *until) {
+                    p = p.max(*prob);
+                }
+            }
+        }
+        p
+    }
+
+    /// When a gradient arriving at `shard` at time `at` is actually
+    /// processed: rolled forward past every stall window it lands in (fixed
+    /// point, so overlapping/chained windows compose).
+    pub fn deliver_time(&self, shard: usize, at: Duration) -> Duration {
+        let mut t = at;
+        loop {
+            let mut moved = false;
+            for s in &self.specs {
+                if let FaultSpec::Stall {
+                    shard: sh,
+                    from,
+                    until,
+                } = s
+                {
+                    if *sh == shard && Self::in_window(t, *from, *until) {
+                        t = *until;
+                        moved = true;
+                    }
+                }
+            }
+            if !moved {
+                return t;
+            }
+        }
+    }
+
+    /// Largest worker index any clause names (for validation against the
+    /// scenario's worker count).
+    pub fn max_worker(&self) -> Option<usize> {
+        self.specs
+            .iter()
+            .filter_map(|s| match s {
+                FaultSpec::Crash { worker, .. } | FaultSpec::Restart { worker, .. } => {
+                    Some(*worker)
+                }
+                FaultSpec::Slow { worker, .. }
+                | FaultSpec::Drop { worker, .. }
+                | FaultSpec::Duplicate { worker, .. } => *worker,
+                FaultSpec::Stall { .. } => None,
+            })
+            .max()
+    }
+
+    /// Largest shard index any clause names.
+    pub fn max_shard(&self) -> Option<usize> {
+        self.specs
+            .iter()
+            .filter_map(|s| match s {
+                FaultSpec::Stall { shard, .. } => Some(*shard),
+                _ => None,
+            })
+            .max()
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, s) in self.specs.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(v: f64) -> Duration {
+        Duration::from_secs_f64(v)
+    }
+
+    #[test]
+    fn parse_every_kind_and_roundtrip() {
+        let spec = "crash:3@5s,restart:3@7,slow:*@2..4*8,drop:1@0..10:0.25,dup:*@1..2:0.5,stall:0@1..1.5";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.specs.len(), 6);
+        assert_eq!(
+            plan.specs[0],
+            FaultSpec::Crash {
+                worker: 3,
+                at: secs(5.0)
+            }
+        );
+        assert_eq!(
+            plan.specs[2],
+            FaultSpec::Slow {
+                worker: None,
+                from: secs(2.0),
+                until: secs(4.0),
+                factor: 8.0
+            }
+        );
+        // Display → parse is the identity.
+        let again = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "explode:1@2",
+            "crash:*@2",
+            "crash:1",
+            "slow:1@2..1*4",
+            "slow:1@1..2*0",
+            "drop:1@1..2:1.5",
+            "stall:x@1..2",
+            "crash:1@-3",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("   ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn windows_are_half_open() {
+        let plan = FaultPlan::parse("slow:0@1..2*4").unwrap();
+        assert_eq!(plan.slow_factor(0, secs(0.99)), 1.0);
+        assert_eq!(plan.slow_factor(0, secs(1.0)), 4.0);
+        assert_eq!(plan.slow_factor(0, secs(1.99)), 4.0);
+        assert_eq!(plan.slow_factor(0, secs(2.0)), 1.0);
+        assert_eq!(plan.slow_factor(1, secs(1.5)), 1.0, "other worker unaffected");
+    }
+
+    #[test]
+    fn slow_factors_compose_and_star_matches_all() {
+        let plan = FaultPlan::parse("slow:*@0..10*2,slow:1@0..10*3").unwrap();
+        assert_eq!(plan.slow_factor(0, secs(5.0)), 2.0);
+        assert_eq!(plan.slow_factor(1, secs(5.0)), 6.0);
+    }
+
+    #[test]
+    fn drop_and_dup_probs_take_max() {
+        let plan = FaultPlan::parse("drop:*@0..10:0.2,drop:2@0..10:0.9,dup:2@5..6:1").unwrap();
+        assert_eq!(plan.drop_prob(0, secs(1.0)), 0.2);
+        assert_eq!(plan.drop_prob(2, secs(1.0)), 0.9);
+        assert_eq!(plan.dup_prob(2, secs(5.5)), 1.0);
+        assert_eq!(plan.dup_prob(2, secs(6.0)), 0.0);
+    }
+
+    #[test]
+    fn stall_rolls_delivery_forward_through_chained_windows() {
+        let plan = FaultPlan::parse("stall:0@1..2,stall:0@2..3,stall:1@5..6").unwrap();
+        assert_eq!(plan.deliver_time(0, secs(0.5)), secs(0.5));
+        // lands in the first window, which chains into the second
+        assert_eq!(plan.deliver_time(0, secs(1.5)), secs(3.0));
+        assert_eq!(plan.deliver_time(0, secs(3.0)), secs(3.0));
+        assert_eq!(plan.deliver_time(1, secs(1.5)), secs(1.5));
+        assert_eq!(plan.deliver_time(1, secs(5.2)), secs(6.0));
+    }
+
+    #[test]
+    fn index_bounds_reported() {
+        let plan = FaultPlan::parse("crash:7@1,slow:*@0..1*2,stall:3@0..1").unwrap();
+        assert_eq!(plan.max_worker(), Some(7));
+        assert_eq!(plan.max_shard(), Some(3));
+        assert_eq!(FaultPlan::default().max_worker(), None);
+    }
+}

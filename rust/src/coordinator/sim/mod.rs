@@ -1,0 +1,28 @@
+//! Deterministic virtual-time simulation of the full coordinator pipeline.
+//!
+//! Layering:
+//! - [`fault`] — fault clauses (crash / restart / straggler burst / drop /
+//!   duplicate / shard stall) and their compact text encoding.
+//! - [`scenario`] — the one-line scenario DSL: `workers=8 shards=2
+//!   policy=hybrid:step:50 secs=10 faults=crash:3@5` fully determines a
+//!   run.
+//! - [`des`] — the discrete-event engine: PS shards + workers + evaluator
+//!   single-threaded in virtual time over a `(time, sequence)`-ordered
+//!   event queue, reusing the same pure state machines
+//!   ([`super::policy::Aggregator`], [`super::params::ParamStore`]) the
+//!   threaded stack runs.
+//!
+//! Guarantee: a run is a pure function of (scenario, inputs); the same
+//! seed + scenario yields a bitwise-identical [`super::RunMetrics`]. The
+//! tier-1 suite leans on this to replay the paper's async/sync/hybrid
+//! comparison under injected delays in milliseconds instead of wall-clock
+//! minutes, and `hybrid-sgd train --sim --fault-spec ...` exposes it on
+//! the CLI. Ordering guarantees and fault semantics: DESIGN.md §2.4.
+
+pub mod des;
+pub mod fault;
+pub mod scenario;
+
+pub use des::{simulate, Simulation};
+pub use fault::{FaultPlan, FaultSpec};
+pub use scenario::Scenario;

@@ -1,0 +1,256 @@
+//! The scenario DSL: one line of text fully determines a simulated run.
+//!
+//! A scenario is whitespace-separated `key=value` tokens; every key is
+//! optional and overrides a deterministic default. Example — "8 workers,
+//! 2 shards, crash worker 3 at t=5 s, hybrid step-50 schedule":
+//!
+//! ```text
+//! workers=8 shards=2 policy=hybrid:step:50 secs=10 faults=crash:3@5
+//! ```
+//!
+//! | key          | meaning                                   | default        |
+//! |--------------|-------------------------------------------|----------------|
+//! | `workers`    | gradient workers                          | 8              |
+//! | `shards`     | parameter-server shards                   | 1              |
+//! | `policy`     | `Policy::parse` syntax                    | `hybrid:step:50` |
+//! | `secs`       | virtual training budget (seconds)         | 10             |
+//! | `seed`       | master seed (all streams derive from it)  | 0              |
+//! | `lr`         | learning rate                             | 0.05           |
+//! | `kmax`       | threshold cap (absent → worker count)     | absent         |
+//! | `grad-ms`    | virtual compute time per gradient (ms)    | 5              |
+//! | `floor-ms`   | compute-cost floor per iteration (ms)     | 0              |
+//! | `eval-ms`    | metric sampling interval (ms)             | 500            |
+//! | `delay-frac` | fraction of workers subject to delays     | 0              |
+//! | `delay-mean` | delay Normal mean (seconds)               | 0              |
+//! | `delay-std`  | delay Normal σ (seconds)                  | 0              |
+//! | `faults`     | a [`FaultPlan`] clause list               | none           |
+//!
+//! `Display` renders the canonical form; `parse(display(s))` is the
+//! identity, so scenarios can be logged from one run and replayed in
+//! another (EXPERIMENTS.md records sweeps this way).
+
+use super::super::delay::DelayModel;
+use super::super::policy::Policy;
+use super::super::threshold::Schedule;
+use super::super::trainer::TrainConfig;
+use super::fault::FaultPlan;
+use std::time::Duration;
+
+/// Everything that determines a simulated run besides the workload
+/// (engines, data and init come from `RunInputs`, exactly as for the
+/// threaded trainer).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// The shared coordinator configuration; `duration` is *virtual* time.
+    pub train: TrainConfig,
+    /// Virtual compute cost per gradient (the simulator's stand-in for the
+    /// paper's per-iteration ray + PyTorch cost).
+    pub grad_time: Duration,
+    /// Injected faults; empty = fault-free run.
+    pub faults: FaultPlan,
+}
+
+impl Scenario {
+    /// A scenario with the given policy/worker-count/budget and the
+    /// defaults from the table above (no delays, no faults).
+    pub fn base(policy: Policy, workers: usize, secs: f64) -> Scenario {
+        let mut train = TrainConfig::quick(policy, workers, secs);
+        train.delay = DelayModel::none();
+        train.lr = 0.05;
+        Scenario {
+            train,
+            grad_time: Duration::from_millis(5),
+            faults: FaultPlan::default(),
+        }
+    }
+
+    /// Parse the `key=value` DSL (see the module docs).
+    pub fn parse(spec: &str) -> anyhow::Result<Scenario> {
+        let mut scn = Scenario::base(
+            Policy::Hybrid {
+                schedule: Schedule::Step { step: 50 },
+                strict: false,
+            },
+            8,
+            10.0,
+        );
+        for tok in spec.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad scenario token `{tok}` (expected key=value)"))?;
+            let num = |what: &str| anyhow::anyhow!("bad {what} `{v}` in `{tok}`");
+            match k {
+                "workers" => scn.train.workers = v.parse().map_err(|_| num("worker count"))?,
+                "shards" => scn.train.shards = v.parse().map_err(|_| num("shard count"))?,
+                "policy" => scn.train.policy = Policy::parse(v)?,
+                "secs" => {
+                    let s: f64 = v.parse().map_err(|_| num("duration"))?;
+                    anyhow::ensure!(s > 0.0 && s.is_finite(), "secs must be > 0");
+                    scn.train.duration = Duration::from_secs_f64(s);
+                }
+                "seed" => scn.train.seed = v.parse().map_err(|_| num("seed"))?,
+                "lr" => scn.train.lr = v.parse().map_err(|_| num("learning rate"))?,
+                "kmax" => scn.train.k_max = Some(v.parse().map_err(|_| num("kmax"))?),
+                "grad-ms" => {
+                    let ms: f64 = v.parse().map_err(|_| num("grad-ms"))?;
+                    anyhow::ensure!(ms > 0.0 && ms.is_finite(), "grad-ms must be > 0");
+                    scn.grad_time = Duration::from_secs_f64(ms / 1000.0);
+                }
+                "floor-ms" => {
+                    let ms: f64 = v.parse().map_err(|_| num("floor-ms"))?;
+                    anyhow::ensure!(ms >= 0.0 && ms.is_finite(), "floor-ms must be >= 0");
+                    scn.train.compute_floor = Duration::from_secs_f64(ms / 1000.0);
+                }
+                "eval-ms" => {
+                    let ms: f64 = v.parse().map_err(|_| num("eval-ms"))?;
+                    anyhow::ensure!(ms > 0.0 && ms.is_finite(), "eval-ms must be > 0");
+                    scn.train.eval_interval = Duration::from_secs_f64(ms / 1000.0);
+                }
+                "delay-frac" => {
+                    scn.train.delay.affected_fraction =
+                        v.parse().map_err(|_| num("delay-frac"))?
+                }
+                "delay-mean" => scn.train.delay.mean = v.parse().map_err(|_| num("delay-mean"))?,
+                "delay-std" => scn.train.delay.std = v.parse().map_err(|_| num("delay-std"))?,
+                "faults" => scn.faults = FaultPlan::parse(v)?,
+                _ => anyhow::bail!("unknown scenario key `{k}` in `{tok}`"),
+            }
+        }
+        scn.validate()?;
+        Ok(scn)
+    }
+
+    /// Sanity checks shared by `parse` and `Simulation::new`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.train.workers >= 1, "scenario needs at least 1 worker");
+        anyhow::ensure!(
+            !self.train.duration.is_zero(),
+            "training budget must be > 0"
+        );
+        anyhow::ensure!(
+            self.grad_time >= Duration::from_micros(1),
+            "grad time below 1µs would flood the event queue"
+        );
+        anyhow::ensure!(
+            !self.train.eval_interval.is_zero(),
+            "eval interval must be > 0"
+        );
+        if let Some(w) = self.faults.max_worker() {
+            anyhow::ensure!(
+                w < self.train.workers,
+                "fault names worker {w} but the scenario has {} workers",
+                self.train.workers
+            );
+        }
+        if let Some(s) = self.faults.max_shard() {
+            anyhow::ensure!(
+                s < self.train.shards.max(1),
+                "fault names shard {s} but the scenario has {} shards",
+                self.train.shards.max(1)
+            );
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t = &self.train;
+        write!(
+            f,
+            "workers={} shards={} policy={} secs={} seed={} lr={} grad-ms={} eval-ms={}",
+            t.workers,
+            t.shards,
+            t.policy,
+            t.duration.as_secs_f64(),
+            t.seed,
+            t.lr,
+            self.grad_time.as_secs_f64() * 1000.0,
+            t.eval_interval.as_secs_f64() * 1000.0,
+        )?;
+        if let Some(k) = t.k_max {
+            write!(f, " kmax={k}")?;
+        }
+        if !t.compute_floor.is_zero() {
+            write!(f, " floor-ms={}", t.compute_floor.as_secs_f64() * 1000.0)?;
+        }
+        if t.delay.affected_fraction != 0.0 || t.delay.mean != 0.0 || t.delay.std != 0.0 {
+            write!(
+                f,
+                " delay-frac={} delay-mean={} delay-std={}",
+                t.delay.affected_fraction, t.delay.mean, t.delay.std
+            )?;
+        }
+        if !self.faults.is_empty() {
+            write!(f, " faults={}", self.faults)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_headline_example() {
+        let s = Scenario::parse("workers=8 shards=2 policy=hybrid:step:50 secs=10 faults=crash:3@5")
+            .unwrap();
+        assert_eq!(s.train.workers, 8);
+        assert_eq!(s.train.shards, 2);
+        assert_eq!(
+            s.train.policy,
+            Policy::Hybrid {
+                schedule: Schedule::Step { step: 50 },
+                strict: false
+            }
+        );
+        assert_eq!(s.train.duration, Duration::from_secs(10));
+        assert_eq!(s.faults.specs.len(), 1);
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let spec = "workers=4 shards=3 policy=hybrid-strict:const:4 secs=2.5 seed=9 lr=0.1 \
+                    grad-ms=2.5 floor-ms=20 eval-ms=250 kmax=3 delay-frac=0.5 delay-mean=0 \
+                    delay-std=0.25 faults=crash:1@1,stall:2@0.5..0.75";
+        let a = Scenario::parse(spec).unwrap();
+        let b = Scenario::parse(&a.to_string()).unwrap();
+        assert_eq!(a.train.workers, b.train.workers);
+        assert_eq!(a.train.shards, b.train.shards);
+        assert_eq!(a.train.policy, b.train.policy);
+        assert_eq!(a.train.duration, b.train.duration);
+        assert_eq!(a.train.seed, b.train.seed);
+        assert_eq!(a.train.lr, b.train.lr);
+        assert_eq!(a.train.k_max, b.train.k_max);
+        assert_eq!(a.train.delay, b.train.delay);
+        assert_eq!(a.train.compute_floor, b.train.compute_floor);
+        assert_eq!(a.grad_time, b.grad_time);
+        assert_eq!(a.faults, b.faults);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        for bad in [
+            "workers",              // not key=value
+            "workers=x",            // bad number
+            "bogus=1",              // unknown key
+            "secs=0",               // empty budget
+            "grad-ms=0",            // event-queue flood
+            "workers=2 faults=crash:5@1", // fault out of range
+            "shards=2 faults=stall:2@1..2", // shard out of range
+            "policy=nope",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn defaults_are_fault_free() {
+        let s = Scenario::parse("").unwrap();
+        assert!(s.faults.is_empty());
+        assert_eq!(s.train.delay, DelayModel::none());
+        assert_eq!(s.train.workers, 8);
+        assert_eq!(s.grad_time, Duration::from_millis(5));
+    }
+}

@@ -3,6 +3,7 @@
 //! the metric series. This is the function every example, experiment and
 //! benchmark drives.
 
+use super::clock::{Clock, RealClock};
 use super::delay::DelayModel;
 use super::metrics::RunMetrics;
 use super::policy::Policy;
@@ -15,7 +16,7 @@ use crate::log_info;
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Evaluation tensors: `n` samples of `x_dim` features and `y_dim` label
 /// items each (`y_dim = 1` for classification, `seq_len` for LM targets).
@@ -74,12 +75,13 @@ impl EvalSet {
 }
 
 /// Full training-run configuration.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub policy: Policy,
     pub workers: usize,
     pub lr: f32,
-    /// Wall-clock training budget.
+    /// Training budget: wall-clock under [`train`], virtual time under
+    /// [`super::sim::simulate`].
     pub duration: Duration,
     pub delay: DelayModel,
     pub seed: u64,
@@ -131,8 +133,11 @@ pub struct RunInputs<'a> {
 
 /// Run one training job; blocks until the budget elapses and all threads
 /// join. Deterministic given (config.seed, inputs) up to OS scheduling.
+/// For a *fully* deterministic single-threaded run of the same pipeline in
+/// virtual time, see [`super::sim::simulate`].
 pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics> {
-    let start = Instant::now();
+    let clock_owned = RealClock::start();
+    let clock: &dyn Clock = &clock_owned;
     let stop = AtomicBool::new(false);
     let layout = ShardLayout::new(inputs.init_params.len(), cfg.shards);
     let cells = shard_cells(inputs.init_params, &layout);
@@ -187,7 +192,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
             let grad_rx = grad_rxs[shard].take().unwrap();
             let stop_ref = &stop;
             shard_handles.push(s.spawn(move || {
-                run_shard(shard, range, init, cell, &scfg, grad_rx, rtxs, stop_ref, start)
+                run_shard(shard, range, init, cell, &scfg, grad_rx, rtxs, stop_ref, clock)
             }));
         }
         drop(reply_txs); // shard threads own the only reply senders now
@@ -221,7 +226,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
                     }
                 };
                 let source = source_factory(id);
-                run_worker(&wcfg, engine, source, init, endpoints, reply_rx, stop_ref)
+                run_worker(&wcfg, engine, source, init, endpoints, reply_rx, stop_ref, clock)
             }));
         }
         drop(grad_txs); // shard servers exit when the last worker sender drops
@@ -234,14 +239,14 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
             train_probe: inputs.train_probe,
             cells: &cells,
             layout: &layout,
-            start,
+            clock,
         };
         let mut params_buf = inputs.init_params.to_vec();
         // t=0 sample, then periodic until the budget elapses.
         eval_loop.sample(&mut metrics, &mut params_buf)?;
-        while start.elapsed() < cfg.duration {
-            let remaining = cfg.duration.saturating_sub(start.elapsed());
-            std::thread::sleep(cfg.eval_interval.min(remaining));
+        while clock.now() < cfg.duration {
+            let remaining = cfg.duration.saturating_sub(clock.now());
+            clock.sleep(cfg.eval_interval.min(remaining));
             eval_loop.sample(&mut metrics, &mut params_buf)?;
         }
 
@@ -259,7 +264,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         Ok(())
     });
     result?;
-    metrics.wall_time = start.elapsed().as_secs_f64();
+    metrics.wall_time = clock.now().as_secs_f64();
     log_info!(
         "trainer",
         "{} done: {} grads, {} updates, {} shards, {:.1} grads/s, final acc {:.2}%",
@@ -290,13 +295,13 @@ struct EvalLoop<'a> {
     train_probe: &'a EvalSet,
     cells: &'a [Arc<super::params::SnapshotCell>],
     layout: &'a ShardLayout,
-    start: Instant,
+    clock: &'a dyn Clock,
 }
 
 impl<'a> EvalLoop<'a> {
     fn sample(&mut self, m: &mut RunMetrics, params_buf: &mut [f32]) -> anyhow::Result<()> {
         let _version = assemble_params(self.cells, self.layout, params_buf);
-        let t = self.start.elapsed().as_secs_f64();
+        let t = self.clock.now().as_secs_f64();
         let (test_loss, test_acc) = eval_on(self.engine, params_buf, self.test)?;
         let (train_loss, _) = eval_on(self.engine, params_buf, self.train_probe)?;
         m.test_loss.push(t, test_loss);

@@ -9,6 +9,7 @@
 //! shard slices whose parameters actually changed — via snapshot-cell
 //! pointer reads, never O(dim) channel payloads.
 
+use super::clock::Clock;
 use super::delay::DelayModel;
 use super::params::SnapshotCell;
 use super::server::{Reply, ShardMsg};
@@ -95,7 +96,10 @@ pub struct WorkerReport {
     pub delay_slept: f64,
 }
 
-/// Run one worker until `stop` is set. Call on a dedicated thread.
+/// Run one worker until `stop` is set. Call on a dedicated thread. All
+/// timing (iteration pacing, injected delays) goes through `clock`, never
+/// through `Instant`/`thread::sleep` directly.
+#[allow(clippy::too_many_arguments)]
 pub fn run_worker(
     cfg: &WorkerConfig,
     mut engine: Box<dyn GradEngine>,
@@ -104,6 +108,7 @@ pub fn run_worker(
     endpoints: ShardEndpoints,
     reply_rx: Receiver<Reply>,
     stop: &AtomicBool,
+    clock: &dyn Clock,
 ) -> WorkerReport {
     let mut report = WorkerReport::default();
     let mut params = init_params;
@@ -120,7 +125,7 @@ pub fn run_worker(
     let mut rng = Pcg64::new(cfg.seed, cfg.id as u64 + 1);
 
     'outer: while !stop.load(Ordering::Relaxed) {
-        let iter_start = std::time::Instant::now();
+        let iter_start = clock.now();
         let (x, y) = source.next();
         let loss = match engine.grad(&params, x, y, &mut grad_buf) {
             Ok(l) => l,
@@ -135,17 +140,17 @@ pub fn run_worker(
                 report.delay_slept += d.as_secs_f64();
                 // Sleep in small slices so shutdown stays responsive even
                 // with multi-second injected delays.
-                let deadline = std::time::Instant::now() + d;
-                while std::time::Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
-                    std::thread::sleep(Duration::from_millis(5).min(d));
+                let deadline = clock.now() + d;
+                while clock.now() < deadline && !stop.load(Ordering::Relaxed) {
+                    clock.sleep(Duration::from_millis(5).min(d));
                 }
             }
         }
         // Enforce the compute-cost floor (paper-regime pacing).
         if !cfg.min_iter.is_zero() {
-            let elapsed = iter_start.elapsed();
+            let elapsed = clock.now().saturating_sub(iter_start);
             if elapsed < cfg.min_iter && !stop.load(Ordering::Relaxed) {
-                std::thread::sleep(cfg.min_iter - elapsed);
+                clock.sleep(cfg.min_iter - elapsed);
             }
         }
         // Fan the gradient out to every shard as Arc clones of one buffer;
@@ -249,7 +254,8 @@ mod tests {
                 x: vec![],
                 y: vec![],
             });
-            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2)
+            let clock = crate::coordinator::clock::RealClock::start();
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2, &clock)
         });
         // Act as the shard server for 3 round trips, publishing snapshots.
         for i in 0..3u64 {
@@ -298,7 +304,8 @@ mod tests {
                 x: vec![],
                 y: vec![],
             });
-            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2)
+            let clock = crate::coordinator::clock::RealClock::start();
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2, &clock)
         });
         for _ in 0..2 {
             let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();

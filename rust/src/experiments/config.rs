@@ -9,6 +9,43 @@
 
 use crate::coordinator::DelayModel;
 
+/// Virtual-time simulation parameters (`--sim`): run on the deterministic
+/// discrete-event simulator instead of the threaded trainer. `secs` then
+/// means *virtual* seconds, so sweeps replay bit-identically from their
+/// seeds regardless of host load.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimParams {
+    /// Virtual compute time per gradient, in milliseconds (`--grad-ms`).
+    pub grad_ms: f64,
+    /// Fault-injection clause list (`--fault-spec`, see
+    /// `coordinator::sim::FaultPlan`); empty = fault-free.
+    pub fault_spec: String,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            grad_ms: 5.0,
+            fault_spec: String::new(),
+        }
+    }
+}
+
+impl SimParams {
+    /// Build the simulator scenario for one run (the single construction
+    /// site shared by the `train` command and the comparison runner).
+    pub fn scenario(
+        &self,
+        train: crate::coordinator::TrainConfig,
+    ) -> anyhow::Result<crate::coordinator::sim::Scenario> {
+        Ok(crate::coordinator::sim::Scenario {
+            train,
+            grad_time: std::time::Duration::from_secs_f64(self.grad_ms / 1000.0),
+            faults: crate::coordinator::sim::FaultPlan::parse(&self.fault_spec)?,
+        })
+    }
+}
+
 /// Which dataset feeds the run.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DatasetKind {
@@ -80,6 +117,8 @@ pub struct ExpConfig {
     pub arrival_rate_est: f64,
     /// Parameter-server shard count (`--shards`); 1 = single server thread.
     pub shards: usize,
+    /// When set, runs execute on the virtual-time simulator (`--sim`).
+    pub sim: Option<SimParams>,
 }
 
 /// The paper's K cap (25 workers) is reached after step×(25−1) arrivals; at
@@ -140,6 +179,7 @@ impl ExpConfig {
                 DatasetKind::Cifar => 12.0,
             },
             shards: 1,
+            sim: None,
         }
     }
 

@@ -32,6 +32,11 @@ COMMON OPTIONS:
   --workers N      --batch N     --lr F        --secs F
   --rounds N       --seed N      --step-mult F --delay-std F
   --shards N                     parameter-server shards (default 1)
+  --sim                          run on the deterministic virtual-time simulator
+                                 (--secs becomes virtual seconds; bitwise-reproducible)
+  --fault-spec SPEC              inject faults, e.g. \"crash:3@5,stall:0@1..2,slow:*@2..4*8\"
+                                 (implies --sim; see coordinator::sim::FaultPlan)
+  --grad-ms F                    virtual per-gradient compute time in ms (sim, default 5)
   --quick                        smoke scale (seconds)
   --paper-scale                  the paper's 25 workers x 5 rounds x 100 s
   --out DIR                      results directory (default results/)
@@ -62,6 +67,15 @@ fn config_from(args: &Args, default_dataset: DatasetKind) -> anyhow::Result<ExpC
     cfg.shards = args.usize_or("shards", cfg.shards).max(1);
     if let Some(std) = args.get("delay-std") {
         cfg.delay = DelayModel::paper_default().with_std(std.parse()?);
+    }
+    if args.flag("sim") || args.get("fault-spec").is_some() || args.get("grad-ms").is_some() {
+        // Validate the fault spec at parse time so typos fail fast.
+        let fault_spec = args.str_or("fault-spec", "");
+        crate::coordinator::sim::FaultPlan::parse(&fault_spec)?;
+        cfg.sim = Some(super::config::SimParams {
+            grad_ms: args.f64_or("grad-ms", 5.0),
+            fault_spec,
+        });
     }
     cfg.engine = match args.str_or("engine", "xla:jnp").as_str() {
         "native" => EngineKind::Native,
@@ -171,7 +185,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         test: &workload.test,
         train_probe: &workload.probe,
     };
-    let m = crate::coordinator::train(&tc, &inputs)?;
+    let m = match &cfg.sim {
+        Some(sp) => {
+            let scn = sp.scenario(tc.clone())?;
+            println!("simulating      : {scn}");
+            crate::coordinator::sim::simulate(&scn, &inputs)?
+        }
+        None => crate::coordinator::train(&tc, &inputs)?,
+    };
     println!("policy          : {}", tc.policy);
     println!("gradients       : {}", m.gradients_total);
     println!("updates         : {}", m.updates_total);

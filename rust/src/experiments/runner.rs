@@ -245,13 +245,26 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
             };
             log_info!(
                 "runner",
-                "[{}] round {}/{} algo {}",
+                "[{}] round {}/{} algo {}{}",
                 cfg.tag(),
                 round + 1,
                 cfg.rounds,
-                algo.name()
+                algo.name(),
+                if cfg.sim.is_some() { " (sim)" } else { "" }
             );
-            let m = train(&tc, &inputs)?;
+            let m = match &cfg.sim {
+                Some(sp) => {
+                    // Virtual-time run: same TrainConfig, same inputs, but
+                    // the budget is virtual and the result is bitwise
+                    // reproducible from the seed.
+                    let scn = sp.scenario(tc.clone())?;
+                    // Log the replayable scenario line (EXPERIMENTS.md
+                    // records sweeps by these).
+                    log_info!("runner", "scenario: {scn}");
+                    crate::coordinator::sim::simulate(&scn, &inputs)?
+                }
+                None => train(&tc, &inputs)?,
+            };
             raw.iter_mut().find(|(a, _)| *a == algo).unwrap().1.push(m);
         }
     }
@@ -315,6 +328,28 @@ mod tests {
         // diff rows are finite
         let d = cmp.diff_vs(Algo::Async);
         assert!(d.test_acc.is_finite() && d.test_loss.is_finite());
+    }
+
+    #[test]
+    fn comparison_runs_on_the_simulator_reproducibly() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let mut cfg = native_cfg();
+        cfg.workers = 2;
+        cfg.secs = 0.4;
+        cfg.sim = Some(crate::experiments::config::SimParams {
+            grad_ms: 10.0,
+            fault_spec: String::new(),
+        });
+        let a = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async]).unwrap();
+        let b = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async]).unwrap();
+        for ((algo_a, ra), (algo_b, rb)) in a.averaged.iter().zip(&b.averaged) {
+            assert_eq!(algo_a, algo_b);
+            assert!(ra.grads_per_sec > 0.0);
+            // virtual-time runs replay bitwise from the seed
+            assert_eq!(ra.test_acc, rb.test_acc);
+            assert_eq!(ra.grads_per_sec, rb.grads_per_sec);
+            assert_eq!(ra.updates_total, rb.updates_total);
+        }
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //!   shards, each owned by its own server thread; workers receive O(1)
 //!   version-token replies and refresh parameters through zero-copy
 //!   `Arc`-swapped snapshots. `S = 1` reproduces the single-server
-//!   semantics bitwise, keeping the paper's comparisons valid.
+//!   semantics bitwise, keeping the paper's comparisons valid. Time is a
+//!   capability (`coordinator::clock`), and `coordinator::sim` replays the
+//!   whole pipeline deterministically in virtual time with fault injection
+//!   (crashes, stragglers, message loss, shard stalls) behind a one-line
+//!   scenario DSL.
 //! - **L2** (`python/compile/model.py`) — JAX forward/backward graphs for the
 //!   paper's workloads (MLP, CNN-MNIST, CNN-CIFAR, plus a transformer LM),
 //!   AOT-lowered to HLO text at build time.

@@ -46,6 +46,22 @@ pub struct Series {
     pub v: Vec<f64>,
 }
 
+/// Equality is *bitwise* per sample (`f64::to_bits`), so `NaN == NaN` and
+/// replays of pathological (diverging) runs still compare equal — the
+/// simulator's reproducibility tests rely on this.
+impl PartialEq for Series {
+    fn eq(&self, other: &Self) -> bool {
+        let bits = |xs: &[f64], ys: &[f64]| {
+            xs.len() == ys.len()
+                && xs
+                    .iter()
+                    .zip(ys)
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        };
+        bits(&self.t, &other.t) && bits(&self.v, &other.v)
+    }
+}
+
 impl Series {
     pub fn new() -> Self {
         Self::default()

@@ -1,0 +1,135 @@
+//! Shared workload fixtures for the coordinator integration suites
+//! (`coordinator_integration` and `sim_integration` compile this module
+//! each; keeping it single-sourced stops the two suites drifting onto
+//! different workloads).
+#![allow(dead_code)] // each test binary uses a subset
+
+use hybrid_sgd::coordinator::worker::BatchSource;
+use hybrid_sgd::coordinator::{EvalSet, RunInputs};
+use hybrid_sgd::data::{random_cluster, Batcher, Dataset};
+use hybrid_sgd::engine::{factory, GradEngine};
+use hybrid_sgd::native::MlpEngine;
+use hybrid_sgd::util::rng::Pcg64;
+use std::sync::Arc;
+
+pub const DIMS: [usize; 3] = [20, 32, 10];
+
+pub struct Fixture {
+    pub train_set: Arc<Dataset>,
+    pub test: EvalSet,
+    pub probe: EvalSet,
+    pub init: Vec<f32>,
+}
+
+/// Random-cluster MLP workload, fully determined by `seed`.
+pub fn fixture(seed: u64) -> Fixture {
+    hybrid_sgd::util::logging::set_level(hybrid_sgd::util::logging::Level::Off);
+    let mut rng = Pcg64::seeded(seed);
+    let spec = random_cluster::ClusterSpec {
+        n_samples: 1000,
+        ..Default::default()
+    };
+    let full = random_cluster::generate(&spec, &mut rng);
+    let (train_set, test_set) = full.split(0.8, &mut rng);
+    let test = EvalSet::from_dataset(&test_set, 200, &mut rng);
+    let probe = EvalSet::from_dataset(&train_set, 200, &mut rng);
+    let init = MlpEngine::init_params(&DIMS, &mut rng);
+    Fixture {
+        train_set: Arc::new(train_set),
+        test,
+        probe,
+        init,
+    }
+}
+
+/// Workload plumbing shared by virtual and real-clock runs.
+pub fn inputs_for(fx: &Fixture, workers: usize) -> RunInputs<'_> {
+    let batch = 16;
+    let dims: Vec<usize> = DIMS.to_vec();
+    let dims2 = dims.clone();
+    let data_shards = fx.train_set.shard_indices(workers);
+    let train_arc = Arc::clone(&fx.train_set);
+    RunInputs {
+        worker_engine: factory(move || {
+            Ok(Box::new(MlpEngine::new(dims.clone(), batch)) as Box<dyn GradEngine>)
+        }),
+        eval_engine: factory(move || {
+            Ok(Box::new(MlpEngine::new(dims2.clone(), 50)) as Box<dyn GradEngine>)
+        }),
+        batch_source: Arc::new(move |id| {
+            Box::new(Batcher::new(
+                Arc::clone(&train_arc),
+                data_shards[id].clone(),
+                batch,
+                Pcg64::new(11, id as u64),
+            )) as Box<dyn BatchSource>
+        }),
+        init_params: &fx.init,
+        test: &fx.test,
+        train_probe: &fx.probe,
+    }
+}
+
+/// Engine that errors on its 5th gradient — the failure-injection probe
+/// used by both the threaded and the simulated engine-failure tests.
+pub struct FlakyEngine {
+    calls: u32,
+    inner: MlpEngine,
+}
+
+impl FlakyEngine {
+    pub fn new() -> FlakyEngine {
+        FlakyEngine {
+            calls: 0,
+            inner: MlpEngine::new(DIMS.to_vec(), 16),
+        }
+    }
+}
+
+impl Default for FlakyEngine {
+    fn default() -> Self {
+        FlakyEngine::new()
+    }
+}
+
+impl GradEngine for FlakyEngine {
+    fn param_count(&self) -> usize {
+        self.inner.param_count()
+    }
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+    fn grad(&mut self, p: &[f32], x: &[f32], y: &[i32], g: &mut [f32]) -> anyhow::Result<f32> {
+        self.calls += 1;
+        anyhow::ensure!(self.calls < 5, "injected failure");
+        self.inner.grad(p, x, y, g)
+    }
+    fn eval(&mut self, p: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<(f64, usize)> {
+        self.inner.eval(p, x, y)
+    }
+}
+
+/// [`inputs_for`] with every worker on a [`FlakyEngine`] (each fails after
+/// 4 gradients).
+pub fn flaky_inputs(fx: &Fixture, workers: usize) -> RunInputs<'_> {
+    let dims2: Vec<usize> = DIMS.to_vec();
+    let data_shards = fx.train_set.shard_indices(workers);
+    let train_arc = Arc::clone(&fx.train_set);
+    RunInputs {
+        worker_engine: factory(move || Ok(Box::new(FlakyEngine::new()) as Box<dyn GradEngine>)),
+        eval_engine: factory(move || {
+            Ok(Box::new(MlpEngine::new(dims2.clone(), 50)) as Box<dyn GradEngine>)
+        }),
+        batch_source: Arc::new(move |id| {
+            Box::new(Batcher::new(
+                Arc::clone(&train_arc),
+                data_shards[id].clone(),
+                16,
+                Pcg64::new(13, id as u64),
+            )) as Box<dyn BatchSource>
+        }),
+        init_params: &fx.init,
+        test: &fx.test,
+        train_probe: &fx.probe,
+    }
+}

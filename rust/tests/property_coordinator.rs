@@ -359,6 +359,136 @@ fn prop_sync_barrier_requires_all_workers() {
     });
 }
 
+/// Under *any* seeded delay/fault scenario — crashes, straggler bursts,
+/// dropped/duplicated submissions, shard stalls, random schedules — the
+/// hybrid policy's aggregation mode is monotone per shard: once a shard's
+/// threshold K(n) switches away from the asynchronous regime it never
+/// reverts (the paper's Algorithm 1 threshold semantics), and arrivals
+/// never run backwards. Sampled live from the virtual-time simulator.
+#[test]
+fn prop_hybrid_mode_monotone_under_any_fault_scenario() {
+    use hybrid_sgd::coordinator::sim::{FaultPlan, Scenario, Simulation};
+    use hybrid_sgd::coordinator::worker::BatchSource;
+    use hybrid_sgd::coordinator::{DelayModel, EvalSet, RunInputs, TrainConfig};
+    use hybrid_sgd::engine::factory;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    struct NullSource;
+    impl BatchSource for NullSource {
+        fn next(&mut self) -> (&[f32], &[i32]) {
+            (&[], &[])
+        }
+    }
+
+    check("hybrid-monotone-under-faults", 30, |g| {
+        let workers = g.usize_in(2, 6);
+        let shards = g.usize_in(1, 3);
+        let dim = g.usize_in(shards, 16);
+        let secs = 2.0f64;
+        let schedule = random_schedule(g);
+        let strict = g.bool();
+
+        // A random cocktail of fault clauses over valid worker/shard ids,
+        // assembled in the same DSL users write.
+        let mut clauses: Vec<String> = Vec::new();
+        if g.bool() {
+            clauses.push(format!(
+                "crash:{}@{}",
+                g.usize_in(0, workers - 1),
+                g.f64_in(0.1, 1.5)
+            ));
+        }
+        if g.bool() {
+            let a = g.f64_in(0.0, 0.8);
+            let b = a + g.f64_in(0.1, 1.0);
+            clauses.push(format!("slow:*@{a}..{b}*{}", g.f64_in(1.5, 10.0)));
+        }
+        if g.bool() {
+            clauses.push(format!("drop:*@0..{secs}:{}", g.f64_in(0.05, 0.5)));
+        }
+        if g.bool() {
+            clauses.push(format!("dup:*@0..{secs}:{}", g.f64_in(0.05, 0.5)));
+        }
+        if g.bool() {
+            let s = g.usize_in(0, shards - 1);
+            let a = g.f64_in(0.0, 1.0);
+            let b = a + g.f64_in(0.05, 0.5);
+            clauses.push(format!("stall:{s}@{a}..{b}"));
+        }
+        let faults = FaultPlan::parse(&clauses.join(","))
+            .map_err(|e| format!("fault parse: {e:#}"))?;
+
+        let mut train = TrainConfig::quick(
+            Policy::Hybrid { schedule, strict },
+            workers,
+            secs,
+        );
+        train.shards = shards;
+        train.seed = g.rng.next_u64();
+        train.lr = 0.05;
+        train.delay = DelayModel {
+            affected_fraction: g.f64_in(0.0, 1.0),
+            mean: 0.0,
+            std: g.f64_in(0.0, 0.05),
+        };
+        let scn = Scenario {
+            train,
+            grad_time: Duration::from_millis(20),
+            faults,
+        };
+
+        let init = g.vec_f32(dim, 1.0);
+        let eval = EvalSet {
+            x: vec![0.0],
+            y: vec![0],
+            n: 1,
+            x_dim: 1,
+            y_dim: 1,
+        };
+        let target = vec![1.0f32; dim];
+        let t2 = target.clone();
+        let inputs = RunInputs {
+            worker_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(target.clone(), 1, 0.0, 0))
+                    as Box<dyn GradEngine>)
+            }),
+            eval_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(t2.clone(), 1, 0.0, 0)) as Box<dyn GradEngine>)
+            }),
+            batch_source: Arc::new(|_| Box::new(NullSource) as Box<dyn BatchSource>),
+            init_params: &init,
+            test: &eval,
+            train_probe: &eval,
+        };
+
+        let mut sim =
+            Simulation::new(&scn, &inputs).map_err(|e| format!("sim init: {e:#}"))?;
+        let mut last_k = vec![0usize; sim.shard_count()];
+        let mut last_arrivals = vec![0u64; sim.shard_count()];
+        let mut t = Duration::ZERO;
+        let end = Duration::from_secs_f64(secs);
+        while t < end {
+            t += Duration::from_millis(100);
+            sim.run_until(t).map_err(|e| format!("sim step: {e:#}"))?;
+            for s in 0..sim.shard_count() {
+                let k = sim.current_k(s);
+                prop_assert!(
+                    k >= last_k[s],
+                    "shard {s}: K reverted {} -> {k} at {t:?} (faults `{}`)",
+                    last_k[s],
+                    clauses.join(",")
+                );
+                let a = sim.arrivals(s);
+                prop_assert!(a >= last_arrivals[s], "shard {s}: arrivals went backwards");
+                last_k[s] = k;
+                last_arrivals[s] = a;
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Strict hybrid at K = W with exactly one outstanding gradient per worker
 /// behaves like sync: every flush contains W distinct workers.
 #[test]
