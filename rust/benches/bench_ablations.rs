@@ -78,6 +78,7 @@ fn run_native(fx: &Fixture, policy: Policy, secs: f64, compute_ms: f64) -> RunMe
         k_max: None,
         compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
         shards: 1,
+        wire: hybrid_sgd::coordinator::WireFormat::Dense,
     };
     train(&cfg, &inputs).expect("run failed")
 }
@@ -212,6 +213,7 @@ fn main() {
                 k_max: None,
                 compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
                 shards: 1,
+                wire: hybrid_sgd::coordinator::WireFormat::Dense,
             };
             let m = train(&cfg, &inputs).expect("xla run failed");
             report("AOT XLA (jnp)", &m);

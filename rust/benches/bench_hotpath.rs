@@ -6,10 +6,154 @@
 //!     BENCH_QUICK=1 cargo bench ...              # smoke
 
 use hybrid_sgd::coordinator::buffer::GradientBuffer;
+use hybrid_sgd::coordinator::compress::{
+    dequantize_i8, quantize_i8_into, GradView, QuantGrad, SparseGrad, TopKCompressor,
+};
 use hybrid_sgd::coordinator::params::ParamStore;
 use hybrid_sgd::coordinator::{Aggregator, Policy, Schedule, ShardedAggregator};
 use hybrid_sgd::util::bench::{black_box, Bencher};
+use hybrid_sgd::util::json::Json;
 use hybrid_sgd::util::rng::Pcg64;
+
+/// One wire-format case for the `BENCH_compress.json` baseline.
+struct WireCase {
+    name: String,
+    dim: usize,
+    ops_per_sec: f64,
+    bytes_per_step: usize,
+}
+
+/// Compress / decompress / accumulate micro-benches for the gradient wire
+/// formats at d ∈ {1e4, 1e5, 1e6}, plus the bytes-on-wire acceptance check:
+/// top-k at 1% density must cut per-step bytes ≥ 50× vs dense f32.
+fn bench_wire_formats(b: &mut Bencher) -> Vec<WireCase> {
+    println!("\n== gradient wire formats: compress / decompress / accumulate ==");
+    let mut cases = Vec::new();
+    let mut record = |name: &str, dim: usize, mean_ns: f64, bytes: usize| {
+        cases.push(WireCase {
+            name: name.to_string(),
+            dim,
+            ops_per_sec: 1e9 / mean_ns,
+            bytes_per_step: bytes,
+        });
+    };
+    for &dim in &[10_000usize, 100_000, 1_000_000] {
+        let mut rng = Pcg64::seeded(7);
+        let mut grad = vec![0.0f32; dim];
+        rng.fill_normal(&mut grad, 1.0);
+        let k = dim / 100; // 1% density
+        let dense_bytes = dim * 4;
+
+        // dense baseline: the accumulate the PS always ran
+        let mut buf = GradientBuffer::new(dim, 8);
+        let r = b.bench(&format!("dense accumulate d={dim}"), || {
+            buf.push(black_box(&grad), 0, 0, 0);
+            if buf.len() >= 64 {
+                buf.clear();
+            }
+        });
+        record("dense_accumulate", dim, r.mean_ns, dense_bytes);
+
+        // top-k 1%: allocation-free compress into a reused SparseGrad
+        let mut comp = TopKCompressor::new(dim, k);
+        let mut sg = SparseGrad::with_dim(dim);
+        let r = b.bench(&format!("topk 1% compress d={dim}"), || {
+            comp.compress_into(black_box(&grad), &mut sg);
+        });
+        let sparse_bytes = sg.payload_bytes();
+        record("topk1pct_compress", dim, r.mean_ns, sparse_bytes);
+
+        // sparse accumulate: O(nnz) scatter-add, never densified
+        let mut buf2 = GradientBuffer::new(dim, 8);
+        let r = b.bench(&format!("topk 1% accumulate d={dim}"), || {
+            buf2.push_view(
+                GradView::Sparse {
+                    idx: black_box(&sg.idx),
+                    val: &sg.val,
+                },
+                0,
+                0,
+                0,
+            );
+            if buf2.len() >= 64 {
+                buf2.clear();
+            }
+        });
+        record("topk1pct_accumulate", dim, r.mean_ns, sparse_bytes);
+
+        // int8: quantize into a reused buffer; accumulate dequantizes on
+        // the fly
+        let mut q = QuantGrad::empty();
+        let r = b.bench(&format!("int8 quantize d={dim}"), || {
+            quantize_i8_into(black_box(&grad), &mut q);
+        });
+        record("int8_quantize", dim, r.mean_ns, q.payload_bytes());
+        let mut buf3 = GradientBuffer::new(dim, 8);
+        let r = b.bench(&format!("int8 accumulate d={dim}"), || {
+            buf3.push_view(
+                GradView::Quant {
+                    scale: q.scale,
+                    data: black_box(&q.data),
+                },
+                0,
+                0,
+                0,
+            );
+            if buf3.len() >= 64 {
+                buf3.clear();
+            }
+        });
+        record("int8_accumulate", dim, r.mean_ns, q.payload_bytes());
+        let r = b.bench(&format!("int8 dequantize d={dim}"), || {
+            black_box(dequantize_i8(&q));
+        });
+        record("int8_dequantize", dim, r.mean_ns, q.payload_bytes());
+
+        // Acceptance: top-k at 1% density cuts per-step bytes ≥ 50×.
+        assert!(
+            dense_bytes >= 50 * sparse_bytes,
+            "top-k@1% must reduce bytes-on-wire ≥ 50×: dense {dense_bytes} vs sparse {sparse_bytes}"
+        );
+        println!(
+            "      bytes/step d={dim}: dense {dense_bytes}, topk1% {sparse_bytes} ({:.0}x), int8 {} ({:.1}x)",
+            dense_bytes as f64 / sparse_bytes as f64,
+            q.payload_bytes(),
+            dense_bytes as f64 / q.payload_bytes() as f64,
+        );
+    }
+    cases
+}
+
+/// Write the dense-vs-topk-vs-int8 ops/sec baseline when asked to
+/// (`BENCH_COMPRESS_OUT=../BENCH_compress.json cargo bench --bench
+/// bench_hotpath` — cargo runs bench binaries with cwd = the package root
+/// `rust/`, so relative paths resolve from there).
+fn write_compress_baseline(cases: &[WireCase]) {
+    let Ok(path) = std::env::var("BENCH_COMPRESS_OUT") else {
+        return;
+    };
+    let mut rows = Vec::new();
+    for c in cases {
+        rows.push(Json::from_pairs(vec![
+            ("name", Json::Str(c.name.clone())),
+            ("dim", Json::Num(c.dim as f64)),
+            ("ops_per_sec", Json::Num(c.ops_per_sec)),
+            ("bytes_per_step", Json::Num(c.bytes_per_step as f64)),
+        ]));
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_hotpath/wire_formats".to_string())),
+        (
+            "quick",
+            Json::Bool(std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")),
+        ),
+        ("cases", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -123,6 +267,9 @@ fn main() {
             });
         }
     }
+
+    let wire_cases = bench_wire_formats(&mut b);
+    write_compress_baseline(&wire_cases);
 
     b.summary();
     // Headline check: the hybrid PS step on the largest model must be far

@@ -6,6 +6,7 @@
 //! The artifact-dependent sections skip gracefully when `artifacts/` is
 //! absent; the shard-scaling section always runs.
 
+use hybrid_sgd::coordinator::compress::{submission_bytes, GradEncoder, WireFormat};
 use hybrid_sgd::coordinator::params::ParamStore;
 use hybrid_sgd::coordinator::{Aggregator, Policy, ShardLayout};
 use hybrid_sgd::engine::GradEngine;
@@ -72,8 +73,79 @@ fn bench_shard_scaling() {
     println!();
 }
 
+/// End-to-end wire-format throughput on the native stack: encode G
+/// gradients per format, then drive the per-arrival server work
+/// (aggregate + update + snapshot publish) from the encoded payloads —
+/// dense vs top-k 1% vs int8 at identical gradient counts, with the
+/// bytes-on-wire each format put on the channel. Equal-*bandwidth*
+/// comparisons divide throughput by these byte counts.
+fn bench_wire_throughput() {
+    println!("== wire formats: end-to-end encode + server apply throughput (native) ==");
+    let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+    let dim = 111_936; // transformer-scale flat θ
+    let grads_n = if quick { 100 } else { 500 };
+    let workers = 8;
+    let layout = ShardLayout::new(dim, 1);
+    let mut rng = Pcg64::seeded(44);
+    let pool: Vec<Vec<f32>> = (0..8)
+        .map(|_| {
+            let mut g = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect();
+    let init = vec![0.1f32; dim];
+
+    let mut dense_thr = 0.0f64;
+    for wire in [
+        WireFormat::Dense,
+        WireFormat::parse("topk:0.01").unwrap(),
+        WireFormat::Int8,
+        WireFormat::parse("topk+int8:0.01").unwrap(),
+    ] {
+        let mut enc = GradEncoder::new(wire.clone(), dim, layout.shards());
+        let mut store = ParamStore::new(init.clone(), 0.01);
+        let mut agg = Aggregator::new(Policy::Async, dim, workers);
+        let mut payloads = Vec::new();
+        let mut bytes = 0u64;
+        let t0 = Instant::now();
+        for i in 0..grads_n {
+            enc.encode(&pool[i % pool.len()], &layout, &mut payloads);
+            bytes += submission_bytes(&payloads, &layout);
+            let v = store.version();
+            agg.on_gradient_view(
+                &mut store,
+                payloads[0].view(layout.range(0)),
+                i % workers,
+                v,
+                1.0,
+            );
+        }
+        black_box(store.version());
+        let secs = t0.elapsed().as_secs_f64();
+        let thr = grads_n as f64 / secs;
+        if wire.is_dense() {
+            dense_thr = thr;
+        }
+        println!(
+            "  {:<16} {:>8.0} grads/s  {:>7.2} MB on wire ({:>5.1}x vs dense{})",
+            wire.to_string(),
+            thr,
+            bytes as f64 / 1e6,
+            (grads_n as f64 * dim as f64 * 4.0) / bytes as f64,
+            if dense_thr > 0.0 && thr < dense_thr * 0.5 {
+                ", slower apply"
+            } else {
+                ""
+            }
+        );
+    }
+    println!();
+}
+
 fn main() {
     bench_shard_scaling();
+    bench_wire_throughput();
 
     let Ok(man) = Manifest::load("artifacts") else {
         println!("SKIP bench_runtime (AOT sections): artifacts/ not built (run `make artifacts`)");

@@ -71,6 +71,8 @@ fn main() -> anyhow::Result<()> {
         k_max: None,
         compute_floor: Duration::from_millis(20),
         shards: args.usize_or("shards", 1),
+        wire: hybrid_sgd::coordinator::WireFormat::parse(&args.str_or("compress", "dense"))
+            .expect("bad --compress (dense | topk:<k|frac> | int8 | topk+int8:<k|frac>)"),
     };
     let _ = Schedule::Step { step: 1 }; // (see threshold.rs for all schedules)
 

@@ -91,6 +91,7 @@ fn main() -> anyhow::Result<()> {
             k_max: None,
             compute_floor: Duration::from_millis(20),
             shards: args.usize_or("shards", 1),
+            wire: hybrid_sgd::coordinator::WireFormat::Dense,
         };
         let m = train(&cfg, &inputs)?;
         let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));

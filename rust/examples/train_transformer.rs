@@ -97,6 +97,7 @@ fn main() -> anyhow::Result<()> {
         k_max: None,
         compute_floor: Duration::ZERO,
         shards: args.usize_or("shards", 1),
+        wire: hybrid_sgd::coordinator::WireFormat::Dense,
     };
 
     println!("training for ~{secs:.0}s (~{steps} gradient steps) ...\n");

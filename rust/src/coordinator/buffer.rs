@@ -10,6 +10,14 @@
 //! Under the sharded parameter server each shard owns one buffer of its
 //! slice length (`dim = |shard|`), so the total buffered state stays O(d)
 //! across any shard count and each shard's flush is an O(d / S) scan.
+//!
+//! Compressed submissions ([`GradView::Sparse`] / [`GradView::Quant`] /
+//! [`GradView::SparseQuant`]) are accumulated **without densifying**: a
+//! sparse arrival is an O(nnz) scatter-add into the running sum and an
+//! int8 arrival dequantizes on the fly — the buffer never materialises a
+//! dense copy of a payload.
+
+use super::compress::GradView;
 
 /// Accumulating gradient buffer with staleness statistics.
 pub struct GradientBuffer {
@@ -41,13 +49,23 @@ impl GradientBuffer {
         self.count == 0
     }
 
-    /// Accumulate one gradient computed at `base_version` by `worker`,
-    /// with `current_version` the PS version at arrival.
+    /// Accumulate one dense gradient computed at `base_version` by
+    /// `worker`, with `current_version` the PS version at arrival.
     pub fn push(&mut self, grad: &[f32], worker: usize, base_version: u64, current_version: u64) {
-        debug_assert_eq!(grad.len(), self.sum.len());
-        for (s, &g) in self.sum.iter_mut().zip(grad) {
-            *s += g;
-        }
+        self.push_view(GradView::Dense(grad), worker, base_version, current_version);
+    }
+
+    /// Accumulate one gradient arriving in any wire format: dense adds run
+    /// the exact summing loop `push` always did; sparse views scatter-add
+    /// their nnz coordinates; quantized views dequantize on the fly.
+    pub fn push_view(
+        &mut self,
+        grad: GradView<'_>,
+        worker: usize,
+        base_version: u64,
+        current_version: u64,
+    ) {
+        grad.add_to(&mut self.sum);
         self.count += 1;
         self.per_worker[worker] += 1;
         let stale = current_version.saturating_sub(base_version);
@@ -122,6 +140,37 @@ mod tests {
         assert_eq!(b.distinct_workers(), 0);
         assert_eq!(b.mean_staleness(), 0.0);
         assert_eq!(b.max_staleness(), 0);
+    }
+
+    #[test]
+    fn sparse_and_quant_views_accumulate_without_densifying() {
+        let mut dense = GradientBuffer::new(4, 2);
+        let mut sparse = GradientBuffer::new(4, 2);
+        dense.push(&[1.0, 0.0, -2.0, 0.0], 0, 0, 1);
+        sparse.push_view(
+            GradView::Sparse {
+                idx: &[0, 2],
+                val: &[1.0, -2.0],
+            },
+            0,
+            0,
+            1,
+        );
+        assert_eq!(dense.sum(), sparse.sum());
+        assert_eq!(dense.mean_staleness(), sparse.mean_staleness());
+        // int8 view dequantizes on the fly: 127 · (2/127) = 2.0 exactly
+        let mut quant = GradientBuffer::new(2, 1);
+        quant.push_view(
+            GradView::Quant {
+                scale: 2.0 / 127.0,
+                data: &[127, -127],
+            },
+            0,
+            0,
+            0,
+        );
+        assert!((quant.sum()[0] - 2.0).abs() < 1e-6);
+        assert!((quant.sum()[1] + 2.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,20 +1,134 @@
-//! Gradient compression codecs.
+//! Gradient compression codecs and the selectable **wire format** layer.
 //!
-//! The paper's related-work survey credits Horovod's gradient compression as
-//! a scalability lever for synchronous training; this module provides the
-//! two standard codecs as an optional worker-side transform so the framework
-//! covers that axis too:
+//! The paper's related-work survey credits gradient compression as a
+//! scalability lever: in any real deployment of the hybrid scheme the
+//! dominant cost is gradient *communication*, not the SGD apply. This
+//! module makes compression a first-class wire format threaded through the
+//! whole pipeline (workers encode, shard servers consume encoded views,
+//! the simulator accounts bytes-on-wire):
 //!
-//! - **Top-k sparsification** with error feedback: only the k
-//!   largest-magnitude coordinates are transmitted; the residual is
+//! - **`dense`** — raw f32, the default; bitwise-identical to the
+//!   uncompressed pipeline.
+//! - **`topk:<k|frac>`** — top-k sparsification with error feedback: only
+//!   the k largest-magnitude coordinates are transmitted; the residual is
 //!   accumulated locally and added to the next gradient (the standard
-//!   convergence-preserving trick).
-//! - **Int8 linear quantization**: per-tensor scale, 4× smaller payloads.
+//!   convergence-preserving trick). `topk:100` keeps 100 coordinates,
+//!   `topk:0.01` keeps 1% of the dimension.
+//! - **`int8`** — per-tensor max-abs linear quantization, 4× smaller
+//!   payloads.
+//! - **`topk+int8:<k|frac>`** — both: sparse indices with int8 values
+//!   (5 bytes per coordinate instead of 8).
 //!
-//! Codecs operate on the flat gradient vector and are exercised by the
-//! ablation bench; the default pipeline sends raw f32 (the channel transport
-//! is in-process, so compression is about *fidelity semantics*, not
-//! bandwidth, in this reproduction — the codec math is what the tests pin).
+//! Hot-path contract: [`TopKCompressor::compress_into`] and
+//! [`GradEncoder::encode`] are **allocation-free in steady state** — every
+//! buffer (selection scratch, sparse index/value vectors, per-shard payload
+//! splits) is owned by the compressor/encoder and recycled round-trip, the
+//! same discipline as [`super::params::ParamStore::publish`]. Selection
+//! uses a *total order* (|value| descending, index ascending on ties), so
+//! compressed runs are deterministic across platforms and never panic on
+//! NaN gradients.
+
+use super::shard::ShardLayout;
+use std::cmp::Ordering;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// How worker→server gradient traffic is encoded on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireFormat {
+    /// Raw f32 (4 bytes/coordinate). The default; golden-trace identical
+    /// to the pre-wire-format pipeline.
+    Dense,
+    /// Top-k sparsification with error feedback (8 bytes/kept coordinate).
+    TopK(KSpec),
+    /// Int8 linear quantization (1 byte/coordinate + 4-byte scale).
+    Int8,
+    /// Top-k then int8 values (5 bytes/kept coordinate + 4-byte scale).
+    TopKInt8(KSpec),
+}
+
+/// Top-k size: an absolute coordinate count or a fraction of the dimension.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KSpec {
+    Count(usize),
+    Frac(f64),
+}
+
+impl KSpec {
+    fn parse(s: &str) -> anyhow::Result<KSpec> {
+        if s.contains('.') {
+            let f: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad top-k fraction `{s}`"))?;
+            anyhow::ensure!(
+                f > 0.0 && f < 1.0 && f.is_finite(),
+                "top-k fraction `{s}` must be in (0, 1)"
+            );
+            Ok(KSpec::Frac(f))
+        } else {
+            let n: usize = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad top-k count `{s}`"))?;
+            Ok(KSpec::Count(n))
+        }
+    }
+
+    /// Concrete k for a gradient of `dim` coordinates, clamped to
+    /// `[1, dim]` so degenerate specs (`topk:0`, `topk:10_000_000`) never
+    /// underflow or overrun the selection.
+    pub fn resolve(&self, dim: usize) -> usize {
+        let k = match *self {
+            KSpec::Count(n) => n,
+            KSpec::Frac(f) => (f * dim as f64).round() as usize,
+        };
+        k.clamp(1, dim.max(1))
+    }
+}
+
+impl std::fmt::Display for KSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KSpec::Count(n) => write!(f, "{n}"),
+            KSpec::Frac(fr) => write!(f, "{fr}"),
+        }
+    }
+}
+
+impl WireFormat {
+    /// Parse CLI/DSL syntax: `dense | topk:<k|frac> | int8 | topk+int8:<k|frac>`.
+    pub fn parse(s: &str) -> anyhow::Result<WireFormat> {
+        if s == "dense" {
+            return Ok(WireFormat::Dense);
+        }
+        if s == "int8" {
+            return Ok(WireFormat::Int8);
+        }
+        if let Some(rest) = s.strip_prefix("topk+int8:") {
+            return Ok(WireFormat::TopKInt8(KSpec::parse(rest)?));
+        }
+        if let Some(rest) = s.strip_prefix("topk:") {
+            return Ok(WireFormat::TopK(KSpec::parse(rest)?));
+        }
+        anyhow::bail!(
+            "unknown wire format `{s}` (dense | topk:<k|frac> | int8 | topk+int8:<k|frac>)"
+        )
+    }
+
+    pub fn is_dense(&self) -> bool {
+        *self == WireFormat::Dense
+    }
+}
+
+impl std::fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireFormat::Dense => write!(f, "dense"),
+            WireFormat::TopK(k) => write!(f, "topk:{k}"),
+            WireFormat::Int8 => write!(f, "int8"),
+            WireFormat::TopKInt8(k) => write!(f, "topk+int8:{k}"),
+        }
+    }
+}
 
 /// A sparse gradient: sorted coordinate/value pairs.
 #[derive(Clone, Debug, PartialEq)]
@@ -25,6 +139,15 @@ pub struct SparseGrad {
 }
 
 impl SparseGrad {
+    /// An empty sparse gradient of the given dimension.
+    pub fn with_dim(dim: usize) -> SparseGrad {
+        SparseGrad {
+            dim,
+            idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+
     /// Dense reconstruction (zeros elsewhere).
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0; self.dim];
@@ -42,19 +165,25 @@ impl SparseGrad {
     /// Split into per-shard sparse gradients with indices rebased to each
     /// shard's local coordinate space — what a compressed submission to the
     /// sharded parameter server fans out as. Indices are sorted, so this is
-    /// a single linear scan. Like the codecs themselves (see module docs),
-    /// this is exercised by tests/ablations, not the default dense
-    /// `Arc`-fan-out pipeline.
-    pub fn split_shards(&self, layout: &crate::coordinator::shard::ShardLayout) -> Vec<SparseGrad> {
-        assert_eq!(self.dim, layout.dim());
-        let mut out: Vec<SparseGrad> = layout
-            .ranges()
-            .map(|r| SparseGrad {
-                dim: r.len(),
-                idx: Vec::new(),
-                val: Vec::new(),
-            })
+    /// a single linear scan.
+    pub fn split_shards(&self, layout: &ShardLayout) -> Vec<SparseGrad> {
+        let mut out: Vec<SparseGrad> = (0..layout.shards())
+            .map(|_| SparseGrad::with_dim(0))
             .collect();
+        self.split_shards_into(layout, &mut out);
+        out
+    }
+
+    /// [`SparseGrad::split_shards`] into caller-owned buffers (index/value
+    /// vectors are cleared and refilled, never reallocated in steady state).
+    pub fn split_shards_into(&self, layout: &ShardLayout, out: &mut [SparseGrad]) {
+        assert_eq!(self.dim, layout.dim());
+        assert_eq!(out.len(), layout.shards());
+        for (part, r) in out.iter_mut().zip(layout.ranges()) {
+            part.dim = r.len();
+            part.idx.clear();
+            part.val.clear();
+        }
         let mut shard = 0usize;
         for (&i, &v) in self.idx.iter().zip(&self.val) {
             while !layout.range(shard).contains(&(i as usize)) {
@@ -63,7 +192,62 @@ impl SparseGrad {
             out[shard].idx.push(i - layout.range(shard).start as u32);
             out[shard].val.push(v);
         }
+    }
+}
+
+/// Int8 linearly-quantized gradient.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantGrad {
+    pub scale: f32,
+    pub data: Vec<i8>,
+}
+
+impl QuantGrad {
+    /// An empty quantized gradient (fill with [`quantize_i8_into`]).
+    pub fn empty() -> QuantGrad {
+        QuantGrad {
+            scale: 1.0,
+            data: Vec::new(),
+        }
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() + 4
+    }
+}
+
+/// Top-k sparse gradient with int8-quantized values (shard-local indices
+/// when produced by the encoder's per-shard split).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseQuantGrad {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    pub scale: f32,
+    pub data: Vec<i8>,
+}
+
+impl SparseQuantGrad {
+    pub fn with_dim(dim: usize) -> SparseQuantGrad {
+        SparseQuantGrad {
+            dim,
+            idx: Vec::new(),
+            scale: 1.0,
+            data: Vec::new(),
+        }
+    }
+
+    /// Dense f32 reconstruction (zeros elsewhere).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        for (&i, &b) in self.idx.iter().zip(&self.data) {
+            out[i as usize] = b as f32 * self.scale;
+        }
         out
+    }
+
+    /// Payload size in bytes (u32 index + i8 value per entry + scale).
+    pub fn payload_bytes(&self) -> usize {
+        self.idx.len() * (4 + 1) + 4
     }
 }
 
@@ -72,57 +256,77 @@ pub struct TopKCompressor {
     k: usize,
     /// Accumulated residual (error feedback). Public for diagnostics/tests.
     pub residual: Vec<f32>,
-    /// Scratch for selection.
+    /// Scratch for selection (recycled; never reallocated in steady state).
     scratch: Vec<(f32, u32)>,
 }
 
 impl TopKCompressor {
+    /// `k` is clamped to `[1, dim]` — `k = 0` and `k ≥ dim` are valid
+    /// inputs (the latter degenerates to a dense-as-sparse transmission).
     pub fn new(dim: usize, k: usize) -> Self {
-        assert!(k >= 1);
         TopKCompressor {
-            k: k.min(dim),
+            k: k.clamp(1, dim.max(1)),
             residual: vec![0.0; dim],
             scratch: Vec::with_capacity(dim),
         }
     }
 
+    /// Effective (clamped) k.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Total-order ranking: |value| descending, index ascending on ties.
+    /// `total_cmp` makes NaN gradients rank deterministically (largest)
+    /// instead of panicking, and the index tie-break keeps compressed runs
+    /// bitwise-reproducible across platforms and sort implementations.
+    fn rank(a: &(f32, u32), b: &(f32, u32)) -> Ordering {
+        b.0.abs()
+            .total_cmp(&a.0.abs())
+            .then_with(|| a.1.cmp(&b.1))
+    }
+
     /// Compress `grad + residual`, keeping the top-k magnitudes; the rest
-    /// feeds back into the residual.
-    pub fn compress(&mut self, grad: &[f32]) -> SparseGrad {
+    /// feeds back into the residual. Writes into `out`, reusing its
+    /// buffers — zero allocations once capacities are warm.
+    pub fn compress_into(&mut self, grad: &[f32], out: &mut SparseGrad) {
         assert_eq!(grad.len(), self.residual.len());
+        let dim = grad.len();
+        out.dim = dim;
+        out.idx.clear();
+        out.val.clear();
+        if dim == 0 {
+            return;
+        }
+        let k = self.k.min(dim);
         self.scratch.clear();
-        for (i, (&g, r)) in grad.iter().zip(self.residual.iter()).enumerate() {
+        for (i, (&g, &r)) in grad.iter().zip(self.residual.iter()).enumerate() {
             self.scratch.push((g + r, i as u32));
         }
-        // partial selection by |value|
-        let k = self.k;
-        self.scratch
-            .select_nth_unstable_by(k - 1, |a, b| b.0.abs().partial_cmp(&a.0.abs()).unwrap());
-        let mut idx: Vec<u32> = self.scratch[..k].iter().map(|&(_, i)| i).collect();
-        let mut pairs: Vec<(u32, f32)> = self.scratch[..k]
-            .iter()
-            .map(|&(v, i)| (i, v))
-            .collect();
-        pairs.sort_unstable_by_key(|&(i, _)| i);
-        idx.sort_unstable();
-        let val: Vec<f32> = pairs.iter().map(|&(_, v)| v).collect();
-        // update residual: transmitted coords reset, others accumulate
-        let mut transmitted = vec![false; self.residual.len()];
-        for &i in &idx {
-            transmitted[i as usize] = true;
+        // Partial selection by the total-order rank; skip when everything
+        // is transmitted (k = dim would index one past the partition).
+        if k < dim {
+            self.scratch.select_nth_unstable_by(k - 1, Self::rank);
         }
-        for (i, r) in self.residual.iter_mut().enumerate() {
-            if transmitted[i] {
-                *r = 0.0;
-            } else {
-                *r += grad[i];
-            }
+        self.scratch[..k].sort_unstable_by_key(|&(_, i)| i);
+        out.idx.extend(self.scratch[..k].iter().map(|&(_, i)| i));
+        out.val.extend(self.scratch[..k].iter().map(|&(v, _)| v));
+        // Error feedback: accumulate the whole gradient, then zero the
+        // transmitted coordinates — identical to the mask formulation
+        // (transmitted → 0, rest → r + g) without the O(dim) mask buffer.
+        for (r, &g) in self.residual.iter_mut().zip(grad) {
+            *r += g;
         }
-        SparseGrad {
-            dim: grad.len(),
-            idx,
-            val,
+        for &i in &out.idx {
+            self.residual[i as usize] = 0.0;
         }
+    }
+
+    /// Allocating convenience wrapper around [`TopKCompressor::compress_into`].
+    pub fn compress(&mut self, grad: &[f32]) -> SparseGrad {
+        let mut out = SparseGrad::with_dim(grad.len());
+        self.compress_into(grad, &mut out);
+        out
     }
 
     /// Residual L1 mass (diagnostics).
@@ -131,33 +335,397 @@ impl TopKCompressor {
     }
 }
 
-/// Int8 linearly-quantized gradient.
-#[derive(Clone, Debug)]
-pub struct QuantGrad {
-    pub scale: f32,
-    pub data: Vec<i8>,
-}
-
-impl QuantGrad {
-    pub fn payload_bytes(&self) -> usize {
-        self.data.len() + 4
+/// Per-tensor quantization scale for a max-abs of `maxabs`.
+fn i8_scale(maxabs: f32) -> f32 {
+    if maxabs == 0.0 {
+        1.0
+    } else {
+        maxabs / 127.0
     }
 }
 
-/// Quantize to int8 with a per-tensor max-abs scale.
-pub fn quantize_i8(grad: &[f32]) -> QuantGrad {
+/// One value through the int8 quantizer (shared by every int8 format).
+fn quantize_val(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize to int8 with a per-tensor max-abs scale, reusing `out`'s buffer.
+pub fn quantize_i8_into(grad: &[f32], out: &mut QuantGrad) {
     let maxabs = grad.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let scale = if maxabs == 0.0 { 1.0 } else { maxabs / 127.0 };
-    let data = grad
-        .iter()
-        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
-        .collect();
-    QuantGrad { scale, data }
+    let scale = i8_scale(maxabs);
+    out.scale = scale;
+    out.data.clear();
+    out.data.extend(grad.iter().map(|&v| quantize_val(v, scale)));
+}
+
+/// Allocating convenience wrapper around [`quantize_i8_into`].
+pub fn quantize_i8(grad: &[f32]) -> QuantGrad {
+    let mut out = QuantGrad::empty();
+    quantize_i8_into(grad, &mut out);
+    out
 }
 
 /// Dequantize back to f32.
 pub fn dequantize_i8(q: &QuantGrad) -> Vec<f32> {
     q.data.iter().map(|&b| b as f32 * q.scale).collect()
+}
+
+/// One shard's portion of an encoded gradient submission — what travels on
+/// a shard channel (or through a simulator delivery event). Full-dimension
+/// formats (dense, int8) ship one shared buffer and every shard reads its
+/// slice; sparse formats are pre-split per shard with local indices.
+#[derive(Clone, Debug)]
+pub enum ShardGrad {
+    /// Full-dim dense buffer shared across all shard messages of one
+    /// submission (`Arc` fan-out, as the uncompressed pipeline always did).
+    Dense(Arc<Vec<f32>>),
+    /// Shard-local sparse coordinates (rebased by `split_shards`).
+    Sparse(Arc<SparseGrad>),
+    /// Full-dim int8 buffer shared across shards + per-tensor scale.
+    Quant(Arc<QuantGrad>),
+    /// Shard-local sparse coordinates with int8 values.
+    SparseQuant(Arc<SparseQuantGrad>),
+}
+
+impl ShardGrad {
+    /// Borrow this payload as the shard's [`GradView`]. `range` is the
+    /// shard's slice of the flat θ; shared full-dim payloads are sliced by
+    /// it, pre-split sparse payloads already live in shard coordinates.
+    pub fn view(&self, range: Range<usize>) -> GradView<'_> {
+        match self {
+            ShardGrad::Dense(g) => GradView::Dense(&g[range]),
+            ShardGrad::Sparse(s) => {
+                debug_assert_eq!(s.dim, range.len());
+                GradView::Sparse {
+                    idx: &s.idx,
+                    val: &s.val,
+                }
+            }
+            ShardGrad::Quant(q) => GradView::Quant {
+                scale: q.scale,
+                data: &q.data[range],
+            },
+            ShardGrad::SparseQuant(s) => {
+                debug_assert_eq!(s.dim, range.len());
+                GradView::SparseQuant {
+                    idx: &s.idx,
+                    scale: s.scale,
+                    data: &s.data,
+                }
+            }
+        }
+    }
+
+    /// Bytes-on-wire attributable to one shard delivery of this payload.
+    /// Shared full-dim payloads charge the shard its slice (`shard_len`
+    /// coordinates); pre-split payloads charge their own entries.
+    pub fn wire_bytes(&self, shard_len: usize) -> usize {
+        match self {
+            ShardGrad::Dense(_) => shard_len * 4,
+            ShardGrad::Sparse(s) => s.idx.len() * (4 + 4),
+            ShardGrad::Quant(_) => shard_len + 4,
+            ShardGrad::SparseQuant(s) => s.idx.len() * (4 + 1) + 4,
+        }
+    }
+}
+
+/// Total bytes-on-wire of one submission's per-shard payloads.
+pub fn submission_bytes(payloads: &[ShardGrad], layout: &ShardLayout) -> u64 {
+    debug_assert_eq!(payloads.len(), layout.shards());
+    payloads
+        .iter()
+        .enumerate()
+        .map(|(s, p)| p.wire_bytes(layout.range(s).len()) as u64)
+        .sum()
+}
+
+/// Worker-side wire encoder: owns the error-feedback state and **every**
+/// buffer the encode path touches, so steady-state encoding performs zero
+/// allocations. Payload buffers are recycled round-trip: each `encode`
+/// first reclaims the previous round's buffers via `Arc::try_unwrap` (the
+/// shard protocol guarantees consumers drop their clones before the worker
+/// encodes again; a lost race just falls back to a fresh allocation, as in
+/// the dense pipeline's spare-buffer recycling).
+pub struct GradEncoder {
+    wire: WireFormat,
+    topk: Option<TopKCompressor>,
+    /// Resolved k (0 for formats without sparsification); every per-shard
+    /// sparse buffer is pre-reserved to this capacity so round-to-round
+    /// nnz variation per shard never triggers a regrow.
+    k: usize,
+    /// Full-dim compressed gradient, scratch between compress and split.
+    full_sparse: SparseGrad,
+    /// Per-shard split scratch (drained into payload `Arc`s each round).
+    parts: Vec<SparseGrad>,
+    /// Payload `Arc`s retained from the previous round for recycling.
+    inflight: Vec<ShardGrad>,
+    spare_dense: Option<Vec<f32>>,
+    spare_quant: Option<QuantGrad>,
+    spare_sparse: Vec<SparseGrad>,
+    spare_sq: Vec<SparseQuantGrad>,
+}
+
+impl GradEncoder {
+    pub fn new(wire: WireFormat, dim: usize, shards: usize) -> GradEncoder {
+        let (topk, k) = match &wire {
+            WireFormat::TopK(spec) | WireFormat::TopKInt8(spec) => {
+                let k = spec.resolve(dim);
+                (Some(TopKCompressor::new(dim, k)), k)
+            }
+            _ => (None, 0),
+        };
+        let mut full_sparse = SparseGrad::with_dim(dim);
+        full_sparse.idx.reserve(k);
+        full_sparse.val.reserve(k);
+        GradEncoder {
+            wire,
+            topk,
+            k,
+            full_sparse,
+            parts: Vec::with_capacity(shards),
+            inflight: Vec::with_capacity(shards),
+            spare_dense: None,
+            spare_quant: None,
+            spare_sparse: Vec::with_capacity(shards),
+            spare_sq: Vec::with_capacity(shards),
+        }
+    }
+
+    /// A fresh pool entry sized so no later round can regrow it.
+    fn fresh_sparse(&self) -> SparseGrad {
+        let mut sg = SparseGrad::with_dim(0);
+        sg.idx.reserve(self.k);
+        sg.val.reserve(self.k);
+        sg
+    }
+
+    fn fresh_sq(&self) -> SparseQuantGrad {
+        let mut sq = SparseQuantGrad::with_dim(0);
+        sq.idx.reserve(self.k);
+        sq.data.reserve(self.k);
+        sq
+    }
+
+    pub fn wire(&self) -> &WireFormat {
+        &self.wire
+    }
+
+    /// Error-feedback residual L1 mass (None for formats without feedback).
+    pub fn residual_l1(&self) -> Option<f64> {
+        self.topk.as_ref().map(|c| c.residual_l1())
+    }
+
+    /// Reclaim last round's payload buffers whose consumers are done.
+    fn reclaim(&mut self) {
+        for p in self.inflight.drain(..) {
+            match p {
+                ShardGrad::Dense(a) => {
+                    if let Ok(v) = Arc::try_unwrap(a) {
+                        self.spare_dense = Some(v);
+                    }
+                }
+                ShardGrad::Sparse(a) => {
+                    if let Ok(sg) = Arc::try_unwrap(a) {
+                        self.spare_sparse.push(sg);
+                    }
+                }
+                ShardGrad::Quant(a) => {
+                    if let Ok(q) = Arc::try_unwrap(a) {
+                        self.spare_quant = Some(q);
+                    }
+                }
+                ShardGrad::SparseQuant(a) => {
+                    if let Ok(sq) = Arc::try_unwrap(a) {
+                        self.spare_sq.push(sq);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Encode one full-dim gradient into per-shard payloads (one entry per
+    /// shard, in shard order, replacing `out`'s contents). Clears `out`
+    /// *before* reclaiming so the caller's clones from the previous round
+    /// don't defeat buffer recycling.
+    pub fn encode(&mut self, grad: &[f32], layout: &ShardLayout, out: &mut Vec<ShardGrad>) {
+        out.clear();
+        self.reclaim();
+        let shards = layout.shards();
+        match self.wire {
+            WireFormat::Dense => {
+                let mut buf = self.spare_dense.take().unwrap_or_default();
+                buf.clear();
+                buf.extend_from_slice(grad);
+                let arc = Arc::new(buf);
+                for _ in 0..shards {
+                    out.push(ShardGrad::Dense(Arc::clone(&arc)));
+                }
+                self.inflight.push(ShardGrad::Dense(arc));
+            }
+            WireFormat::Int8 => {
+                let mut q = self.spare_quant.take().unwrap_or_else(QuantGrad::empty);
+                quantize_i8_into(grad, &mut q);
+                let arc = Arc::new(q);
+                for _ in 0..shards {
+                    out.push(ShardGrad::Quant(Arc::clone(&arc)));
+                }
+                self.inflight.push(ShardGrad::Quant(arc));
+            }
+            WireFormat::TopK(_) => {
+                let comp = self.topk.as_mut().expect("top-k state");
+                comp.compress_into(grad, &mut self.full_sparse);
+                self.parts.clear();
+                for _ in 0..shards {
+                    let sg = match self.spare_sparse.pop() {
+                        Some(sg) => sg,
+                        None => self.fresh_sparse(),
+                    };
+                    self.parts.push(sg);
+                }
+                self.full_sparse.split_shards_into(layout, &mut self.parts);
+                for part in self.parts.drain(..) {
+                    let arc = Arc::new(part);
+                    out.push(ShardGrad::Sparse(Arc::clone(&arc)));
+                    self.inflight.push(ShardGrad::Sparse(arc));
+                }
+            }
+            WireFormat::TopKInt8(_) => {
+                let comp = self.topk.as_mut().expect("top-k state");
+                comp.compress_into(grad, &mut self.full_sparse);
+                // One scale over the transmitted values (per-tensor scale,
+                // shared by every shard's payload).
+                let maxabs = self
+                    .full_sparse
+                    .val
+                    .iter()
+                    .fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = i8_scale(maxabs);
+                self.parts.clear();
+                for _ in 0..shards {
+                    let sg = match self.spare_sparse.pop() {
+                        Some(sg) => sg,
+                        None => self.fresh_sparse(),
+                    };
+                    self.parts.push(sg);
+                }
+                self.full_sparse.split_shards_into(layout, &mut self.parts);
+                for part in self.parts.iter() {
+                    let mut sq = match self.spare_sq.pop() {
+                        Some(sq) => sq,
+                        None => self.fresh_sq(),
+                    };
+                    sq.dim = part.dim;
+                    sq.scale = scale;
+                    sq.idx.clear();
+                    sq.idx.extend_from_slice(&part.idx);
+                    sq.data.clear();
+                    sq.data
+                        .extend(part.val.iter().map(|&v| quantize_val(v, scale)));
+                    let arc = Arc::new(sq);
+                    out.push(ShardGrad::SparseQuant(Arc::clone(&arc)));
+                    self.inflight.push(ShardGrad::SparseQuant(arc));
+                }
+                // The f32 split parts were only scratch: straight back to
+                // the pool.
+                self.spare_sparse.append(&mut self.parts);
+            }
+        }
+    }
+}
+
+/// A borrowed view of one shard's slice of a gradient submission, in
+/// whatever wire format it arrived. The pure aggregation state machines
+/// ([`super::policy::Aggregator`], [`super::buffer::GradientBuffer`],
+/// [`super::params::ParamStore`]) consume views, so sparse submissions are
+/// scatter-added in O(nnz) and int8 ones dequantized on the fly — nothing
+/// densifies a payload before the flush.
+#[derive(Clone, Copy, Debug)]
+pub enum GradView<'a> {
+    Dense(&'a [f32]),
+    Sparse {
+        idx: &'a [u32],
+        val: &'a [f32],
+    },
+    Quant {
+        scale: f32,
+        data: &'a [i8],
+    },
+    SparseQuant {
+        idx: &'a [u32],
+        scale: f32,
+        data: &'a [i8],
+    },
+}
+
+impl GradView<'_> {
+    /// Coordinates carried (dense length or nnz).
+    pub fn nnz(&self) -> usize {
+        match self {
+            GradView::Dense(g) => g.len(),
+            GradView::Sparse { idx, .. } => idx.len(),
+            GradView::Quant { data, .. } => data.len(),
+            GradView::SparseQuant { idx, .. } => idx.len(),
+        }
+    }
+
+    /// Scatter-add into a dense accumulator of the shard dimension. The
+    /// dense arm is the exact summing loop the buffer always ran (bitwise
+    /// identity for `compress=dense`); sparse arms touch only their nnz.
+    pub fn add_to(&self, sum: &mut [f32]) {
+        match *self {
+            GradView::Dense(g) => {
+                debug_assert_eq!(g.len(), sum.len());
+                for (s, &g) in sum.iter_mut().zip(g) {
+                    *s += g;
+                }
+            }
+            GradView::Sparse { idx, val } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    sum[i as usize] += v;
+                }
+            }
+            GradView::Quant { scale, data } => {
+                debug_assert_eq!(data.len(), sum.len());
+                for (s, &b) in sum.iter_mut().zip(data) {
+                    *s += b as f32 * scale;
+                }
+            }
+            GradView::SparseQuant { idx, scale, data } => {
+                for (&i, &b) in idx.iter().zip(data) {
+                    sum[i as usize] += b as f32 * scale;
+                }
+            }
+        }
+    }
+
+    /// Apply as a single SGD step: θ[i] ← θ[i] − lr · g[i] (the
+    /// asynchronous application; O(nnz) for sparse arms).
+    pub fn apply_to(&self, theta: &mut [f32], lr: f32) {
+        match *self {
+            GradView::Dense(g) => {
+                debug_assert_eq!(g.len(), theta.len());
+                for (t, &g) in theta.iter_mut().zip(g) {
+                    *t -= lr * g;
+                }
+            }
+            GradView::Sparse { idx, val } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    theta[i as usize] -= lr * v;
+                }
+            }
+            GradView::Quant { scale, data } => {
+                debug_assert_eq!(data.len(), theta.len());
+                for (t, &b) in theta.iter_mut().zip(data) {
+                    *t -= lr * (b as f32 * scale);
+                }
+            }
+            GradView::SparseQuant { idx, scale, data } => {
+                for (&i, &b) in idx.iter().zip(data) {
+                    theta[i as usize] -= lr * (b as f32 * scale);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -219,6 +787,72 @@ mod tests {
     }
 
     #[test]
+    fn topk_k_clamped_to_valid_range() {
+        // k = 0 used to underflow (`k - 1`); now clamps to 1.
+        let mut c = TopKCompressor::new(4, 0);
+        assert_eq!(c.k(), 1);
+        let s = c.compress(&[1.0, -2.0, 0.5, 0.0]);
+        assert_eq!(s.idx, vec![1]);
+        assert_eq!(s.val, vec![-2.0]);
+        // k ≥ dim used to panic in select_nth_unstable_by; now transmits
+        // everything (and the residual stays empty).
+        let mut c = TopKCompressor::new(3, 99);
+        assert_eq!(c.k(), 3);
+        let s = c.compress(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.idx, vec![0, 1, 2]);
+        assert_eq!(s.val, vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.residual_l1(), 0.0);
+    }
+
+    #[test]
+    fn topk_nan_gradient_does_not_panic() {
+        // `partial_cmp().unwrap()` used to panic on NaN; the total-order
+        // comparator ranks NaN largest, deterministically.
+        let mut c = TopKCompressor::new(4, 2);
+        let s = c.compress(&[1.0, f32::NAN, 3.0, 0.5]);
+        assert_eq!(s.idx.len(), 2);
+        assert!(s.idx.contains(&1), "NaN coordinate ranks largest: {:?}", s.idx);
+        // subsequent compressions keep working
+        let s2 = c.compress(&[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(s2.idx.len(), 2);
+    }
+
+    #[test]
+    fn topk_ties_break_by_lowest_index() {
+        // All-equal magnitudes: selection must deterministically keep the
+        // lowest indices (the bitwise-reproducibility contract).
+        let mut c = TopKCompressor::new(6, 3);
+        let s = c.compress(&[1.0, -1.0, 1.0, -1.0, 1.0, 1.0]);
+        assert_eq!(s.idx, vec![0, 1, 2]);
+        assert_eq!(s.val, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn compress_into_is_allocation_free_in_steady_state() {
+        // The reuse contract: after a warm-up round, repeated compressions
+        // never regrow the output or scratch buffers (same discipline as
+        // `publish_recycles_buffers` in params.rs).
+        let dim = 512;
+        let mut rng = Pcg64::seeded(9);
+        let mut g = vec![0.0f32; dim];
+        let mut c = TopKCompressor::new(dim, 32);
+        let mut out = SparseGrad::with_dim(dim);
+        rng.fill_normal(&mut g, 1.0);
+        c.compress_into(&g, &mut out);
+        let idx_ptr = out.idx.as_ptr() as usize;
+        let val_ptr = out.val.as_ptr() as usize;
+        let (idx_cap, val_cap) = (out.idx.capacity(), out.val.capacity());
+        for _ in 0..100 {
+            rng.fill_normal(&mut g, 1.0);
+            c.compress_into(&g, &mut out);
+        }
+        assert_eq!(out.idx.as_ptr() as usize, idx_ptr, "idx buffer reallocated");
+        assert_eq!(out.val.as_ptr() as usize, val_ptr, "val buffer reallocated");
+        assert_eq!(out.idx.capacity(), idx_cap);
+        assert_eq!(out.val.capacity(), val_cap);
+    }
+
+    #[test]
     fn quant_roundtrip_error_bounded() {
         let mut rng = Pcg64::seeded(5);
         let mut g = vec![0.0f32; 1000];
@@ -245,7 +879,6 @@ mod tests {
 
     #[test]
     fn split_shards_partitions_and_rebases() {
-        use crate::coordinator::shard::ShardLayout;
         let s = SparseGrad {
             dim: 10,
             idx: vec![0, 3, 4, 7, 9],
@@ -265,6 +898,10 @@ mod tests {
         for (p, r) in parts.iter().zip(layout.ranges()) {
             assert_eq!(p.to_dense(), dense[r]);
         }
+        // The `_into` variant reuses buffers and produces the same split.
+        let mut reused = vec![SparseGrad::with_dim(0); 3];
+        s.split_shards_into(&layout, &mut reused);
+        assert_eq!(reused, parts);
     }
 
     #[test]
@@ -276,5 +913,188 @@ mod tests {
         let s = c.compress(&g);
         assert_eq!(s.payload_bytes(), 100 * 8);
         assert!(s.payload_bytes() < 10_000 * 4 / 10);
+    }
+
+    #[test]
+    fn wire_format_parse_display_roundtrip() {
+        for s in ["dense", "topk:100", "topk:0.01", "int8", "topk+int8:0.05", "topk+int8:64"] {
+            let w = WireFormat::parse(s).unwrap();
+            assert_eq!(WireFormat::parse(&w.to_string()).unwrap(), w, "`{s}`");
+        }
+        for bad in ["", "nope", "topk:", "topk:0.0", "topk:1.5", "topk:x", "int8:4", "topk+int8:"] {
+            assert!(WireFormat::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        assert!(WireFormat::Dense.is_dense());
+        assert!(!WireFormat::Int8.is_dense());
+    }
+
+    #[test]
+    fn kspec_resolves_and_clamps() {
+        assert_eq!(KSpec::Count(10).resolve(100), 10);
+        assert_eq!(KSpec::Count(0).resolve(100), 1);
+        assert_eq!(KSpec::Count(500).resolve(100), 100);
+        assert_eq!(KSpec::Frac(0.01).resolve(1000), 10);
+        assert_eq!(KSpec::Frac(0.01).resolve(10), 1);
+    }
+
+    #[test]
+    fn views_accumulate_and_apply_consistently() {
+        let dense = vec![1.0f32, 0.0, -2.0, 0.5];
+        let sparse = SparseGrad {
+            dim: 4,
+            idx: vec![0, 2, 3],
+            val: vec![1.0, -2.0, 0.5],
+        };
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        GradView::Dense(&dense).add_to(&mut a);
+        GradView::Sparse {
+            idx: &sparse.idx,
+            val: &sparse.val,
+        }
+        .add_to(&mut b);
+        assert_eq!(a, b);
+        let mut ta = vec![1.0f32; 4];
+        let mut tb = vec![1.0f32; 4];
+        GradView::Dense(&dense).apply_to(&mut ta, 0.1);
+        GradView::Sparse {
+            idx: &sparse.idx,
+            val: &sparse.val,
+        }
+        .apply_to(&mut tb, 0.1);
+        assert_eq!(ta, tb);
+        // int8 views dequantize on the fly within quantization tolerance
+        let q = quantize_i8(&dense);
+        let mut c = vec![0.0f32; 4];
+        GradView::Quant {
+            scale: q.scale,
+            data: &q.data,
+        }
+        .add_to(&mut c);
+        let step = q.scale;
+        for (x, y) in a.iter().zip(&c) {
+            assert!((x - y).abs() <= step * 0.5 + 1e-6);
+        }
+        assert_eq!(GradView::Dense(&dense).nnz(), 4);
+        assert_eq!(
+            GradView::Sparse {
+                idx: &sparse.idx,
+                val: &sparse.val
+            }
+            .nnz(),
+            3
+        );
+    }
+
+    #[test]
+    fn encoder_splits_per_shard_and_counts_bytes() {
+        let dim = 12;
+        let layout = ShardLayout::new(dim, 3);
+        let mut g = vec![0.0f32; dim];
+        for (i, v) in g.iter_mut().enumerate() {
+            *v = (i as f32 + 1.0) * if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let mut enc = GradEncoder::new(WireFormat::TopK(KSpec::Count(4)), dim, 3);
+        let mut out = Vec::new();
+        enc.encode(&g, &layout, &mut out);
+        assert_eq!(out.len(), 3);
+        // top-4 of |g| are coords 8..12; shards are 0..4, 4..8, 8..12
+        let total: usize = out
+            .iter()
+            .map(|p| match p {
+                ShardGrad::Sparse(s) => s.idx.len(),
+                _ => panic!("expected sparse payload"),
+            })
+            .sum();
+        assert_eq!(total, 4);
+        assert_eq!(submission_bytes(&out, &layout), 4 * 8);
+        // dense-equivalent bytes for comparison
+        assert_eq!(dim * 4, 48);
+        // reconstructing the parts matches the whole-vector compression
+        let mut reference = TopKCompressor::new(dim, 4);
+        let full = reference.compress(&g);
+        let mut dense = vec![0.0f32; dim];
+        for (p, r) in out.iter().zip(layout.ranges()) {
+            p.view(r.clone()).add_to(&mut dense[r]);
+        }
+        assert_eq!(dense, full.to_dense());
+    }
+
+    #[test]
+    fn encoder_recycles_payload_buffers() {
+        // The steady-state zero-allocation contract at the encoder level:
+        // once consumers drop their payload clones, the next encode reuses
+        // the same heap buffers (observable via stable Vec pointers).
+        let dim = 256;
+        let layout = ShardLayout::new(dim, 2);
+        let mut rng = Pcg64::seeded(12);
+        let mut g = vec![0.0f32; dim];
+        rng.fill_normal(&mut g, 1.0);
+        for wire in [
+            WireFormat::Dense,
+            WireFormat::TopK(KSpec::Count(16)),
+            WireFormat::Int8,
+            WireFormat::TopKInt8(KSpec::Count(16)),
+        ] {
+            let mut enc = GradEncoder::new(wire.clone(), dim, 2);
+            let mut out = Vec::new();
+            // Warm-up round; consumers (the shard servers) drop their
+            // clones — here that is simply `out` being cleared by encode.
+            enc.encode(&g, &layout, &mut out);
+            let ptrs: Vec<usize> = out
+                .iter()
+                .map(|p| match p {
+                    ShardGrad::Dense(a) => a.as_ptr() as usize,
+                    ShardGrad::Sparse(a) => a.idx.as_ptr() as usize,
+                    ShardGrad::Quant(a) => a.data.as_ptr() as usize,
+                    ShardGrad::SparseQuant(a) => a.data.as_ptr() as usize,
+                })
+                .collect();
+            for round in 0..20 {
+                rng.fill_normal(&mut g, 1.0);
+                enc.encode(&g, &layout, &mut out);
+                let mut now: Vec<usize> = out
+                    .iter()
+                    .map(|p| match p {
+                        ShardGrad::Dense(a) => a.as_ptr() as usize,
+                        ShardGrad::Sparse(a) => a.idx.as_ptr() as usize,
+                        ShardGrad::Quant(a) => a.data.as_ptr() as usize,
+                        ShardGrad::SparseQuant(a) => a.data.as_ptr() as usize,
+                    })
+                    .collect();
+                // Pool order may rotate; compare as sets.
+                let mut want = ptrs.clone();
+                now.sort_unstable();
+                want.sort_unstable();
+                assert_eq!(now, want, "{wire}: payload buffers reallocated at round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_int8_payload_decodes_within_tolerance() {
+        let dim = 64;
+        let layout = ShardLayout::new(dim, 2);
+        let mut rng = Pcg64::seeded(21);
+        let mut g = vec![0.0f32; dim];
+        rng.fill_normal(&mut g, 1.0);
+        let mut enc = GradEncoder::new(WireFormat::TopKInt8(KSpec::Count(8)), dim, 2);
+        let mut out = Vec::new();
+        enc.encode(&g, &layout, &mut out);
+        // Compare against the f32 top-k of the same stream.
+        let mut reference = TopKCompressor::new(dim, 8);
+        let full = reference.compress(&g);
+        let mut decoded = vec![0.0f32; dim];
+        for (p, r) in out.iter().zip(layout.ranges()) {
+            p.view(r.clone()).add_to(&mut decoded[r]);
+        }
+        let maxabs = full.val.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let step = maxabs / 127.0;
+        for (a, b) in full.to_dense().iter().zip(&decoded) {
+            assert!((a - b).abs() <= step * 0.5 + 1e-6, "{a} vs {b}");
+        }
+        // 5 bytes per kept coordinate + one scale per shard payload
+        let bytes = submission_bytes(&out, &layout);
+        assert_eq!(bytes, 8 * 5 + 2 * 4);
     }
 }

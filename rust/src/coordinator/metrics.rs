@@ -22,6 +22,10 @@ pub struct RunMetrics {
     pub k_trajectory: Series,
     /// Parameter version over time (update progress).
     pub version_trajectory: Series,
+    /// Cumulative dense-equivalent / wire-bytes ratio over time (1.0 for
+    /// `compress=dense`; sampled at eval boundaries in the simulator, once
+    /// at run end on the threaded stack).
+    pub compression_ratio: Series,
 
     // run-level counters
     pub gradients_total: u64,
@@ -34,6 +38,15 @@ pub struct RunMetrics {
     pub shards: usize,
     /// Updates applied by each shard (they agree up to in-flight messages).
     pub per_shard_updates: Vec<u64>,
+    /// Bytes-on-wire workers submitted (dropped submissions count — the
+    /// transport lost them after the send).
+    pub bytes_sent: u64,
+    /// Bytes-on-wire shard servers received (duplicated deliveries count
+    /// twice, dropped ones not at all).
+    pub bytes_received: u64,
+    /// What the same submissions would have cost dense (dim × 4 B each) —
+    /// the denominator of the compression ratio.
+    pub bytes_dense_equiv: u64,
 }
 
 /// Equality is exact — *bitwise* on every float (via [`Series`]'s bitwise
@@ -56,6 +69,10 @@ impl PartialEq for RunMetrics {
             && self.per_worker_grads == other.per_worker_grads
             && self.shards == other.shards
             && self.per_shard_updates == other.per_shard_updates
+            && self.compression_ratio == other.compression_ratio
+            && self.bytes_sent == other.bytes_sent
+            && self.bytes_received == other.bytes_received
+            && self.bytes_dense_equiv == other.bytes_dense_equiv
     }
 }
 
@@ -66,6 +83,16 @@ impl RunMetrics {
             self.gradients_total as f64 / self.wall_time
         } else {
             0.0
+        }
+    }
+
+    /// End-of-run wire compression: dense-equivalent bytes over bytes
+    /// actually sent (1.0 when nothing was sent or the format is dense).
+    pub fn wire_compression(&self) -> f64 {
+        if self.bytes_sent == 0 {
+            1.0
+        } else {
+            self.bytes_dense_equiv as f64 / self.bytes_sent as f64
         }
     }
 
@@ -103,6 +130,11 @@ impl RunMetrics {
             ("test_acc", series(&self.test_acc)),
             ("k_trajectory", series(&self.k_trajectory)),
             ("version_trajectory", series(&self.version_trajectory)),
+            ("compression_ratio", series(&self.compression_ratio)),
+            ("bytes_sent", Json::Num(self.bytes_sent as f64)),
+            ("bytes_received", Json::Num(self.bytes_received as f64)),
+            ("bytes_dense_equiv", Json::Num(self.bytes_dense_equiv as f64)),
+            ("wire_compression", Json::Num(self.wire_compression())),
             ("gradients_total", Json::Num(self.gradients_total as f64)),
             ("updates_total", Json::Num(self.updates_total as f64)),
             ("flushes", Json::Num(self.flushes as f64)),
@@ -150,6 +182,9 @@ mod tests {
         m.per_worker_grads = vec![30, 40, 30];
         m.shards = 2;
         m.per_shard_updates = vec![80, 80];
+        m.bytes_sent = 1000;
+        m.bytes_received = 1000;
+        m.bytes_dense_equiv = 50_000;
         m
     }
 
@@ -159,6 +194,8 @@ mod tests {
         assert_eq!(m.grads_per_sec(), 50.0);
         let (tr, te, acc) = m.final_metrics().unwrap();
         assert_eq!((tr, te, acc), (1.5, 1.6, 45.0));
+        assert_eq!(m.wire_compression(), 50.0);
+        assert_eq!(RunMetrics::default().wire_compression(), 1.0);
     }
 
     #[test]
@@ -179,6 +216,8 @@ mod tests {
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.usize_field("gradients_total").unwrap(), 100);
         assert_eq!(parsed.usize_field("shards").unwrap(), 2);
+        assert_eq!(parsed.usize_field("bytes_sent").unwrap(), 1000);
+        assert_eq!(parsed.f64_field("wire_compression").unwrap(), 50.0);
         assert_eq!(
             parsed
                 .get("per_shard_updates")

@@ -7,6 +7,9 @@
 //!   snapshot cells) and the summing gradient buffer.
 //! - [`policy`] — the pure aggregation state machine: async / sync /
 //!   hybrid(smooth|strict).
+//! - [`compress`] — selectable gradient wire formats (dense / top-k with
+//!   error feedback / int8), worker-side encoding into recycled buffers,
+//!   and the borrowed views the state machines consume.
 //! - [`shard`] — contiguous θ sharding and the pure sharded state machine
 //!   (`S = 1` reproduces the unsharded semantics bitwise).
 //! - [`delay`] — the paper's worker-heterogeneity injection model.
@@ -38,6 +41,10 @@ pub mod worker;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveController};
 pub use clock::{Clock, RealClock, VirtualClock};
+pub use compress::{
+    GradEncoder, GradView, KSpec, QuantGrad, ShardGrad, SparseGrad, SparseQuantGrad,
+    TopKCompressor, WireFormat,
+};
 pub use delay::DelayModel;
 pub use metrics::RunMetrics;
 pub use params::{ParamSnapshot, SnapshotCell};

@@ -120,10 +120,15 @@ impl ParamStore {
 
     /// θ ← θ − lr · g  (single gradient; the asynchronous application).
     pub fn apply_single(&mut self, grad: &[f32]) {
-        debug_assert_eq!(grad.len(), self.theta.len());
-        for (t, &g) in self.theta.iter_mut().zip(grad) {
-            *t -= self.lr * g;
-        }
+        self.apply_view(super::compress::GradView::Dense(grad));
+    }
+
+    /// [`ParamStore::apply_single`] for a gradient in any wire format:
+    /// dense runs the exact SGD loop as always; sparse views update only
+    /// their nnz coordinates (O(nnz), not O(dim)); quantized views
+    /// dequantize on the fly.
+    pub fn apply_view(&mut self, grad: super::compress::GradView<'_>) {
+        grad.apply_to(&mut self.theta, self.lr);
         self.bump();
     }
 
@@ -176,6 +181,20 @@ mod tests {
         ps.apply_single(&[10.0, -10.0]);
         assert_eq!(ps.theta(), &[0.0, 3.0]);
         assert_eq!(ps.version(), 1);
+    }
+
+    #[test]
+    fn sparse_view_updates_only_touched_coords() {
+        use crate::coordinator::compress::GradView;
+        let mut ps = ParamStore::new(vec![1.0, 2.0, 3.0], 0.1);
+        ps.apply_view(GradView::Sparse {
+            idx: &[0, 2],
+            val: &[10.0, -10.0],
+        });
+        assert_eq!(ps.theta(), &[0.0, 2.0, 4.0]);
+        assert_eq!(ps.version(), 1);
+        // snapshot published, exactly as for dense applications
+        assert_eq!(ps.cell().load().theta, vec![0.0, 2.0, 4.0]);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use super::adaptive::{AdaptiveConfig, AdaptiveController};
 use super::buffer::GradientBuffer;
+use super::compress::GradView;
 use super::params::ParamStore;
 use super::threshold::Schedule;
 
@@ -195,13 +196,28 @@ impl Aggregator {
         self.buffer.len()
     }
 
-    /// Feed one gradient; mutates `store` according to the policy.
+    /// Feed one dense gradient; mutates `store` according to the policy.
     /// `loss` is the worker-reported mini-batch loss (used by the adaptive
     /// controller; pass anything for the fixed policies).
     pub fn on_gradient(
         &mut self,
         store: &mut ParamStore,
         grad: &[f32],
+        worker: usize,
+        base_version: u64,
+        loss: f32,
+    ) -> Outcome {
+        self.on_gradient_view(store, GradView::Dense(grad), worker, base_version, loss)
+    }
+
+    /// [`Aggregator::on_gradient`] for a gradient in any wire format. The
+    /// dense arm takes exactly the code path `on_gradient` always took;
+    /// sparse arms are applied/accumulated in O(nnz) without densifying,
+    /// and int8 arms dequantize on the fly.
+    pub fn on_gradient_view(
+        &mut self,
+        store: &mut ParamStore,
+        grad: GradView<'_>,
         worker: usize,
         base_version: u64,
         loss: f32,
@@ -214,13 +230,13 @@ impl Aggregator {
         }
         match &self.policy {
             Policy::Async => {
-                store.apply_single(grad);
+                store.apply_view(grad);
                 self.stats.applied_async += 1;
                 Outcome::AppliedNow
             }
             Policy::Sync => {
                 self.buffer
-                    .push(grad, worker, base_version, store.version());
+                    .push_view(grad, worker, base_version, store.version());
                 if self.buffer.distinct_workers() >= self.workers {
                     self.flush(store)
                 } else {
@@ -231,7 +247,7 @@ impl Aggregator {
             Policy::Hybrid { schedule, strict } => {
                 let k = schedule.k(self.stats.arrivals - 1, self.k_max);
                 self.buffer
-                    .push(grad, worker, base_version, store.version());
+                    .push_view(grad, worker, base_version, store.version());
                 if self.buffer.len() >= k {
                     self.flush(store)
                 } else if *strict {
@@ -244,7 +260,7 @@ impl Aggregator {
             Policy::HybridAdaptive { strict, .. } => {
                 let k = self.adaptive.as_ref().map(|a| a.k()).unwrap_or(1);
                 self.buffer
-                    .push(grad, worker, base_version, store.version());
+                    .push_view(grad, worker, base_version, store.version());
                 if self.buffer.len() >= k {
                     self.flush(store)
                 } else if *strict {
@@ -464,6 +480,54 @@ mod tests {
         assert_eq!(ps.version(), 1);
         assert!((ps.theta()[0] + 0.1 * 3.0).abs() < 1e-6); // mean(2,4)=3
         assert_eq!(agg.drain(&mut ps), 0);
+    }
+
+    #[test]
+    fn sparse_view_matches_dense_reconstruction_bitwise() {
+        use crate::coordinator::compress::{GradView, TopKCompressor};
+        use crate::util::rng::Pcg64;
+        // Feeding a top-k compressed gradient as a sparse view must produce
+        // exactly what feeding its dense reconstruction produces — for the
+        // buffering hybrid policy (scatter-add path) and async (apply path).
+        for policy in [
+            Policy::Async,
+            Policy::Hybrid {
+                schedule: Schedule::Constant { k: 3 },
+                strict: false,
+            },
+        ] {
+            let dim = 16;
+            let mut a = Aggregator::new(policy.clone(), dim, 4);
+            let mut b = Aggregator::new(policy, dim, 4);
+            let mut ps_a = store(dim);
+            let mut ps_b = store(dim);
+            let mut comp = TopKCompressor::new(dim, 4);
+            let mut rng = Pcg64::seeded(77);
+            let mut g = vec![0.0f32; dim];
+            for i in 0..24 {
+                rng.fill_normal(&mut g, 1.0);
+                let sg = comp.compress(&g);
+                let dense = sg.to_dense();
+                let (va, vb) = (ps_a.version(), ps_b.version());
+                assert_eq!(va, vb);
+                let out_a = a.on_gradient_view(
+                    &mut ps_a,
+                    GradView::Sparse {
+                        idx: &sg.idx,
+                        val: &sg.val,
+                    },
+                    i % 4,
+                    va,
+                    1.0,
+                );
+                let out_b = b.on_gradient(&mut ps_b, &dense, i % 4, vb, 1.0);
+                assert_eq!(out_a, out_b, "arrival {i}");
+            }
+            a.drain(&mut ps_a);
+            b.drain(&mut ps_b);
+            assert_eq!(ps_a.theta(), ps_b.theta());
+            assert_eq!(ps_a.version(), ps_b.version());
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! (hybrid buffering) the reply is `Unchanged` and nobody copies anything.
 
 use super::clock::Clock;
+use super::compress::ShardGrad;
 use super::metrics::RunMetrics;
 use super::params::{ParamStore, SnapshotCell};
 use super::policy::{Aggregator, Outcome, Policy};
@@ -37,9 +38,11 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// A gradient submission to one shard. The full-dim gradient buffer is
-/// shared across all shard messages of one submission; each shard reads its
-/// slice and drops the `Arc` so the worker can recycle the buffer.
+/// A gradient submission to one shard, in whatever wire format the worker
+/// encoded ([`ShardGrad`]). Full-dimension payloads (dense, int8) are
+/// shared across all shard messages of one submission — each shard reads
+/// its slice and drops its handle so the worker can recycle the buffer;
+/// sparse payloads arrive pre-split per shard with local indices.
 pub struct ShardMsg {
     pub worker: usize,
     /// Parameter version of this shard the gradient was computed against.
@@ -47,7 +50,7 @@ pub struct ShardMsg {
     /// Training loss observed on the mini-batch (feeds the adaptive
     /// controller; telemetry otherwise).
     pub loss: f32,
-    pub grad: Arc<Vec<f32>>,
+    pub grad: ShardGrad,
 }
 
 /// Shard → worker reply. O(1): parameters travel through snapshot cells.
@@ -82,6 +85,9 @@ pub struct ShardReport {
     pub flushes: u64,
     pub mean_staleness: f64,
     pub per_worker_grads: Vec<u64>,
+    /// Wire bytes this shard's deliveries carried (its slice of shared
+    /// full-dim payloads; its own entries of pre-split sparse ones).
+    pub bytes_received: u64,
     pub k_trajectory: crate::util::stats::Series,
     pub version_trajectory: crate::util::stats::Series,
 }
@@ -95,6 +101,8 @@ pub struct ServerReport {
     pub mean_staleness: f64,
     pub per_worker_grads: Vec<u64>,
     pub per_shard_updates: Vec<u64>,
+    /// Total wire bytes received across all shards.
+    pub bytes_received: u64,
     pub k_trajectory: crate::util::stats::Series,
     pub version_trajectory: crate::util::stats::Series,
 }
@@ -109,6 +117,7 @@ impl ServerReport {
         m.per_worker_grads = self.per_worker_grads.clone();
         m.shards = self.per_shard_updates.len();
         m.per_shard_updates = self.per_shard_updates.clone();
+        m.bytes_received = self.bytes_received;
         m.k_trajectory = self.k_trajectory.clone();
         m.version_trajectory = self.version_trajectory.clone();
     }
@@ -129,6 +138,7 @@ pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> Ser
         final_params.extend_from_slice(&r.final_params);
     }
     let per_shard_updates = reports.iter().map(|r| r.updates_total).collect();
+    let bytes_received = reports.iter().map(|r| r.bytes_received).sum();
     let first = &reports[0];
     ServerReport {
         updates_total: first.updates_total,
@@ -139,6 +149,7 @@ pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> Ser
         k_trajectory: first.k_trajectory.clone(),
         version_trajectory: first.version_trajectory.clone(),
         per_shard_updates,
+        bytes_received,
         final_params,
     }
 }
@@ -176,6 +187,7 @@ pub fn run_shard(
     // `None` = no trace yet, so the first arrival always records one.
     let mut last_trace: Option<Duration> = None;
     let mut released_on_stop = false;
+    let mut bytes_received = 0u64;
 
     loop {
         match grad_rx.recv_timeout(Duration::from_millis(20)) {
@@ -187,9 +199,15 @@ pub fn run_shard(
                     grad,
                 } = msg;
                 per_worker[worker] += 1;
-                let outcome =
-                    agg.on_gradient(&mut store, &grad[range.clone()], worker, base_version, loss);
-                // Release the shared gradient buffer before replying so the
+                bytes_received += grad.wire_bytes(range.len()) as u64;
+                let outcome = agg.on_gradient_view(
+                    &mut store,
+                    grad.view(range.clone()),
+                    worker,
+                    base_version,
+                    loss,
+                );
+                // Release the shared payload buffer before replying so the
                 // worker's `Arc::try_unwrap` recycling never races a shard.
                 drop(grad);
                 let updated = Reply::Updated {
@@ -266,6 +284,7 @@ pub fn run_shard(
             0.0
         },
         per_worker_grads: per_worker,
+        bytes_received,
         k_trajectory: k_traj,
         version_trajectory: v_traj,
         final_params: store.theta().to_vec(),
@@ -331,7 +350,7 @@ mod tests {
             worker,
             base_version: v,
             loss: 1.0,
-            grad: Arc::new(vec![1.0, 1.0]),
+            grad: ShardGrad::Dense(Arc::new(vec![1.0, 1.0])),
         }
     }
 
@@ -416,12 +435,42 @@ mod tests {
                 worker: 0,
                 base_version: 0,
                 loss: 1.0,
-                grad: Arc::clone(&shared),
+                grad: ShardGrad::Dense(Arc::clone(&shared)),
             }],
         );
         assert_eq!(report.gradients_total, 1);
         // The shard dropped its clone before replying: ours is the last.
         assert_eq!(Arc::strong_count(&shared), 1);
+        // Dense wire accounting: one 2-coordinate f32 slice.
+        assert_eq!(report.bytes_received, 8);
+    }
+
+    #[test]
+    fn sparse_submission_aggregates_and_counts_wire_bytes() {
+        use crate::coordinator::compress::SparseGrad;
+        // A pre-split sparse payload (local indices) applies exactly like
+        // its dense reconstruction and is billed at 8 bytes per entry.
+        let sparse = SparseGrad {
+            dim: 2,
+            idx: vec![1],
+            val: vec![2.0],
+        };
+        let (report, replies, cell) = run_scripted(
+            Policy::Async,
+            1,
+            vec![ShardMsg {
+                worker: 0,
+                base_version: 0,
+                loss: 1.0,
+                grad: ShardGrad::Sparse(Arc::new(sparse)),
+            }],
+        );
+        assert_eq!(report.updates_total, 1);
+        assert_eq!(report.bytes_received, 8);
+        assert!(matches!(replies[0][0], Reply::Updated { .. }));
+        let snap = cell.load();
+        assert_eq!(snap.theta[0], 0.0);
+        assert!((snap.theta[1] + 0.2).abs() < 1e-6); // θ₁ −= 0.1·2.0
     }
 
     #[test]
@@ -459,7 +508,7 @@ mod tests {
             worker: 0,
             base_version: 0,
             loss: 0.0,
-            grad: Arc::new(vec![1.0]),
+            grad: ShardGrad::Dense(Arc::new(vec![1.0])),
         })
         .unwrap();
         std::thread::sleep(Duration::from_millis(50));
@@ -484,6 +533,7 @@ mod tests {
             flushes: 2,
             mean_staleness: 0.5,
             per_worker_grads: vec![5, 5],
+            bytes_received: 40,
             k_trajectory: crate::util::stats::Series::new(),
             version_trajectory: crate::util::stats::Series::new(),
         };
@@ -495,5 +545,7 @@ mod tests {
         assert_eq!(merged.final_params, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(merged.updates_total, 7);
         assert_eq!(merged.per_shard_updates, vec![7, 7]);
+        // bytes-on-wire sum across shards, not shard 0 only
+        assert_eq!(merged.bytes_received, 80);
     }
 }

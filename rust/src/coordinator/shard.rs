@@ -14,6 +14,7 @@
 //! count-triggered policies are order-insensitive, while the adaptive
 //! controller may transiently diverge across shards — see `server.rs`.)
 
+use super::compress::{GradView, ShardGrad, SparseGrad};
 use super::params::{ParamStore, SnapshotCell};
 use super::policy::{Aggregator, Outcome, Policy};
 use std::ops::Range;
@@ -173,6 +174,73 @@ impl ShardedAggregator {
         first.unwrap()
     }
 
+    /// Feed one full-dim *compressed* gradient: pre-split into per-shard
+    /// sparse slices via [`SparseGrad::split_shards`], then aggregated
+    /// shard-by-shard as O(nnz) scatter-adds — the sequential embodiment of
+    /// what the compressed wire protocol does across shard threads (no
+    /// shard ever sees, or densifies, another shard's coordinates).
+    pub fn on_sparse(
+        &mut self,
+        grad: &SparseGrad,
+        worker: usize,
+        base_version: u64,
+        loss: f32,
+    ) -> Outcome {
+        assert_eq!(grad.dim, self.layout.dim());
+        let parts = grad.split_shards(&self.layout);
+        let mut first: Option<Outcome> = None;
+        for (s, part) in parts.iter().enumerate() {
+            let (agg, ps) = &mut self.shards[s];
+            let out = agg.on_gradient_view(
+                ps,
+                GradView::Sparse {
+                    idx: &part.idx,
+                    val: &part.val,
+                },
+                worker,
+                base_version,
+                loss,
+            );
+            match &first {
+                None => first = Some(out),
+                Some(f) => debug_assert_eq!(
+                    std::mem::discriminant(f),
+                    std::mem::discriminant(&out),
+                    "shard {s} diverged from shard 0"
+                ),
+            }
+        }
+        first.unwrap()
+    }
+
+    /// Feed one submission already encoded as per-shard wire payloads (one
+    /// [`ShardGrad`] per shard in shard order — what [`super::compress::GradEncoder::encode`]
+    /// produces). Returns shard 0's outcome.
+    pub fn on_payload(
+        &mut self,
+        payloads: &[ShardGrad],
+        worker: usize,
+        base_version: u64,
+        loss: f32,
+    ) -> Outcome {
+        assert_eq!(payloads.len(), self.layout.shards());
+        let mut first: Option<Outcome> = None;
+        for (s, r) in self.layout.ranges().enumerate() {
+            let (agg, ps) = &mut self.shards[s];
+            let out =
+                agg.on_gradient_view(ps, payloads[s].view(r), worker, base_version, loss);
+            match &first {
+                None => first = Some(out),
+                Some(f) => debug_assert_eq!(
+                    std::mem::discriminant(f),
+                    std::mem::discriminant(&out),
+                    "shard {s} diverged from shard 0"
+                ),
+            }
+        }
+        first.unwrap()
+    }
+
     /// Force-flush buffered gradients on every shard (shutdown path).
     /// Returns the flushed count (identical across shards).
     pub fn drain(&mut self) -> usize {
@@ -266,6 +334,77 @@ mod tests {
         sharded.drain();
         assert_eq!(ref_ps.version(), sharded.version());
         assert_eq!(ref_ps.theta(), &sharded.final_params()[..]);
+    }
+
+    /// Golden trace for the wire-format refactor: driving the machine with
+    /// `dense` wire payloads (the full `GradEncoder` → `ShardGrad::view`
+    /// path) is bitwise identical to the plain `on_gradient` slice path —
+    /// i.e. `compress=dense` reproduces the pre-wire-format pipeline
+    /// exactly, outcome by outcome and parameter by parameter.
+    #[test]
+    fn dense_payload_path_matches_plain_dense_golden_trace() {
+        use crate::coordinator::compress::{GradEncoder, WireFormat};
+        let policy = Policy::Hybrid {
+            schedule: Schedule::Step { step: 6 },
+            strict: false,
+        };
+        let dim = 29;
+        let workers = 3;
+        let mut rng = Pcg64::seeded(4321);
+        let mut init = vec![0.0f32; dim];
+        rng.fill_normal(&mut init, 0.5);
+        for shards in [1usize, 3] {
+            let mut reference = ShardedAggregator::new(policy.clone(), &init, 0.05, workers, shards);
+            let mut wired = ShardedAggregator::new(policy.clone(), &init, 0.05, workers, shards);
+            let mut enc = GradEncoder::new(WireFormat::Dense, dim, wired.layout().shards());
+            let mut payloads = Vec::new();
+            let layout = wired.layout().clone();
+            let mut grad = vec![0.0f32; dim];
+            for i in 0..150 {
+                rng.fill_normal(&mut grad, 1.0);
+                let w = i % workers;
+                let (vr, vw) = (reference.version(), wired.version());
+                assert_eq!(vr, vw, "version diverged at arrival {i}");
+                enc.encode(&grad, &layout, &mut payloads);
+                let out_ref = reference.on_gradient(&grad, w, vr, 1.0);
+                let out_wire = wired.on_payload(&payloads, w, vw, 1.0);
+                assert_eq!(out_ref, out_wire, "outcome diverged at arrival {i}");
+            }
+            reference.drain();
+            wired.drain();
+            assert_eq!(reference.final_params(), wired.final_params(), "S={shards}");
+        }
+    }
+
+    /// Sparse submissions split per shard reproduce the whole-vector dense
+    /// apply of their reconstruction, for every shard count.
+    #[test]
+    fn sparse_split_matches_dense_reconstruction() {
+        let dim = 23;
+        let workers = 2;
+        let mut rng = Pcg64::seeded(87);
+        let mut init = vec![0.0f32; dim];
+        rng.fill_normal(&mut init, 1.0);
+        for shards in [1usize, 2, 4] {
+            let mut dense_m = ShardedAggregator::new(Policy::Async, &init, 0.1, workers, shards);
+            let mut sparse_m = ShardedAggregator::new(Policy::Async, &init, 0.1, workers, shards);
+            let mut comp = crate::coordinator::compress::TopKCompressor::new(dim, 5);
+            let mut grad = vec![0.0f32; dim];
+            for i in 0..60 {
+                rng.fill_normal(&mut grad, 1.0);
+                let sg = comp.compress(&grad);
+                let recon = sg.to_dense();
+                let v = dense_m.version();
+                assert_eq!(v, sparse_m.version());
+                dense_m.on_gradient(&recon, i % workers, v, 1.0);
+                sparse_m.on_sparse(&sg, i % workers, v, 1.0);
+            }
+            assert_eq!(
+                dense_m.final_params(),
+                sparse_m.final_params(),
+                "S={shards}"
+            );
+        }
     }
 
     /// Sharding is invisible to the math: S ∈ {2, 5} produce bitwise the

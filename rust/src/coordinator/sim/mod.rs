@@ -12,6 +12,12 @@
 //!   ([`super::policy::Aggregator`], [`super::params::ParamStore`]) the
 //!   threaded stack runs.
 //!
+//! Gradient submissions travel in the scenario's wire format
+//! (`compress=` key; [`super::compress`]): workers encode through the
+//! same `GradEncoder` the threaded stack uses, deliveries carry
+//! per-shard payloads, and the metrics account bytes-on-wire — so
+//! equal-bandwidth comparisons replay deterministically too.
+//!
 //! Guarantee: a run is a pure function of (scenario, inputs); the same
 //! seed + scenario yields a bitwise-identical [`super::RunMetrics`]. The
 //! tier-1 suite leans on this to replay the paper's async/sync/hybrid

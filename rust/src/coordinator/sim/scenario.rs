@@ -24,11 +24,13 @@
 //! | `delay-mean` | delay Normal mean (seconds)               | 0              |
 //! | `delay-std`  | delay Normal σ (seconds)                  | 0              |
 //! | `faults`     | a [`FaultPlan`] clause list               | none           |
+//! | `compress`   | gradient [`WireFormat`] (`dense`, `topk:<k|frac>`, `int8`, `topk+int8:<k|frac>`) | `dense` |
 //!
 //! `Display` renders the canonical form; `parse(display(s))` is the
 //! identity, so scenarios can be logged from one run and replayed in
 //! another (EXPERIMENTS.md records sweeps this way).
 
+use super::super::compress::WireFormat;
 use super::super::delay::DelayModel;
 use super::super::policy::Policy;
 use super::super::threshold::Schedule;
@@ -113,6 +115,7 @@ impl Scenario {
                 "delay-mean" => scn.train.delay.mean = v.parse().map_err(|_| num("delay-mean"))?,
                 "delay-std" => scn.train.delay.std = v.parse().map_err(|_| num("delay-std"))?,
                 "faults" => scn.faults = FaultPlan::parse(v)?,
+                "compress" => scn.train.wire = WireFormat::parse(v)?,
                 _ => anyhow::bail!("unknown scenario key `{k}` in `{tok}`"),
             }
         }
@@ -181,6 +184,9 @@ impl std::fmt::Display for Scenario {
                 t.delay.affected_fraction, t.delay.mean, t.delay.std
             )?;
         }
+        if !t.wire.is_dense() {
+            write!(f, " compress={}", t.wire)?;
+        }
         if !self.faults.is_empty() {
             write!(f, " faults={}", self.faults)?;
         }
@@ -213,7 +219,7 @@ mod tests {
     fn display_parse_roundtrip() {
         let spec = "workers=4 shards=3 policy=hybrid-strict:const:4 secs=2.5 seed=9 lr=0.1 \
                     grad-ms=2.5 floor-ms=20 eval-ms=250 kmax=3 delay-frac=0.5 delay-mean=0 \
-                    delay-std=0.25 faults=crash:1@1,stall:2@0.5..0.75";
+                    delay-std=0.25 compress=topk:0.01 faults=crash:1@1,stall:2@0.5..0.75";
         let a = Scenario::parse(spec).unwrap();
         let b = Scenario::parse(&a.to_string()).unwrap();
         assert_eq!(a.train.workers, b.train.workers);
@@ -227,6 +233,26 @@ mod tests {
         assert_eq!(a.train.compute_floor, b.train.compute_floor);
         assert_eq!(a.grad_time, b.grad_time);
         assert_eq!(a.faults, b.faults);
+        assert_eq!(a.train.wire, b.train.wire);
+        assert_eq!(a.train.wire.to_string(), "topk:0.01");
+    }
+
+    #[test]
+    fn compress_clause_parses_every_format_and_defaults_dense() {
+        use crate::coordinator::compress::KSpec;
+        assert!(Scenario::parse("").unwrap().train.wire.is_dense());
+        // dense is the default, so Display omits the clause entirely
+        assert!(!Scenario::parse("compress=dense")
+            .unwrap()
+            .to_string()
+            .contains("compress="));
+        let s = Scenario::parse("compress=topk+int8:64").unwrap();
+        assert_eq!(s.train.wire, WireFormat::TopKInt8(KSpec::Count(64)));
+        assert_eq!(
+            Scenario::parse("compress=int8").unwrap().train.wire,
+            WireFormat::Int8
+        );
+        assert!(Scenario::parse("compress=zip").is_err());
     }
 
     #[test]

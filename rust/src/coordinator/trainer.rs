@@ -4,6 +4,7 @@
 //! benchmark drives.
 
 use super::clock::{Clock, RealClock};
+use super::compress::WireFormat;
 use super::delay::DelayModel;
 use super::metrics::RunMetrics;
 use super::policy::Policy;
@@ -95,6 +96,9 @@ pub struct TrainConfig {
     /// Parameter-server shard count (contiguous θ slices, one server
     /// thread each). 1 reproduces the single-server semantics exactly.
     pub shards: usize,
+    /// Gradient wire format (`dense` reproduces the uncompressed pipeline
+    /// bitwise; see `coordinator::compress`).
+    pub wire: WireFormat,
 }
 
 impl TrainConfig {
@@ -110,6 +114,7 @@ impl TrainConfig {
             k_max: None,
             compute_floor: Duration::ZERO,
             shards: 1,
+            wire: WireFormat::Dense,
         }
     }
 }
@@ -207,6 +212,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
                 delay: cfg.delay.clone(),
                 seed: cfg.seed.wrapping_add(1000 + id as u64),
                 min_iter: cfg.compute_floor,
+                wire: cfg.wire.clone(),
             };
             let endpoints = ShardEndpoints {
                 layout: layout.clone(),
@@ -251,20 +257,32 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         }
 
         stop.store(true, Ordering::Relaxed);
+        let mut bytes_sent = 0u64;
+        let mut submissions = 0u64;
         for h in worker_handles {
-            let _ = h.join();
+            if let Ok(r) = h.join() {
+                bytes_sent += r.bytes_sent;
+                submissions += r.grads_sent;
+            }
         }
         let reports = shard_handles
             .into_iter()
             .map(|h| h.join().expect("shard-server thread panicked"))
             .collect::<Vec<_>>();
         merge_reports(&layout, reports).fill(&mut metrics);
+        metrics.bytes_sent = bytes_sent;
+        metrics.bytes_dense_equiv = submissions * inputs.init_params.len() as u64 * 4;
         // Final sample on the drained parameters.
         eval_loop.sample(&mut metrics, &mut params_buf)?;
         Ok(())
     });
     result?;
     metrics.wall_time = clock.now().as_secs_f64();
+    if metrics.bytes_sent > 0 {
+        metrics
+            .compression_ratio
+            .push(metrics.wall_time, metrics.wire_compression());
+    }
     log_info!(
         "trainer",
         "{} done: {} grads, {} updates, {} shards, {:.1} grads/s, final acc {:.2}%",
@@ -441,6 +459,40 @@ mod tests {
         for w in m.k_trajectory.v.windows(2) {
             assert!(w[1] >= w[0]);
         }
+    }
+
+    #[test]
+    fn compressed_threaded_run_cuts_wire_bytes() {
+        let spec = ClusterSpec {
+            n_samples: 600,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(11);
+        let full = generate(&spec, &mut rng);
+        let (train, test) = full.split(0.8, &mut rng);
+        let dims = vec![20, 32, 10];
+        let init = MlpEngine::init_params(&dims, &mut rng);
+        let test_set = EvalSet::from_dataset(&test, 100, &mut rng);
+        let probe = EvalSet::from_dataset(&train, 100, &mut rng);
+        let train = Arc::new(train);
+        let inputs = mlp_inputs(train, &test_set, &probe, &init, dims, 16, 3);
+        let mut cfg = TrainConfig::quick(Policy::Async, 3, 1.0);
+        cfg.delay = DelayModel::none();
+        cfg.lr = 0.05;
+        cfg.wire = WireFormat::parse("topk:0.1").unwrap();
+        let m = train_run(&cfg, &inputs);
+        assert!(m.gradients_total > 20, "too few gradients: {}", m.gradients_total);
+        assert!(m.bytes_sent > 0);
+        assert!(m.bytes_received > 0);
+        // 10% density at 8 B/coordinate ≈ 5× fewer bytes than dense f32.
+        assert!(
+            m.bytes_sent * 4 < m.bytes_dense_equiv,
+            "topk:0.1 should cut bytes ≥4×: {} vs {}",
+            m.bytes_sent,
+            m.bytes_dense_equiv
+        );
+        assert!(m.wire_compression() > 4.0);
+        assert!(!m.compression_ratio.is_empty());
     }
 
     #[test]

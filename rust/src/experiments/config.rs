@@ -7,7 +7,7 @@
 //! restores the original numbers; the *relative* comparison (identical init,
 //! identical budget across algorithms) is what the tables measure.
 
-use crate::coordinator::DelayModel;
+use crate::coordinator::{DelayModel, WireFormat};
 
 /// Virtual-time simulation parameters (`--sim`): run on the deterministic
 /// discrete-event simulator instead of the threaded trainer. `secs` then
@@ -117,6 +117,9 @@ pub struct ExpConfig {
     pub arrival_rate_est: f64,
     /// Parameter-server shard count (`--shards`); 1 = single server thread.
     pub shards: usize,
+    /// Gradient wire format (`--compress`); dense reproduces the
+    /// uncompressed pipeline bitwise.
+    pub compress: WireFormat,
     /// When set, runs execute on the virtual-time simulator (`--sim`).
     pub sim: Option<SimParams>,
 }
@@ -179,6 +182,7 @@ impl ExpConfig {
                 DatasetKind::Cifar => 12.0,
             },
             shards: 1,
+            compress: WireFormat::Dense,
             sim: None,
         }
     }

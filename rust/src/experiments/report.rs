@@ -32,6 +32,9 @@ COMMON OPTIONS:
   --workers N      --batch N     --lr F        --secs F
   --rounds N       --seed N      --step-mult F --delay-std F
   --shards N                     parameter-server shards (default 1)
+  --compress FMT                 gradient wire format: dense | topk:<k|frac> | int8
+                                 | topk+int8:<k|frac>  (default dense; topk uses
+                                 error feedback — see coordinator::compress)
   --sim                          run on the deterministic virtual-time simulator
                                  (--secs becomes virtual seconds; bitwise-reproducible)
   --fault-spec SPEC              inject faults, e.g. \"crash:3@5,stall:0@1..2,slow:*@2..4*8\"
@@ -65,6 +68,9 @@ fn config_from(args: &Args, default_dataset: DatasetKind) -> anyhow::Result<ExpC
     cfg.arrival_rate_est = args.f64_or("arrival-rate", cfg.arrival_rate_est);
     cfg.compute_ms = args.f64_or("compute-ms", cfg.compute_ms);
     cfg.shards = args.usize_or("shards", cfg.shards).max(1);
+    if let Some(c) = args.get("compress") {
+        cfg.compress = crate::coordinator::WireFormat::parse(c)?;
+    }
     if let Some(std) = args.get("delay-std") {
         cfg.delay = DelayModel::paper_default().with_std(std.parse()?);
     }
@@ -176,6 +182,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         k_max: None,
         compute_floor: std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
         shards: cfg.shards,
+        wire: cfg.compress.clone(),
     };
     let inputs = crate::coordinator::RunInputs {
         worker_engine: std::sync::Arc::clone(&workload.worker_engine),
@@ -200,6 +207,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     println!("shards          : {}", m.shards);
     println!("grads/sec       : {:.1}", m.grads_per_sec());
     println!("mean staleness  : {:.2}", m.mean_staleness);
+    if !tc.wire.is_dense() {
+        println!("wire format     : {}", tc.wire);
+        println!(
+            "bytes on wire   : {} sent / {} received ({:.1}x vs dense)",
+            m.bytes_sent,
+            m.bytes_received,
+            m.wire_compression()
+        );
+    }
     if let Some((tr, te, acc)) = m.final_metrics() {
         println!("final train loss: {tr:.4}");
         println!("final test loss : {te:.4}");

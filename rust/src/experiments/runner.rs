@@ -234,6 +234,7 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 k_max: None,
                 compute_floor: std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
                 shards: cfg.shards,
+                wire: cfg.compress.clone(),
             };
             let inputs = RunInputs {
                 worker_engine: Arc::clone(&workload.worker_engine),

@@ -12,7 +12,12 @@
 //!   shards, each owned by its own server thread; workers receive O(1)
 //!   version-token replies and refresh parameters through zero-copy
 //!   `Arc`-swapped snapshots. `S = 1` reproduces the single-server
-//!   semantics bitwise, keeping the paper's comparisons valid. Time is a
+//!   semantics bitwise, keeping the paper's comparisons valid. Gradient
+//!   traffic rides a selectable wire format (`coordinator::compress`):
+//!   dense f32, top-k sparsification with error feedback, or int8
+//!   quantization — encoded worker-side into recycled buffers, accumulated
+//!   sparsely shard-side, with bytes-on-wire accounting for
+//!   equal-bandwidth comparisons. Time is a
 //!   capability (`coordinator::clock`), and `coordinator::sim` replays the
 //!   whole pipeline deterministically in virtual time with fault injection
 //!   (crashes, stragglers, message loss, shard stalls) behind a one-line

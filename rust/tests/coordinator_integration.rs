@@ -33,6 +33,7 @@ fn train_cfg(
         k_max: None,
         compute_floor: Duration::ZERO,
         shards,
+        wire: hybrid_sgd::coordinator::WireFormat::Dense,
     }
 }
 

@@ -359,6 +359,237 @@ fn prop_sync_barrier_requires_all_workers() {
     });
 }
 
+/// Satellite property (wire formats): `split_shards` of a compressed
+/// gradient, applied per shard through the sparse wire path, matches the
+/// whole-vector dense apply of the same compressed gradient — bitwise for
+/// pure top-k, within quantization tolerance for int8 values — for
+/// S ∈ {1, 2, 4} and every policy family.
+#[test]
+fn prop_compressed_split_matches_dense_apply() {
+    use hybrid_sgd::coordinator::compress::{
+        GradEncoder, KSpec, SparseGrad, TopKCompressor, WireFormat,
+    };
+
+    check("compressed-split-matches-dense", 30, |g| {
+        let dim = g.usize_in(4, 48);
+        let workers = g.usize_in(1, 4);
+        let lr = g.f64_in(0.01, 0.2) as f32;
+        let k = g.usize_in(1, dim);
+        let policy = match g.rng.below(4) {
+            0 => Policy::Async,
+            1 => Policy::Sync,
+            2 => Policy::Hybrid {
+                schedule: random_schedule(g),
+                strict: false,
+            },
+            _ => Policy::Hybrid {
+                schedule: random_schedule(g),
+                strict: true,
+            },
+        };
+        let int8 = g.bool();
+        let init = g.vec_f32(dim, 1.0);
+        for shards in [1usize, 2, 4] {
+            let mut dense_m =
+                ShardedAggregator::new(policy.clone(), &init, lr, workers, shards);
+            let mut wire_m =
+                ShardedAggregator::new(policy.clone(), &init, lr, workers, shards);
+            let layout = wire_m.layout().clone();
+            let wire = if int8 {
+                WireFormat::TopKInt8(KSpec::Count(k))
+            } else {
+                WireFormat::TopK(KSpec::Count(k))
+            };
+            let mut enc = GradEncoder::new(wire, dim, layout.shards());
+            // A twin compressor replays the identical error-feedback stream
+            // to produce the dense reference of every transmission.
+            let mut twin = TopKCompressor::new(dim, k);
+            let mut sg = SparseGrad::with_dim(dim);
+            let mut payloads = Vec::new();
+            let mut maxabs_seen = 0.0f32;
+            for i in 0..40 {
+                let grad = g.vec_f32(dim, 1.0);
+                enc.encode(&grad, &layout, &mut payloads);
+                twin.compress_into(&grad, &mut sg);
+                // Dense reference of what actually went on the wire.
+                let reference = if int8 {
+                    let maxabs = sg.val.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    maxabs_seen = maxabs_seen.max(maxabs);
+                    let scale = if maxabs == 0.0 { 1.0 } else { maxabs / 127.0 };
+                    let mut d = vec![0.0f32; dim];
+                    for (&ix, &v) in sg.idx.iter().zip(&sg.val) {
+                        d[ix as usize] =
+                            (v / scale).round().clamp(-127.0, 127.0) * scale;
+                    }
+                    d
+                } else {
+                    sg.to_dense()
+                };
+                let w = i % workers.max(1);
+                let (vd, vw) = (dense_m.version(), wire_m.version());
+                prop_assert!(vd == vw, "S={shards}: version diverged at arrival {i}");
+                let out_d = dense_m.on_gradient(&reference, w, vd, 1.0);
+                let out_w = wire_m.on_payload(&payloads, w, vw, 1.0);
+                prop_assert!(
+                    std::mem::discriminant(&out_d) == std::mem::discriminant(&out_w),
+                    "S={shards}: outcome diverged at arrival {i}: {out_d:?} vs {out_w:?}"
+                );
+            }
+            dense_m.drain();
+            wire_m.drain();
+            // The reference already bakes in the int8 rounding, so both
+            // formats should agree to float-noise; the tolerance absorbs
+            // the f32 associativity slack of the two apply orders.
+            let tol = if int8 { 1e-4 * maxabs_seen.max(1.0) } else { 0.0 };
+            for (i, (a, b)) in dense_m
+                .final_params()
+                .iter()
+                .zip(wire_m.final_params().iter())
+                .enumerate()
+            {
+                prop_assert!(
+                    (a - b).abs() <= tol,
+                    "S={shards} coord {i}: dense {a} vs wire {b} (tol {tol})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite property (wire formats): the error-feedback residual stays
+/// bounded — finite, and small relative to the gradient scale × dimension —
+/// under the PR-2 fault cocktail (crashes, straggler bursts, drops, dups,
+/// stalls) on the virtual-time simulator. A broken feedback loop would grow
+/// the residual with the iteration count; draining feedback keeps it O(dim).
+#[test]
+fn prop_error_feedback_residual_bounded_under_faults() {
+    use hybrid_sgd::coordinator::sim::{FaultPlan, Scenario, Simulation};
+    use hybrid_sgd::coordinator::worker::BatchSource;
+    use hybrid_sgd::coordinator::{
+        DelayModel, EvalSet, KSpec, RunInputs, TrainConfig, WireFormat,
+    };
+    use hybrid_sgd::engine::factory;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    struct NullSource;
+    impl BatchSource for NullSource {
+        fn next(&mut self) -> (&[f32], &[i32]) {
+            (&[], &[])
+        }
+    }
+
+    check("residual-bounded-under-faults", 20, |g| {
+        let workers = g.usize_in(2, 5);
+        let shards = g.usize_in(1, 3);
+        let dim = g.usize_in(shards.max(4), 24);
+        let secs = 2.0f64;
+        let k = g.usize_in(1, (dim / 2).max(1));
+
+        let mut clauses: Vec<String> = Vec::new();
+        if g.bool() {
+            clauses.push(format!(
+                "crash:{}@{}",
+                g.usize_in(0, workers - 1),
+                g.f64_in(0.1, 1.0)
+            ));
+        }
+        if g.bool() {
+            let a = g.f64_in(0.0, 0.8);
+            let b = a + g.f64_in(0.1, 1.0);
+            clauses.push(format!("slow:*@{a}..{b}*{}", g.f64_in(1.5, 8.0)));
+        }
+        if g.bool() {
+            clauses.push(format!("drop:*@0..{secs}:{}", g.f64_in(0.05, 0.5)));
+        }
+        if g.bool() {
+            clauses.push(format!("dup:*@0..{secs}:{}", g.f64_in(0.05, 0.5)));
+        }
+        if g.bool() {
+            let s = g.usize_in(0, shards - 1);
+            let a = g.f64_in(0.0, 1.0);
+            let b = a + g.f64_in(0.05, 0.5);
+            clauses.push(format!("stall:{s}@{a}..{b}"));
+        }
+        let faults = FaultPlan::parse(&clauses.join(","))
+            .map_err(|e| format!("fault parse: {e:#}"))?;
+
+        let mut train = TrainConfig::quick(
+            Policy::Hybrid {
+                schedule: random_schedule(g),
+                strict: false,
+            },
+            workers,
+            secs,
+        );
+        train.shards = shards;
+        train.seed = g.rng.next_u64();
+        train.lr = 0.05;
+        train.wire = WireFormat::TopK(KSpec::Count(k));
+        train.delay = DelayModel {
+            affected_fraction: g.f64_in(0.0, 1.0),
+            mean: 0.0,
+            std: g.f64_in(0.0, 0.05),
+        };
+        let scn = Scenario {
+            train,
+            grad_time: Duration::from_millis(20),
+            faults,
+        };
+
+        let init = g.vec_f32(dim, 1.0);
+        let eval = EvalSet {
+            x: vec![0.0],
+            y: vec![0],
+            n: 1,
+            x_dim: 1,
+            y_dim: 1,
+        };
+        let target = vec![1.0f32; dim];
+        let t2 = target.clone();
+        let inputs = RunInputs {
+            worker_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(target.clone(), 1, 0.0, 0))
+                    as Box<dyn GradEngine>)
+            }),
+            eval_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(t2.clone(), 1, 0.0, 0)) as Box<dyn GradEngine>)
+            }),
+            batch_source: Arc::new(|_| Box::new(NullSource) as Box<dyn BatchSource>),
+            init_params: &init,
+            test: &eval,
+            train_probe: &eval,
+        };
+
+        let mut sim =
+            Simulation::new(&scn, &inputs).map_err(|e| format!("sim init: {e:#}"))?;
+        // The quadratic's gradients are bounded by the init→target spread
+        // (|g| ≲ 5). A draining residual rotates coordinates through the
+        // top-k, so per-coord mass is O((dim/k)·|g|) and the L1 total stays
+        // O(dim²·|g|/k); a broken feedback loop instead grows linearly with
+        // the iteration count (~100 iterations/worker here) and overshoots.
+        let bound = dim as f64 * dim as f64 * 5.0;
+        let mut t = Duration::ZERO;
+        let end = Duration::from_secs_f64(secs);
+        while t < end {
+            t += Duration::from_millis(250);
+            sim.run_until(t).map_err(|e| format!("sim step: {e:#}"))?;
+            for w in 0..workers {
+                let r = sim
+                    .worker_residual_l1(w)
+                    .ok_or_else(|| "top-k run must expose a residual".to_string())?;
+                prop_assert!(
+                    r.is_finite() && r <= bound,
+                    "worker {w}: residual L1 {r} out of bounds at {t:?} (faults `{}`)",
+                    clauses.join(",")
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Under *any* seeded delay/fault scenario — crashes, straggler bursts,
 /// dropped/duplicated submissions, shard stalls, random schedules — the
 /// hybrid policy's aggregation mode is monotone per shard: once a shard's

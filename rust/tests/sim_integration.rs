@@ -282,6 +282,83 @@ fn scenario_line_replays_identically() {
     assert_eq!(a, b, "Display → parse round-trip changed the run");
 }
 
+/// Acceptance (wire formats): a compressed scenario — top-k 1% with error
+/// feedback, under the full PR-2 fault cocktail — replays bitwise from its
+/// seed, including the new bytes-on-wire counters and compression-ratio
+/// series. The deterministic tie-breaking in top-k selection is what makes
+/// this hold on every platform.
+#[test]
+fn compressed_sim_golden_trace_is_bitwise_reproducible() {
+    let fx = fixture(4);
+    let inputs = inputs_for(&fx, 4);
+    let spec = "workers=4 shards=2 policy=hybrid:step:50 secs=2 seed=7 grad-ms=5 \
+                delay-frac=0.5 delay-std=0.25 compress=topk:0.01 \
+                faults=crash:3@1,restart:3@1.4,slow:*@0.5..0.8*4,drop:0@0..2:0.2,dup:1@0..2:0.2,stall:1@0.6..0.7";
+    let a = simulate(&scenario(spec), &inputs).unwrap();
+    let b = simulate(&scenario(spec), &inputs).unwrap();
+    assert_eq!(a, b, "compressed virtual-time runs must replay bitwise");
+    assert!(a.gradients_total > 0);
+    assert!(a.bytes_sent > 0);
+    // MLP fixture has 1002 parameters → k = 10 → 80 B/submission vs 4008 B
+    // dense: the ≥50× acceptance bound holds end-to-end, faults included.
+    assert!(
+        a.wire_compression() >= 50.0,
+        "topk:0.01 should cut bytes ≥50×, got {:.1}x",
+        a.wire_compression()
+    );
+    // Drop faults lose bytes in flight; dup faults re-deliver them.
+    assert!(a.bytes_received > 0);
+    // The ratio series is sampled on the eval grid and replays with the rest.
+    assert!(!a.compression_ratio.is_empty());
+    // Display → parse round-trip preserves the compressed scenario.
+    let replayed = simulate(&scenario(&scenario(spec).to_string()), &inputs).unwrap();
+    assert_eq!(a, replayed, "compress= clause lost in the DSL round-trip");
+}
+
+/// Acceptance (dense golden trace): `compress=dense` is bitwise identical
+/// to a scenario that never mentions compression — same metrics, and the
+/// byte counters confirm nothing was compressed (sent == dense-equivalent).
+#[test]
+fn compress_dense_is_bitwise_identical_to_default_pipeline() {
+    let fx = fixture(5);
+    let inputs = inputs_for(&fx, 3);
+    let base = "workers=3 shards=2 policy=hybrid:step:40 secs=1.5 seed=3 grad-ms=5 \
+                delay-frac=0.5 delay-std=0.1";
+    let implicit = simulate(&scenario(base), &inputs).unwrap();
+    let explicit =
+        simulate(&scenario(&format!("{base} compress=dense")), &inputs).unwrap();
+    assert_eq!(
+        implicit, explicit,
+        "compress=dense must reproduce the default pipeline bitwise"
+    );
+    assert_eq!(implicit.bytes_sent, implicit.bytes_dense_equiv);
+    assert_eq!(implicit.wire_compression(), 1.0);
+}
+
+/// Compressed training still learns: error feedback keeps top-k runs
+/// converging on the fixture workload, and int8 stays within quantization
+/// noise of dense.
+#[test]
+fn compressed_runs_still_learn() {
+    let fx = fixture(6);
+    let inputs = inputs_for(&fx, 4);
+    for fmt in ["topk:0.25", "int8", "topk+int8:0.25"] {
+        let m = simulate(
+            &scenario(&format!(
+                "workers=4 policy=hybrid:step:50 secs=2 seed=5 grad-ms=5 compress={fmt}"
+            )),
+            &inputs,
+        )
+        .unwrap();
+        let first = m.test_acc.v[0];
+        let last = *m.test_acc.v.last().unwrap();
+        assert!(
+            last > first + 10.0,
+            "{fmt}: accuracy did not improve ({first:.1} → {last:.1})"
+        );
+    }
+}
+
 /// TrainConfig built by the experiments layer drives the simulator the
 /// same way the DSL does (the CLI `--sim` path).
 #[test]
@@ -299,6 +376,7 @@ fn trainconfig_scenario_equivalence() {
         k_max: None,
         compute_floor: Duration::ZERO,
         shards: 1,
+        wire: hybrid_sgd::coordinator::WireFormat::Dense,
     };
     let via_struct = Scenario {
         train: tc,
