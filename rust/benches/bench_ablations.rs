@@ -79,6 +79,7 @@ fn run_native(fx: &Fixture, policy: Policy, secs: f64, compute_ms: f64) -> RunMe
         compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
         shards: 1,
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
+        steps: None,
     };
     train(&cfg, &inputs).expect("run failed")
 }
@@ -214,6 +215,7 @@ fn main() {
                 compute_floor: Duration::from_secs_f64(compute_ms / 1000.0),
                 shards: 1,
                 wire: hybrid_sgd::coordinator::WireFormat::Dense,
+                steps: None,
             };
             let m = train(&cfg, &inputs).expect("xla run failed");
             report("AOT XLA (jnp)", &m);

@@ -7,13 +7,16 @@
 
 use hybrid_sgd::coordinator::buffer::GradientBuffer;
 use hybrid_sgd::coordinator::compress::{
-    dequantize_i8, quantize_i8_into, GradView, QuantGrad, SparseGrad, TopKCompressor,
+    dequantize_i8, quantize_i8_into, GradView, QuantGrad, ShardGrad, SparseGrad, TopKCompressor,
 };
 use hybrid_sgd::coordinator::params::ParamStore;
 use hybrid_sgd::coordinator::{Aggregator, Policy, Schedule, ShardedAggregator};
+use hybrid_sgd::transport::frame::{decode_frame, encode_frame_into};
+use hybrid_sgd::transport::msg::{encode_submit_into, Msg};
 use hybrid_sgd::util::bench::{black_box, Bencher};
 use hybrid_sgd::util::json::Json;
 use hybrid_sgd::util::rng::Pcg64;
+use std::sync::Arc;
 
 /// One wire-format case for the `BENCH_compress.json` baseline.
 struct WireCase {
@@ -155,6 +158,136 @@ fn write_compress_baseline(cases: &[WireCase]) {
     }
 }
 
+/// One frame-codec case for the `BENCH_transport.json` baseline.
+struct TransportCase {
+    name: String,
+    payload_label: String,
+    ops_per_sec: f64,
+    bytes_per_frame: usize,
+}
+
+/// Frame codec throughput: encode+decode of one `SubmitGrad` frame at
+/// payload sizes ≈ {800 B, 8 KB, 80 KB, 4 MB} for the dense / topk / int8
+/// gradient formats (the transport satellite of ISSUE 4). Encode writes
+/// into reused buffers; decode validates the CRC and rebuilds the
+/// shard-local payload — the full per-message cost of the TCP path minus
+/// the socket.
+fn bench_transport_frames(b: &mut Bencher) -> Vec<TransportCase> {
+    println!("\n== transport frame codec: SubmitGrad encode + decode ==");
+    let mut cases: Vec<TransportCase> = Vec::new();
+    // (label, dense dim, topk nnz, int8 len) targeting the payload sizes.
+    let sizes: [(&str, usize, usize, usize); 4] = [
+        ("800B", 200, 100, 800),
+        ("8KB", 2_000, 1_000, 8_000),
+        ("80KB", 20_000, 10_000, 80_000),
+        ("4MB", 1_000_000, 500_000, 4_000_000),
+    ];
+    let mut rng = Pcg64::seeded(31);
+    for (label, dense_n, nnz, int8_n) in sizes {
+        let mut dense = vec![0.0f32; dense_n];
+        rng.fill_normal(&mut dense, 1.0);
+        let sparse = {
+            let mut idx: Vec<u32> = (0..nnz as u32).collect();
+            // spread the indices out like a real top-k selection
+            for i in idx.iter_mut() {
+                *i *= 2;
+            }
+            let mut val = vec![0.0f32; nnz];
+            rng.fill_normal(&mut val, 1.0);
+            SparseGrad {
+                dim: nnz * 2,
+                idx,
+                val,
+            }
+        };
+        let quant = QuantGrad {
+            scale: 0.01,
+            data: (0..int8_n).map(|i| (i % 251) as i8).collect(),
+        };
+        let payloads: [(&str, ShardGrad, usize); 3] = [
+            ("dense", ShardGrad::Dense(Arc::new(dense)), dense_n),
+            ("topk", ShardGrad::Sparse(Arc::new(sparse)), nnz * 2),
+            ("int8", ShardGrad::Quant(Arc::new(quant)), int8_n),
+        ];
+        for (fmt, grad, shard_len) in payloads {
+            let mut msg_buf = Vec::new();
+            let mut frame_buf = Vec::new();
+            encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf);
+            frame_buf.clear();
+            encode_frame_into(&msg_buf, &mut frame_buf);
+            let bytes_per_frame = frame_buf.len();
+            let r = b.bench(&format!("frame encode {fmt} {label}"), || {
+                encode_submit_into(0, 1, 2, 0.5, black_box(&grad), 0..shard_len, &mut msg_buf);
+                frame_buf.clear();
+                encode_frame_into(&msg_buf, &mut frame_buf);
+            });
+            cases.push(TransportCase {
+                name: format!("encode_{fmt}"),
+                payload_label: label.to_string(),
+                ops_per_sec: 1e9 / r.mean_ns,
+                bytes_per_frame,
+            });
+            let r = b.bench(&format!("frame decode {fmt} {label}"), || {
+                let (payload, _) = decode_frame(black_box(&frame_buf)).expect("valid frame");
+                black_box(Msg::decode(payload).expect("valid message"));
+            });
+            cases.push(TransportCase {
+                name: format!("decode_{fmt}"),
+                payload_label: label.to_string(),
+                ops_per_sec: 1e9 / r.mean_ns,
+                bytes_per_frame,
+            });
+            // Sanity: decode reproduces the payload's view bitwise (cheap,
+            // once per case — guards the bench itself against drift).
+            let (payload, _) = decode_frame(&frame_buf).expect("valid frame");
+            match Msg::decode(payload).expect("valid message") {
+                Msg::SubmitGrad { grad: got, .. } => {
+                    let mut want = vec![0.0f32; shard_len];
+                    grad.view(0..shard_len).add_to(&mut want);
+                    let mut have = vec![0.0f32; shard_len];
+                    got.view(0..shard_len).add_to(&mut have);
+                    assert!(
+                        want.iter().zip(&have).all(|(a, c)| a.to_bits() == c.to_bits()),
+                        "{fmt} {label}: frame roundtrip diverged"
+                    );
+                }
+                other => panic!("unexpected decode: {other:?}"),
+            }
+        }
+    }
+    cases
+}
+
+/// Emit the transport baseline when asked
+/// (`BENCH_TRANSPORT_OUT=../BENCH_transport.json cargo bench --bench
+/// bench_hotpath`; cargo runs bench binaries with cwd = rust/).
+fn write_transport_baseline(cases: &[TransportCase]) {
+    let Ok(path) = std::env::var("BENCH_TRANSPORT_OUT") else {
+        return;
+    };
+    let mut rows = Vec::new();
+    for c in cases {
+        rows.push(Json::from_pairs(vec![
+            ("name", Json::Str(c.name.clone())),
+            ("payload", Json::Str(c.payload_label.clone())),
+            ("ops_per_sec", Json::Num(c.ops_per_sec)),
+            ("bytes_per_frame", Json::Num(c.bytes_per_frame as f64)),
+        ]));
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_hotpath/transport_frames".to_string())),
+        (
+            "quick",
+            Json::Bool(std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")),
+        ),
+        ("cases", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let mut b = Bencher::new();
     println!("== L3 parameter-server hot path ==");
@@ -270,6 +403,9 @@ fn main() {
 
     let wire_cases = bench_wire_formats(&mut b);
     write_compress_baseline(&wire_cases);
+
+    let transport_cases = bench_transport_frames(&mut b);
+    write_transport_baseline(&transport_cases);
 
     b.summary();
     // Headline check: the hybrid PS step on the largest model must be far

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         cfg.delay = DelayModel::paper_default().with_std(std);
         cfg.seed = 42 + (std * 100.0) as u64;
         let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async])?;
-        let d = cmp.diff_vs(Algo::Async);
+        let d = cmp.diff_vs(Algo::Async)?;
         println!(
             "σ = {std:<5}: Δacc {:+.3} (paper {:+.3}), Δtest-loss {:+.3}, Δtrain-loss {:+.3}",
             d.test_acc,

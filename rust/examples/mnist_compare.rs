@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let cmp = run_comparison(&cfg)?;
     println!("{}", comparison_charts("MNIST (synthetic)", &cmp));
 
-    let d = cmp.diff_vs(Algo::Async);
+    let d = cmp.diff_vs(Algo::Async)?;
     println!("hybrid − async, averaged over the training interval:");
     println!("  test accuracy : {:+.3}   (paper Table 1 @(300,32): +1.374)", d.test_acc);
     println!("  test loss     : {:+.3}   (paper: -0.047)", d.test_loss);

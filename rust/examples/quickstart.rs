@@ -73,6 +73,7 @@ fn main() -> anyhow::Result<()> {
         shards: args.usize_or("shards", 1),
         wire: hybrid_sgd::coordinator::WireFormat::parse(&args.str_or("compress", "dense"))
             .expect("bad --compress (dense | topk:<k|frac> | int8 | topk+int8:<k|frac>)"),
+        steps: None,
     };
     let _ = Schedule::Step { step: 1 }; // (see threshold.rs for all schedules)
 

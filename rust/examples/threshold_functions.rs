@@ -92,6 +92,7 @@ fn main() -> anyhow::Result<()> {
             compute_floor: Duration::from_millis(20),
             shards: args.usize_or("shards", 1),
             wire: hybrid_sgd::coordinator::WireFormat::Dense,
+            steps: None,
         };
         let m = train(&cfg, &inputs)?;
         let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));

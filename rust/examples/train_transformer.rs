@@ -98,6 +98,7 @@ fn main() -> anyhow::Result<()> {
         compute_floor: Duration::ZERO,
         shards: args.usize_or("shards", 1),
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
+        steps: None,
     };
 
     println!("training for ~{secs:.0}s (~{steps} gradient steps) ...\n");

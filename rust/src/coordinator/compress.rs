@@ -385,6 +385,12 @@ pub enum ShardGrad {
     Quant(Arc<QuantGrad>),
     /// Shard-local sparse coordinates with int8 values.
     SparseQuant(Arc<SparseQuantGrad>),
+    /// Shard-local dense slice (already cut to one shard's coordinates).
+    /// Produced by the network transport's decoder — a remote worker sends
+    /// each shard only its slice, so there is no full-dim buffer to share.
+    DenseLocal(Arc<Vec<f32>>),
+    /// Shard-local int8 slice + per-tensor scale (transport decode path).
+    QuantLocal(Arc<QuantGrad>),
 }
 
 impl ShardGrad {
@@ -413,6 +419,17 @@ impl ShardGrad {
                     data: &s.data,
                 }
             }
+            ShardGrad::DenseLocal(g) => {
+                debug_assert_eq!(g.len(), range.len());
+                GradView::Dense(&g[..])
+            }
+            ShardGrad::QuantLocal(q) => {
+                debug_assert_eq!(q.data.len(), range.len());
+                GradView::Quant {
+                    scale: q.scale,
+                    data: &q.data[..],
+                }
+            }
         }
     }
 
@@ -425,6 +442,8 @@ impl ShardGrad {
             ShardGrad::Sparse(s) => s.idx.len() * (4 + 4),
             ShardGrad::Quant(_) => shard_len + 4,
             ShardGrad::SparseQuant(s) => s.idx.len() * (4 + 1) + 4,
+            ShardGrad::DenseLocal(g) => g.len() * 4,
+            ShardGrad::QuantLocal(q) => q.data.len() + 4,
         }
     }
 }
@@ -537,6 +556,18 @@ impl GradEncoder {
                 ShardGrad::SparseQuant(a) => {
                     if let Ok(sq) = Arc::try_unwrap(a) {
                         self.spare_sq.push(sq);
+                    }
+                }
+                // Never produced by this encoder (transport decode path),
+                // but recycle them anyway if one is handed back.
+                ShardGrad::DenseLocal(a) => {
+                    if let Ok(v) = Arc::try_unwrap(a) {
+                        self.spare_dense = Some(v);
+                    }
+                }
+                ShardGrad::QuantLocal(a) => {
+                    if let Ok(q) = Arc::try_unwrap(a) {
+                        self.spare_quant = Some(q);
                     }
                 }
             }
@@ -1048,6 +1079,7 @@ mod tests {
                     ShardGrad::Sparse(a) => a.idx.as_ptr() as usize,
                     ShardGrad::Quant(a) => a.data.as_ptr() as usize,
                     ShardGrad::SparseQuant(a) => a.data.as_ptr() as usize,
+                    other => panic!("encoder never emits {other:?}"),
                 })
                 .collect();
             for round in 0..20 {
@@ -1060,6 +1092,7 @@ mod tests {
                         ShardGrad::Sparse(a) => a.idx.as_ptr() as usize,
                         ShardGrad::Quant(a) => a.data.as_ptr() as usize,
                         ShardGrad::SparseQuant(a) => a.data.as_ptr() as usize,
+                        other => panic!("encoder never emits {other:?}"),
                     })
                     .collect();
                 // Pool order may rotate; compare as sets.

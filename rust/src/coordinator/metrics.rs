@@ -47,6 +47,10 @@ pub struct RunMetrics {
     /// What the same submissions would have cost dense (dim × 4 B each) —
     /// the denominator of the compression ratio.
     pub bytes_dense_equiv: u64,
+    /// Final parameters after the end-of-run drain (concatenated in shard
+    /// order). The multi-process acceptance tests compare runs bitwise on
+    /// this field; empty when a path does not report them.
+    pub final_params: Vec<f32>,
 }
 
 /// Equality is exact — *bitwise* on every float (via [`Series`]'s bitwise
@@ -73,6 +77,12 @@ impl PartialEq for RunMetrics {
             && self.bytes_sent == other.bytes_sent
             && self.bytes_received == other.bytes_received
             && self.bytes_dense_equiv == other.bytes_dense_equiv
+            && self.final_params.len() == other.final_params.len()
+            && self
+                .final_params
+                .iter()
+                .zip(&other.final_params)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
     }
 }
 
@@ -134,6 +144,10 @@ impl RunMetrics {
             ("bytes_sent", Json::Num(self.bytes_sent as f64)),
             ("bytes_received", Json::Num(self.bytes_received as f64)),
             ("bytes_dense_equiv", Json::Num(self.bytes_dense_equiv as f64)),
+            // f32 values are exact in f64, and the JSON writer prints
+            // shortest-roundtrip floats, so this survives a JSON round
+            // trip bit-for-bit (the multi-process tests rely on it).
+            ("final_params", Json::arr_f32(&self.final_params)),
             ("wire_compression", Json::Num(self.wire_compression())),
             ("gradients_total", Json::Num(self.gradients_total as f64)),
             ("updates_total", Json::Num(self.updates_total as f64)),

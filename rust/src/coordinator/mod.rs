@@ -52,4 +52,4 @@ pub use policy::{Aggregator, Outcome, Policy};
 pub use shard::{ShardLayout, ShardedAggregator};
 pub use sim::{simulate, FaultPlan, FaultSpec, Scenario, Simulation};
 pub use threshold::Schedule;
-pub use trainer::{train, EvalSet, RunInputs, TrainConfig};
+pub use trainer::{join_remote, serve, train, EvalSet, RunInputs, TrainConfig};

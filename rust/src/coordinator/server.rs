@@ -120,6 +120,7 @@ impl ServerReport {
         m.bytes_received = self.bytes_received;
         m.k_trajectory = self.k_trajectory.clone();
         m.version_trajectory = self.version_trajectory.clone();
+        m.final_params = self.final_params.clone();
     }
 }
 

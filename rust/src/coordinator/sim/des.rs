@@ -169,6 +169,9 @@ struct WorkerSim {
     epoch: u64,
     /// Outstanding shard replies for the current submission.
     pending: usize,
+    /// Gradients submitted (the threaded worker's `grads_sent`); bounds
+    /// the worker when the scenario sets a `steps` budget.
+    sent: u64,
 }
 
 /// A resumable simulated run. Construct with [`Simulation::new`], advance
@@ -240,6 +243,7 @@ impl<'a> Simulation<'a> {
                 crashed: false,
                 epoch: 0,
                 pending: 0,
+                sent: 0,
             });
         }
 
@@ -274,6 +278,9 @@ impl<'a> Simulation<'a> {
             }
         }
         for w in 0..sim.train.workers {
+            if !sim.budget_left(w) {
+                continue; // steps=0 edge: the worker never submits
+            }
             let d = sim.iter_time(w, Duration::ZERO);
             sim.queue.push(d, Event::Submit { worker: w, epoch: 0 });
         }
@@ -391,6 +398,7 @@ impl<'a> Simulation<'a> {
         self.metrics.shards = self.layout.shards();
         self.metrics.per_shard_updates =
             self.shards.iter().map(|s| s.store.version()).collect();
+        self.metrics.final_params = self.assembled_params();
         self.sample_metrics(end)?;
         self.metrics.wall_time = t;
         Ok(self.metrics)
@@ -464,6 +472,10 @@ impl<'a> Simulation<'a> {
         };
         self.metrics.bytes_sent += wire_bytes;
         self.metrics.bytes_dense_equiv += self.layout.dim() as u64 * 4;
+        // The submission is out (whatever the transport then does to it):
+        // this is the threaded worker's `grads_sent`, and what a `steps`
+        // budget counts.
+        self.workers[w].sent += 1;
 
         // Transport faults, drawn from the worker's seeded stream.
         // (Server-side per_worker counters are the authoritative per-worker
@@ -471,8 +483,10 @@ impl<'a> Simulation<'a> {
         let drop_p = self.faults.drop_prob(w, at);
         if drop_p > 0.0 && self.workers[w].rng.chance(drop_p) {
             self.faults_dropped += 1;
-            let d = self.iter_time(w, at);
-            self.queue.push(at + d, Event::Submit { worker: w, epoch });
+            if self.budget_left(w) {
+                let d = self.iter_time(w, at);
+                self.queue.push(at + d, Event::Submit { worker: w, epoch });
+            }
             return Ok(());
         }
         let dup_p = self.faults.dup_prob(w, at);
@@ -617,9 +631,11 @@ impl<'a> Simulation<'a> {
             }
         }
         self.refresh_worker(w);
-        let d = self.iter_time(w, at);
-        let epoch = self.workers[w].epoch;
-        self.queue.push(at + d, Event::Submit { worker: w, epoch });
+        if self.budget_left(w) {
+            let d = self.iter_time(w, at);
+            let epoch = self.workers[w].epoch;
+            self.queue.push(at + d, Event::Submit { worker: w, epoch });
+        }
         Ok(())
     }
 
@@ -668,9 +684,11 @@ impl<'a> Simulation<'a> {
             }
         }
         self.refresh_worker(w);
-        let d = self.iter_time(w, at);
-        let epoch = self.workers[w].epoch;
-        self.queue.push(at + d, Event::Submit { worker: w, epoch });
+        if self.budget_left(w) {
+            let d = self.iter_time(w, at);
+            let epoch = self.workers[w].epoch;
+            self.queue.push(at + d, Event::Submit { worker: w, epoch });
+        }
         Ok(())
     }
 
@@ -715,6 +733,12 @@ impl<'a> Simulation<'a> {
     /// tests; reading it does not perturb the run.
     pub fn worker_residual_l1(&self, w: usize) -> Option<f64> {
         self.workers[w].encoder.residual_l1()
+    }
+
+    /// Whether worker `w` may still submit under the scenario's `steps`
+    /// budget (always true without one).
+    fn budget_left(&self, w: usize) -> bool {
+        self.train.steps.map_or(true, |n| self.workers[w].sent < n)
     }
 }
 
@@ -890,6 +914,24 @@ mod tests {
         let d = simulate(&dense, &inputs).unwrap();
         assert_eq!(d.bytes_sent, d.bytes_dense_equiv);
         assert_eq!(d.wire_compression(), 1.0);
+    }
+
+    #[test]
+    fn steps_budget_bounds_every_worker() {
+        let init = vec![0.0f32; 4];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 4]);
+        let scn = Scenario::parse("workers=3 policy=async secs=5 grad-ms=10 steps=7").unwrap();
+        let m = simulate(&scn, &inputs).unwrap();
+        // every worker submits exactly its budget, well before the virtual
+        // deadline, and the final parameters are reported
+        assert_eq!(m.gradients_total, 21);
+        assert!(m.per_worker_grads.iter().all(|&g| g == 7), "{:?}", m.per_worker_grads);
+        assert_eq!(m.updates_total, 21);
+        assert_eq!(m.final_params.len(), 4);
+        // replays bitwise like every other scenario
+        let n = simulate(&scn, &inputs).unwrap();
+        assert_eq!(m, n);
     }
 
     #[test]

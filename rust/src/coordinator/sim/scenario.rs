@@ -17,6 +17,7 @@
 //! | `seed`       | master seed (all streams derive from it)  | 0              |
 //! | `lr`         | learning rate                             | 0.05           |
 //! | `kmax`       | threshold cap (absent → worker count)     | absent         |
+//! | `steps`      | per-worker submission budget (`--steps`)  | absent         |
 //! | `grad-ms`    | virtual compute time per gradient (ms)    | 5              |
 //! | `floor-ms`   | compute-cost floor per iteration (ms)     | 0              |
 //! | `eval-ms`    | metric sampling interval (ms)             | 500            |
@@ -93,6 +94,7 @@ impl Scenario {
                 "seed" => scn.train.seed = v.parse().map_err(|_| num("seed"))?,
                 "lr" => scn.train.lr = v.parse().map_err(|_| num("learning rate"))?,
                 "kmax" => scn.train.k_max = Some(v.parse().map_err(|_| num("kmax"))?),
+                "steps" => scn.train.steps = Some(v.parse().map_err(|_| num("steps"))?),
                 "grad-ms" => {
                     let ms: f64 = v.parse().map_err(|_| num("grad-ms"))?;
                     anyhow::ensure!(ms > 0.0 && ms.is_finite(), "grad-ms must be > 0");
@@ -174,6 +176,9 @@ impl std::fmt::Display for Scenario {
         if let Some(k) = t.k_max {
             write!(f, " kmax={k}")?;
         }
+        if let Some(n) = t.steps {
+            write!(f, " steps={n}")?;
+        }
         if !t.compute_floor.is_zero() {
             write!(f, " floor-ms={}", t.compute_floor.as_secs_f64() * 1000.0)?;
         }
@@ -218,9 +223,11 @@ mod tests {
     #[test]
     fn display_parse_roundtrip() {
         let spec = "workers=4 shards=3 policy=hybrid-strict:const:4 secs=2.5 seed=9 lr=0.1 \
-                    grad-ms=2.5 floor-ms=20 eval-ms=250 kmax=3 delay-frac=0.5 delay-mean=0 \
-                    delay-std=0.25 compress=topk:0.01 faults=crash:1@1,stall:2@0.5..0.75";
+                    grad-ms=2.5 floor-ms=20 eval-ms=250 kmax=3 steps=40 delay-frac=0.5 \
+                    delay-mean=0 delay-std=0.25 compress=topk:0.01 \
+                    faults=crash:1@1,stall:2@0.5..0.75";
         let a = Scenario::parse(spec).unwrap();
+        assert_eq!(a.train.steps, Some(40));
         let b = Scenario::parse(&a.to_string()).unwrap();
         assert_eq!(a.train.workers, b.train.workers);
         assert_eq!(a.train.shards, b.train.shards);
@@ -229,6 +236,7 @@ mod tests {
         assert_eq!(a.train.seed, b.train.seed);
         assert_eq!(a.train.lr, b.train.lr);
         assert_eq!(a.train.k_max, b.train.k_max);
+        assert_eq!(a.train.steps, b.train.steps);
         assert_eq!(a.train.delay, b.train.delay);
         assert_eq!(a.train.compute_floor, b.train.compute_floor);
         assert_eq!(a.grad_time, b.grad_time);

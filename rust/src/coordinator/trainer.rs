@@ -99,6 +99,12 @@ pub struct TrainConfig {
     /// Gradient wire format (`dense` reproduces the uncompressed pipeline
     /// bitwise; see `coordinator::compress`).
     pub wire: WireFormat,
+    /// Per-worker gradient-submission budget (`--steps`). When set, the
+    /// run ends as soon as every worker has submitted this many gradients
+    /// (with `duration` as a hard deadline backstop) — the deterministic
+    /// alternative to a wall-clock budget, used by the multi-process
+    /// acceptance tests to compare runs bitwise.
+    pub steps: Option<u64>,
 }
 
 impl TrainConfig {
@@ -115,7 +121,18 @@ impl TrainConfig {
             compute_floor: Duration::ZERO,
             shards: 1,
             wire: WireFormat::Dense,
+            steps: None,
         }
+    }
+}
+
+/// Raises the stop flag on *every* exit from a training thread scope
+/// (including `?` error paths), or the scoped joins would hang forever.
+struct StopGuard<'a>(&'a AtomicBool);
+
+impl Drop for StopGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::Relaxed);
     }
 }
 
@@ -174,16 +191,9 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         trace_interval: Duration::from_millis(200),
     };
 
-    // Ensure the stop flag is raised on *every* exit from the thread scope
-    // (including `?` error paths), or the scoped join would hang forever.
-    struct StopGuard<'a>(&'a AtomicBool);
-    impl Drop for StopGuard<'_> {
-        fn drop(&mut self) {
-            self.0.store(true, Ordering::Relaxed);
-        }
-    }
-
     let mut metrics = RunMetrics::default();
+    // Workers that have returned (steps-budget runs end when all have).
+    let finished = std::sync::atomic::AtomicUsize::new(0);
     let result: anyhow::Result<()> = std::thread::scope(|s| {
         let _stop_guard = StopGuard(&stop);
         // --- shard-server threads ---
@@ -213,6 +223,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
                 seed: cfg.seed.wrapping_add(1000 + id as u64),
                 min_iter: cfg.compute_floor,
                 wire: cfg.wire.clone(),
+                max_grads: cfg.steps,
             };
             let endpoints = ShardEndpoints {
                 layout: layout.clone(),
@@ -223,16 +234,23 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
             let source_factory = Arc::clone(&inputs.batch_source);
             let init = inputs.init_params.to_vec();
             let stop_ref = &stop;
+            let finished_ref = &finished;
             worker_handles.push(s.spawn(move || {
-                let engine = match factory() {
-                    Ok(e) => e,
-                    Err(e) => {
-                        crate::log_warn!("trainer", "worker {id} engine init failed: {e:#}");
-                        return super::worker::WorkerReport::default();
-                    }
-                };
-                let source = source_factory(id);
-                run_worker(&wcfg, engine, source, init, endpoints, reply_rx, stop_ref, clock)
+                let report = (|| {
+                    let engine = match factory() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            crate::log_warn!("trainer", "worker {id} engine init failed: {e:#}");
+                            return super::worker::WorkerReport::default();
+                        }
+                    };
+                    let source = source_factory(id);
+                    let mut transport =
+                        crate::transport::InProcTransport::new(endpoints, reply_rx);
+                    run_worker(&wcfg, engine, source, init, &mut transport, stop_ref, clock)
+                })();
+                finished_ref.fetch_add(1, Ordering::Relaxed);
+                report
             }));
         }
         drop(grad_txs); // shard servers exit when the last worker sender drops
@@ -248,12 +266,29 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
             clock,
         };
         let mut params_buf = inputs.init_params.to_vec();
-        // t=0 sample, then periodic until the budget elapses.
+        // t=0 sample, then periodic until the budget elapses. Under a
+        // `steps` budget the loop also ends as soon as every worker has
+        // spent its submissions (polling in short slices so the run does
+        // not idle up to a full eval interval after the last gradient);
+        // without one, the cadence is exactly the pre-steps behaviour.
         eval_loop.sample(&mut metrics, &mut params_buf)?;
+        let mut since_eval = Duration::ZERO;
         while clock.now() < cfg.duration {
+            if cfg.steps.is_some() && finished.load(Ordering::Relaxed) >= cfg.workers {
+                break;
+            }
             let remaining = cfg.duration.saturating_sub(clock.now());
-            clock.sleep(cfg.eval_interval.min(remaining));
-            eval_loop.sample(&mut metrics, &mut params_buf)?;
+            let slice = if cfg.steps.is_some() {
+                Duration::from_millis(25).min(cfg.eval_interval)
+            } else {
+                cfg.eval_interval
+            };
+            clock.sleep(slice.min(remaining));
+            since_eval += slice;
+            if cfg.steps.is_none() || since_eval >= cfg.eval_interval {
+                since_eval = Duration::ZERO;
+                eval_loop.sample(&mut metrics, &mut params_buf)?;
+            }
         }
 
         stop.store(true, Ordering::Relaxed);
@@ -294,6 +329,288 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         metrics.final_metrics().map(|m| m.2).unwrap_or(f64::NAN)
     );
     Ok(metrics)
+}
+
+/// Serve the sharded parameter server over TCP: the multi-process
+/// counterpart of [`train`]. Shard-server threads, the evaluator and the
+/// metrics pipeline are identical to the in-process run; the worker
+/// threads are replaced by a [`crate::transport::TcpFrontend`] bridging
+/// remote workers (`hybrid-sgd join`) onto the same shard channels.
+///
+/// The run ends when the wall-clock budget elapses **or** when at least
+/// one worker has joined and all workers have since disconnected (the
+/// step-budget completion path: `join --steps N` workers leave when their
+/// budget is spent). On the TCP path `bytes_sent`/`bytes_received` are
+/// measured at true frame granularity over the gradient plane (DESIGN.md
+/// §2.6), and `bytes_dense_equiv` uses the server-observed submission
+/// count.
+pub fn serve(
+    cfg: &TrainConfig,
+    inputs: &RunInputs,
+    listener: std::net::TcpListener,
+    net: &crate::transport::NetOptions,
+) -> anyhow::Result<RunMetrics> {
+    let clock_owned = RealClock::start();
+    let clock: &dyn Clock = &clock_owned;
+    let stop = Arc::new(AtomicBool::new(false));
+    let layout = ShardLayout::new(inputs.init_params.len(), cfg.shards);
+    let cells = shard_cells(inputs.init_params, &layout);
+    let dim = layout.dim() as u64;
+
+    let mut grad_txs = Vec::with_capacity(layout.shards());
+    let mut grad_rxs = Vec::with_capacity(layout.shards());
+    for _ in 0..layout.shards() {
+        let (tx, rx) = mpsc::channel::<ShardMsg>();
+        grad_txs.push(tx);
+        grad_rxs.push(Some(rx));
+    }
+    let mut reply_txs = Vec::with_capacity(cfg.workers);
+    let mut reply_rxs = Vec::with_capacity(cfg.workers);
+    for _ in 0..cfg.workers {
+        let (tx, rx) = mpsc::channel::<Reply>();
+        reply_txs.push(tx);
+        reply_rxs.push(rx);
+    }
+    // Same heterogeneity draw as the in-process trainer; the flags travel
+    // to each worker in its Welcome.
+    let mut delay_rng = Pcg64::new(cfg.seed, 7);
+    let delayed_flags = cfg.delay.assign(cfg.workers, &mut delay_rng);
+
+    let server_cfg = ServerConfig {
+        policy: cfg.policy.clone(),
+        workers: cfg.workers,
+        lr: cfg.lr,
+        k_max: cfg.k_max,
+        trace_interval: Duration::from_millis(200),
+    };
+
+    let listen_addr = listener.local_addr()?;
+    let frontend = crate::transport::TcpFrontend::start(
+        listener,
+        layout.clone(),
+        grad_txs.clone(),
+        cells.clone(),
+        reply_rxs,
+        delayed_flags,
+        Arc::clone(&stop),
+        net.clone(),
+    )?;
+    log_info!(
+        "trainer",
+        "serving {} on {listen_addr}: {} shards, {} worker slots",
+        cfg.policy,
+        layout.shards(),
+        cfg.workers
+    );
+
+    let mut metrics = RunMetrics::default();
+    let mut fstats = crate::transport::tcp::FrontendStats::default();
+    let result: anyhow::Result<()> = std::thread::scope(|s| {
+        let _stop_guard = StopGuard(stop.as_ref());
+        let mut shard_handles = Vec::with_capacity(layout.shards());
+        for shard in 0..layout.shards() {
+            let range = layout.range(shard);
+            let init = inputs.init_params[range.clone()].to_vec();
+            let cell = Arc::clone(&cells[shard]);
+            let scfg = server_cfg.clone();
+            let rtxs = reply_txs.clone();
+            let grad_rx = grad_rxs[shard].take().unwrap();
+            let stop_ref: &AtomicBool = &stop;
+            shard_handles.push(s.spawn(move || {
+                run_shard(shard, range, init, cell, &scfg, grad_rx, rtxs, stop_ref, clock)
+            }));
+        }
+        drop(reply_txs); // shard threads own the only reply senders now
+        drop(grad_txs); // the frontend owns the remaining gradient senders
+
+        // --- evaluator (this thread) ---
+        let mut eval_engine = (inputs.eval_engine)()?;
+        let mut eval_loop = EvalLoop {
+            engine: eval_engine.as_mut(),
+            test: inputs.test,
+            train_probe: inputs.train_probe,
+            cells: &cells,
+            layout: &layout,
+            clock,
+        };
+        let mut params_buf = inputs.init_params.to_vec();
+        eval_loop.sample(&mut metrics, &mut params_buf)?;
+        let slice = Duration::from_millis(25).min(cfg.eval_interval);
+        let mut since_eval = Duration::ZERO;
+        // Completion: everyone joined has left — but only after the state
+        // has been stable for a grace window, so a worker mid-reconnect
+        // (active transiently 0) does not end the run under it. Under a
+        // steps budget the run additionally waits for the full worker
+        // complement to have attached, so a fast first worker finishing
+        // its budget cannot end the run before slower processes arrive.
+        let min_joined = if cfg.steps.is_some() { cfg.workers } else { 1 };
+        let mut idle_polls = 0u32;
+        while clock.now() < cfg.duration {
+            if frontend.ever_joined() >= min_joined && frontend.active_conns() == 0 {
+                idle_polls += 1;
+                if idle_polls >= 20 {
+                    break;
+                }
+            } else {
+                idle_polls = 0;
+            }
+            let remaining = cfg.duration.saturating_sub(clock.now());
+            clock.sleep(slice.min(remaining));
+            since_eval += slice;
+            if since_eval >= cfg.eval_interval {
+                since_eval = Duration::ZERO;
+                eval_loop.sample(&mut metrics, &mut params_buf)?;
+            }
+        }
+
+        stop.store(true, Ordering::Relaxed);
+        // Joins every connection thread, sends Shutdown to live workers and
+        // releases the frontend's gradient senders — after this the shard
+        // servers drain and exit exactly as when in-process workers finish.
+        fstats = frontend.shutdown();
+        let reports = shard_handles
+            .into_iter()
+            .map(|h| h.join().expect("shard-server thread panicked"))
+            .collect::<Vec<_>>();
+        merge_reports(&layout, reports).fill(&mut metrics);
+        // Frame-granularity gradient-plane accounting (headers included);
+        // sender and receiver sides agree by construction on loss-free TCP.
+        metrics.bytes_sent = fstats.grad_frame_bytes;
+        metrics.bytes_received = fstats.grad_frame_bytes;
+        metrics.bytes_dense_equiv = fstats.submissions * dim * 4;
+        eval_loop.sample(&mut metrics, &mut params_buf)?;
+        Ok(())
+    });
+    result?;
+    metrics.wall_time = clock.now().as_secs_f64();
+    if metrics.bytes_sent > 0 {
+        metrics
+            .compression_ratio
+            .push(metrics.wall_time, metrics.wire_compression());
+    }
+    log_info!(
+        "trainer",
+        "serve done: {} grads over TCP ({} submissions, {} B on the gradient plane), {} updates",
+        metrics.gradients_total,
+        fstats.submissions,
+        fstats.grad_frame_bytes,
+        metrics.updates_total
+    );
+    Ok(metrics)
+}
+
+/// Run one gradient worker against a remote parameter server: the
+/// multi-process counterpart of a worker thread inside [`train`]. Dials
+/// `connect` (with backoff), attaches, pulls the initial parameters over
+/// the wire, then runs the standard worker loop until the server shuts the
+/// run down, the `steps` budget is spent, or `deadline` elapses.
+///
+/// Seed derivations match the in-process trainer exactly (`seed + 1000 +
+/// id` for the worker stream, `batch_source(id)` for data), so a TCP run
+/// with the same geometry reproduces the in-process math.
+#[allow(clippy::too_many_arguments)]
+pub fn join_remote(
+    connect: &str,
+    net: &crate::transport::NetOptions,
+    wire: WireFormat,
+    delay: DelayModel,
+    seed: u64,
+    compute_floor: Duration,
+    steps: Option<u64>,
+    deadline: Duration,
+    worker_engine: crate::engine::EngineFactory,
+    batch_source: Arc<dyn Fn(usize) -> Box<dyn BatchSource> + Send + Sync>,
+    expected_workers: Option<usize>,
+) -> anyhow::Result<super::worker::WorkerReport> {
+    use crate::transport::{TcpTransport, Transport, TransportError};
+    let clock_owned = RealClock::start();
+    let clock: &dyn Clock = &clock_owned;
+    let mut transport = TcpTransport::connect(connect, &wire.to_string(), net.clone())?;
+    let info = transport.attach_info();
+    if let Some(w) = expected_workers {
+        anyhow::ensure!(
+            info.workers == w,
+            "server runs {} worker slots but --workers {w} was given \
+             (data sharding would diverge from the in-process run)",
+            info.workers
+        );
+    }
+    let engine = worker_engine()?;
+    anyhow::ensure!(
+        engine.param_count() == info.dim,
+        "local model has {} parameters but the server serves {}",
+        engine.param_count(),
+        info.dim
+    );
+    let source = batch_source(info.worker);
+    log_info!(
+        "trainer",
+        "joined {connect} as worker {}/{} (shards={}, dim={}, delayed={}, wire={wire})",
+        info.worker,
+        info.workers,
+        info.shards,
+        info.dim,
+        info.delayed
+    );
+    // Initial parameters: a full refresh over the wire (the in-process
+    // worker receives them by value from the trainer).
+    let mut init = vec![0.0f32; info.dim];
+    let layout = transport.layout().clone();
+    for shard in 0..layout.shards() {
+        let range = layout.range(shard);
+        let mut attempts = 0;
+        loop {
+            match transport.refresh(shard, &mut init[range.clone()]) {
+                Ok(_) => break,
+                Err(TransportError::Closed(why)) => {
+                    anyhow::bail!("initial parameter fetch failed: {why}")
+                }
+                Err(_) => {
+                    attempts += 1;
+                    anyhow::ensure!(
+                        attempts < 5,
+                        "could not fetch initial parameters for shard {shard}"
+                    );
+                }
+            }
+        }
+    }
+    let wcfg = WorkerConfig {
+        id: info.worker,
+        delayed: info.delayed,
+        delay,
+        seed: seed.wrapping_add(1000 + info.worker as u64),
+        min_iter: compute_floor,
+        wire,
+        max_grads: steps,
+    };
+    // Deadline watchdog: the worker loop only checks a stop flag.
+    let stop = Arc::new(AtomicBool::new(false));
+    let watchdog = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let start = std::time::Instant::now();
+            while !stop.load(Ordering::Relaxed) {
+                if start.elapsed() >= deadline {
+                    stop.store(true, Ordering::Relaxed);
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+    let report = run_worker(&wcfg, engine, source, init, &mut transport, &stop, clock);
+    stop.store(true, Ordering::Relaxed);
+    let _ = watchdog.join();
+    log_info!(
+        "trainer",
+        "worker {} done: {} grads, {} refreshes, {} B sent (frame granularity)",
+        info.worker,
+        report.grads_sent,
+        report.refreshes,
+        report.bytes_sent
+    );
+    Ok(report)
 }
 
 /// The evaluator: assembles a parameter view from the per-shard snapshot

@@ -2,14 +2,17 @@
 //!
 //! A worker owns: a local parameter copy, a [`GradEngine`] (constructed
 //! inside the thread — PJRT clients are not `Send`), a [`BatchSource`], and
-//! its half of the sharded channel protocol. Per iteration it computes a
-//! gradient, optionally sleeps an injected delay (the paper's heterogeneity
-//! model), encodes it in the configured [`WireFormat`] (dense submissions
-//! fan out as `Arc` clones of one buffer; compressed ones go through the
-//! worker's [`GradEncoder`], whose buffers recycle round-trip), waits for
-//! all `S` shard replies, and refreshes only the shard slices whose
-//! parameters actually changed — via snapshot-cell pointer reads, never
-//! O(dim) channel payloads.
+//! a [`Transport`] to the sharded parameter server. Per iteration it
+//! computes a gradient, optionally sleeps an injected delay (the paper's
+//! heterogeneity model), encodes it in the configured [`WireFormat`] (dense
+//! submissions fan out as `Arc` clones of one buffer; compressed ones go
+//! through the worker's [`GradEncoder`], whose buffers recycle round-trip),
+//! waits for all `S` shard replies, and refreshes only the shard slices
+//! whose parameters actually changed. With the default
+//! [`crate::transport::InProcTransport`] this is exactly the channel +
+//! snapshot-cell protocol it always was (bitwise-identical); with a
+//! [`crate::transport::TcpTransport`] the same loop trains against a
+//! parameter server in another process.
 
 use super::clock::Clock;
 use super::compress::{submission_bytes, GradEncoder, ShardGrad, WireFormat};
@@ -20,9 +23,10 @@ use super::shard::ShardLayout;
 use crate::data::tokens::TokenBatcher;
 use crate::data::Batcher;
 use crate::engine::GradEngine;
+use crate::transport::{Transport, TransportError};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -79,6 +83,10 @@ pub struct WorkerConfig {
     pub min_iter: Duration,
     /// How this worker encodes gradients on the wire.
     pub wire: WireFormat,
+    /// Stop after this many gradient submissions (the `--steps` budget;
+    /// `None` = run until the stop flag). Deterministic runs use a step
+    /// budget instead of a wall-clock one.
+    pub max_grads: Option<u64>,
 }
 
 /// The worker's view of the sharded parameter server.
@@ -104,26 +112,28 @@ pub struct WorkerReport {
     pub bytes_sent: u64,
 }
 
-/// Run one worker until `stop` is set. Call on a dedicated thread. All
-/// timing (iteration pacing, injected delays) goes through `clock`, never
-/// through `Instant`/`thread::sleep` directly.
+/// Run one worker until `stop` is set (or its `max_grads` budget is
+/// spent). Call on a dedicated thread. All timing (iteration pacing,
+/// injected delays) goes through `clock`, never through
+/// `Instant`/`thread::sleep` directly. The `transport` carries submissions
+/// and replies — in-process channels by default, TCP frames across
+/// processes — without changing the loop's protocol.
 #[allow(clippy::too_many_arguments)]
 pub fn run_worker(
     cfg: &WorkerConfig,
     mut engine: Box<dyn GradEngine>,
     mut source: Box<dyn BatchSource>,
     init_params: Vec<f32>,
-    endpoints: ShardEndpoints,
-    reply_rx: Receiver<Reply>,
+    transport: &mut dyn Transport,
     stop: &AtomicBool,
     clock: &dyn Clock,
 ) -> WorkerReport {
     let mut report = WorkerReport::default();
     let mut params = init_params;
     let dim = params.len();
-    let shards = endpoints.layout.shards();
-    debug_assert_eq!(endpoints.grad_txs.len(), shards);
-    debug_assert_eq!(endpoints.cells.len(), shards);
+    let layout = transport.layout().clone();
+    let shards = layout.shards();
+    debug_assert_eq!(layout.dim(), dim);
     // Per-shard version of the local parameter copy.
     let mut versions = vec![0u64; shards];
     // Which shards to refresh after the current round of replies.
@@ -140,7 +150,9 @@ pub fn run_worker(
     };
     let mut payloads: Vec<ShardGrad> = Vec::with_capacity(shards);
 
-    'outer: while !stop.load(Ordering::Relaxed) {
+    'outer: while !stop.load(Ordering::Relaxed)
+        && cfg.max_grads.map_or(true, |n| report.grads_sent < n)
+    {
         let iter_start = clock.now();
         let (x, y) = source.next();
         let loss = match engine.grad(&params, x, y, &mut grad_buf) {
@@ -181,33 +193,44 @@ pub fn run_worker(
                 Some(arc)
             }
             Some(enc) => {
-                enc.encode(&grad_buf, &endpoints.layout, &mut payloads);
-                report.bytes_sent += submission_bytes(&payloads, &endpoints.layout);
+                enc.encode(&grad_buf, &layout, &mut payloads);
+                report.bytes_sent += submission_bytes(&payloads, &layout);
                 None
             }
         };
-        for (s, tx) in endpoints.grad_txs.iter().enumerate() {
+        let mut round_lost = false;
+        for s in 0..shards {
             let grad = match &shared {
                 Some(arc) => ShardGrad::Dense(Arc::clone(arc)),
                 None => payloads[s].clone(),
             };
-            let sent = tx.send(ShardMsg {
-                worker: cfg.id,
-                base_version: versions[s],
-                loss,
-                grad,
-            });
-            if sent.is_err() {
-                break 'outer; // server gone
+            match transport.submit(
+                s,
+                ShardMsg {
+                    worker: cfg.id,
+                    base_version: versions[s],
+                    loss,
+                    grad,
+                },
+            ) {
+                Ok(()) => {}
+                Err(TransportError::Reconnected) => {
+                    // The connection (and any shard copies of this round
+                    // already sent) is gone; resync and try a fresh round.
+                    round_lost = true;
+                    break;
+                }
+                Err(_) => break 'outer, // server gone
             }
         }
         report.grads_sent += 1;
 
         // Await one reply per shard (with stop checks: barrier waits can
-        // span seconds).
-        let mut pending = shards;
+        // span seconds). A transport reconnect abandons the round: the
+        // in-flight replies died with the old connection.
+        let mut pending = if round_lost { 0 } else { shards };
         while pending > 0 {
-            match reply_rx.recv_timeout(Duration::from_millis(50)) {
+            match transport.recv_reply(Duration::from_millis(50)) {
                 Ok(Reply::Updated { shard, version }) => {
                     if version != versions[shard] {
                         needs_refresh[shard] = true;
@@ -218,12 +241,16 @@ pub fn run_worker(
                     report.unchanged_replies += 1;
                     pending -= 1;
                 }
-                Err(RecvTimeoutError::Timeout) => {
+                Err(TransportError::Timeout) => {
                     if stop.load(Ordering::Relaxed) {
-                        return report;
+                        break 'outer;
                     }
                 }
-                Err(RecvTimeoutError::Disconnected) => return report,
+                Err(TransportError::Reconnected) => {
+                    round_lost = true;
+                    break;
+                }
+                Err(TransportError::Closed(_)) => break 'outer,
             }
         }
         // Every shard dropped its clone before replying: recycle the dense
@@ -233,17 +260,36 @@ pub fn run_worker(
         if let Some(arc) = shared {
             spare = Arc::try_unwrap(arc).unwrap_or_else(|_| vec![0.0f32; dim]);
         }
-        // Refresh changed shard slices from their snapshot cells: a pointer
-        // read per shard, one memcpy per *changed* shard.
-        for (s, flag) in needs_refresh.iter_mut().enumerate() {
-            if *flag {
-                let snap = endpoints.cells[s].load();
-                params[endpoints.layout.range(s)].copy_from_slice(&snap.theta);
-                versions[s] = snap.version;
-                report.refreshes += 1;
-                *flag = false;
+        if round_lost {
+            // After a reconnect every local slice is suspect: refresh all.
+            for f in needs_refresh.iter_mut() {
+                *f = true;
             }
         }
+        // Refresh changed shard slices — a snapshot-cell pointer read +
+        // memcpy in process, a SnapshotRequest/SnapshotSlice round trip
+        // over TCP — one copy per *changed* shard either way.
+        for (s, flag) in needs_refresh.iter_mut().enumerate() {
+            if *flag {
+                match transport.refresh(s, &mut params[layout.range(s)]) {
+                    Ok(version) => {
+                        versions[s] = version;
+                        report.refreshes += 1;
+                        *flag = false;
+                    }
+                    Err(TransportError::Closed(_)) => break 'outer,
+                    // Transient (timeout / mid-refresh reconnect): keep the
+                    // flag; the next round retries. Stale local slices are
+                    // exactly the staleness an asynchronous PS tolerates.
+                    Err(_) => {}
+                }
+            }
+        }
+    }
+    // Frame-granularity accounting when the transport measures it (TCP);
+    // the in-process path keeps the logical payload byte counts above.
+    if let Some((sent, _received)) = transport.wire_counters() {
+        report.bytes_sent = sent;
     }
     report
 }
@@ -278,6 +324,7 @@ mod tests {
             seed: 1,
             min_iter: Duration::ZERO,
             wire: WireFormat::Dense,
+            max_grads: None,
         };
         let layout = ShardLayout::new(2, 1);
         let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
@@ -294,7 +341,8 @@ mod tests {
                 y: vec![],
             });
             let clock = crate::coordinator::clock::RealClock::start();
-            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2, &clock)
+            let mut transport = crate::transport::InProcTransport::new(endpoints, rrx);
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], &mut transport, &stop2, &clock)
         });
         // Act as the shard server for 3 round trips, publishing snapshots.
         for i in 0..3u64 {
@@ -330,6 +378,7 @@ mod tests {
             seed: 2,
             min_iter: Duration::ZERO,
             wire: WireFormat::Dense,
+            max_grads: None,
         };
         let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
         let endpoints = ShardEndpoints {
@@ -345,7 +394,8 @@ mod tests {
                 y: vec![],
             });
             let clock = crate::coordinator::clock::RealClock::start();
-            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2, &clock)
+            let mut transport = crate::transport::InProcTransport::new(endpoints, rrx);
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], &mut transport, &stop2, &clock)
         });
         for _ in 0..2 {
             let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();
@@ -378,6 +428,7 @@ mod tests {
             seed: 3,
             min_iter: Duration::ZERO,
             wire: WireFormat::TopK(KSpec::Count(1)),
+            max_grads: None,
         };
         let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
         let endpoints = ShardEndpoints {
@@ -393,7 +444,8 @@ mod tests {
                 y: vec![],
             });
             let clock = crate::coordinator::clock::RealClock::start();
-            run_worker(&cfg, engine, source, vec![0.0, 0.0], endpoints, rrx, &stop2, &clock)
+            let mut transport = crate::transport::InProcTransport::new(endpoints, rrx);
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], &mut transport, &stop2, &clock)
         });
         for _ in 0..3 {
             let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();

@@ -120,6 +120,10 @@ pub struct ExpConfig {
     /// Gradient wire format (`--compress`); dense reproduces the
     /// uncompressed pipeline bitwise.
     pub compress: WireFormat,
+    /// Per-worker gradient-submission budget (`--steps`); the run ends
+    /// when every worker has spent it (deterministic alternative to the
+    /// wall-clock budget — `secs` remains the hard deadline).
+    pub steps: Option<u64>,
     /// When set, runs execute on the virtual-time simulator (`--sim`).
     pub sim: Option<SimParams>,
 }
@@ -183,6 +187,7 @@ impl ExpConfig {
             },
             shards: 1,
             compress: WireFormat::Dense,
+            steps: None,
             sim: None,
         }
     }

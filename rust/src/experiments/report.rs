@@ -19,6 +19,8 @@ USAGE:
 COMMANDS:
   inspect                      list models & artifacts from the manifest
   train                        one training run, print metrics
+  serve                        run the parameter server over TCP (workers `join`)
+  join                         run one gradient worker against a `serve` process
   compare                      run hybrid vs async vs sync, print charts
   table <1-5>                  regenerate a paper table
   figure <4-10>                regenerate a paper figure
@@ -40,9 +42,23 @@ COMMON OPTIONS:
   --fault-spec SPEC              inject faults, e.g. \"crash:3@5,stall:0@1..2,slow:*@2..4*8\"
                                  (implies --sim; see coordinator::sim::FaultPlan)
   --grad-ms F                    virtual per-gradient compute time in ms (sim, default 5)
+  --steps N                      stop after N gradient submissions per worker
+                                 (deterministic budget; --secs stays the hard
+                                 deadline). Works threaded, --sim, serve & join.
+  --metrics-out FILE             write the run's metrics as JSON (train/serve)
   --quick                        smoke scale (seconds)
   --paper-scale                  the paper's 25 workers x 5 rounds x 100 s
   --out DIR                      results directory (default results/)
+
+MULTI-PROCESS (see EXPERIMENTS.md for the localhost recipe):
+  serve --listen HOST:PORT --workers N [--shards S --policy P --steps N ...]
+  join  --connect HOST:PORT --workers N [--compress topk:0.01 --steps N ...]
+  join must repeat the server's --workers/--seed/--dataset/--batch so its
+  data shard and seed streams match the in-process run; the server assigns
+  the worker id at attach. Transport tuning: --hb-ms (heartbeat interval,
+  default 500), --hb-timeout-ms (half-open cutoff, default 5000),
+  --connect-timeout-ms (dial budget incl. backoff, default 10000),
+  --reconnect-attempts (default 2).
 ";
 
 /// Build an `ExpConfig` from CLI options.
@@ -70,6 +86,13 @@ fn config_from(args: &Args, default_dataset: DatasetKind) -> anyhow::Result<ExpC
     cfg.shards = args.usize_or("shards", cfg.shards).max(1);
     if let Some(c) = args.get("compress") {
         cfg.compress = crate::coordinator::WireFormat::parse(c)?;
+    }
+    if let Some(s) = args.get("steps") {
+        let n: u64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --steps `{s}` (expected a positive integer)"))?;
+        anyhow::ensure!(n > 0, "--steps must be at least 1");
+        cfg.steps = Some(n);
     }
     if let Some(std) = args.get("delay-std") {
         cfg.delay = DelayModel::paper_default().with_std(std.parse()?);
@@ -115,6 +138,8 @@ pub fn cli_main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("inspect") => cmd_inspect(),
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("join") => cmd_join(&args),
         Some("compare") => cmd_compare(&args),
         Some("table") => cmd_table(&args),
         Some("figure") => cmd_figure(&args),
@@ -148,13 +173,22 @@ fn cmd_inspect() -> anyhow::Result<()> {
     }
     println!("\ngraph artifacts:");
     for a in &man.artifacts {
+        // A directory-like artifact path would previously panic the whole
+        // inspect; report it as a malformed-manifest error instead.
+        let file = a.path.file_name().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact for model `{}` has a path with no file name: `{}`",
+                a.model,
+                a.path.display()
+            )
+        })?;
         println!(
             "  {:<14} {:<5} batch={:<4} variant={:<7} {}",
             a.model,
             a.kind,
             a.batch,
             a.variant,
-            a.path.file_name().unwrap().to_string_lossy()
+            file.to_string_lossy()
         );
     }
     println!("\nops:");
@@ -167,11 +201,11 @@ fn cmd_inspect() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let cfg = config_from(args, DatasetKind::Random)?;
+/// The `TrainConfig` a CLI invocation describes (shared by `train` and
+/// `serve`, so the two paths cannot drift).
+fn train_config_from(args: &Args, cfg: &ExpConfig) -> anyhow::Result<crate::coordinator::TrainConfig> {
     let policy = Policy::parse(&args.str_or("policy", &format!("hybrid:{}", cfg.schedule())))?;
-    let workload = super::runner::Workload::prepare(&cfg)?;
-    let tc = crate::coordinator::TrainConfig {
+    Ok(crate::coordinator::TrainConfig {
         policy,
         workers: cfg.workers,
         lr: cfg.lr,
@@ -183,7 +217,60 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         compute_floor: std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
         shards: cfg.shards,
         wire: cfg.compress.clone(),
-    };
+        steps: cfg.steps,
+    })
+}
+
+/// Transport tuning from CLI flags (defaults match `NetOptions`).
+fn net_options(args: &Args) -> crate::transport::NetOptions {
+    crate::transport::NetOptions {
+        hb_interval: std::time::Duration::from_millis(args.u64_or("hb-ms", 500)),
+        hb_timeout: std::time::Duration::from_millis(args.u64_or("hb-timeout-ms", 5000)),
+        connect_timeout: std::time::Duration::from_millis(
+            args.u64_or("connect-timeout-ms", 10_000),
+        ),
+        reconnect_attempts: args.u64_or("reconnect-attempts", 2) as u32,
+    }
+}
+
+fn write_metrics_out(args: &Args, m: &crate::coordinator::RunMetrics) -> anyhow::Result<()> {
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, m.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn print_run(tc: &crate::coordinator::TrainConfig, m: &crate::coordinator::RunMetrics) {
+    println!("policy          : {}", tc.policy);
+    println!("gradients       : {}", m.gradients_total);
+    println!("updates         : {}", m.updates_total);
+    println!("flushes         : {}", m.flushes);
+    println!("shards          : {}", m.shards);
+    println!("grads/sec       : {:.1}", m.grads_per_sec());
+    println!("mean staleness  : {:.2}", m.mean_staleness);
+    if !tc.wire.is_dense() {
+        println!("wire format     : {}", tc.wire);
+    }
+    if m.bytes_sent > 0 {
+        println!(
+            "bytes on wire   : {} sent / {} received ({:.1}x vs dense)",
+            m.bytes_sent,
+            m.bytes_received,
+            m.wire_compression()
+        );
+    }
+    if let Some((tr, te, acc)) = m.final_metrics() {
+        println!("final train loss: {tr:.4}");
+        println!("final test loss : {te:.4}");
+        println!("final test acc  : {acc:.2}%");
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args, DatasetKind::Random)?;
+    let workload = super::runner::Workload::prepare(&cfg)?;
+    let tc = train_config_from(args, &cfg)?;
     let inputs = crate::coordinator::RunInputs {
         worker_engine: std::sync::Arc::clone(&workload.worker_engine),
         eval_engine: std::sync::Arc::clone(&workload.eval_engine),
@@ -200,27 +287,76 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         }
         None => crate::coordinator::train(&tc, &inputs)?,
     };
-    println!("policy          : {}", tc.policy);
-    println!("gradients       : {}", m.gradients_total);
-    println!("updates         : {}", m.updates_total);
-    println!("flushes         : {}", m.flushes);
-    println!("shards          : {}", m.shards);
-    println!("grads/sec       : {:.1}", m.grads_per_sec());
-    println!("mean staleness  : {:.2}", m.mean_staleness);
-    if !tc.wire.is_dense() {
-        println!("wire format     : {}", tc.wire);
-        println!(
-            "bytes on wire   : {} sent / {} received ({:.1}x vs dense)",
-            m.bytes_sent,
-            m.bytes_received,
-            m.wire_compression()
-        );
-    }
-    if let Some((tr, te, acc)) = m.final_metrics() {
-        println!("final train loss: {tr:.4}");
-        println!("final test loss : {te:.4}");
-        println!("final test acc  : {acc:.2}%");
-    }
+    print_run(&tc, &m);
+    write_metrics_out(args, &m)?;
+    Ok(())
+}
+
+/// `hybrid-sgd serve --listen HOST:PORT ...`: the multi-process parameter
+/// server. Workload preparation, policy and seeds are exactly `train`'s;
+/// the workers arrive over TCP (`hybrid-sgd join`).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args, DatasetKind::Random)?;
+    anyhow::ensure!(
+        cfg.sim.is_none(),
+        "serve runs the threaded stack; --sim is single-process by design"
+    );
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --listen HOST:PORT (e.g. 127.0.0.1:7070)"))?;
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| anyhow::anyhow!("could not bind {listen}: {e}"))?;
+    println!("listening       : {}", listener.local_addr()?);
+    let workload = super::runner::Workload::prepare(&cfg)?;
+    let tc = train_config_from(args, &cfg)?;
+    let inputs = crate::coordinator::RunInputs {
+        worker_engine: std::sync::Arc::clone(&workload.worker_engine),
+        eval_engine: std::sync::Arc::clone(&workload.eval_engine),
+        batch_source: workload_batch_source(&workload, &cfg),
+        init_params: &workload.init,
+        test: &workload.test,
+        train_probe: &workload.probe,
+    };
+    let m = crate::coordinator::serve(&tc, &inputs, listener, &net_options(args))?;
+    print_run(&tc, &m);
+    write_metrics_out(args, &m)?;
+    Ok(())
+}
+
+/// `hybrid-sgd join --connect HOST:PORT ...`: one gradient worker process.
+/// Must repeat the server's --workers/--seed/--dataset/--batch so its data
+/// shard and seed derivations match the in-process run.
+fn cmd_join(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args, DatasetKind::Random)?;
+    anyhow::ensure!(
+        cfg.sim.is_none(),
+        "join runs the threaded stack; --sim is single-process by design"
+    );
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("join needs --connect HOST:PORT"))?;
+    let workload = super::runner::Workload::prepare(&cfg)?;
+    let net = net_options(args);
+    // Hard deadline: the server's budget plus the dial allowance, so a
+    // worker never outlives a hung run.
+    let deadline = std::time::Duration::from_secs_f64(cfg.secs) + net.connect_timeout;
+    let report = crate::coordinator::join_remote(
+        connect,
+        &net,
+        cfg.compress.clone(),
+        cfg.delay.clone(),
+        cfg.seed,
+        std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
+        cfg.steps,
+        deadline,
+        std::sync::Arc::clone(&workload.worker_engine),
+        workload_batch_source(&workload, &cfg),
+        Some(cfg.workers),
+    )?;
+    println!("grads sent      : {}", report.grads_sent);
+    println!("refreshes       : {}", report.refreshes);
+    println!("unchanged acks  : {}", report.unchanged_replies);
+    println!("bytes sent      : {} (frame granularity)", report.bytes_sent);
     Ok(())
 }
 
@@ -248,7 +384,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     let cmp = run_comparison(&cfg)?;
     println!("{}", comparison_charts(&format!("compare [{}]", cfg.tag()), &cmp));
     println!("interval-mean diffs (hybrid − async):");
-    let d = cmp.diff_vs(Algo::Async);
+    let d = cmp.diff_vs(Algo::Async)?;
     println!("  test accuracy : {:+.3}", d.test_acc);
     println!("  test loss     : {:+.3}", d.test_loss);
     println!("  train loss    : {:+.3}", d.train_loss);

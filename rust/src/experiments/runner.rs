@@ -181,19 +181,37 @@ pub struct DiffRow {
 }
 
 impl Comparison {
-    pub fn averaged_for(&self, a: Algo) -> &AveragedRun {
-        &self.averaged.iter().find(|(x, _)| *x == a).unwrap().1
+    /// The averaged run of one algorithm. An algorithm missing from this
+    /// comparison (e.g. asking for sync in a hybrid-vs-async table) is a
+    /// configuration error reported as such, not a panic that aborts the
+    /// whole multi-round run.
+    pub fn averaged_for(&self, a: Algo) -> anyhow::Result<&AveragedRun> {
+        self.averaged
+            .iter()
+            .find(|(x, _)| *x == a)
+            .map(|(_, avg)| avg)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "algorithm `{}` is not part of this comparison (ran: {})",
+                    a.name(),
+                    self.averaged
+                        .iter()
+                        .map(|(x, _)| x.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
     }
 
     /// hybrid − baseline, averaged over the training interval.
-    pub fn diff_vs(&self, baseline: Algo) -> DiffRow {
-        let ours = self.averaged_for(Algo::Hybrid);
-        let base = self.averaged_for(baseline);
-        DiffRow {
+    pub fn diff_vs(&self, baseline: Algo) -> anyhow::Result<DiffRow> {
+        let ours = self.averaged_for(Algo::Hybrid)?;
+        let base = self.averaged_for(baseline)?;
+        Ok(DiffRow {
             test_acc: interval_mean_diff(&ours.test_acc, &base.test_acc),
             test_loss: interval_mean_diff(&ours.test_loss, &base.test_loss),
             train_loss: interval_mean_diff(&ours.train_loss, &base.train_loss),
-        }
+        })
     }
 }
 
@@ -235,6 +253,7 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 compute_floor: std::time::Duration::from_secs_f64(cfg.compute_ms / 1000.0),
                 shards: cfg.shards,
                 wire: cfg.compress.clone(),
+                steps: cfg.steps,
             };
             let inputs = RunInputs {
                 worker_engine: Arc::clone(&workload.worker_engine),
@@ -266,7 +285,13 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 }
                 None => train(&tc, &inputs)?,
             };
-            raw.iter_mut().find(|(a, _)| *a == algo).unwrap().1.push(m);
+            raw.iter_mut()
+                .find(|(a, _)| *a == algo)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("algorithm `{}` vanished from the result table", algo.name())
+                })?
+                .1
+                .push(m);
         }
     }
 
@@ -327,7 +352,7 @@ mod tests {
             assert!(avg.grads_per_sec > 0.0);
         }
         // diff rows are finite
-        let d = cmp.diff_vs(Algo::Async);
+        let d = cmp.diff_vs(Algo::Async).unwrap();
         assert!(d.test_acc.is_finite() && d.test_loss.is_finite());
     }
 
@@ -359,6 +384,10 @@ mod tests {
         let cfg = native_cfg();
         let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async]).unwrap();
         assert_eq!(cmp.averaged.len(), 2);
+        // asking for an algorithm that did not run is an error, not a panic
+        let err = cmp.diff_vs(Algo::Sync).unwrap_err();
+        assert!(err.to_string().contains("sync"), "{err}");
+        assert!(cmp.averaged_for(Algo::Hybrid).is_ok());
     }
 
     #[test]

@@ -87,7 +87,7 @@ fn image_table(
         cfg.step_mult = mult;
         cfg.batch = batch;
         let cmp = run_comparison(&cfg)?;
-        measured.push(cmp.diff_vs(Algo::Async));
+        measured.push(cmp.diff_vs(Algo::Async)?);
         comparisons.push(cmp);
         labels.push(format!("({},{})", (mult / base.lr as f64) as i64, batch));
     }
@@ -154,7 +154,7 @@ pub fn table3(base: &ExpConfig) -> anyhow::Result<Table> {
         // paper: a newly sampled dataset per configuration
         cfg.seed = base.seed.wrapping_add(batch as u64);
         let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async])?;
-        measured.push(cmp.diff_vs(Algo::Async));
+        measured.push(cmp.diff_vs(Algo::Async)?);
         comparisons.push(cmp);
         labels.push(format!("{batch}"));
     }
@@ -188,7 +188,7 @@ pub fn table4(base: &ExpConfig) -> anyhow::Result<Table> {
         cfg.step_mult = mult;
         cfg.seed = base.seed.wrapping_add((mult * 10.0) as u64);
         let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async])?;
-        measured.push(cmp.diff_vs(Algo::Async));
+        measured.push(cmp.diff_vs(Algo::Async)?);
         comparisons.push(cmp);
         labels.push(format!("{}/lr", mult as i64));
     }
@@ -223,7 +223,7 @@ pub fn table5(base: &ExpConfig) -> anyhow::Result<Table> {
         cfg.delay = DelayModel::paper_default().with_std(std);
         cfg.seed = base.seed.wrapping_add((std * 100.0) as u64);
         let cmp = run_comparison_algos(&cfg, &[Algo::Hybrid, Algo::Async])?;
-        measured.push(cmp.diff_vs(Algo::Async));
+        measured.push(cmp.diff_vs(Algo::Async)?);
         comparisons.push(cmp);
         labels.push(format!("(0,{std})"));
     }

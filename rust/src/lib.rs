@@ -22,6 +22,12 @@
 //!   whole pipeline deterministically in virtual time with fault injection
 //!   (crashes, stragglers, message loss, shard stalls) behind a one-line
 //!   scenario DSL.
+//! - **transport** (`transport`) — the process boundary: a versioned,
+//!   CRC32-checked binary frame codec and a `Transport` trait with an
+//!   in-process implementation (bitwise-identical to the channel protocol)
+//!   and a TCP one (`hybrid-sgd serve` / `hybrid-sgd join`) with
+//!   reconnect-with-backoff, heartbeat half-open detection, and
+//!   frame-granularity byte accounting (DESIGN.md §2.6).
 //! - **L2** (`python/compile/model.py`) — JAX forward/backward graphs for the
 //!   paper's workloads (MLP, CNN-MNIST, CNN-CIFAR, plus a transformer LM),
 //!   AOT-lowered to HLO text at build time.
@@ -41,4 +47,5 @@ pub mod engine;
 pub mod experiments;
 pub mod native;
 pub mod runtime;
+pub mod transport;
 pub mod util;

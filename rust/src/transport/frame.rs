@@ -1,0 +1,388 @@
+//! The length-prefixed, versioned binary frame codec.
+//!
+//! Every message that crosses a process boundary travels inside one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic   = b"HSGD"       (stream resync / protocol guard)
+//! 4       1     version = FRAME_VERSION (incompatible layouts bump this)
+//! 5       4     payload length, u32 LE  (≤ MAX_PAYLOAD)
+//! 9       len   payload                 (an encoded `super::msg::Msg`)
+//! 9+len   4     CRC32 (IEEE), u32 LE, over bytes [4, 9+len)
+//! ```
+//!
+//! The CRC covers version + length + payload — everything after the magic —
+//! so a bit flip anywhere in a frame is caught either structurally (magic /
+//! version / length bounds) or by the checksum. Decoding is strict: a
+//! truncated buffer, a wrong magic, an unsupported version, an absurd
+//! length and a checksum mismatch each produce a distinct typed
+//! [`FrameError`]; nothing panics on arbitrary input (fuzzed in
+//! `tests/property_transport.rs`).
+//!
+//! Encode and decode both work against caller-owned buffers so the steady
+//! state allocates nothing — the same recycling discipline as
+//! [`crate::coordinator::compress::GradEncoder`].
+
+use std::fmt;
+
+/// Frame magic: ASCII "HSGD".
+pub const MAGIC: [u8; 4] = *b"HSGD";
+
+/// Current frame-layout version. Decoders accept exactly this version;
+/// compatibility rules are documented in DESIGN.md §2.6.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Bytes of framing around a payload: magic (4) + version (1) + length (4)
+/// + CRC32 trailer (4).
+pub const FRAME_OVERHEAD: usize = HEADER_LEN + TRAILER_LEN;
+
+/// Frame header length (magic + version + payload length).
+pub const HEADER_LEN: usize = 9;
+
+/// Frame trailer length (CRC32).
+pub const TRAILER_LEN: usize = 4;
+
+/// Upper bound on a payload. Large enough for a 4 MB gradient frame with
+/// room to spare; small enough that a corrupt length field cannot make a
+/// reader attempt a multi-gigabyte allocation.
+pub const MAX_PAYLOAD: usize = 64 * 1024 * 1024;
+
+/// Everything that can be wrong with an incoming frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Fewer bytes than a complete frame; `need` is the total length the
+    /// header (or minimum header size) implies, `have` what arrived.
+    Truncated { need: usize, have: usize },
+    /// The first four bytes are not [`MAGIC`].
+    BadMagic { found: [u8; 4] },
+    /// The version byte is not [`FRAME_VERSION`].
+    Version { found: u8, supported: u8 },
+    /// The length field exceeds [`MAX_PAYLOAD`].
+    TooLarge { len: usize, max: usize },
+    /// The stored CRC32 does not match the computed one.
+    Corrupt { stored: u32, computed: u32 },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            FrameError::BadMagic { found } => write!(f, "bad frame magic {found:02x?}"),
+            FrameError::Version { found, supported } => {
+                write!(f, "frame version {found} (this build speaks {supported})")
+            }
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds the {max} B cap")
+            }
+            FrameError::Corrupt { stored, computed } => write!(
+                f,
+                "frame CRC mismatch: stored {stored:08x}, computed {computed:08x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// CRC32 (IEEE 802.3, reflected, polynomial 0xEDB88320) lookup table,
+/// built at compile time — hand-rolled, no crates.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 of a byte slice (init 0xFFFFFFFF, final xor 0xFFFFFFFF — the
+/// standard IEEE parameters, so `crc32(b"123456789") == 0xCBF43926`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append one complete frame around `payload` to `out` (which is *not*
+/// cleared — callers batch frames into one write buffer). Reuses `out`'s
+/// capacity; zero allocations once warm.
+///
+/// Panics if `payload` exceeds [`MAX_PAYLOAD`] — encoders control their
+/// payload sizes, so an oversized one is a programming error, not an I/O
+/// condition.
+pub fn encode_frame_into(payload: &[u8], out: &mut Vec<u8>) {
+    assert!(
+        payload.len() <= MAX_PAYLOAD,
+        "frame payload of {} bytes exceeds MAX_PAYLOAD",
+        payload.len()
+    );
+    let start = out.len();
+    out.extend_from_slice(&MAGIC);
+    out.push(FRAME_VERSION);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32(&out[start + 4..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Total bytes on the wire for a payload of `payload_len` bytes.
+pub fn frame_len(payload_len: usize) -> usize {
+    payload_len + FRAME_OVERHEAD
+}
+
+/// Decode the frame at the start of `buf`. Returns the payload slice and
+/// the total number of bytes the frame occupies. Every malformed input —
+/// including a buffer truncated at *any* byte offset — yields a typed
+/// [`FrameError`]; this function never panics and never returns a payload
+/// whose checksum did not verify.
+pub fn decode_frame(buf: &[u8]) -> Result<(&[u8], usize), FrameError> {
+    if buf.len() < HEADER_LEN {
+        // Not enough even for the header. Check what we do have so a wrong
+        // protocol is reported as BadMagic rather than an eternal
+        // "need more bytes".
+        if buf.len() >= 4 && buf[..4] != MAGIC {
+            let mut found = [0u8; 4];
+            found.copy_from_slice(&buf[..4]);
+            return Err(FrameError::BadMagic { found });
+        }
+        return Err(FrameError::Truncated {
+            need: HEADER_LEN,
+            have: buf.len(),
+        });
+    }
+    if buf[..4] != MAGIC {
+        let mut found = [0u8; 4];
+        found.copy_from_slice(&buf[..4]);
+        return Err(FrameError::BadMagic { found });
+    }
+    if buf[4] != FRAME_VERSION {
+        return Err(FrameError::Version {
+            found: buf[4],
+            supported: FRAME_VERSION,
+        });
+    }
+    let len = u32::from_le_bytes([buf[5], buf[6], buf[7], buf[8]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::TooLarge {
+            len,
+            max: MAX_PAYLOAD,
+        });
+    }
+    let total = frame_len(len);
+    if buf.len() < total {
+        return Err(FrameError::Truncated {
+            need: total,
+            have: buf.len(),
+        });
+    }
+    let stored = u32::from_le_bytes([
+        buf[total - 4],
+        buf[total - 3],
+        buf[total - 2],
+        buf[total - 1],
+    ]);
+    let computed = crc32(&buf[4..total - 4]);
+    if stored != computed {
+        return Err(FrameError::Corrupt { stored, computed });
+    }
+    Ok((&buf[HEADER_LEN..total - 4], total))
+}
+
+/// Incremental frame reader over a byte stream (the TCP receive path).
+///
+/// Owns an accumulation buffer; [`FrameReader::feed`] appends raw bytes,
+/// [`FrameReader::next_frame`] pops the next complete frame's payload into
+/// a caller buffer (reused across frames — no steady-state allocation).
+/// Structural errors are *not* recoverable: a stream that produced a bad
+/// magic or CRC is desynchronized and must be dropped (the TCP layer closes
+/// the connection), so the reader stays poisoned after the first error.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Bytes at the front of `buf` already consumed (compacted lazily).
+    consumed: usize,
+    /// First structural error seen; replayed on every later call.
+    poisoned: Option<FrameError>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Append raw bytes received from the stream.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // Compact before growing: keeps the buffer bounded by one frame
+        // plus one read's worth of bytes.
+        if self.consumed > 0 {
+            self.buf.drain(..self.consumed);
+            self.consumed = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered and not yet decoded.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.consumed
+    }
+
+    /// Pop the next complete frame, writing its payload into `payload`
+    /// (cleared and refilled). `Ok(true)` = one frame decoded; `Ok(false)`
+    /// = need more bytes; `Err` = the stream is corrupt (poisoned
+    /// thereafter).
+    pub fn next_frame(&mut self, payload: &mut Vec<u8>) -> Result<bool, FrameError> {
+        if let Some(e) = &self.poisoned {
+            return Err(e.clone());
+        }
+        match decode_frame(&self.buf[self.consumed..]) {
+            Ok((p, total)) => {
+                payload.clear();
+                payload.extend_from_slice(p);
+                self.consumed += total;
+                Ok(true)
+            }
+            Err(FrameError::Truncated { .. }) => Ok(false),
+            Err(e) => {
+                self.poisoned = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_and_exact_overhead() {
+        let payload = b"hello gradient".to_vec();
+        let mut out = Vec::new();
+        encode_frame_into(&payload, &mut out);
+        assert_eq!(out.len(), payload.len() + FRAME_OVERHEAD);
+        let (got, consumed) = decode_frame(&out).unwrap();
+        assert_eq!(got, &payload[..]);
+        assert_eq!(consumed, out.len());
+        // empty payloads are legal (Heartbeat/Shutdown are tiny)
+        let mut out2 = Vec::new();
+        encode_frame_into(&[], &mut out2);
+        let (got2, c2) = decode_frame(&out2).unwrap();
+        assert!(got2.is_empty());
+        assert_eq!(c2, FRAME_OVERHEAD);
+    }
+
+    #[test]
+    fn truncation_at_every_offset_is_typed() {
+        let mut out = Vec::new();
+        encode_frame_into(b"0123456789abcdef", &mut out);
+        for cut in 0..out.len() {
+            match decode_frame(&out[..cut]) {
+                Err(FrameError::Truncated { need, have }) => {
+                    assert_eq!(have, cut);
+                    assert!(need > cut);
+                }
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_magic_version_length_crc() {
+        let mut out = Vec::new();
+        encode_frame_into(b"payload", &mut out);
+        // magic
+        let mut bad = out.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadMagic { .. })));
+        // version
+        let mut bad = out.clone();
+        bad[4] = FRAME_VERSION + 1;
+        assert_eq!(
+            decode_frame(&bad),
+            Err(FrameError::Version {
+                found: FRAME_VERSION + 1,
+                supported: FRAME_VERSION
+            })
+        );
+        // absurd length
+        let mut bad = out.clone();
+        bad[5..9].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(decode_frame(&bad), Err(FrameError::TooLarge { .. })));
+        // payload flip → CRC catches it
+        let mut bad = out.clone();
+        bad[HEADER_LEN] ^= 0x01;
+        assert!(matches!(decode_frame(&bad), Err(FrameError::Corrupt { .. })));
+        // CRC flip → CRC catches it
+        let mut bad = out.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x80;
+        assert!(matches!(decode_frame(&bad), Err(FrameError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn reader_reassembles_split_frames() {
+        let mut wire = Vec::new();
+        encode_frame_into(b"first", &mut wire);
+        encode_frame_into(b"second", &mut wire);
+        let mut r = FrameReader::new();
+        let mut payload = Vec::new();
+        // drip-feed one byte at a time; exactly two frames must pop out
+        let mut seen = Vec::new();
+        for &b in &wire {
+            r.feed(&[b]);
+            while r.next_frame(&mut payload).unwrap() {
+                seen.push(payload.clone());
+            }
+        }
+        assert_eq!(seen, vec![b"first".to_vec(), b"second".to_vec()]);
+        assert_eq!(r.pending(), 0);
+    }
+
+    #[test]
+    fn reader_poisons_on_corrupt_stream() {
+        let mut wire = Vec::new();
+        encode_frame_into(b"data", &mut wire);
+        wire[HEADER_LEN] ^= 0xFF; // corrupt the payload
+        let mut r = FrameReader::new();
+        r.feed(&wire);
+        let mut payload = Vec::new();
+        assert!(r.next_frame(&mut payload).is_err());
+        // stays in the error state even if good bytes follow
+        let mut good = Vec::new();
+        encode_frame_into(b"ok", &mut good);
+        r.feed(&good);
+        assert!(r.next_frame(&mut payload).is_err());
+    }
+
+    #[test]
+    fn reader_rejects_foreign_protocol_early() {
+        let mut r = FrameReader::new();
+        r.feed(b"GET / HTTP/1.1\r\n");
+        let mut payload = Vec::new();
+        assert!(matches!(
+            r.next_frame(&mut payload),
+            Err(FrameError::BadMagic { .. })
+        ));
+    }
+}

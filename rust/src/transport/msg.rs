@@ -1,0 +1,842 @@
+//! The control-plane message set and its binary encoding.
+//!
+//! One [`Msg`] travels per frame ([`super::frame`]). All integers are
+//! little-endian; floats are IEEE-754 bit patterns (NaN-safe roundtrips).
+//! Gradient payloads are encoded **shard-local**: a remote worker sends each
+//! shard only its slice of the submission, so full-dimension formats (dense,
+//! int8) are cut down to the shard's range at encode time and decode into
+//! the shard-local [`ShardGrad::DenseLocal`] / [`ShardGrad::QuantLocal`]
+//! variants; sparse formats are pre-split per shard with local indices
+//! already (see `coordinator::compress`), exactly like the in-process
+//! protocol.
+//!
+//! Every malformed input decodes to a typed [`WireError`] — truncation at
+//! any offset, unknown tags, out-of-range sparse indices, bad UTF-8 —
+//! never a panic and never a silently wrong payload (fuzzed in
+//! `tests/property_transport.rs`).
+
+use crate::coordinator::compress::{QuantGrad, ShardGrad, SparseGrad, SparseQuantGrad};
+use std::fmt;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Message tags (frame payload byte 0).
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_SUBMIT: u8 = 3;
+const TAG_GRAD_ACK: u8 = 4;
+const TAG_SNAP_REQ: u8 = 5;
+const TAG_SNAP_SLICE: u8 = 6;
+const TAG_HEARTBEAT: u8 = 7;
+const TAG_SHUTDOWN: u8 = 8;
+
+/// Gradient payload tags (inside `SubmitGrad`).
+const GRAD_DENSE: u8 = 0;
+const GRAD_SPARSE: u8 = 1;
+const GRAD_QUANT: u8 = 2;
+const GRAD_SPARSE_QUANT: u8 = 3;
+
+/// `SubmitGrad` fixed header: tag (1) + shard (4) + seq (8) +
+/// base_version (8) + loss (4).
+pub const SUBMIT_HEADER_BYTES: usize = 25;
+
+/// Per-format gradient headers inside a `SubmitGrad` payload.
+pub const GRAD_DENSE_HEADER_BYTES: usize = 5; // tag + n
+pub const GRAD_SPARSE_HEADER_BYTES: usize = 9; // tag + dim + nnz
+pub const GRAD_QUANT_HEADER_BYTES: usize = 9; // tag + n + scale
+pub const GRAD_SPARSE_QUANT_HEADER_BYTES: usize = 13; // tag + dim + scale + nnz
+
+/// Worker id in a `Hello` requesting a fresh assignment.
+pub const WORKER_UNASSIGNED: u32 = u32::MAX;
+
+/// A control-plane message. `SubmitGrad` carries a **shard-local** payload
+/// (`DenseLocal` / `Sparse` / `QuantLocal` / `SparseQuant`).
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Client → server: join the run. `worker` is [`WORKER_UNASSIGNED`] for
+    /// a first attach or a previously assigned id on reconnect; `shards` is
+    /// the client's expected shard count (0 = unknown, server decides);
+    /// `wire` is the worker's gradient wire format (`WireFormat` syntax),
+    /// carried for telemetry/validation — decode is format-agnostic.
+    Hello { worker: u32, shards: u32, wire: String },
+    /// Server → client: attach accepted. Carries everything the worker
+    /// needs to mirror the in-process configuration: its assigned id, the
+    /// run's total worker count (data sharding), the PS shard count, the
+    /// flat parameter dimension and whether this worker is in the delayed
+    /// fraction (the paper's heterogeneity model assigns by id, so the
+    /// server owns the draw).
+    Welcome {
+        worker: u32,
+        workers: u32,
+        shards: u32,
+        dim: u64,
+        delayed: bool,
+    },
+    /// Client → server: one shard's slice of a gradient submission. `seq`
+    /// is the worker's submission counter (gap telemetry).
+    SubmitGrad {
+        shard: u32,
+        seq: u64,
+        base_version: u64,
+        loss: f32,
+        grad: ShardGrad,
+    },
+    /// Server → client: the O(1) version-token reply — the wire form of
+    /// `server::Reply` (`changed = false` ⇔ `Reply::Unchanged`).
+    GradAck {
+        shard: u32,
+        version: u64,
+        changed: bool,
+    },
+    /// Client → server: send me shard `shard`'s parameters if newer than
+    /// `version` (always answered; equal version returns the same slice).
+    SnapshotRequest { shard: u32, version: u64 },
+    /// Server → client: one shard's parameter slice at `version`.
+    SnapshotSlice {
+        shard: u32,
+        version: u64,
+        theta: Vec<f32>,
+    },
+    /// Either direction: liveness. A peer silent for longer than the
+    /// heartbeat timeout is considered half-open and dropped.
+    Heartbeat { seq: u64 },
+    /// Server → client: the run is over; drain and exit cleanly.
+    Shutdown,
+}
+
+/// Typed decode errors for the message layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The payload ended before the field being read.
+    Truncated { need: usize, have: usize },
+    /// Unknown message tag.
+    UnknownMsg(u8),
+    /// Unknown gradient-payload tag.
+    UnknownPayload(u8),
+    /// Structurally valid but semantically impossible (index out of range,
+    /// inconsistent lengths, bad UTF-8, trailing garbage).
+    Invalid(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated message: need {need} bytes, have {have}")
+            }
+            WireError::UnknownMsg(t) => write!(f, "unknown message tag {t}"),
+            WireError::UnknownPayload(t) => write!(f, "unknown gradient payload tag {t}"),
+            WireError::Invalid(why) => write!(f, "invalid message: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---- primitive writers ---------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_i8s(out: &mut Vec<u8>, vs: &[i8]) {
+    out.reserve(vs.len());
+    for &v in vs {
+        out.push(v as u8);
+    }
+}
+
+// ---- primitive reader ----------------------------------------------------
+
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let have = self.b.len() - self.off;
+        if have < n {
+            return Err(WireError::Truncated {
+                need: self.off + n,
+                have: self.b.len(),
+            });
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| {
+            WireError::Invalid(format!("count {n} overflows"))
+        })?)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>, WireError> {
+        let s = self.take(n.checked_mul(4).ok_or_else(|| {
+            WireError::Invalid(format!("count {n} overflows"))
+        })?)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn i8s(&mut self, n: usize) -> Result<Vec<i8>, WireError> {
+        let s = self.take(n)?;
+        Ok(s.iter().map(|&b| b as i8).collect())
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.off != self.b.len() {
+            return Err(WireError::Invalid(format!(
+                "{} trailing bytes after message",
+                self.b.len() - self.off
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---- gradient payload ----------------------------------------------------
+
+/// Append the shard-local encoding of one shard's portion of `grad` to
+/// `out`. `range` is the shard's slice of the flat θ; full-dimension
+/// payloads are cut to it, shard-local payloads (pre-split sparse, or
+/// payloads that already came off the wire) are written as-is.
+pub fn encode_grad_into(grad: &ShardGrad, range: Range<usize>, out: &mut Vec<u8>) {
+    match grad {
+        ShardGrad::Dense(g) => {
+            out.push(GRAD_DENSE);
+            let slice = &g[range];
+            put_u32(out, slice.len() as u32);
+            put_f32s(out, slice);
+        }
+        ShardGrad::DenseLocal(g) => {
+            out.push(GRAD_DENSE);
+            put_u32(out, g.len() as u32);
+            put_f32s(out, g);
+        }
+        ShardGrad::Sparse(s) => {
+            out.push(GRAD_SPARSE);
+            put_u32(out, s.dim as u32);
+            put_u32(out, s.idx.len() as u32);
+            put_u32s(out, &s.idx);
+            put_f32s(out, &s.val);
+        }
+        ShardGrad::Quant(q) => {
+            out.push(GRAD_QUANT);
+            let slice = &q.data[range];
+            put_u32(out, slice.len() as u32);
+            put_f32(out, q.scale);
+            put_i8s(out, slice);
+        }
+        ShardGrad::QuantLocal(q) => {
+            out.push(GRAD_QUANT);
+            put_u32(out, q.data.len() as u32);
+            put_f32(out, q.scale);
+            put_i8s(out, &q.data);
+        }
+        ShardGrad::SparseQuant(s) => {
+            out.push(GRAD_SPARSE_QUANT);
+            put_u32(out, s.dim as u32);
+            put_f32(out, s.scale);
+            put_u32(out, s.idx.len() as u32);
+            put_u32s(out, &s.idx);
+            put_i8s(out, &s.data);
+        }
+    }
+}
+
+/// Decode a shard-local gradient payload. Sparse indices are validated
+/// against the declared dimension so a corrupt-but-CRC-colliding payload
+/// can never scatter-add out of bounds.
+fn decode_grad(r: &mut Rd) -> Result<ShardGrad, WireError> {
+    match r.u8()? {
+        GRAD_DENSE => {
+            let n = r.u32()? as usize;
+            Ok(ShardGrad::DenseLocal(Arc::new(r.f32s(n)?)))
+        }
+        GRAD_SPARSE => {
+            let dim = r.u32()? as usize;
+            let nnz = r.u32()? as usize;
+            if nnz > dim {
+                return Err(WireError::Invalid(format!(
+                    "sparse nnz {nnz} exceeds shard dim {dim}"
+                )));
+            }
+            let idx = r.u32s(nnz)?;
+            let val = r.f32s(nnz)?;
+            if let Some(&bad) = idx.iter().find(|&&i| i as usize >= dim) {
+                return Err(WireError::Invalid(format!(
+                    "sparse index {bad} out of range for shard dim {dim}"
+                )));
+            }
+            Ok(ShardGrad::Sparse(Arc::new(SparseGrad { dim, idx, val })))
+        }
+        GRAD_QUANT => {
+            let n = r.u32()? as usize;
+            let scale = r.f32()?;
+            Ok(ShardGrad::QuantLocal(Arc::new(QuantGrad {
+                scale,
+                data: r.i8s(n)?,
+            })))
+        }
+        GRAD_SPARSE_QUANT => {
+            let dim = r.u32()? as usize;
+            let scale = r.f32()?;
+            let nnz = r.u32()? as usize;
+            if nnz > dim {
+                return Err(WireError::Invalid(format!(
+                    "sparse-quant nnz {nnz} exceeds shard dim {dim}"
+                )));
+            }
+            let idx = r.u32s(nnz)?;
+            let data = r.i8s(nnz)?;
+            if let Some(&bad) = idx.iter().find(|&&i| i as usize >= dim) {
+                return Err(WireError::Invalid(format!(
+                    "sparse-quant index {bad} out of range for shard dim {dim}"
+                )));
+            }
+            Ok(ShardGrad::SparseQuant(Arc::new(SparseQuantGrad {
+                dim,
+                idx,
+                scale,
+                data,
+            })))
+        }
+        t => Err(WireError::UnknownPayload(t)),
+    }
+}
+
+// ---- message encode / decode ---------------------------------------------
+
+/// Encode a `SubmitGrad` without constructing a [`Msg`] — the worker hot
+/// path. Clears and refills `out` (reused round-trip, no steady-state
+/// allocation). `range` is the destination shard's slice of the flat θ.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_submit_into(
+    shard: u32,
+    seq: u64,
+    base_version: u64,
+    loss: f32,
+    grad: &ShardGrad,
+    range: Range<usize>,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.push(TAG_SUBMIT);
+    put_u32(out, shard);
+    put_u64(out, seq);
+    put_u64(out, base_version);
+    put_f32(out, loss);
+    encode_grad_into(grad, range, out);
+}
+
+impl Msg {
+    /// Encode into `out` (cleared and refilled). For `SubmitGrad` the
+    /// payload must already be shard-local (as decoded payloads are); the
+    /// worker's encode path uses [`encode_submit_into`] to slice full-dim
+    /// payloads without an intermediate `Msg`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        match self {
+            Msg::Hello {
+                worker,
+                shards,
+                wire,
+            } => {
+                out.push(TAG_HELLO);
+                put_u32(out, *worker);
+                put_u32(out, *shards);
+                put_u32(out, wire.len() as u32);
+                out.extend_from_slice(wire.as_bytes());
+            }
+            Msg::Welcome {
+                worker,
+                workers,
+                shards,
+                dim,
+                delayed,
+            } => {
+                out.push(TAG_WELCOME);
+                put_u32(out, *worker);
+                put_u32(out, *workers);
+                put_u32(out, *shards);
+                put_u64(out, *dim);
+                out.push(u8::from(*delayed));
+            }
+            Msg::SubmitGrad {
+                shard,
+                seq,
+                base_version,
+                loss,
+                grad,
+            } => {
+                out.push(TAG_SUBMIT);
+                put_u32(out, *shard);
+                put_u64(out, *seq);
+                put_u64(out, *base_version);
+                put_f32(out, *loss);
+                // Payload is shard-local by contract: encode its full
+                // extent. The range end is not used for local variants.
+                let len = match grad {
+                    ShardGrad::Dense(g) => g.len(),
+                    ShardGrad::DenseLocal(g) => g.len(),
+                    ShardGrad::Quant(q) => q.data.len(),
+                    ShardGrad::QuantLocal(q) => q.data.len(),
+                    ShardGrad::Sparse(s) => s.dim,
+                    ShardGrad::SparseQuant(s) => s.dim,
+                };
+                encode_grad_into(grad, 0..len, out);
+            }
+            Msg::GradAck {
+                shard,
+                version,
+                changed,
+            } => {
+                out.push(TAG_GRAD_ACK);
+                put_u32(out, *shard);
+                put_u64(out, *version);
+                out.push(u8::from(*changed));
+            }
+            Msg::SnapshotRequest { shard, version } => {
+                out.push(TAG_SNAP_REQ);
+                put_u32(out, *shard);
+                put_u64(out, *version);
+            }
+            Msg::SnapshotSlice {
+                shard,
+                version,
+                theta,
+            } => {
+                out.push(TAG_SNAP_SLICE);
+                put_u32(out, *shard);
+                put_u64(out, *version);
+                put_u32(out, theta.len() as u32);
+                put_f32s(out, theta);
+            }
+            Msg::Heartbeat { seq } => {
+                out.push(TAG_HEARTBEAT);
+                put_u64(out, *seq);
+            }
+            Msg::Shutdown => out.push(TAG_SHUTDOWN),
+        }
+    }
+
+    /// Decode one message from a frame payload. Rejects trailing garbage
+    /// (a frame carries exactly one message).
+    pub fn decode(buf: &[u8]) -> Result<Msg, WireError> {
+        let mut r = Rd::new(buf);
+        let msg = match r.u8()? {
+            TAG_HELLO => {
+                let worker = r.u32()?;
+                let shards = r.u32()?;
+                let n = r.u32()? as usize;
+                let wire = std::str::from_utf8(r.take(n)?)
+                    .map_err(|_| WireError::Invalid("hello wire format is not UTF-8".into()))?
+                    .to_string();
+                Msg::Hello {
+                    worker,
+                    shards,
+                    wire,
+                }
+            }
+            TAG_WELCOME => Msg::Welcome {
+                worker: r.u32()?,
+                workers: r.u32()?,
+                shards: r.u32()?,
+                dim: r.u64()?,
+                delayed: r.u8()? != 0,
+            },
+            TAG_SUBMIT => Msg::SubmitGrad {
+                shard: r.u32()?,
+                seq: r.u64()?,
+                base_version: r.u64()?,
+                loss: r.f32()?,
+                grad: decode_grad(&mut r)?,
+            },
+            TAG_GRAD_ACK => Msg::GradAck {
+                shard: r.u32()?,
+                version: r.u64()?,
+                changed: r.u8()? != 0,
+            },
+            TAG_SNAP_REQ => Msg::SnapshotRequest {
+                shard: r.u32()?,
+                version: r.u64()?,
+            },
+            TAG_SNAP_SLICE => {
+                let shard = r.u32()?;
+                let version = r.u64()?;
+                let n = r.u32()? as usize;
+                Msg::SnapshotSlice {
+                    shard,
+                    version,
+                    theta: r.f32s(n)?,
+                }
+            }
+            TAG_HEARTBEAT => Msg::Heartbeat { seq: r.u64()? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            t => return Err(WireError::UnknownMsg(t)),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        msg.encode_into(&mut buf);
+        Msg::decode(&buf).expect("roundtrip decode")
+    }
+
+    #[test]
+    fn control_messages_roundtrip_exhaustively() {
+        // Hello
+        let m = roundtrip(&Msg::Hello {
+            worker: WORKER_UNASSIGNED,
+            shards: 4,
+            wire: "topk:0.01".into(),
+        });
+        match m {
+            Msg::Hello {
+                worker,
+                shards,
+                wire,
+            } => {
+                assert_eq!(worker, WORKER_UNASSIGNED);
+                assert_eq!(shards, 4);
+                assert_eq!(wire, "topk:0.01");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Welcome
+        let m = roundtrip(&Msg::Welcome {
+            worker: 3,
+            workers: 8,
+            shards: 2,
+            dim: 111_936,
+            delayed: true,
+        });
+        match m {
+            Msg::Welcome {
+                worker,
+                workers,
+                shards,
+                dim,
+                delayed,
+            } => {
+                assert_eq!((worker, workers, shards, dim, delayed), (3, 8, 2, 111_936, true));
+            }
+            other => panic!("{other:?}"),
+        }
+        // GradAck
+        let m = roundtrip(&Msg::GradAck {
+            shard: 1,
+            version: 42,
+            changed: false,
+        });
+        match m {
+            Msg::GradAck {
+                shard,
+                version,
+                changed,
+            } => assert_eq!((shard, version, changed), (1, 42, false)),
+            other => panic!("{other:?}"),
+        }
+        // SnapshotRequest
+        let m = roundtrip(&Msg::SnapshotRequest {
+            shard: 7,
+            version: u64::MAX,
+        });
+        match m {
+            Msg::SnapshotRequest { shard, version } => {
+                assert_eq!((shard, version), (7, u64::MAX))
+            }
+            other => panic!("{other:?}"),
+        }
+        // SnapshotSlice (with a NaN: bit-exact float transport)
+        let theta = vec![1.5f32, -0.0, f32::NAN, f32::MIN_POSITIVE];
+        let m = roundtrip(&Msg::SnapshotSlice {
+            shard: 0,
+            version: 9,
+            theta: theta.clone(),
+        });
+        match m {
+            Msg::SnapshotSlice {
+                shard,
+                version,
+                theta: got,
+            } => {
+                assert_eq!((shard, version), (0, 9));
+                assert_eq!(got.len(), theta.len());
+                for (a, b) in got.iter().zip(&theta) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // Heartbeat + Shutdown
+        assert!(matches!(
+            roundtrip(&Msg::Heartbeat { seq: 12345 }),
+            Msg::Heartbeat { seq: 12345 }
+        ));
+        assert!(matches!(roundtrip(&Msg::Shutdown), Msg::Shutdown));
+    }
+
+    #[test]
+    fn submit_roundtrips_every_payload_kind() {
+        let dense = ShardGrad::Dense(Arc::new(vec![1.0f32, -2.0, 3.0, 0.5]));
+        let sparse = ShardGrad::Sparse(Arc::new(SparseGrad {
+            dim: 4,
+            idx: vec![0, 3],
+            val: vec![0.25, -0.75],
+        }));
+        let quant = ShardGrad::Quant(Arc::new(QuantGrad {
+            scale: 0.5,
+            data: vec![1, -1, 127, -127],
+        }));
+        let sq = ShardGrad::SparseQuant(Arc::new(SparseQuantGrad {
+            dim: 4,
+            idx: vec![1, 2],
+            scale: 0.25,
+            data: vec![-4, 8],
+        }));
+        for (grad, range) in [
+            (dense, 1..3usize), // full-dim payload: only the slice travels
+            (sparse, 0..4),
+            (quant, 1..3),
+            (sq, 0..4),
+        ] {
+            let mut buf = Vec::new();
+            encode_submit_into(2, 77, 5, 0.125, &grad, range.clone(), &mut buf);
+            let msg = Msg::decode(&buf).unwrap();
+            let Msg::SubmitGrad {
+                shard,
+                seq,
+                base_version,
+                loss,
+                grad: got,
+            } = msg
+            else {
+                panic!("expected SubmitGrad");
+            };
+            assert_eq!((shard, seq, base_version), (2, 77, 5));
+            assert_eq!(loss, 0.125);
+            // The decoded (shard-local) payload views identically to the
+            // original sliced to the shard's range.
+            let shard_len = range.len();
+            let mut want = vec![0.0f32; shard_len];
+            grad.view(range).add_to(&mut want);
+            let mut have = vec![0.0f32; shard_len];
+            got.view(0..shard_len).add_to(&mut have);
+            for (a, b) in want.iter().zip(&have) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{grad:?}");
+            }
+            // byte accounting survives the trip
+            assert_eq!(grad.wire_bytes(shard_len), got.wire_bytes(shard_len));
+            // re-encoding the decoded (local) payload is byte-identical
+            let mut again = Vec::new();
+            encode_submit_into(2, 77, 5, 0.125, &got, 0..shard_len, &mut again);
+            assert_eq!(buf, again);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_unknown_tags_and_garbage() {
+        assert!(matches!(
+            Msg::decode(&[99]),
+            Err(WireError::UnknownMsg(99))
+        ));
+        // unknown gradient payload tag inside a submit
+        let mut buf = Vec::new();
+        encode_submit_into(
+            0,
+            0,
+            0,
+            0.0,
+            &ShardGrad::DenseLocal(Arc::new(vec![1.0])),
+            0..1,
+            &mut buf,
+        );
+        buf[SUBMIT_HEADER_BYTES] = 200;
+        assert!(matches!(
+            Msg::decode(&buf),
+            Err(WireError::UnknownPayload(200))
+        ));
+        // trailing garbage after a well-formed message
+        let mut hb = Vec::new();
+        Msg::Heartbeat { seq: 1 }.encode_into(&mut hb);
+        hb.push(0);
+        assert!(matches!(Msg::decode(&hb), Err(WireError::Invalid(_))));
+        // empty payload
+        assert!(matches!(
+            Msg::decode(&[]),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn sparse_indices_are_range_checked() {
+        let mut buf = Vec::new();
+        encode_submit_into(
+            0,
+            1,
+            0,
+            0.0,
+            &ShardGrad::Sparse(Arc::new(SparseGrad {
+                dim: 4,
+                idx: vec![3],
+                val: vec![1.0],
+            })),
+            0..4,
+            &mut buf,
+        );
+        // Patch the index to 4 (== dim, out of range). Layout after the
+        // submit + sparse headers: idx array first.
+        let idx_off = SUBMIT_HEADER_BYTES + GRAD_SPARSE_HEADER_BYTES;
+        buf[idx_off..idx_off + 4].copy_from_slice(&4u32.to_le_bytes());
+        match Msg::decode(&buf) {
+            Err(WireError::Invalid(why)) => assert!(why.contains("out of range"), "{why}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        // nnz > dim is rejected before reading the arrays
+        let mut buf2 = Vec::new();
+        encode_submit_into(
+            0,
+            1,
+            0,
+            0.0,
+            &ShardGrad::Sparse(Arc::new(SparseGrad {
+                dim: 2,
+                idx: vec![0, 1],
+                val: vec![1.0, 2.0],
+            })),
+            0..2,
+            &mut buf2,
+        );
+        let nnz_off = SUBMIT_HEADER_BYTES + 5; // tag + dim
+        buf2[nnz_off..nnz_off + 4].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(Msg::decode(&buf2), Err(WireError::Invalid(_))));
+    }
+
+    #[test]
+    fn header_byte_constants_match_the_encoder() {
+        let mut buf = Vec::new();
+        encode_submit_into(
+            0,
+            0,
+            0,
+            0.0,
+            &ShardGrad::DenseLocal(Arc::new(vec![0.0; 10])),
+            0..10,
+            &mut buf,
+        );
+        assert_eq!(buf.len(), SUBMIT_HEADER_BYTES + GRAD_DENSE_HEADER_BYTES + 40);
+        let mut buf = Vec::new();
+        encode_submit_into(
+            0,
+            0,
+            0,
+            0.0,
+            &ShardGrad::Sparse(Arc::new(SparseGrad {
+                dim: 10,
+                idx: vec![1, 2, 3],
+                val: vec![0.0; 3],
+            })),
+            0..10,
+            &mut buf,
+        );
+        assert_eq!(
+            buf.len(),
+            SUBMIT_HEADER_BYTES + GRAD_SPARSE_HEADER_BYTES + 3 * 8
+        );
+        let mut buf = Vec::new();
+        encode_submit_into(
+            0,
+            0,
+            0,
+            0.0,
+            &ShardGrad::QuantLocal(Arc::new(QuantGrad {
+                scale: 1.0,
+                data: vec![0; 10],
+            })),
+            0..10,
+            &mut buf,
+        );
+        assert_eq!(buf.len(), SUBMIT_HEADER_BYTES + GRAD_QUANT_HEADER_BYTES + 10);
+        let mut buf = Vec::new();
+        encode_submit_into(
+            0,
+            0,
+            0,
+            0.0,
+            &ShardGrad::SparseQuant(Arc::new(SparseQuantGrad {
+                dim: 10,
+                idx: vec![1, 2],
+                scale: 1.0,
+                data: vec![0, 0],
+            })),
+            0..10,
+            &mut buf,
+        );
+        assert_eq!(
+            buf.len(),
+            SUBMIT_HEADER_BYTES + GRAD_SPARSE_QUANT_HEADER_BYTES + 2 * 5
+        );
+    }
+}

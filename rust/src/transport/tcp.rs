@@ -1,0 +1,1511 @@
+//! TCP transport over `std::net`: blocking reader/writer threads per
+//! connection, reconnect-with-backoff, and half-open detection via
+//! heartbeat timeout.
+//!
+//! Client side ([`TcpTransport`]): one socket to the server. The worker
+//! thread writes submission frames directly (serialized with the heartbeat
+//! ticker by a write mutex); a reader thread decodes incoming frames and
+//! routes `GradAck`s and `SnapshotSlice`s onto internal channels the
+//! [`super::Transport`] methods consume. If the socket dies — an I/O error,
+//! a peer close, or silence past the heartbeat timeout (the half-open case:
+//! TCP happily buffers into a black hole for minutes) — the transport
+//! redials with exponential backoff, re-attaches under its assigned worker
+//! id, and surfaces [`super::TransportError::Reconnected`] so the worker
+//! loop abandons the lost round and refreshes.
+//!
+//! Server side ([`TcpFrontend`]): a non-blocking acceptor plus three
+//! threads per connection (frame reader, frame writer, reply pump) that
+//! bridge a remote worker onto the *same* `run_shard` channels the
+//! in-process stack uses — the shard servers cannot tell local and remote
+//! workers apart. Worker slots are fixed at `serve` time (the aggregation
+//! policies need the worker count); a reconnecting worker re-attaches to
+//! its slot once the dead connection's reply pump has returned the slot's
+//! reply channel.
+//!
+//! Byte accounting: both ends count **submission frames at frame
+//! granularity** (frame header + message + CRC). Control traffic
+//! (hello/welcome, heartbeats, snapshot requests/slices) is excluded by
+//! design so equal-bandwidth comparisons stay deterministic and comparable
+//! with the in-process counters — see DESIGN.md §2.6 for the exact
+//! per-submission overhead formula.
+
+use super::frame::{encode_frame_into, FrameReader, FRAME_OVERHEAD};
+use super::msg::{encode_submit_into, Msg, WORKER_UNASSIGNED};
+use super::{Transport, TransportError};
+use crate::coordinator::compress::ShardGrad;
+use crate::coordinator::params::SnapshotCell;
+use crate::coordinator::server::{Reply, ShardMsg};
+use crate::coordinator::shard::ShardLayout;
+use crate::log_warn;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Socket-poll granularity: blocking reads wake this often to check stop /
+/// liveness flags, so shutdown latency is bounded by it.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Network tuning knobs shared by client and server.
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// How often an idle peer emits a `Heartbeat`.
+    pub hb_interval: Duration,
+    /// Silence longer than this marks the connection half-open and dead.
+    /// Must be comfortably larger than `hb_interval`.
+    pub hb_timeout: Duration,
+    /// Total dial budget (including exponential backoff) per connect or
+    /// reconnect attempt sequence.
+    pub connect_timeout: Duration,
+    /// How many full redial sequences a lost connection is granted before
+    /// the transport reports itself closed.
+    pub reconnect_attempts: u32,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            hb_interval: Duration::from_millis(500),
+            hb_timeout: Duration::from_secs(5),
+            connect_timeout: Duration::from_secs(10),
+            reconnect_attempts: 2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared plumbing
+// ---------------------------------------------------------------------------
+
+/// Liveness state shared by one connection's threads.
+struct ConnState {
+    dead: AtomicBool,
+    /// The peer sent a clean `Shutdown` (reconnecting is pointless).
+    shutdown: AtomicBool,
+    /// Milliseconds since `epoch` of the last received byte.
+    last_rx_ms: AtomicU64,
+    epoch: Instant,
+    /// All bytes received on this connection, frame granularity.
+    bytes_received: AtomicU64,
+}
+
+impl ConnState {
+    fn new() -> Arc<ConnState> {
+        Arc::new(ConnState {
+            dead: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            last_rx_ms: AtomicU64::new(0),
+            epoch: Instant::now(),
+            bytes_received: AtomicU64::new(0),
+        })
+    }
+
+    fn mark_rx(&self) {
+        self.last_rx_ms
+            .store(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+    }
+
+    fn silent_for(&self) -> Duration {
+        let now = self.epoch.elapsed().as_millis() as u64;
+        Duration::from_millis(now.saturating_sub(self.last_rx_ms.load(Ordering::Relaxed)))
+    }
+}
+
+/// Write one frame carrying `msg` to `stream` under the write lock,
+/// reusing the caller's scratch buffers.
+fn write_msg(
+    stream: &Mutex<TcpStream>,
+    msg: &Msg,
+    msg_buf: &mut Vec<u8>,
+    frame_buf: &mut Vec<u8>,
+) -> std::io::Result<usize> {
+    msg.encode_into(msg_buf);
+    frame_buf.clear();
+    encode_frame_into(msg_buf, frame_buf);
+    let mut s = stream.lock().unwrap();
+    s.write_all(frame_buf)?;
+    Ok(frame_buf.len())
+}
+
+/// Read frames until one complete message arrives or `deadline` passes
+/// (handshake path — the steady state uses a dedicated reader thread).
+fn read_msg_blocking(
+    stream: &mut TcpStream,
+    reader: &mut FrameReader,
+    payload: &mut Vec<u8>,
+    deadline: Instant,
+) -> anyhow::Result<Msg> {
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        if reader.next_frame(payload)? {
+            return Ok(Msg::decode(payload)?);
+        }
+        if Instant::now() >= deadline {
+            anyhow::bail!("timed out waiting for a handshake message");
+        }
+        stream.set_read_timeout(Some(POLL))?;
+        match stream.read(&mut chunk) {
+            Ok(0) => anyhow::bail!("peer closed during handshake"),
+            Ok(n) => reader.feed(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Dial with exponential backoff until `budget` elapses.
+fn dial_with_backoff(addr: &str, budget: Duration) -> anyhow::Result<TcpStream> {
+    let deadline = Instant::now() + budget;
+    let mut backoff = Duration::from_millis(50);
+    let mut last_err: Option<std::io::Error> = None;
+    loop {
+        // Re-resolve each attempt (the server may come up after us).
+        match addr.to_socket_addrs() {
+            Ok(mut addrs) => {
+                if let Some(sa) = addrs.next() {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    match TcpStream::connect_timeout(&sa, remaining.min(Duration::from_secs(2))) {
+                        Ok(s) => return Ok(s),
+                        Err(e) => last_err = Some(e),
+                    }
+                } else {
+                    anyhow::bail!("address `{addr}` resolved to nothing");
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+        if Instant::now() + backoff >= deadline {
+            break;
+        }
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_secs(2));
+    }
+    match last_err {
+        Some(e) => Err(anyhow::anyhow!("could not connect to {addr}: {e}")),
+        None => Err(anyhow::anyhow!("could not connect to {addr}: dial budget elapsed")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// One established client connection.
+struct ClientConn {
+    write: Arc<Mutex<TcpStream>>,
+    acks_rx: Receiver<Reply>,
+    snaps_rx: Receiver<(usize, u64, Vec<f32>)>,
+    state: Arc<ConnState>,
+    reader: Option<JoinHandle<()>>,
+    hb: Option<JoinHandle<()>>,
+}
+
+impl Drop for ClientConn {
+    fn drop(&mut self) {
+        self.state.dead.store(true, Ordering::Relaxed);
+        // Unblock the reader promptly; ignore errors on an already-dead
+        // socket.
+        let _ = self.write.lock().unwrap().shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.hb.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What the server told us at attach time.
+#[derive(Clone, Copy, Debug)]
+pub struct AttachInfo {
+    pub worker: usize,
+    /// Total worker slots of the run (data-sharding denominator).
+    pub workers: usize,
+    pub shards: usize,
+    pub dim: usize,
+    /// Whether this worker is in the delayed fraction (server-side draw,
+    /// same derivation as the in-process trainer).
+    pub delayed: bool,
+}
+
+/// The TCP implementation of [`Transport`]. See the module docs.
+pub struct TcpTransport {
+    addr: String,
+    net: NetOptions,
+    wire_desc: String,
+    info: AttachInfo,
+    layout: ShardLayout,
+    conn: ClientConn,
+    seq: u64,
+    msg_buf: Vec<u8>,
+    frame_buf: Vec<u8>,
+    /// Submission-frame bytes written, cumulative across reconnects.
+    submit_bytes: u64,
+    /// Received bytes of connections already torn down.
+    recv_bytes_prev: u64,
+}
+
+impl TcpTransport {
+    /// Dial `addr` (with backoff), attach as a new worker and learn the
+    /// run's geometry from the server's `Welcome`. `wire_desc` is the
+    /// worker's `WireFormat` in display syntax (telemetry/validation).
+    pub fn connect(addr: &str, wire_desc: &str, net: NetOptions) -> anyhow::Result<TcpTransport> {
+        let (conn, info) = Self::establish(addr, &net, WORKER_UNASSIGNED, wire_desc)?;
+        let layout = ShardLayout::new(info.dim, info.shards);
+        anyhow::ensure!(
+            layout.shards() == info.shards,
+            "server advertised {} shards for dim {} (impossible layout)",
+            info.shards,
+            info.dim
+        );
+        Ok(TcpTransport {
+            addr: addr.to_string(),
+            net,
+            wire_desc: wire_desc.to_string(),
+            info,
+            layout,
+            conn,
+            seq: 0,
+            msg_buf: Vec::new(),
+            frame_buf: Vec::new(),
+            submit_bytes: 0,
+            recv_bytes_prev: 0,
+        })
+    }
+
+    /// Attach metadata from the server's `Welcome`.
+    pub fn attach_info(&self) -> AttachInfo {
+        self.info
+    }
+
+    fn establish(
+        addr: &str,
+        net: &NetOptions,
+        worker: u32,
+        wire_desc: &str,
+    ) -> anyhow::Result<(ClientConn, AttachInfo)> {
+        let mut stream = dial_with_backoff(addr, net.connect_timeout)?;
+        stream.set_nodelay(true).ok();
+        let mut reader = FrameReader::new();
+        let mut payload = Vec::new();
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        // Hello → Welcome, inline (no threads yet).
+        {
+            let hello = Msg::Hello {
+                worker,
+                shards: 0,
+                wire: wire_desc.to_string(),
+            };
+            hello.encode_into(&mut msg_buf);
+            frame_buf.clear();
+            encode_frame_into(&msg_buf, &mut frame_buf);
+            stream.write_all(&frame_buf)?;
+        }
+        let deadline = Instant::now() + net.hb_timeout;
+        // Read until the Welcome. Stray data-plane messages (acks or
+        // snapshot slices queued for our slot before a reconnect) belong
+        // to the round the old connection lost — skip them.
+        let info = loop {
+            let msg = read_msg_blocking(&mut stream, &mut reader, &mut payload, deadline)?;
+            match msg {
+                Msg::Welcome {
+                    worker,
+                    workers,
+                    shards,
+                    dim,
+                    delayed,
+                } => {
+                    break AttachInfo {
+                        worker: worker as usize,
+                        workers: workers as usize,
+                        shards: shards as usize,
+                        dim: dim as usize,
+                        delayed,
+                    }
+                }
+                Msg::Shutdown => anyhow::bail!(
+                    "server refused the attach (no free worker slot, or the run is over)"
+                ),
+                Msg::GradAck { .. } | Msg::SnapshotSlice { .. } | Msg::Heartbeat { .. } => {}
+                other => anyhow::bail!("expected Welcome, got {other:?}"),
+            }
+        };
+        let state = ConnState::new();
+        state.mark_rx();
+        let (acks_tx, acks_rx) = mpsc::channel();
+        let (snaps_tx, snaps_rx) = mpsc::channel();
+        let read_stream = stream.try_clone()?;
+        let write = Arc::new(Mutex::new(stream));
+        let reader_handle = {
+            let state = Arc::clone(&state);
+            let hb_timeout = net.hb_timeout;
+            std::thread::spawn(move || {
+                client_read_loop(read_stream, reader, state, acks_tx, snaps_tx, hb_timeout)
+            })
+        };
+        let hb_handle = {
+            let state = Arc::clone(&state);
+            let write = Arc::clone(&write);
+            let interval = net.hb_interval;
+            std::thread::spawn(move || heartbeat_loop(write, state, interval))
+        };
+        Ok((
+            ClientConn {
+                write,
+                acks_rx,
+                snaps_rx,
+                state,
+                reader: Some(reader_handle),
+                hb: Some(hb_handle),
+            },
+            info,
+        ))
+    }
+
+    fn dead(&self) -> bool {
+        self.conn.state.dead.load(Ordering::Relaxed)
+    }
+
+    /// The connection is gone: redial and re-attach under our assigned id.
+    /// `Ok(())` means a fresh connection is up (the caller still reports
+    /// `Reconnected` so the worker loop resynchronizes).
+    ///
+    /// A refused Hello usually means the server has not yet reaped our
+    /// previous connection's slot — after a half-open drop that takes the
+    /// server up to its own heartbeat timeout to notice. So the retry
+    /// budget is both a minimum attempt count (`reconnect_attempts`) *and*
+    /// a minimum time window spanning that reap latency; giving up any
+    /// earlier would turn every silent drop into a dead worker.
+    fn reconnect(&mut self) -> Result<(), TransportError> {
+        if self.conn.state.shutdown.load(Ordering::Relaxed) {
+            return Err(TransportError::Closed("server sent Shutdown".into()));
+        }
+        let start = Instant::now();
+        let min_window = self.net.hb_timeout + self.net.hb_interval * 2;
+        let mut last = String::from("no attempt made");
+        let mut attempt = 0u32;
+        loop {
+            match Self::establish(
+                &self.addr,
+                &self.net,
+                self.info.worker as u32,
+                &self.wire_desc,
+            ) {
+                Ok((conn, info)) => {
+                    if info.worker != self.info.worker
+                        || info.shards != self.info.shards
+                        || info.dim != self.info.dim
+                    {
+                        return Err(TransportError::Closed(format!(
+                            "server geometry changed across reconnect: {:?} vs {:?}",
+                            info, self.info
+                        )));
+                    }
+                    self.recv_bytes_prev +=
+                        self.conn.state.bytes_received.load(Ordering::Relaxed);
+                    self.conn = conn; // old conn Drop joins its threads
+                    log_warn!(
+                        "transport",
+                        "worker {} reconnected to {} (attempt {})",
+                        self.info.worker,
+                        self.addr,
+                        attempt + 1
+                    );
+                    return Ok(());
+                }
+                Err(e) => last = format!("{e:#}"),
+            }
+            attempt += 1;
+            if attempt >= self.net.reconnect_attempts.max(1) && start.elapsed() >= min_window {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50 * u64::from(attempt.min(8))));
+        }
+        Err(TransportError::Closed(format!(
+            "reconnect to {} failed after {attempt} attempts over {:.1}s: {last}",
+            self.addr,
+            start.elapsed().as_secs_f64()
+        )))
+    }
+
+    /// Reconnect and translate into the caller-visible error.
+    fn handle_loss(&mut self) -> TransportError {
+        match self.reconnect() {
+            Ok(()) => TransportError::Reconnected,
+            Err(e) => e,
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    fn submit(&mut self, shard: usize, msg: ShardMsg) -> Result<(), TransportError> {
+        if self.dead() {
+            return Err(self.handle_loss());
+        }
+        let range = self.layout.range(shard);
+        encode_submit_into(
+            shard as u32,
+            self.seq,
+            msg.base_version,
+            msg.loss,
+            &msg.grad,
+            range,
+            &mut self.msg_buf,
+        );
+        self.seq += 1;
+        self.frame_buf.clear();
+        encode_frame_into(&self.msg_buf, &mut self.frame_buf);
+        let res = {
+            let mut s = self.conn.write.lock().unwrap();
+            s.write_all(&self.frame_buf)
+        };
+        match res {
+            Ok(()) => {
+                self.submit_bytes += self.frame_buf.len() as u64;
+                Ok(())
+            }
+            Err(_) => {
+                self.conn.state.dead.store(true, Ordering::Relaxed);
+                Err(self.handle_loss())
+            }
+        }
+    }
+
+    fn recv_reply(&mut self, timeout: Duration) -> Result<Reply, TransportError> {
+        if self.dead() {
+            return Err(self.handle_loss());
+        }
+        match self.conn.acks_rx.recv_timeout(timeout) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => {
+                if self.dead() {
+                    Err(self.handle_loss())
+                } else {
+                    Err(TransportError::Timeout)
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(self.handle_loss()),
+        }
+    }
+
+    fn refresh(&mut self, shard: usize, out: &mut [f32]) -> Result<u64, TransportError> {
+        if self.dead() {
+            return Err(self.handle_loss());
+        }
+        // Drop slices from an abandoned request (e.g. pre-reconnect).
+        while self.conn.snaps_rx.try_recv().is_ok() {}
+        let req = Msg::SnapshotRequest {
+            shard: shard as u32,
+            version: 0,
+        };
+        if write_msg(
+            &self.conn.write,
+            &req,
+            &mut self.msg_buf,
+            &mut self.frame_buf,
+        )
+        .is_err()
+        {
+            self.conn.state.dead.store(true, Ordering::Relaxed);
+            return Err(self.handle_loss());
+        }
+        let deadline = Instant::now() + self.net.hb_timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(TransportError::Timeout);
+            }
+            match self.conn.snaps_rx.recv_timeout(remaining.min(POLL.max(Duration::from_millis(50)))) {
+                Ok((s, version, theta)) => {
+                    if s != shard {
+                        continue; // stale slice from a drained request
+                    }
+                    if theta.len() != out.len() {
+                        return Err(TransportError::Closed(format!(
+                            "snapshot slice for shard {s} has {} params, expected {}",
+                            theta.len(),
+                            out.len()
+                        )));
+                    }
+                    out.copy_from_slice(&theta);
+                    return Ok(version);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.dead() {
+                        return Err(self.handle_loss());
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(self.handle_loss()),
+            }
+        }
+    }
+
+    fn wire_counters(&self) -> Option<(u64, u64)> {
+        let received =
+            self.recv_bytes_prev + self.conn.state.bytes_received.load(Ordering::Relaxed);
+        Some((self.submit_bytes, received))
+    }
+}
+
+/// Client reader thread: decode frames, route replies and snapshots, track
+/// liveness. Exits (marking the connection dead) on socket close, I/O
+/// error, a corrupt stream, `Shutdown`, or heartbeat silence.
+fn client_read_loop(
+    mut stream: TcpStream,
+    mut reader: FrameReader,
+    state: Arc<ConnState>,
+    acks_tx: Sender<Reply>,
+    snaps_tx: Sender<(usize, u64, Vec<f32>)>,
+    hb_timeout: Duration,
+) {
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut chunk = [0u8; 64 * 1024];
+    let mut payload = Vec::new();
+    'outer: loop {
+        if state.dead.load(Ordering::Relaxed) {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                state.mark_rx();
+                state.bytes_received.fetch_add(n as u64, Ordering::Relaxed);
+                reader.feed(&chunk[..n]);
+                loop {
+                    match reader.next_frame(&mut payload) {
+                        Ok(true) => match Msg::decode(&payload) {
+                            Ok(Msg::GradAck {
+                                shard,
+                                version,
+                                changed,
+                            }) => {
+                                let reply = if changed {
+                                    Reply::Updated {
+                                        shard: shard as usize,
+                                        version,
+                                    }
+                                } else {
+                                    Reply::Unchanged {
+                                        shard: shard as usize,
+                                    }
+                                };
+                                if acks_tx.send(reply).is_err() {
+                                    break 'outer;
+                                }
+                            }
+                            Ok(Msg::SnapshotSlice {
+                                shard,
+                                version,
+                                theta,
+                            }) => {
+                                if snaps_tx.send((shard as usize, version, theta)).is_err() {
+                                    break 'outer;
+                                }
+                            }
+                            Ok(Msg::Heartbeat { .. }) => {}
+                            Ok(Msg::Shutdown) => {
+                                state.shutdown.store(true, Ordering::Relaxed);
+                                break 'outer;
+                            }
+                            Ok(_) => {} // unexpected control message: ignore
+                            Err(e) => {
+                                log_warn!("transport", "client dropping corrupt stream: {e}");
+                                break 'outer;
+                            }
+                        },
+                        Ok(false) => break,
+                        Err(e) => {
+                            log_warn!("transport", "client dropping corrupt stream: {e}");
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.silent_for() > hb_timeout {
+                    log_warn!("transport", "peer silent past the heartbeat timeout (half-open)");
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    state.dead.store(true, Ordering::Relaxed);
+}
+
+/// Heartbeat ticker: one `Heartbeat` frame per interval until the
+/// connection dies. Sleeps in short slices so teardown never waits a full
+/// interval.
+fn heartbeat_loop(write: Arc<Mutex<TcpStream>>, state: Arc<ConnState>, interval: Duration) {
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    let mut seq = 0u64;
+    let mut since = Duration::ZERO;
+    loop {
+        std::thread::sleep(POLL.min(interval));
+        if state.dead.load(Ordering::Relaxed) {
+            break;
+        }
+        since += POLL.min(interval);
+        if since < interval {
+            continue;
+        }
+        since = Duration::ZERO;
+        seq += 1;
+        if write_msg(&write, &Msg::Heartbeat { seq }, &mut msg_buf, &mut frame_buf).is_err() {
+            state.dead.store(true, Ordering::Relaxed);
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
+/// One worker slot on the serving side.
+struct Slot {
+    attached: bool,
+    /// Present while no connection owns the slot; the reply pump takes it
+    /// and hands it back on disconnect (reconnect support).
+    reply_rx: Option<Receiver<Reply>>,
+}
+
+/// Shared state of the serving frontend.
+struct Shared {
+    layout: ShardLayout,
+    grad_txs: Vec<Sender<ShardMsg>>,
+    cells: Vec<Arc<SnapshotCell>>,
+    slots: Mutex<Vec<Slot>>,
+    delayed: Vec<bool>,
+    stop: Arc<AtomicBool>,
+    net: NetOptions,
+    /// Submission frames received, frame-granularity bytes.
+    grad_frame_bytes: AtomicU64,
+    /// Distinct submissions seen (shard-0 submit frames).
+    submissions: AtomicU64,
+    active_conns: AtomicUsize,
+    ever_joined: AtomicUsize,
+    conn_handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Gradient-plane counters of a [`TcpFrontend`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrontendStats {
+    /// Bytes of submission frames received (headers + payload + CRC).
+    pub grad_frame_bytes: u64,
+    /// Submissions received (one per worker iteration, not per shard).
+    pub submissions: u64,
+}
+
+/// The server-side TCP acceptor + per-connection bridging threads.
+pub struct TcpFrontend {
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl TcpFrontend {
+    /// Start accepting workers. `reply_rxs[i]` is worker slot `i`'s reply
+    /// channel (its senders already cloned into the shard threads);
+    /// `delayed[i]` the slot's heterogeneity flag. The frontend owns
+    /// clones of the gradient senders; [`TcpFrontend::shutdown`] drops
+    /// them so the shard servers see disconnection exactly as when
+    /// in-process workers finish.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        listener: TcpListener,
+        layout: ShardLayout,
+        grad_txs: Vec<Sender<ShardMsg>>,
+        cells: Vec<Arc<SnapshotCell>>,
+        reply_rxs: Vec<Receiver<Reply>>,
+        delayed: Vec<bool>,
+        stop: Arc<AtomicBool>,
+        net: NetOptions,
+    ) -> std::io::Result<TcpFrontend> {
+        listener.set_nonblocking(true)?;
+        let slots = reply_rxs
+            .into_iter()
+            .map(|rx| Slot {
+                attached: false,
+                reply_rx: Some(rx),
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            layout,
+            grad_txs,
+            cells,
+            slots: Mutex::new(slots),
+            delayed,
+            stop,
+            net,
+            grad_frame_bytes: AtomicU64::new(0),
+            submissions: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+            ever_joined: AtomicUsize::new(0),
+            conn_handles: Mutex::new(Vec::new()),
+        });
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(TcpFrontend {
+            shared,
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// Workers currently connected.
+    pub fn active_conns(&self) -> usize {
+        self.shared.active_conns.load(Ordering::Relaxed)
+    }
+
+    /// Workers that have ever completed an attach.
+    pub fn ever_joined(&self) -> usize {
+        self.shared.ever_joined.load(Ordering::Relaxed)
+    }
+
+    /// Gradient-plane byte counters.
+    pub fn stats(&self) -> FrontendStats {
+        FrontendStats {
+            grad_frame_bytes: self.shared.grad_frame_bytes.load(Ordering::Relaxed),
+            submissions: self.shared.submissions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting, disconnect every worker (they receive `Shutdown`),
+    /// join all connection threads and release the gradient senders so
+    /// the shard servers can drain and exit.
+    pub fn shutdown(mut self) -> FrontendStats {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        loop {
+            let handle = self.shared.conn_handles.lock().unwrap().pop();
+            match handle {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
+        }
+        self.stats()
+        // `self.shared` drops here; with every handler joined this is the
+        // last owner of the gradient senders.
+    }
+}
+
+/// Join (and drop) every finished connection thread so a long-lived
+/// server with reconnect churn or refused attaches does not accumulate
+/// handles without bound; live connections stay registered for
+/// `shutdown` to join.
+fn reap_finished(shared: &Shared) {
+    let mut handles = shared.conn_handles.lock().unwrap();
+    let mut i = 0;
+    while i < handles.len() {
+        if handles[i].is_finished() {
+            let h = handles.swap_remove(i);
+            let _ = h.join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        reap_finished(&shared);
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let shared2 = Arc::clone(&shared);
+                let handle = std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, &shared2) {
+                        log_warn!("transport", "connection from {peer} ended: {e:#}");
+                    }
+                });
+                shared.conn_handles.lock().unwrap().push(handle);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                log_warn!("transport", "accept failed: {e}");
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+/// Serve one worker connection end to end. Returns when the worker
+/// disconnects, the stream corrupts, liveness lapses, or the run stops.
+fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = FrameReader::new();
+    let mut payload = Vec::new();
+    // --- attach handshake ---
+    let deadline = Instant::now() + shared.net.hb_timeout;
+    let hello = read_msg_blocking(&mut stream, &mut reader, &mut payload, deadline)?;
+    let (requested, wire) = match hello {
+        Msg::Hello { worker, wire, .. } => (worker, wire),
+        other => anyhow::bail!("expected Hello, got {other:?}"),
+    };
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    let assigned = {
+        let mut slots = shared.slots.lock().unwrap();
+        let id = if requested == WORKER_UNASSIGNED {
+            slots
+                .iter()
+                .position(|s| !s.attached && s.reply_rx.is_some())
+        } else {
+            let id = requested as usize;
+            match slots.get(id) {
+                Some(s) if !s.attached && s.reply_rx.is_some() => Some(id),
+                // Slot busy (old connection not yet reaped) or unknown:
+                // refuse; the client backs off and redials.
+                _ => None,
+            }
+        };
+        if let Some(id) = id {
+            slots[id].attached = true;
+        }
+        id
+    };
+    let Some(id) = assigned else {
+        // No slot: polite refusal.
+        let mut s = Mutex::new(stream);
+        let _ = write_msg(&s, &Msg::Shutdown, &mut msg_buf, &mut frame_buf);
+        let _ = s.get_mut().unwrap().flush();
+        return Ok(());
+    };
+    log_warn!(
+        "transport",
+        "worker {id} attached (wire={wire}, requested={})",
+        if requested == WORKER_UNASSIGNED {
+            "new".to_string()
+        } else {
+            requested.to_string()
+        }
+    );
+    shared.active_conns.fetch_add(1, Ordering::Relaxed);
+    shared.ever_joined.fetch_add(1, Ordering::Relaxed);
+    let conn_dead = Arc::new(AtomicBool::new(false));
+
+    // --- writer thread: the only socket writer ---
+    let (out_tx, out_rx) = mpsc::channel::<Msg>();
+    let writer = {
+        let stream = stream.try_clone()?;
+        let conn_dead = Arc::clone(&conn_dead);
+        let stop = Arc::clone(&shared.stop);
+        let hb_interval = shared.net.hb_interval;
+        std::thread::spawn(move || server_write_loop(stream, out_rx, conn_dead, stop, hb_interval))
+    };
+    // Welcome goes out before the reply pump starts: a re-attached slot's
+    // channel can hold acks from the previous connection, and those must
+    // never overtake the handshake.
+    let _ = out_tx.send(Msg::Welcome {
+        worker: id as u32,
+        workers: shared.delayed.len() as u32,
+        shards: shared.layout.shards() as u32,
+        dim: shared.layout.dim() as u64,
+        delayed: shared.delayed[id],
+    });
+    // --- reply pump: shard replies → GradAck frames; owns the slot's rx ---
+    let reply_rx = shared.slots.lock().unwrap()[id]
+        .reply_rx
+        .take()
+        .expect("attached slot lost its reply channel");
+    let pump = {
+        let out_tx = out_tx.clone();
+        let conn_dead = Arc::clone(&conn_dead);
+        std::thread::spawn(move || -> Receiver<Reply> {
+            loop {
+                if conn_dead.load(Ordering::Relaxed) {
+                    break;
+                }
+                match reply_rx.recv_timeout(POLL) {
+                    Ok(reply) => {
+                        let msg = match reply {
+                            Reply::Updated { shard, version } => Msg::GradAck {
+                                shard: shard as u32,
+                                version,
+                                changed: true,
+                            },
+                            Reply::Unchanged { shard } => Msg::GradAck {
+                                shard: shard as u32,
+                                version: 0,
+                                changed: false,
+                            },
+                        };
+                        if out_tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            reply_rx
+        })
+    };
+
+    // --- reader loop (this thread) ---
+    let state = ConnState::new();
+    state.mark_rx();
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut chunk = [0u8; 64 * 1024];
+    let result = server_read_loop(
+        &mut stream,
+        &mut reader,
+        &mut payload,
+        &mut chunk,
+        shared,
+        id,
+        &state,
+        &out_tx,
+    );
+
+    // --- teardown ---
+    conn_dead.store(true, Ordering::Relaxed);
+    drop(out_tx); // writer drains, sends Shutdown if stopping, exits
+    let _ = writer.join();
+    let rx = pump.join().expect("reply pump panicked");
+    {
+        let mut slots = shared.slots.lock().unwrap();
+        slots[id].reply_rx = Some(rx);
+        slots[id].attached = false;
+    }
+    shared.active_conns.fetch_sub(1, Ordering::Relaxed);
+    result
+}
+
+/// The per-connection frame-decode loop (runs on the handler thread).
+#[allow(clippy::too_many_arguments)]
+fn server_read_loop(
+    stream: &mut TcpStream,
+    reader: &mut FrameReader,
+    payload: &mut Vec<u8>,
+    chunk: &mut [u8],
+    shared: &Shared,
+    id: usize,
+    state: &ConnState,
+    out_tx: &Sender<Msg>,
+) -> anyhow::Result<()> {
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match stream.read(chunk) {
+            Ok(0) => return Ok(()), // worker left
+            Ok(n) => {
+                state.mark_rx();
+                reader.feed(&chunk[..n]);
+                while reader.next_frame(payload)? {
+                    let frame_bytes = (payload.len() + FRAME_OVERHEAD) as u64;
+                    match Msg::decode(payload)? {
+                        Msg::SubmitGrad {
+                            shard,
+                            seq: _,
+                            base_version,
+                            loss,
+                            grad,
+                        } => {
+                            let shard = shard as usize;
+                            anyhow::ensure!(
+                                shard < shared.layout.shards(),
+                                "submit to shard {shard} of {}",
+                                shared.layout.shards()
+                            );
+                            // Reject payloads sized for a different shard
+                            // geometry *here*, before they reach a shard
+                            // thread: `ShardGrad::view`'s size checks are
+                            // debug-only, and a panicking shard thread
+                            // would take the whole server down. Decode
+                            // already guarantees sparse indices < the
+                            // declared dim, so dim == shard length makes
+                            // every scatter-add in bounds.
+                            let expect = shared.layout.range(shard).len();
+                            let local_len = match &grad {
+                                ShardGrad::DenseLocal(g) => g.len(),
+                                ShardGrad::QuantLocal(q) => q.data.len(),
+                                ShardGrad::Sparse(s) => s.dim,
+                                ShardGrad::SparseQuant(s) => s.dim,
+                                // Full-dimension variants never come off
+                                // the wire; their length cannot match a
+                                // slice either, so this rejects them too.
+                                ShardGrad::Dense(g) => g.len(),
+                                ShardGrad::Quant(q) => q.data.len(),
+                            };
+                            anyhow::ensure!(
+                                local_len == expect,
+                                "worker {id} sent a shard-{shard} payload sized {local_len}, \
+                                 expected {expect} (geometry mismatch)"
+                            );
+                            shared
+                                .grad_frame_bytes
+                                .fetch_add(frame_bytes, Ordering::Relaxed);
+                            if shard == 0 {
+                                shared.submissions.fetch_add(1, Ordering::Relaxed);
+                            }
+                            if shared.grad_txs[shard]
+                                .send(ShardMsg {
+                                    worker: id,
+                                    base_version,
+                                    loss,
+                                    grad,
+                                })
+                                .is_err()
+                            {
+                                return Ok(()); // shards gone: run is over
+                            }
+                        }
+                        Msg::SnapshotRequest { shard, .. } => {
+                            let shard = shard as usize;
+                            anyhow::ensure!(
+                                shard < shared.layout.shards(),
+                                "snapshot request for shard {shard} of {}",
+                                shared.layout.shards()
+                            );
+                            let snap = shared.cells[shard].load();
+                            if out_tx
+                                .send(Msg::SnapshotSlice {
+                                    shard: shard as u32,
+                                    version: snap.version,
+                                    theta: snap.theta.clone(),
+                                })
+                                .is_err()
+                            {
+                                return Ok(());
+                            }
+                        }
+                        Msg::Heartbeat { .. } => {}
+                        Msg::Shutdown => return Ok(()), // clean client exit
+                        Msg::Hello { .. } => {}         // duplicate hello: ignore
+                        other => {
+                            log_warn!("transport", "worker {id} sent unexpected {other:?}");
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.silent_for() > shared.net.hb_timeout {
+                    anyhow::bail!("worker {id} silent past the heartbeat timeout (half-open)");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// The per-connection writer: encodes queued messages, emits heartbeats
+/// when idle, and sends a final `Shutdown` when the run stops.
+fn server_write_loop(
+    stream: TcpStream,
+    out_rx: Receiver<Msg>,
+    conn_dead: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    hb_interval: Duration,
+) {
+    let stream = Mutex::new(stream);
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    let mut hb_seq = 0u64;
+    let mut shutdown_sent = false;
+    loop {
+        if conn_dead.load(Ordering::Relaxed) {
+            break;
+        }
+        if stop.load(Ordering::Relaxed) && !shutdown_sent {
+            shutdown_sent = true;
+            if write_msg(&stream, &Msg::Shutdown, &mut msg_buf, &mut frame_buf).is_err() {
+                break;
+            }
+        }
+        match out_rx.recv_timeout(hb_interval) {
+            Ok(msg) => {
+                if write_msg(&stream, &msg, &mut msg_buf, &mut frame_buf).is_err() {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                hb_seq += 1;
+                if write_msg(
+                    &stream,
+                    &Msg::Heartbeat { seq: hb_seq },
+                    &mut msg_buf,
+                    &mut frame_buf,
+                )
+                .is_err()
+                {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Flush the stop signal if it raced the channel close.
+                if stop.load(Ordering::Relaxed) && !shutdown_sent {
+                    let _ = write_msg(&stream, &Msg::Shutdown, &mut msg_buf, &mut frame_buf);
+                }
+                break;
+            }
+        }
+    }
+    conn_dead.store(true, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_net() -> NetOptions {
+        NetOptions {
+            hb_interval: Duration::from_millis(50),
+            hb_timeout: Duration::from_millis(400),
+            connect_timeout: Duration::from_secs(3),
+            reconnect_attempts: 1,
+        }
+    }
+
+    /// Minimal in-test server: one shard, echoes every submit with an
+    /// Updated ack, answers snapshots from a cell.
+    fn spawn_frontend(
+        workers: usize,
+    ) -> (
+        TcpFrontend,
+        String,
+        Vec<Receiver<ShardMsg>>,
+        Vec<Sender<Reply>>,
+        Arc<AtomicBool>,
+    ) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("{}", listener.local_addr().unwrap());
+        let layout = ShardLayout::new(4, 2);
+        let mut grad_txs = Vec::new();
+        let mut grad_rxs = Vec::new();
+        for _ in 0..2 {
+            let (tx, rx) = mpsc::channel();
+            grad_txs.push(tx);
+            grad_rxs.push(rx);
+        }
+        let mut reply_txs = Vec::new();
+        let mut reply_rxs = Vec::new();
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel();
+            reply_txs.push(tx);
+            reply_rxs.push(rx);
+        }
+        let cells = vec![
+            Arc::new(SnapshotCell::new(vec![1.0, 2.0])),
+            Arc::new(SnapshotCell::new(vec![3.0, 4.0])),
+        ];
+        let stop = Arc::new(AtomicBool::new(false));
+        let frontend = TcpFrontend::start(
+            listener,
+            layout,
+            grad_txs,
+            cells,
+            reply_rxs,
+            vec![false; workers],
+            Arc::clone(&stop),
+            quick_net(),
+        )
+        .unwrap();
+        (frontend, addr, grad_rxs, reply_txs, stop)
+    }
+
+    #[test]
+    fn attach_submit_ack_refresh_roundtrip() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, reply_txs, _stop) = spawn_frontend(2);
+        let mut t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        let info = t.attach_info();
+        assert_eq!(info.worker, 0);
+        assert_eq!(info.workers, 2);
+        assert_eq!(info.shards, 2);
+        assert_eq!(info.dim, 4);
+        assert_eq!(t.layout().shards(), 2);
+
+        // refresh pulls the cell contents over the wire
+        let mut buf = [0.0f32; 2];
+        let v = t.refresh(1, &mut buf).unwrap();
+        assert_eq!(v, 0);
+        assert_eq!(buf, [3.0, 4.0]);
+
+        // submit lands on the right shard channel as a shard-local payload
+        t.submit(
+            1,
+            ShardMsg {
+                worker: 0,
+                base_version: 3,
+                loss: 0.5,
+                grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            },
+        )
+        .unwrap();
+        let msg = grad_rxs[1].recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(msg.worker, 0);
+        assert_eq!(msg.base_version, 3);
+        // shard 1's slice of the dense payload (range 2..4), shard-local
+        let mut got = vec![0.0f32; 2];
+        msg.grad.view(2..4).add_to(&mut got);
+        assert_eq!(got, vec![3.0, 4.0]);
+        assert_eq!(msg.grad.wire_bytes(2), 8);
+
+        // an ack comes back as a Reply
+        reply_txs[0]
+            .send(Reply::Updated { shard: 1, version: 9 })
+            .unwrap();
+        let r = t.recv_reply(Duration::from_secs(2)).unwrap();
+        assert_eq!(r, Reply::Updated { shard: 1, version: 9 });
+        // frame-granularity counters are reported
+        let (sent, _received) = t.wire_counters().unwrap();
+        let expected = (crate::transport::frame::FRAME_OVERHEAD
+            + crate::transport::msg::SUBMIT_HEADER_BYTES
+            + crate::transport::msg::GRAD_DENSE_HEADER_BYTES
+            + 8) as u64;
+        assert_eq!(sent, expected);
+
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn second_worker_gets_next_slot_and_extra_attach_is_refused() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_frontend(2);
+        let t0 = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        let t1 = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t0.attach_info().worker, 0);
+        assert_eq!(t1.attach_info().worker, 1);
+        assert_eq!(frontend.active_conns(), 2);
+        // a third attach has no slot: the server refuses politely
+        let err = TcpTransport::connect(&addr, "dense", quick_net());
+        assert!(err.is_err());
+        drop(t0);
+        drop(t1);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn geometry_mismatched_payload_drops_the_connection_not_the_server() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_frontend(2);
+        // Raw misbehaving client: handshake by hand, then submit a sparse
+        // payload whose declared dim (and index) belong to a much larger
+        // shard than the server's 2-coordinate shard 0. Decode alone cannot
+        // catch this (indices are in range of the *declared* dim); the
+        // server-side geometry check must, or the shard thread would panic
+        // on the out-of-bounds scatter-add and abort the whole run.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut reader = FrameReader::new();
+        let mut payload = Vec::new();
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        Msg::Hello {
+            worker: WORKER_UNASSIGNED,
+            shards: 0,
+            wire: "dense".into(),
+        }
+        .encode_into(&mut msg_buf);
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        let welcome = read_msg_blocking(&mut s, &mut reader, &mut payload, deadline).unwrap();
+        assert!(matches!(welcome, Msg::Welcome { .. }));
+        let evil = ShardGrad::Sparse(Arc::new(crate::coordinator::compress::SparseGrad {
+            dim: 1000,
+            idx: vec![999],
+            val: vec![1.0],
+        }));
+        encode_submit_into(0, 0, 0, 0.0, &evil, 0..1000, &mut msg_buf);
+        frame_buf.clear();
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        // Nothing reaches the shard channel...
+        assert!(grad_rxs[0].recv_timeout(Duration::from_millis(300)).is_err());
+        // ...and the frontend survives: a well-formed worker still attaches
+        // and its submissions flow.
+        let mut t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        t.submit(
+            0,
+            ShardMsg {
+                worker: 0,
+                base_version: 0,
+                loss: 0.0,
+                grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            },
+        )
+        .unwrap();
+        let msg = grad_rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
+        let mut got = vec![0.0f32; 2];
+        msg.grad.view(0..2).add_to(&mut got);
+        assert_eq!(got, vec![1.0, 2.0]);
+        drop(t);
+        drop(s);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn connect_backs_off_until_the_server_appears() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // Reserve a port, release it, start the server 150 ms later.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("{}", probe.local_addr().unwrap());
+        drop(probe);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let listener = TcpListener::bind(&addr2).unwrap();
+            let layout = ShardLayout::new(2, 1);
+            let (gtx, _grx) = mpsc::channel();
+            let (_rtx, rrx) = mpsc::channel::<Reply>();
+            let stop = Arc::new(AtomicBool::new(false));
+            let f = TcpFrontend::start(
+                listener,
+                layout,
+                vec![gtx],
+                vec![Arc::new(SnapshotCell::new(vec![0.0, 0.0]))],
+                vec![rrx],
+                vec![false],
+                Arc::clone(&stop),
+                quick_net(),
+            )
+            .unwrap();
+            std::thread::sleep(Duration::from_millis(400));
+            f.shutdown();
+        });
+        let t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        drop(t);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn half_open_peer_is_detected_by_heartbeat_timeout() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // A raw listener that accepts, answers the handshake, then goes
+        // silent forever (no heartbeats): the client must detect the
+        // half-open connection and report it (reconnect fails: the fake
+        // server accepts no second handshake).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("{}", listener.local_addr().unwrap());
+        let silent = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // read the Hello, answer Welcome, then never write again
+            let mut reader = FrameReader::new();
+            let mut payload = Vec::new();
+            let deadline = Instant::now() + Duration::from_secs(3);
+            let _hello = read_msg_blocking(&mut s, &mut reader, &mut payload, deadline).unwrap();
+            let mut msg_buf = Vec::new();
+            let mut frame_buf = Vec::new();
+            Msg::Welcome {
+                worker: 0,
+                workers: 1,
+                shards: 1,
+                dim: 2,
+                delayed: false,
+            }
+            .encode_into(&mut msg_buf);
+            encode_frame_into(&msg_buf, &mut frame_buf);
+            s.write_all(&frame_buf).unwrap();
+            // hold the socket open, silently, long enough to trip the
+            // client's heartbeat timeout
+            std::thread::sleep(Duration::from_millis(900));
+        });
+        let mut net = quick_net();
+        net.hb_timeout = Duration::from_millis(300);
+        let mut t = TcpTransport::connect(&addr, "dense", net).unwrap();
+        // wait past the timeout; the reader thread marks the conn dead
+        let start = Instant::now();
+        let mut saw_loss = false;
+        while start.elapsed() < Duration::from_secs(3) {
+            match t.recv_reply(Duration::from_millis(100)) {
+                Err(TransportError::Timeout) => continue,
+                Err(TransportError::Reconnected) | Err(TransportError::Closed(_)) => {
+                    saw_loss = true;
+                    break;
+                }
+                Ok(r) => panic!("unexpected reply {r:?}"),
+            }
+        }
+        assert!(saw_loss, "half-open connection was never detected");
+        silent.join().unwrap();
+    }
+
+    #[test]
+    fn reconnect_reattaches_the_same_slot() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_frontend(1);
+        let mut net = quick_net();
+        net.hb_timeout = Duration::from_millis(300);
+        net.reconnect_attempts = 10;
+        let mut t = TcpTransport::connect(&addr, "dense", net).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        // Kill the connection from the client side's socket (simulates a
+        // network drop): shut down the underlying stream out from under
+        // the transport.
+        t.conn
+            .write
+            .lock()
+            .unwrap()
+            .shutdown(std::net::Shutdown::Both)
+            .unwrap();
+        // The next operation reports the loss after transparently
+        // redialing; the slot frees once the server reaps the old
+        // connection, so allow a few rounds.
+        let start = Instant::now();
+        let mut reconnected = false;
+        while start.elapsed() < Duration::from_secs(5) {
+            match t.recv_reply(Duration::from_millis(50)) {
+                Err(TransportError::Reconnected) => {
+                    reconnected = true;
+                    break;
+                }
+                Err(TransportError::Timeout) => {}
+                Err(TransportError::Closed(why)) => panic!("gave up: {why}"),
+                Ok(r) => panic!("unexpected reply {r:?}"),
+            }
+        }
+        assert!(reconnected, "transport never reconnected");
+        assert_eq!(t.attach_info().worker, 0, "slot changed across reconnect");
+        // The re-attached connection still works end to end.
+        t.submit(
+            0,
+            ShardMsg {
+                worker: 0,
+                base_version: 0,
+                loss: 0.0,
+                grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            },
+        )
+        .unwrap();
+        let msg = grad_rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(msg.worker, 0);
+        drop(t);
+        frontend.shutdown();
+    }
+}

@@ -1,0 +1,286 @@
+//! Populate the committed benchmark baselines from a quick-budget run in
+//! the tier-1 environment.
+//!
+//! The authoring container has no Rust toolchain, so `BENCH_compress.json`
+//! and `BENCH_transport.json` ship with exact byte counts but
+//! `ops_per_sec: null`. The tier-1 suite is the first place the code
+//! actually runs; this test re-measures each case with a small fixed
+//! budget and writes the numbers into the baseline files (only filling
+//! nulls — a populated file is left alone except for a consistency check
+//! of the hardware-independent byte columns). The build profile is
+//! recorded alongside (`cargo test` is usually a debug build; full-budget
+//! release numbers come from `BENCH_COMPRESS_OUT` / `BENCH_TRANSPORT_OUT`
+//! bench runs, see each file's note).
+//!
+//! The test never fails the suite for environmental reasons: an unwritable
+//! or missing baseline file degrades to a printed notice.
+
+use hybrid_sgd::coordinator::buffer::GradientBuffer;
+use hybrid_sgd::coordinator::compress::{
+    dequantize_i8, quantize_i8_into, GradView, QuantGrad, ShardGrad, SparseGrad, TopKCompressor,
+};
+use hybrid_sgd::transport::frame::{decode_frame, encode_frame_into};
+use hybrid_sgd::transport::msg::{encode_submit_into, Msg};
+use hybrid_sgd::util::json::{parse, Json};
+use hybrid_sgd::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Quick-budget ops/sec of one operation: one warm-up call, then at least
+/// 3 and at most 10k timed iterations within ~25 ms.
+fn measure<F: FnMut()>(mut f: F) -> f64 {
+    f();
+    let budget = Duration::from_millis(25);
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while (start.elapsed() < budget || iters < 3) && iters < 10_000 {
+        f();
+        iters += 1;
+    }
+    iters as f64 / start.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// The `BENCH_compress.json` case set, measured exactly as
+/// `bench_hotpath`'s wire-format section defines it (key = (name, dim)).
+fn measure_compress_cases() -> BTreeMap<(String, usize), f64> {
+    let mut out = BTreeMap::new();
+    for &dim in &[10_000usize, 100_000, 1_000_000] {
+        let mut rng = Pcg64::seeded(7);
+        let mut grad = vec![0.0f32; dim];
+        rng.fill_normal(&mut grad, 1.0);
+        let k = dim / 100;
+
+        let mut buf = GradientBuffer::new(dim, 8);
+        let ops = measure(|| {
+            buf.push(&grad, 0, 0, 0);
+            if buf.len() >= 64 {
+                buf.clear();
+            }
+        });
+        out.insert(("dense_accumulate".to_string(), dim), ops);
+
+        let mut comp = TopKCompressor::new(dim, k);
+        let mut sg = SparseGrad::with_dim(dim);
+        let ops = measure(|| comp.compress_into(&grad, &mut sg));
+        out.insert(("topk1pct_compress".to_string(), dim), ops);
+
+        let mut buf2 = GradientBuffer::new(dim, 8);
+        let ops = measure(|| {
+            buf2.push_view(
+                GradView::Sparse {
+                    idx: &sg.idx,
+                    val: &sg.val,
+                },
+                0,
+                0,
+                0,
+            );
+            if buf2.len() >= 64 {
+                buf2.clear();
+            }
+        });
+        out.insert(("topk1pct_accumulate".to_string(), dim), ops);
+
+        let mut q = QuantGrad::empty();
+        let ops = measure(|| quantize_i8_into(&grad, &mut q));
+        out.insert(("int8_quantize".to_string(), dim), ops);
+
+        let mut buf3 = GradientBuffer::new(dim, 8);
+        let ops = measure(|| {
+            buf3.push_view(
+                GradView::Quant {
+                    scale: q.scale,
+                    data: &q.data,
+                },
+                0,
+                0,
+                0,
+            );
+            if buf3.len() >= 64 {
+                buf3.clear();
+            }
+        });
+        out.insert(("int8_accumulate".to_string(), dim), ops);
+
+        let ops = measure(|| {
+            std::hint::black_box(dequantize_i8(&q));
+        });
+        out.insert(("int8_dequantize".to_string(), dim), ops);
+    }
+    out
+}
+
+/// The `BENCH_transport.json` case set (key = (name, payload label)),
+/// mirroring `bench_hotpath`'s transport section. Returns ops/sec plus the
+/// exact frame size for the byte-column consistency check.
+fn measure_transport_cases() -> BTreeMap<(String, String), (f64, usize)> {
+    let mut out = BTreeMap::new();
+    let sizes: [(&str, usize, usize, usize); 4] = [
+        ("800B", 200, 100, 800),
+        ("8KB", 2_000, 1_000, 8_000),
+        ("80KB", 20_000, 10_000, 80_000),
+        ("4MB", 1_000_000, 500_000, 4_000_000),
+    ];
+    let mut rng = Pcg64::seeded(31);
+    for (label, dense_n, nnz, int8_n) in sizes {
+        let mut dense = vec![0.0f32; dense_n];
+        rng.fill_normal(&mut dense, 1.0);
+        let sparse = SparseGrad {
+            dim: nnz * 2,
+            idx: (0..nnz as u32).map(|i| i * 2).collect(),
+            val: {
+                let mut v = vec![0.0f32; nnz];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            },
+        };
+        let quant = QuantGrad {
+            scale: 0.01,
+            data: (0..int8_n).map(|i| (i % 251) as i8).collect(),
+        };
+        let payloads: [(&str, ShardGrad, usize); 3] = [
+            ("dense", ShardGrad::Dense(Arc::new(dense)), dense_n),
+            ("topk", ShardGrad::Sparse(Arc::new(sparse)), nnz * 2),
+            ("int8", ShardGrad::Quant(Arc::new(quant)), int8_n),
+        ];
+        for (fmt, grad, shard_len) in payloads {
+            let mut msg_buf = Vec::new();
+            let mut frame_buf = Vec::new();
+            encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf);
+            frame_buf.clear();
+            encode_frame_into(&msg_buf, &mut frame_buf);
+            let frame_bytes = frame_buf.len();
+            let ops = measure(|| {
+                encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf);
+                frame_buf.clear();
+                encode_frame_into(&msg_buf, &mut frame_buf);
+            });
+            out.insert(
+                (format!("encode_{fmt}"), label.to_string()),
+                (ops, frame_bytes),
+            );
+            let ops = measure(|| {
+                let (payload, _) = decode_frame(&frame_buf).expect("valid frame");
+                std::hint::black_box(Msg::decode(payload).expect("valid message"));
+            });
+            out.insert(
+                (format!("decode_{fmt}"), label.to_string()),
+                (ops, frame_bytes),
+            );
+        }
+    }
+    out
+}
+
+/// Fill `ops_per_sec: null` entries of one baseline file. `key_of` maps a
+/// case object to the lookup key; `lookup` returns (ops, expected bytes or
+/// None to skip the byte check; byte column name differs per file).
+fn populate(
+    path: &std::path::Path,
+    bytes_key: &str,
+    resolve: impl Fn(&Json) -> Option<(f64, Option<usize>)>,
+) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("bench_baselines: skipping {}: {e}", path.display());
+            return;
+        }
+    };
+    let mut doc = match parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            println!("bench_baselines: {} does not parse: {e:#}", path.display());
+            return;
+        }
+    };
+    let Some(cases) = doc.get("cases").and_then(|c| c.as_arr()).map(|a| a.to_vec()) else {
+        println!("bench_baselines: {} has no cases array", path.display());
+        return;
+    };
+    let mut filled = 0usize;
+    let mut updated_cases = Vec::with_capacity(cases.len());
+    for case in cases {
+        let mut obj = match case.as_obj() {
+            Some(m) => m.clone(),
+            None => {
+                updated_cases.push(case);
+                continue;
+            }
+        };
+        if let Some((ops, bytes)) = resolve(&case) {
+            let is_null = matches!(obj.get("ops_per_sec"), Some(Json::Null) | None);
+            if is_null {
+                obj.insert("ops_per_sec".to_string(), Json::Num(ops));
+                filled += 1;
+            }
+            // The byte columns are exact and hardware-independent: keep
+            // them honest against the code that defines them.
+            if let Some(b) = bytes {
+                let recorded = obj.get(bytes_key).and_then(|v| v.as_f64());
+                assert_eq!(
+                    recorded,
+                    Some(b as f64),
+                    "{}: {bytes_key} drifted from the codec for {:?}",
+                    path.display(),
+                    obj.get("name")
+                );
+            }
+        }
+        updated_cases.push(Json::Obj(obj));
+    }
+    if filled == 0 {
+        println!(
+            "bench_baselines: {} already fully populated",
+            path.display()
+        );
+        return;
+    }
+    doc.set("cases", Json::Arr(updated_cases));
+    doc.set(
+        "measured_profile",
+        Json::Str(if cfg!(debug_assertions) { "debug" } else { "release" }.to_string()),
+    );
+    doc.set(
+        "measured_by",
+        Json::Str("tests/bench_baselines.rs quick budget (~25 ms/case)".to_string()),
+    );
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!(
+            "bench_baselines: populated {filled} ops_per_sec entries in {}",
+            path.display()
+        ),
+        Err(e) => println!(
+            "bench_baselines: could not write {}: {e} (measurements discarded)",
+            path.display()
+        ),
+    }
+}
+
+#[test]
+fn populate_bench_baselines_from_quick_run() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+
+    let compress = measure_compress_cases();
+    populate(&root.join("BENCH_compress.json"), "bytes_per_step", |case| {
+        let name = case.get("name")?.as_str()?.to_string();
+        let dim = case.get("dim")?.as_usize()?;
+        let ops = *compress.get(&(name, dim))?;
+        // bytes_per_step is pinned by bench_hotpath's own assert; no
+        // recomputation here.
+        Some((ops, None))
+    });
+
+    let transport = measure_transport_cases();
+    populate(
+        &root.join("BENCH_transport.json"),
+        "bytes_per_frame",
+        |case| {
+            let name = case.get("name")?.as_str()?.to_string();
+            let payload = case.get("payload")?.as_str()?.to_string();
+            let (ops, bytes) = *transport.get(&(name, payload))?;
+            Some((ops, Some(bytes)))
+        },
+    );
+}

@@ -34,6 +34,7 @@ fn train_cfg(
         compute_floor: Duration::ZERO,
         shards,
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
+        steps: None,
     }
 }
 

@@ -45,7 +45,7 @@ fn diff_row_shape_and_figure() {
         let mut c = cfg.clone();
         c.batch = batch;
         let cmp = run_comparison_algos(&c, &[Algo::Hybrid, Algo::Async]).unwrap();
-        measured.push(cmp.diff_vs(Algo::Async));
+        measured.push(cmp.diff_vs(Algo::Async).unwrap());
         labels.push(batch.to_string());
     }
     let table = Table {

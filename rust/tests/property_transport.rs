@@ -1,0 +1,229 @@
+//! Property tests over the transport frame + message codec (mini-proptest
+//! harness; see `util::proptest` — the offline image has no proptest or
+//! fuzzing crates).
+//!
+//! The contracts under test (ISSUE 4 satellite):
+//! - arbitrary-bytes fuzz never panics, and every failed decode is a
+//!   *typed* error — not a hang, not a silently wrong payload;
+//! - truncation at every byte offset is rejected;
+//! - single-bit corruption anywhere in a frame is caught (CRC32 or a
+//!   structural check);
+//! - encode→decode roundtrips bitwise for every `ShardGrad` variant across
+//!   the wire formats and shard counts S ∈ {1, 2, 4}.
+
+use hybrid_sgd::coordinator::compress::{GradEncoder, WireFormat};
+use hybrid_sgd::coordinator::ShardLayout;
+use hybrid_sgd::prop_assert;
+use hybrid_sgd::transport::frame::{
+    decode_frame, encode_frame_into, FrameError, FrameReader, FRAME_OVERHEAD,
+};
+use hybrid_sgd::transport::msg::{encode_submit_into, Msg, WireError};
+use hybrid_sgd::util::proptest::{check, Gen};
+
+fn random_bytes(g: &mut Gen, len: usize) -> Vec<u8> {
+    (0..len).map(|_| g.rng.below(256) as u8).collect()
+}
+
+/// Arbitrary bytes through the frame decoder: never a panic, never a
+/// false positive (the probability of random bytes carrying a valid magic,
+/// version, bounded length *and* matching CRC is ~2⁻⁶⁴; with the seeded
+/// generator this is deterministic, so a flake cannot occur).
+#[test]
+fn prop_frame_decoder_survives_arbitrary_bytes() {
+    check("frame-fuzz", 300, |g| {
+        let len = g.usize_in(0, 2048);
+        let mut buf = random_bytes(g, len);
+        match decode_frame(&buf) {
+            Err(
+                FrameError::Truncated { .. }
+                | FrameError::BadMagic { .. }
+                | FrameError::Version { .. }
+                | FrameError::TooLarge { .. }
+                | FrameError::Corrupt { .. },
+            ) => {}
+            Ok(_) => return Err("random bytes decoded as a valid frame".into()),
+        }
+        // The streaming reader survives the same garbage (poisoning
+        // itself rather than looping or panicking).
+        let mut r = FrameReader::new();
+        r.feed(&buf);
+        let mut payload = Vec::new();
+        for _ in 0..4 {
+            match r.next_frame(&mut payload) {
+                Ok(true) => return Err("garbage produced a frame".into()),
+                Ok(false) => break,
+                Err(_) => {} // typed, sticky
+            }
+        }
+        // ...and arbitrary bytes through the message decoder never panic.
+        buf.truncate(g.usize_in(0, len));
+        match Msg::decode(&buf) {
+            Err(
+                WireError::Truncated { .. }
+                | WireError::UnknownMsg(_)
+                | WireError::UnknownPayload(_)
+                | WireError::Invalid(_),
+            ) => {}
+            // A random first byte can hit a valid tag with trivially
+            // consistent contents (e.g. Shutdown = one byte): fine, the
+            // decode is still well-typed.
+            Ok(_) => {}
+        }
+        Ok(())
+    });
+}
+
+/// A valid frame truncated at *every* byte offset yields `Truncated` with
+/// an honest `need > have`; never a payload.
+#[test]
+fn prop_truncation_rejected_at_every_offset() {
+    check("frame-truncation", 60, |g| {
+        let payload = random_bytes(g, g.usize_in(0, 256));
+        let mut wire = Vec::new();
+        encode_frame_into(&payload, &mut wire);
+        for cut in 0..wire.len() {
+            match decode_frame(&wire[..cut]) {
+                Err(FrameError::Truncated { need, have }) => {
+                    prop_assert!(have == cut, "have={have} at cut={cut}");
+                    prop_assert!(need > cut, "need={need} not past cut={cut}");
+                }
+                other => {
+                    return Err(format!("cut={cut}: expected Truncated, got {other:?}"))
+                }
+            }
+        }
+        let (decoded, consumed) = decode_frame(&wire).map_err(|e| e.to_string())?;
+        prop_assert!(decoded == &payload[..], "roundtrip payload mismatch");
+        prop_assert!(consumed == payload.len() + FRAME_OVERHEAD, "consumed");
+        Ok(())
+    });
+}
+
+/// Every single-bit flip anywhere in a frame is rejected. (CRC32 detects
+/// all single-bit errors outright; flips in the header are additionally
+/// caught structurally — magic, version, length bounds.)
+#[test]
+fn prop_single_bit_corruption_is_caught() {
+    check("frame-bitflip", 40, |g| {
+        let payload = random_bytes(g, g.usize_in(1, 128));
+        let mut wire = Vec::new();
+        encode_frame_into(&payload, &mut wire);
+        for byte in 0..wire.len() {
+            for bit in 0..8u8 {
+                let mut bad = wire.clone();
+                bad[byte] ^= 1 << bit;
+                match decode_frame(&bad) {
+                    Err(_) => {}
+                    Ok((got, _)) => {
+                        return Err(format!(
+                            "flip at byte {byte} bit {bit} went undetected \
+                             (payload len {}, got len {})",
+                            payload.len(),
+                            got.len()
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end bitwise roundtrip: a real `GradEncoder` submission in every
+/// wire format, split over S ∈ {1, 2, 4} shards, framed, decoded, and
+/// compared against the original payload *view* bit for bit — plus the
+/// byte-accounting invariant (`wire_bytes` survives the trip).
+#[test]
+fn prop_submit_roundtrips_bitwise_across_formats_and_shards() {
+    check("submit-roundtrip", 60, |g| {
+        let dim = g.usize_in(8, 200);
+        let wire_fmt = match g.rng.below(4) {
+            0 => WireFormat::Dense,
+            1 => WireFormat::parse(&format!("topk:{}", g.usize_in(1, dim))).unwrap(),
+            2 => WireFormat::Int8,
+            _ => WireFormat::parse(&format!("topk+int8:{}", g.usize_in(1, dim))).unwrap(),
+        };
+        for shards in [1usize, 2, 4] {
+            let layout = ShardLayout::new(dim, shards);
+            let mut enc = GradEncoder::new(wire_fmt.clone(), dim, layout.shards());
+            let grad = g.vec_f32(dim, 1.5);
+            let mut payloads = Vec::new();
+            enc.encode(&grad, &layout, &mut payloads);
+            let mut msg_buf = Vec::new();
+            let mut frame = Vec::new();
+            for (s, range) in layout.ranges().enumerate() {
+                encode_submit_into(
+                    s as u32,
+                    9,
+                    3,
+                    0.25,
+                    &payloads[s],
+                    range.clone(),
+                    &mut msg_buf,
+                );
+                frame.clear();
+                encode_frame_into(&msg_buf, &mut frame);
+                let (framed, consumed) = decode_frame(&frame).map_err(|e| e.to_string())?;
+                prop_assert!(consumed == frame.len(), "partial consume");
+                let msg = Msg::decode(framed).map_err(|e| e.to_string())?;
+                let Msg::SubmitGrad {
+                    shard,
+                    seq,
+                    base_version,
+                    loss,
+                    grad: got,
+                } = msg
+                else {
+                    return Err("decoded to a non-submit message".into());
+                };
+                prop_assert!(shard == s as u32, "shard id");
+                prop_assert!(seq == 9 && base_version == 3, "header fields");
+                prop_assert!(loss.to_bits() == 0.25f32.to_bits(), "loss bits");
+                // Bitwise view equivalence on the shard's slice.
+                let n = range.len();
+                let mut want = vec![0.0f32; n];
+                payloads[s].view(range.clone()).add_to(&mut want);
+                let mut have = vec![0.0f32; n];
+                got.view(0..n).add_to(&mut have);
+                for (i, (a, b)) in want.iter().zip(&have).enumerate() {
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{wire_fmt} S={shards} shard {s} coord {i}: {a} vs {b}"
+                    );
+                }
+                prop_assert!(
+                    payloads[s].wire_bytes(n) == got.wire_bytes(n),
+                    "{wire_fmt} S={shards}: wire_bytes changed across the trip"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Truncating a *message* payload at every offset is a typed error too
+/// (the frame layer passes a clean payload, the message layer still never
+/// trusts lengths it has not checked).
+#[test]
+fn prop_msg_truncation_is_typed() {
+    check("msg-truncation", 40, |g| {
+        let dim = g.usize_in(4, 64);
+        let layout = ShardLayout::new(dim, 1);
+        let mut enc = GradEncoder::new(WireFormat::Dense, dim, 1);
+        let grad = g.vec_f32(dim, 1.0);
+        let mut payloads = Vec::new();
+        enc.encode(&grad, &layout, &mut payloads);
+        let mut msg_buf = Vec::new();
+        encode_submit_into(0, 0, 0, 0.0, &payloads[0], 0..dim, &mut msg_buf);
+        for cut in 0..msg_buf.len() {
+            match Msg::decode(&msg_buf[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                Err(other) => {
+                    return Err(format!("cut={cut}: unexpected error {other:?}"))
+                }
+                Ok(_) => return Err(format!("cut={cut}: truncated message decoded")),
+            }
+        }
+        Ok(())
+    });
+}

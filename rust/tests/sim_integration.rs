@@ -377,6 +377,7 @@ fn trainconfig_scenario_equivalence() {
         compute_floor: Duration::ZERO,
         shards: 1,
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
+        steps: None,
     };
     let via_struct = Scenario {
         train: tc,

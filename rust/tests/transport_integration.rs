@@ -1,0 +1,407 @@
+//! Multi-process training over TCP: the transport subsystem end to end.
+//!
+//! Three layers of evidence:
+//! 1. In-process determinism: a steps-budget threaded run through the
+//!    default `InProcTransport` replays bitwise (the refactor did not
+//!    perturb the channel protocol).
+//! 2. Library-level TCP: `serve` + `join_remote` across real sockets in
+//!    one process — the dense run's final parameters match the in-process
+//!    threaded run bit for bit, and the byte counters differ exactly by
+//!    the documented frame overhead (DESIGN.md §2.6).
+//! 3. True multi-process: `hybrid-sgd serve` and `hybrid-sgd join` child
+//!    processes on a loopback port, compared bitwise against an
+//!    in-process `hybrid-sgd train` via their `--metrics-out` JSON, plus
+//!    a two-worker `--compress topk:0.01` run over real sockets.
+
+mod common;
+
+use common::{fixture, inputs_for};
+use hybrid_sgd::coordinator::{
+    join_remote, serve, train, DelayModel, Policy, TrainConfig, WireFormat,
+};
+use hybrid_sgd::transport::frame::FRAME_OVERHEAD;
+use hybrid_sgd::transport::msg::{
+    GRAD_DENSE_HEADER_BYTES, SUBMIT_HEADER_BYTES,
+};
+use hybrid_sgd::transport::NetOptions;
+use std::io::{BufRead, BufReader, Read};
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Per-(submission, shard) overhead of the dense TCP path over the
+/// in-process payload accounting: frame header + CRC + submit header +
+/// dense payload header.
+const DENSE_SUBMIT_OVERHEAD: u64 =
+    (FRAME_OVERHEAD + SUBMIT_HEADER_BYTES + GRAD_DENSE_HEADER_BYTES) as u64;
+
+fn steps_cfg(workers: usize, shards: usize, steps: u64) -> TrainConfig {
+    let mut tc = TrainConfig::quick(Policy::Async, workers, 30.0);
+    tc.delay = DelayModel::none();
+    tc.lr = 0.05;
+    tc.shards = shards;
+    tc.steps = Some(steps);
+    tc.seed = 5;
+    tc
+}
+
+fn quick_net() -> NetOptions {
+    NetOptions {
+        hb_interval: Duration::from_millis(100),
+        hb_timeout: Duration::from_secs(3),
+        connect_timeout: Duration::from_secs(5),
+        reconnect_attempts: 2,
+    }
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|p| p.to_bits()).collect()
+}
+
+#[test]
+fn inproc_steps_budget_replays_bitwise() {
+    // One worker + a step budget serializes the whole pipeline: the run is
+    // a pure function of the seed, so the threaded stack over the default
+    // InProcTransport must replay bit for bit — the golden trace the TCP
+    // comparison below builds on.
+    let fx = fixture(31);
+    let inputs = inputs_for(&fx, 1);
+    let tc = steps_cfg(1, 2, 20);
+    let a = train(&tc, &inputs).expect("run a");
+    let b = train(&tc, &inputs).expect("run b");
+    assert_eq!(a.gradients_total, 20);
+    assert_eq!(a.gradients_total, b.gradients_total);
+    assert_eq!(a.updates_total, b.updates_total);
+    assert!(!a.final_params.is_empty());
+    assert_eq!(bits(&a.final_params), bits(&b.final_params));
+    // steps mode ends well before the 30 s hard deadline
+    assert!(a.wall_time < 15.0, "took {}s", a.wall_time);
+}
+
+#[test]
+fn tcp_dense_matches_inproc_bitwise_with_frame_overhead() {
+    let fx = fixture(32);
+    let inputs = inputs_for(&fx, 1);
+    for shards in [1usize, 2] {
+        let tc = steps_cfg(1, shards, 25);
+        let m_inproc = train(&tc, &inputs).expect("inproc run");
+        assert_eq!(m_inproc.gradients_total, 25);
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("{}", listener.local_addr().unwrap());
+        let net = quick_net();
+        let m_tcp = std::thread::scope(|s| {
+            let tc_ref = &tc;
+            let inputs_ref = &inputs;
+            let net_ref = &net;
+            let server = s.spawn(move || serve(tc_ref, inputs_ref, listener, net_ref));
+            let report = join_remote(
+                &addr,
+                &net,
+                WireFormat::Dense,
+                DelayModel::none(),
+                tc.seed,
+                Duration::ZERO,
+                Some(25),
+                Duration::from_secs(30),
+                std::sync::Arc::clone(&inputs.worker_engine),
+                std::sync::Arc::clone(&inputs.batch_source),
+                Some(1),
+            )
+            .expect("join_remote");
+            assert_eq!(report.grads_sent, 25);
+            server.join().expect("server thread").expect("serve run")
+        });
+
+        // The learning outcome is identical, bit for bit.
+        assert_eq!(m_tcp.gradients_total, m_inproc.gradients_total, "S={shards}");
+        assert_eq!(m_tcp.updates_total, m_inproc.updates_total, "S={shards}");
+        assert_eq!(
+            bits(&m_tcp.final_params),
+            bits(&m_inproc.final_params),
+            "S={shards}: TCP parameters diverged from the in-process run"
+        );
+        // Byte counters differ only by the documented frame overhead:
+        // per submission, each of the S shard frames adds the fixed
+        // header+CRC bytes on top of its payload slice.
+        let expected_overhead = m_inproc.gradients_total * shards as u64 * DENSE_SUBMIT_OVERHEAD;
+        assert_eq!(
+            m_tcp.bytes_received,
+            m_inproc.bytes_received + expected_overhead,
+            "S={shards}: frame-granularity accounting off"
+        );
+        assert_eq!(m_tcp.bytes_sent, m_tcp.bytes_received);
+        assert_eq!(m_tcp.bytes_dense_equiv, m_inproc.bytes_dense_equiv);
+    }
+}
+
+#[test]
+fn tcp_topk_two_workers_train_over_localhost() {
+    let fx = fixture(33);
+    let inputs = inputs_for(&fx, 2);
+    let mut tc = steps_cfg(2, 2, 15);
+    tc.policy = Policy::Async;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = format!("{}", listener.local_addr().unwrap());
+    let net = quick_net();
+    let wire = WireFormat::parse("topk:0.01").unwrap();
+    let m = std::thread::scope(|s| {
+        let tc_ref = &tc;
+        let inputs_ref = &inputs;
+        let net_ref = &net;
+        let server = s.spawn(move || serve(tc_ref, inputs_ref, listener, net_ref));
+        let mut joins = Vec::new();
+        for _ in 0..2 {
+            let addr = addr.clone();
+            let net = net.clone();
+            let wire = wire.clone();
+            let engine = std::sync::Arc::clone(&inputs.worker_engine);
+            let source = std::sync::Arc::clone(&inputs.batch_source);
+            joins.push(s.spawn(move || {
+                join_remote(
+                    &addr,
+                    &net,
+                    wire,
+                    DelayModel::none(),
+                    5,
+                    Duration::ZERO,
+                    Some(15),
+                    Duration::from_secs(30),
+                    engine,
+                    source,
+                    Some(2),
+                )
+            }));
+        }
+        for j in joins {
+            let report = j.join().expect("join thread").expect("join_remote");
+            assert_eq!(report.grads_sent, 15);
+            assert!(report.bytes_sent > 0);
+        }
+        server.join().expect("server thread").expect("serve run")
+    });
+    // Both workers' budgets arrived and were applied.
+    assert_eq!(m.gradients_total, 30);
+    assert!(m.updates_total > 0);
+    assert!(m.final_params.iter().all(|p| p.is_finite()));
+    // topk:0.01 over TCP still crushes the byte volume (1% density plus
+    // fixed frame headers ≪ dense f32).
+    assert!(m.bytes_sent > 0);
+    assert!(
+        m.wire_compression() > 5.0,
+        "compression only {:.1}x",
+        m.wire_compression()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// true multi-process runs via the hybrid-sgd binary
+// ---------------------------------------------------------------------------
+
+struct ChildGuard(Child, &'static str);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+    }
+}
+
+/// Wait for a child with a hard deadline; returns (exit ok, stdout+stderr).
+fn wait_with_deadline(mut child: ChildGuard, deadline: Duration) -> (bool, String) {
+    let start = Instant::now();
+    loop {
+        match child.0.try_wait().expect("try_wait") {
+            Some(status) => {
+                let mut out = String::new();
+                if let Some(mut o) = child.0.stdout.take() {
+                    let _ = o.read_to_string(&mut out);
+                }
+                if let Some(mut e) = child.0.stderr.take() {
+                    let _ = e.read_to_string(&mut out);
+                }
+                return (status.success(), out);
+            }
+            None => {
+                if start.elapsed() > deadline {
+                    let _ = child.0.kill();
+                    panic!("{} did not exit within {deadline:?}", child.1);
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_hybrid-sgd"))
+}
+
+/// Shared workload flags: every process must describe the same run.
+fn common_flags(cmd: &mut Command, workers: usize, steps: u64) {
+    cmd.args([
+        "--quick",
+        "--engine",
+        "native",
+        "--dataset",
+        "random",
+        "--policy",
+        "async",
+        "--workers",
+        &workers.to_string(),
+        "--steps",
+        &steps.to_string(),
+        "--seed",
+        "7",
+        "--delay-std",
+        "0",
+        "--compute-ms",
+        "0",
+        "--secs",
+        "30",
+    ]);
+}
+
+fn read_params_bits(path: &std::path::Path) -> (Vec<u32>, f64, f64) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let json = hybrid_sgd::util::json::parse(&text).expect("metrics JSON parses");
+    let params: Vec<u32> = json
+        .get("final_params")
+        .expect("final_params present")
+        .as_arr()
+        .expect("final_params is an array")
+        .iter()
+        .map(|v| (v.as_f64().expect("param is a number") as f32).to_bits())
+        .collect();
+    let grads = json.f64_field("gradients_total").expect("gradients_total");
+    let bytes_received = json.f64_field("bytes_received").expect("bytes_received");
+    (params, grads, bytes_received)
+}
+
+/// Spawn `serve`, parse the bound address from its stdout, hand back the
+/// child (stdout is drained by the returned reader thread).
+fn spawn_serve(
+    workers: usize,
+    steps: u64,
+    metrics_out: &std::path::Path,
+) -> (ChildGuard, String, std::thread::JoinHandle<String>) {
+    let mut cmd = bin();
+    cmd.arg("serve").args(["--listen", "127.0.0.1:0"]);
+    common_flags(&mut cmd, workers, steps);
+    cmd.args(["--metrics-out", metrics_out.to_str().unwrap()]);
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn serve");
+    let stdout = child.stdout.take().expect("serve stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut addr = None;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut line = String::new();
+    while addr.is_none() {
+        assert!(Instant::now() < deadline, "serve never reported its address");
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read serve stdout");
+        assert!(n > 0, "serve exited before reporting its address");
+        // "listening       : 127.0.0.1:PORT"
+        if let Some(rest) = line.strip_prefix("listening") {
+            let a = rest.trim_start_matches(|c| c == ' ' || c == ':').trim();
+            addr = Some(a.to_string());
+        }
+    }
+    // Drain the rest of stdout in the background so the child never blocks
+    // on a full pipe.
+    let drain = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = reader.read_to_string(&mut rest);
+        rest
+    });
+    (ChildGuard(child, "serve"), addr.unwrap(), drain)
+}
+
+#[test]
+fn multiprocess_dense_tcp_matches_inproc_train_bitwise() {
+    let dir = std::env::temp_dir().join(format!(
+        "hybrid-sgd-transport-{}-{}",
+        std::process::id(),
+        line!()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let inproc_json = dir.join("inproc.json");
+    let tcp_json = dir.join("tcp.json");
+
+    // 1. The in-process reference run (`hybrid-sgd train`).
+    let mut cmd = bin();
+    cmd.arg("train");
+    common_flags(&mut cmd, 1, 40);
+    cmd.args(["--metrics-out", inproc_json.to_str().unwrap()]);
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    let (ok, out) = wait_with_deadline(
+        ChildGuard(cmd.spawn().expect("spawn train"), "train"),
+        Duration::from_secs(60),
+    );
+    assert!(ok, "train failed:\n{out}");
+
+    // 2. The same run split across processes: serve + one join.
+    let (server, addr, drain) = spawn_serve(1, 40, &tcp_json);
+    let mut cmd = bin();
+    cmd.arg("join").args(["--connect", &addr]);
+    common_flags(&mut cmd, 1, 40);
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    let (ok, out) = wait_with_deadline(
+        ChildGuard(cmd.spawn().expect("spawn join"), "join"),
+        Duration::from_secs(60),
+    );
+    assert!(ok, "join failed:\n{out}");
+    let (ok, out) = wait_with_deadline(server, Duration::from_secs(60));
+    assert!(ok, "serve failed:\n{out}");
+    let _ = drain.join();
+
+    // 3. Bitwise parameter equality; byte counters differ exactly by the
+    //    frame overhead of 40 dense submissions × 1 shard.
+    let (p_in, g_in, b_in) = read_params_bits(&inproc_json);
+    let (p_tcp, g_tcp, b_tcp) = read_params_bits(&tcp_json);
+    assert_eq!(g_in, 40.0);
+    assert_eq!(g_tcp, 40.0);
+    assert!(!p_in.is_empty());
+    assert_eq!(
+        p_in, p_tcp,
+        "multi-process dense run diverged from the in-process one"
+    );
+    assert_eq!(b_tcp as u64, b_in as u64 + 40 * DENSE_SUBMIT_OVERHEAD);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn multiprocess_topk_smoke_two_workers() {
+    let dir = std::env::temp_dir().join(format!(
+        "hybrid-sgd-transport-{}-{}",
+        std::process::id(),
+        line!()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let tcp_json = dir.join("metrics.json");
+    let (server, addr, drain) = spawn_serve(2, 25, &tcp_json);
+    let mut joins = Vec::new();
+    for _ in 0..2 {
+        let mut cmd = bin();
+        cmd.arg("join")
+            .args(["--connect", &addr, "--compress", "topk:0.01"]);
+        common_flags(&mut cmd, 2, 25);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        joins.push(ChildGuard(cmd.spawn().expect("spawn join"), "join"));
+    }
+    for j in joins {
+        let (ok, out) = wait_with_deadline(j, Duration::from_secs(60));
+        assert!(ok, "join failed:\n{out}");
+    }
+    let (ok, out) = wait_with_deadline(server, Duration::from_secs(60));
+    assert!(ok, "serve failed:\n{out}");
+    let _ = drain.join();
+    let text = std::fs::read_to_string(&tcp_json).expect("metrics artifact written");
+    let json = hybrid_sgd::util::json::parse(&text).expect("metrics JSON parses");
+    // both workers reached the step budget: 2 × 25 submissions arrived
+    assert_eq!(json.f64_field("gradients_total").unwrap(), 50.0);
+    assert!(json.f64_field("updates_total").unwrap() > 0.0);
+    // compressed TCP run actually compresses
+    assert!(json.f64_field("wire_compression").unwrap() > 5.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
