@@ -80,6 +80,8 @@ fn run_native(fx: &Fixture, policy: Policy, secs: f64, compute_ms: f64) -> RunMe
         shards: 1,
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
         steps: None,
+        elastic: false,
+        min_quorum: 1,
     };
     train(&cfg, &inputs).expect("run failed")
 }
@@ -216,6 +218,8 @@ fn main() {
                 shards: 1,
                 wire: hybrid_sgd::coordinator::WireFormat::Dense,
                 steps: None,
+                elastic: false,
+                min_quorum: 1,
             };
             let m = train(&cfg, &inputs).expect("xla run failed");
             report("AOT XLA (jnp)", &m);

@@ -74,6 +74,8 @@ fn main() -> anyhow::Result<()> {
         wire: hybrid_sgd::coordinator::WireFormat::parse(&args.str_or("compress", "dense"))
             .expect("bad --compress (dense | topk:<k|frac> | int8 | topk+int8:<k|frac>)"),
         steps: None,
+        elastic: false,
+        min_quorum: 1,
     };
     let _ = Schedule::Step { step: 1 }; // (see threshold.rs for all schedules)
 

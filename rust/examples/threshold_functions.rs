@@ -93,6 +93,8 @@ fn main() -> anyhow::Result<()> {
             shards: args.usize_or("shards", 1),
             wire: hybrid_sgd::coordinator::WireFormat::Dense,
             steps: None,
+            elastic: false,
+            min_quorum: 1,
         };
         let m = train(&cfg, &inputs)?;
         let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));

@@ -99,6 +99,8 @@ fn main() -> anyhow::Result<()> {
         shards: args.usize_or("shards", 1),
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
         steps: None,
+        elastic: false,
+        min_quorum: 1,
     };
 
     println!("training for ~{secs:.0}s (~{steps} gradient steps) ...\n");

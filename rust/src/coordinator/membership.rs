@@ -1,0 +1,147 @@
+//! Elastic worker membership: which worker slots are *live* right now.
+//!
+//! The paper's threshold `K(n)` and the sync barrier are defined against a
+//! worker count. With a launch-time-fixed count, a crashed or departed
+//! worker permanently stalls the sync-shifted tail of a hybrid run — the
+//! exact fragility the paper argues asynchronous methods avoid. Elastic
+//! membership replaces that fixed count with a live set: a worker that is
+//! declared dead (heartbeat timeout on TCP, `crash`/`leave` clause in the
+//! simulator, spent step budget) is removed from every barrier denominator,
+//! its slot reopens for late joiners, and a rejoining worker re-enters at
+//! the current membership epoch with a fresh snapshot.
+//!
+//! [`Membership`] is the pure tracker: a live mask over worker slots plus a
+//! monotone **epoch** counter bumped on every effective transition. It is
+//! embedded per shard inside [`super::policy::Aggregator`] (each shard
+//! applies the identical membership event sequence, so per-shard state
+//! stays in lockstep — DESIGN.md §2.7) and once globally in the simulator
+//! for the run-level membership trajectory. Transitions are idempotent:
+//! re-joining a live slot or re-leaving a dead one is a no-op and does not
+//! bump the epoch, which is what lets the TCP frontend report every attach
+//! as a join without double-counting the founding members.
+
+/// Live-set tracker over a fixed number of worker slots.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    live: Vec<bool>,
+    live_count: usize,
+    epoch: u64,
+}
+
+impl Membership {
+    /// `slots` total worker slots, of which the first `initial_live` start
+    /// live (the founding members; joiner slots start dead). The initial
+    /// complement is epoch 0 — only *changes* bump the epoch.
+    pub fn new(slots: usize, initial_live: usize) -> Membership {
+        let initial_live = initial_live.min(slots);
+        let mut live = vec![false; slots];
+        for l in live.iter_mut().take(initial_live) {
+            *l = true;
+        }
+        Membership {
+            live,
+            live_count: initial_live,
+            epoch: 0,
+        }
+    }
+
+    /// Total worker slots (live or not).
+    pub fn slots(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Currently live workers.
+    pub fn live(&self) -> usize {
+        self.live_count
+    }
+
+    /// Monotone transition counter: one tick per effective join or leave.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.live.get(worker).copied().unwrap_or(false)
+    }
+
+    /// Mark `worker` live. Returns true when the live set changed
+    /// (idempotent: joining a live slot is a no-op). Out-of-range ids are
+    /// ignored — membership events are advisory, never a panic source.
+    pub fn join(&mut self, worker: usize) -> bool {
+        match self.live.get_mut(worker) {
+            Some(l) if !*l => {
+                *l = true;
+                self.live_count += 1;
+                self.epoch += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Mark `worker` dead. Returns true when the live set changed.
+    pub fn leave(&mut self, worker: usize) -> bool {
+        match self.live.get_mut(worker) {
+            Some(l) if *l => {
+                *l = false;
+                self.live_count -= 1;
+                self.epoch += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn founding_members_are_live_without_epoch_ticks() {
+        let m = Membership::new(5, 3);
+        assert_eq!(m.slots(), 5);
+        assert_eq!(m.live(), 3);
+        assert_eq!(m.epoch(), 0);
+        assert!(m.is_live(0) && m.is_live(2));
+        assert!(!m.is_live(3) && !m.is_live(4));
+    }
+
+    #[test]
+    fn transitions_bump_epoch_and_are_idempotent() {
+        let mut m = Membership::new(3, 3);
+        assert!(!m.join(0), "re-joining a live slot is a no-op");
+        assert_eq!(m.epoch(), 0);
+        assert!(m.leave(1));
+        assert_eq!((m.live(), m.epoch()), (2, 1));
+        assert!(!m.leave(1), "re-leaving a dead slot is a no-op");
+        assert_eq!(m.epoch(), 1);
+        assert!(!m.is_live(1));
+        assert!(m.join(1));
+        assert_eq!((m.live(), m.epoch()), (3, 2));
+    }
+
+    #[test]
+    fn out_of_range_ids_are_ignored() {
+        let mut m = Membership::new(2, 2);
+        assert!(!m.join(7));
+        assert!(!m.leave(7));
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.live(), 2);
+    }
+
+    #[test]
+    fn everyone_can_leave() {
+        let mut m = Membership::new(2, 2);
+        assert!(m.leave(0));
+        assert!(m.leave(1));
+        assert_eq!(m.live(), 0);
+        assert!(!m.is_live(0) && !m.is_live(1));
+    }
+
+    #[test]
+    fn initial_live_is_clamped_to_slots() {
+        let m = Membership::new(2, 9);
+        assert_eq!(m.live(), 2);
+    }
+}

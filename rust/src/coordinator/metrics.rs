@@ -26,6 +26,9 @@ pub struct RunMetrics {
     /// `compress=dense`; sampled at eval boundaries in the simulator, once
     /// at run end on the threaded stack).
     pub compression_ratio: Series,
+    /// Live worker count at each elastic-membership transition (the
+    /// membership trajectory; empty for static-membership runs).
+    pub membership: Series,
 
     // run-level counters
     pub gradients_total: u64,
@@ -47,6 +50,9 @@ pub struct RunMetrics {
     /// What the same submissions would have cost dense (dim × 4 B each) —
     /// the denominator of the compression ratio.
     pub bytes_dense_equiv: u64,
+    /// Elastic-membership transitions over the run (joins + leaves +
+    /// evictions; 0 for static-membership runs).
+    pub membership_epochs: u64,
     /// Final parameters after the end-of-run drain (concatenated in shard
     /// order). The multi-process acceptance tests compare runs bitwise on
     /// this field; empty when a path does not report them.
@@ -74,6 +80,8 @@ impl PartialEq for RunMetrics {
             && self.shards == other.shards
             && self.per_shard_updates == other.per_shard_updates
             && self.compression_ratio == other.compression_ratio
+            && self.membership == other.membership
+            && self.membership_epochs == other.membership_epochs
             && self.bytes_sent == other.bytes_sent
             && self.bytes_received == other.bytes_received
             && self.bytes_dense_equiv == other.bytes_dense_equiv
@@ -141,6 +149,8 @@ impl RunMetrics {
             ("k_trajectory", series(&self.k_trajectory)),
             ("version_trajectory", series(&self.version_trajectory)),
             ("compression_ratio", series(&self.compression_ratio)),
+            ("membership", series(&self.membership)),
+            ("membership_epochs", Json::Num(self.membership_epochs as f64)),
             ("bytes_sent", Json::Num(self.bytes_sent as f64)),
             ("bytes_received", Json::Num(self.bytes_received as f64)),
             ("bytes_dense_equiv", Json::Num(self.bytes_dense_equiv as f64)),
@@ -199,6 +209,8 @@ mod tests {
         m.bytes_sent = 1000;
         m.bytes_received = 1000;
         m.bytes_dense_equiv = 50_000;
+        m.membership.push(0.5, 2.0);
+        m.membership_epochs = 1;
         m
     }
 
@@ -232,6 +244,18 @@ mod tests {
         assert_eq!(parsed.usize_field("shards").unwrap(), 2);
         assert_eq!(parsed.usize_field("bytes_sent").unwrap(), 1000);
         assert_eq!(parsed.f64_field("wire_compression").unwrap(), 50.0);
+        assert_eq!(parsed.usize_field("membership_epochs").unwrap(), 1);
+        assert_eq!(
+            parsed
+                .get("membership")
+                .unwrap()
+                .get("v")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            1
+        );
         assert_eq!(
             parsed
                 .get("per_shard_updates")

@@ -12,6 +12,9 @@
 //!   and the borrowed views the state machines consume.
 //! - [`shard`] — contiguous θ sharding and the pure sharded state machine
 //!   (`S = 1` reproduces the unsharded semantics bitwise).
+//! - [`membership`] — elastic worker membership: the live-set tracker that
+//!   lets `K(n)` and sync barriers renormalize as workers join and leave a
+//!   running job (DESIGN.md §2.7).
 //! - [`delay`] — the paper's worker-heterogeneity injection model.
 //! - [`clock`] — time as a capability: real + virtual clocks behind one
 //!   trait, threaded through every layer that paces or timestamps.
@@ -29,6 +32,7 @@ pub mod checkpoint;
 pub mod clock;
 pub mod compress;
 pub mod delay;
+pub mod membership;
 pub mod metrics;
 pub mod params;
 pub mod policy;
@@ -46,9 +50,11 @@ pub use compress::{
     TopKCompressor, WireFormat,
 };
 pub use delay::DelayModel;
+pub use membership::Membership;
 pub use metrics::RunMetrics;
 pub use params::{ParamSnapshot, SnapshotCell};
 pub use policy::{Aggregator, Outcome, Policy};
+pub use server::ShardEvent;
 pub use shard::{ShardLayout, ShardedAggregator};
 pub use sim::{simulate, FaultPlan, FaultSpec, Scenario, Simulation};
 pub use threshold::Schedule;

@@ -20,6 +20,7 @@
 use super::adaptive::{AdaptiveConfig, AdaptiveController};
 use super::buffer::GradientBuffer;
 use super::compress::GradView;
+use super::membership::Membership;
 use super::params::ParamStore;
 use super::threshold::Schedule;
 
@@ -147,6 +148,16 @@ pub struct Aggregator {
     buffer: GradientBuffer,
     workers: usize,
     k_max: usize,
+    /// Elastic membership (DESIGN.md §2.7): when present, the sync barrier
+    /// denominator and the threshold cap track the *live* worker set
+    /// instead of the launch-time slot count. `None` (the default) is the
+    /// static path, bitwise-identical to the pre-elastic stack.
+    elastic: Option<Membership>,
+    /// Floor on the barrier denominator / threshold cap under elastic
+    /// membership: the barrier never renormalizes below this many workers,
+    /// so a near-empty run waits for joiners instead of degenerating to
+    /// K = 1.
+    min_quorum: usize,
     adaptive: Option<AdaptiveController>,
     pub stats: AggStats,
 }
@@ -164,6 +175,8 @@ impl Aggregator {
             buffer: GradientBuffer::new(dim, workers),
             workers,
             k_max: workers,
+            elastic: None,
+            min_quorum: 1,
             adaptive,
             stats: AggStats::default(),
         }
@@ -175,25 +188,117 @@ impl Aggregator {
         self
     }
 
+    /// Enable elastic membership: `initial_live` of the `workers` slots
+    /// start live (slots `initial_live..` are reserved for late joiners),
+    /// and the barrier denominator never drops below `min_quorum`.
+    pub fn with_elastic(mut self, initial_live: usize, min_quorum: usize) -> Self {
+        self.elastic = Some(Membership::new(self.workers, initial_live));
+        self.min_quorum = min_quorum.max(1);
+        self
+    }
+
     pub fn policy(&self) -> &Policy {
         &self.policy
+    }
+
+    /// Live worker count (the slot count on the static path).
+    pub fn live(&self) -> usize {
+        match &self.elastic {
+            Some(m) => m.live(),
+            None => self.workers,
+        }
+    }
+
+    /// Membership transitions applied so far (0 on the static path).
+    pub fn membership_epoch(&self) -> u64 {
+        self.elastic.as_ref().map_or(0, |m| m.epoch())
+    }
+
+    /// The sync-barrier denominator: live membership (quorum-floored)
+    /// under elastic mode, the launch-time worker count otherwise.
+    fn quorum(&self) -> usize {
+        match &self.elastic {
+            Some(m) => m.live().max(self.min_quorum).max(1),
+            None => self.workers,
+        }
+    }
+
+    /// Effective threshold cap: `k_max` clamped to live membership
+    /// (quorum-floored) under elastic mode, plain `k_max` otherwise.
+    fn k_cap(&self) -> usize {
+        match &self.elastic {
+            Some(m) => self.k_max.min(m.live().max(self.min_quorum)).max(1),
+            None => self.k_max,
+        }
     }
 
     /// Current threshold value (1 for the baselines).
     pub fn current_k(&self) -> usize {
         match &self.policy {
             Policy::Async => 1,
-            Policy::Sync => self.workers,
-            Policy::Hybrid { schedule, .. } => schedule.k(self.stats.arrivals, self.k_max),
-            Policy::HybridAdaptive { .. } => {
-                self.adaptive.as_ref().map(|a| a.k()).unwrap_or(1)
-            }
+            Policy::Sync => self.quorum(),
+            Policy::Hybrid { schedule, .. } => schedule.k(self.stats.arrivals, self.k_cap()),
+            // The controller clamps to the cap it saw at its last
+            // observation; clamp again so a membership departure takes
+            // effect immediately, not one arrival later (a no-op on the
+            // static path, where k_cap() == the k_max it already obeys).
+            Policy::HybridAdaptive { .. } => self
+                .adaptive
+                .as_ref()
+                .map(|a| a.k())
+                .unwrap_or(1)
+                .min(self.k_cap()),
         }
     }
 
     /// Number of gradients currently buffered.
     pub fn buffered(&self) -> usize {
         self.buffer.len()
+    }
+
+    /// Elastic membership join. Returns true when the live set actually
+    /// changed (idempotent; always false on the static path). A join can
+    /// only *raise* the barrier denominator, so it never triggers a flush.
+    pub fn member_join(&mut self, worker: usize) -> bool {
+        match self.elastic.as_mut() {
+            Some(m) => m.join(worker),
+            None => false,
+        }
+    }
+
+    /// Elastic membership departure (clean leave, crash, or eviction).
+    /// Returns `(changed, flush)`: `changed` is whether the live set moved
+    /// (idempotent), and `flush` is `Some(Outcome::Flushed { .. })` when
+    /// the shrunken barrier denominator is now satisfied by what is already
+    /// buffered — the caller must release its barrier-blocked workers
+    /// exactly as it does for an arrival-triggered flush. The departed
+    /// worker's already-buffered gradients stay in the buffer (they were
+    /// accepted; they flush with the epoch — no loss, no double-apply).
+    pub fn member_leave(
+        &mut self,
+        store: &mut ParamStore,
+        worker: usize,
+    ) -> (bool, Option<Outcome>) {
+        let changed = match self.elastic.as_mut() {
+            Some(m) => m.leave(worker),
+            None => false,
+        };
+        if !changed || self.buffer.is_empty() {
+            return (changed, None);
+        }
+        let ready = match &self.policy {
+            Policy::Async => false,
+            Policy::Sync => self.buffer.distinct_workers() >= self.quorum(),
+            Policy::Hybrid { .. } | Policy::HybridAdaptive { .. } => {
+                self.buffer.len() >= self.current_k()
+            }
+        };
+        if ready {
+            let out = self.flush(store);
+            (true, Some(out))
+        } else {
+            (true, None)
+        }
     }
 
     /// Feed one dense gradient; mutates `store` according to the policy.
@@ -225,8 +330,9 @@ impl Aggregator {
         self.stats.arrivals += 1;
         let stale = store.version().saturating_sub(base_version);
         self.stats.staleness_sum += stale as f64;
+        let cap = self.k_cap();
         if let Some(ctrl) = self.adaptive.as_mut() {
-            ctrl.observe(stale, loss, self.k_max);
+            ctrl.observe(stale, loss, cap);
         }
         match &self.policy {
             Policy::Async => {
@@ -235,9 +341,10 @@ impl Aggregator {
                 Outcome::AppliedNow
             }
             Policy::Sync => {
+                let quorum = self.quorum();
                 self.buffer
                     .push_view(grad, worker, base_version, store.version());
-                if self.buffer.distinct_workers() >= self.workers {
+                if self.buffer.distinct_workers() >= quorum {
                     self.flush(store)
                 } else {
                     self.stats.blocked_total += 1;
@@ -245,7 +352,7 @@ impl Aggregator {
                 }
             }
             Policy::Hybrid { schedule, strict } => {
-                let k = schedule.k(self.stats.arrivals - 1, self.k_max);
+                let k = schedule.k(self.stats.arrivals - 1, cap);
                 self.buffer
                     .push_view(grad, worker, base_version, store.version());
                 if self.buffer.len() >= k {
@@ -258,7 +365,7 @@ impl Aggregator {
                 }
             }
             Policy::HybridAdaptive { strict, .. } => {
-                let k = self.adaptive.as_ref().map(|a| a.k()).unwrap_or(1);
+                let k = self.adaptive.as_ref().map(|a| a.k()).unwrap_or(1).min(cap);
                 self.buffer
                     .push_view(grad, worker, base_version, store.version());
                 if self.buffer.len() >= k {
@@ -544,6 +651,147 @@ mod tests {
             assert_eq!(Policy::parse(&p.to_string()).unwrap(), p);
         }
         assert!(Policy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn elastic_leave_renormalizes_sync_barrier_and_flushes() {
+        let mut agg = Aggregator::new(Policy::Sync, 1, 3).with_elastic(3, 1);
+        let mut ps = store(1);
+        assert_eq!(agg.current_k(), 3);
+        assert_eq!(
+            agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0),
+            Outcome::BufferedBlocked
+        );
+        assert_eq!(
+            agg.on_gradient(&mut ps, &[1.0], 1, 0, 1.0),
+            Outcome::BufferedBlocked
+        );
+        // Worker 2 is declared dead: the barrier denominator drops to 2,
+        // which the two buffered contributions already satisfy — the
+        // departure itself releases the barrier.
+        let (changed, flushed) = agg.member_leave(&mut ps, 2);
+        assert!(changed);
+        match flushed {
+            Some(Outcome::Flushed {
+                count,
+                distinct_workers,
+                ..
+            }) => {
+                assert_eq!(count, 2);
+                assert_eq!(distinct_workers, 2);
+            }
+            o => panic!("expected flush on departure, got {o:?}"),
+        }
+        assert_eq!(ps.version(), 1);
+        assert_eq!(agg.live(), 2);
+        assert_eq!(agg.current_k(), 2);
+        assert_eq!(agg.membership_epoch(), 1);
+        // Idempotent: a second leave of the same worker changes nothing.
+        assert_eq!(agg.member_leave(&mut ps, 2), (false, None));
+        assert_eq!(agg.membership_epoch(), 1);
+    }
+
+    #[test]
+    fn elastic_leave_caps_hybrid_threshold_to_live_membership() {
+        let sched = Schedule::Constant { k: 4 };
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: sched,
+                strict: false,
+            },
+            1,
+            4,
+        )
+        .with_elastic(4, 1);
+        let mut ps = store(1);
+        assert_eq!(agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0), Outcome::Buffered);
+        assert_eq!(agg.on_gradient(&mut ps, &[1.0], 1, 0, 1.0), Outcome::Buffered);
+        // Two departures cap K at the live count (2): the buffer already
+        // holds 2, so the second departure flushes.
+        assert_eq!(agg.member_leave(&mut ps, 3), (true, None));
+        let (changed, flushed) = agg.member_leave(&mut ps, 2);
+        assert!(changed);
+        assert!(matches!(flushed, Some(Outcome::Flushed { count: 2, .. })));
+        assert_eq!(agg.current_k(), 2);
+        // A rejoin restores the cap toward the schedule's K.
+        assert!(agg.member_join(2));
+        assert_eq!(agg.current_k(), 3);
+        assert_eq!(agg.membership_epoch(), 3);
+    }
+
+    #[test]
+    fn min_quorum_floors_the_renormalized_barrier() {
+        let mut agg = Aggregator::new(Policy::Sync, 1, 3).with_elastic(3, 2);
+        let mut ps = store(1);
+        agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0);
+        // Two workers leave; live = 1 but the quorum floor keeps the
+        // barrier at 2: the lone buffered gradient must wait for a joiner.
+        assert_eq!(agg.member_leave(&mut ps, 2), (true, None));
+        let (changed, flushed) = agg.member_leave(&mut ps, 1);
+        assert!(changed);
+        assert!(flushed.is_none(), "quorum floor must hold the barrier");
+        assert_eq!(agg.current_k(), 2);
+        assert_eq!(ps.version(), 0);
+        // A joiner arrives and contributes: the floored barrier releases.
+        assert!(agg.member_join(1));
+        match agg.on_gradient(&mut ps, &[1.0], 1, 0, 1.0) {
+            Outcome::Flushed { count: 2, .. } => {}
+            o => panic!("expected flush at the quorum floor, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn elastic_departure_releases_a_strict_adaptive_barrier() {
+        // The adaptive controller's K is clamped to live membership at the
+        // departure itself — not one arrival later, which would never come
+        // if every survivor is blocked (the stall elastic mode exists to
+        // fix). A constant loss plateaus the controller, which drifts K to
+        // k_max deterministically (one step per 2-arrival window).
+        let cfg = AdaptiveConfig {
+            window: 2,
+            ..Default::default()
+        };
+        let mut agg = Aggregator::new(
+            Policy::HybridAdaptive { cfg, strict: true },
+            1,
+            4,
+        )
+        .with_elastic(4, 1);
+        let mut ps = store(1);
+        let mut reached = false;
+        for i in 0..100 {
+            let v = ps.version();
+            agg.on_gradient(&mut ps, &[1.0], i % 4, v, 1.0);
+            if agg.current_k() == 4 && agg.buffered() == 3 {
+                reached = true;
+                break;
+            }
+        }
+        assert!(reached, "controller never parked 3 workers at a K=4 barrier");
+        // Worker 3 is declared dead: K clamps to the 3 live workers, which
+        // the buffered contributions already satisfy — the departure
+        // itself releases the barrier.
+        let (changed, flushed) = agg.member_leave(&mut ps, 3);
+        assert!(changed);
+        assert!(
+            matches!(flushed, Some(Outcome::Flushed { count: 3, .. })),
+            "departure must release the adaptive barrier, got {flushed:?}"
+        );
+        assert!(agg.current_k() <= 3, "adaptive K must clamp to live membership");
+    }
+
+    #[test]
+    fn static_aggregator_ignores_membership_events() {
+        let mut agg = Aggregator::new(Policy::Sync, 1, 3);
+        let mut ps = store(1);
+        agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0);
+        agg.on_gradient(&mut ps, &[1.0], 1, 0, 1.0);
+        assert_eq!(agg.member_leave(&mut ps, 2), (false, None));
+        assert!(!agg.member_join(2));
+        assert_eq!(agg.live(), 3);
+        assert_eq!(agg.membership_epoch(), 0);
+        assert_eq!(agg.current_k(), 3, "static barrier must not renormalize");
+        assert_eq!(ps.version(), 0);
     }
 
     #[test]

@@ -53,6 +53,22 @@ pub struct ShardMsg {
     pub grad: ShardGrad,
 }
 
+/// What travels on a shard's channel: gradient submissions plus — under
+/// elastic membership — join/leave control events. Membership events ride
+/// the *same* per-shard FIFO as gradients so every shard observes one
+/// totally ordered (gradient | membership) sequence and barrier
+/// renormalization stays in lockstep across shards (DESIGN.md §2.7). On
+/// the static path only `Grad` is ever sent, so the channel refactor is
+/// behaviour-preserving.
+pub enum ShardEvent {
+    Grad(ShardMsg),
+    /// Elastic: `worker` joined (or re-joined) the run.
+    Join { worker: usize },
+    /// Elastic: `worker` left — clean departure, crash, or eviction after
+    /// a heartbeat timeout. Its slot reopens for late joiners.
+    Leave { worker: usize },
+}
+
 /// Shard → worker reply. O(1): parameters travel through snapshot cells.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Reply {
@@ -70,10 +86,17 @@ pub struct ServerConfig {
     pub policy: Policy,
     pub workers: usize,
     pub lr: f32,
-    /// Threshold cap; defaults to the worker count.
+    /// Threshold cap; defaults to the worker count. Under `elastic` the
+    /// effective cap additionally tracks live membership.
     pub k_max: Option<usize>,
     /// Sample the (t, K) / (t, version) trajectories at most this often.
     pub trace_interval: Duration,
+    /// Elastic membership: renormalize `K(n)` and sync barriers to the
+    /// live worker set as `Join`/`Leave` events arrive. Off (the default)
+    /// reproduces the static-membership path bitwise.
+    pub elastic: bool,
+    /// Barrier-denominator floor under elastic membership (≥ 1).
+    pub min_quorum: usize,
 }
 
 /// What one shard thread hands back when the run ends.
@@ -90,6 +113,11 @@ pub struct ShardReport {
     pub bytes_received: u64,
     pub k_trajectory: crate::util::stats::Series,
     pub version_trajectory: crate::util::stats::Series,
+    /// Live worker count at each membership transition (empty on the
+    /// static path).
+    pub membership: crate::util::stats::Series,
+    /// Membership transitions this shard applied.
+    pub membership_epochs: u64,
 }
 
 /// The merged run-level report across all shards.
@@ -105,6 +133,8 @@ pub struct ServerReport {
     pub bytes_received: u64,
     pub k_trajectory: crate::util::stats::Series,
     pub version_trajectory: crate::util::stats::Series,
+    pub membership: crate::util::stats::Series,
+    pub membership_epochs: u64,
 }
 
 impl ServerReport {
@@ -120,6 +150,8 @@ impl ServerReport {
         m.bytes_received = self.bytes_received;
         m.k_trajectory = self.k_trajectory.clone();
         m.version_trajectory = self.version_trajectory.clone();
+        m.membership = self.membership.clone();
+        m.membership_epochs = self.membership_epochs;
         m.final_params = self.final_params.clone();
     }
 }
@@ -149,6 +181,8 @@ pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> Ser
         per_worker_grads: first.per_worker_grads.clone(),
         k_trajectory: first.k_trajectory.clone(),
         version_trajectory: first.version_trajectory.clone(),
+        membership: first.membership.clone(),
+        membership_epochs: first.membership_epochs,
         per_shard_updates,
         bytes_received,
         final_params,
@@ -169,7 +203,7 @@ pub fn run_shard(
     init: Vec<f32>,
     cell: Arc<SnapshotCell>,
     cfg: &ServerConfig,
-    grad_rx: Receiver<ShardMsg>,
+    grad_rx: Receiver<ShardEvent>,
     reply_txs: Vec<Sender<Reply>>,
     stop: &AtomicBool,
     clock: &dyn Clock,
@@ -180,11 +214,17 @@ pub fn run_shard(
     if let Some(k) = cfg.k_max {
         agg = agg.with_k_max(k);
     }
+    if cfg.elastic {
+        // Every slot starts live (the TCP frontend reports attaches as
+        // idempotent joins); departures and re-joins arrive as events.
+        agg = agg.with_elastic(cfg.workers, cfg.min_quorum);
+    }
     // Workers blocked at a barrier, released on flush (or stop).
     let mut blocked: Vec<usize> = Vec::with_capacity(cfg.workers);
     let mut per_worker = vec![0u64; cfg.workers];
     let mut k_traj = crate::util::stats::Series::new();
     let mut v_traj = crate::util::stats::Series::new();
+    let mut membership = crate::util::stats::Series::new();
     // `None` = no trace yet, so the first arrival always records one.
     let mut last_trace: Option<Duration> = None;
     let mut released_on_stop = false;
@@ -192,7 +232,42 @@ pub fn run_shard(
 
     loop {
         match grad_rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(msg) => {
+            Ok(ShardEvent::Join { worker }) => {
+                if cfg.elastic && agg.member_join(worker) {
+                    membership.push(clock.now().as_secs_f64(), agg.live() as f64);
+                }
+            }
+            Ok(ShardEvent::Leave { worker }) => {
+                if cfg.elastic {
+                    let (changed, flushed) = agg.member_leave(&mut store, worker);
+                    if changed {
+                        // The departed worker is never waited on again:
+                        // out of the barrier denominator, out of the
+                        // blocked list.
+                        blocked.retain(|&w| w != worker);
+                        membership.push(clock.now().as_secs_f64(), agg.live() as f64);
+                    }
+                    if let Some(Outcome::Flushed { count, k_at_flush, .. }) = flushed {
+                        if shard == 0 {
+                            log_debug!(
+                                "server",
+                                "departure of worker {worker} released the barrier: \
+                                 flush of {count} at K={k_at_flush}, v={}",
+                                store.version()
+                            );
+                        }
+                        let updated = Reply::Updated {
+                            shard,
+                            version: store.version(),
+                        };
+                        for w in blocked.drain(..) {
+                            send(&reply_txs[w], updated);
+                        }
+                        k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
+                    }
+                }
+            }
+            Ok(ShardEvent::Grad(msg)) => {
                 let ShardMsg {
                     worker,
                     base_version,
@@ -288,6 +363,8 @@ pub fn run_shard(
         bytes_received,
         k_trajectory: k_traj,
         version_trajectory: v_traj,
+        membership,
+        membership_epochs: agg.membership_epoch(),
         final_params: store.theta().to_vec(),
     }
 }
@@ -303,11 +380,12 @@ mod tests {
     use crate::coordinator::threshold::Schedule;
     use std::sync::mpsc;
 
-    /// Drive a single shard server with scripted messages.
-    fn run_scripted(
+    /// Drive a single shard server with scripted events.
+    fn run_scripted_events(
         policy: Policy,
         workers: usize,
-        msgs: Vec<ShardMsg>,
+        elastic: bool,
+        events: Vec<ShardEvent>,
     ) -> (ShardReport, Vec<Vec<Reply>>, Arc<SnapshotCell>) {
         let (gtx, grx) = mpsc::channel();
         let mut rtxs = Vec::new();
@@ -324,9 +402,11 @@ mod tests {
             lr: 0.1,
             k_max: None,
             trace_interval: Duration::from_millis(1),
+            elastic,
+            min_quorum: 1,
         };
-        for m in msgs {
-            gtx.send(m).unwrap();
+        for ev in events {
+            gtx.send(ev).unwrap();
         }
         drop(gtx);
         let cell = Arc::new(SnapshotCell::new(vec![0.0; 2]));
@@ -344,6 +424,21 @@ mod tests {
         );
         let replies: Vec<Vec<Reply>> = rrxs.into_iter().map(|rx| rx.try_iter().collect()).collect();
         (report, replies, cell)
+    }
+
+    /// Drive a single shard server with scripted gradient messages (the
+    /// static path: every event is a `Grad`).
+    fn run_scripted(
+        policy: Policy,
+        workers: usize,
+        msgs: Vec<ShardMsg>,
+    ) -> (ShardReport, Vec<Vec<Reply>>, Arc<SnapshotCell>) {
+        run_scripted_events(
+            policy,
+            workers,
+            false,
+            msgs.into_iter().map(ShardEvent::Grad).collect(),
+        )
     }
 
     fn msg(worker: usize, v: u64) -> ShardMsg {
@@ -486,6 +581,8 @@ mod tests {
             lr: 0.1,
             k_max: None,
             trace_interval: Duration::from_millis(1),
+            elastic: false,
+            min_quorum: 1,
         };
         let stop2 = Arc::clone(&stop);
         let cell = Arc::new(SnapshotCell::new(vec![0.0]));
@@ -505,12 +602,12 @@ mod tests {
             )
         });
         // worker 0 submits and would block forever (worker 1 never arrives)
-        gtx.send(ShardMsg {
+        gtx.send(ShardEvent::Grad(ShardMsg {
             worker: 0,
             base_version: 0,
             loss: 0.0,
             grad: ShardGrad::Dense(Arc::new(vec![1.0])),
-        })
+        }))
         .unwrap();
         std::thread::sleep(Duration::from_millis(50));
         assert!(rrx.try_recv().is_err(), "should be blocked at barrier");
@@ -537,6 +634,8 @@ mod tests {
             bytes_received: 40,
             k_trajectory: crate::util::stats::Series::new(),
             version_trajectory: crate::util::stats::Series::new(),
+            membership: crate::util::stats::Series::new(),
+            membership_epochs: 0,
         };
         // Deliberately out of order: merge must sort by shard id.
         let merged = merge_reports(
@@ -548,5 +647,102 @@ mod tests {
         assert_eq!(merged.per_shard_updates, vec![7, 7]);
         // bytes-on-wire sum across shards, not shard 0 only
         assert_eq!(merged.bytes_received, 80);
+    }
+
+    #[test]
+    fn leave_event_renormalizes_the_barrier_and_releases_blocked_workers() {
+        // Sync with 3 slots: two workers contribute and block; the third
+        // is declared dead. Under elastic membership the departure shrinks
+        // the barrier to 2, the buffered pair flushes, and both blocked
+        // workers are released with the fresh version.
+        let (report, replies, cell) = run_scripted_events(
+            Policy::Sync,
+            3,
+            true,
+            vec![
+                ShardEvent::Grad(msg(0, 0)),
+                ShardEvent::Grad(msg(1, 0)),
+                ShardEvent::Leave { worker: 2 },
+            ],
+        );
+        assert_eq!(report.flushes, 1);
+        assert_eq!(report.updates_total, 1);
+        assert_eq!(replies[0], vec![Reply::Updated { shard: 0, version: 1 }]);
+        assert_eq!(replies[1], vec![Reply::Updated { shard: 0, version: 1 }]);
+        assert!(replies[2].is_empty(), "the departed worker gets no reply");
+        assert!((cell.load().theta[0] + 0.1).abs() < 1e-6);
+        // Membership telemetry recorded the transition.
+        assert_eq!(report.membership_epochs, 1);
+        assert_eq!(report.membership.v, vec![2.0]);
+    }
+
+    #[test]
+    fn departed_worker_is_dropped_from_the_blocked_list() {
+        // Worker 1 contributes and blocks, then is evicted; worker 0's
+        // contribution now meets the renormalized barrier alone (live =
+        // 1). Worker 1 must not receive the release reply.
+        let (report, replies, _) = run_scripted_events(
+            Policy::Sync,
+            2,
+            true,
+            vec![
+                ShardEvent::Grad(msg(1, 0)),
+                ShardEvent::Leave { worker: 1 },
+                ShardEvent::Grad(msg(0, 0)),
+            ],
+        );
+        // The leave flushes worker 1's lone buffered gradient (quorum 1 is
+        // already met by its own contribution), then worker 0's arrival
+        // flushes immediately at the barrier of one.
+        assert_eq!(report.flushes, 2);
+        assert!(replies[1].is_empty(), "evicted worker must not be waited on or replied to");
+        assert_eq!(replies[0].len(), 1);
+        assert!(matches!(replies[0][0], Reply::Updated { version: 2, .. }));
+    }
+
+    #[test]
+    fn rejoin_restores_the_barrier_denominator() {
+        // Leave then re-join: the barrier is back to 2, so a single
+        // contribution blocks again.
+        let (report, replies, _) = run_scripted_events(
+            Policy::Sync,
+            2,
+            true,
+            vec![
+                ShardEvent::Leave { worker: 1 },
+                ShardEvent::Join { worker: 1 },
+                ShardEvent::Grad(msg(0, 0)),
+                ShardEvent::Grad(msg(1, 0)),
+            ],
+        );
+        assert_eq!(report.flushes, 1);
+        assert_eq!(report.membership_epochs, 2);
+        assert_eq!(report.membership.v, vec![1.0, 2.0]);
+        assert_eq!(replies[0].len(), 1);
+        assert_eq!(replies[1].len(), 1);
+    }
+
+    #[test]
+    fn static_path_ignores_membership_events() {
+        // elastic off: Join/Leave events are inert, the barrier stays at
+        // the launch-time worker count and blocked workers stay blocked
+        // until the end-of-run drain.
+        let (report, replies, _) = run_scripted_events(
+            Policy::Sync,
+            3,
+            false,
+            vec![
+                ShardEvent::Grad(msg(0, 0)),
+                ShardEvent::Grad(msg(1, 0)),
+                ShardEvent::Leave { worker: 2 },
+            ],
+        );
+        // No barrier release during the run: the only flush is the
+        // shutdown drain, and nobody was replied to before it.
+        assert_eq!(report.flushes, 1, "only the shutdown drain flushes");
+        assert_eq!(report.membership_epochs, 0);
+        assert!(report.membership.is_empty());
+        assert_eq!(report.updates_total, 1);
+        assert!(replies[0].is_empty() && replies[1].is_empty());
     }
 }

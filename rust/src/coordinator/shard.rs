@@ -134,6 +134,51 @@ impl ShardedAggregator {
         self
     }
 
+    /// Enable elastic membership on every shard (see
+    /// [`Aggregator::with_elastic`]).
+    pub fn with_elastic(mut self, initial_live: usize, min_quorum: usize) -> Self {
+        self.shards = self
+            .shards
+            .into_iter()
+            .map(|(agg, ps)| (agg.with_elastic(initial_live, min_quorum), ps))
+            .collect();
+        self
+    }
+
+    /// Apply a membership join to every shard. Returns whether the live
+    /// set changed (identical across shards by construction).
+    pub fn member_join(&mut self, worker: usize) -> bool {
+        let mut changed = false;
+        for (agg, _) in &mut self.shards {
+            changed = agg.member_join(worker);
+        }
+        changed
+    }
+
+    /// Apply a membership departure to every shard; returns shard 0's
+    /// flush outcome, if the shrunken barrier released one (all shards
+    /// agree — checked in debug builds).
+    pub fn member_leave(&mut self, worker: usize) -> Option<Outcome> {
+        let mut first: Option<Option<Outcome>> = None;
+        for (agg, ps) in &mut self.shards {
+            let (_, out) = agg.member_leave(ps, worker);
+            match &first {
+                None => first = Some(out),
+                Some(f) => debug_assert_eq!(
+                    f.is_some(),
+                    out.is_some(),
+                    "shards diverged on a membership flush"
+                ),
+            }
+        }
+        first.unwrap_or(None)
+    }
+
+    /// Live membership (identical across shards by construction).
+    pub fn live(&self) -> usize {
+        self.shards[0].0.live()
+    }
+
     pub fn layout(&self) -> &ShardLayout {
         &self.layout
     }
@@ -405,6 +450,59 @@ mod tests {
                 "S={shards}"
             );
         }
+    }
+
+    /// Elastic membership keeps the lockstep invariant: the same
+    /// (gradient | membership) event sequence produces bitwise-identical
+    /// parameters for every shard count, and the membership flush fires on
+    /// all shard counts alike.
+    #[test]
+    fn elastic_membership_agrees_across_shard_counts_bitwise() {
+        let dim = 19;
+        let workers = 3;
+        let mut rng = Pcg64::seeded(31);
+        let mut init = vec![0.0f32; dim];
+        rng.fill_normal(&mut init, 1.0);
+        let policy = Policy::Hybrid {
+            schedule: Schedule::Constant { k: 3 },
+            strict: true,
+        };
+        let mut machines: Vec<ShardedAggregator> = [1usize, 2, 4]
+            .iter()
+            .map(|&s| {
+                ShardedAggregator::new(policy.clone(), &init, 0.1, workers, s)
+                    .with_elastic(workers, 1)
+            })
+            .collect();
+        let mut grad = vec![0.0f32; dim];
+        // Two contributions buffer toward the strict K=3 barrier …
+        for w in 0..2usize {
+            rng.fill_normal(&mut grad, 1.0);
+            let v = machines[0].version();
+            for m in &mut machines {
+                assert_eq!(m.version(), v);
+                m.on_gradient(&grad, w, v, 1.0);
+            }
+        }
+        // … and worker 2's departure releases it on every shard count.
+        for m in &mut machines {
+            let out = m.member_leave(2);
+            assert!(
+                matches!(out, Some(Outcome::Flushed { count: 2, .. })),
+                "departure must flush the shrunken barrier, got {out:?}"
+            );
+            assert_eq!(m.live(), 2);
+            assert_eq!(m.current_k(), 2);
+        }
+        let finals: Vec<Vec<f32>> = machines
+            .iter_mut()
+            .map(|m| {
+                m.drain();
+                m.final_params()
+            })
+            .collect();
+        assert_eq!(finals[0], finals[1]);
+        assert_eq!(finals[0], finals[2]);
     }
 
     /// Sharding is invisible to the math: S ∈ {2, 5} produce bitwise the

@@ -80,6 +80,21 @@ enum Event {
     Crash { worker: usize },
     /// Fault: a crashed worker rejoins.
     Restart { worker: usize },
+    /// Membership churn (elastic runs): the worker departs cleanly.
+    Leave { worker: usize },
+    /// Membership churn (elastic runs): `count` new workers join, taking
+    /// the lowest never-joined slots.
+    Join { count: usize },
+    /// One shard's copy of a membership transition. Membership rides the
+    /// same per-shard FIFO as gradient deliveries (same stall roll-forward,
+    /// consecutive sequence numbers), so every shard observes one totally
+    /// ordered (gradient | membership) stream and barrier renormalization
+    /// stays in lockstep across shards.
+    MemberDeliver {
+        shard: usize,
+        worker: usize,
+        join: bool,
+    },
     /// The evaluator samples metrics.
     Eval,
 }
@@ -164,6 +179,9 @@ struct WorkerSim {
     rng: Pcg64,
     delayed: bool,
     crashed: bool,
+    /// Whether this slot has entered the run. Launch workers start joined;
+    /// `join:+N` slots start parked and activate at their join time.
+    joined: bool,
     /// Bumped on restart so in-flight events from the previous life are
     /// ignored.
     epoch: u64,
@@ -194,6 +212,8 @@ pub struct Simulation<'a> {
     params_buf: Vec<f32>,
     faults_dropped: u64,
     faults_duplicated: u64,
+    /// Run-level live worker count (elastic runs; == workers otherwise).
+    live: usize,
 }
 
 impl<'a> Simulation<'a> {
@@ -207,17 +227,27 @@ impl<'a> Simulation<'a> {
         anyhow::ensure!(dim > 0, "empty initial parameters");
         let layout = ShardLayout::new(dim, train.shards);
 
+        // Elastic runs pre-allocate slots for every `join:+N` clause:
+        // joiners take fresh ids after the launch complement. Without
+        // membership clauses this equals `train.workers`, so the static
+        // path (worker arrays, RNG draws, aggregator geometry) is
+        // unchanged bitwise.
+        let total_slots = train.workers + scn.faults.total_joiners();
+
         let mut shards = Vec::with_capacity(layout.shards());
         for range in layout.ranges() {
-            let mut agg = Aggregator::new(train.policy.clone(), range.len(), train.workers);
+            let mut agg = Aggregator::new(train.policy.clone(), range.len(), total_slots);
             if let Some(k) = train.k_max {
                 agg = agg.with_k_max(k);
+            }
+            if train.elastic {
+                agg = agg.with_elastic(train.workers, train.min_quorum);
             }
             shards.push(ShardSim {
                 agg,
                 store: ParamStore::new(inputs.init_params[range].to_vec(), train.lr),
                 blocked: Vec::new(),
-                per_worker: vec![0; train.workers],
+                per_worker: vec![0; total_slots],
                 k_traj: Series::new(),
                 v_traj: Series::new(),
                 last_trace: None,
@@ -225,9 +255,9 @@ impl<'a> Simulation<'a> {
         }
 
         let mut assign_rng = Pcg64::new(train.seed, 7);
-        let delayed = train.delay.assign(train.workers, &mut assign_rng);
-        let mut workers = Vec::with_capacity(train.workers);
-        for id in 0..train.workers {
+        let delayed = train.delay.assign(total_slots, &mut assign_rng);
+        let mut workers = Vec::with_capacity(total_slots);
+        for id in 0..total_slots {
             let wseed = train.seed.wrapping_add(1000 + id as u64);
             workers.push(WorkerSim {
                 params: inputs.init_params.to_vec(),
@@ -241,6 +271,7 @@ impl<'a> Simulation<'a> {
                 rng: Pcg64::new(wseed, id as u64 + 1),
                 delayed: delayed[id],
                 crashed: false,
+                joined: id < train.workers,
                 epoch: 0,
                 pending: 0,
                 sent: 0,
@@ -262,11 +293,15 @@ impl<'a> Simulation<'a> {
             params_buf: inputs.init_params.to_vec(),
             faults_dropped: 0,
             faults_duplicated: 0,
+            live: train.workers,
             train,
         };
+        // (The membership trajectory records *transitions* only — same
+        // contract as the threaded shard servers — so a churn-free elastic
+        // run is bitwise identical to the static one.)
 
         // Prime the queue: t=0 metric sample, scheduled faults, and every
-        // worker's first gradient (ready after one iteration time).
+        // launch worker's first gradient (ready after one iteration time).
         sim.queue.push(Duration::ZERO, Event::Eval);
         for spec in sim.faults.specs.clone() {
             match spec {
@@ -274,6 +309,10 @@ impl<'a> Simulation<'a> {
                 FaultSpec::Restart { worker, at } => {
                     sim.queue.push(at, Event::Restart { worker })
                 }
+                FaultSpec::Leave { worker, at } => {
+                    sim.queue.push(at, Event::Leave { worker })
+                }
+                FaultSpec::Join { count, at } => sim.queue.push(at, Event::Join { count }),
                 _ => {}
             }
         }
@@ -320,6 +359,41 @@ impl<'a> Simulation<'a> {
     /// Submissions duplicated by injected `dup` faults so far.
     pub fn faults_duplicated(&self) -> u64 {
         self.faults_duplicated
+    }
+
+    /// Run-level live worker count (== the launch worker count on static
+    /// runs).
+    pub fn live_workers(&self) -> usize {
+        self.live
+    }
+
+    /// Run-level membership transitions so far (0 on static runs).
+    pub fn membership_epochs(&self) -> u64 {
+        self.metrics.membership_epochs
+    }
+
+    /// One shard's view of the live worker count (lags the run-level count
+    /// by membership deliveries still in flight, e.g. behind a stall).
+    pub fn shard_live(&self, shard: usize) -> usize {
+        self.shards[shard].agg.live()
+    }
+
+    /// One shard's applied membership-transition count.
+    pub fn shard_membership_epoch(&self, shard: usize) -> u64 {
+        self.shards[shard].agg.membership_epoch()
+    }
+
+    /// Gradients one shard has *applied* so far (immediately or inside a
+    /// flush). `applied + buffered == arrivals` at every quiescent point —
+    /// the exactly-once conservation the chaos property test pins.
+    pub fn applied(&self, shard: usize) -> u64 {
+        let stats = &self.shards[shard].agg.stats;
+        stats.applied_async + stats.flushed_gradients
+    }
+
+    /// Gradients one shard is currently buffering toward a flush.
+    pub fn buffered(&self, shard: usize) -> usize {
+        self.shards[shard].agg.buffered()
     }
 
     /// Parameter-server version (shard 0; shards agree up to in-flight
@@ -416,13 +490,128 @@ impl<'a> Simulation<'a> {
                 loss,
                 grad,
             } => self.handle_deliver(shard, worker, epoch, ghost, base_version, loss, &grad, at),
-            Event::Crash { worker } => {
-                self.workers[worker].crashed = true;
-                Ok(())
-            }
+            Event::Crash { worker } => self.handle_departure(worker, at),
             Event::Restart { worker } => self.handle_restart(worker, at),
+            Event::Leave { worker } => self.handle_departure(worker, at),
+            Event::Join { count } => self.handle_join(count, at),
+            Event::MemberDeliver {
+                shard,
+                worker,
+                join,
+            } => self.handle_member_deliver(shard, worker, join, at),
             Event::Eval => self.handle_eval(at),
         }
+    }
+
+    /// A worker stops for good (crash fault or clean `leave`). On the
+    /// static path this only silences the worker — a crashed worker still
+    /// counts in every barrier denominator, deliberately observable as a
+    /// stall. Under elastic membership the departure is also an eviction:
+    /// the worker leaves every barrier denominator (the simulator analogue
+    /// of the TCP heartbeat timeout).
+    fn handle_departure(&mut self, w: usize, at: Duration) -> anyhow::Result<()> {
+        {
+            let wk = &mut self.workers[w];
+            if wk.crashed || !wk.joined {
+                return Ok(()); // already down (or never joined): no-op
+            }
+            wk.crashed = true;
+        }
+        if self.train.elastic {
+            self.membership_change(w, false, at);
+        }
+        Ok(())
+    }
+
+    /// `count` new workers enter the run: the lowest never-joined slots
+    /// activate, pull the complete current θ, and start computing.
+    fn handle_join(&mut self, count: usize, at: Duration) -> anyhow::Result<()> {
+        let mut admitted = Vec::with_capacity(count);
+        for w in 0..self.workers.len() {
+            if admitted.len() == count {
+                break;
+            }
+            if !self.workers[w].joined {
+                admitted.push(w);
+            }
+        }
+        for w in admitted {
+            {
+                let wk = &mut self.workers[w];
+                wk.joined = true;
+                wk.crashed = false;
+                wk.pending = 0;
+                // A joiner is a fresh process: full refresh of θ.
+                for f in wk.needs_refresh.iter_mut() {
+                    *f = true;
+                }
+            }
+            self.refresh_worker(w);
+            self.membership_change(w, true, at);
+            if self.budget_left(w) {
+                let d = self.iter_time(w, at);
+                let epoch = self.workers[w].epoch;
+                self.queue.push(at + d, Event::Submit { worker: w, epoch });
+            }
+        }
+        Ok(())
+    }
+
+    /// Record one membership transition and fan it out to every shard
+    /// through the same stall-respecting delivery path gradients take.
+    fn membership_change(&mut self, worker: usize, join: bool, at: Duration) {
+        self.live = if join { self.live + 1 } else { self.live - 1 };
+        self.metrics.membership_epochs += 1;
+        self.metrics.membership.push(at.as_secs_f64(), self.live as f64);
+        for s in 0..self.layout.shards() {
+            let deliver_at = self.faults.deliver_time(s, at);
+            self.queue.push(
+                deliver_at,
+                Event::MemberDeliver {
+                    shard: s,
+                    worker,
+                    join,
+                },
+            );
+        }
+    }
+
+    /// One shard applies a membership transition: exactly what the
+    /// threaded `run_shard` does for a `ShardEvent::Join`/`Leave` — the
+    /// departed worker drops out of the blocked list, and a departure that
+    /// satisfies the shrunken barrier flushes and releases everyone
+    /// blocked.
+    fn handle_member_deliver(
+        &mut self,
+        shard: usize,
+        worker: usize,
+        join: bool,
+        at: Duration,
+    ) -> anyhow::Result<()> {
+        let t = at.as_secs_f64();
+        let mut replies: Vec<(usize, u64, bool)> = Vec::new();
+        {
+            let sh = &mut self.shards[shard];
+            if join {
+                sh.agg.member_join(worker);
+            } else {
+                let (changed, flushed) = sh.agg.member_leave(&mut sh.store, worker);
+                if changed {
+                    sh.blocked.retain(|&(bw, _)| bw != worker);
+                }
+                if let Some(Outcome::Flushed { .. }) = flushed {
+                    for (bw, be) in sh.blocked.drain(..) {
+                        replies.push((bw, be, true));
+                    }
+                    sh.k_traj.push(t, sh.agg.current_k() as f64);
+                }
+            }
+        }
+        let version = self.shards[shard].store.version();
+        for (rw, re, changed) in replies {
+            self.reply(rw, re, shard, changed, version, at)?;
+        }
+        Ok(())
     }
 
     /// Iteration time for worker `w` starting at `at`: virtual compute cost
@@ -442,7 +631,7 @@ impl<'a> Simulation<'a> {
     }
 
     fn handle_submit(&mut self, w: usize, epoch: u64, at: Duration) -> anyhow::Result<()> {
-        if self.workers[w].crashed || self.workers[w].epoch != epoch {
+        if self.workers[w].crashed || !self.workers[w].joined || self.workers[w].epoch != epoch {
             return Ok(());
         }
         // Compute the gradient against the worker's current local θ.
@@ -454,6 +643,12 @@ impl<'a> Simulation<'a> {
                 Err(e) => {
                     crate::log_warn!("sim", "worker {w} grad failed: {e:#}");
                     wk.crashed = true;
+                    // An engine failure is a permanent loss: under elastic
+                    // membership it must also evict, or the dead worker
+                    // would stall every future barrier.
+                    if self.train.elastic {
+                        self.membership_change(w, false, at);
+                    }
                     return Ok(());
                 }
             }
@@ -486,6 +681,10 @@ impl<'a> Simulation<'a> {
             if self.budget_left(w) {
                 let d = self.iter_time(w, at);
                 self.queue.push(at + d, Event::Submit { worker: w, epoch });
+            } else if self.train.elastic {
+                // The dropped submission spent the budget: clean departure.
+                self.workers[w].crashed = true;
+                self.membership_change(w, false, at);
             }
             return Ok(());
         }
@@ -635,6 +834,13 @@ impl<'a> Simulation<'a> {
             let d = self.iter_time(w, at);
             let epoch = self.workers[w].epoch;
             self.queue.push(at + d, Event::Submit { worker: w, epoch });
+        } else if self.train.elastic && !self.workers[w].crashed {
+            // Budget spent: the worker will never submit again, so under
+            // elastic membership it departs cleanly instead of being
+            // waited on at the next barrier (exactly what a TCP worker
+            // does when `join --steps` completes and disconnects).
+            self.workers[w].crashed = true;
+            self.membership_change(w, false, at);
         }
         Ok(())
     }
@@ -668,8 +874,11 @@ impl<'a> Simulation<'a> {
                 ..
             } = &mut *self;
             let wk = &mut workers[w];
-            if !wk.crashed {
-                return Ok(()); // restart of a live worker is a no-op
+            if !wk.crashed || !wk.joined {
+                return Ok(()); // restart of a live (or never-joined) worker is a no-op
+            }
+            if train.steps.map_or(false, |n| wk.sent >= n) {
+                return Ok(()); // budget already spent: nothing to resume
             }
             wk.crashed = false;
             wk.epoch += 1;
@@ -684,6 +893,12 @@ impl<'a> Simulation<'a> {
             }
         }
         self.refresh_worker(w);
+        if self.train.elastic {
+            // Readmission: the worker re-enters the live set at the
+            // current membership epoch with the fresh snapshot it just
+            // pulled.
+            self.membership_change(w, true, at);
+        }
         if self.budget_left(w) {
             let d = self.iter_time(w, at);
             let epoch = self.workers[w].epoch;
@@ -957,6 +1172,33 @@ mod tests {
             r.per_worker_grads[0],
             m.per_worker_grads[0]
         );
+    }
+
+    #[test]
+    fn elastic_join_and_leave_track_membership_and_contributions() {
+        let init = vec![0.0f32; 4];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 4]);
+        let scn = Scenario::parse(
+            "workers=2 policy=async secs=2 grad-ms=10 elastic=on faults=leave:1@1,join:+1@1.2",
+        )
+        .unwrap();
+        let m = simulate(&scn, &inputs).unwrap();
+        // Three slots: 2 at launch + 1 joiner.
+        assert_eq!(m.per_worker_grads.len(), 3);
+        // Worker 1 contributed for only half the run; the joiner for the
+        // last 0.8 s.
+        assert!(m.per_worker_grads[1] > 0);
+        assert!(m.per_worker_grads[1] < m.per_worker_grads[0]);
+        assert!(m.per_worker_grads[2] > 0);
+        assert!(m.per_worker_grads[2] < m.per_worker_grads[0]);
+        // Membership trajectory records the two transitions: down to 1,
+        // back to 2.
+        assert_eq!(m.membership_epochs, 2);
+        assert_eq!(m.membership.v, vec![1.0, 2.0]);
+        // Elastic churn replays bitwise like everything else.
+        let n = simulate(&scn, &inputs).unwrap();
+        assert_eq!(m, n);
     }
 
     #[test]

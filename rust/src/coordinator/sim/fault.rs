@@ -7,6 +7,8 @@
 //! |-----------------------|------------------------------------------------------|
 //! | `crash:W@T`           | worker `W` dies at `T` seconds                       |
 //! | `restart:W@T`         | worker `W` comes back at `T` (fresh θ from the PS)   |
+//! | `leave:W@T`           | worker `W` departs cleanly at `T` (elastic runs only)|
+//! | `join:+N@T`           | `N` new workers join at `T` (elastic runs only)      |
 //! | `slow:W@T1..T2*F`     | straggler burst: `W` runs `F`× slower in `[T1, T2)`  |
 //! | `drop:W@T1..T2:P`     | each submission of `W` in the window is lost w.p. `P`|
 //! | `dup:W@T1..T2:P`      | each submission is delivered twice w.p. `P`          |
@@ -14,7 +16,14 @@
 //!
 //! `W` may be `*` (every worker). Times are seconds with an optional `s`
 //! suffix (`5`, `5s`, `1.5`). Example:
-//! `crash:3@5s,stall:0@1..1.5,slow:*@2..4*8`.
+//! `crash:3@5s,stall:0@1..1.5,slow:*@2..4*8,leave:1@8,join:+2@5`.
+//!
+//! `leave`/`join` are membership churn, not transport faults: they require
+//! `elastic=on` in the scenario (validated there), joiners take fresh
+//! worker ids appended after the launch complement, and under elastic
+//! membership a `crash` additionally *evicts* the worker from every
+//! barrier denominator (the simulator analogue of the TCP heartbeat
+//! timeout — DESIGN.md §2.7).
 //!
 //! Semantics notes (mirrored in DESIGN.md §2.4):
 //! - *Drop* loses the whole fan-out of one submission — every shard misses
@@ -39,6 +48,13 @@ pub enum FaultSpec {
     /// A crashed worker rejoins at `at` with parameters refreshed from the
     /// current shard stores.
     Restart { worker: usize, at: Duration },
+    /// Worker `worker` departs cleanly at `at` (elastic membership: it is
+    /// removed from every barrier denominator; a later `restart` re-admits
+    /// it at the current membership epoch).
+    Leave { worker: usize, at: Duration },
+    /// `count` brand-new workers join the run at `at`, taking fresh ids
+    /// after the launch complement (elastic membership only).
+    Join { count: usize, at: Duration },
     /// Straggler burst: iteration time multiplied by `factor` inside the
     /// window. `worker == None` affects every worker.
     Slow {
@@ -117,16 +133,28 @@ impl FaultSpec {
             .ok_or_else(|| anyhow::anyhow!("bad fault clause `{s}` (expected `kind:...`)"))?;
         let err = || anyhow::anyhow!("bad fault clause `{s}`");
         match kind {
-            "crash" | "restart" => {
+            "crash" | "restart" | "leave" => {
                 let (who, at) = rest.split_once('@').ok_or_else(err)?;
                 let worker = parse_who(who)?
                     .ok_or_else(|| anyhow::anyhow!("`{kind}` needs a concrete worker id"))?;
                 let at = parse_secs(at)?;
-                Ok(if kind == "crash" {
-                    FaultSpec::Crash { worker, at }
-                } else {
-                    FaultSpec::Restart { worker, at }
+                Ok(match kind {
+                    "crash" => FaultSpec::Crash { worker, at },
+                    "restart" => FaultSpec::Restart { worker, at },
+                    _ => FaultSpec::Leave { worker, at },
                 })
+            }
+            "join" => {
+                let (count, at) = rest.split_once('@').ok_or_else(err)?;
+                let count = count.strip_prefix('+').ok_or_else(|| {
+                    anyhow::anyhow!("bad join clause `{s}` (expected `join:+N@T`)")
+                })?;
+                let count: usize = count.parse().map_err(|_| {
+                    anyhow::anyhow!("bad join count in `{s}` (expected `join:+N@T`)")
+                })?;
+                anyhow::ensure!(count >= 1, "join count must be >= 1 in `{s}`");
+                let at = parse_secs(at)?;
+                Ok(FaultSpec::Join { count, at })
             }
             "slow" => {
                 let (who, rest) = rest.split_once('@').ok_or_else(err)?;
@@ -178,7 +206,8 @@ impl FaultSpec {
                 Ok(FaultSpec::Stall { shard, from, until })
             }
             _ => anyhow::bail!(
-                "unknown fault kind `{kind}` (crash | restart | slow | drop | dup | stall)"
+                "unknown fault kind `{kind}` \
+                 (crash | restart | leave | join | slow | drop | dup | stall)"
             ),
         }
     }
@@ -189,6 +218,8 @@ impl std::fmt::Display for FaultSpec {
         match self {
             FaultSpec::Crash { worker, at } => write!(f, "crash:{worker}@{}", fmt_secs(at)),
             FaultSpec::Restart { worker, at } => write!(f, "restart:{worker}@{}", fmt_secs(at)),
+            FaultSpec::Leave { worker, at } => write!(f, "leave:{worker}@{}", fmt_secs(at)),
+            FaultSpec::Join { count, at } => write!(f, "join:+{count}@{}", fmt_secs(at)),
             FaultSpec::Slow {
                 worker,
                 from,
@@ -353,20 +384,40 @@ impl FaultPlan {
     }
 
     /// Largest worker index any clause names (for validation against the
-    /// scenario's worker count).
+    /// scenario's worker count plus its joiners).
     pub fn max_worker(&self) -> Option<usize> {
         self.specs
             .iter()
             .filter_map(|s| match s {
-                FaultSpec::Crash { worker, .. } | FaultSpec::Restart { worker, .. } => {
-                    Some(*worker)
-                }
+                FaultSpec::Crash { worker, .. }
+                | FaultSpec::Restart { worker, .. }
+                | FaultSpec::Leave { worker, .. } => Some(*worker),
                 FaultSpec::Slow { worker, .. }
                 | FaultSpec::Drop { worker, .. }
                 | FaultSpec::Duplicate { worker, .. } => *worker,
-                FaultSpec::Stall { .. } => None,
+                FaultSpec::Stall { .. } | FaultSpec::Join { .. } => None,
             })
             .max()
+    }
+
+    /// Total workers `join` clauses add over the run (the extra slots the
+    /// simulator pre-allocates).
+    pub fn total_joiners(&self) -> usize {
+        self.specs
+            .iter()
+            .map(|s| match s {
+                FaultSpec::Join { count, .. } => *count,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Whether any clause is membership churn (`join`/`leave`), which
+    /// requires `elastic=on`.
+    pub fn has_membership(&self) -> bool {
+        self.specs
+            .iter()
+            .any(|s| matches!(s, FaultSpec::Join { .. } | FaultSpec::Leave { .. }))
     }
 
     /// Largest shard index any clause names.
@@ -443,6 +494,59 @@ mod tests {
         }
         assert!(FaultPlan::parse("").unwrap().is_empty());
         assert!(FaultPlan::parse("   ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn membership_clauses_parse_and_roundtrip() {
+        let plan = FaultPlan::parse("leave:1@8,join:+2@5,join:+1@6.5s").unwrap();
+        assert_eq!(
+            plan.specs[0],
+            FaultSpec::Leave {
+                worker: 1,
+                at: secs(8.0)
+            }
+        );
+        assert_eq!(
+            plan.specs[1],
+            FaultSpec::Join {
+                count: 2,
+                at: secs(5.0)
+            }
+        );
+        assert_eq!(plan.total_joiners(), 3);
+        assert!(plan.has_membership());
+        assert_eq!(plan.max_worker(), Some(1), "join names no worker id");
+        // Display → parse is bitwise the identity.
+        assert_eq!(plan.to_string(), "leave:1@8,join:+2@5,join:+1@6.5");
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        // Non-membership plans report no churn.
+        let plain = FaultPlan::parse("crash:0@1").unwrap();
+        assert!(!plain.has_membership());
+        assert_eq!(plain.total_joiners(), 0);
+    }
+
+    #[test]
+    fn membership_clauses_reject_malformed_input_with_typed_errors() {
+        for bad in [
+            "join:2@5",    // missing the `+`
+            "join:+@5",    // no count
+            "join:+0@5",   // zero joiners
+            "join:+x@5",   // non-numeric count
+            "join:+2",     // no time
+            "join:+2@-1",  // negative time
+            "join:+2@a",   // bad time
+            "leave:*@2",   // leave needs a concrete id
+            "leave:1",     // no time
+            "leave:@2",    // no id
+            "leave:1@",    // empty time
+        ] {
+            let err = FaultPlan::parse(bad);
+            assert!(err.is_err(), "`{bad}` should not parse");
+            // typed anyhow error, never a panic — and the message names the
+            // offending clause
+            let msg = format!("{:#}", err.unwrap_err());
+            assert!(!msg.is_empty());
+        }
     }
 
     #[test]

@@ -26,6 +26,8 @@
 //! | `delay-std`  | delay Normal σ (seconds)                  | 0              |
 //! | `faults`     | a [`FaultPlan`] clause list               | none           |
 //! | `compress`   | gradient [`WireFormat`] (`dense`, `topk:<k|frac>`, `int8`, `topk+int8:<k|frac>`) | `dense` |
+//! | `elastic`    | `on`/`off`: renormalize K and barriers to live membership | `off` |
+//! | `quorum`     | barrier-denominator floor under `elastic` | 1              |
 //!
 //! `Display` renders the canonical form; `parse(display(s))` is the
 //! identity, so scenarios can be logged from one run and replayed in
@@ -118,6 +120,17 @@ impl Scenario {
                 "delay-std" => scn.train.delay.std = v.parse().map_err(|_| num("delay-std"))?,
                 "faults" => scn.faults = FaultPlan::parse(v)?,
                 "compress" => scn.train.wire = WireFormat::parse(v)?,
+                "elastic" => {
+                    scn.train.elastic = match v {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        _ => anyhow::bail!("bad elastic `{v}` in `{tok}` (on|off)"),
+                    }
+                }
+                "quorum" => {
+                    scn.train.min_quorum = v.parse().map_err(|_| num("quorum"))?;
+                    anyhow::ensure!(scn.train.min_quorum >= 1, "quorum must be >= 1");
+                }
                 _ => anyhow::bail!("unknown scenario key `{k}` in `{tok}`"),
             }
         }
@@ -140,11 +153,34 @@ impl Scenario {
             !self.train.eval_interval.is_zero(),
             "eval interval must be > 0"
         );
+        anyhow::ensure!(self.train.min_quorum >= 1, "quorum must be >= 1");
+        if self.faults.has_membership() {
+            anyhow::ensure!(
+                self.train.elastic,
+                "join/leave fault clauses require elastic=on \
+                 (static membership has no live set to renormalize)"
+            );
+        }
+        // Joiners take fresh ids after the launch complement, so every
+        // worker-naming clause may address launch workers and joiners.
+        let slots = self.train.workers + self.faults.total_joiners();
+        if self.train.elastic {
+            anyhow::ensure!(
+                self.train.min_quorum <= slots,
+                "quorum={} can never be met: the scenario has only {slots} worker slots \
+                 ({} at launch + {} joiners) — the barrier would stall forever",
+                self.train.min_quorum,
+                self.train.workers,
+                self.faults.total_joiners()
+            );
+        }
         if let Some(w) = self.faults.max_worker() {
             anyhow::ensure!(
-                w < self.train.workers,
-                "fault names worker {w} but the scenario has {} workers",
-                self.train.workers
+                w < slots,
+                "fault names worker {w} but the scenario has {slots} worker slots \
+                 ({} at launch + {} joiners)",
+                self.train.workers,
+                self.faults.total_joiners()
             );
         }
         if let Some(s) = self.faults.max_shard() {
@@ -191,6 +227,12 @@ impl std::fmt::Display for Scenario {
         }
         if !t.wire.is_dense() {
             write!(f, " compress={}", t.wire)?;
+        }
+        if t.elastic {
+            write!(f, " elastic=on")?;
+        }
+        if t.min_quorum != 1 {
+            write!(f, " quorum={}", t.min_quorum)?;
         }
         if !self.faults.is_empty() {
             write!(f, " faults={}", self.faults)?;
@@ -274,9 +316,46 @@ mod tests {
             "workers=2 faults=crash:5@1", // fault out of range
             "shards=2 faults=stall:2@1..2", // shard out of range
             "policy=nope",
+            "elastic=maybe",        // not on|off
+            "quorum=0",             // quorum floor below 1
+            "quorum=x",
+            // membership churn without elastic=on
+            "workers=2 faults=join:+1@1",
+            "workers=2 faults=leave:0@1",
+            // leave names a slot beyond launch workers + joiners
+            "workers=2 elastic=on faults=join:+1@1,leave:3@2",
+            // a quorum no membership could ever satisfy (barrier stalls)
+            "workers=2 elastic=on quorum=3",
+            "workers=2 elastic=on quorum=4 faults=join:+1@1",
         ] {
             assert!(Scenario::parse(bad).is_err(), "`{bad}` should not parse");
         }
+    }
+
+    #[test]
+    fn elastic_keys_parse_and_roundtrip() {
+        let s = Scenario::parse(
+            "workers=3 elastic=on quorum=2 secs=4 faults=leave:1@1,join:+2@2,crash:4@3",
+        )
+        .unwrap();
+        assert!(s.train.elastic);
+        assert_eq!(s.train.min_quorum, 2);
+        // crash:4 addresses a joiner slot (3 launch + 2 joiners = 5 slots)
+        assert_eq!(s.faults.total_joiners(), 2);
+        let logged = s.to_string();
+        assert!(logged.contains("elastic=on"), "{logged}");
+        assert!(logged.contains("quorum=2"), "{logged}");
+        let replay = Scenario::parse(&logged).unwrap();
+        assert_eq!(replay.train.elastic, s.train.elastic);
+        assert_eq!(replay.train.min_quorum, s.train.min_quorum);
+        assert_eq!(replay.faults, s.faults);
+        // defaults stay silent: no elastic/quorum clutter in static lines
+        let plain = Scenario::parse("workers=2").unwrap();
+        assert!(!plain.train.elastic);
+        assert_eq!(plain.train.min_quorum, 1);
+        let line = plain.to_string();
+        assert!(!line.contains("elastic="), "{line}");
+        assert!(!line.contains("quorum="), "{line}");
     }
 
     #[test]

@@ -9,7 +9,12 @@
 //! Contract: `k(n)` is a non-decreasing function of the number of gradient
 //! arrivals `n`, with `k(0) ≥ 1`, clamped to `[1, k_max]`. `k_max` defaults
 //! to the worker count (beyond that a flush can never trigger before every
-//! worker contributed at least once on average).
+//! worker contributed at least once on average). Under elastic membership
+//! the caller passes a cap that tracks the *live* worker set
+//! ([`super::policy::Aggregator`] renormalization, DESIGN.md §2.7), so
+//! `k(n)` stays monotone in `n` for a fixed cap but may step down across a
+//! membership epoch when workers depart — the schedule itself never needs
+//! to know.
 
 /// A monotone threshold schedule.
 #[derive(Clone, Debug, PartialEq)]
@@ -156,6 +161,18 @@ mod tests {
         }
         assert!(Schedule::parse("bogus").is_err());
         assert!(Schedule::parse("step:x").is_err());
+    }
+
+    #[test]
+    fn shrinking_cap_renormalizes_k_without_touching_the_schedule() {
+        // The elastic-membership contract: the same schedule under a
+        // smaller cap (live workers dropped) yields a clamped K, and the
+        // cap restoring recovers the schedule's trajectory exactly.
+        let s = Schedule::Step { step: 10 };
+        assert_eq!(s.k(100, 25), 11);
+        assert_eq!(s.k(100, 4), 4, "cap at live membership");
+        assert_eq!(s.k(100, 25), 11, "schedule state is untouched by the cap");
+        assert_eq!(s.k(100, 1), 1, "a lone survivor runs async");
     }
 
     #[test]

@@ -8,7 +8,7 @@ use super::compress::WireFormat;
 use super::delay::DelayModel;
 use super::metrics::RunMetrics;
 use super::policy::Policy;
-use super::server::{merge_reports, run_shard, Reply, ServerConfig, ShardMsg};
+use super::server::{merge_reports, run_shard, Reply, ServerConfig, ShardEvent};
 use super::shard::{assemble_params, shard_cells, ShardLayout};
 use super::worker::{run_worker, BatchSource, ShardEndpoints, WorkerConfig};
 use crate::data::Dataset;
@@ -105,6 +105,16 @@ pub struct TrainConfig {
     /// alternative to a wall-clock budget, used by the multi-process
     /// acceptance tests to compare runs bitwise.
     pub steps: Option<u64>,
+    /// Elastic membership (`--elastic`): renormalize `K(n)` and sync
+    /// barriers to the live worker set as workers join/leave/crash, so a
+    /// permanent worker loss shrinks the barrier instead of stalling it.
+    /// Off (the default) reproduces the static-membership pipeline
+    /// bitwise.
+    pub elastic: bool,
+    /// Barrier-denominator floor under `elastic` (`--min-quorum`, >= 1):
+    /// the renormalized barrier never drops below this many workers, so a
+    /// depleted run waits for joiners instead of degenerating to K = 1.
+    pub min_quorum: usize,
 }
 
 impl TrainConfig {
@@ -122,6 +132,8 @@ impl TrainConfig {
             shards: 1,
             wire: WireFormat::Dense,
             steps: None,
+            elastic: false,
+            min_quorum: 1,
         }
     }
 }
@@ -158,6 +170,15 @@ pub struct RunInputs<'a> {
 /// For a *fully* deterministic single-threaded run of the same pipeline in
 /// virtual time, see [`super::sim::simulate`].
 pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics> {
+    if cfg.elastic {
+        anyhow::ensure!(
+            cfg.min_quorum <= cfg.workers,
+            "--min-quorum {} can never be met with {} worker slots \
+             (the barrier would stall forever)",
+            cfg.min_quorum,
+            cfg.workers
+        );
+    }
     let clock_owned = RealClock::start();
     let clock: &dyn Clock = &clock_owned;
     let stop = AtomicBool::new(false);
@@ -169,7 +190,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
     let mut grad_txs = Vec::with_capacity(layout.shards());
     let mut grad_rxs = Vec::with_capacity(layout.shards());
     for _ in 0..layout.shards() {
-        let (tx, rx) = mpsc::channel::<ShardMsg>();
+        let (tx, rx) = mpsc::channel::<ShardEvent>();
         grad_txs.push(tx);
         grad_rxs.push(Some(rx));
     }
@@ -189,6 +210,8 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         lr: cfg.lr,
         k_max: cfg.k_max,
         trace_interval: Duration::from_millis(200),
+        elastic: cfg.elastic,
+        min_quorum: cfg.min_quorum,
     };
 
     let mut metrics = RunMetrics::default();
@@ -235,6 +258,13 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
             let init = inputs.init_params.to_vec();
             let stop_ref = &stop;
             let finished_ref = &finished;
+            // Elastic membership: announce a finished worker's departure
+            // to the shard servers (budget spent, engine failure), exactly
+            // as a TCP worker's disconnect does — suppressed once the run
+            // is stopping, since end-of-run exits are not churn. Same
+            // thread as the worker's own sends, so the Leave enqueues
+            // after its last gradient on every shard channel.
+            let leave_txs = if cfg.elastic { grad_txs.clone() } else { Vec::new() };
             worker_handles.push(s.spawn(move || {
                 let report = (|| {
                     let engine = match factory() {
@@ -249,6 +279,11 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
                         crate::transport::InProcTransport::new(endpoints, reply_rx);
                     run_worker(&wcfg, engine, source, init, &mut transport, stop_ref, clock)
                 })();
+                if !stop_ref.load(Ordering::Relaxed) {
+                    for tx in &leave_txs {
+                        let _ = tx.send(ShardEvent::Leave { worker: id });
+                    }
+                }
                 finished_ref.fetch_add(1, Ordering::Relaxed);
                 report
             }));
@@ -350,6 +385,15 @@ pub fn serve(
     listener: std::net::TcpListener,
     net: &crate::transport::NetOptions,
 ) -> anyhow::Result<RunMetrics> {
+    if cfg.elastic {
+        anyhow::ensure!(
+            cfg.min_quorum <= cfg.workers,
+            "--min-quorum {} can never be met with {} worker slots \
+             (the barrier would stall forever)",
+            cfg.min_quorum,
+            cfg.workers
+        );
+    }
     let clock_owned = RealClock::start();
     let clock: &dyn Clock = &clock_owned;
     let stop = Arc::new(AtomicBool::new(false));
@@ -360,7 +404,7 @@ pub fn serve(
     let mut grad_txs = Vec::with_capacity(layout.shards());
     let mut grad_rxs = Vec::with_capacity(layout.shards());
     for _ in 0..layout.shards() {
-        let (tx, rx) = mpsc::channel::<ShardMsg>();
+        let (tx, rx) = mpsc::channel::<ShardEvent>();
         grad_txs.push(tx);
         grad_rxs.push(Some(rx));
     }
@@ -382,6 +426,8 @@ pub fn serve(
         lr: cfg.lr,
         k_max: cfg.k_max,
         trace_interval: Duration::from_millis(200),
+        elastic: cfg.elastic,
+        min_quorum: cfg.min_quorum,
     };
 
     let listen_addr = listener.local_addr()?;
@@ -394,6 +440,7 @@ pub fn serve(
         delayed_flags,
         Arc::clone(&stop),
         net.clone(),
+        cfg.elastic,
     )?;
     log_info!(
         "trainer",

@@ -18,7 +18,7 @@ use super::clock::Clock;
 use super::compress::{submission_bytes, GradEncoder, ShardGrad, WireFormat};
 use super::delay::DelayModel;
 use super::params::SnapshotCell;
-use super::server::{Reply, ShardMsg};
+use super::server::{Reply, ShardEvent, ShardMsg};
 use super::shard::ShardLayout;
 use crate::data::tokens::TokenBatcher;
 use crate::data::Batcher;
@@ -92,8 +92,9 @@ pub struct WorkerConfig {
 /// The worker's view of the sharded parameter server.
 pub struct ShardEndpoints {
     pub layout: ShardLayout,
-    /// One gradient channel per shard, in shard order.
-    pub grad_txs: Vec<Sender<ShardMsg>>,
+    /// One gradient channel per shard, in shard order (the worker only
+    /// ever sends `ShardEvent::Grad`; membership events are server-side).
+    pub grad_txs: Vec<Sender<ShardEvent>>,
     /// One snapshot cell per shard, in shard order.
     pub cells: Vec<Arc<SnapshotCell>>,
 }
@@ -306,6 +307,13 @@ mod tests {
         y: Vec<i32>,
     }
 
+    fn expect_grad(ev: ShardEvent) -> ShardMsg {
+        match ev {
+            ShardEvent::Grad(m) => m,
+            _ => panic!("expected a gradient event"),
+        }
+    }
+
     impl BatchSource for ConstSource {
         fn next(&mut self) -> (&[f32], &[i32]) {
             (&self.x, &self.y)
@@ -314,7 +322,7 @@ mod tests {
 
     #[test]
     fn worker_submits_and_refreshes_from_snapshots() {
-        let (gtx, grx) = mpsc::channel::<ShardMsg>();
+        let (gtx, grx) = mpsc::channel::<ShardEvent>();
         let (rtx, rrx) = mpsc::channel::<Reply>();
         let stop = Arc::new(AtomicBool::new(false));
         let cfg = WorkerConfig {
@@ -346,7 +354,7 @@ mod tests {
         });
         // Act as the shard server for 3 round trips, publishing snapshots.
         for i in 0..3u64 {
-            let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let msg = expect_grad(grx.recv_timeout(Duration::from_secs(2)).unwrap());
             assert_eq!(msg.worker, 0);
             assert_eq!(msg.base_version, i);
             drop(msg); // release the shared buffer like a real shard
@@ -368,7 +376,7 @@ mod tests {
 
     #[test]
     fn unchanged_replies_skip_refresh() {
-        let (gtx, grx) = mpsc::channel::<ShardMsg>();
+        let (gtx, grx) = mpsc::channel::<ShardEvent>();
         let (rtx, rrx) = mpsc::channel::<Reply>();
         let stop = Arc::new(AtomicBool::new(false));
         let cfg = WorkerConfig {
@@ -398,7 +406,7 @@ mod tests {
             run_worker(&cfg, engine, source, vec![0.0, 0.0], &mut transport, &stop2, &clock)
         });
         for _ in 0..2 {
-            let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let msg = expect_grad(grx.recv_timeout(Duration::from_secs(2)).unwrap());
             assert_eq!(msg.base_version, 0, "worker must keep version 0");
             drop(msg);
             rtx.send(Reply::Unchanged { shard: 0 }).unwrap();
@@ -418,7 +426,7 @@ mod tests {
     #[test]
     fn compressed_worker_sends_sparse_payloads_and_counts_bytes() {
         use crate::coordinator::compress::KSpec;
-        let (gtx, grx) = mpsc::channel::<ShardMsg>();
+        let (gtx, grx) = mpsc::channel::<ShardEvent>();
         let (rtx, rrx) = mpsc::channel::<Reply>();
         let stop = Arc::new(AtomicBool::new(false));
         let cfg = WorkerConfig {
@@ -448,7 +456,7 @@ mod tests {
             run_worker(&cfg, engine, source, vec![0.0, 0.0], &mut transport, &stop2, &clock)
         });
         for _ in 0..3 {
-            let msg = grx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let msg = expect_grad(grx.recv_timeout(Duration::from_secs(2)).unwrap());
             match &msg.grad {
                 crate::coordinator::compress::ShardGrad::Sparse(s) => {
                     assert_eq!(s.idx.len(), 1, "top-1 payload carries one coordinate");

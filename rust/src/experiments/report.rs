@@ -45,6 +45,13 @@ COMMON OPTIONS:
   --steps N                      stop after N gradient submissions per worker
                                  (deterministic budget; --secs stays the hard
                                  deadline). Works threaded, --sim, serve & join.
+  --elastic                      elastic membership: renormalize K(n) and sync
+                                 barriers to the live worker set as workers
+                                 join/leave/crash (train, serve, --sim). The
+                                 sim DSL gains join:+N@T / leave:W@T clauses.
+  --min-quorum N                 barrier-denominator floor under --elastic
+                                 (default 1): the barrier never shrinks below
+                                 N workers; a depleted run waits for joiners.
   --metrics-out FILE             write the run's metrics as JSON (train/serve)
   --quick                        smoke scale (seconds)
   --paper-scale                  the paper's 25 workers x 5 rounds x 100 s
@@ -205,6 +212,8 @@ fn cmd_inspect() -> anyhow::Result<()> {
 /// `serve`, so the two paths cannot drift).
 fn train_config_from(args: &Args, cfg: &ExpConfig) -> anyhow::Result<crate::coordinator::TrainConfig> {
     let policy = Policy::parse(&args.str_or("policy", &format!("hybrid:{}", cfg.schedule())))?;
+    let min_quorum = args.usize_or("min-quorum", 1);
+    anyhow::ensure!(min_quorum >= 1, "--min-quorum must be at least 1");
     Ok(crate::coordinator::TrainConfig {
         policy,
         workers: cfg.workers,
@@ -218,6 +227,8 @@ fn train_config_from(args: &Args, cfg: &ExpConfig) -> anyhow::Result<crate::coor
         shards: cfg.shards,
         wire: cfg.compress.clone(),
         steps: cfg.steps,
+        elastic: args.flag("elastic"),
+        min_quorum,
     })
 }
 
@@ -247,6 +258,13 @@ fn print_run(tc: &crate::coordinator::TrainConfig, m: &crate::coordinator::RunMe
     println!("updates         : {}", m.updates_total);
     println!("flushes         : {}", m.flushes);
     println!("shards          : {}", m.shards);
+    if m.membership_epochs > 0 {
+        println!(
+            "membership      : {} transitions, {} live at end",
+            m.membership_epochs,
+            m.membership.v.last().copied().unwrap_or(0.0)
+        );
+    }
     println!("grads/sec       : {:.1}", m.grads_per_sec());
     println!("mean staleness  : {:.2}", m.mean_staleness);
     if !tc.wire.is_dense() {
@@ -370,9 +388,12 @@ fn workload_batch_source(
     let batch = cfg.batch;
     let seed = cfg.seed;
     std::sync::Arc::new(move |id| {
+        // `% len`: elastic joiners (simulated `join:+N` slots past the
+        // launch complement) reuse a launch worker's data shard, keeping
+        // every launch worker's data identical with or without churn.
         Box::new(crate::data::Batcher::new(
             std::sync::Arc::clone(&train),
-            shards[id].clone(),
+            shards[id % shards.len()].clone(),
             batch,
             crate::util::rng::Pcg64::new(seed, id as u64),
         )) as Box<dyn crate::coordinator::worker::BatchSource>

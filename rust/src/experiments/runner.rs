@@ -254,6 +254,8 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 shards: cfg.shards,
                 wire: cfg.compress.clone(),
                 steps: cfg.steps,
+                elastic: false,
+                min_quorum: 1,
             };
             let inputs = RunInputs {
                 worker_engine: Arc::clone(&workload.worker_engine),

@@ -11,7 +11,8 @@
 //!   buffers.
 //! - [`msg`] — the control-plane message set (`Hello`, `Welcome`,
 //!   `SubmitGrad`, `GradAck`, `SnapshotRequest`, `SnapshotSlice`,
-//!   `Heartbeat`, `Shutdown`) with exhaustive roundtrip encode/decode.
+//!   `Heartbeat`, `Shutdown`, plus the elastic-membership pair `Leave` /
+//!   `Evict` — DESIGN.md §2.7) with exhaustive roundtrip encode/decode.
 //!   Gradient payloads travel shard-local in any
 //!   [`crate::coordinator::compress::WireFormat`].
 //! - [`Transport`] — the worker's view of the parameter server: submit a
@@ -39,7 +40,7 @@ pub use frame::{crc32, decode_frame, encode_frame_into, FrameError, FrameReader,
 pub use msg::{Msg, WireError};
 pub use tcp::{NetOptions, TcpFrontend, TcpTransport};
 
-use crate::coordinator::server::{Reply, ShardMsg};
+use crate::coordinator::server::{Reply, ShardEvent, ShardMsg};
 use crate::coordinator::shard::ShardLayout;
 use crate::coordinator::worker::ShardEndpoints;
 use std::fmt;
@@ -131,7 +132,7 @@ impl Transport for InProcTransport {
 
     fn submit(&mut self, shard: usize, msg: ShardMsg) -> Result<(), TransportError> {
         self.endpoints.grad_txs[shard]
-            .send(msg)
+            .send(ShardEvent::Grad(msg))
             .map_err(|_| TransportError::Closed("shard server channel closed".into()))
     }
 
@@ -163,8 +164,8 @@ mod tests {
     #[test]
     fn inproc_transport_is_the_channel_protocol() {
         let layout = ShardLayout::new(4, 2);
-        let (gtx0, grx0) = mpsc::channel::<ShardMsg>();
-        let (gtx1, grx1) = mpsc::channel::<ShardMsg>();
+        let (gtx0, grx0) = mpsc::channel::<ShardEvent>();
+        let (gtx1, grx1) = mpsc::channel::<ShardEvent>();
         let (rtx, rrx) = mpsc::channel::<Reply>();
         let cells = vec![
             Arc::new(SnapshotCell::new(vec![1.0, 2.0])),
@@ -190,7 +191,10 @@ mod tests {
         )
         .unwrap();
         assert!(grx0.try_recv().is_err());
-        let got = grx1.try_recv().unwrap();
+        let got = match grx1.try_recv().unwrap() {
+            ShardEvent::Grad(m) => m,
+            _ => panic!("expected a gradient event"),
+        };
         assert_eq!(got.base_version, 7);
         drop(got);
         assert_eq!(Arc::strong_count(&shared), 1);

@@ -29,6 +29,8 @@ const TAG_SNAP_REQ: u8 = 5;
 const TAG_SNAP_SLICE: u8 = 6;
 const TAG_HEARTBEAT: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
+const TAG_LEAVE: u8 = 9;
+const TAG_EVICT: u8 = 10;
 
 /// Gradient payload tags (inside `SubmitGrad`).
 const GRAD_DENSE: u8 = 0;
@@ -102,6 +104,16 @@ pub enum Msg {
     Heartbeat { seq: u64 },
     /// Server → client: the run is over; drain and exit cleanly.
     Shutdown,
+    /// Client → server: clean departure of worker `worker`. Under elastic
+    /// membership the server removes the worker from the barrier
+    /// denominator immediately instead of waiting for the heartbeat
+    /// timeout; the slot reopens for late joiners.
+    Leave { worker: u32 },
+    /// Server → client: this worker's slot is gone (reassigned, or the run
+    /// is elastic and the worker was declared dead). Terminal: the client
+    /// must not redial under the old identity — unlike the `Shutdown`
+    /// refusal, which a reconnecting client retries through.
+    Evict { worker: u32 },
 }
 
 /// Typed decode errors for the message layer.
@@ -471,6 +483,14 @@ impl Msg {
                 put_u64(out, *seq);
             }
             Msg::Shutdown => out.push(TAG_SHUTDOWN),
+            Msg::Leave { worker } => {
+                out.push(TAG_LEAVE);
+                put_u32(out, *worker);
+            }
+            Msg::Evict { worker } => {
+                out.push(TAG_EVICT);
+                put_u32(out, *worker);
+            }
         }
     }
 
@@ -527,6 +547,8 @@ impl Msg {
             }
             TAG_HEARTBEAT => Msg::Heartbeat { seq: r.u64()? },
             TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_LEAVE => Msg::Leave { worker: r.u32()? },
+            TAG_EVICT => Msg::Evict { worker: r.u32()? },
             t => return Err(WireError::UnknownMsg(t)),
         };
         r.done()?;
@@ -636,6 +658,22 @@ mod tests {
             Msg::Heartbeat { seq: 12345 }
         ));
         assert!(matches!(roundtrip(&Msg::Shutdown), Msg::Shutdown));
+        // Leave + Evict (elastic membership control plane)
+        assert!(matches!(
+            roundtrip(&Msg::Leave { worker: 6 }),
+            Msg::Leave { worker: 6 }
+        ));
+        assert!(matches!(
+            roundtrip(&Msg::Evict { worker: 2 }),
+            Msg::Evict { worker: 2 }
+        ));
+        // truncated membership messages are typed errors, not panics
+        let mut buf = Vec::new();
+        Msg::Leave { worker: 6 }.encode_into(&mut buf);
+        assert!(matches!(
+            Msg::decode(&buf[..3]),
+            Err(WireError::Truncated { .. })
+        ));
     }
 
     #[test]

@@ -34,7 +34,7 @@ use super::msg::{encode_submit_into, Msg, WORKER_UNASSIGNED};
 use super::{Transport, TransportError};
 use crate::coordinator::compress::ShardGrad;
 use crate::coordinator::params::SnapshotCell;
-use crate::coordinator::server::{Reply, ShardMsg};
+use crate::coordinator::server::{Reply, ShardEvent, ShardMsg};
 use crate::coordinator::shard::ShardLayout;
 use crate::log_warn;
 use std::io::{Read, Write};
@@ -253,12 +253,28 @@ pub struct TcpTransport {
     recv_bytes_prev: u64,
 }
 
+/// Outcome of one attach attempt: an established connection, or the
+/// server's typed terminal refusal (`Msg::Evict` — the requested identity
+/// was reassigned; redialing under it can never succeed). Retryable
+/// failures (dial errors, `Shutdown` refusals, handshake timeouts) stay
+/// `Err`.
+enum Attach {
+    Ok(ClientConn, AttachInfo),
+    Evicted,
+}
+
 impl TcpTransport {
     /// Dial `addr` (with backoff), attach as a new worker and learn the
     /// run's geometry from the server's `Welcome`. `wire_desc` is the
     /// worker's `WireFormat` in display syntax (telemetry/validation).
     pub fn connect(addr: &str, wire_desc: &str, net: NetOptions) -> anyhow::Result<TcpTransport> {
-        let (conn, info) = Self::establish(addr, &net, WORKER_UNASSIGNED, wire_desc)?;
+        let (conn, info) = match Self::establish(addr, &net, WORKER_UNASSIGNED, wire_desc)? {
+            Attach::Ok(conn, info) => (conn, info),
+            Attach::Evicted => anyhow::bail!(
+                "evicted by the server: this worker's slot is gone (reassigned \
+                 to a replacement, or the elastic run declared it dead)"
+            ),
+        };
         let layout = ShardLayout::new(info.dim, info.shards);
         anyhow::ensure!(
             layout.shards() == info.shards,
@@ -291,7 +307,7 @@ impl TcpTransport {
         net: &NetOptions,
         worker: u32,
         wire_desc: &str,
-    ) -> anyhow::Result<(ClientConn, AttachInfo)> {
+    ) -> anyhow::Result<Attach> {
         let mut stream = dial_with_backoff(addr, net.connect_timeout)?;
         stream.set_nodelay(true).ok();
         let mut reader = FrameReader::new();
@@ -335,6 +351,7 @@ impl TcpTransport {
                 Msg::Shutdown => anyhow::bail!(
                     "server refused the attach (no free worker slot, or the run is over)"
                 ),
+                Msg::Evict { .. } => return Ok(Attach::Evicted),
                 Msg::GradAck { .. } | Msg::SnapshotSlice { .. } | Msg::Heartbeat { .. } => {}
                 other => anyhow::bail!("expected Welcome, got {other:?}"),
             }
@@ -358,7 +375,7 @@ impl TcpTransport {
             let interval = net.hb_interval;
             std::thread::spawn(move || heartbeat_loop(write, state, interval))
         };
-        Ok((
+        Ok(Attach::Ok(
             ClientConn {
                 write,
                 acks_rx,
@@ -400,7 +417,14 @@ impl TcpTransport {
                 self.info.worker as u32,
                 &self.wire_desc,
             ) {
-                Ok((conn, info)) => {
+                Ok(Attach::Evicted) => {
+                    // Terminal: the slot belongs to someone else now.
+                    // Redialing under this identity can never succeed.
+                    return Err(TransportError::Closed(
+                        "evicted: the server reassigned this worker's slot".into(),
+                    ));
+                }
+                Ok(Attach::Ok(conn, info)) => {
                     if info.worker != self.info.worker
                         || info.shards != self.info.shards
                         || info.dim != self.info.dim
@@ -442,6 +466,26 @@ impl TcpTransport {
         match self.reconnect() {
             Ok(()) => TransportError::Reconnected,
             Err(e) => e,
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Best-effort clean goodbye: under elastic membership the server
+        // removes this worker from the barrier denominator immediately
+        // instead of waiting out the heartbeat timeout. A dead socket just
+        // means the server finds out the slow way.
+        if !self.dead() && !self.conn.state.shutdown.load(Ordering::Relaxed) {
+            let leave = Msg::Leave {
+                worker: self.info.worker as u32,
+            };
+            let _ = write_msg(
+                &self.conn.write,
+                &leave,
+                &mut self.msg_buf,
+                &mut self.frame_buf,
+            );
         }
     }
 }
@@ -620,6 +664,12 @@ fn client_read_loop(
                                 state.shutdown.store(true, Ordering::Relaxed);
                                 break 'outer;
                             }
+                            Ok(Msg::Evict { .. }) => {
+                                // Terminal like Shutdown: reconnecting
+                                // under the evicted identity is pointless.
+                                state.shutdown.store(true, Ordering::Relaxed);
+                                break 'outer;
+                            }
                             Ok(_) => {} // unexpected control message: ignore
                             Err(e) => {
                                 log_warn!("transport", "client dropping corrupt stream: {e}");
@@ -682,6 +732,19 @@ fn heartbeat_loop(write: Arc<Mutex<TcpStream>>, state: Arc<ConnState>, interval:
 /// One worker slot on the serving side.
 struct Slot {
     attached: bool,
+    /// What the current occupant's `Hello` requested ([`WORKER_UNASSIGNED`]
+    /// for a fresh/replacement worker, the slot id for a reconnect).
+    /// Meaningful only while `attached`.
+    taken_as: u32,
+    /// Whether the current occupant attached *after* the slot had been
+    /// vacated at least once. Together with `taken_as` this classifies a
+    /// busy-slot named re-attach under elastic membership: a fresh
+    /// occupant on a previously vacated slot is a **replacement** (the
+    /// requester is evicted, terminally), anything else is plausibly the
+    /// requester's own not-yet-reaped connection (retryable refusal).
+    taken_after_vacancy: bool,
+    /// Times this slot has been vacated (connection teardowns).
+    vacancies: u64,
     /// Present while no connection owns the slot; the reply pump takes it
     /// and hands it back on disconnect (reconnect support).
     reply_rx: Option<Receiver<Reply>>,
@@ -690,12 +753,16 @@ struct Slot {
 /// Shared state of the serving frontend.
 struct Shared {
     layout: ShardLayout,
-    grad_txs: Vec<Sender<ShardMsg>>,
+    grad_txs: Vec<Sender<ShardEvent>>,
     cells: Vec<Arc<SnapshotCell>>,
     slots: Mutex<Vec<Slot>>,
     delayed: Vec<bool>,
     stop: Arc<AtomicBool>,
     net: NetOptions,
+    /// Elastic membership: report attaches/departures to the shard servers
+    /// as `ShardEvent::Join`/`Leave` and evict (instead of refuse-and-retry)
+    /// a worker whose slot is taken.
+    elastic: bool,
     /// Submission frames received, frame-granularity bytes.
     grad_frame_bytes: AtomicU64,
     /// Distinct submissions seen (shard-0 submit frames).
@@ -731,18 +798,22 @@ impl TcpFrontend {
     pub fn start(
         listener: TcpListener,
         layout: ShardLayout,
-        grad_txs: Vec<Sender<ShardMsg>>,
+        grad_txs: Vec<Sender<ShardEvent>>,
         cells: Vec<Arc<SnapshotCell>>,
         reply_rxs: Vec<Receiver<Reply>>,
         delayed: Vec<bool>,
         stop: Arc<AtomicBool>,
         net: NetOptions,
+        elastic: bool,
     ) -> std::io::Result<TcpFrontend> {
         listener.set_nonblocking(true)?;
         let slots = reply_rxs
             .into_iter()
             .map(|rx| Slot {
                 attached: false,
+                taken_as: WORKER_UNASSIGNED,
+                taken_after_vacancy: false,
+                vacancies: 0,
                 reply_rx: Some(rx),
             })
             .collect();
@@ -754,6 +825,7 @@ impl TcpFrontend {
             delayed,
             stop,
             net,
+            elastic,
             grad_frame_bytes: AtomicU64::new(0),
             submissions: AtomicU64::new(0),
             active_conns: AtomicUsize::new(0),
@@ -873,8 +945,20 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
     };
     let mut msg_buf = Vec::new();
     let mut frame_buf = Vec::new();
-    let assigned = {
+    // Slot assignment. On refusal, `evicted` distinguishes the terminal
+    // case (under elastic membership, a *replacement* worker owns the
+    // requested slot — the requester lost its identity and must not keep
+    // redialing) from the retryable one (the requester's own dead
+    // connection has not been reaped yet, or the run is simply full). A
+    // replacement is recognizable as a fresh (unassigned) attach on a slot
+    // that had been vacated; a first-ever connection that goes half-open
+    // has never vacated its slot, so its owner's redial stays retryable.
+    // (Residual window: a replacement's *own* first blip inside the reap
+    // latency is also classified as eviction — a conservative
+    // over-eviction an elastic run absorbs by admitting a fresh joiner.)
+    let (assigned, evicted) = {
         let mut slots = shared.slots.lock().unwrap();
+        let mut evicted = false;
         let id = if requested == WORKER_UNASSIGNED {
             slots
                 .iter()
@@ -883,20 +967,30 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
             let id = requested as usize;
             match slots.get(id) {
                 Some(s) if !s.attached && s.reply_rx.is_some() => Some(id),
-                // Slot busy (old connection not yet reaped) or unknown:
-                // refuse; the client backs off and redials.
+                Some(s) if s.attached => {
+                    evicted = shared.elastic
+                        && s.taken_as == WORKER_UNASSIGNED
+                        && s.taken_after_vacancy;
+                    None
+                }
                 _ => None,
             }
         };
         if let Some(id) = id {
             slots[id].attached = true;
+            slots[id].taken_as = requested;
+            slots[id].taken_after_vacancy = slots[id].vacancies > 0;
         }
-        id
+        (id, evicted)
     };
     let Some(id) = assigned else {
-        // No slot: polite refusal.
+        let refusal = if evicted {
+            Msg::Evict { worker: requested }
+        } else {
+            Msg::Shutdown
+        };
         let mut s = Mutex::new(stream);
-        let _ = write_msg(&s, &Msg::Shutdown, &mut msg_buf, &mut frame_buf);
+        let _ = write_msg(&s, &refusal, &mut msg_buf, &mut frame_buf);
         let _ = s.get_mut().unwrap().flush();
         return Ok(());
     };
@@ -932,6 +1026,15 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
         dim: shared.layout.dim() as u64,
         delayed: shared.delayed[id],
     });
+    // Elastic membership: announce the attach to every shard before any of
+    // this connection's gradients can reach them (same channel ⇒ FIFO).
+    // Joins are idempotent on the shard side, so founding members and
+    // reconnects are safe to announce unconditionally.
+    if shared.elastic {
+        for tx in &shared.grad_txs {
+            let _ = tx.send(ShardEvent::Join { worker: id });
+        }
+    }
     // --- reply pump: shard replies → GradAck frames; owns the slot's rx ---
     let reply_rx = shared.slots.lock().unwrap()[id]
         .reply_rx
@@ -992,10 +1095,22 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
     drop(out_tx); // writer drains, sends Shutdown if stopping, exits
     let _ = writer.join();
     let rx = pump.join().expect("reply pump panicked");
+    // Elastic membership: the worker is gone — clean goodbye, socket close,
+    // or heartbeat-timeout eviction all look the same from here. Announce
+    // the departure (after the reader exited, so it sequences after every
+    // gradient this connection delivered) *before* freeing the slot, so a
+    // replacement's Join can never overtake this Leave. Suppressed once
+    // the run is stopping: end-of-run disconnects are not churn.
+    if shared.elastic && !shared.stop.load(Ordering::Relaxed) {
+        for tx in &shared.grad_txs {
+            let _ = tx.send(ShardEvent::Leave { worker: id });
+        }
+    }
     {
         let mut slots = shared.slots.lock().unwrap();
         slots[id].reply_rx = Some(rx);
         slots[id].attached = false;
+        slots[id].vacancies += 1;
     }
     shared.active_conns.fetch_sub(1, Ordering::Relaxed);
     result
@@ -1070,12 +1185,12 @@ fn server_read_loop(
                                 shared.submissions.fetch_add(1, Ordering::Relaxed);
                             }
                             if shared.grad_txs[shard]
-                                .send(ShardMsg {
+                                .send(ShardEvent::Grad(ShardMsg {
                                     worker: id,
                                     base_version,
                                     loss,
                                     grad,
-                                })
+                                }))
                                 .is_err()
                             {
                                 return Ok(()); // shards gone: run is over
@@ -1102,6 +1217,10 @@ fn server_read_loop(
                         }
                         Msg::Heartbeat { .. } => {}
                         Msg::Shutdown => return Ok(()), // clean client exit
+                        // Clean departure: the teardown path announces the
+                        // Leave to the shard servers without waiting for
+                        // the socket to die or the heartbeat to lapse.
+                        Msg::Leave { .. } => return Ok(()),
                         Msg::Hello { .. } => {}         // duplicate hello: ignore
                         other => {
                             log_warn!("transport", "worker {id} sent unexpected {other:?}");
@@ -1123,7 +1242,11 @@ fn server_read_loop(
 }
 
 /// The per-connection writer: encodes queued messages, emits heartbeats
-/// when idle, and sends a final `Shutdown` when the run stops.
+/// when idle, and sends a final `Shutdown` when the run stops. Waits in
+/// short slices (like the client's heartbeat ticker) so a dead
+/// connection's teardown — and therefore its slot reap and elastic
+/// `Leave` — is bounded by the poll granularity, not the heartbeat
+/// interval.
 fn server_write_loop(
     stream: TcpStream,
     out_rx: Receiver<Msg>,
@@ -1136,6 +1259,8 @@ fn server_write_loop(
     let mut frame_buf = Vec::new();
     let mut hb_seq = 0u64;
     let mut shutdown_sent = false;
+    let slice = POLL.min(hb_interval);
+    let mut idle = Duration::ZERO;
     loop {
         if conn_dead.load(Ordering::Relaxed) {
             break;
@@ -1146,23 +1271,28 @@ fn server_write_loop(
                 break;
             }
         }
-        match out_rx.recv_timeout(hb_interval) {
+        match out_rx.recv_timeout(slice) {
             Ok(msg) => {
+                idle = Duration::ZERO;
                 if write_msg(&stream, &msg, &mut msg_buf, &mut frame_buf).is_err() {
                     break;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
-                hb_seq += 1;
-                if write_msg(
-                    &stream,
-                    &Msg::Heartbeat { seq: hb_seq },
-                    &mut msg_buf,
-                    &mut frame_buf,
-                )
-                .is_err()
-                {
-                    break;
+                idle += slice;
+                if idle >= hb_interval {
+                    idle = Duration::ZERO;
+                    hb_seq += 1;
+                    if write_msg(
+                        &stream,
+                        &Msg::Heartbeat { seq: hb_seq },
+                        &mut msg_buf,
+                        &mut frame_buf,
+                    )
+                    .is_err()
+                    {
+                        break;
+                    }
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -1197,7 +1327,20 @@ mod tests {
     ) -> (
         TcpFrontend,
         String,
-        Vec<Receiver<ShardMsg>>,
+        Vec<Receiver<ShardEvent>>,
+        Vec<Sender<Reply>>,
+        Arc<AtomicBool>,
+    ) {
+        spawn_frontend_opts(workers, false)
+    }
+
+    fn spawn_frontend_opts(
+        workers: usize,
+        elastic: bool,
+    ) -> (
+        TcpFrontend,
+        String,
+        Vec<Receiver<ShardEvent>>,
         Vec<Sender<Reply>>,
         Arc<AtomicBool>,
     ) {
@@ -1232,9 +1375,39 @@ mod tests {
             vec![false; workers],
             Arc::clone(&stop),
             quick_net(),
+            elastic,
         )
         .unwrap();
         (frontend, addr, grad_rxs, reply_txs, stop)
+    }
+
+    /// Next gradient event from a shard channel (panics on control events).
+    fn recv_grad(rx: &Receiver<ShardEvent>, timeout: Duration) -> ShardMsg {
+        match rx.recv_timeout(timeout).expect("shard event") {
+            ShardEvent::Grad(m) => m,
+            other => panic!("expected a gradient, got a membership event: {:?}", kind(&other)),
+        }
+    }
+
+    /// Next *membership* event from a shard channel, skipping gradients.
+    fn recv_membership(rx: &Receiver<ShardEvent>, timeout: Duration) -> (bool, usize) {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(remaining).expect("membership event") {
+                ShardEvent::Join { worker } => return (true, worker),
+                ShardEvent::Leave { worker } => return (false, worker),
+                ShardEvent::Grad(_) => {}
+            }
+        }
+    }
+
+    fn kind(ev: &ShardEvent) -> &'static str {
+        match ev {
+            ShardEvent::Grad(_) => "grad",
+            ShardEvent::Join { .. } => "join",
+            ShardEvent::Leave { .. } => "leave",
+        }
     }
 
     #[test]
@@ -1266,7 +1439,7 @@ mod tests {
             },
         )
         .unwrap();
-        let msg = grad_rxs[1].recv_timeout(Duration::from_secs(2)).unwrap();
+        let msg = recv_grad(&grad_rxs[1], Duration::from_secs(2));
         assert_eq!(msg.worker, 0);
         assert_eq!(msg.base_version, 3);
         // shard 1's slice of the dense payload (range 2..4), shard-local
@@ -1360,7 +1533,7 @@ mod tests {
             },
         )
         .unwrap();
-        let msg = grad_rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
+        let msg = recv_grad(&grad_rxs[0], Duration::from_secs(2));
         let mut got = vec![0.0f32; 2];
         msg.grad.view(0..2).add_to(&mut got);
         assert_eq!(got, vec![1.0, 2.0]);
@@ -1393,6 +1566,7 @@ mod tests {
                 vec![false],
                 Arc::clone(&stop),
                 quick_net(),
+                false,
             )
             .unwrap();
             std::thread::sleep(Duration::from_millis(400));
@@ -1503,9 +1677,185 @@ mod tests {
             },
         )
         .unwrap();
-        let msg = grad_rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
+        let msg = recv_grad(&grad_rxs[0], Duration::from_secs(2));
         assert_eq!(msg.worker, 0);
         drop(t);
+        frontend.shutdown();
+    }
+
+    /// Attach with retry: a slot freed by a departure reopens within one
+    /// teardown (~the poll granularity), but a dial can race it — retry a
+    /// refused attach briefly instead of flaking.
+    fn connect_when_slot_frees(addr: &str, net: NetOptions) -> TcpTransport {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match TcpTransport::connect(addr, "dense", net.clone()) {
+                Ok(t) => return t,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "slot never freed: {e:#}");
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+
+    /// Raw handshake helper for the elastic tests: dial, send `Hello`,
+    /// return the stream and the server's reply.
+    fn raw_attach(addr: &str, worker: u32) -> (TcpStream, Msg) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut reader = FrameReader::new();
+        let mut payload = Vec::new();
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        Msg::Hello {
+            worker,
+            shards: 0,
+            wire: "dense".into(),
+        }
+        .encode_into(&mut msg_buf);
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        let reply = read_msg_blocking(&mut s, &mut reader, &mut payload, deadline).unwrap();
+        (s, reply)
+    }
+
+    #[test]
+    fn elastic_attach_and_clean_leave_announce_membership_to_every_shard() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_frontend_opts(2, true);
+        let t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        // The attach is announced as a Join on every shard channel.
+        for rx in &grad_rxs {
+            assert_eq!(recv_membership(rx, Duration::from_secs(2)), (true, 0));
+        }
+        // Dropping the transport sends a clean `Leave` frame: the shard
+        // servers hear about the departure without waiting out the
+        // heartbeat timeout.
+        drop(t);
+        for rx in &grad_rxs {
+            assert_eq!(recv_membership(rx, Duration::from_secs(2)), (false, 0));
+        }
+        // The slot reopened: a replacement attaches as worker 0 again.
+        let t2 = connect_when_slot_frees(&addr, quick_net());
+        assert_eq!(t2.attach_info().worker, 0);
+        for rx in &grad_rxs {
+            assert_eq!(recv_membership(rx, Duration::from_secs(2)), (true, 0));
+        }
+        drop(t2);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn half_open_worker_parked_at_a_barrier_is_evicted_after_heartbeat_timeout() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // The ISSUE-5 unit case: a worker attaches, submits one gradient
+        // (server-side it may now be parked at a barrier), then goes
+        // silent — no heartbeats, socket held open (half-open). The
+        // frontend must evict it (Leave event to every shard) after the
+        // heartbeat timeout instead of waiting on it forever.
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_frontend_opts(1, true);
+        let (mut s, reply) = raw_attach(&addr, WORKER_UNASSIGNED);
+        assert!(matches!(reply, Msg::Welcome { worker: 0, .. }));
+        assert_eq!(
+            recv_membership(&grad_rxs[0], Duration::from_secs(2)),
+            (true, 0)
+        );
+        // One submission, then silence.
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        encode_submit_into(
+            0,
+            0,
+            0,
+            0.5,
+            &ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            0..2,
+            &mut msg_buf,
+        );
+        // encode_submit_into fills msg_buf with the message; frame it.
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        let grad = recv_grad(&grad_rxs[0], Duration::from_secs(2));
+        assert_eq!(grad.worker, 0);
+        // No heartbeats from us: the server declares the connection
+        // half-open after its 400 ms quick_net timeout and evicts.
+        let start = Instant::now();
+        let (join, worker) = recv_membership(&grad_rxs[0], Duration::from_secs(5));
+        assert!(!join, "expected an eviction Leave, got a Join");
+        assert_eq!(worker, 0);
+        assert!(
+            start.elapsed() >= Duration::from_millis(200),
+            "evicted before the heartbeat timeout could plausibly elapse"
+        );
+        // The reopened slot admits a replacement while the zombie socket
+        // is still open.
+        let t = connect_when_slot_frees(&addr, quick_net());
+        assert_eq!(t.attach_info().worker, 0);
+        drop(t);
+        drop(s);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn zombie_reattach_to_a_reassigned_slot_is_evicted_not_retried() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // One slot, elastic. The original worker departs (vacating the
+        // slot) and a replacement (fresh attach) takes it; the previous
+        // owner redialing under its old id must get a terminal Evict —
+        // not the retryable Shutdown refusal.
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_frontend_opts(1, true);
+        let original = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(original.attach_info().worker, 0);
+        drop(original); // vacates the slot (clean Leave)
+        let replacement = connect_when_slot_frees(&addr, quick_net());
+        assert_eq!(replacement.attach_info().worker, 0);
+        let (_s, reply) = raw_attach(&addr, 0);
+        assert!(
+            matches!(reply, Msg::Evict { worker: 0 }),
+            "expected Evict, got {reply:?}"
+        );
+        drop(replacement);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn first_blip_named_redial_is_retryable_even_under_elastic() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // A worker whose very first connection is still attached (e.g.
+        // half-open, not yet reaped) redials under its assigned id. The
+        // slot was never vacated, so this is plausibly the worker's own
+        // connection: the refusal must stay the retryable Shutdown — an
+        // Evict here would turn every transient blip into a dead worker.
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_frontend_opts(1, true);
+        let holder = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(holder.attach_info().worker, 0);
+        let (_s, reply) = raw_attach(&addr, 0);
+        assert!(
+            matches!(reply, Msg::Shutdown),
+            "expected a retryable Shutdown, got {reply:?}"
+        );
+        drop(holder);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn static_frontend_still_refuses_with_retryable_shutdown() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // elastic off: the busy-slot refusal stays a Shutdown (the
+        // reconnect path depends on retrying through it) and no membership
+        // events reach the shard channels.
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_frontend(1);
+        let holder = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(holder.attach_info().worker, 0);
+        let (_s, reply) = raw_attach(&addr, 0);
+        assert!(matches!(reply, Msg::Shutdown), "expected Shutdown, got {reply:?}");
+        assert!(
+            grad_rxs[0].try_recv().is_err(),
+            "static frontend must not emit membership events"
+        );
+        drop(holder);
         frontend.shutdown();
     }
 }

@@ -57,9 +57,11 @@ pub fn inputs_for(fx: &Fixture, workers: usize) -> RunInputs<'_> {
             Ok(Box::new(MlpEngine::new(dims2.clone(), 50)) as Box<dyn GradEngine>)
         }),
         batch_source: Arc::new(move |id| {
+            // `% len`: elastic joiners (ids past the launch complement)
+            // reuse a launch worker's data shard; launch ids unaffected.
             Box::new(Batcher::new(
                 Arc::clone(&train_arc),
-                data_shards[id].clone(),
+                data_shards[id % data_shards.len()].clone(),
                 batch,
                 Pcg64::new(11, id as u64),
             )) as Box<dyn BatchSource>

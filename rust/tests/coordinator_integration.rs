@@ -35,6 +35,8 @@ fn train_cfg(
         shards,
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
         steps: None,
+        elastic: false,
+        min_quorum: 1,
     }
 }
 

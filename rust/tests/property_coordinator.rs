@@ -720,6 +720,241 @@ fn prop_hybrid_mode_monotone_under_any_fault_scenario() {
     });
 }
 
+/// Elastic-membership chaos property (ISSUE 5): under *arbitrary* seeded
+/// join/leave/crash/restart scenarios, per shard —
+/// 1. the threshold K never exceeds live membership (quorum-floored),
+/// 2. K is monotone non-decreasing *within* a membership epoch (it may
+///    only step down when a departure renormalizes the cap),
+/// 3. arrivals never run backwards, and
+/// 4. every accepted gradient is applied exactly once: at every quiescent
+///    point `applied + buffered == arrivals` (no loss, no double-apply
+///    across evictions), with the end-of-run drain flushing the rest.
+#[test]
+fn prop_elastic_membership_k_bounded_and_gradients_conserved() {
+    use hybrid_sgd::coordinator::sim::{Scenario, Simulation};
+    use hybrid_sgd::coordinator::worker::BatchSource;
+    use hybrid_sgd::coordinator::{EvalSet, RunInputs};
+    use hybrid_sgd::engine::factory;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    struct NullSource;
+    impl BatchSource for NullSource {
+        fn next(&mut self) -> (&[f32], &[i32]) {
+            (&[], &[])
+        }
+    }
+
+    check("elastic-k-bounded-conserved", 25, |g| {
+        let workers = g.usize_in(2, 5);
+        let shards = g.usize_in(1, 3);
+        let dim = g.usize_in(shards.max(4), 20);
+        let secs = 2.0f64;
+        let min_quorum = g.usize_in(1, 2);
+
+        // Random membership churn plus the classic fault cocktail, in the
+        // user-facing DSL. Worker-naming clauses stay within the launch
+        // complement; joiners take appended slots.
+        let mut clauses: Vec<String> = Vec::new();
+        clauses.push(format!(
+            "leave:{}@{}",
+            g.usize_in(0, workers - 1),
+            g.f64_in(0.1, 1.2)
+        ));
+        if g.bool() {
+            clauses.push(format!("join:+{}@{}", g.usize_in(1, 2), g.f64_in(0.1, 1.5)));
+        }
+        if g.bool() {
+            clauses.push(format!(
+                "crash:{}@{}",
+                g.usize_in(0, workers - 1),
+                g.f64_in(0.1, 1.5)
+            ));
+        }
+        if g.bool() {
+            let w = g.usize_in(0, workers - 1);
+            let t = g.f64_in(0.2, 1.0);
+            clauses.push(format!("crash:{w}@{t}"));
+            clauses.push(format!("restart:{w}@{}", t + g.f64_in(0.1, 0.8)));
+        }
+        if g.bool() {
+            let s = g.usize_in(0, shards - 1);
+            let a = g.f64_in(0.0, 1.0);
+            let b = a + g.f64_in(0.05, 0.5);
+            clauses.push(format!("stall:{s}@{a}..{b}"));
+        }
+
+        let spec = format!(
+            "workers={workers} shards={shards} policy=hybrid{}:{} secs={secs} \
+             seed={} grad-ms=20 lr=0.05 elastic=on quorum={min_quorum} faults={}",
+            if g.bool() { "-strict" } else { "" },
+            random_schedule(g),
+            g.rng.below(1 << 20),
+            clauses.join(","),
+        );
+        let scn = Scenario::parse(&spec).map_err(|e| format!("scenario `{spec}`: {e:#}"))?;
+
+        let init = g.vec_f32(dim, 1.0);
+        let eval = EvalSet {
+            x: vec![0.0],
+            y: vec![0],
+            n: 1,
+            x_dim: 1,
+            y_dim: 1,
+        };
+        let target = vec![1.0f32; dim];
+        let t2 = target.clone();
+        let inputs = RunInputs {
+            worker_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(target.clone(), 1, 0.0, 0))
+                    as Box<dyn GradEngine>)
+            }),
+            eval_engine: factory(move || {
+                Ok(Box::new(QuadraticEngine::new(t2.clone(), 1, 0.0, 0)) as Box<dyn GradEngine>)
+            }),
+            batch_source: Arc::new(|_| Box::new(NullSource) as Box<dyn BatchSource>),
+            init_params: &init,
+            test: &eval,
+            train_probe: &eval,
+        };
+
+        let mut sim =
+            Simulation::new(&scn, &inputs).map_err(|e| format!("sim init `{spec}`: {e:#}"))?;
+        let n_shards = sim.shard_count();
+        let mut last_k = vec![0usize; n_shards];
+        let mut last_epoch = vec![0u64; n_shards];
+        let mut last_arrivals = vec![0u64; n_shards];
+        let mut t = Duration::ZERO;
+        let end = Duration::from_secs_f64(secs);
+        while t < end {
+            t += Duration::from_millis(100);
+            sim.run_until(t).map_err(|e| format!("sim step: {e:#}"))?;
+            for s in 0..n_shards {
+                let k = sim.current_k(s);
+                let live = sim.shard_live(s);
+                let epoch = sim.shard_membership_epoch(s);
+                let bound = live.max(min_quorum).max(1);
+                prop_assert!(
+                    k <= bound,
+                    "shard {s}: K={k} exceeds live membership {live} \
+                     (quorum {min_quorum}) at {t:?} (`{spec}`)"
+                );
+                prop_assert!(
+                    epoch >= last_epoch[s],
+                    "shard {s}: membership epoch went backwards (`{spec}`)"
+                );
+                if epoch == last_epoch[s] {
+                    prop_assert!(
+                        k >= last_k[s],
+                        "shard {s}: K reverted {} -> {k} within membership epoch \
+                         {epoch} at {t:?} (`{spec}`)",
+                        last_k[s]
+                    );
+                }
+                let a = sim.arrivals(s);
+                prop_assert!(
+                    a >= last_arrivals[s],
+                    "shard {s}: arrivals went backwards (`{spec}`)"
+                );
+                // Exactly-once conservation at a quiescent point.
+                let applied = sim.applied(s);
+                let buffered = sim.buffered(s) as u64;
+                prop_assert!(
+                    applied + buffered == a,
+                    "shard {s}: {applied} applied + {buffered} buffered != \
+                     {a} arrivals at {t:?} (`{spec}`)"
+                );
+                last_k[s] = k;
+                last_epoch[s] = epoch;
+                last_arrivals[s] = a;
+            }
+        }
+        // Every shard applied the identical membership sequence.
+        for s in 1..n_shards {
+            prop_assert!(
+                sim.shard_membership_epoch(s) == sim.shard_membership_epoch(0),
+                "shards disagree on membership epochs (`{spec}`)"
+            );
+            prop_assert!(
+                sim.shard_live(s) == sim.shard_live(0),
+                "shards disagree on live membership (`{spec}`)"
+            );
+        }
+        // The drain applies everything still buffered: nothing lost.
+        let arrivals0 = sim.arrivals(0);
+        let m = sim.finish().map_err(|e| format!("finish: {e:#}"))?;
+        prop_assert!(
+            m.gradients_total >= arrivals0,
+            "finish lost arrivals (`{spec}`)"
+        );
+        Ok(())
+    });
+}
+
+/// DSL fuzz for the membership clauses: every generated `join`/`leave`
+/// clause round-trips Display↔parse bitwise (alongside the classic fault
+/// clauses), and near-miss garbage always yields a typed error — never a
+/// panic.
+#[test]
+fn prop_membership_clause_dsl_roundtrips_and_rejects_garbage() {
+    use hybrid_sgd::coordinator::sim::FaultPlan;
+
+    check("membership-dsl-roundtrip", 150, |g| {
+        // A random clause list mixing membership churn with the existing
+        // fault kinds.
+        let mut clauses: Vec<String> = Vec::new();
+        for _ in 0..g.usize_in(1, 6) {
+            let t = g.f64_in(0.0, 30.0);
+            clauses.push(match g.rng.below(5) {
+                0 => format!("join:+{}@{t}", g.usize_in(1, 9)),
+                1 => format!("leave:{}@{t}", g.usize_in(0, 12)),
+                2 => format!("crash:{}@{t}", g.usize_in(0, 12)),
+                3 => format!("restart:{}@{t}", g.usize_in(0, 12)),
+                _ => {
+                    let b = t + g.f64_in(0.1, 5.0);
+                    format!("slow:*@{t}..{b}*{}", g.f64_in(1.1, 9.0))
+                }
+            });
+        }
+        let spec = clauses.join(",");
+        let plan = FaultPlan::parse(&spec).map_err(|e| format!("`{spec}`: {e:#}"))?;
+        // Display → parse is bitwise the identity (the logging/replay
+        // contract).
+        let logged = plan.to_string();
+        let replay =
+            FaultPlan::parse(&logged).map_err(|e| format!("replay `{logged}`: {e:#}"))?;
+        prop_assert!(replay == plan, "`{spec}` -> `{logged}` changed the plan");
+        prop_assert!(
+            replay.to_string() == logged,
+            "Display is not a fixed point for `{logged}`"
+        );
+
+        // Near-miss garbage: mutate one byte of a valid clause list. Parse
+        // may still succeed (many mutations stay valid) but must never
+        // panic, and the documented malformed shapes always error.
+        let mut bytes = logged.clone().into_bytes();
+        if !bytes.is_empty() {
+            let i = g.rng.below(bytes.len() as u64) as usize;
+            bytes[i] = b"@+:.,*x0"[g.rng.below(8) as usize];
+            if let Ok(mutated) = String::from_utf8(bytes) {
+                let _ = FaultPlan::parse(&mutated); // must not panic
+            }
+        }
+        for bad in [
+            format!("join:{}@1", g.usize_in(1, 9)), // missing '+'
+            "join:+0@1".to_string(),
+            format!("leave:*@{}", g.f64_in(0.0, 9.0)),
+            format!("join:+{}@", g.usize_in(1, 9)),
+        ] {
+            prop_assert!(
+                FaultPlan::parse(&bad).is_err(),
+                "`{bad}` should be a typed error"
+            );
+        }
+        Ok(())
+    });
+}
+
 /// Strict hybrid at K = W with exactly one outstanding gradient per worker
 /// behaves like sync: every flush contains W distinct workers.
 #[test]

@@ -164,6 +164,90 @@ fn dropped_and_duplicated_submissions_are_accounted() {
     );
 }
 
+/// ISSUE-5 regression, the scenario that motivated elastic membership: a
+/// hybrid run whose schedule has shifted to full sync (strict, K = W) plus
+/// a permanent worker loss. With static membership the barrier can never
+/// be met again — the survivors block forever and the step budget is
+/// unreachable within any virtual-time deadline. With `elastic=on` the
+/// crash *evicts* the worker from the barrier denominator, the buffered
+/// contributions flush, and every survivor completes its full budget.
+#[test]
+fn full_sync_hybrid_survives_permanent_worker_loss_only_with_elastic() {
+    let fx = fixture(41);
+    let inputs = inputs_for(&fx, 3);
+    // hybrid-strict:const:3 at W=3 *is* the sync barrier; secs=6 is the
+    // virtual-time deadline — ample for 40 steps at 5 ms if the run is
+    // live, unreachable if the barrier stalls. The crash lands at ~round
+    // 10, well inside every worker's 40-step budget.
+    let stalled_spec = "workers=3 policy=hybrid-strict:const:3 secs=6 grad-ms=5 steps=40 \
+                        faults=crash:1@0.05";
+    let stalled = simulate(&scenario(stalled_spec), &inputs).unwrap();
+    assert!(
+        stalled.per_worker_grads[0] < 40 && stalled.per_worker_grads[2] < 40,
+        "static membership should stall the survivors at the barrier: {:?}",
+        stalled.per_worker_grads
+    );
+
+    let elastic = simulate(
+        &scenario(&format!("{stalled_spec} elastic=on")),
+        &inputs,
+    )
+    .unwrap();
+    assert_eq!(
+        (elastic.per_worker_grads[0], elastic.per_worker_grads[2]),
+        (40, 40),
+        "elastic membership must let the survivors finish their budget: {:?}",
+        elastic.per_worker_grads
+    );
+    assert!(
+        elastic.updates_total > stalled.updates_total,
+        "renormalized barrier should keep applying updates: {} vs {}",
+        elastic.updates_total,
+        stalled.updates_total
+    );
+    // Membership telemetry: the crash eviction (3 → 2) plus the
+    // survivors' clean budget-spent departures.
+    assert!(elastic.membership_epochs >= 1);
+    assert_eq!(elastic.membership.v[0], 2.0, "first transition is the eviction");
+    let last = *elastic.membership.v.last().unwrap();
+    assert!(last < 2.0, "departures must show in the trajectory");
+    // And the chaos run replays bitwise like every other scenario.
+    let again = simulate(
+        &scenario(&format!("{stalled_spec} elastic=on")),
+        &inputs,
+    )
+    .unwrap();
+    assert_eq!(elastic, again);
+}
+
+/// Elastic mode with zero churn is *bitwise inert*: no membership events
+/// ever fire, so the entire `RunMetrics` — loss curves, trajectories,
+/// counters, final parameters, membership telemetry — is identical to the
+/// static run, and `elastic=off` is bitwise the default pipeline. The
+/// golden guard that the membership machinery changes nothing until
+/// someone actually leaves.
+#[test]
+fn elastic_without_churn_preserves_the_static_training_trace() {
+    let fx = fixture(42);
+    let inputs = inputs_for(&fx, 4);
+    let base = "workers=4 shards=2 policy=hybrid:step:40 secs=2 seed=3 grad-ms=5 \
+                delay-frac=0.5 delay-std=0.1";
+    let default_run = simulate(&scenario(base), &inputs).unwrap();
+    let explicit_off = simulate(&scenario(&format!("{base} elastic=off")), &inputs).unwrap();
+    assert_eq!(
+        default_run, explicit_off,
+        "elastic=off must be bitwise the default pipeline"
+    );
+    assert_eq!(default_run.membership_epochs, 0);
+    assert!(default_run.membership.is_empty());
+
+    let elastic_on = simulate(&scenario(&format!("{base} elastic=on")), &inputs).unwrap();
+    assert_eq!(
+        elastic_on, default_run,
+        "churn-free elastic must be bitwise identical to the static run"
+    );
+}
+
 /// Crashing a worker under sync starves the barrier (the known sync
 /// fragility the paper argues against); a restart resumes progress.
 #[test]
@@ -378,6 +462,8 @@ fn trainconfig_scenario_equivalence() {
         shards: 1,
         wire: hybrid_sgd::coordinator::WireFormat::Dense,
         steps: None,
+        elastic: false,
+        min_quorum: 1,
     };
     let via_struct = Scenario {
         train: tc,

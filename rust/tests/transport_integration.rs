@@ -194,6 +194,67 @@ fn tcp_topk_two_workers_train_over_localhost() {
     );
 }
 
+/// Elastic membership over TCP (ISSUE 5 acceptance): a full-sync run
+/// survives a permanent worker departure. Worker A spends a 5-step budget
+/// and leaves; with static membership the sync barrier would starve B
+/// forever — under `--elastic` A's clean `Leave` renormalizes the barrier
+/// to the lone survivor, which completes its full 30-step budget solo.
+#[test]
+fn tcp_elastic_sync_survives_early_worker_departure() {
+    let fx = fixture(34);
+    let inputs = inputs_for(&fx, 2);
+    let mut tc = steps_cfg(2, 1, 30);
+    tc.policy = Policy::Sync;
+    tc.elastic = true;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = format!("{}", listener.local_addr().unwrap());
+    let net = quick_net();
+    let m = std::thread::scope(|s| {
+        let tc_ref = &tc;
+        let inputs_ref = &inputs;
+        let net_ref = &net;
+        let server = s.spawn(move || serve(tc_ref, inputs_ref, listener, net_ref));
+        let mut joins = Vec::new();
+        for steps in [5u64, 30] {
+            let addr = addr.clone();
+            let net = net.clone();
+            let engine = std::sync::Arc::clone(&inputs.worker_engine);
+            let source = std::sync::Arc::clone(&inputs.batch_source);
+            let handle = s.spawn(move || {
+                join_remote(
+                    &addr,
+                    &net,
+                    WireFormat::Dense,
+                    DelayModel::none(),
+                    5,
+                    Duration::ZERO,
+                    Some(steps),
+                    Duration::from_secs(60),
+                    engine,
+                    source,
+                    Some(2),
+                )
+            });
+            joins.push((steps, handle));
+        }
+        for (steps, j) in joins {
+            let report = j.join().expect("join thread").expect("join_remote");
+            assert_eq!(report.grads_sent, steps, "worker must spend its full budget");
+        }
+        server.join().expect("server thread").expect("serve run")
+    });
+    // 5 joint submissions from A + 30 from B all arrived and were applied:
+    // 5 barrier flushes of 2, then 25 solo flushes of 1 after the barrier
+    // renormalized to the survivor.
+    assert_eq!(m.gradients_total, 35);
+    assert_eq!(m.updates_total, 30);
+    assert_eq!(m.flushes, 30);
+    // Membership telemetry: A's clean budget-spent leave, then B's.
+    assert_eq!(m.membership_epochs, 2);
+    assert_eq!(*m.membership.v.last().unwrap(), 0.0);
+    assert!(m.final_params.iter().all(|p| p.is_finite()));
+}
+
 // ---------------------------------------------------------------------------
 // true multi-process runs via the hybrid-sgd binary
 // ---------------------------------------------------------------------------
@@ -367,6 +428,178 @@ fn multiprocess_dense_tcp_matches_inproc_train_bitwise() {
         "multi-process dense run diverged from the in-process one"
     );
     assert_eq!(b_tcp as u64, b_in as u64 + 40 * DENSE_SUBMIT_OVERHEAD);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ISSUE-5 chaos scenario, end to end across real processes: serve
+/// `--elastic` with 3 worker slots, three `join` processes, SIGKILL one
+/// mid-run, start a replacement that takes the freed slot — the run
+/// completes every surviving worker's step budget, and the membership
+/// epoch count matches the same churn replayed on the virtual-time
+/// simulator (kill ≙ `leave`, replacement ≙ `join:+1`, plus one clean
+/// budget-spent departure per finishing worker).
+#[test]
+fn multiprocess_elastic_chaos_kill_and_replace_matches_sim_epochs() {
+    use hybrid_sgd::coordinator::sim::{simulate, Scenario};
+
+    let dir = std::env::temp_dir().join(format!(
+        "hybrid-sgd-transport-{}-{}",
+        std::process::id(),
+        line!()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let tcp_json = dir.join("chaos.json");
+
+    let chaos_flags = |cmd: &mut Command| {
+        cmd.args([
+            "--quick",
+            "--engine",
+            "native",
+            "--dataset",
+            "random",
+            "--policy",
+            "hybrid:step:20",
+            "--workers",
+            "3",
+            "--steps",
+            "80",
+            "--seed",
+            "7",
+            "--delay-std",
+            "0",
+            "--compute-ms",
+            "10",
+            "--secs",
+            "45",
+        ]);
+    };
+
+    // serve --elastic
+    let (server, addr, drain) = {
+        let mut cmd = bin();
+        cmd.arg("serve").args(["--listen", "127.0.0.1:0", "--elastic"]);
+        chaos_flags(&mut cmd);
+        cmd.args(["--metrics-out", tcp_json.to_str().unwrap()]);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        let mut child = cmd.spawn().expect("spawn serve");
+        let stdout = child.stdout.take().expect("serve stdout");
+        let mut reader = BufReader::new(stdout);
+        let mut addr = None;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut line = String::new();
+        while addr.is_none() {
+            assert!(Instant::now() < deadline, "serve never reported its address");
+            line.clear();
+            let n = reader.read_line(&mut line).expect("read serve stdout");
+            assert!(n > 0, "serve exited before reporting its address");
+            if let Some(rest) = line.strip_prefix("listening") {
+                addr = Some(rest.trim_start_matches(|c| c == ' ' || c == ':').trim().to_string());
+            }
+        }
+        let drain = std::thread::spawn(move || {
+            let mut rest = String::new();
+            let _ = reader.read_to_string(&mut rest);
+            rest
+        });
+        (ChildGuard(child, "serve"), addr.unwrap(), drain)
+    };
+
+    // The victim: spawn first and wait on its stderr for the attach log
+    // line, so the SIGKILL provably lands on a *member* of the run.
+    let mut victim = {
+        let mut cmd = bin();
+        cmd.arg("join").args(["--connect", &addr]);
+        chaos_flags(&mut cmd);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        ChildGuard(cmd.spawn().expect("spawn victim join"), "victim join")
+    };
+    let victim_stderr = victim.0.stderr.take().expect("victim stderr");
+    let mut err_reader = BufReader::new(victim_stderr);
+    {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut line = String::new();
+        loop {
+            assert!(Instant::now() < deadline, "victim never attached");
+            line.clear();
+            let n = err_reader.read_line(&mut line).expect("read victim stderr");
+            assert!(n > 0, "victim exited before attaching");
+            if line.contains("joined") && line.contains("as worker") {
+                break;
+            }
+        }
+    }
+    let err_drain = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = err_reader.read_to_string(&mut rest);
+    });
+
+    // Two survivors.
+    let mut survivors = Vec::new();
+    for _ in 0..2 {
+        let mut cmd = bin();
+        cmd.arg("join").args(["--connect", &addr]);
+        chaos_flags(&mut cmd);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        survivors.push(ChildGuard(cmd.spawn().expect("spawn join"), "join"));
+    }
+
+    // Let the cluster train a little, then SIGKILL the victim mid-run (80
+    // steps at a 10 ms floor run ≥ 800 ms, so 300 ms is mid-budget).
+    std::thread::sleep(Duration::from_millis(300));
+    victim.0.kill().expect("kill victim");
+    let _ = victim.0.wait(); // reap the killed process
+    let _ = err_drain.join();
+    // Give the server a beat to reap the dead connection (it reads the
+    // killed socket's FIN within one poll), then start the replacement,
+    // which must be admitted into the freed slot.
+    std::thread::sleep(Duration::from_millis(200));
+    let replacement = {
+        let mut cmd = bin();
+        cmd.arg("join").args(["--connect", &addr]);
+        chaos_flags(&mut cmd);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        ChildGuard(cmd.spawn().expect("spawn replacement join"), "replacement join")
+    };
+
+    for j in survivors {
+        let (ok, out) = wait_with_deadline(j, Duration::from_secs(60));
+        assert!(ok, "surviving join failed:\n{out}");
+    }
+    let (ok, out) = wait_with_deadline(replacement, Duration::from_secs(60));
+    assert!(ok, "replacement join failed:\n{out}");
+    let (ok, out) = wait_with_deadline(server, Duration::from_secs(60));
+    assert!(ok, "serve failed:\n{out}");
+    let _ = drain.join();
+    drop(victim); // already killed and reaped; the guard's kill is a no-op
+
+    let text = std::fs::read_to_string(&tcp_json).expect("metrics artifact written");
+    let json = hybrid_sgd::util::json::parse(&text).expect("metrics JSON parses");
+    // The two survivors and the replacement completed their full budgets;
+    // the victim contributed whatever it managed before the kill.
+    let grads = json.f64_field("gradients_total").unwrap();
+    assert!(grads >= 240.0, "step budgets not reached: {grads} gradients");
+    assert!(json.f64_field("updates_total").unwrap() > 0.0);
+    let tcp_epochs = json.f64_field("membership_epochs").unwrap() as u64;
+
+    // Replay the same churn on the simulator: one mid-run departure, one
+    // joiner, and a clean budget-spent departure for each of the three
+    // finishing workers — the membership-epoch count must agree.
+    let fx = fixture(35);
+    let inputs = inputs_for(&fx, 3);
+    let scn = Scenario::parse(
+        "workers=3 policy=hybrid:step:20 secs=45 steps=80 grad-ms=10 elastic=on \
+         faults=leave:1@0.5,join:+1@0.6",
+    )
+    .unwrap();
+    let sim = simulate(&scn, &inputs).unwrap();
+    assert_eq!(
+        sim.membership_epochs, 5,
+        "sim churn: kill-leave + replacement-join + 3 budget departures"
+    );
+    assert_eq!(
+        tcp_epochs, sim.membership_epochs,
+        "TCP and simulator disagree on membership epochs"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
