@@ -12,11 +12,14 @@ use hybrid_sgd::coordinator::compress::{
 use hybrid_sgd::coordinator::params::ParamStore;
 use hybrid_sgd::coordinator::{Aggregator, Policy, Schedule, ShardedAggregator};
 use hybrid_sgd::transport::frame::{decode_frame, encode_frame_into};
+use hybrid_sgd::transport::loadgen::measure_conn_throughput;
 use hybrid_sgd::transport::msg::{encode_submit_into, Msg};
+use hybrid_sgd::transport::FrontendKind;
 use hybrid_sgd::util::bench::{black_box, Bencher};
 use hybrid_sgd::util::json::Json;
 use hybrid_sgd::util::rng::Pcg64;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// One wire-format case for the `BENCH_compress.json` baseline.
 struct WireCase {
@@ -258,10 +261,59 @@ fn bench_transport_frames(b: &mut Bencher) -> Vec<TransportCase> {
     cases
 }
 
+/// One (frontend, connection-count) row of the scaling curve.
+struct ConnCase {
+    frontend: &'static str,
+    conns: usize,
+    ops_per_sec: f64,
+    p99_ack_latency_us: f64,
+}
+
+/// Connections-vs-throughput: drive both serving frontends with N
+/// pipelined clients (window 16, dense d=64 submissions against an
+/// echo-ack shard stub) and record aggregate acks/sec plus p99 submit→ack
+/// latency. This is the ISSUE 6 acceptance curve: the reactor must hold
+/// throughput as connections grow while the thread-per-connection
+/// baseline pays context-switch and per-thread-heartbeat costs.
+fn bench_connection_scaling() -> Vec<ConnCase> {
+    println!("\n== connections vs throughput: reactor vs threaded frontend ==");
+    let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+    let counts: &[usize] = if quick { &[2, 8, 32] } else { &[2, 8, 32, 128] };
+    let dur = if quick {
+        Duration::from_millis(150)
+    } else {
+        Duration::from_secs(1)
+    };
+    let mut out = Vec::new();
+    for &conns in counts {
+        for (name, kind) in [
+            ("reactor", FrontendKind::Reactor),
+            ("threaded", FrontendKind::Threaded),
+        ] {
+            match measure_conn_throughput(kind, conns, 16, 64, dur) {
+                Ok(r) => {
+                    println!(
+                        "  {name:>8} conns={conns:<4} {:>12.0} acks/s   p99 {:>8.1} µs",
+                        r.ops_per_sec, r.p99_ack_latency_us
+                    );
+                    out.push(ConnCase {
+                        frontend: name,
+                        conns,
+                        ops_per_sec: r.ops_per_sec,
+                        p99_ack_latency_us: r.p99_ack_latency_us,
+                    });
+                }
+                Err(e) => println!("  {name:>8} conns={conns:<4} skipped: {e}"),
+            }
+        }
+    }
+    out
+}
+
 /// Emit the transport baseline when asked
 /// (`BENCH_TRANSPORT_OUT=../BENCH_transport.json cargo bench --bench
 /// bench_hotpath`; cargo runs bench binaries with cwd = rust/).
-fn write_transport_baseline(cases: &[TransportCase]) {
+fn write_transport_baseline(cases: &[TransportCase], conn_cases: &[ConnCase]) {
     let Ok(path) = std::env::var("BENCH_TRANSPORT_OUT") else {
         return;
     };
@@ -274,6 +326,15 @@ fn write_transport_baseline(cases: &[TransportCase]) {
             ("bytes_per_frame", Json::Num(c.bytes_per_frame as f64)),
         ]));
     }
+    let mut conn_rows = Vec::new();
+    for c in conn_cases {
+        conn_rows.push(Json::from_pairs(vec![
+            ("frontend", Json::Str(c.frontend.to_string())),
+            ("conns", Json::Num(c.conns as f64)),
+            ("ops_per_sec", Json::Num(c.ops_per_sec)),
+            ("p99_ack_latency_us", Json::Num(c.p99_ack_latency_us)),
+        ]));
+    }
     let doc = Json::from_pairs(vec![
         ("bench", Json::Str("bench_hotpath/transport_frames".to_string())),
         (
@@ -281,6 +342,7 @@ fn write_transport_baseline(cases: &[TransportCase]) {
             Json::Bool(std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")),
         ),
         ("cases", Json::Arr(rows)),
+        ("connections_vs_throughput", Json::Arr(conn_rows)),
     ]);
     match std::fs::write(&path, doc.to_string_pretty()) {
         Ok(()) => println!("wrote {path}"),
@@ -405,7 +467,8 @@ fn main() {
     write_compress_baseline(&wire_cases);
 
     let transport_cases = bench_transport_frames(&mut b);
-    write_transport_baseline(&transport_cases);
+    let conn_cases = bench_connection_scaling();
+    write_transport_baseline(&transport_cases, &conn_cases);
 
     b.summary();
     // Headline check: the hybrid PS step on the largest model must be far

@@ -58,4 +58,4 @@ pub use server::ShardEvent;
 pub use shard::{ShardLayout, ShardedAggregator};
 pub use sim::{simulate, FaultPlan, FaultSpec, Scenario, Simulation};
 pub use threshold::Schedule;
-pub use trainer::{join_remote, serve, train, EvalSet, RunInputs, TrainConfig};
+pub use trainer::{join_remote, serve, serve_with, train, EvalSet, RunInputs, TrainConfig};

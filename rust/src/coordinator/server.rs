@@ -97,6 +97,11 @@ pub struct ServerConfig {
     pub elastic: bool,
     /// Barrier-denominator floor under elastic membership (≥ 1).
     pub min_quorum: usize,
+    /// Invoked after every reply send with the destination worker id. The
+    /// reactor frontend installs its wakeup hook here so acks leave within
+    /// one loop iteration instead of a poll tick; `None` (in-process runs,
+    /// the threaded frontend's blocking pumps) changes nothing.
+    pub reply_notify: Option<Arc<dyn Fn(usize) + Send + Sync>>,
 }
 
 /// What one shard thread hands back when the run ends.
@@ -261,7 +266,7 @@ pub fn run_shard(
                             version: store.version(),
                         };
                         for w in blocked.drain(..) {
-                            send(&reply_txs[w], updated);
+                            send(&reply_txs[w], updated, &cfg.reply_notify, w);
                         }
                         k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
                     }
@@ -292,15 +297,20 @@ pub fn run_shard(
                 };
                 match outcome {
                     Outcome::AppliedNow => {
-                        send(&reply_txs[worker], updated);
+                        send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
                     }
                     Outcome::Buffered => {
                         // θ frozen since the last flush: if the worker
                         // already holds this version there is nothing to do.
                         if base_version == store.version() {
-                            send(&reply_txs[worker], Reply::Unchanged { shard });
+                            send(
+                                &reply_txs[worker],
+                                Reply::Unchanged { shard },
+                                &cfg.reply_notify,
+                                worker,
+                            );
                         } else {
-                            send(&reply_txs[worker], updated);
+                            send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
                         }
                     }
                     Outcome::BufferedBlocked => {
@@ -314,9 +324,9 @@ pub fn run_shard(
                                 store.version()
                             );
                         }
-                        send(&reply_txs[worker], updated);
+                        send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
                         for w in blocked.drain(..) {
-                            send(&reply_txs[w], updated);
+                            send(&reply_txs[w], updated, &cfg.reply_notify, w);
                         }
                         k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
                     }
@@ -337,7 +347,7 @@ pub fn run_shard(
                 version: store.version(),
             };
             for w in blocked.drain(..) {
-                send(&reply_txs[w], reply);
+                send(&reply_txs[w], reply, &cfg.reply_notify, w);
             }
             released_on_stop = true;
         }
@@ -369,9 +379,17 @@ pub fn run_shard(
     }
 }
 
-fn send(tx: &Sender<Reply>, reply: Reply) {
+fn send(
+    tx: &Sender<Reply>,
+    reply: Reply,
+    notify: &Option<Arc<dyn Fn(usize) + Send + Sync>>,
+    worker: usize,
+) {
     // A send error means the worker already exited (shutdown race): fine.
     let _ = tx.send(reply);
+    if let Some(n) = notify {
+        n(worker);
+    }
 }
 
 #[cfg(test)]
@@ -404,6 +422,7 @@ mod tests {
             trace_interval: Duration::from_millis(1),
             elastic,
             min_quorum: 1,
+            reply_notify: None,
         };
         for ev in events {
             gtx.send(ev).unwrap();
@@ -583,6 +602,7 @@ mod tests {
             trace_interval: Duration::from_millis(1),
             elastic: false,
             min_quorum: 1,
+            reply_notify: None,
         };
         let stop2 = Arc::clone(&stop);
         let cell = Arc::new(SnapshotCell::new(vec![0.0]));

@@ -212,6 +212,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         trace_interval: Duration::from_millis(200),
         elastic: cfg.elastic,
         min_quorum: cfg.min_quorum,
+        reply_notify: None,
     };
 
     let mut metrics = RunMetrics::default();
@@ -385,6 +386,26 @@ pub fn serve(
     listener: std::net::TcpListener,
     net: &crate::transport::NetOptions,
 ) -> anyhow::Result<RunMetrics> {
+    serve_with(
+        cfg,
+        inputs,
+        listener,
+        net,
+        crate::transport::FrontendKind::Reactor,
+    )
+}
+
+/// [`serve`] with an explicit frontend choice: the event-driven reactor
+/// (default) or the legacy thread-per-connection frontend kept as the
+/// baseline for the connections-vs-throughput comparison. Both speak the
+/// identical wire protocol, so workers cannot tell them apart.
+pub fn serve_with(
+    cfg: &TrainConfig,
+    inputs: &RunInputs,
+    listener: std::net::TcpListener,
+    net: &crate::transport::NetOptions,
+    kind: crate::transport::FrontendKind,
+) -> anyhow::Result<RunMetrics> {
     if cfg.elastic {
         anyhow::ensure!(
             cfg.min_quorum <= cfg.workers,
@@ -420,7 +441,7 @@ pub fn serve(
     let mut delay_rng = Pcg64::new(cfg.seed, 7);
     let delayed_flags = cfg.delay.assign(cfg.workers, &mut delay_rng);
 
-    let server_cfg = ServerConfig {
+    let mut server_cfg = ServerConfig {
         policy: cfg.policy.clone(),
         workers: cfg.workers,
         lr: cfg.lr,
@@ -428,10 +449,12 @@ pub fn serve(
         trace_interval: Duration::from_millis(200),
         elastic: cfg.elastic,
         min_quorum: cfg.min_quorum,
+        reply_notify: None,
     };
 
     let listen_addr = listener.local_addr()?;
-    let frontend = crate::transport::TcpFrontend::start(
+    let frontend = crate::transport::Frontend::start(
+        kind,
         listener,
         layout.clone(),
         grad_txs.clone(),
@@ -442,6 +465,10 @@ pub fn serve(
         net.clone(),
         cfg.elastic,
     )?;
+    // The reactor sleeps in poll(2); replies wake it immediately instead of
+    // waiting out the tick. The threaded frontend's blocking pumps need no
+    // hook and return None here.
+    server_cfg.reply_notify = frontend.reply_notifier();
     log_info!(
         "trainer",
         "serving {} on {listen_addr}: {} shards, {} worker slots",

@@ -65,7 +65,9 @@ MULTI-PROCESS (see EXPERIMENTS.md for the localhost recipe):
   the worker id at attach. Transport tuning: --hb-ms (heartbeat interval,
   default 500), --hb-timeout-ms (half-open cutoff, default 5000),
   --connect-timeout-ms (dial budget incl. backoff, default 10000),
-  --reconnect-attempts (default 2).
+  --reconnect-attempts (default 2). Server side: --frontend reactor|threaded
+  picks the event-driven poll loop (default) or the legacy
+  thread-per-connection frontend (same wire protocol, comparison baseline).
 ";
 
 /// Build an `ExpConfig` from CLI options.
@@ -335,7 +337,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         test: &workload.test,
         train_probe: &workload.probe,
     };
-    let m = crate::coordinator::serve(&tc, &inputs, listener, &net_options(args))?;
+    let kind = crate::transport::FrontendKind::parse(&args.str_or("frontend", "reactor"))?;
+    let m = crate::coordinator::serve_with(&tc, &inputs, listener, &net_options(args), kind)?;
     print_run(&tc, &m);
     write_metrics_out(args, &m)?;
     Ok(())

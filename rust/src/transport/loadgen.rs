@@ -1,0 +1,318 @@
+//! Connections-vs-throughput measurement harness for the serving
+//! frontends (DESIGN.md §2.8, `BENCH_transport.json`'s
+//! `connections_vs_throughput` section).
+//!
+//! One call spins up a frontend of the requested kind over a minimal
+//! single-shard parameter server stub (an echo thread acking every
+//! submission with `Reply::Updated`), drives it with `conns` raw blocking
+//! clients each keeping `window` submissions in flight, and reports
+//! aggregate acks/sec plus the p99 submit→ack latency. The clients speak
+//! the production wire protocol byte-for-byte (Hello → Welcome →
+//! pipelined SubmitGrad/GradAck), so the measurement exercises the real
+//! framing, coalescing and scheduling paths — only the SGD math is
+//! stubbed out.
+//!
+//! Used by `cargo bench`-style runs in `benches/bench_hotpath.rs` and by
+//! the tier-1 baseline filler in `tests/bench_baselines.rs`; it lives in
+//! the library so both see one implementation.
+
+use super::frame::{encode_frame_into, FrameError, FrameReader};
+use super::msg::{encode_submit_into, Msg, WORKER_UNASSIGNED};
+use super::{Frontend, FrontendKind, NetOptions};
+use crate::coordinator::compress::ShardGrad;
+use crate::coordinator::params::SnapshotCell;
+use crate::coordinator::server::{Reply, ShardEvent};
+use crate::coordinator::shard::ShardLayout;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// One row of the scaling curve.
+#[derive(Clone, Copy, Debug)]
+pub struct ConnBenchResult {
+    /// Concurrent client connections driven.
+    pub conns: usize,
+    /// Aggregate acknowledged submissions per second across all clients.
+    pub ops_per_sec: f64,
+    /// 99th-percentile submit→ack round-trip, microseconds.
+    pub p99_ack_latency_us: f64,
+    /// Total acks observed (sanity: > 0 or the row is meaningless).
+    pub acks: u64,
+}
+
+/// Measure one (frontend, connection-count) point: `conns` clients, each
+/// pipelining `window` dense submissions of `dim` f32s over a single
+/// shard, for roughly `duration` of wall clock. Returns aggregate
+/// throughput and tail latency; errors are I/O-environmental (bind/dial
+/// failures), not protocol outcomes.
+pub fn measure_conn_throughput(
+    kind: FrontendKind,
+    conns: usize,
+    window: usize,
+    dim: usize,
+    duration: Duration,
+) -> std::io::Result<ConnBenchResult> {
+    assert!(conns >= 1 && window >= 1 && dim >= 1);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let layout = ShardLayout::new(dim, 1);
+    let (grad_tx, grad_rx) = mpsc::channel::<ShardEvent>();
+    let mut reply_txs = Vec::with_capacity(conns);
+    let mut reply_rxs = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        let (tx, rx) = mpsc::channel::<Reply>();
+        reply_txs.push(tx);
+        reply_rxs.push(rx);
+    }
+    let cells = vec![Arc::new(SnapshotCell::new(vec![0.0f32; dim]))];
+    let stop = Arc::new(AtomicBool::new(false));
+    // Heartbeats stay out of the measurement window: intervals far longer
+    // than any plausible `duration`.
+    let net = NetOptions {
+        hb_interval: Duration::from_secs(60),
+        hb_timeout: Duration::from_secs(300),
+        connect_timeout: Duration::from_secs(5),
+        reconnect_attempts: 0,
+    };
+    let frontend = Frontend::start(
+        kind,
+        listener,
+        layout,
+        vec![grad_tx],
+        cells,
+        reply_rxs,
+        vec![false; conns],
+        Arc::clone(&stop),
+        net,
+        false,
+    )?;
+    let notify = frontend.reply_notifier();
+
+    // Echo "shard server": ack every submission immediately. This is the
+    // stub that isolates transport cost — the real `run_shard` would add
+    // aggregation time identically under both frontends.
+    let echo_stop = Arc::clone(&stop);
+    let echo = std::thread::Builder::new()
+        .name("loadgen-echo".into())
+        .spawn(move || {
+            let mut version = 0u64;
+            loop {
+                match grad_rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(ShardEvent::Grad(m)) => {
+                        version += 1;
+                        let _ = reply_txs[m.worker].send(Reply::Updated { shard: 0, version });
+                        if let Some(n) = &notify {
+                            n(m.worker);
+                        }
+                    }
+                    Ok(_) => {} // Join/Leave: membership noise, not measured
+                    Err(RecvTimeoutError::Timeout) => {
+                        if echo_stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        })
+        .expect("spawn loadgen echo thread");
+
+    // Clients: raw blocking sockets, `window` submissions in flight each.
+    let barrier = Arc::new(Barrier::new(conns));
+    let mut handles = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        let barrier = Arc::clone(&barrier);
+        handles.push(
+            std::thread::Builder::new()
+                .name("loadgen-client".into())
+                .spawn(move || client_run(addr, window, dim, duration, &barrier))
+                .expect("spawn loadgen client thread"),
+        );
+    }
+
+    let mut total_acks = 0u64;
+    let mut max_elapsed = Duration::ZERO;
+    let mut latencies: Vec<Duration> = Vec::new();
+    for h in handles {
+        let stats = h
+            .join()
+            .expect("loadgen client panicked")
+            .map_err(|e| other_err(format!("loadgen client: {e}")))?;
+        total_acks += stats.acks;
+        max_elapsed = max_elapsed.max(stats.elapsed);
+        latencies.extend(stats.latencies);
+    }
+    stop.store(true, Ordering::Relaxed);
+    frontend.shutdown();
+    echo.join().expect("loadgen echo panicked");
+
+    latencies.sort_unstable();
+    let p99 = if latencies.is_empty() {
+        0.0
+    } else {
+        let idx = ((latencies.len() as f64 * 0.99).ceil() as usize)
+            .saturating_sub(1)
+            .min(latencies.len() - 1);
+        latencies[idx].as_secs_f64() * 1e6
+    };
+    let ops = if max_elapsed.is_zero() {
+        0.0
+    } else {
+        total_acks as f64 / max_elapsed.as_secs_f64()
+    };
+    Ok(ConnBenchResult {
+        conns,
+        ops_per_sec: ops,
+        p99_ack_latency_us: p99,
+        acks: total_acks,
+    })
+}
+
+struct ClientStats {
+    acks: u64,
+    elapsed: Duration,
+    latencies: Vec<Duration>,
+}
+
+/// One client: attach, keep `window` submissions in flight for
+/// `duration`, drain the tail, leave. Returns the acks it saw and the
+/// per-submission round-trips.
+fn client_run(
+    addr: std::net::SocketAddr,
+    window: usize,
+    dim: usize,
+    duration: Duration,
+    barrier: &Barrier,
+) -> std::io::Result<ClientStats> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut reader = FrameReader::new();
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+
+    // Attach exactly as TcpTransport does.
+    Msg::Hello {
+        worker: WORKER_UNASSIGNED,
+        shards: 0,
+        wire: "dense".to_string(),
+    }
+    .encode_into(&mut msg_buf);
+    frame_buf.clear();
+    encode_frame_into(&msg_buf, &mut frame_buf);
+    stream.write_all(&frame_buf)?;
+    loop {
+        match read_one(&mut stream, &mut reader)? {
+            Msg::Welcome { .. } => break,
+            Msg::Shutdown | Msg::Evict { .. } => {
+                return Err(other_err("loadgen attach refused".to_string()));
+            }
+            _ => {}
+        }
+    }
+
+    let grad = ShardGrad::Dense(Arc::new(vec![0.25f32; dim]));
+    let mut seq = 0u64;
+    let mut submit = |stream: &mut TcpStream,
+                      msg_buf: &mut Vec<u8>,
+                      frame_buf: &mut Vec<u8>|
+     -> std::io::Result<Instant> {
+        seq += 1;
+        encode_submit_into(0, seq, 0, 0.0, &grad, 0..dim, msg_buf);
+        frame_buf.clear();
+        encode_frame_into(msg_buf, frame_buf);
+        let at = Instant::now();
+        stream.write_all(frame_buf)?;
+        Ok(at)
+    };
+
+    barrier.wait();
+    let start = Instant::now();
+    let mut inflight: VecDeque<Instant> = VecDeque::with_capacity(window);
+    for _ in 0..window {
+        inflight.push_back(submit(&mut stream, &mut msg_buf, &mut frame_buf)?);
+    }
+    let mut acks = 0u64;
+    let mut latencies = Vec::new();
+    let mut sending = true;
+    while !inflight.is_empty() {
+        match read_one(&mut stream, &mut reader)? {
+            Msg::GradAck { .. } => {
+                let sent = inflight.pop_front().expect("ack without a submission");
+                latencies.push(sent.elapsed());
+                acks += 1;
+                if sending && start.elapsed() >= duration {
+                    sending = false;
+                    // Tail drain: bounded read patience from here on.
+                    stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+                }
+                if sending {
+                    inflight.push_back(submit(&mut stream, &mut msg_buf, &mut frame_buf)?);
+                }
+            }
+            Msg::Shutdown => break, // run torn down under us: keep what we have
+            _ => {}                 // heartbeats, snapshot slices: not measured
+        }
+    }
+    let elapsed = start.elapsed();
+    // A clean goodbye lets the frontend free the slot without logging.
+    Msg::Shutdown.encode_into(&mut msg_buf);
+    frame_buf.clear();
+    encode_frame_into(&msg_buf, &mut frame_buf);
+    let _ = stream.write_all(&frame_buf);
+    Ok(ClientStats {
+        acks,
+        elapsed,
+        latencies,
+    })
+}
+
+/// Blocking read of the next whole message on `stream`.
+fn read_one(stream: &mut TcpStream, reader: &mut FrameReader) -> std::io::Result<Msg> {
+    let mut chunk = [0u8; 4096];
+    let mut payload = Vec::new();
+    loop {
+        if reader.next_frame(&mut payload).map_err(frame_err_to_io)? {
+            return Msg::decode(&payload).map_err(|e| other_err(format!("loadgen decode: {e}")));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-measurement",
+            ));
+        }
+        reader.feed(&chunk[..n]);
+    }
+}
+
+fn frame_err_to_io(e: FrameError) -> std::io::Error {
+    other_err(format!("loadgen frame: {e}"))
+}
+
+fn other_err(why: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::Other, why)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke only — real numbers come from the bench harness. Both
+    /// frontends must complete a short window-pipelined run and ack
+    /// every in-flight submission.
+    #[test]
+    fn loadgen_measures_both_frontends() {
+        for kind in [FrontendKind::Reactor, FrontendKind::Threaded] {
+            let r = measure_conn_throughput(kind, 2, 4, 16, Duration::from_millis(60))
+                .expect("loadgen run");
+            assert_eq!(r.conns, 2);
+            assert!(r.acks >= 8, "{kind:?}: too few acks: {}", r.acks);
+            assert!(r.ops_per_sec > 0.0);
+            assert!(r.p99_ack_latency_us > 0.0);
+        }
+    }
+}

@@ -25,27 +25,146 @@
 //!     with reconnect-with-backoff and heartbeat-based half-open
 //!     detection. Byte counters on this path are measured at true frame
 //!     granularity (headers + payload).
-//! - [`tcp::TcpFrontend`] — the server side: an acceptor plus per
-//!   connection reader/writer/reply-pump threads that bridge remote
-//!   workers onto the same `run_shard` channels the in-process stack uses.
+//! - [`reactor::TcpFrontend`] — the server side, and the default: one
+//!   event-driven reactor thread (nonblocking sockets, a `poll(2)` shim,
+//!   vectored coalesced writes, a deadline heap for heartbeats/liveness)
+//!   owns the acceptor and every connection and bridges remote workers
+//!   onto the same `run_shard` channels the in-process stack uses. The
+//!   legacy [`tcp::ThreadedFrontend`] (reader/writer/reply-pump threads
+//!   per connection) speaks the identical wire protocol and remains as
+//!   the scaling baseline; [`Frontend`] / [`FrontendKind`] select between
+//!   them (`serve --frontend reactor|threaded`).
+//! - [`loadgen`] — the connections-vs-throughput measurement harness
+//!   behind `BENCH_transport.json`'s scaling curve.
 //!
 //! Frame layout, versioning rules, heartbeat/reconnect semantics and the
-//! byte-accounting contract are documented in DESIGN.md §2.6.
+//! byte-accounting contract are documented in DESIGN.md §2.6; the reactor
+//! architecture and its wire-bytes-identical invariant in §2.8.
 
 pub mod frame;
+pub mod loadgen;
 pub mod msg;
+pub mod reactor;
 pub mod tcp;
 
 pub use frame::{crc32, decode_frame, encode_frame_into, FrameError, FrameReader, FRAME_OVERHEAD};
 pub use msg::{Msg, WireError};
-pub use tcp::{NetOptions, TcpFrontend, TcpTransport};
+pub use reactor::TcpFrontend;
+pub use tcp::{FrontendStats, NetOptions, ThreadedFrontend, TcpTransport};
 
+use crate::coordinator::params::SnapshotCell;
 use crate::coordinator::server::{Reply, ShardEvent, ShardMsg};
 use crate::coordinator::shard::ShardLayout;
 use crate::coordinator::worker::ShardEndpoints;
 use std::fmt;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Which serving frontend `serve` runs (`--frontend reactor|threaded`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontendKind {
+    /// The event-driven single-thread reactor ([`reactor::TcpFrontend`]).
+    /// The default.
+    Reactor,
+    /// The legacy three-threads-per-connection frontend
+    /// ([`tcp::ThreadedFrontend`]) — the scaling-curve baseline.
+    Threaded,
+}
+
+impl FrontendKind {
+    pub fn parse(s: &str) -> anyhow::Result<FrontendKind> {
+        match s {
+            "reactor" => Ok(FrontendKind::Reactor),
+            "threaded" => Ok(FrontendKind::Threaded),
+            other => anyhow::bail!(
+                "unknown frontend `{other}` (expected `reactor` or `threaded`)"
+            ),
+        }
+    }
+}
+
+/// A running serving frontend of either kind. Both speak the identical
+/// wire protocol over the same `run_shard` channels; only the scheduling
+/// differs (see DESIGN.md §2.8).
+pub enum Frontend {
+    Reactor(reactor::TcpFrontend),
+    Threaded(tcp::ThreadedFrontend),
+}
+
+impl Frontend {
+    /// Start serving on `listener`. Arguments as the frontends' own
+    /// `start`; see [`tcp::ThreadedFrontend::start`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        kind: FrontendKind,
+        listener: TcpListener,
+        layout: ShardLayout,
+        grad_txs: Vec<Sender<ShardEvent>>,
+        cells: Vec<Arc<SnapshotCell>>,
+        reply_rxs: Vec<Receiver<Reply>>,
+        delayed: Vec<bool>,
+        stop: Arc<AtomicBool>,
+        net: NetOptions,
+        elastic: bool,
+    ) -> std::io::Result<Frontend> {
+        match kind {
+            FrontendKind::Reactor => reactor::TcpFrontend::start(
+                listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic,
+            )
+            .map(Frontend::Reactor),
+            FrontendKind::Threaded => tcp::ThreadedFrontend::start(
+                listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic,
+            )
+            .map(Frontend::Threaded),
+        }
+    }
+
+    /// Workers currently connected.
+    pub fn active_conns(&self) -> usize {
+        match self {
+            Frontend::Reactor(f) => f.active_conns(),
+            Frontend::Threaded(f) => f.active_conns(),
+        }
+    }
+
+    /// Workers that have ever completed an attach.
+    pub fn ever_joined(&self) -> usize {
+        match self {
+            Frontend::Reactor(f) => f.ever_joined(),
+            Frontend::Threaded(f) => f.ever_joined(),
+        }
+    }
+
+    /// Gradient-plane byte counters.
+    pub fn stats(&self) -> FrontendStats {
+        match self {
+            Frontend::Reactor(f) => f.stats(),
+            Frontend::Threaded(f) => f.stats(),
+        }
+    }
+
+    /// The reactor's reply-wakeup callback (acks leave within one loop
+    /// iteration instead of a poll tick). `None` for the threaded
+    /// frontend, whose blocking reply pumps need no wakeup.
+    pub fn reply_notifier(&self) -> Option<Arc<dyn Fn(usize) + Send + Sync>> {
+        match self {
+            Frontend::Reactor(f) => Some(f.reply_notifier()),
+            Frontend::Threaded(_) => None,
+        }
+    }
+
+    /// Stop serving: workers receive `Shutdown`, connections close, the
+    /// gradient senders release so the shard servers drain and exit.
+    pub fn shutdown(self) -> FrontendStats {
+        match self {
+            Frontend::Reactor(f) => f.shutdown(),
+            Frontend::Threaded(f) => f.shutdown(),
+        }
+    }
+}
 
 /// Why a transport operation did not complete.
 #[derive(Debug)]

@@ -395,6 +395,19 @@ pub fn encode_submit_into(
     encode_grad_into(grad, range, out);
 }
 
+/// Encode a `SnapshotSlice` without constructing a [`Msg`] — the serving
+/// hot path answers snapshot requests straight out of a cell's published
+/// `Arc<ParamSnapshot>` without cloning θ. Clears and refills `out`;
+/// byte-identical to `Msg::SnapshotSlice { .. }.encode_into(out)`.
+pub fn encode_snapshot_slice_into(shard: u32, version: u64, theta: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.push(TAG_SNAP_SLICE);
+    put_u32(out, shard);
+    put_u64(out, version);
+    put_u32(out, theta.len() as u32);
+    put_f32s(out, theta);
+}
+
 impl Msg {
     /// Encode into `out` (cleared and refilled). For `SubmitGrad` the
     /// payload must already be shard-local (as decoded payloads are); the

@@ -1,0 +1,1578 @@
+//! Event-driven serving frontend: one nonblocking reactor thread owns the
+//! acceptor and every worker connection.
+//!
+//! The threaded frontend ([`super::tcp::ThreadedFrontend`]) spends three
+//! blocking threads per connection (frame reader, frame writer, reply
+//! pump), each waking on a 25 ms poll slice. That is fine for 8 workers
+//! and fatal for the serving story's connection counts: thread stacks,
+//! context switches and the per-slice wakeups all scale linearly with the
+//! worker count. This module replaces them with a single poll loop:
+//!
+//! - **Readiness**: every socket is `set_nonblocking`; one level-triggered
+//!   `poll(2)` call (a hand-rolled FFI-free syscall shim on Linux
+//!   x86_64/aarch64, a short-nap mark-all-ready fallback elsewhere) waits
+//!   on the acceptor, a wakeup pipe and all connections at once.
+//! - **Per-connection state machines**: partial-frame reads accumulate in
+//!   the connection's [`FrameReader`]; outbound frames append into pooled
+//!   buffers on a write queue and many small `GradAck` / `Heartbeat` /
+//!   `SnapshotSlice` frames leave in one `write_vectored` call.
+//! - **Timers**: heartbeat emission and liveness eviction (which also
+//!   bounds the handshake and the refusal-drain) live on a deadline heap
+//!   with generation-checked lazy invalidation, so teardown latency is
+//!   bounded by the timer resolution, not thread-join races.
+//! - **Reply wakeups**: shard servers call the frontend's reply notifier
+//!   after each reply send; the notifier writes one byte into a loopback
+//!   wakeup socket, so acks leave within one reactor iteration instead of
+//!   a blocking pump's poll slice. Without a notifier installed the
+//!   reactor degrades to a 5 ms reply tick.
+//!
+//! **Wire-bytes invariant**: everything observable on the wire — message
+//! set, frame layout, handshake/refusal classification, byte accounting,
+//! elastic Join/Leave ordering — is identical to the threaded frontend;
+//! only scheduling differs. The single deliberate divergence: liveness is
+//! measured from the last *complete frame*, not the last byte, so a
+//! slow-loris peer trickling bytes forever is still evicted at the
+//! heartbeat timeout (the threaded reader counted raw bytes). See
+//! DESIGN.md §2.8.
+
+use super::frame::{encode_frame_into, FrameReader, FRAME_OVERHEAD};
+use super::msg::{encode_snapshot_slice_into, Msg, WORKER_UNASSIGNED};
+use super::tcp::{FrontendStats, NetOptions};
+use crate::coordinator::compress::ShardGrad;
+use crate::coordinator::params::SnapshotCell;
+use crate::coordinator::server::{Reply, ShardEvent, ShardMsg};
+use crate::coordinator::shard::ShardLayout;
+use crate::log_warn;
+use std::collections::{BinaryHeap, VecDeque};
+use std::io::{IoSlice, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Outbound coalescing buffer target: frames append into the queue's tail
+/// buffer until it reaches this size, then a fresh pooled buffer starts.
+/// One oversized frame (a big `SnapshotSlice`) still lands in one buffer.
+const COALESCE_CAP: usize = 256 * 1024;
+/// Upper bound on iovecs per `write_vectored` call (IOV_MAX is ≥ 1024
+/// everywhere we run; 64 keeps the stack array small).
+const MAX_IOVECS: usize = 64;
+/// Reply-channel poll tick used only when no reply notifier is installed
+/// (unit tests drive the slots' reply channels directly).
+const REPLY_TICK: Duration = Duration::from_millis(5);
+/// Poll timeout cap when nothing is due: the stop flag is delivered via
+/// the waker, so this is a safety net, not a latency bound.
+const IDLE_CAP: Duration = Duration::from_millis(500);
+/// Reads per connection per iteration (× 64 KiB chunk): bounds how long
+/// one firehose connection can monopolize the loop.
+const READS_PER_CONN: usize = 8;
+
+// ---------------------------------------------------------------------------
+// poll(2) shim
+// ---------------------------------------------------------------------------
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+/// `struct pollfd`, as the kernel ABI defines it.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::fd::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd<T>(_t: &T) -> i32 {
+    -1
+}
+
+/// Raw `poll(2)` on Linux x86_64 (syscall 7). The kernel writes `revents`,
+/// so the asm block may not claim `nomem`.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sys_poll(fds: &mut [PollFd], timeout_ms: i32) -> isize {
+    let mut ret: isize;
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 7isize => ret,
+            in("rdi") fds.as_mut_ptr(),
+            in("rsi") fds.len(),
+            in("rdx") timeout_ms as isize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret
+}
+
+/// Raw `ppoll` on Linux aarch64 (syscall 73; plain `poll` does not exist
+/// there). Linux may write back the remaining time, hence `&mut ts`.
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sys_poll(fds: &mut [PollFd], timeout_ms: i32) -> isize {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    let mut ts = Timespec {
+        tv_sec: i64::from(timeout_ms) / 1000,
+        tv_nsec: (i64::from(timeout_ms) % 1000) * 1_000_000,
+    };
+    let mut ret: isize;
+    unsafe {
+        core::arch::asm!(
+            "svc 0",
+            inlateout("x0") fds.as_mut_ptr() => ret,
+            in("x1") fds.len(),
+            in("x2") &mut ts as *mut Timespec,
+            in("x3") 0usize, // no signal mask
+            in("x4") 8usize, // sigsetsize
+            in("x8") 73usize,
+            options(nostack),
+        );
+    }
+    ret
+}
+
+/// Wait for readiness. Returns the number of ready fds (0 on timeout or
+/// EINTR — both just mean "nothing to do yet", the loop re-derives its
+/// state every iteration anyway).
+fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> usize {
+    let mut ms = timeout.as_millis().min(60_000) as i32;
+    if ms == 0 && !timeout.is_zero() {
+        ms = 1; // never round a short wait down to a busy spin
+    }
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let ret = sys_poll(fds, ms);
+        if ret < 0 {
+            0
+        } else {
+            ret as usize
+        }
+    }
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        // Portable fallback: a short nap, then report every fd ready. All
+        // handlers tolerate `WouldBlock`, so spurious readiness is merely
+        // inefficient (≤ 1 kHz of no-op syscalls), never incorrect.
+        std::thread::sleep(Duration::from_millis(ms.clamp(0, 1) as u64));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+        fds.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// waker
+// ---------------------------------------------------------------------------
+
+/// Cross-thread wakeup into the poll loop: a loopback TCP pair (std has no
+/// portable pipe) plus a pending flag so back-to-back wakes cost one byte.
+struct Waker {
+    tx: Mutex<TcpStream>,
+    pending: AtomicBool,
+}
+
+impl Waker {
+    /// Build the pair; returns the waker and the reactor-held read end.
+    fn pair() -> std::io::Result<(Arc<Waker>, TcpStream)> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let tx = TcpStream::connect(listener.local_addr()?)?;
+        let (rx, _) = listener.accept()?;
+        rx.set_nonblocking(true)?;
+        tx.set_nonblocking(true)?;
+        tx.set_nodelay(true).ok();
+        Ok((
+            Arc::new(Waker {
+                tx: Mutex::new(tx),
+                pending: AtomicBool::new(false),
+            }),
+            rx,
+        ))
+    }
+
+    fn wake(&self) {
+        if !self.pending.swap(true, Ordering::AcqRel) {
+            let _ = self.tx.lock().unwrap().write(&[1u8]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// buffer pool and timers
+// ---------------------------------------------------------------------------
+
+/// Recycled outbound buffers (the GradEncoder discipline: steady state
+/// allocates nothing, capacity survives the round trip).
+struct BufPool {
+    free: Vec<Vec<u8>>,
+}
+
+impl BufPool {
+    fn new() -> BufPool {
+        BufPool { free: Vec::new() }
+    }
+
+    fn take(&mut self) -> Vec<u8> {
+        match self.free.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    fn put(&mut self, buf: Vec<u8>) {
+        if self.free.len() < 64 && buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum TimerKind {
+    /// Emit a heartbeat if the connection has been idle a full interval.
+    Heartbeat,
+    /// Evict if no complete frame arrived within the heartbeat timeout.
+    /// Armed at accept, so it also bounds the handshake and the drain of a
+    /// refused connection that never reads its refusal.
+    Liveness,
+}
+
+struct TimerEntry {
+    at: Instant,
+    conn: usize,
+    gen: u64,
+    kind: TimerKind,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    // Reversed: BinaryHeap is a max-heap, we want the earliest deadline.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.at.cmp(&self.at)
+    }
+}
+
+/// Deadline heap with generation-checked lazy invalidation: cancelling is
+/// free (the connection's generation moved on), firing checks it.
+struct TimerWheel {
+    heap: BinaryHeap<TimerEntry>,
+}
+
+impl TimerWheel {
+    fn new() -> TimerWheel {
+        TimerWheel {
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    fn arm(&mut self, at: Instant, conn: usize, gen: u64, kind: TimerKind) {
+        self.heap.push(TimerEntry { at, conn, gen, kind });
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    fn pop_due(&mut self, now: Instant) -> Option<TimerEntry> {
+        if self.heap.peek().map_or(false, |e| e.at <= now) {
+            self.heap.pop()
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection state machine
+// ---------------------------------------------------------------------------
+
+enum Phase {
+    /// Accepted, no `Hello` yet: no slot, no worker identity.
+    Handshake,
+    /// Attached to worker slot `worker`; owns its reply channel.
+    Attached { worker: usize },
+    /// Refused: flush the queued refusal, then close.
+    Draining,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Generation for lazy timer invalidation (monotone per slab index).
+    gen: u64,
+    peer: String,
+    phase: Phase,
+    reader: FrameReader,
+    /// Outbound coalescing queue; the front buffer may be partially
+    /// written (`front_written` bytes already on the wire).
+    outq: VecDeque<Vec<u8>>,
+    front_written: usize,
+    reply_rx: Option<Receiver<Reply>>,
+    /// Arrival time of the last complete frame (liveness basis).
+    last_frame: Instant,
+    /// When the next idle heartbeat is due; pushed out by any queued frame.
+    next_hb: Instant,
+    hb_seq: u64,
+}
+
+/// One worker slot — same fields and classification semantics as the
+/// threaded frontend's, minus the mutex (the reactor thread is the only
+/// accessor).
+struct Slot {
+    attached: bool,
+    taken_as: u32,
+    taken_after_vacancy: bool,
+    vacancies: u64,
+    reply_rx: Option<Receiver<Reply>>,
+}
+
+/// Counters shared between the reactor thread and the handle.
+#[derive(Default)]
+struct Counters {
+    grad_frame_bytes: AtomicU64,
+    submissions: AtomicU64,
+    active_conns: AtomicUsize,
+    ever_joined: AtomicUsize,
+    /// A reply notifier was handed out: replies wake the loop, no tick.
+    notifier_taken: AtomicBool,
+}
+
+// ---------------------------------------------------------------------------
+// public handle
+// ---------------------------------------------------------------------------
+
+/// The event-driven serving frontend. Drop-in for the threaded one: same
+/// `start` signature, same wire protocol, one thread total.
+pub struct TcpFrontend {
+    counters: Arc<Counters>,
+    stop: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl TcpFrontend {
+    /// Start serving. Arguments exactly as
+    /// [`super::tcp::ThreadedFrontend::start`]; the frontend owns clones of
+    /// the gradient senders and releases them on [`TcpFrontend::shutdown`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        listener: TcpListener,
+        layout: ShardLayout,
+        grad_txs: Vec<Sender<ShardEvent>>,
+        cells: Vec<Arc<SnapshotCell>>,
+        reply_rxs: Vec<Receiver<Reply>>,
+        delayed: Vec<bool>,
+        stop: Arc<AtomicBool>,
+        net: NetOptions,
+        elastic: bool,
+    ) -> std::io::Result<TcpFrontend> {
+        listener.set_nonblocking(true)?;
+        let (waker, wake_rx) = Waker::pair()?;
+        let counters = Arc::new(Counters::default());
+        let slots = reply_rxs
+            .into_iter()
+            .map(|rx| Slot {
+                attached: false,
+                taken_as: WORKER_UNASSIGNED,
+                taken_after_vacancy: false,
+                vacancies: 0,
+                reply_rx: Some(rx),
+            })
+            .collect();
+        let reactor = Reactor {
+            listener,
+            wake_rx,
+            waker: Arc::clone(&waker),
+            layout,
+            grad_txs,
+            cells,
+            slots,
+            delayed,
+            stop: Arc::clone(&stop),
+            net,
+            elastic,
+            counters: Arc::clone(&counters),
+            conns: Vec::new(),
+            free: Vec::new(),
+            next_gen: 0,
+            timers: TimerWheel::new(),
+            pool: BufPool::new(),
+            chunk: vec![0u8; 64 * 1024],
+            scratch: Vec::new(),
+            payload: Vec::new(),
+            pollfds: Vec::new(),
+            poll_map: Vec::new(),
+            now: Instant::now(),
+        };
+        let thread = std::thread::Builder::new()
+            .name("tcp-reactor".into())
+            .spawn(move || reactor.run())?;
+        Ok(TcpFrontend {
+            counters,
+            stop,
+            waker,
+            thread: Some(thread),
+        })
+    }
+
+    /// Workers currently connected.
+    pub fn active_conns(&self) -> usize {
+        self.counters.active_conns.load(Ordering::Relaxed)
+    }
+
+    /// Workers that have ever completed an attach.
+    pub fn ever_joined(&self) -> usize {
+        self.counters.ever_joined.load(Ordering::Relaxed)
+    }
+
+    /// Gradient-plane byte counters.
+    pub fn stats(&self) -> FrontendStats {
+        FrontendStats {
+            grad_frame_bytes: self.counters.grad_frame_bytes.load(Ordering::Relaxed),
+            submissions: self.counters.submissions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// A callback for the shard servers to invoke after sending a reply:
+    /// wakes the reactor so the ack leaves immediately. Taking it disables
+    /// the fallback reply tick.
+    pub fn reply_notifier(&self) -> Arc<dyn Fn(usize) + Send + Sync> {
+        self.counters.notifier_taken.store(true, Ordering::Relaxed);
+        let waker = Arc::clone(&self.waker);
+        Arc::new(move |_worker: usize| waker.wake())
+    }
+
+    /// Stop serving: live workers receive `Shutdown` (with a bounded flush
+    /// grace), every connection is torn down, and the gradient senders are
+    /// released so the shard servers drain and exit.
+    pub fn shutdown(mut self) -> FrontendStats {
+        self.stop.store(true, Ordering::Relaxed);
+        self.waker.wake();
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for TcpFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.waker.wake();
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the reactor
+// ---------------------------------------------------------------------------
+
+struct Reactor {
+    listener: TcpListener,
+    wake_rx: TcpStream,
+    waker: Arc<Waker>,
+    layout: ShardLayout,
+    grad_txs: Vec<Sender<ShardEvent>>,
+    cells: Vec<Arc<SnapshotCell>>,
+    slots: Vec<Slot>,
+    delayed: Vec<bool>,
+    stop: Arc<AtomicBool>,
+    net: NetOptions,
+    elastic: bool,
+    counters: Arc<Counters>,
+    /// Connection slab; `free` holds vacated indices for reuse.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    next_gen: u64,
+    timers: TimerWheel,
+    pool: BufPool,
+    /// Read scratch (one chunk for all connections — single-threaded).
+    chunk: Vec<u8>,
+    /// Message-encode scratch (body bytes, pre-framing).
+    scratch: Vec<u8>,
+    /// Frame-payload scratch for the incremental decoder.
+    payload: Vec<u8>,
+    pollfds: Vec<PollFd>,
+    /// `pollfds[i + 2]` belongs to connection slab index `poll_map[i]`.
+    poll_map: Vec<usize>,
+    /// Refreshed once per iteration; all timer math uses it.
+    now: Instant,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let timeout = self.poll_timeout();
+            self.build_pollfds();
+            poll_fds(&mut self.pollfds, timeout);
+            self.now = Instant::now();
+            // Clear the wake flag *before* draining reply channels: a
+            // notify arriving after the drain then lands a fresh byte and
+            // the next poll returns immediately — no lost wakeups.
+            self.drain_waker();
+            self.accept_ready();
+            let ready: Vec<usize> = self
+                .poll_map
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| {
+                    self.pollfds[i + 2].revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0
+                })
+                .map(|(_, &idx)| idx)
+                .collect();
+            for idx in ready {
+                self.service_read(idx);
+            }
+            self.drain_replies();
+            self.fire_timers();
+            self.flush_pass();
+        }
+        self.shutdown_conns();
+        // Dropping `self` here releases `grad_txs`: the shard servers see
+        // disconnection exactly as when in-process workers finish.
+    }
+
+    fn poll_timeout(&self) -> Duration {
+        let now = Instant::now();
+        let mut t = IDLE_CAP;
+        if let Some(at) = self.timers.next_deadline() {
+            t = t.min(at.saturating_duration_since(now));
+        }
+        let replies_possible = self.conns.iter().flatten().any(|c| c.reply_rx.is_some());
+        if replies_possible && !self.counters.notifier_taken.load(Ordering::Relaxed) {
+            t = t.min(REPLY_TICK);
+        }
+        t
+    }
+
+    fn build_pollfds(&mut self) {
+        self.pollfds.clear();
+        self.poll_map.clear();
+        self.pollfds.push(PollFd {
+            fd: raw_fd(&self.listener),
+            events: POLLIN,
+            revents: 0,
+        });
+        self.pollfds.push(PollFd {
+            fd: raw_fd(&self.wake_rx),
+            events: POLLIN,
+            revents: 0,
+        });
+        for (idx, conn) in self.conns.iter().enumerate() {
+            if let Some(c) = conn {
+                let mut events = POLLIN;
+                if !c.outq.is_empty() {
+                    events |= POLLOUT;
+                }
+                self.pollfds.push(PollFd {
+                    fd: raw_fd(&c.stream),
+                    events,
+                    revents: 0,
+                });
+                self.poll_map.push(idx);
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        self.waker.pending.store(false, Ordering::Release);
+        let mut buf = [0u8; 64];
+        loop {
+            match self.wake_rx.read(&mut buf) {
+                Ok(0) => break, // waker closed: shutdown imminent
+                Ok(_) => {}
+                Err(_) => break, // WouldBlock (or a real error: fatal later)
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // cannot serve a blocking socket here
+                    }
+                    stream.set_nodelay(true).ok();
+                    let gen = self.next_gen;
+                    self.next_gen += 1;
+                    let idx = match self.free.pop() {
+                        Some(i) => i,
+                        None => {
+                            self.conns.push(None);
+                            self.conns.len() - 1
+                        }
+                    };
+                    self.conns[idx] = Some(Conn {
+                        stream,
+                        gen,
+                        peer: peer.to_string(),
+                        phase: Phase::Handshake,
+                        reader: FrameReader::new(),
+                        outq: VecDeque::new(),
+                        front_written: 0,
+                        reply_rx: None,
+                        last_frame: self.now,
+                        next_hb: self.now + self.net.hb_interval,
+                        hb_seq: 0,
+                    });
+                    // One self-rearming liveness timer per connection: it
+                    // bounds the handshake, steady-state silence and the
+                    // refusal drain alike.
+                    self.timers
+                        .arm(self.now + self.net.hb_timeout, idx, gen, TimerKind::Liveness);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    log_warn!("transport", "accept failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn service_read(&mut self, idx: usize) {
+        let Some(mut conn) = self.conns[idx].take() else {
+            return;
+        };
+        match self.read_conn(&mut conn, idx) {
+            Ok(()) => self.conns[idx] = Some(conn),
+            Err(reason) => self.teardown(conn, idx, &reason),
+        }
+    }
+
+    /// Read until `WouldBlock` (bounded by [`READS_PER_CONN`]), decoding
+    /// and dispatching every complete frame. `Err` means close, with an
+    /// empty reason for clean departures.
+    fn read_conn(&mut self, conn: &mut Conn, idx: usize) -> Result<(), String> {
+        for _ in 0..READS_PER_CONN {
+            let n = match conn.stream.read(&mut self.chunk) {
+                Ok(0) => return Err(String::new()), // peer closed
+                Ok(n) => n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    return Ok(())
+                }
+                Err(e) => return Err(format!("read error: {e}")),
+            };
+            conn.reader.feed(&self.chunk[..n]);
+            loop {
+                match conn.reader.next_frame(&mut self.payload) {
+                    Ok(true) => {
+                        conn.last_frame = self.now;
+                        self.on_frame(conn, idx)?;
+                        if matches!(conn.phase, Phase::Draining) {
+                            // Refused mid-stream: stop decoding, just drain.
+                            return Ok(());
+                        }
+                    }
+                    Ok(false) => break,
+                    Err(e) => return Err(format!("dropping corrupt stream: {e}")),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_frame(&mut self, conn: &mut Conn, idx: usize) -> Result<(), String> {
+        let frame_bytes = (self.payload.len() + FRAME_OVERHEAD) as u64;
+        let msg = Msg::decode(&self.payload).map_err(|e| format!("dropping corrupt stream: {e}"))?;
+        match conn.phase {
+            Phase::Handshake => self.on_hello(conn, idx, msg),
+            Phase::Attached { worker } => self.on_worker_msg(conn, worker, msg, frame_bytes),
+            Phase::Draining => Ok(()), // refused peer still talking: ignore
+        }
+    }
+
+    /// Slot assignment + Welcome, with the exact refusal classification of
+    /// the threaded frontend (see the long comment in `tcp::handle_conn`):
+    /// under elastic membership a fresh occupant on a previously vacated
+    /// slot marks a named re-attach as terminally evicted; anything else
+    /// refuses with the retryable `Shutdown`.
+    fn on_hello(&mut self, conn: &mut Conn, idx: usize, msg: Msg) -> Result<(), String> {
+        let (requested, wire) = match msg {
+            Msg::Hello { worker, wire, .. } => (worker, wire),
+            other => return Err(format!("expected Hello, got {other:?}")),
+        };
+        let mut evicted = false;
+        let id = if requested == WORKER_UNASSIGNED {
+            self.slots
+                .iter()
+                .position(|s| !s.attached && s.reply_rx.is_some())
+        } else {
+            let id = requested as usize;
+            match self.slots.get(id) {
+                Some(s) if !s.attached && s.reply_rx.is_some() => Some(id),
+                Some(s) if s.attached => {
+                    evicted = self.elastic
+                        && s.taken_as == WORKER_UNASSIGNED
+                        && s.taken_after_vacancy;
+                    None
+                }
+                _ => None,
+            }
+        };
+        let Some(id) = id else {
+            let refusal = if evicted {
+                Msg::Evict { worker: requested }
+            } else {
+                Msg::Shutdown
+            };
+            self.queue(conn, &refusal);
+            conn.phase = Phase::Draining;
+            return Ok(());
+        };
+        {
+            let slot = &mut self.slots[id];
+            slot.attached = true;
+            slot.taken_as = requested;
+            slot.taken_after_vacancy = slot.vacancies > 0;
+            conn.reply_rx = Some(
+                slot.reply_rx
+                    .take()
+                    .expect("attached slot lost its reply channel"),
+            );
+        }
+        log_warn!(
+            "transport",
+            "worker {id} attached (wire={wire}, requested={})",
+            if requested == WORKER_UNASSIGNED {
+                "new".to_string()
+            } else {
+                requested.to_string()
+            }
+        );
+        self.counters.active_conns.fetch_add(1, Ordering::Relaxed);
+        self.counters.ever_joined.fetch_add(1, Ordering::Relaxed);
+        // Welcome is queued before the reply channel is first drained, so
+        // stale acks from a previous occupancy can never overtake it.
+        self.queue(
+            conn,
+            &Msg::Welcome {
+                worker: id as u32,
+                workers: self.delayed.len() as u32,
+                shards: self.layout.shards() as u32,
+                dim: self.layout.dim() as u64,
+                delayed: self.delayed[id],
+            },
+        );
+        // Elastic: announce the attach to every shard before any of this
+        // connection's gradients can reach them (same channel ⇒ FIFO).
+        if self.elastic {
+            for tx in &self.grad_txs {
+                let _ = tx.send(ShardEvent::Join { worker: id });
+            }
+        }
+        conn.phase = Phase::Attached { worker: id };
+        self.timers
+            .arm(conn.next_hb, idx, conn.gen, TimerKind::Heartbeat);
+        Ok(())
+    }
+
+    /// Steady-state message dispatch — semantics identical to the threaded
+    /// `server_read_loop`, including the pre-shard geometry validation.
+    fn on_worker_msg(
+        &mut self,
+        conn: &mut Conn,
+        worker: usize,
+        msg: Msg,
+        frame_bytes: u64,
+    ) -> Result<(), String> {
+        match msg {
+            Msg::SubmitGrad {
+                shard,
+                seq: _,
+                base_version,
+                loss,
+                grad,
+            } => {
+                let shard = shard as usize;
+                if shard >= self.layout.shards() {
+                    return Err(format!(
+                        "submit to shard {shard} of {}",
+                        self.layout.shards()
+                    ));
+                }
+                // Reject payloads sized for a different shard geometry
+                // before they reach a shard thread (`ShardGrad::view`'s
+                // size checks are debug-only; a panicking shard thread
+                // would take the whole server down).
+                let expect = self.layout.range(shard).len();
+                let local_len = match &grad {
+                    ShardGrad::DenseLocal(g) => g.len(),
+                    ShardGrad::QuantLocal(q) => q.data.len(),
+                    ShardGrad::Sparse(s) => s.dim,
+                    ShardGrad::SparseQuant(s) => s.dim,
+                    ShardGrad::Dense(g) => g.len(),
+                    ShardGrad::Quant(q) => q.data.len(),
+                };
+                if local_len != expect {
+                    return Err(format!(
+                        "worker {worker} sent a shard-{shard} payload sized {local_len}, \
+                         expected {expect} (geometry mismatch)"
+                    ));
+                }
+                self.counters
+                    .grad_frame_bytes
+                    .fetch_add(frame_bytes, Ordering::Relaxed);
+                if shard == 0 {
+                    self.counters.submissions.fetch_add(1, Ordering::Relaxed);
+                }
+                if self.grad_txs[shard]
+                    .send(ShardEvent::Grad(ShardMsg {
+                        worker,
+                        base_version,
+                        loss,
+                        grad,
+                    }))
+                    .is_err()
+                {
+                    return Err(String::new()); // shards gone: run is over
+                }
+            }
+            Msg::SnapshotRequest { shard, .. } => {
+                let shard = shard as usize;
+                if shard >= self.layout.shards() {
+                    return Err(format!(
+                        "snapshot request for shard {shard} of {}",
+                        self.layout.shards()
+                    ));
+                }
+                let snap = self.cells[shard].load();
+                // Frame straight out of the snapshot — no theta clone.
+                encode_snapshot_slice_into(
+                    shard as u32,
+                    snap.version,
+                    &snap.theta,
+                    &mut self.scratch,
+                );
+                self.queue_scratch(conn);
+            }
+            Msg::Heartbeat { .. } => {}
+            Msg::Shutdown => return Err(String::new()), // clean client exit
+            Msg::Leave { .. } => return Err(String::new()), // clean departure
+            Msg::Hello { .. } => {} // duplicate hello: ignore
+            other => {
+                log_warn!("transport", "worker {worker} sent unexpected {other:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Encode `msg` and append it, framed, onto `conn`'s write queue.
+    fn queue(&mut self, conn: &mut Conn, msg: &Msg) {
+        msg.encode_into(&mut self.scratch);
+        self.queue_scratch(conn);
+    }
+
+    /// Frame `self.scratch` (a message body) onto the write queue,
+    /// coalescing into the tail buffer while it stays under the cap.
+    fn queue_scratch(&mut self, conn: &mut Conn) {
+        if conn.outq.back().map_or(true, |b| b.len() >= COALESCE_CAP) {
+            let buf = self.pool.take();
+            conn.outq.push_back(buf);
+        }
+        encode_frame_into(&self.scratch, conn.outq.back_mut().expect("queued buffer"));
+        // Any outbound frame counts as traffic: push the idle heartbeat.
+        conn.next_hb = self.now + self.net.hb_interval;
+    }
+
+    /// Move every pending shard reply into its connection's write queue.
+    fn drain_replies(&mut self) {
+        for idx in 0..self.conns.len() {
+            let Some(mut conn) = self.conns[idx].take() else {
+                continue;
+            };
+            if let Some(rx) = conn.reply_rx.take() {
+                loop {
+                    match rx.try_recv() {
+                        Ok(reply) => {
+                            let msg = match reply {
+                                Reply::Updated { shard, version } => Msg::GradAck {
+                                    shard: shard as u32,
+                                    version,
+                                    changed: true,
+                                },
+                                Reply::Unchanged { shard } => Msg::GradAck {
+                                    shard: shard as u32,
+                                    version: 0,
+                                    changed: false,
+                                },
+                            };
+                            self.queue(&mut conn, &msg);
+                        }
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+                conn.reply_rx = Some(rx);
+            }
+            self.conns[idx] = Some(conn);
+        }
+    }
+
+    fn fire_timers(&mut self) {
+        let now = self.now;
+        while let Some(e) = self.timers.pop_due(now) {
+            let stale = match self.conns.get(e.conn).and_then(|c| c.as_ref()) {
+                Some(c) => c.gen != e.gen,
+                None => true,
+            };
+            if stale {
+                continue;
+            }
+            let mut conn = self.conns[e.conn].take().expect("checked above");
+            let mut close: Option<String> = None;
+            match e.kind {
+                TimerKind::Heartbeat => {
+                    if matches!(conn.phase, Phase::Attached { .. }) && now >= conn.next_hb {
+                        conn.hb_seq += 1;
+                        let hb = Msg::Heartbeat { seq: conn.hb_seq };
+                        self.queue(&mut conn, &hb);
+                    }
+                    let next = conn.next_hb.max(now + Duration::from_millis(1));
+                    self.timers.arm(next, e.conn, conn.gen, TimerKind::Heartbeat);
+                }
+                TimerKind::Liveness => {
+                    if now.saturating_duration_since(conn.last_frame) > self.net.hb_timeout {
+                        close = Some(match conn.phase {
+                            Phase::Attached { worker } => format!(
+                                "worker {worker} silent past the heartbeat timeout (half-open)"
+                            ),
+                            Phase::Handshake => {
+                                "timed out waiting for a handshake message".to_string()
+                            }
+                            // A refused peer that never read its refusal:
+                            // drain window over, close quietly.
+                            Phase::Draining => String::new(),
+                        });
+                    } else {
+                        let next = conn.last_frame + self.net.hb_timeout
+                            + Duration::from_millis(1);
+                        self.timers.arm(next, e.conn, conn.gen, TimerKind::Liveness);
+                    }
+                }
+            }
+            match close {
+                None => self.conns[e.conn] = Some(conn),
+                Some(reason) => self.teardown(conn, e.conn, &reason),
+            }
+        }
+    }
+
+    /// Try to flush every connection with queued output; close drained
+    /// `Draining` connections.
+    fn flush_pass(&mut self) {
+        for idx in 0..self.conns.len() {
+            let Some(mut conn) = self.conns[idx].take() else {
+                continue;
+            };
+            let mut close: Option<String> = None;
+            if !conn.outq.is_empty() {
+                if let Err(reason) = flush_conn(&mut self.pool, &mut conn) {
+                    close = Some(reason);
+                }
+            }
+            if close.is_none()
+                && matches!(conn.phase, Phase::Draining)
+                && conn.outq.is_empty()
+            {
+                close = Some(String::new()); // refusal delivered
+            }
+            match close {
+                None => self.conns[idx] = Some(conn),
+                Some(reason) => self.teardown(conn, idx, &reason),
+            }
+        }
+    }
+
+    /// Close one connection: return the slot (elastic `Leave` first, after
+    /// every gradient it delivered — same channel FIFO ordering argument
+    /// as the threaded teardown), recycle its buffers, free the slab entry.
+    fn teardown(&mut self, mut conn: Conn, idx: usize, reason: &str) {
+        if !reason.is_empty() {
+            log_warn!(
+                "transport",
+                "connection from {} ended: {reason}",
+                conn.peer
+            );
+        }
+        if let Phase::Attached { worker } = conn.phase {
+            // Suppressed once the run is stopping: end-of-run disconnects
+            // are not membership churn.
+            if self.elastic && !self.stop.load(Ordering::Relaxed) {
+                for tx in &self.grad_txs {
+                    let _ = tx.send(ShardEvent::Leave { worker });
+                }
+            }
+            let slot = &mut self.slots[worker];
+            slot.reply_rx = conn.reply_rx.take();
+            slot.attached = false;
+            slot.vacancies += 1;
+            self.counters.active_conns.fetch_sub(1, Ordering::Relaxed);
+        }
+        while let Some(buf) = conn.outq.pop_front() {
+            self.pool.put(buf);
+        }
+        self.conns[idx] = None;
+        self.free.push(idx);
+        // conn.stream drops here: socket closed. Timers for this (idx,
+        // gen) pair die lazily on their generation check.
+    }
+
+    /// Stop path: queue `Shutdown` to every attached worker, flush with a
+    /// bounded grace, then tear everything down (Leave suppressed — the
+    /// stop flag is already set).
+    fn shutdown_conns(&mut self) {
+        self.now = Instant::now();
+        for idx in 0..self.conns.len() {
+            let Some(mut conn) = self.conns[idx].take() else {
+                continue;
+            };
+            if matches!(conn.phase, Phase::Attached { .. }) {
+                self.queue(&mut conn, &Msg::Shutdown);
+            }
+            self.conns[idx] = Some(conn);
+        }
+        let deadline = Instant::now() + Duration::from_millis(500);
+        loop {
+            let pending = self.conns.iter().flatten().any(|c| !c.outq.is_empty());
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            self.build_pollfds();
+            poll_fds(&mut self.pollfds, Duration::from_millis(10));
+            self.now = Instant::now();
+            self.flush_pass();
+        }
+        for idx in 0..self.conns.len() {
+            if let Some(conn) = self.conns[idx].take() {
+                self.teardown(conn, idx, "");
+            }
+        }
+    }
+}
+
+/// Write as much of `conn`'s queue as the socket accepts, up to
+/// [`MAX_IOVECS`] buffers per `write_vectored` call. Fully written buffers
+/// recycle into the pool. `Err` means the connection is gone.
+fn flush_conn(pool: &mut BufPool, conn: &mut Conn) -> Result<(), String> {
+    let Conn {
+        ref mut stream,
+        ref mut outq,
+        ref mut front_written,
+        ..
+    } = *conn;
+    loop {
+        // Recycle fully-written front buffers before building the iovec,
+        // so every slice handed to the kernel is non-empty.
+        while outq.front().map_or(false, |b| b.len() == *front_written) {
+            let done = outq.pop_front().expect("checked front");
+            pool.put(done);
+            *front_written = 0;
+        }
+        if outq.is_empty() {
+            return Ok(());
+        }
+        let wrote = {
+            let mut iov: [IoSlice; MAX_IOVECS] = [IoSlice::new(&[]); MAX_IOVECS];
+            let mut cnt = 0;
+            for (i, buf) in outq.iter().enumerate() {
+                if cnt == MAX_IOVECS {
+                    break;
+                }
+                iov[cnt] = IoSlice::new(if i == 0 { &buf[*front_written..] } else { &buf[..] });
+                cnt += 1;
+            }
+            stream.write_vectored(&iov[..cnt])
+        };
+        match wrote {
+            Ok(0) => return Err("write returned 0 (peer gone)".into()),
+            Ok(mut n) => {
+                while n > 0 {
+                    let front_len = outq
+                        .front()
+                        .map_or(0, |b| b.len() - *front_written);
+                    if n >= front_len {
+                        n -= front_len;
+                        let done = outq.pop_front().expect("non-empty front");
+                        pool.put(done);
+                        *front_written = 0;
+                    } else {
+                        *front_written += n;
+                        n = 0;
+                    }
+                }
+                // Loop: try again until WouldBlock or drained.
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                return Ok(())
+            }
+            Err(e) => return Err(format!("write error: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::compress::SparseGrad;
+    use crate::transport::msg::encode_submit_into;
+    use crate::transport::tcp::read_msg_blocking;
+    use crate::transport::{TcpTransport, Transport, TransportError};
+    use std::sync::mpsc;
+
+    fn quick_net() -> NetOptions {
+        NetOptions {
+            hb_interval: Duration::from_millis(50),
+            hb_timeout: Duration::from_millis(400),
+            connect_timeout: Duration::from_secs(3),
+            reconnect_attempts: 1,
+        }
+    }
+
+    /// Minimal in-test server on the reactor: 2 shards over dim 4, cells
+    /// seeded [1,2]/[3,4] — the same geometry as the threaded frontend's
+    /// test server, so the scenario suites stay comparable line for line.
+    fn spawn_reactor(
+        workers: usize,
+        elastic: bool,
+    ) -> (
+        TcpFrontend,
+        String,
+        Vec<Receiver<ShardEvent>>,
+        Vec<Sender<Reply>>,
+        Arc<AtomicBool>,
+    ) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("{}", listener.local_addr().unwrap());
+        let layout = ShardLayout::new(4, 2);
+        let mut grad_txs = Vec::new();
+        let mut grad_rxs = Vec::new();
+        for _ in 0..2 {
+            let (tx, rx) = mpsc::channel();
+            grad_txs.push(tx);
+            grad_rxs.push(rx);
+        }
+        let mut reply_txs = Vec::new();
+        let mut reply_rxs = Vec::new();
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel();
+            reply_txs.push(tx);
+            reply_rxs.push(rx);
+        }
+        let cells = vec![
+            Arc::new(SnapshotCell::new(vec![1.0, 2.0])),
+            Arc::new(SnapshotCell::new(vec![3.0, 4.0])),
+        ];
+        let stop = Arc::new(AtomicBool::new(false));
+        let frontend = TcpFrontend::start(
+            listener,
+            layout,
+            grad_txs,
+            cells,
+            reply_rxs,
+            vec![false; workers],
+            Arc::clone(&stop),
+            quick_net(),
+            elastic,
+        )
+        .unwrap();
+        (frontend, addr, grad_rxs, reply_txs, stop)
+    }
+
+    fn recv_grad(rx: &Receiver<ShardEvent>, timeout: Duration) -> ShardMsg {
+        match rx.recv_timeout(timeout).expect("shard event") {
+            ShardEvent::Grad(m) => m,
+            ShardEvent::Join { .. } => panic!("expected a gradient, got a join"),
+            ShardEvent::Leave { .. } => panic!("expected a gradient, got a leave"),
+        }
+    }
+
+    fn recv_membership(rx: &Receiver<ShardEvent>, timeout: Duration) -> (bool, usize) {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(remaining).expect("membership event") {
+                ShardEvent::Join { worker } => return (true, worker),
+                ShardEvent::Leave { worker } => return (false, worker),
+                ShardEvent::Grad(_) => {}
+            }
+        }
+    }
+
+    fn raw_attach(addr: &str, worker: u32) -> (TcpStream, Msg) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut reader = FrameReader::new();
+        let mut payload = Vec::new();
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        Msg::Hello {
+            worker,
+            shards: 0,
+            wire: "dense".into(),
+        }
+        .encode_into(&mut msg_buf);
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        let reply = read_msg_blocking(&mut s, &mut reader, &mut payload, deadline).unwrap();
+        (s, reply)
+    }
+
+    fn connect_when_slot_frees(addr: &str, net: NetOptions) -> TcpTransport {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match TcpTransport::connect(addr, "dense", net.clone()) {
+                Ok(t) => return t,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "slot never freed: {e:#}");
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reactor_attach_submit_ack_refresh_roundtrip() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, reply_txs, _stop) = spawn_reactor(2, false);
+        let mut t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        let info = t.attach_info();
+        assert_eq!(info.worker, 0);
+        assert_eq!(info.workers, 2);
+        assert_eq!(info.shards, 2);
+        assert_eq!(info.dim, 4);
+
+        let mut buf = [0.0f32; 2];
+        let v = t.refresh(1, &mut buf).unwrap();
+        assert_eq!(v, 0);
+        assert_eq!(buf, [3.0, 4.0]);
+
+        t.submit(
+            1,
+            ShardMsg {
+                worker: 0,
+                base_version: 3,
+                loss: 0.5,
+                grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            },
+        )
+        .unwrap();
+        let msg = recv_grad(&grad_rxs[1], Duration::from_secs(2));
+        assert_eq!(msg.worker, 0);
+        assert_eq!(msg.base_version, 3);
+        let mut got = vec![0.0f32; 2];
+        msg.grad.view(2..4).add_to(&mut got);
+        assert_eq!(got, vec![3.0, 4.0]);
+
+        reply_txs[0]
+            .send(Reply::Updated { shard: 1, version: 9 })
+            .unwrap();
+        let r = t.recv_reply(Duration::from_secs(2)).unwrap();
+        assert_eq!(r, Reply::Updated { shard: 1, version: 9 });
+        // Submission byte accounting is identical to the threaded frontend
+        // (the wire-bytes invariant, measured server-side).
+        let expected = (FRAME_OVERHEAD
+            + crate::transport::msg::SUBMIT_HEADER_BYTES
+            + crate::transport::msg::GRAD_DENSE_HEADER_BYTES
+            + 8) as u64;
+        let stats = frontend.stats();
+        assert_eq!(stats.grad_frame_bytes, expected);
+        assert_eq!(stats.submissions, 0, "shard-1 submit is not a new submission");
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_second_worker_attaches_and_extra_is_refused() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_reactor(2, false);
+        let t0 = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        let t1 = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t0.attach_info().worker, 0);
+        assert_eq!(t1.attach_info().worker, 1);
+        assert_eq!(frontend.active_conns(), 2);
+        assert_eq!(frontend.ever_joined(), 2);
+        let err = TcpTransport::connect(&addr, "dense", quick_net());
+        assert!(err.is_err(), "third attach must be refused");
+        drop(t0);
+        drop(t1);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_geometry_mismatch_drops_the_connection_not_the_server() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_reactor(2, false);
+        let (mut s, welcome) = raw_attach(&addr, WORKER_UNASSIGNED);
+        assert!(matches!(welcome, Msg::Welcome { .. }));
+        let evil = ShardGrad::Sparse(Arc::new(SparseGrad {
+            dim: 1000,
+            idx: vec![999],
+            val: vec![1.0],
+        }));
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        encode_submit_into(0, 0, 0, 0.0, &evil, 0..1000, &mut msg_buf);
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        assert!(grad_rxs[0].recv_timeout(Duration::from_millis(300)).is_err());
+        // The reactor survives: a well-formed worker still flows.
+        let mut t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        t.submit(
+            0,
+            ShardMsg {
+                worker: 0,
+                base_version: 0,
+                loss: 0.0,
+                grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            },
+        )
+        .unwrap();
+        let msg = recv_grad(&grad_rxs[0], Duration::from_secs(2));
+        let mut got = vec![0.0f32; 2];
+        msg.grad.view(0..2).add_to(&mut got);
+        assert_eq!(got, vec![1.0, 2.0]);
+        drop(t);
+        drop(s);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_coalesces_an_ack_burst_and_delivers_all_of_them() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // Many replies queued between two reactor iterations must all
+        // arrive, in order — they leave coalesced into few vectored
+        // writes, which this asserts indirectly via count + ordering.
+        let (frontend, addr, _grad_rxs, reply_txs, _stop) = spawn_reactor(1, false);
+        let mut t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        const BURST: u64 = 64;
+        for version in 1..=BURST {
+            reply_txs[0]
+                .send(Reply::Updated { shard: 0, version })
+                .unwrap();
+        }
+        for version in 1..=BURST {
+            let r = t.recv_reply(Duration::from_secs(2)).unwrap();
+            assert_eq!(r, Reply::Updated { shard: 0, version });
+        }
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_elastic_attach_and_clean_leave_announce_membership() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_reactor(2, true);
+        let t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        for rx in &grad_rxs {
+            assert_eq!(recv_membership(rx, Duration::from_secs(2)), (true, 0));
+        }
+        drop(t); // clean Leave frame
+        for rx in &grad_rxs {
+            assert_eq!(recv_membership(rx, Duration::from_secs(2)), (false, 0));
+        }
+        let t2 = connect_when_slot_frees(&addr, quick_net());
+        assert_eq!(t2.attach_info().worker, 0);
+        for rx in &grad_rxs {
+            assert_eq!(recv_membership(rx, Duration::from_secs(2)), (true, 0));
+        }
+        drop(t2);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_evicts_half_open_worker_after_heartbeat_timeout() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_reactor(1, true);
+        let (mut s, reply) = raw_attach(&addr, WORKER_UNASSIGNED);
+        assert!(matches!(reply, Msg::Welcome { worker: 0, .. }));
+        assert_eq!(
+            recv_membership(&grad_rxs[0], Duration::from_secs(2)),
+            (true, 0)
+        );
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        encode_submit_into(
+            0,
+            0,
+            0,
+            0.5,
+            &ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            0..2,
+            &mut msg_buf,
+        );
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        let grad = recv_grad(&grad_rxs[0], Duration::from_secs(2));
+        assert_eq!(grad.worker, 0);
+        // No heartbeats: the liveness timer evicts after ~400 ms.
+        let start = Instant::now();
+        let (join, worker) = recv_membership(&grad_rxs[0], Duration::from_secs(5));
+        assert!(!join, "expected an eviction Leave, got a Join");
+        assert_eq!(worker, 0);
+        assert!(
+            start.elapsed() >= Duration::from_millis(200),
+            "evicted before the heartbeat timeout could plausibly elapse"
+        );
+        let t = connect_when_slot_frees(&addr, quick_net());
+        assert_eq!(t.attach_info().worker, 0);
+        drop(t);
+        drop(s);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_zombie_reattach_to_reassigned_slot_is_evicted() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_reactor(1, true);
+        let original = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(original.attach_info().worker, 0);
+        drop(original);
+        let replacement = connect_when_slot_frees(&addr, quick_net());
+        assert_eq!(replacement.attach_info().worker, 0);
+        let (_s, reply) = raw_attach(&addr, 0);
+        assert!(
+            matches!(reply, Msg::Evict { worker: 0 }),
+            "expected Evict, got {reply:?}"
+        );
+        drop(replacement);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_first_blip_named_redial_stays_retryable() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_reactor(1, true);
+        let holder = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(holder.attach_info().worker, 0);
+        let (_s, reply) = raw_attach(&addr, 0);
+        assert!(
+            matches!(reply, Msg::Shutdown),
+            "expected a retryable Shutdown, got {reply:?}"
+        );
+        drop(holder);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_static_refusal_is_retryable_and_silent_on_membership() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_reactor(1, false);
+        let holder = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(holder.attach_info().worker, 0);
+        let (_s, reply) = raw_attach(&addr, 0);
+        assert!(matches!(reply, Msg::Shutdown), "expected Shutdown, got {reply:?}");
+        assert!(
+            grad_rxs[0].try_recv().is_err(),
+            "static frontend must not emit membership events"
+        );
+        drop(holder);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_reconnect_reattaches_the_freed_slot() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, grad_rxs, _reply_txs, _stop) = spawn_reactor(1, false);
+        let mut net = quick_net();
+        net.hb_timeout = Duration::from_millis(300);
+        net.reconnect_attempts = 10;
+        let mut t = TcpTransport::connect(&addr, "dense", net).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        t.kill_socket_for_test();
+        let start = Instant::now();
+        let mut reconnected = false;
+        while start.elapsed() < Duration::from_secs(5) {
+            match t.recv_reply(Duration::from_millis(50)) {
+                Err(TransportError::Reconnected) => {
+                    reconnected = true;
+                    break;
+                }
+                Err(TransportError::Timeout) => {}
+                Err(TransportError::Closed(why)) => panic!("gave up: {why}"),
+                Ok(r) => panic!("unexpected reply {r:?}"),
+            }
+        }
+        assert!(reconnected, "transport never reconnected");
+        assert_eq!(t.attach_info().worker, 0, "slot changed across reconnect");
+        t.submit(
+            0,
+            ShardMsg {
+                worker: 0,
+                base_version: 0,
+                loss: 0.0,
+                grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+            },
+        )
+        .unwrap();
+        let msg = recv_grad(&grad_rxs[0], Duration::from_secs(2));
+        assert_eq!(msg.worker, 0);
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_shutdown_notifies_connected_workers() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_reactor(1, false);
+        let mut t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        frontend.shutdown();
+        // The client observes the Shutdown as a terminal Closed (not an
+        // endless reconnect): the server told it the run is over.
+        let start = Instant::now();
+        let mut closed = false;
+        while start.elapsed() < Duration::from_secs(5) {
+            match t.recv_reply(Duration::from_millis(50)) {
+                Err(TransportError::Closed(_)) => {
+                    closed = true;
+                    break;
+                }
+                Err(_) => {}
+                Ok(r) => panic!("unexpected reply {r:?}"),
+            }
+        }
+        assert!(closed, "client never observed the server Shutdown");
+    }
+}

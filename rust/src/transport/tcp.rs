@@ -13,7 +13,7 @@
 //! id, and surfaces [`super::TransportError::Reconnected`] so the worker
 //! loop abandons the lost round and refreshes.
 //!
-//! Server side ([`TcpFrontend`]): a non-blocking acceptor plus three
+//! Server side ([`ThreadedFrontend`]): a non-blocking acceptor plus three
 //! threads per connection (frame reader, frame writer, reply pump) that
 //! bridge a remote worker onto the *same* `run_shard` channels the
 //! in-process stack uses — the shard servers cannot tell local and remote
@@ -21,6 +21,11 @@
 //! policies need the worker count); a reconnecting worker re-attaches to
 //! its slot once the dead connection's reply pump has returned the slot's
 //! reply channel.
+//!
+//! The threaded frontend is the legacy serving path, kept as the baseline
+//! for the connections-vs-throughput comparison (`--frontend threaded`).
+//! `serve` defaults to the event-driven reactor ([`super::reactor`]),
+//! which speaks the identical wire protocol from a single thread.
 //!
 //! Byte accounting: both ends count **submission frames at frame
 //! granularity** (frame header + message + CRC). Control traffic
@@ -132,7 +137,8 @@ fn write_msg(
 
 /// Read frames until one complete message arrives or `deadline` passes
 /// (handshake path — the steady state uses a dedicated reader thread).
-fn read_msg_blocking(
+/// `pub(crate)` so the reactor frontend's tests can drive raw handshakes.
+pub(crate) fn read_msg_blocking(
     stream: &mut TcpStream,
     reader: &mut FrameReader,
     payload: &mut Vec<u8>,
@@ -206,11 +212,15 @@ struct ClientConn {
     state: Arc<ConnState>,
     reader: Option<JoinHandle<()>>,
     hb: Option<JoinHandle<()>>,
+    /// Dropping this wakes the heartbeat ticker out of its full-interval
+    /// sleep so teardown never waits on it.
+    hb_stop: Option<Sender<()>>,
 }
 
 impl Drop for ClientConn {
     fn drop(&mut self) {
         self.state.dead.store(true, Ordering::Relaxed);
+        drop(self.hb_stop.take());
         // Unblock the reader promptly; ignore errors on an already-dead
         // socket.
         let _ = self.write.lock().unwrap().shutdown(std::net::Shutdown::Both);
@@ -302,6 +312,19 @@ impl TcpTransport {
         self.info
     }
 
+    /// Test hook: hard-close the underlying socket out from under the
+    /// transport, simulating a network drop (the reconnect tests in this
+    /// module and the reactor's use it).
+    #[cfg(test)]
+    pub(crate) fn kill_socket_for_test(&self) {
+        let _ = self
+            .conn
+            .write
+            .lock()
+            .unwrap()
+            .shutdown(std::net::Shutdown::Both);
+    }
+
     fn establish(
         addr: &str,
         net: &NetOptions,
@@ -369,11 +392,12 @@ impl TcpTransport {
                 client_read_loop(read_stream, reader, state, acks_tx, snaps_tx, hb_timeout)
             })
         };
+        let (hb_stop_tx, hb_stop_rx) = mpsc::channel::<()>();
         let hb_handle = {
             let state = Arc::clone(&state);
             let write = Arc::clone(&write);
             let interval = net.hb_interval;
-            std::thread::spawn(move || heartbeat_loop(write, state, interval))
+            std::thread::spawn(move || heartbeat_loop(write, state, interval, hb_stop_rx))
         };
         Ok(Attach::Ok(
             ClientConn {
@@ -383,6 +407,7 @@ impl TcpTransport {
                 state,
                 reader: Some(reader_handle),
                 hb: Some(hb_handle),
+                hb_stop: Some(hb_stop_tx),
             },
             info,
         ))
@@ -700,23 +725,27 @@ fn client_read_loop(
 }
 
 /// Heartbeat ticker: one `Heartbeat` frame per interval until the
-/// connection dies. Sleeps in short slices so teardown never waits a full
-/// interval.
-fn heartbeat_loop(write: Arc<Mutex<TcpStream>>, state: Arc<ConnState>, interval: Duration) {
+/// connection dies. Blocks a full interval on the stop channel instead of
+/// polling in 25 ms slices — an idle joined worker wakes 2×/sec at the
+/// default interval, not 40×/sec — while teardown (which drops the
+/// sender) still interrupts the sleep immediately.
+fn heartbeat_loop(
+    write: Arc<Mutex<TcpStream>>,
+    state: Arc<ConnState>,
+    interval: Duration,
+    stop_rx: Receiver<()>,
+) {
     let mut msg_buf = Vec::new();
     let mut frame_buf = Vec::new();
     let mut seq = 0u64;
-    let mut since = Duration::ZERO;
     loop {
-        std::thread::sleep(POLL.min(interval));
+        match stop_rx.recv_timeout(interval) {
+            Ok(()) | Err(RecvTimeoutError::Disconnected) => break, // teardown
+            Err(RecvTimeoutError::Timeout) => {}
+        }
         if state.dead.load(Ordering::Relaxed) {
             break;
         }
-        since += POLL.min(interval);
-        if since < interval {
-            continue;
-        }
-        since = Duration::ZERO;
         seq += 1;
         if write_msg(&write, &Msg::Heartbeat { seq }, &mut msg_buf, &mut frame_buf).is_err() {
             state.dead.store(true, Ordering::Relaxed);
@@ -772,7 +801,7 @@ struct Shared {
     conn_handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
-/// Gradient-plane counters of a [`TcpFrontend`].
+/// Gradient-plane counters of a [`ThreadedFrontend`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FrontendStats {
     /// Bytes of submission frames received (headers + payload + CRC).
@@ -782,16 +811,16 @@ pub struct FrontendStats {
 }
 
 /// The server-side TCP acceptor + per-connection bridging threads.
-pub struct TcpFrontend {
+pub struct ThreadedFrontend {
     shared: Arc<Shared>,
     acceptor: Option<JoinHandle<()>>,
 }
 
-impl TcpFrontend {
+impl ThreadedFrontend {
     /// Start accepting workers. `reply_rxs[i]` is worker slot `i`'s reply
     /// channel (its senders already cloned into the shard threads);
     /// `delayed[i]` the slot's heterogeneity flag. The frontend owns
-    /// clones of the gradient senders; [`TcpFrontend::shutdown`] drops
+    /// clones of the gradient senders; [`ThreadedFrontend::shutdown`] drops
     /// them so the shard servers see disconnection exactly as when
     /// in-process workers finish.
     #[allow(clippy::too_many_arguments)]
@@ -805,7 +834,7 @@ impl TcpFrontend {
         stop: Arc<AtomicBool>,
         net: NetOptions,
         elastic: bool,
-    ) -> std::io::Result<TcpFrontend> {
+    ) -> std::io::Result<ThreadedFrontend> {
         listener.set_nonblocking(true)?;
         let slots = reply_rxs
             .into_iter()
@@ -836,7 +865,7 @@ impl TcpFrontend {
             let shared = Arc::clone(&shared);
             std::thread::spawn(move || accept_loop(listener, shared))
         };
-        Ok(TcpFrontend {
+        Ok(ThreadedFrontend {
             shared,
             acceptor: Some(acceptor),
         })
@@ -1325,7 +1354,7 @@ mod tests {
     fn spawn_frontend(
         workers: usize,
     ) -> (
-        TcpFrontend,
+        ThreadedFrontend,
         String,
         Vec<Receiver<ShardEvent>>,
         Vec<Sender<Reply>>,
@@ -1338,7 +1367,7 @@ mod tests {
         workers: usize,
         elastic: bool,
     ) -> (
-        TcpFrontend,
+        ThreadedFrontend,
         String,
         Vec<Receiver<ShardEvent>>,
         Vec<Sender<Reply>>,
@@ -1366,7 +1395,7 @@ mod tests {
             Arc::new(SnapshotCell::new(vec![3.0, 4.0])),
         ];
         let stop = Arc::new(AtomicBool::new(false));
-        let frontend = TcpFrontend::start(
+        let frontend = ThreadedFrontend::start(
             listener,
             layout,
             grad_txs,
@@ -1557,7 +1586,7 @@ mod tests {
             let (gtx, _grx) = mpsc::channel();
             let (_rtx, rrx) = mpsc::channel::<Reply>();
             let stop = Arc::new(AtomicBool::new(false));
-            let f = TcpFrontend::start(
+            let f = ThreadedFrontend::start(
                 listener,
                 layout,
                 vec![gtx],

@@ -9,16 +9,27 @@
 //! - single-bit corruption anywhere in a frame is caught (CRC32 or a
 //!   structural check);
 //! - encode→decode roundtrips bitwise for every `ShardGrad` variant across
-//!   the wire formats and shard counts S ∈ {1, 2, 4}.
+//!   the wire formats and shard counts S ∈ {1, 2, 4};
+//! - (ISSUE 6) frame streams fragmented at every byte boundary and
+//!   interleaved across connections decode identically to the
+//!   unfragmented stream, and a slow-loris client trickling one byte per
+//!   tick is evicted by the reactor's heartbeat timeout without stalling
+//!   the other connections.
 
-use hybrid_sgd::coordinator::compress::{GradEncoder, WireFormat};
-use hybrid_sgd::coordinator::ShardLayout;
+use hybrid_sgd::coordinator::compress::{GradEncoder, ShardGrad, WireFormat};
+use hybrid_sgd::coordinator::server::{Reply, ShardEvent, ShardMsg};
+use hybrid_sgd::coordinator::{ShardLayout, SnapshotCell};
 use hybrid_sgd::prop_assert;
 use hybrid_sgd::transport::frame::{
     decode_frame, encode_frame_into, FrameError, FrameReader, FRAME_OVERHEAD,
 };
 use hybrid_sgd::transport::msg::{encode_submit_into, Msg, WireError};
+use hybrid_sgd::transport::{Frontend, FrontendKind, NetOptions, TcpTransport, Transport};
 use hybrid_sgd::util::proptest::{check, Gen};
+use std::io::{Read, Write};
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 fn random_bytes(g: &mut Gen, len: usize) -> Vec<u8> {
     (0..len).map(|_| g.rng.below(256) as u8).collect()
@@ -199,6 +210,232 @@ fn prop_submit_roundtrips_bitwise_across_formats_and_shards() {
         }
         Ok(())
     });
+}
+
+/// The reactor's read path sees frames in arbitrary fragments, interleaved
+/// across many connections sharing one loop. Model that exactly: K streams
+/// of valid frames, delivered one byte at a time round-robin (every frame
+/// therefore crosses every possible fragmentation boundary) and again in
+/// random-sized chunks — each stream's decoded payload sequence must match
+/// its unfragmented reference bit for bit, with no cross-stream bleed.
+#[test]
+fn prop_fragmented_interleaved_streams_decode_identically() {
+    check("frame-fragmentation", 60, |g| {
+        const K: usize = 3;
+        let mut wires: Vec<Vec<u8>> = Vec::with_capacity(K);
+        let mut reference: Vec<Vec<Vec<u8>>> = Vec::with_capacity(K);
+        for _ in 0..K {
+            let frames = g.usize_in(1, 5);
+            let mut wire = Vec::new();
+            let mut payloads = Vec::new();
+            for _ in 0..frames {
+                let payload = random_bytes(g, g.usize_in(0, 300));
+                encode_frame_into(&payload, &mut wire);
+                payloads.push(payload);
+            }
+            wires.push(wire);
+            reference.push(payloads);
+        }
+        for chunked in [false, true] {
+            let mut readers: Vec<FrameReader> = (0..K).map(|_| FrameReader::new()).collect();
+            let mut got: Vec<Vec<Vec<u8>>> = vec![Vec::new(); K];
+            let mut offsets = vec![0usize; K];
+            let mut payload = Vec::new();
+            loop {
+                let mut progressed = false;
+                for k in 0..K {
+                    let remaining = wires[k].len() - offsets[k];
+                    if remaining == 0 {
+                        continue;
+                    }
+                    progressed = true;
+                    let take = if chunked {
+                        g.usize_in(1, 7).min(remaining)
+                    } else {
+                        1
+                    };
+                    readers[k].feed(&wires[k][offsets[k]..offsets[k] + take]);
+                    offsets[k] += take;
+                    while readers[k].next_frame(&mut payload).map_err(|e| e.to_string())? {
+                        got[k].push(payload.clone());
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            for k in 0..K {
+                prop_assert!(
+                    got[k] == reference[k],
+                    "stream {k} (chunked={chunked}): fragmented decode diverged \
+                     ({} frames vs {} expected)",
+                    got[k].len(),
+                    reference[k].len()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Read one whole message from a raw blocking socket.
+fn read_raw_msg(stream: &mut std::net::TcpStream, reader: &mut FrameReader) -> Msg {
+    let mut chunk = [0u8; 1024];
+    let mut payload = Vec::new();
+    loop {
+        if reader.next_frame(&mut payload).expect("clean frame stream") {
+            return Msg::decode(&payload).expect("valid message");
+        }
+        let n = stream.read(&mut chunk).expect("socket read");
+        assert!(n > 0, "connection closed while expecting a message");
+        reader.feed(&chunk[..n]);
+    }
+}
+
+/// A slow-loris client trickles one byte of a heartbeat frame per 25 ms —
+/// never completing a frame inside the 400 ms liveness window — while a
+/// healthy worker keeps submitting on the same reactor. The loris must be
+/// evicted by the frame-based liveness timeout (announced as an elastic
+/// `Leave`), and the healthy worker's submit→ack flow must never stall.
+#[test]
+fn slow_loris_is_evicted_without_stalling_other_connections() {
+    let dim = 8usize;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = format!("{}", listener.local_addr().unwrap());
+    let layout = ShardLayout::new(dim, 1);
+    let (grad_tx, grad_rx) = mpsc::channel::<ShardEvent>();
+    let (rtx0, rrx0) = mpsc::channel::<Reply>();
+    let (rtx1, rrx1) = mpsc::channel::<Reply>();
+    let reply_txs = [rtx0, rtx1];
+    let cells = vec![Arc::new(SnapshotCell::new(vec![0.0f32; dim]))];
+    let stop = Arc::new(AtomicBool::new(false));
+    let net = NetOptions {
+        hb_interval: Duration::from_millis(50),
+        hb_timeout: Duration::from_millis(400),
+        connect_timeout: Duration::from_secs(5),
+        reconnect_attempts: 0,
+    };
+    let frontend = Frontend::start(
+        FrontendKind::Reactor,
+        listener,
+        layout,
+        vec![grad_tx],
+        cells,
+        vec![rrx0, rrx1],
+        vec![false, false],
+        Arc::clone(&stop),
+        net.clone(),
+        true, // elastic: eviction is announced as a Leave
+    )
+    .expect("start reactor");
+    let notify = frontend.reply_notifier().expect("reactor notifier");
+
+    // Echo shard stub: ack every submission, forward membership events.
+    let (leave_tx, leave_rx) = mpsc::channel::<u32>();
+    let echo = std::thread::spawn(move || {
+        let mut version = 0u64;
+        while let Ok(ev) = grad_rx.recv() {
+            match ev {
+                ShardEvent::Grad(ShardMsg { worker, .. }) => {
+                    version += 1;
+                    let _ = reply_txs[worker].send(Reply::Updated { shard: 0, version });
+                    notify(worker);
+                }
+                ShardEvent::Leave { worker } => {
+                    let _ = leave_tx.send(worker as u32);
+                }
+                _ => {}
+            }
+        }
+    });
+
+    // The loris attaches first (taking slot 0), then trickles.
+    let mut loris = std::net::TcpStream::connect(&addr).unwrap();
+    let mut loris_reader = FrameReader::new();
+    {
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        Msg::Hello {
+            worker: hybrid_sgd::transport::msg::WORKER_UNASSIGNED,
+            shards: 0,
+            wire: "dense".to_string(),
+        }
+        .encode_into(&mut msg_buf);
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        loris.write_all(&frame_buf).unwrap();
+    }
+    let loris_worker = match read_raw_msg(&mut loris, &mut loris_reader) {
+        Msg::Welcome { worker, .. } => worker,
+        other => panic!("loris expected Welcome, got {other:?}"),
+    };
+    let attach_at = Instant::now();
+    let loris_thread = std::thread::spawn(move || {
+        // A 22-byte heartbeat frame at 1 byte / 25 ms completes a frame
+        // every ~550 ms: always slower than the 400 ms liveness window.
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        Msg::Heartbeat { seq: 1 }.encode_into(&mut msg_buf);
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        let mut i = 0usize;
+        loop {
+            if loris.write_all(&frame_buf[i..=i]).is_err() {
+                return; // evicted: the reactor closed the socket
+            }
+            i = (i + 1) % frame_buf.len();
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    });
+
+    // Healthy worker on the same reactor: submits must keep flowing the
+    // whole time the loris is being starved out.
+    let mut healthy = TcpTransport::connect(&addr, "dense", net).expect("healthy connect");
+    let grad = ShardGrad::Dense(Arc::new(vec![0.5f32; dim]));
+    let mut submit_ok = |t: &mut TcpTransport, worker: usize| {
+        t.submit(
+            0,
+            ShardMsg {
+                worker,
+                base_version: 0,
+                loss: 0.1,
+                grad: grad.clone(),
+            },
+        )
+        .expect("submit");
+        matches!(
+            t.recv_reply(Duration::from_secs(2)).expect("ack"),
+            Reply::Updated { shard: 0, .. }
+        )
+    };
+    let healthy_worker = healthy.attach_info().worker;
+    let deadline = Instant::now() + Duration::from_secs(8);
+    let evicted_at = loop {
+        assert!(
+            submit_ok(&mut healthy, healthy_worker),
+            "healthy ack stalled while the loris starved"
+        );
+        match leave_rx.try_recv() {
+            Ok(w) => {
+                assert_eq!(w, loris_worker, "the loris is the one evicted");
+                break Instant::now();
+            }
+            Err(_) => assert!(Instant::now() < deadline, "loris never evicted within 8 s"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let starved_for = evicted_at - attach_at;
+    assert!(
+        starved_for >= Duration::from_millis(200),
+        "evicted suspiciously early ({starved_for:?}) — liveness must allow \
+         the full heartbeat window"
+    );
+    // The healthy connection survived the eviction: more acks after it.
+    for _ in 0..5 {
+        assert!(submit_ok(&mut healthy, healthy_worker));
+    }
+    drop(healthy);
+    loris_thread.join().unwrap();
+    frontend.shutdown();
+    echo.join().unwrap();
 }
 
 /// Truncating a *message* payload at every offset is a typed error too

@@ -1,0 +1,128 @@
+//! Server thread count is O(1) in the number of connections (ISSUE 6
+//! acceptance): the reactor frontend serves every worker from one thread,
+//! where the legacy threaded frontend spawned reader/writer/reply-pump
+//! threads per connection. Asserted via `/proc/self/status`'s `Threads:`
+//! line, so this test is Linux-only (the file is empty elsewhere).
+
+#![cfg(target_os = "linux")]
+
+use hybrid_sgd::coordinator::server::{Reply, ShardEvent};
+use hybrid_sgd::coordinator::{ShardLayout, SnapshotCell};
+use hybrid_sgd::transport::frame::{encode_frame_into, FrameReader};
+use hybrid_sgd::transport::msg::{Msg, WORKER_UNASSIGNED};
+use hybrid_sgd::transport::{Frontend, FrontendKind, NetOptions};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Current thread count of this process, from /proc/self/status.
+fn threads_now() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("read /proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line")
+        .trim()
+        .parse()
+        .expect("thread count")
+}
+
+/// Attach one raw client (no client-side threads: this test counts only
+/// what the *server* spawns) and return the connected socket.
+fn raw_attach(addr: &str) -> TcpStream {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    Msg::Hello {
+        worker: WORKER_UNASSIGNED,
+        shards: 0,
+        wire: "dense".to_string(),
+    }
+    .encode_into(&mut msg_buf);
+    encode_frame_into(&msg_buf, &mut frame_buf);
+    stream.write_all(&frame_buf).expect("send hello");
+    let mut reader = FrameReader::new();
+    let mut chunk = [0u8; 1024];
+    let mut payload = Vec::new();
+    loop {
+        if reader.next_frame(&mut payload).expect("clean stream") {
+            match Msg::decode(&payload).expect("valid message") {
+                Msg::Welcome { .. } => return stream,
+                Msg::Shutdown | Msg::Evict { .. } => panic!("attach refused"),
+                _ => {}
+            }
+        } else {
+            let n = stream.read(&mut chunk).expect("read");
+            assert!(n > 0, "closed during attach");
+            reader.feed(&chunk[..n]);
+        }
+    }
+}
+
+#[test]
+fn reactor_thread_count_is_constant_in_connections() {
+    const SLOTS: usize = 32;
+    let dim = 16usize;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = format!("{}", listener.local_addr().unwrap());
+    let layout = ShardLayout::new(dim, 1);
+    let (grad_tx, _grad_rx) = mpsc::channel::<ShardEvent>();
+    let mut reply_txs = Vec::with_capacity(SLOTS);
+    let mut reply_rxs = Vec::with_capacity(SLOTS);
+    for _ in 0..SLOTS {
+        let (tx, rx) = mpsc::channel::<Reply>();
+        reply_txs.push(tx);
+        reply_rxs.push(rx);
+    }
+    let cells = vec![Arc::new(SnapshotCell::new(vec![0.0f32; dim]))];
+    let stop = Arc::new(AtomicBool::new(false));
+    // Long heartbeat windows: nothing must churn (or evict) mid-count.
+    let net = NetOptions {
+        hb_interval: Duration::from_secs(60),
+        hb_timeout: Duration::from_secs(300),
+        connect_timeout: Duration::from_secs(5),
+        reconnect_attempts: 0,
+    };
+    let frontend = Frontend::start(
+        FrontendKind::Reactor,
+        listener,
+        layout,
+        vec![grad_tx],
+        cells,
+        reply_rxs,
+        vec![false; SLOTS],
+        Arc::clone(&stop),
+        net,
+        false,
+    )
+    .expect("start reactor");
+
+    let before = threads_now();
+    let mut conns = Vec::with_capacity(SLOTS);
+    for _ in 0..4 {
+        conns.push(raw_attach(&addr));
+    }
+    assert_eq!(frontend.ever_joined(), 4);
+    let at_4 = threads_now();
+    for _ in 4..SLOTS {
+        conns.push(raw_attach(&addr));
+    }
+    assert_eq!(frontend.active_conns(), SLOTS);
+    let at_32 = threads_now();
+
+    assert_eq!(
+        at_4, before,
+        "server spawned threads for the first 4 connections"
+    );
+    assert_eq!(
+        at_32, before,
+        "server thread count grew with connections ({before} -> {at_32} at {SLOTS} conns)"
+    );
+
+    drop(conns);
+    frontend.shutdown();
+    drop(reply_txs);
+}
