@@ -82,6 +82,7 @@ fn run_native(fx: &Fixture, policy: Policy, secs: f64, compute_ms: f64) -> RunMe
         steps: None,
         elastic: false,
         min_quorum: 1,
+        stream: None,
     };
     train(&cfg, &inputs).expect("run failed")
 }
@@ -220,6 +221,7 @@ fn main() {
                 steps: None,
                 elastic: false,
                 min_quorum: 1,
+                stream: None,
             };
             let m = train(&cfg, &inputs).expect("xla run failed");
             report("AOT XLA (jnp)", &m);

@@ -76,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         steps: None,
         elastic: false,
         min_quorum: 1,
+        stream: None,
     };
     let _ = Schedule::Step { step: 1 }; // (see threshold.rs for all schedules)
 

@@ -95,6 +95,7 @@ fn main() -> anyhow::Result<()> {
             steps: None,
             elastic: false,
             min_quorum: 1,
+            stream: None,
         };
         let m = train(&cfg, &inputs)?;
         let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));

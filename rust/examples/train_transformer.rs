@@ -101,6 +101,7 @@ fn main() -> anyhow::Result<()> {
         steps: None,
         elastic: false,
         min_quorum: 1,
+        stream: None,
     };
 
     println!("training for ~{secs:.0}s (~{steps} gradient steps) ...\n");

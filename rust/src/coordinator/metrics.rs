@@ -6,8 +6,133 @@
 //! consumable by the experiment runner (resampling + round averaging happens
 //! in `experiments::runner`).
 
-use crate::util::json::Json;
+use crate::util::json::{Json, Utf8JsonWriter};
 use crate::util::stats::Series;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// The metric series that are sampled *while the run is live* (as opposed
+/// to the counters and trajectories filled in from the server report at the
+/// end). Each maps to one [`RunMetrics`] field and one stable stream name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeriesId {
+    TrainLoss,
+    TestLoss,
+    TestAcc,
+    CompressionRatio,
+    Membership,
+}
+
+impl SeriesId {
+    pub fn name(self) -> &'static str {
+        match self {
+            SeriesId::TrainLoss => "train_loss",
+            SeriesId::TestLoss => "test_loss",
+            SeriesId::TestAcc => "test_acc",
+            SeriesId::CompressionRatio => "compression_ratio",
+            SeriesId::Membership => "membership",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<SeriesId> {
+        Some(match name {
+            "train_loss" => SeriesId::TrainLoss,
+            "test_loss" => SeriesId::TestLoss,
+            "test_acc" => SeriesId::TestAcc,
+            "compression_ratio" => SeriesId::CompressionRatio,
+            "membership" => SeriesId::Membership,
+            _ => None?,
+        })
+    }
+}
+
+/// A streaming metrics sink: every [`RunMetrics::record`] sample is
+/// appended to a JSONL file (`{"s":"test_loss","t":…,"v":…}` per line, via
+/// the incremental [`Utf8JsonWriter`]) the moment it happens, so a crash or
+/// a multi-hour run never loses or accumulates history. With a window cap,
+/// the in-memory series keep only the most recent samples — the file is
+/// the full record ([`replay_stream`] rebuilds it).
+pub struct MetricsStream {
+    path: PathBuf,
+    out: Mutex<std::io::BufWriter<std::fs::File>>,
+    /// In-memory window: keep at most this many samples per series.
+    cap: Option<usize>,
+}
+
+impl std::fmt::Debug for MetricsStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsStream")
+            .field("path", &self.path)
+            .field("cap", &self.cap)
+            .finish()
+    }
+}
+
+impl MetricsStream {
+    pub fn create(path: &Path) -> anyhow::Result<MetricsStream> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("cannot create metrics stream {path:?}: {e}"))?;
+        Ok(MetricsStream {
+            path: path.to_path_buf(),
+            out: Mutex::new(std::io::BufWriter::new(file)),
+            cap: None,
+        })
+    }
+
+    /// Bound the *in-memory* series to the `cap` most recent samples each;
+    /// the stream file still receives everything.
+    pub fn with_cap(mut self, cap: usize) -> MetricsStream {
+        assert!(cap > 0, "metrics window cap must be positive");
+        self.cap = Some(cap);
+        self
+    }
+
+    fn append(&self, series: SeriesId, t: f64, v: f64) {
+        let mut w = Utf8JsonWriter::new();
+        w.begin_object();
+        w.key("s").str(series.name());
+        w.key("t").num(t);
+        w.key("v").num(v);
+        w.end_object();
+        let mut line = w.finish();
+        line.push('\n');
+        let mut out = self.out.lock().unwrap();
+        // Disk-full mid-run must degrade observability, not kill training.
+        let _ = out.write_all(line.as_bytes());
+    }
+
+    pub fn flush(&self) {
+        let _ = self.out.lock().unwrap().flush();
+    }
+}
+
+impl Drop for MetricsStream {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Rebuild the live-sampled series from a JSONL stream file. The values
+/// come back bit-for-bit (shortest-roundtrip printing on the way out), so
+/// an uncapped replay compares `==` with the in-memory series.
+pub fn replay_stream(path: &Path) -> anyhow::Result<RunMetrics> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read metrics stream {path:?}: {e}"))?;
+    let mut m = RunMetrics::default();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let j = crate::util::json::parse(line)
+            .map_err(|e| anyhow::anyhow!("bad stream line {}: {e}", lineno + 1))?;
+        let name = j.str_field("s")?;
+        let id = SeriesId::from_name(&name)
+            .ok_or_else(|| anyhow::anyhow!("unknown series `{name}` at line {}", lineno + 1))?;
+        m.series_mut(id).push(j.f64_field("t")?, j.f64_field("v")?);
+    }
+    Ok(m)
+}
 
 /// Everything measured during one training run.
 #[derive(Clone, Debug, Default)]
@@ -57,6 +182,11 @@ pub struct RunMetrics {
     /// order). The multi-process acceptance tests compare runs bitwise on
     /// this field; empty when a path does not report them.
     pub final_params: Vec<f32>,
+
+    /// Optional streaming sink: [`RunMetrics::record`] appends every
+    /// sample here the moment it happens. Excluded from equality — a run
+    /// is the same run with or without an observer attached.
+    pub stream: Option<Arc<MetricsStream>>,
 }
 
 /// Equality is exact — *bitwise* on every float (via [`Series`]'s bitwise
@@ -95,6 +225,40 @@ impl PartialEq for RunMetrics {
 }
 
 impl RunMetrics {
+    /// The in-memory series behind a [`SeriesId`].
+    fn series_mut(&mut self, id: SeriesId) -> &mut Series {
+        match id {
+            SeriesId::TrainLoss => &mut self.train_loss,
+            SeriesId::TestLoss => &mut self.test_loss,
+            SeriesId::TestAcc => &mut self.test_acc,
+            SeriesId::CompressionRatio => &mut self.compression_ratio,
+            SeriesId::Membership => &mut self.membership,
+        }
+    }
+
+    /// Record one live sample: push in-memory *and* append to the stream
+    /// sink if one is attached. With a stream cap, the in-memory series is
+    /// trimmed to the window (amortised: the front is drained in batches,
+    /// so memory stays ≤ 2×cap and pushes stay O(1) amortised).
+    pub fn record(&mut self, id: SeriesId, t: f64, v: f64) {
+        let cap = match &self.stream {
+            Some(st) => {
+                st.append(id, t, v);
+                st.cap
+            }
+            None => None,
+        };
+        let s = self.series_mut(id);
+        s.push(t, v);
+        if let Some(cap) = cap {
+            if s.len() >= cap.saturating_mul(2) {
+                let drop = s.len() - cap;
+                s.t.drain(..drop);
+                s.v.drain(..drop);
+            }
+        }
+    }
+
     /// Gradient throughput over the whole run.
     pub fn grads_per_sec(&self) -> f64 {
         if self.wall_time > 0.0 {
@@ -233,6 +397,74 @@ mod tests {
             ..Default::default()
         };
         assert!(empty.worker_imbalance().is_infinite());
+    }
+
+    #[test]
+    fn stream_replay_matches_in_memory_bitwise() {
+        let dir = std::env::temp_dir().join("hsgd_metrics_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("replay.jsonl");
+        let mut m = RunMetrics {
+            stream: Some(Arc::new(MetricsStream::create(&path).unwrap())),
+            ..Default::default()
+        };
+        // Awkward values on purpose: exact-f32 floats, huge ints, tiny
+        // fractions — the shortest-roundtrip printer must carry all bits.
+        let mut t = 0.0;
+        for i in 0..200u32 {
+            t += 0.1 + f64::from(i) * 1e-7;
+            m.record(SeriesId::TestLoss, t, f64::from(f32::from_bits(0x3f80_0000 + i)));
+            m.record(SeriesId::TestAcc, t, f64::from(i) * 0.5);
+            m.record(SeriesId::TrainLoss, t, 1.0 / f64::from(i + 1));
+        }
+        m.record(SeriesId::CompressionRatio, t, 51.37);
+        m.record(SeriesId::Membership, t, 3.0);
+        m.stream.as_ref().unwrap().flush();
+        let r = replay_stream(&path).unwrap();
+        assert_eq!(r.test_loss, m.test_loss);
+        assert_eq!(r.test_acc, m.test_acc);
+        assert_eq!(r.train_loss, m.train_loss);
+        assert_eq!(r.compression_ratio, m.compression_ratio);
+        assert_eq!(r.membership, m.membership);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn capped_stream_bounds_memory_but_files_everything() {
+        let dir = std::env::temp_dir().join("hsgd_metrics_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("capped.jsonl");
+        let stream = MetricsStream::create(&path).unwrap().with_cap(16);
+        let mut m = RunMetrics {
+            stream: Some(Arc::new(stream)),
+            ..Default::default()
+        };
+        for i in 0..10_000 {
+            m.record(SeriesId::TestLoss, i as f64, (i as f64).sin());
+        }
+        // In-memory window stays within 2×cap; the tail is the live view.
+        assert!(m.test_loss.len() < 32, "window len {}", m.test_loss.len());
+        assert_eq!(*m.test_loss.t.last().unwrap(), 9999.0);
+        m.stream.as_ref().unwrap().flush();
+        // The file is the complete history, bit-for-bit.
+        let r = replay_stream(&path).unwrap();
+        assert_eq!(r.test_loss.len(), 10_000);
+        let n = m.test_loss.len();
+        assert_eq!(r.test_loss.t[10_000 - n..], m.test_loss.t[..]);
+        assert_eq!(r.test_loss.v[10_000 - n..], m.test_loss.v[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn equality_ignores_the_stream_sink() {
+        let dir = std::env::temp_dir().join("hsgd_metrics_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("eq.jsonl");
+        let a = sample();
+        let mut b = sample();
+        b.stream = Some(Arc::new(MetricsStream::create(&path).unwrap()));
+        assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub use compress::{
 };
 pub use delay::DelayModel;
 pub use membership::Membership;
-pub use metrics::RunMetrics;
+pub use metrics::{replay_stream, MetricsStream, RunMetrics, SeriesId};
 pub use params::{ParamSnapshot, SnapshotCell};
 pub use policy::{Aggregator, Outcome, Policy};
 pub use server::ShardEvent;

@@ -33,10 +33,44 @@ use super::policy::{Aggregator, Outcome, Policy};
 use super::shard::ShardLayout;
 use crate::log_debug;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// One shard's live gauges for the read-only ops plane. Relaxed atomics —
+/// a status poll reads a near-instant snapshot, never a barrier: the shard
+/// thread publishes after handling each event and nobody blocks on it
+/// ("the status plane never touches the gradient plane", DESIGN.md §2.9).
+#[derive(Debug, Default)]
+pub struct ShardStatus {
+    /// Current sync threshold K(n).
+    pub k: AtomicU64,
+    /// Gradients buffered toward the next flush.
+    pub buffered: AtomicU64,
+    /// Applied-update version (monotone).
+    pub version: AtomicU64,
+    /// Live workers as this shard sees them (static runs: the worker count).
+    pub live: AtomicU64,
+    /// Membership transitions applied by this shard.
+    pub epoch: AtomicU64,
+}
+
+/// Shared status gauges for a whole run: one [`ShardStatus`] per shard.
+/// Handed to the shard threads (writers) and the serve frontend (reader);
+/// `None` in contexts nobody polls (in-process experiments, the simulator).
+#[derive(Debug)]
+pub struct StatusBoard {
+    pub shards: Vec<ShardStatus>,
+}
+
+impl StatusBoard {
+    pub fn new(shards: usize) -> StatusBoard {
+        StatusBoard {
+            shards: (0..shards).map(|_| ShardStatus::default()).collect(),
+        }
+    }
+}
 
 /// A gradient submission to one shard, in whatever wire format the worker
 /// encoded ([`ShardGrad`]). Full-dimension payloads (dense, int8) are
@@ -102,6 +136,10 @@ pub struct ServerConfig {
     /// one loop iteration instead of a poll tick; `None` (in-process runs,
     /// the threaded frontend's blocking pumps) changes nothing.
     pub reply_notify: Option<Arc<dyn Fn(usize) + Send + Sync>>,
+    /// Live ops-plane gauges. When set, each shard thread publishes its
+    /// K / buffer / version / membership gauges here (relaxed stores) after
+    /// every event; `None` costs nothing and changes nothing.
+    pub status: Option<Arc<StatusBoard>>,
 }
 
 /// What one shard thread hands back when the run ends.
@@ -340,6 +378,14 @@ pub fn run_shard(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
+        if let Some(board) = &cfg.status {
+            let st = &board.shards[shard];
+            st.k.store(agg.current_k() as u64, Ordering::Relaxed);
+            st.buffered.store(agg.buffered() as u64, Ordering::Relaxed);
+            st.version.store(store.version(), Ordering::Relaxed);
+            st.live.store(agg.live() as u64, Ordering::Relaxed);
+            st.epoch.store(agg.membership_epoch(), Ordering::Relaxed);
+        }
         if stop.load(Ordering::Relaxed) && !released_on_stop {
             // Release barrier-blocked workers so they can see the stop flag.
             let reply = Reply::Updated {
@@ -423,6 +469,7 @@ mod tests {
             elastic,
             min_quorum: 1,
             reply_notify: None,
+            status: None,
         };
         for ev in events {
             gtx.send(ev).unwrap();
@@ -603,6 +650,7 @@ mod tests {
             elastic: false,
             min_quorum: 1,
             reply_notify: None,
+            status: None,
         };
         let stop2 = Arc::clone(&stop);
         let cell = Arc::new(SnapshotCell::new(vec![0.0]));

@@ -40,7 +40,7 @@
 use super::super::checkpoint::Checkpoint;
 use super::super::clock::{Clock, VirtualClock};
 use super::super::compress::{submission_bytes, GradEncoder, ShardGrad};
-use super::super::metrics::RunMetrics;
+use super::super::metrics::{RunMetrics, SeriesId};
 use super::super::params::ParamStore;
 use super::super::policy::{Aggregator, Outcome};
 use super::super::shard::ShardLayout;
@@ -286,7 +286,10 @@ impl<'a> Simulation<'a> {
             workers,
             queue: EventQueue::default(),
             clock: VirtualClock::new(),
-            metrics: RunMetrics::default(),
+            metrics: RunMetrics {
+                stream: train.stream.clone(),
+                ..Default::default()
+            },
             eval_engine: (inputs.eval_engine)()?,
             test: inputs.test,
             probe: inputs.train_probe,
@@ -475,6 +478,9 @@ impl<'a> Simulation<'a> {
         self.metrics.final_params = self.assembled_params();
         self.sample_metrics(end)?;
         self.metrics.wall_time = t;
+        if let Some(st) = &self.metrics.stream {
+            st.flush();
+        }
         Ok(self.metrics)
     }
 
@@ -562,7 +568,8 @@ impl<'a> Simulation<'a> {
     fn membership_change(&mut self, worker: usize, join: bool, at: Duration) {
         self.live = if join { self.live + 1 } else { self.live - 1 };
         self.metrics.membership_epochs += 1;
-        self.metrics.membership.push(at.as_secs_f64(), self.live as f64);
+        self.metrics
+            .record(SeriesId::Membership, at.as_secs_f64(), self.live as f64);
         for s in 0..self.layout.shards() {
             let deliver_at = self.faults.deliver_time(s, at);
             self.queue.push(
@@ -933,13 +940,13 @@ impl<'a> Simulation<'a> {
         let t = at.as_secs_f64();
         let (test_loss, test_acc) = eval_on(eval_engine.as_mut(), params_buf, *test)?;
         let (train_loss, _) = eval_on(eval_engine.as_mut(), params_buf, *probe)?;
-        metrics.test_loss.push(t, test_loss);
-        metrics.test_acc.push(t, test_acc * 100.0);
-        metrics.train_loss.push(t, train_loss);
+        metrics.record(SeriesId::TestLoss, t, test_loss);
+        metrics.record(SeriesId::TestAcc, t, test_acc * 100.0);
+        metrics.record(SeriesId::TrainLoss, t, train_loss);
         // Cumulative bytes-on-wire ratio so far; pure integer-counter
         // arithmetic, so the series replays bitwise with the rest.
         let ratio = metrics.wire_compression();
-        metrics.compression_ratio.push(t, ratio);
+        metrics.record(SeriesId::CompressionRatio, t, ratio);
         Ok(())
     }
 

@@ -6,9 +6,9 @@
 use super::clock::{Clock, RealClock};
 use super::compress::WireFormat;
 use super::delay::DelayModel;
-use super::metrics::RunMetrics;
+use super::metrics::{MetricsStream, RunMetrics, SeriesId};
 use super::policy::Policy;
-use super::server::{merge_reports, run_shard, Reply, ServerConfig, ShardEvent};
+use super::server::{merge_reports, run_shard, Reply, ServerConfig, ShardEvent, StatusBoard};
 use super::shard::{assemble_params, shard_cells, ShardLayout};
 use super::worker::{run_worker, BatchSource, ShardEndpoints, WorkerConfig};
 use crate::data::Dataset;
@@ -115,6 +115,11 @@ pub struct TrainConfig {
     /// the renormalized barrier never drops below this many workers, so a
     /// depleted run waits for joiners instead of degenerating to K = 1.
     pub min_quorum: usize,
+    /// Streaming metrics sink (`--metrics-stream`): live series samples
+    /// are appended here as JSONL the moment they are recorded, instead of
+    /// only living in memory until the end-of-run dump. `None` (the
+    /// default) reproduces the in-memory-only behaviour bitwise.
+    pub stream: Option<Arc<MetricsStream>>,
 }
 
 impl TrainConfig {
@@ -134,6 +139,7 @@ impl TrainConfig {
             steps: None,
             elastic: false,
             min_quorum: 1,
+            stream: None,
         }
     }
 }
@@ -213,9 +219,13 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         elastic: cfg.elastic,
         min_quorum: cfg.min_quorum,
         reply_notify: None,
+        status: None,
     };
 
-    let mut metrics = RunMetrics::default();
+    let mut metrics = RunMetrics {
+        stream: cfg.stream.clone(),
+        ..Default::default()
+    };
     // Workers that have returned (steps-budget runs end when all have).
     let finished = std::sync::atomic::AtomicUsize::new(0);
     let result: anyhow::Result<()> = std::thread::scope(|s| {
@@ -350,9 +360,11 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
     result?;
     metrics.wall_time = clock.now().as_secs_f64();
     if metrics.bytes_sent > 0 {
-        metrics
-            .compression_ratio
-            .push(metrics.wall_time, metrics.wire_compression());
+        let (t, v) = (metrics.wall_time, metrics.wire_compression());
+        metrics.record(SeriesId::CompressionRatio, t, v);
+    }
+    if let Some(st) = &metrics.stream {
+        st.flush();
     }
     log_info!(
         "trainer",
@@ -441,6 +453,10 @@ pub fn serve_with(
     let mut delay_rng = Pcg64::new(cfg.seed, 7);
     let delayed_flags = cfg.delay.assign(cfg.workers, &mut delay_rng);
 
+    // The read-only ops plane: shard threads publish gauges, the frontend
+    // answers StatusRequest probes from them — no shared locks, no
+    // gradient-plane involvement.
+    let status = Arc::new(StatusBoard::new(layout.shards()));
     let mut server_cfg = ServerConfig {
         policy: cfg.policy.clone(),
         workers: cfg.workers,
@@ -450,6 +466,7 @@ pub fn serve_with(
         elastic: cfg.elastic,
         min_quorum: cfg.min_quorum,
         reply_notify: None,
+        status: Some(Arc::clone(&status)),
     };
 
     let listen_addr = listener.local_addr()?;
@@ -464,6 +481,7 @@ pub fn serve_with(
         Arc::clone(&stop),
         net.clone(),
         cfg.elastic,
+        Some(status),
     )?;
     // The reactor sleeps in poll(2); replies wake it immediately instead of
     // waiting out the tick. The threaded frontend's blocking pumps need no
@@ -477,7 +495,10 @@ pub fn serve_with(
         cfg.workers
     );
 
-    let mut metrics = RunMetrics::default();
+    let mut metrics = RunMetrics {
+        stream: cfg.stream.clone(),
+        ..Default::default()
+    };
     let mut fstats = crate::transport::tcp::FrontendStats::default();
     let result: anyhow::Result<()> = std::thread::scope(|s| {
         let _stop_guard = StopGuard(stop.as_ref());
@@ -558,9 +579,11 @@ pub fn serve_with(
     result?;
     metrics.wall_time = clock.now().as_secs_f64();
     if metrics.bytes_sent > 0 {
-        metrics
-            .compression_ratio
-            .push(metrics.wall_time, metrics.wire_compression());
+        let (t, v) = (metrics.wall_time, metrics.wire_compression());
+        metrics.record(SeriesId::CompressionRatio, t, v);
+    }
+    if let Some(st) = &metrics.stream {
+        st.flush();
     }
     log_info!(
         "trainer",
@@ -713,9 +736,9 @@ impl<'a> EvalLoop<'a> {
         let t = self.clock.now().as_secs_f64();
         let (test_loss, test_acc) = eval_on(self.engine, params_buf, self.test)?;
         let (train_loss, _) = eval_on(self.engine, params_buf, self.train_probe)?;
-        m.test_loss.push(t, test_loss);
-        m.test_acc.push(t, test_acc * 100.0);
-        m.train_loss.push(t, train_loss);
+        m.record(SeriesId::TestLoss, t, test_loss);
+        m.record(SeriesId::TestAcc, t, test_acc * 100.0);
+        m.record(SeriesId::TrainLoss, t, train_loss);
         Ok(())
     }
 }

@@ -21,6 +21,7 @@ COMMANDS:
   train                        one training run, print metrics
   serve                        run the parameter server over TCP (workers `join`)
   join                         run one gradient worker against a `serve` process
+  status                       poll a `serve` process's read-only ops endpoint
   compare                      run hybrid vs async vs sync, print charts
   table <1-5>                  regenerate a paper table
   figure <4-10>                regenerate a paper figure
@@ -53,6 +54,11 @@ COMMON OPTIONS:
                                  (default 1): the barrier never shrinks below
                                  N workers; a depleted run waits for joiners.
   --metrics-out FILE             write the run's metrics as JSON (train/serve)
+  --metrics-stream FILE          append each metric sample to FILE as JSONL while
+                                 the run progresses (train/serve/--sim); replayable
+                                 bit-for-bit via coordinator::replay_stream
+  --metrics-cap N                with --metrics-stream: keep only the newest ~N
+                                 samples per series in memory (the file keeps all)
   --quick                        smoke scale (seconds)
   --paper-scale                  the paper's 25 workers x 5 rounds x 100 s
   --out DIR                      results directory (default results/)
@@ -68,6 +74,9 @@ MULTI-PROCESS (see EXPERIMENTS.md for the localhost recipe):
   --reconnect-attempts (default 2). Server side: --frontend reactor|threaded
   picks the event-driven poll loop (default) or the legacy
   thread-per-connection frontend (same wire protocol, comparison baseline).
+  Ops plane: status --connect HOST:PORT prints the server's live status
+  document (membership, per-shard K(n)/buffer/version, byte rates) without
+  taking a worker slot; --path workers.active extracts one value.
 ";
 
 /// Build an `ExpConfig` from CLI options.
@@ -149,6 +158,7 @@ pub fn cli_main() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("join") => cmd_join(&args),
+        Some("status") => cmd_status(&args),
         Some("compare") => cmd_compare(&args),
         Some("table") => cmd_table(&args),
         Some("figure") => cmd_figure(&args),
@@ -231,7 +241,33 @@ fn train_config_from(args: &Args, cfg: &ExpConfig) -> anyhow::Result<crate::coor
         steps: cfg.steps,
         elastic: args.flag("elastic"),
         min_quorum,
+        stream: metrics_stream_from(args)?,
     })
+}
+
+/// The optional JSONL metrics sink (`--metrics-stream FILE`), with
+/// `--metrics-cap N` bounding the in-memory series to a sliding window
+/// while the file keeps everything (long-horizon runs).
+fn metrics_stream_from(
+    args: &Args,
+) -> anyhow::Result<Option<std::sync::Arc<crate::coordinator::MetricsStream>>> {
+    let Some(path) = args.get("metrics-stream") else {
+        anyhow::ensure!(
+            args.get("metrics-cap").is_none(),
+            "--metrics-cap needs --metrics-stream (the cap drops in-memory \
+             samples that only the stream file retains)"
+        );
+        return Ok(None);
+    };
+    let mut stream = crate::coordinator::MetricsStream::create(Path::new(path))?;
+    if let Some(cap) = args.get("metrics-cap") {
+        let n: usize = cap.parse().map_err(|_| {
+            anyhow::anyhow!("bad --metrics-cap `{cap}` (expected a positive integer)")
+        })?;
+        anyhow::ensure!(n > 0, "--metrics-cap must be at least 1");
+        stream = stream.with_cap(n);
+    }
+    Ok(Some(std::sync::Arc::new(stream)))
 }
 
 /// Transport tuning from CLI flags (defaults match `NetOptions`).
@@ -378,6 +414,27 @@ fn cmd_join(args: &Args) -> anyhow::Result<()> {
     println!("refreshes       : {}", report.refreshes);
     println!("unchanged acks  : {}", report.unchanged_replies);
     println!("bytes sent      : {} (frame granularity)", report.bytes_sent);
+    Ok(())
+}
+
+/// `hybrid-sgd status --connect HOST:PORT`: poll a serving process's
+/// read-only ops endpoint. The document is validated by our own JSON
+/// parser before a byte of it is printed; `--path a.b[2]` extracts one
+/// value with the lazy reader instead of printing the whole document.
+fn cmd_status(args: &Args) -> anyhow::Result<()> {
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("status needs --connect HOST:PORT"))?;
+    let doc = crate::transport::tcp::query_status(connect, &net_options(args))?;
+    let json = crate::util::json::parse(&doc)
+        .map_err(|e| anyhow::anyhow!("server sent a malformed status document: {e}"))?;
+    match args.get("path") {
+        Some(p) => match crate::util::json::scan_path(&doc, p)? {
+            Some(v) => println!("{}", v.to_string_compact()),
+            None => anyhow::bail!("path `{p}` is not present in the status document"),
+        },
+        None => println!("{}", json.to_string_pretty()),
+    }
     Ok(())
 }
 

@@ -256,6 +256,7 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 steps: cfg.steps,
                 elastic: false,
                 min_quorum: 1,
+                stream: None,
             };
             let inputs = RunInputs {
                 worker_engine: Arc::clone(&workload.worker_engine),

@@ -89,6 +89,7 @@ pub fn measure_conn_throughput(
         Arc::clone(&stop),
         net,
         false,
+        None,
     )?;
     let notify = frontend.reply_notifier();
 

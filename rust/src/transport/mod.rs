@@ -53,7 +53,7 @@ pub use reactor::TcpFrontend;
 pub use tcp::{FrontendStats, NetOptions, ThreadedFrontend, TcpTransport};
 
 use crate::coordinator::params::SnapshotCell;
-use crate::coordinator::server::{Reply, ShardEvent, ShardMsg};
+use crate::coordinator::server::{Reply, ShardEvent, ShardMsg, StatusBoard};
 use crate::coordinator::shard::ShardLayout;
 use crate::coordinator::worker::ShardEndpoints;
 use std::fmt;
@@ -109,14 +109,15 @@ impl Frontend {
         stop: Arc<AtomicBool>,
         net: NetOptions,
         elastic: bool,
+        status: Option<Arc<StatusBoard>>,
     ) -> std::io::Result<Frontend> {
         match kind {
             FrontendKind::Reactor => reactor::TcpFrontend::start(
-                listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic,
+                listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic, status,
             )
             .map(Frontend::Reactor),
             FrontendKind::Threaded => tcp::ThreadedFrontend::start(
-                listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic,
+                listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic, status,
             )
             .map(Frontend::Threaded),
         }
@@ -164,6 +165,99 @@ impl Frontend {
             Frontend::Threaded(f) => f.shutdown(),
         }
     }
+}
+
+/// Assemble the read-only status document both frontends serve in reply
+/// to [`Msg::StatusRequest`] (DESIGN.md §2.9). Everything here is read
+/// from atomics or immutable config — the gradient plane is never
+/// touched, so polling status cannot perturb a run's bitwise trace.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn render_status(
+    frontend: &str,
+    layout: &ShardLayout,
+    slots: usize,
+    active: usize,
+    ever_joined: usize,
+    grad_frame_bytes: u64,
+    submissions: u64,
+    uptime: Duration,
+    status: Option<&StatusBoard>,
+) -> String {
+    use crate::util::json::Utf8JsonWriter;
+    use std::sync::atomic::Ordering;
+    let mut w = Utf8JsonWriter::new();
+    w.begin_object();
+    w.key("now_ms");
+    w.num(
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0),
+    );
+    w.key("frontend");
+    w.str(frontend);
+    w.key("uptime_secs");
+    w.num(uptime.as_secs_f64());
+    w.key("workers");
+    w.begin_object();
+    w.key("slots");
+    w.num(slots as f64);
+    w.key("active");
+    w.num(active as f64);
+    w.key("ever_joined");
+    w.num(ever_joined as f64);
+    w.end_object();
+    // Membership is global (every shard sees the same join/leave events);
+    // shard 0's view stands for the run.
+    let (live, epoch) = match status {
+        Some(b) if !b.shards.is_empty() => (
+            b.shards[0].live.load(Ordering::Relaxed),
+            b.shards[0].epoch.load(Ordering::Relaxed),
+        ),
+        _ => (0, 0),
+    };
+    w.key("membership");
+    w.begin_object();
+    w.key("live");
+    w.num(live as f64);
+    w.key("epoch");
+    w.num(epoch as f64);
+    w.end_object();
+    w.key("shards");
+    w.begin_array();
+    if let Some(board) = status {
+        for (i, st) in board.shards.iter().enumerate() {
+            w.begin_object();
+            w.key("shard");
+            w.num(i as f64);
+            w.key("dim");
+            w.num(layout.range(i).len() as f64);
+            w.key("k");
+            w.num(st.k.load(Ordering::Relaxed) as f64);
+            w.key("buffered");
+            w.num(st.buffered.load(Ordering::Relaxed) as f64);
+            w.key("version");
+            w.num(st.version.load(Ordering::Relaxed) as f64);
+            w.end_object();
+        }
+    }
+    w.end_array();
+    w.key("bytes");
+    w.begin_object();
+    w.key("grad_frame_bytes");
+    w.num(grad_frame_bytes as f64);
+    w.key("submissions");
+    w.num(submissions as f64);
+    w.key("bytes_per_sec");
+    let secs = uptime.as_secs_f64();
+    w.num(if secs > 0.0 {
+        grad_frame_bytes as f64 / secs
+    } else {
+        0.0
+    });
+    w.end_object();
+    w.end_object();
+    w.finish()
 }
 
 /// Why a transport operation did not complete.

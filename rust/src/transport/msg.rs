@@ -31,6 +31,8 @@ const TAG_HEARTBEAT: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
 const TAG_LEAVE: u8 = 9;
 const TAG_EVICT: u8 = 10;
+const TAG_STATUS_REQ: u8 = 11;
+const TAG_STATUS: u8 = 12;
 
 /// Gradient payload tags (inside `SubmitGrad`).
 const GRAD_DENSE: u8 = 0;
@@ -114,6 +116,14 @@ pub enum Msg {
     /// must not redial under the old identity — unlike the `Shutdown`
     /// refusal, which a reconnecting client retries through.
     Evict { worker: u32 },
+    /// Client → server: read-only ops-plane probe — report the run's live
+    /// status. Answerable before a `Hello` (a dashboard never takes a
+    /// worker slot) and never touches the gradient plane.
+    StatusRequest,
+    /// Server → client: the status document, a UTF-8 JSON string (schema
+    /// in DESIGN.md §2.9). JSON rather than fixed fields so dashboards can
+    /// evolve without a wire-protocol bump.
+    Status { json: String },
 }
 
 /// Typed decode errors for the message layer.
@@ -504,6 +514,12 @@ impl Msg {
                 out.push(TAG_EVICT);
                 put_u32(out, *worker);
             }
+            Msg::StatusRequest => out.push(TAG_STATUS_REQ),
+            Msg::Status { json } => {
+                out.push(TAG_STATUS);
+                put_u32(out, json.len() as u32);
+                out.extend_from_slice(json.as_bytes());
+            }
         }
     }
 
@@ -562,6 +578,14 @@ impl Msg {
             TAG_SHUTDOWN => Msg::Shutdown,
             TAG_LEAVE => Msg::Leave { worker: r.u32()? },
             TAG_EVICT => Msg::Evict { worker: r.u32()? },
+            TAG_STATUS_REQ => Msg::StatusRequest,
+            TAG_STATUS => {
+                let n = r.u32()? as usize;
+                let json = std::str::from_utf8(r.take(n)?)
+                    .map_err(|_| WireError::Invalid("status document is not UTF-8".into()))?
+                    .to_string();
+                Msg::Status { json }
+            }
             t => return Err(WireError::UnknownMsg(t)),
         };
         r.done()?;
@@ -687,6 +711,32 @@ mod tests {
             Msg::decode(&buf[..3]),
             Err(WireError::Truncated { .. })
         ));
+        // StatusRequest + Status (the read-only ops plane)
+        assert!(matches!(roundtrip(&Msg::StatusRequest), Msg::StatusRequest));
+        let doc = r#"{"workers":{"active":3},"shards":[{"k":2}]}"#;
+        match roundtrip(&Msg::Status { json: doc.into() }) {
+            Msg::Status { json } => assert_eq!(json, doc),
+            other => panic!("{other:?}"),
+        }
+        // non-empty unicode survives (the doc may carry escaped keys)
+        match roundtrip(&Msg::Status { json: "{\"é\":1}".into() }) {
+            Msg::Status { json } => assert_eq!(json, "{\"é\":1}"),
+            other => panic!("{other:?}"),
+        }
+        // truncated status documents are typed errors, not panics
+        let mut buf = Vec::new();
+        Msg::Status { json: doc.into() }.encode_into(&mut buf);
+        for cut in [1, 4, buf.len() - 1] {
+            assert!(matches!(
+                Msg::decode(&buf[..cut]),
+                Err(WireError::Truncated { .. })
+            ));
+        }
+        // trailing garbage after a StatusRequest is rejected
+        let mut sr = Vec::new();
+        Msg::StatusRequest.encode_into(&mut sr);
+        sr.push(7);
+        assert!(matches!(Msg::decode(&sr), Err(WireError::Invalid(_))));
     }
 
     #[test]

@@ -40,7 +40,7 @@ use super::msg::{encode_snapshot_slice_into, Msg, WORKER_UNASSIGNED};
 use super::tcp::{FrontendStats, NetOptions};
 use crate::coordinator::compress::ShardGrad;
 use crate::coordinator::params::SnapshotCell;
-use crate::coordinator::server::{Reply, ShardEvent, ShardMsg};
+use crate::coordinator::server::{Reply, ShardEvent, ShardMsg, StatusBoard};
 use crate::coordinator::shard::ShardLayout;
 use crate::log_warn;
 use std::collections::{BinaryHeap, VecDeque};
@@ -392,6 +392,7 @@ impl TcpFrontend {
         stop: Arc<AtomicBool>,
         net: NetOptions,
         elastic: bool,
+        status: Option<Arc<StatusBoard>>,
     ) -> std::io::Result<TcpFrontend> {
         listener.set_nonblocking(true)?;
         let (waker, wake_rx) = Waker::pair()?;
@@ -418,6 +419,8 @@ impl TcpFrontend {
             stop: Arc::clone(&stop),
             net,
             elastic,
+            status,
+            started: Instant::now(),
             counters: Arc::clone(&counters),
             conns: Vec::new(),
             free: Vec::new(),
@@ -508,6 +511,11 @@ struct Reactor {
     stop: Arc<AtomicBool>,
     net: NetOptions,
     elastic: bool,
+    /// Per-shard live counters published by `run_shard` (the ops plane);
+    /// `None` when serving without a status board (unit tests).
+    status: Option<Arc<StatusBoard>>,
+    /// When serving began (uptime / bytes-per-second basis).
+    started: Instant,
     counters: Arc<Counters>,
     /// Connection slab; `free` holds vacated indices for reuse.
     conns: Vec<Option<Conn>>,
@@ -727,6 +735,14 @@ impl Reactor {
     /// slot marks a named re-attach as terminally evicted; anything else
     /// refuses with the retryable `Shutdown`.
     fn on_hello(&mut self, conn: &mut Conn, idx: usize, msg: Msg) -> Result<(), String> {
+        // A status probe never takes a worker slot: answer from the
+        // handshake phase and leave the connection there (the probe closes
+        // when it has read its document; liveness bounds a lingering one).
+        if matches!(msg, Msg::StatusRequest) {
+            let json = self.status_doc();
+            self.queue(conn, &Msg::Status { json });
+            return Ok(());
+        }
         let (requested, wire) = match msg {
             Msg::Hello { worker, wire, .. } => (worker, wire),
             other => return Err(format!("expected Hello, got {other:?}")),
@@ -889,11 +905,32 @@ impl Reactor {
             Msg::Shutdown => return Err(String::new()), // clean client exit
             Msg::Leave { .. } => return Err(String::new()), // clean departure
             Msg::Hello { .. } => {} // duplicate hello: ignore
+            Msg::StatusRequest => {
+                // Read-only ops probe from an attached worker; the reply
+                // is assembled from atomics, never the gradient plane.
+                let json = self.status_doc();
+                self.queue(conn, &Msg::Status { json });
+            }
             other => {
                 log_warn!("transport", "worker {worker} sent unexpected {other:?}");
             }
         }
         Ok(())
+    }
+
+    /// The status document (DESIGN.md §2.9), assembled from atomics.
+    fn status_doc(&self) -> String {
+        super::render_status(
+            "reactor",
+            &self.layout,
+            self.slots.len(),
+            self.counters.active_conns.load(Ordering::Relaxed),
+            self.counters.ever_joined.load(Ordering::Relaxed),
+            self.counters.grad_frame_bytes.load(Ordering::Relaxed),
+            self.counters.submissions.load(Ordering::Relaxed),
+            self.started.elapsed(),
+            self.status.as_deref(),
+        )
     }
 
     /// Encode `msg` and append it, framed, onto `conn`'s write queue.
@@ -1215,6 +1252,7 @@ mod tests {
             Arc::clone(&stop),
             quick_net(),
             elastic,
+            Some(Arc::new(StatusBoard::new(2))),
         )
         .unwrap();
         (frontend, addr, grad_rxs, reply_txs, stop)
@@ -1549,6 +1587,43 @@ mod tests {
         .unwrap();
         let msg = recv_grad(&grad_rxs[0], Duration::from_secs(2));
         assert_eq!(msg.worker, 0);
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_status_endpoint_answers_without_taking_a_slot() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_reactor(1, false);
+        // A pre-attach probe answers from the handshake phase...
+        let doc = crate::transport::tcp::query_status(&addr, &quick_net()).unwrap();
+        let json = crate::util::json::parse(&doc).expect("status must parse");
+        assert_eq!(json.get("frontend").and_then(|j| j.as_str()), Some("reactor"));
+        let workers = json.get("workers").expect("workers object");
+        assert_eq!(workers.get("slots").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(workers.get("active").and_then(|j| j.as_f64()), Some(0.0));
+        // ...and the lazy reader agrees with the full parse.
+        assert_eq!(
+            crate::util::json::scan_path(&doc, "workers.active").unwrap(),
+            Some(crate::util::json::Json::Num(0.0)),
+        );
+        // ...without consuming the single worker slot:
+        let t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        // A mid-run probe sees the attached worker and per-shard entries.
+        let doc = crate::transport::tcp::query_status(&addr, &quick_net()).unwrap();
+        assert_eq!(
+            crate::util::json::scan_path(&doc, "workers.active").unwrap(),
+            Some(crate::util::json::Json::Num(1.0)),
+        );
+        assert_eq!(
+            crate::util::json::scan_path(&doc, "shards[1].shard").unwrap(),
+            Some(crate::util::json::Json::Num(1.0)),
+        );
+        // Status traffic is ops-plane only: gradient counters untouched.
+        let stats = frontend.stats();
+        assert_eq!(stats.grad_frame_bytes, 0);
+        assert_eq!(stats.submissions, 0);
         drop(t);
         frontend.shutdown();
     }

@@ -39,7 +39,7 @@ use super::msg::{encode_submit_into, Msg, WORKER_UNASSIGNED};
 use super::{Transport, TransportError};
 use crate::coordinator::compress::ShardGrad;
 use crate::coordinator::params::SnapshotCell;
-use crate::coordinator::server::{Reply, ShardEvent, ShardMsg};
+use crate::coordinator::server::{Reply, ShardEvent, ShardMsg, StatusBoard};
 use crate::coordinator::shard::ShardLayout;
 use crate::log_warn;
 use std::io::{Read, Write};
@@ -197,6 +197,30 @@ fn dial_with_backoff(addr: &str, budget: Duration) -> anyhow::Result<TcpStream> 
     match last_err {
         Some(e) => Err(anyhow::anyhow!("could not connect to {addr}: {e}")),
         None => Err(anyhow::anyhow!("could not connect to {addr}: dial budget elapsed")),
+    }
+}
+
+/// Dial `addr`, send one `StatusRequest`, and return the server's status
+/// document (a JSON string — the transport behind `hybrid-sgd status`).
+/// Answered from the handshake phase of either frontend, so the probe
+/// never consumes a worker slot and never touches the gradient plane.
+pub fn query_status(addr: &str, net: &NetOptions) -> anyhow::Result<String> {
+    let mut stream = dial_with_backoff(addr, net.connect_timeout)?;
+    stream.set_nodelay(true).ok();
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    Msg::StatusRequest.encode_into(&mut msg_buf);
+    encode_frame_into(&msg_buf, &mut frame_buf);
+    stream.write_all(&frame_buf)?;
+    let mut reader = FrameReader::new();
+    let mut payload = Vec::new();
+    let deadline = Instant::now() + net.hb_timeout;
+    loop {
+        match read_msg_blocking(&mut stream, &mut reader, &mut payload, deadline)? {
+            Msg::Status { json } => return Ok(json),
+            Msg::Heartbeat { .. } => {} // idle server chatter: keep waiting
+            other => anyhow::bail!("expected Status, got {other:?}"),
+        }
     }
 }
 
@@ -792,6 +816,11 @@ struct Shared {
     /// as `ShardEvent::Join`/`Leave` and evict (instead of refuse-and-retry)
     /// a worker whose slot is taken.
     elastic: bool,
+    /// Per-shard live counters published by `run_shard` (the ops plane);
+    /// `None` when serving without a status board (unit tests).
+    status: Option<Arc<StatusBoard>>,
+    /// When serving began (uptime / bytes-per-second basis).
+    started: Instant,
     /// Submission frames received, frame-granularity bytes.
     grad_frame_bytes: AtomicU64,
     /// Distinct submissions seen (shard-0 submit frames).
@@ -834,6 +863,7 @@ impl ThreadedFrontend {
         stop: Arc<AtomicBool>,
         net: NetOptions,
         elastic: bool,
+        status: Option<Arc<StatusBoard>>,
     ) -> std::io::Result<ThreadedFrontend> {
         listener.set_nonblocking(true)?;
         let slots = reply_rxs
@@ -855,6 +885,8 @@ impl ThreadedFrontend {
             stop,
             net,
             elastic,
+            status,
+            started: Instant::now(),
             grad_frame_bytes: AtomicU64::new(0),
             submissions: AtomicU64::new(0),
             active_conns: AtomicUsize::new(0),
@@ -959,6 +991,21 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
+/// The status document (DESIGN.md §2.9), assembled from atomics.
+fn status_doc(shared: &Shared) -> String {
+    super::render_status(
+        "threaded",
+        &shared.layout,
+        shared.delayed.len(),
+        shared.active_conns.load(Ordering::Relaxed),
+        shared.ever_joined.load(Ordering::Relaxed),
+        shared.grad_frame_bytes.load(Ordering::Relaxed),
+        shared.submissions.load(Ordering::Relaxed),
+        shared.started.elapsed(),
+        shared.status.as_deref(),
+    )
+}
+
 /// Serve one worker connection end to end. Returns when the worker
 /// disconnects, the stream corrupts, liveness lapses, or the run stops.
 fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
@@ -968,6 +1015,17 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
     // --- attach handshake ---
     let deadline = Instant::now() + shared.net.hb_timeout;
     let hello = read_msg_blocking(&mut stream, &mut reader, &mut payload, deadline)?;
+    // A status probe never takes a worker slot: answer inline on the
+    // handshake path and let the probe close the connection.
+    if matches!(hello, Msg::StatusRequest) {
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        let mut s = Mutex::new(stream);
+        let json = status_doc(shared);
+        let _ = write_msg(&s, &Msg::Status { json }, &mut msg_buf, &mut frame_buf);
+        let _ = s.get_mut().unwrap().flush();
+        return Ok(());
+    }
     let (requested, wire) = match hello {
         Msg::Hello { worker, wire, .. } => (worker, wire),
         other => anyhow::bail!("expected Hello, got {other:?}"),
@@ -1251,6 +1309,15 @@ fn server_read_loop(
                         // the socket to die or the heartbeat to lapse.
                         Msg::Leave { .. } => return Ok(()),
                         Msg::Hello { .. } => {}         // duplicate hello: ignore
+                        Msg::StatusRequest => {
+                            // Read-only ops probe from an attached worker;
+                            // assembled from atomics, never the gradient
+                            // plane.
+                            let json = status_doc(shared);
+                            if out_tx.send(Msg::Status { json }).is_err() {
+                                return Ok(());
+                            }
+                        }
                         other => {
                             log_warn!("transport", "worker {id} sent unexpected {other:?}");
                         }
@@ -1405,6 +1472,7 @@ mod tests {
             Arc::clone(&stop),
             quick_net(),
             elastic,
+            Some(Arc::new(StatusBoard::new(2))),
         )
         .unwrap();
         (frontend, addr, grad_rxs, reply_txs, stop)
@@ -1491,6 +1559,37 @@ mod tests {
             + 8) as u64;
         assert_eq!(sent, expected);
 
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn status_endpoint_answers_without_taking_a_slot() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_frontend(1);
+        // A pre-attach probe answers on the handshake path...
+        let doc = query_status(&addr, &quick_net()).unwrap();
+        let json = crate::util::json::parse(&doc).expect("status must parse");
+        assert_eq!(
+            json.get("frontend").and_then(|j| j.as_str()),
+            Some("threaded")
+        );
+        let workers = json.get("workers").expect("workers object");
+        assert_eq!(workers.get("slots").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(workers.get("active").and_then(|j| j.as_f64()), Some(0.0));
+        // ...without consuming the single worker slot:
+        let t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        // A mid-run probe sees the attached worker; gradient counters
+        // stay untouched by status traffic.
+        let doc = query_status(&addr, &quick_net()).unwrap();
+        assert_eq!(
+            crate::util::json::scan_path(&doc, "workers.active").unwrap(),
+            Some(crate::util::json::Json::Num(1.0)),
+        );
+        let stats = frontend.stats();
+        assert_eq!(stats.grad_frame_bytes, 0);
+        assert_eq!(stats.submissions, 0);
         drop(t);
         frontend.shutdown();
     }
@@ -1596,6 +1695,7 @@ mod tests {
                 Arc::clone(&stop),
                 quick_net(),
                 false,
+                None,
             )
             .unwrap();
             std::thread::sleep(Duration::from_millis(400));

@@ -78,39 +78,61 @@ impl Args {
         self.parse_or(name, default)
     }
 
-    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+    /// Fallible core of the typed accessors: `Ok(None)` if the option is
+    /// absent, `Err` with a user-facing message if present but malformed.
+    fn parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
         match self.get(name) {
-            Some(s) => s.parse().unwrap_or_else(|_| {
-                eprintln!("warning: could not parse --{name} {s:?}; using default");
-                std::process::exit(2)
-            }),
-            None => default,
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{name}: {s:?}")),
+            None => Ok(None),
+        }
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.parsed(name) {
+            Ok(v) => v.unwrap_or(default),
+            Err(msg) => die(&msg),
+        }
+    }
+
+    /// Fallible core of the list accessors: parse a comma-separated list,
+    /// reporting which element was malformed.
+    fn list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    let p = p.trim();
+                    p.parse()
+                        .map_err(|_| format!("invalid element {p:?} in --{name} {s:?}"))
+                })
+                .collect(),
+            None => Ok(default.to_vec()),
         }
     }
 
     /// Comma-separated list of f64, e.g. `--stds 0.25,0.5,1.0`.
     pub fn f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
-        match self.get(name) {
-            Some(s) => s
-                .split(',')
-                .filter(|p| !p.is_empty())
-                .map(|p| p.trim().parse().expect("bad float in list"))
-                .collect(),
-            None => default.to_vec(),
-        }
+        self.list(name, default).unwrap_or_else(|msg| die(&msg))
     }
 
     /// Comma-separated list of usize.
     pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
-        match self.get(name) {
-            Some(s) => s
-                .split(',')
-                .filter(|p| !p.is_empty())
-                .map(|p| p.trim().parse().expect("bad integer in list"))
-                .collect(),
-            None => default.to_vec(),
-        }
+        self.list(name, default).unwrap_or_else(|msg| die(&msg))
     }
+}
+
+/// Malformed user input is an error exit (status 2), stated as such on
+/// stderr — never a panic, and never a silent fallback to the default.
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2)
 }
 
 #[cfg(test)]
@@ -153,5 +175,30 @@ mod tests {
         let a = Args::parse_from(toks("--x 1"), true);
         assert_eq!(a.subcommand, None);
         assert_eq!(a.usize_or("x", 0), 1);
+    }
+
+    // The public accessors exit the process on malformed input, so the
+    // error paths are tested through the fallible cores they wrap.
+
+    #[test]
+    fn parsed_reports_malformed_scalars() {
+        let a = Args::parse_from(toks("--n nope --k 3"), false);
+        let err = a.parsed::<usize>("n").unwrap_err();
+        assert!(err.contains("--n") && err.contains("nope"), "{err}");
+        assert_eq!(a.parsed::<usize>("k").unwrap(), Some(3));
+        assert_eq!(a.parsed::<usize>("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn list_reports_the_malformed_element() {
+        let a = Args::parse_from(toks("--stds 0.25,oops,1.0"), false);
+        let err = a.list::<f64>("stds", &[]).unwrap_err();
+        assert!(err.contains("\"oops\"") && err.contains("--stds"), "{err}");
+        let a = Args::parse_from(toks("--sizes 8,x"), false);
+        assert!(a.list::<usize>("sizes", &[]).is_err());
+        // Well-formed and absent lists still go through.
+        let a = Args::parse_from(toks("--stds 0.25,0.5"), false);
+        assert_eq!(a.list::<f64>("stds", &[]).unwrap(), vec![0.25, 0.5]);
+        assert_eq!(a.list::<f64>("missing", &[1.0]).unwrap(), vec![1.0]);
     }
 }

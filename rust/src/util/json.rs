@@ -156,13 +156,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
+            Json::Num(n) => write_num(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -201,6 +195,18 @@ impl Json {
     }
 }
 
+/// The one number-formatting rule, shared by the tree writer and the
+/// streaming writer: integral values within exact-i64 range print without a
+/// fraction, everything else uses Rust's shortest-roundtrip `{}` — so a
+/// value survives print → parse bit-for-bit (metrics replay relies on it).
+fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -217,6 +223,256 @@ fn write_escaped(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+// ---- streaming writer -------------------------------------------------
+
+/// Forward-only incremental JSON writer (the Chic `Utf8JsonWriter`
+/// pattern): containers are opened and appended to without ever
+/// materialising a [`Json`] tree, so a multi-hour metrics stream costs one
+/// line of buffer at a time instead of the whole series in memory.
+///
+/// Output is compact (no whitespace) and uses the same escaping and
+/// shortest-roundtrip number formatting as [`Json::to_string_compact`], so
+/// everything it emits parses back bit-for-bit via [`parse`].
+///
+/// Structural misuse — a value where a key is required, `end_object` inside
+/// an array, a second top-level value — is a programmer error and panics;
+/// this type never sees untrusted input.
+#[derive(Debug, Default)]
+pub struct Utf8JsonWriter {
+    out: String,
+    /// One frame per open container: `b'{'` or `b'['`, with the number of
+    /// elements emitted so far (for comma placement).
+    stack: Vec<(u8, usize)>,
+    /// A key has been written and its value has not.
+    key_pending: bool,
+    /// A complete top-level value has been emitted.
+    done: bool,
+}
+
+impl Utf8JsonWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Finish and take the document. Panics if a container is still open.
+    pub fn finish(self) -> String {
+        assert!(self.stack.is_empty(), "unclosed container in JSON writer");
+        assert!(self.done, "empty JSON writer finished");
+        self.out
+    }
+
+    /// Comma/colon bookkeeping before any value or container start.
+    fn pre_value(&mut self) {
+        match self.stack.last_mut() {
+            Some((b'{', _)) => {
+                assert!(self.key_pending, "object value without a key");
+                self.key_pending = false;
+            }
+            Some((b'[', n)) => {
+                if *n > 0 {
+                    self.out.push(',');
+                }
+                *n += 1;
+            }
+            None => {
+                assert!(!self.done, "second top-level JSON value");
+                self.done = true;
+            }
+        }
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        match self.stack.last_mut() {
+            Some((b'{', n)) => {
+                assert!(!self.key_pending, "two keys in a row");
+                if *n > 0 {
+                    self.out.push(',');
+                }
+                *n += 1;
+            }
+            _ => panic!("key outside an object"),
+        }
+        write_escaped(&mut self.out, k);
+        self.out.push(':');
+        self.key_pending = true;
+        self
+    }
+
+    pub fn begin_object(&mut self) -> &mut Self {
+        self.pre_value();
+        self.stack.push((b'{', 0));
+        self.out.push('{');
+        self
+    }
+
+    pub fn end_object(&mut self) -> &mut Self {
+        assert!(!self.key_pending, "key without a value");
+        match self.stack.pop() {
+            Some((b'{', _)) => self.out.push('}'),
+            _ => panic!("end_object without a matching begin_object"),
+        }
+        self
+    }
+
+    pub fn begin_array(&mut self) -> &mut Self {
+        self.pre_value();
+        self.stack.push((b'[', 0));
+        self.out.push('[');
+        self
+    }
+
+    pub fn end_array(&mut self) -> &mut Self {
+        match self.stack.pop() {
+            Some((b'[', _)) => self.out.push(']'),
+            _ => panic!("end_array without a matching begin_array"),
+        }
+        self
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.pre_value();
+        write_escaped(&mut self.out, s);
+        self
+    }
+
+    pub fn num(&mut self, n: f64) -> &mut Self {
+        self.pre_value();
+        write_num(&mut self.out, n);
+        self
+    }
+
+    pub fn bool(&mut self, b: bool) -> &mut Self {
+        self.pre_value();
+        self.out.push_str(if b { "true" } else { "false" });
+        self
+    }
+
+    pub fn null(&mut self) -> &mut Self {
+        self.pre_value();
+        self.out.push_str("null");
+        self
+    }
+
+    /// Splice an already-built [`Json`] value (compact form).
+    pub fn value(&mut self, v: &Json) -> &mut Self {
+        self.pre_value();
+        self.out.push_str(&v.to_string_compact());
+        self
+    }
+}
+
+// ---- lazy path scanning -----------------------------------------------
+
+/// One step of a scan path: an object key or an array index.
+#[derive(Debug, PartialEq, Eq)]
+enum Seg {
+    Key(String),
+    Index(usize),
+}
+
+/// Parse `a.b[2].c` into segments. A leading index (`[0].x`) is allowed.
+fn parse_path(path: &str) -> anyhow::Result<Vec<Seg>> {
+    let mut segs = Vec::new();
+    for part in path.split('.') {
+        let mut rest = part;
+        // Key part before any `[`, then zero or more `[n]` suffixes.
+        let key_end = rest.find('[').unwrap_or(rest.len());
+        let key = &rest[..key_end];
+        if !key.is_empty() {
+            segs.push(Seg::Key(key.to_string()));
+        } else if key_end != 0 || part.is_empty() {
+            anyhow::bail!("empty segment in path `{path}`");
+        }
+        rest = &rest[key_end..];
+        while let Some(stripped) = rest.strip_prefix('[') {
+            let close = stripped
+                .find(']')
+                .ok_or_else(|| anyhow::anyhow!("unclosed `[` in path `{path}`"))?;
+            let idx: usize = stripped[..close]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad index in path `{path}`"))?;
+            segs.push(Seg::Index(idx));
+            rest = &stripped[close + 1..];
+        }
+        if !rest.is_empty() {
+            anyhow::bail!("trailing garbage `{rest}` in path `{path}`");
+        }
+    }
+    Ok(segs)
+}
+
+/// Lazily extract the value at `path` (e.g. `"shards[2].k"`) from a JSON
+/// document — the ADR-002 pattern: tokenize forward, [`Parser::skip_value`]
+/// past everything off-path, and build a [`Json`] tree only for the target
+/// subtree. Never parses past the end of the match, so pulling one field
+/// out of a large status document stays O(prefix), not O(document).
+///
+/// Returns `Ok(None)` when the path does not exist (missing key, index out
+/// of range, or a path step applied to the wrong container kind); `Err`
+/// only on malformed JSON along the scanned prefix or a malformed path.
+pub fn scan_path(input: &str, path: &str) -> anyhow::Result<Option<Json>> {
+    let segs = parse_path(path)?;
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos: 0,
+    };
+    'seg: for seg in &segs {
+        p.skip_ws();
+        match seg {
+            Seg::Key(want) => {
+                if p.peek() != Some(b'{') {
+                    return Ok(None);
+                }
+                p.pos += 1;
+                p.skip_ws();
+                if p.peek() == Some(b'}') {
+                    return Ok(None);
+                }
+                loop {
+                    p.skip_ws();
+                    let k = p.string()?;
+                    p.skip_ws();
+                    p.expect(b':')?;
+                    if k == *want {
+                        continue 'seg; // parser now sits at the value
+                    }
+                    p.skip_value()?;
+                    p.skip_ws();
+                    match p.bump()? {
+                        b',' => continue,
+                        b'}' => return Ok(None),
+                        c => anyhow::bail!("expected `,` or `}}`, got `{}`", c as char),
+                    }
+                }
+            }
+            Seg::Index(want) => {
+                if p.peek() != Some(b'[') {
+                    return Ok(None);
+                }
+                p.pos += 1;
+                p.skip_ws();
+                if p.peek() == Some(b']') {
+                    return Ok(None);
+                }
+                let mut i = 0usize;
+                loop {
+                    if i == *want {
+                        continue 'seg;
+                    }
+                    p.skip_value()?;
+                    p.skip_ws();
+                    match p.bump()? {
+                        b',' => i += 1,
+                        b']' => return Ok(None),
+                        c => anyhow::bail!("expected `,` or `]`, got `{}`", c as char),
+                    }
+                }
+            }
+        }
+    }
+    p.value().map(Some)
 }
 
 /// Parse a JSON document. Errors carry a byte offset for debugging.
@@ -388,6 +644,90 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Skip one value without building a tree — the lazy-scan workhorse.
+    /// Structural (container punctuation, string escapes) errors are
+    /// caught; scalar contents are skipped byte-wise, their validation
+    /// deferred to whoever eventually parses them.
+    fn skip_value(&mut self) -> anyhow::Result<()> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.bump()? {
+                        b',' => continue,
+                        b'}' => return Ok(()),
+                        c => anyhow::bail!("expected `,` or `}}`, got `{}`", c as char),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.bump()? {
+                        b',' => continue,
+                        b']' => return Ok(()),
+                        c => anyhow::bail!("expected `,` or `]`, got `{}`", c as char),
+                    }
+                }
+            }
+            Some(b'"') => self.skip_string(),
+            Some(b't') => self.lit("true", Json::Null).map(|_| ()),
+            Some(b'f') => self.lit("false", Json::Null).map(|_| ()),
+            Some(b'n') => self.lit("null", Json::Null).map(|_| ()),
+            Some(_) => {
+                let start = self.pos;
+                if self.peek() == Some(b'-') {
+                    self.pos += 1;
+                }
+                while matches!(
+                    self.peek(),
+                    Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+                ) {
+                    self.pos += 1;
+                }
+                if self.pos == start {
+                    anyhow::bail!("unexpected byte at {}", start);
+                }
+                Ok(())
+            }
+            None => anyhow::bail!("unexpected end of JSON"),
+        }
+    }
+
+    /// Skip a string without decoding it. Byte-wise is UTF-8-safe:
+    /// continuation bytes are ≥ 0x80, so they can never alias `"` or `\`.
+    fn skip_string(&mut self) -> anyhow::Result<()> {
+        self.expect(b'"')?;
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    self.bump()?;
+                }
+                _ => {}
+            }
+        }
+    }
+
     fn hex4(&mut self) -> anyhow::Result<u16> {
         let mut v = 0u16;
         for _ in 0..4 {
@@ -481,5 +821,254 @@ mod tests {
     fn integers_print_without_fraction() {
         let v = Json::Num(32.0);
         assert_eq!(v.to_string_compact(), "32");
+    }
+
+    // ---- streaming writer ------------------------------------------
+
+    #[test]
+    fn streaming_writer_builds_nested_documents() {
+        let mut w = Utf8JsonWriter::new();
+        w.begin_object();
+        w.key("s").str("test_loss");
+        w.key("t").num(1.5);
+        w.key("v").num(-3.0);
+        w.key("tags").begin_array().str("a\nb").num(7.0).end_array();
+        w.key("inner").begin_object().key("ok").bool(true).end_object();
+        w.key("none").null();
+        w.end_object();
+        let s = w.finish();
+        let v = parse(&s).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("test_loss"));
+        assert_eq!(v.get("t").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("tags").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("inner").unwrap().get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("none"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn streaming_writer_scalar_and_empty_containers() {
+        let mut w = Utf8JsonWriter::new();
+        w.num(42.0);
+        assert_eq!(w.finish(), "42");
+        let mut w = Utf8JsonWriter::new();
+        w.begin_array().end_array();
+        assert_eq!(w.finish(), "[]");
+        let mut w = Utf8JsonWriter::new();
+        w.begin_object().end_object();
+        assert_eq!(w.finish(), "{}");
+    }
+
+    #[test]
+    #[should_panic(expected = "object value without a key")]
+    fn streaming_writer_rejects_value_without_key() {
+        let mut w = Utf8JsonWriter::new();
+        w.begin_object().num(1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unclosed container")]
+    fn streaming_writer_rejects_unclosed_container() {
+        let mut w = Utf8JsonWriter::new();
+        w.begin_array();
+        w.finish();
+    }
+
+    // ---- lazy path scanning ----------------------------------------
+
+    #[test]
+    fn scan_path_extracts_nested_values() {
+        let doc = r#"{"a": {"b": [10, {"c": "hit"}, 30]}, "z": [1,2]}"#;
+        assert_eq!(
+            scan_path(doc, "a.b[1].c").unwrap(),
+            Some(Json::Str("hit".into()))
+        );
+        assert_eq!(scan_path(doc, "a.b[2]").unwrap(), Some(Json::Num(30.0)));
+        assert_eq!(scan_path(doc, "z[0]").unwrap(), Some(Json::Num(1.0)));
+        assert_eq!(
+            scan_path(doc, "a.b").unwrap().unwrap().as_arr().unwrap().len(),
+            3
+        );
+        // Missing key, out-of-range index, wrong container kind: None.
+        assert_eq!(scan_path(doc, "a.x").unwrap(), None);
+        assert_eq!(scan_path(doc, "a.b[3]").unwrap(), None);
+        assert_eq!(scan_path(doc, "z.k").unwrap(), None);
+        assert_eq!(scan_path(doc, "a[0]").unwrap(), None);
+    }
+
+    #[test]
+    fn scan_path_handles_escapes_and_stops_early() {
+        // Keys and values with \uXXXX escapes (incl. a surrogate pair).
+        let doc = r#"{"ké": "café", "emoji": "😀", "after": 1}"#;
+        assert_eq!(
+            scan_path(doc, "ké").unwrap(),
+            Some(Json::Str("café".into()))
+        );
+        assert_eq!(
+            scan_path(doc, "emoji").unwrap(),
+            Some(Json::Str("😀".into()))
+        );
+        // Lazy: garbage *after* the matched value is never scanned.
+        let doc = r#"{"hit": 7, "rest": <not json>"#;
+        assert_eq!(scan_path(doc, "hit").unwrap(), Some(Json::Num(7.0)));
+        // ...but structural garbage before the match is an error.
+        assert!(scan_path(r#"{"a" 1, "hit": 7}"#, "hit").is_err());
+    }
+
+    #[test]
+    fn scan_path_rejects_malformed_paths() {
+        assert!(scan_path("{}", "").is_err());
+        assert!(scan_path("{}", "a..b").is_err());
+        assert!(scan_path("{}", "a[").is_err());
+        assert!(scan_path("{}", "a[x]").is_err());
+        assert!(scan_path("{}", "a[0]b").is_err());
+    }
+
+    // ---- property tests --------------------------------------------
+
+    use crate::util::rng::Pcg64;
+
+    /// Random string over a troublesome alphabet: quotes, backslashes,
+    /// control characters (printed as \uXXXX), multibyte and astral chars.
+    fn gen_string(rng: &mut Pcg64) -> String {
+        const ALPHABET: &[char] = &[
+            'a', 'b', 'Z', '0', ' ', '"', '\\', '\n', '\r', '\t', '\u{1}', '\u{1f}', 'é', 'ß',
+            '中', '😀', '/',
+        ];
+        let len = rng.below(8) as usize;
+        (0..len)
+            .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize])
+            .collect()
+    }
+
+    fn gen_num(rng: &mut Pcg64) -> f64 {
+        match rng.below(4) {
+            0 => rng.below(2000) as f64 - 1000.0,
+            1 => rng.uniform(-1e3, 1e3),
+            2 => rng.uniform(-1.0, 1.0) * 1e18,
+            _ => f64::from_bits(rng.next_u64() >> 2), // finite, weird mantissas
+        }
+    }
+
+    /// Random Json tree. Object keys are path-safe (`k0`, `k1`, ...) and
+    /// unique per object so scan-vs-get agreement is well-defined.
+    fn gen_json(rng: &mut Pcg64, depth: usize) -> Json {
+        let scalar = depth == 0 || rng.chance(0.4);
+        if scalar {
+            match rng.below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num(gen_num(rng)),
+                _ => Json::Str(gen_string(rng)),
+            }
+        } else if rng.chance(0.5) {
+            let n = rng.below(4) as usize;
+            Json::Arr((0..n).map(|_| gen_json(rng, depth - 1)).collect())
+        } else {
+            let n = rng.below(4) as usize;
+            Json::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+
+    /// Emit a Json tree through the streaming writer, leaf by leaf.
+    fn stream_out(w: &mut Utf8JsonWriter, v: &Json) {
+        match v {
+            Json::Null => {
+                w.null();
+            }
+            Json::Bool(b) => {
+                w.bool(*b);
+            }
+            Json::Num(n) => {
+                w.num(*n);
+            }
+            Json::Str(s) => {
+                w.str(s);
+            }
+            Json::Arr(a) => {
+                w.begin_array();
+                for x in a {
+                    stream_out(w, x);
+                }
+                w.end_array();
+            }
+            Json::Obj(m) => {
+                w.begin_object();
+                for (k, x) in m {
+                    w.key(k);
+                    stream_out(w, x);
+                }
+                w.end_object();
+            }
+        }
+    }
+
+    #[test]
+    fn prop_streaming_writer_output_parses_back_equal() {
+        let mut rng = Pcg64::seeded(0xbeef);
+        for _ in 0..300 {
+            let v = gen_json(&mut rng, 5);
+            let mut w = Utf8JsonWriter::new();
+            stream_out(&mut w, &v);
+            let s = w.finish();
+            let back = parse(&s).unwrap_or_else(|e| panic!("unparseable {s:?}: {e}"));
+            assert_eq!(back, v, "doc {s:?}");
+            // And the streaming output is byte-identical to the tree writer.
+            assert_eq!(s, v.to_string_compact());
+        }
+    }
+
+    /// Collect every (path, value) pair reachable with the scan syntax.
+    fn all_paths<'a>(v: &'a Json, prefix: &str, out: &mut Vec<(String, &'a Json)>) {
+        if !prefix.is_empty() {
+            out.push((prefix.to_string(), v));
+        }
+        match v {
+            Json::Arr(a) => {
+                for (i, x) in a.iter().enumerate() {
+                    all_paths(x, &format!("{prefix}[{i}]"), out);
+                }
+            }
+            Json::Obj(m) => {
+                for (k, x) in m {
+                    let p = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    all_paths(x, &p, out);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    #[test]
+    fn prop_scan_path_agrees_with_full_parse() {
+        let mut rng = Pcg64::seeded(0xcafe);
+        let mut nontrivial = 0;
+        for round in 0..200 {
+            let v = gen_json(&mut rng, 6);
+            // Alternate pretty/compact so whitespace handling is covered.
+            let doc = if round % 2 == 0 {
+                v.to_string_pretty()
+            } else {
+                v.to_string_compact()
+            };
+            let mut paths = Vec::new();
+            all_paths(&v, "", &mut paths);
+            nontrivial += paths.len();
+            for (path, expect) in &paths {
+                let got = scan_path(&doc, path)
+                    .unwrap_or_else(|e| panic!("scan {path:?} of {doc:?}: {e}"));
+                assert_eq!(got.as_ref(), Some(*expect), "path {path:?} in {doc:?}");
+            }
+            // Paths that miss must come back None, not Err.
+            assert_eq!(scan_path(&doc, "definitely_absent[9].x").unwrap(), None);
+        }
+        assert!(nontrivial > 500, "generator too timid: {nontrivial}");
     }
 }

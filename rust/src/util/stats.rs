@@ -27,8 +27,10 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    // total_cmp (NaN sorts above +inf) matches the NaN policy in
+    // compress.rs: a stray NaN sample must not panic the report path.
     let mut s: Vec<f64> = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -202,6 +204,18 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // One poisoned ack-latency sample must not panic the p99 report.
+        // total_cmp sorts NaN above +inf, so low/mid percentiles of a
+        // mostly-finite sample stay finite.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -37,6 +37,7 @@ fn train_cfg(
         steps: None,
         elastic: false,
         min_quorum: 1,
+        stream: None,
     }
 }
 

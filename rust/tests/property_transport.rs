@@ -326,6 +326,7 @@ fn slow_loris_is_evicted_without_stalling_other_connections() {
         Arc::clone(&stop),
         net.clone(),
         true, // elastic: eviction is announced as a Leave
+        None,
     )
     .expect("start reactor");
     let notify = frontend.reply_notifier().expect("reactor notifier");

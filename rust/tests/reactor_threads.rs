@@ -97,6 +97,7 @@ fn reactor_thread_count_is_constant_in_connections() {
         Arc::clone(&stop),
         net,
         false,
+        None,
     )
     .expect("start reactor");
 

@@ -464,6 +464,7 @@ fn trainconfig_scenario_equivalence() {
         steps: None,
         elastic: false,
         min_quorum: 1,
+        stream: None,
     };
     let via_struct = Scenario {
         train: tc,
@@ -474,4 +475,64 @@ fn trainconfig_scenario_equivalence() {
     let a = simulate(&via_struct, &inputs).unwrap();
     let b = simulate(&via_dsl, &inputs).unwrap();
     assert_eq!(a, b);
+}
+
+/// Acceptance (ISSUE 7): a long-horizon sim run with a `--metrics-stream`
+/// sink replays its live series bit-for-bit from the JSONL file, the sink
+/// never perturbs the run, and `--metrics-cap` bounds the in-memory series
+/// while the file keeps the full record.
+#[test]
+fn metrics_stream_replays_a_sim_run_bitwise_with_bounded_memory() {
+    use hybrid_sgd::coordinator::{replay_stream, MetricsStream};
+    use std::sync::Arc;
+
+    let fx = fixture(11);
+    let inputs = inputs_for(&fx, 3);
+    let dir = std::env::temp_dir().join("hsgd_sim_stream_test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Long horizon: 60 virtual seconds at the 500 ms eval interval is
+    // ~120 samples per series — enough for a 16-sample window to bite.
+    let base = "workers=3 shards=2 policy=hybrid:step:50 secs=60 seed=9 grad-ms=50 lr=0.05";
+    let reference = simulate(&scenario(base), &inputs).unwrap();
+    assert!(
+        reference.test_loss.len() > 64,
+        "horizon too short to exercise the cap ({} samples)",
+        reference.test_loss.len()
+    );
+
+    // Uncapped: the observer changes nothing, and the file replays bitwise.
+    let path = dir.join("uncapped.jsonl");
+    let mut scn = scenario(base);
+    scn.train.stream = Some(Arc::new(MetricsStream::create(&path).unwrap()));
+    let streamed = simulate(&scn, &inputs).unwrap();
+    assert_eq!(streamed, reference, "the stream sink must not perturb the run");
+    let replayed = replay_stream(&path).unwrap();
+    assert_eq!(replayed.train_loss, reference.train_loss);
+    assert_eq!(replayed.test_loss, reference.test_loss);
+    assert_eq!(replayed.test_acc, reference.test_acc);
+    assert_eq!(replayed.compression_ratio, reference.compression_ratio);
+    assert_eq!(replayed.membership, reference.membership);
+
+    // Capped: in-memory series stay inside the amortised 2×cap window...
+    let path = dir.join("capped.jsonl");
+    let mut scn = scenario(base);
+    scn.train.stream = Some(Arc::new(
+        MetricsStream::create(&path).unwrap().with_cap(16),
+    ));
+    let capped = simulate(&scn, &inputs).unwrap();
+    assert!(
+        capped.test_loss.len() < 32,
+        "cap did not bound the in-memory series ({} samples)",
+        capped.test_loss.len()
+    );
+    // ...and the window holds the *newest* samples.
+    assert_eq!(
+        capped.test_loss.v.last().map(|v| v.to_bits()),
+        reference.test_loss.v.last().map(|v| v.to_bits())
+    );
+    // ...while the file still replays the complete history.
+    let replayed = replay_stream(&path).unwrap();
+    assert_eq!(replayed.test_loss, reference.test_loss);
+    assert_eq!(replayed.train_loss, reference.train_loss);
 }
