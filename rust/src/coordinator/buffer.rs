@@ -16,8 +16,96 @@
 //! sparse arrival is an O(nnz) scatter-add into the running sum and an
 //! int8 arrival dequantizes on the fly — the buffer never materialises a
 //! dense copy of a payload.
+//!
+//! Robust aggregation (DESIGN.md §2.10): the coordinate-wise trimmed-mean
+//! and median defenses need the individual contributions at flush time, so
+//! under those modes the buffer *additionally* retains each gradient as a
+//! dense row (recycled across epochs — no steady-state allocation). The
+//! running sum keeps accumulating exactly as before, so `--aggregate mean`
+//! and `clip` never pay the O(k·d) retention cost and the mean flush path
+//! stays bitwise-identical to the sum-only buffer.
 
 use super::compress::GradView;
+
+/// Server-side aggregation mode: how a flush turns the buffered gradients
+/// into one update (DESIGN.md §2.10). `Mean` is the paper's averaged flush
+/// and the bitwise-pinned default; the rest are Byzantine defenses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AggregateMode {
+    /// Average of the buffered gradients (the pre-defense flush, pinned
+    /// bitwise).
+    Mean,
+    /// Mean of per-gradient L2-norm-clipped contributions: each gradient is
+    /// scaled by `min(1, c / ‖g‖)` at accumulation time, so it composes
+    /// with sparse/int8 wire formats without densifying.
+    Clip(f32),
+    /// Coordinate-wise trimmed mean: drop the `⌊f·k⌋` lowest and highest
+    /// values per coordinate, mean the rest. Requires `f ∈ (0, 0.5)`.
+    Trimmed(f64),
+    /// Coordinate-wise median (mean of the two middle values for even
+    /// counts).
+    Median,
+}
+
+impl AggregateMode {
+    /// Parse CLI/scenario syntax: `mean`, `clip:<c>`, `trimmed:<f>`,
+    /// `median`.
+    pub fn parse(s: &str) -> anyhow::Result<AggregateMode> {
+        match s {
+            "mean" => return Ok(AggregateMode::Mean),
+            "median" => return Ok(AggregateMode::Median),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("clip:") {
+            let c: f32 = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad clip radius `{rest}`"))?;
+            anyhow::ensure!(
+                c.is_finite() && c > 0.0,
+                "clip radius must be finite and > 0, got `{rest}`"
+            );
+            return Ok(AggregateMode::Clip(c));
+        }
+        if let Some(rest) = s.strip_prefix("trimmed:") {
+            let f: f64 = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad trim fraction `{rest}`"))?;
+            anyhow::ensure!(
+                f.is_finite() && f > 0.0 && f < 0.5,
+                "trim fraction must be in (0, 0.5), got `{rest}`"
+            );
+            return Ok(AggregateMode::Trimmed(f));
+        }
+        anyhow::bail!("unknown aggregate mode `{s}` (mean | clip:<c> | trimmed:<f> | median)")
+    }
+
+    /// Whether this mode needs the buffer to retain per-gradient rows.
+    pub fn retains_rows(&self) -> bool {
+        matches!(self, AggregateMode::Trimmed(_) | AggregateMode::Median)
+    }
+
+    /// Whether this mode is the bitwise-pinned default.
+    pub fn is_mean(&self) -> bool {
+        *self == AggregateMode::Mean
+    }
+}
+
+impl Default for AggregateMode {
+    fn default() -> Self {
+        AggregateMode::Mean
+    }
+}
+
+impl std::fmt::Display for AggregateMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AggregateMode::Mean => write!(f, "mean"),
+            AggregateMode::Clip(c) => write!(f, "clip:{c}"),
+            AggregateMode::Trimmed(t) => write!(f, "trimmed:{t}"),
+            AggregateMode::Median => write!(f, "median"),
+        }
+    }
+}
 
 /// Accumulating gradient buffer with staleness statistics.
 pub struct GradientBuffer {
@@ -28,6 +116,16 @@ pub struct GradientBuffer {
     /// Σ (current_version − base_version) over buffered gradients.
     staleness_sum: u64,
     max_staleness: u64,
+    /// Robust modes only: each buffered gradient densified as one row
+    /// (empty and never touched under mean/clip).
+    rows: Vec<Vec<f32>>,
+    /// Recycled row storage — rows move back here on `clear` so the
+    /// steady state allocates nothing.
+    row_pool: Vec<Vec<f32>>,
+    retain_rows: bool,
+    /// Scratch for the robust estimate and the per-coordinate sort column.
+    est: Vec<f32>,
+    col: Vec<f32>,
 }
 
 impl GradientBuffer {
@@ -38,7 +136,20 @@ impl GradientBuffer {
             per_worker: vec![0; workers],
             staleness_sum: 0,
             max_staleness: 0,
+            rows: Vec::new(),
+            row_pool: Vec::new(),
+            retain_rows: false,
+            est: Vec::new(),
+            col: Vec::new(),
         }
+    }
+
+    /// Enable per-gradient row retention (trimmed-mean / median flushes
+    /// need the individual contributions, not just the sum).
+    pub fn with_row_retention(mut self) -> Self {
+        self.retain_rows = true;
+        self.est = vec![0.0; self.sum.len()];
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -65,7 +176,38 @@ impl GradientBuffer {
         base_version: u64,
         current_version: u64,
     ) {
+        if self.retain_rows {
+            let mut row = self.row_pool.pop().unwrap_or_else(|| vec![0.0; self.sum.len()]);
+            row.fill(0.0);
+            grad.add_to(&mut row);
+            self.rows.push(row);
+        }
         grad.add_to(&mut self.sum);
+        self.count += 1;
+        self.per_worker[worker] += 1;
+        let stale = current_version.saturating_sub(base_version);
+        self.staleness_sum += stale;
+        self.max_staleness = self.max_staleness.max(stale);
+    }
+
+    /// [`GradientBuffer::push_view`] with every accumulated value scaled by
+    /// `factor` — the norm-clipping path (`factor = min(1, c/‖g‖)`), which
+    /// works per wire entry so sparse/int8 submissions stay undensified.
+    pub fn push_view_scaled(
+        &mut self,
+        grad: GradView<'_>,
+        factor: f32,
+        worker: usize,
+        base_version: u64,
+        current_version: u64,
+    ) {
+        if self.retain_rows {
+            let mut row = self.row_pool.pop().unwrap_or_else(|| vec![0.0; self.sum.len()]);
+            row.fill(0.0);
+            grad.add_scaled_to(&mut row, factor);
+            self.rows.push(row);
+        }
+        grad.add_scaled_to(&mut self.sum, factor);
         self.count += 1;
         self.per_worker[worker] += 1;
         let stale = current_version.saturating_sub(base_version);
@@ -76,6 +218,32 @@ impl GradientBuffer {
     /// Summed gradient (valid while count > 0).
     pub fn sum(&self) -> &[f32] {
         &self.sum
+    }
+
+    /// Coordinate-wise robust estimate over the retained rows: per
+    /// coordinate, sort the `k` buffered values, drop the `trim` lowest
+    /// and `trim` highest, and mean the survivors. `trim = 0` is the
+    /// coordinate-wise mean; `trim = (k-1)/2` is the median (the mean of
+    /// the two middle values for even `k`). Requires row retention and
+    /// `2·trim < len()`.
+    pub fn robust_estimate(&mut self, trim: usize) -> &[f32] {
+        let k = self.rows.len();
+        assert!(self.retain_rows && k == self.count, "robust flush without row retention");
+        assert!(2 * trim < k, "trim {trim} leaves nothing of {k} rows");
+        let kept = (k - 2 * trim) as f32;
+        self.col.resize(k, 0.0);
+        for j in 0..self.sum.len() {
+            for (c, row) in self.col.iter_mut().zip(&self.rows) {
+                *c = row[j];
+            }
+            self.col.sort_unstable_by(f32::total_cmp);
+            let mut s = 0.0f32;
+            for &v in &self.col[trim..k - trim] {
+                s += v;
+            }
+            self.est[j] = s / kept;
+        }
+        &self.est
     }
 
     /// How many distinct workers contributed this epoch.
@@ -103,6 +271,7 @@ impl GradientBuffer {
         self.per_worker.fill(0);
         self.staleness_sum = 0;
         self.max_staleness = 0;
+        self.row_pool.append(&mut self.rows);
     }
 }
 
@@ -180,5 +349,96 @@ mod tests {
         b.push(&[1.0], 0, 0, 0);
         assert_eq!(b.len(), 2);
         assert_eq!(b.distinct_workers(), 1);
+    }
+
+    #[test]
+    fn aggregate_mode_parse_roundtrip() {
+        for s in ["mean", "clip:2.5", "trimmed:0.25", "median"] {
+            let m = AggregateMode::parse(s).unwrap();
+            assert_eq!(m.to_string(), s);
+            assert_eq!(AggregateMode::parse(&m.to_string()).unwrap(), m);
+        }
+        for bad in [
+            "", "avg", "clip", "clip:0", "clip:-1", "clip:nan", "trimmed:0",
+            "trimmed:0.5", "trimmed:0.6", "trimmed:x", "median:2",
+        ] {
+            assert!(AggregateMode::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        assert!(AggregateMode::Mean.is_mean());
+        assert!(!AggregateMode::Median.is_mean());
+        assert!(AggregateMode::Trimmed(0.25).retains_rows());
+        assert!(AggregateMode::Median.retains_rows());
+        assert!(!AggregateMode::Clip(1.0).retains_rows());
+        assert!(!AggregateMode::Mean.retains_rows());
+    }
+
+    #[test]
+    fn trimmed_estimate_drops_the_outlier() {
+        let mut b = GradientBuffer::new(2, 4).with_row_retention();
+        b.push(&[1.0, -1.0], 0, 0, 0);
+        b.push(&[1.2, -0.8], 1, 0, 0);
+        b.push(&[0.8, -1.2], 2, 0, 0);
+        b.push(&[1000.0, -1000.0], 3, 0, 0); // the attacker
+        // trim 1 per end: the poisoned row is gone from every coordinate
+        let est = b.robust_estimate(1).to_vec();
+        assert!((est[0] - 1.1).abs() < 1e-6, "{est:?}");
+        assert!((est[1] + 1.0).abs() < 1e-6, "{est:?}");
+        // the running sum is still poisoned — only the robust flush is safe
+        assert!(b.sum()[0] > 100.0);
+    }
+
+    #[test]
+    fn median_is_trim_of_half() {
+        let mut b = GradientBuffer::new(1, 5).with_row_retention();
+        for (w, v) in [5.0f32, 1.0, 3.0, 2.0, 4.0].iter().enumerate() {
+            b.push(&[*v], w, 0, 0);
+        }
+        // odd count: trim (5-1)/2 = 2 keeps exactly the middle value
+        assert_eq!(b.robust_estimate(2), &[3.0]);
+    }
+
+    #[test]
+    fn median_even_count_means_the_middles() {
+        let mut b = GradientBuffer::new(1, 4).with_row_retention();
+        for (w, v) in [9.0f32, 1.0, 2.0, 4.0].iter().enumerate() {
+            b.push(&[*v], w, 0, 0);
+        }
+        // even count: trim (4-1)/2 = 1 keeps the two middles → mean(2,4)
+        assert_eq!(b.robust_estimate(1), &[3.0]);
+    }
+
+    #[test]
+    fn rows_recycle_across_epochs() {
+        let mut b = GradientBuffer::new(2, 2).with_row_retention();
+        b.push(&[1.0, 2.0], 0, 0, 0);
+        b.push(&[3.0, 4.0], 1, 0, 0);
+        assert_eq!(b.robust_estimate(0), &[2.0, 3.0]);
+        b.clear();
+        assert!(b.is_empty());
+        // second epoch reuses the pooled rows and must not see stale data
+        b.push(&[10.0, 10.0], 0, 0, 0);
+        assert_eq!(b.robust_estimate(0), &[10.0, 10.0]);
+        assert_eq!(b.sum(), &[10.0, 10.0]);
+    }
+
+    #[test]
+    fn scaled_push_scales_every_format() {
+        let mut a = GradientBuffer::new(3, 1);
+        let mut b = GradientBuffer::new(3, 1);
+        a.push_view_scaled(GradView::Dense(&[2.0, -4.0, 6.0]), 0.5, 0, 0, 0);
+        b.push(&[1.0, -2.0, 3.0], 0, 0, 0);
+        assert_eq!(a.sum(), b.sum());
+        let mut c = GradientBuffer::new(3, 1);
+        c.push_view_scaled(
+            GradView::Sparse {
+                idx: &[0, 2],
+                val: &[2.0, 6.0],
+            },
+            0.5,
+            0,
+            0,
+            0,
+        );
+        assert_eq!(c.sum(), &[1.0, 0.0, 3.0]);
     }
 }

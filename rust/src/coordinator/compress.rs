@@ -433,6 +433,24 @@ impl ShardGrad {
         }
     }
 
+    /// Whether **every** f32 the payload carries is finite. Checked over
+    /// the *whole* payload (not one shard's slice), so under a shared
+    /// full-dim buffer all shards reach the same verdict — rejecting a
+    /// poisoned submission everywhere or nowhere, which preserves the
+    /// lockstep invariant for count-triggered policies. Int8 data is
+    /// finite by construction; only the dequantization scale can be NaN
+    /// or ±Inf.
+    pub fn is_finite(&self) -> bool {
+        match self {
+            ShardGrad::Dense(g) | ShardGrad::DenseLocal(g) => {
+                g.iter().all(|v| v.is_finite())
+            }
+            ShardGrad::Sparse(s) => s.val.iter().all(|v| v.is_finite()),
+            ShardGrad::Quant(q) | ShardGrad::QuantLocal(q) => q.scale.is_finite(),
+            ShardGrad::SparseQuant(s) => s.scale.is_finite(),
+        }
+    }
+
     /// Bytes-on-wire attributable to one shard delivery of this payload.
     /// Shared full-dim payloads charge the shard its slice (`shard_len`
     /// coordinates); pre-split payloads charge their own entries.
@@ -726,6 +744,64 @@ impl GradView<'_> {
                     sum[i as usize] += b as f32 * scale;
                 }
             }
+        }
+    }
+
+    /// [`GradView::add_to`] with every accumulated value scaled by
+    /// `factor` — the norm-clipping accumulation (DESIGN.md §2.10). Works
+    /// per carried entry, so sparse/int8 payloads stay undensified.
+    pub fn add_scaled_to(&self, sum: &mut [f32], factor: f32) {
+        match *self {
+            GradView::Dense(g) => {
+                debug_assert_eq!(g.len(), sum.len());
+                for (s, &g) in sum.iter_mut().zip(g) {
+                    *s += factor * g;
+                }
+            }
+            GradView::Sparse { idx, val } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    sum[i as usize] += factor * v;
+                }
+            }
+            GradView::Quant { scale, data } => {
+                debug_assert_eq!(data.len(), sum.len());
+                for (s, &b) in sum.iter_mut().zip(data) {
+                    *s += factor * (b as f32 * scale);
+                }
+            }
+            GradView::SparseQuant { idx, scale, data } => {
+                for (&i, &b) in idx.iter().zip(data) {
+                    sum[i as usize] += factor * (b as f32 * scale);
+                }
+            }
+        }
+    }
+
+    /// Squared L2 norm of the carried values (f64 accumulation; O(nnz) for
+    /// sparse arms, dequantizing on the fly for int8 arms). For a shared
+    /// full-dim payload this is the *shard slice's* norm — each shard clips
+    /// its slice independently, which every shard computes identically
+    /// (lockstep-safe) and bounds the full-vector norm by `c·√S`.
+    pub fn sq_norm(&self) -> f64 {
+        match *self {
+            GradView::Dense(g) => g.iter().map(|&v| v as f64 * v as f64).sum(),
+            GradView::Sparse { val, .. } => {
+                val.iter().map(|&v| v as f64 * v as f64).sum()
+            }
+            GradView::Quant { scale, data } => data
+                .iter()
+                .map(|&b| {
+                    let v = b as f32 * scale;
+                    v as f64 * v as f64
+                })
+                .sum(),
+            GradView::SparseQuant { scale, data, .. } => data
+                .iter()
+                .map(|&b| {
+                    let v = b as f32 * scale;
+                    v as f64 * v as f64
+                })
+                .sum(),
         }
     }
 
@@ -1102,6 +1178,77 @@ mod tests {
                 assert_eq!(now, want, "{wire}: payload buffers reallocated at round {round}");
             }
         }
+    }
+
+    #[test]
+    fn view_sq_norm_and_scaled_add_agree_across_formats() {
+        let dense = vec![3.0f32, 0.0, -4.0, 0.0];
+        let dv = GradView::Dense(&dense);
+        assert!((dv.sq_norm() - 25.0).abs() < 1e-9);
+        let sv = GradView::Sparse {
+            idx: &[0, 2],
+            val: &[3.0, -4.0],
+        };
+        assert!((sv.sq_norm() - 25.0).abs() < 1e-9);
+        // clip to norm 1: factor 1/5
+        let f = (1.0 / dv.sq_norm().sqrt()) as f32;
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        dv.add_scaled_to(&mut a, f);
+        sv.add_scaled_to(&mut b, f);
+        assert_eq!(a, b);
+        assert!((a[0] - 0.6).abs() < 1e-6);
+        assert!((a[2] + 0.8).abs() < 1e-6);
+        // int8 views: sq_norm over dequantized values
+        let q = quantize_i8(&dense);
+        let qv = GradView::Quant {
+            scale: q.scale,
+            data: &q.data,
+        };
+        assert!((qv.sq_norm().sqrt() - 5.0).abs() < 0.1);
+        let mut c = vec![0.0f32; 4];
+        qv.add_scaled_to(&mut c, 0.5);
+        let mut d = vec![0.0f32; 4];
+        qv.add_to(&mut d);
+        for (x, y) in c.iter().zip(&d) {
+            assert!((x * 2.0 - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shard_grad_finiteness_checks_whole_payload() {
+        let ok = ShardGrad::Dense(Arc::new(vec![1.0, -2.0, 0.0]));
+        assert!(ok.is_finite());
+        // The poison sits outside shard 0's slice, but the verdict is
+        // payload-wide — every shard must agree (lockstep invariant).
+        let bad = ShardGrad::Dense(Arc::new(vec![1.0, f32::NAN, 0.0]));
+        assert!(!bad.is_finite());
+        let inf = ShardGrad::DenseLocal(Arc::new(vec![f32::INFINITY]));
+        assert!(!inf.is_finite());
+        let sp = ShardGrad::Sparse(Arc::new(SparseGrad {
+            dim: 4,
+            idx: vec![1],
+            val: vec![f32::NEG_INFINITY],
+        }));
+        assert!(!sp.is_finite());
+        // int8 data is always finite; only the scale can poison
+        let q = ShardGrad::Quant(Arc::new(QuantGrad {
+            scale: f32::NAN,
+            data: vec![1, 2],
+        }));
+        assert!(!q.is_finite());
+        let q_ok = ShardGrad::QuantLocal(Arc::new(QuantGrad {
+            scale: 0.5,
+            data: vec![1, 2],
+        }));
+        assert!(q_ok.is_finite());
+        let sq = ShardGrad::SparseQuant(Arc::new(SparseQuantGrad {
+            dim: 4,
+            idx: vec![0],
+            scale: f32::INFINITY,
+            data: vec![7],
+        }));
+        assert!(!sq.is_finite());
     }
 
     #[test]

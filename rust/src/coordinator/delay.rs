@@ -18,14 +18,56 @@
 use crate::util::rng::Pcg64;
 use std::time::Duration;
 
+/// Per-gradient delay distribution family (`delay-dist=` in the scenario
+/// DSL).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DelayDist {
+    /// Normal(mean, std) clamped at 0 — the paper's §6 model, the default.
+    Normal,
+    /// `exp(Normal(mean, std))` with `mean`/`std` read in log-space — the
+    /// heavy-tailed WAN-RTT shape (most draws near `exp(mean)`, rare large
+    /// stragglers).
+    LogNormal,
+}
+
+impl DelayDist {
+    pub fn parse(s: &str) -> anyhow::Result<DelayDist> {
+        match s {
+            "normal" => Ok(DelayDist::Normal),
+            "lognormal" => Ok(DelayDist::LogNormal),
+            other => anyhow::bail!("unknown delay dist `{other}` (expected `normal` or `lognormal`)"),
+        }
+    }
+}
+
+impl std::fmt::Display for DelayDist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DelayDist::Normal => write!(f, "normal"),
+            DelayDist::LogNormal => write!(f, "lognormal"),
+        }
+    }
+}
+
 /// Delay model for one training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DelayModel {
     /// Fraction of workers subject to delays (paper: 0.5).
     pub affected_fraction: f64,
     /// Normal(mean, std) in seconds, clamped at 0 (paper: mean 0, σ 0.25).
+    /// Under [`DelayDist::LogNormal`] the pair is read in log-space.
     pub mean: f64,
     pub std: f64,
+    /// Distribution family of the per-gradient draw. [`DelayDist::Normal`]
+    /// (the default) reproduces the historical sampling bitwise.
+    pub dist: DelayDist,
+    /// WAN regional correlation groups: workers map round-robin onto this
+    /// many regions, and all members of a region share one fixed
+    /// multiplier on their delay draws — co-located workers are slow
+    /// together, the signature of cross-region links. `0` (the default)
+    /// disables the multiplier and reproduces the historical model
+    /// bitwise.
+    pub regions: usize,
 }
 
 impl DelayModel {
@@ -35,6 +77,8 @@ impl DelayModel {
             affected_fraction: 0.5,
             mean: 0.0,
             std: 0.25,
+            dist: DelayDist::Normal,
+            regions: 0,
         }
     }
 
@@ -44,12 +88,26 @@ impl DelayModel {
             affected_fraction: 0.0,
             mean: 0.0,
             std: 0.0,
+            dist: DelayDist::Normal,
+            regions: 0,
         }
     }
 
     /// Same parameters with a different σ (Table 5 sweeps σ).
     pub fn with_std(mut self, std: f64) -> Self {
         self.std = std;
+        self
+    }
+
+    /// Same parameters under a different distribution family.
+    pub fn with_dist(mut self, dist: DelayDist) -> Self {
+        self.dist = dist;
+        self
+    }
+
+    /// Same parameters with WAN regional correlation groups.
+    pub fn with_regions(mut self, regions: usize) -> Self {
+        self.regions = regions;
         self
     }
 
@@ -72,10 +130,41 @@ impl DelayModel {
     /// Same draw in raw seconds — the virtual-time simulator composes the
     /// value into event timestamps instead of sleeping it.
     pub fn sample_secs(&self, rng: &mut Pcg64) -> f64 {
-        if self.std == 0.0 && self.mean <= 0.0 {
-            return 0.0;
+        match self.dist {
+            DelayDist::Normal => {
+                if self.std == 0.0 && self.mean <= 0.0 {
+                    return 0.0;
+                }
+                rng.normal_ms(self.mean, self.std).max(0.0)
+            }
+            DelayDist::LogNormal => rng.normal_ms(self.mean, self.std).exp(),
         }
-        rng.normal_ms(self.mean, self.std).max(0.0)
+    }
+
+    /// [`DelayModel::sample`] with the worker's regional multiplier
+    /// applied. Identical to `sample` when `regions` is off — the factor
+    /// is exactly 1.0, so existing runs replay bitwise.
+    pub fn sample_for(&self, worker: usize, rng: &mut Pcg64) -> Duration {
+        Duration::from_secs_f64(self.sample_secs_for(worker, rng))
+    }
+
+    /// [`DelayModel::sample_secs`] scaled by [`DelayModel::region_factor`].
+    pub fn sample_secs_for(&self, worker: usize, rng: &mut Pcg64) -> f64 {
+        self.sample_secs(rng) * self.region_factor(worker)
+    }
+
+    /// The fixed multiplier of `worker`'s region: a lognormal draw
+    /// (`exp N(0, 0.5)`, median 1) seeded purely by the region index, so a
+    /// scenario string fully determines every factor — no extra state to
+    /// replay. Workers map round-robin (`worker % regions`); `regions <= 1`
+    /// returns exactly 1.0.
+    pub fn region_factor(&self, worker: usize) -> f64 {
+        if self.regions <= 1 {
+            return 1.0;
+        }
+        let region = (worker % self.regions) as u64;
+        let mut rng = Pcg64::new(0x57A4_D31A ^ region, region.wrapping_add(29));
+        rng.normal_ms(0.0, 0.5).exp()
     }
 }
 
@@ -135,5 +224,58 @@ mod tests {
         let m = DelayModel::paper_default().with_std(1.25);
         assert_eq!(m.std, 1.25);
         assert_eq!(m.affected_fraction, 0.5);
+    }
+
+    #[test]
+    fn lognormal_is_positive_and_heavy_tailed() {
+        // ln-space N(-2, 0.8): median exp(-2) ≈ 0.135 s, strictly positive.
+        let mut m = DelayModel::paper_default().with_dist(DelayDist::LogNormal);
+        m.mean = -2.0;
+        m.std = 0.8;
+        let mut rng = Pcg64::seeded(5);
+        let n = 20_000;
+        let mut draws: Vec<f64> = (0..n).map(|_| m.sample_secs(&mut rng)).collect();
+        assert!(draws.iter().all(|&d| d > 0.0), "lognormal draws are positive");
+        draws.sort_unstable_by(f64::total_cmp);
+        let median = draws[n / 2];
+        assert!((median - (-2.0f64).exp()).abs() < 0.02, "median {median}");
+        // Heavy tail: the mean sits well above the median.
+        let mean = draws.iter().sum::<f64>() / n as f64;
+        assert!(mean > median * 1.2, "mean {mean} vs median {median}");
+    }
+
+    #[test]
+    fn region_factors_are_deterministic_and_off_by_default() {
+        let m = DelayModel::paper_default();
+        // regions off: the factor is exactly 1, so sampling via the
+        // per-worker entry point is bitwise the historical draw.
+        let mut a = Pcg64::seeded(7);
+        let mut b = Pcg64::seeded(7);
+        for w in 0..8 {
+            assert_eq!(m.region_factor(w), 1.0);
+            assert_eq!(
+                m.sample_secs_for(w, &mut a).to_bits(),
+                m.sample_secs(&mut b).to_bits()
+            );
+        }
+        let wan = m.clone().with_regions(3);
+        // Same region → same factor; factors differ across regions.
+        assert_eq!(wan.region_factor(0), wan.region_factor(3));
+        assert_eq!(wan.region_factor(1), wan.region_factor(4));
+        assert_ne!(wan.region_factor(0), wan.region_factor(1));
+        assert!(wan.region_factor(0) > 0.0);
+        // Replays: the factor depends only on the scenario, not run state.
+        assert_eq!(
+            wan.region_factor(2).to_bits(),
+            DelayModel::paper_default().with_regions(3).region_factor(2).to_bits()
+        );
+    }
+
+    #[test]
+    fn dist_parse_roundtrip() {
+        for s in ["normal", "lognormal"] {
+            assert_eq!(DelayDist::parse(s).unwrap().to_string(), s);
+        }
+        assert!(DelayDist::parse("pareto").is_err());
     }
 }

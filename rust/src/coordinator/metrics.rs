@@ -159,6 +159,11 @@ pub struct RunMetrics {
     pub gradients_total: u64,
     pub updates_total: u64,
     pub flushes: u64,
+    /// Submissions dropped at the server boundary as non-finite (NaN/Inf
+    /// payloads — Byzantine workers or genuinely diverged replicas).
+    pub rejected_grads: u64,
+    /// Contributions scaled down by norm clipping (`--aggregate clip:<c>`).
+    pub clipped_grads: u64,
     pub mean_staleness: f64,
     pub wall_time: f64,
     pub per_worker_grads: Vec<u64>,
@@ -204,6 +209,8 @@ impl PartialEq for RunMetrics {
             && self.gradients_total == other.gradients_total
             && self.updates_total == other.updates_total
             && self.flushes == other.flushes
+            && self.rejected_grads == other.rejected_grads
+            && self.clipped_grads == other.clipped_grads
             && self.mean_staleness.to_bits() == other.mean_staleness.to_bits()
             && self.wall_time.to_bits() == other.wall_time.to_bits()
             && self.per_worker_grads == other.per_worker_grads
@@ -326,6 +333,8 @@ impl RunMetrics {
             ("gradients_total", Json::Num(self.gradients_total as f64)),
             ("updates_total", Json::Num(self.updates_total as f64)),
             ("flushes", Json::Num(self.flushes as f64)),
+            ("rejected_grads", Json::Num(self.rejected_grads as f64)),
+            ("clipped_grads", Json::Num(self.clipped_grads as f64)),
             ("mean_staleness", Json::Num(self.mean_staleness)),
             ("wall_time", Json::Num(self.wall_time)),
             ("grads_per_sec", Json::Num(self.grads_per_sec())),
@@ -366,6 +375,8 @@ mod tests {
         m.test_acc.push(1.0, 45.0);
         m.gradients_total = 100;
         m.updates_total = 80;
+        m.rejected_grads = 3;
+        m.clipped_grads = 4;
         m.wall_time = 2.0;
         m.per_worker_grads = vec![30, 40, 30];
         m.shards = 2;
@@ -477,6 +488,8 @@ mod tests {
         assert_eq!(parsed.usize_field("bytes_sent").unwrap(), 1000);
         assert_eq!(parsed.f64_field("wire_compression").unwrap(), 50.0);
         assert_eq!(parsed.usize_field("membership_epochs").unwrap(), 1);
+        assert_eq!(parsed.usize_field("rejected_grads").unwrap(), 3);
+        assert_eq!(parsed.usize_field("clipped_grads").unwrap(), 4);
         assert_eq!(
             parsed
                 .get("membership")

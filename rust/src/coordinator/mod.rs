@@ -4,7 +4,9 @@
 //! - [`threshold`] — monotone threshold schedules `K(n)` (paper Algorithm 1
 //!   step 3; §9 pluggable variants).
 //! - [`params`] / [`buffer`] — versioned parameter store (with zero-copy
-//!   snapshot cells) and the summing gradient buffer.
+//!   snapshot cells) and the gradient buffer: plain summing for the mean
+//!   path, per-contribution row retention for the robust aggregation
+//!   modes (trimmed mean / coordinate-wise median, DESIGN.md §2.10).
 //! - [`policy`] — the pure aggregation state machine: async / sync /
 //!   hybrid(smooth|strict).
 //! - [`compress`] — selectable gradient wire formats (dense / top-k with
@@ -44,12 +46,13 @@ pub mod trainer;
 pub mod worker;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveController};
+pub use buffer::AggregateMode;
 pub use clock::{Clock, RealClock, VirtualClock};
 pub use compress::{
     GradEncoder, GradView, KSpec, QuantGrad, ShardGrad, SparseGrad, SparseQuantGrad,
     TopKCompressor, WireFormat,
 };
-pub use delay::DelayModel;
+pub use delay::{DelayDist, DelayModel};
 pub use membership::Membership;
 pub use metrics::{replay_stream, MetricsStream, RunMetrics, SeriesId};
 pub use params::{ParamSnapshot, SnapshotCell};

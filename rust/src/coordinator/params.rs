@@ -132,6 +132,15 @@ impl ParamStore {
         self.bump();
     }
 
+    /// [`ParamStore::apply_view`] with the gradient scaled by `factor`:
+    /// θ ← θ − lr · factor · g. The norm-clipping application for the
+    /// async policy (`factor = min(1, c/‖g‖)`, DESIGN.md §2.10); O(nnz)
+    /// for sparse arms, never densifies.
+    pub fn apply_view_scaled(&mut self, grad: super::compress::GradView<'_>, factor: f32) {
+        grad.apply_to(&mut self.theta, self.lr * factor);
+        self.bump();
+    }
+
     /// θ ← θ − lr · (Σ grads) / count  (aggregated synchronous application).
     /// `sum` is the pre-summed gradient buffer.
     pub fn apply_mean(&mut self, sum: &[f32], count: usize) {

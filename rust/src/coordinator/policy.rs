@@ -18,7 +18,7 @@
 //!   current epoch blocks until the flush; at `K = W` this *is* sync.
 
 use super::adaptive::{AdaptiveConfig, AdaptiveController};
-use super::buffer::GradientBuffer;
+use super::buffer::{AggregateMode, GradientBuffer};
 use super::compress::GradView;
 use super::membership::Membership;
 use super::params::ParamStore;
@@ -140,6 +140,8 @@ pub struct AggStats {
     pub flushed_gradients: u64,
     pub staleness_sum: f64,
     pub blocked_total: u64,
+    /// Gradients whose norm exceeded the clip radius (`--aggregate clip`).
+    pub clipped: u64,
 }
 
 /// The policy state machine.
@@ -159,6 +161,9 @@ pub struct Aggregator {
     /// K = 1.
     min_quorum: usize,
     adaptive: Option<AdaptiveController>,
+    /// How a flush turns the buffered gradients into one update
+    /// (DESIGN.md §2.10). `Mean` is the bitwise-pinned default.
+    aggregate: AggregateMode,
     pub stats: AggStats,
 }
 
@@ -178,6 +183,7 @@ impl Aggregator {
             elastic: None,
             min_quorum: 1,
             adaptive,
+            aggregate: AggregateMode::Mean,
             stats: AggStats::default(),
         }
     }
@@ -186,6 +192,23 @@ impl Aggregator {
     pub fn with_k_max(mut self, k_max: usize) -> Self {
         self.k_max = k_max.max(1);
         self
+    }
+
+    /// Select the flush-time aggregation mode (default [`AggregateMode::Mean`],
+    /// which is bitwise-identical to the pre-defense flush). Trimmed/median
+    /// modes switch the buffer to per-gradient row retention; `clip` scales
+    /// contributions at accumulation time and retains nothing extra.
+    pub fn with_aggregate(mut self, mode: AggregateMode) -> Self {
+        if mode.retains_rows() && !self.aggregate.retains_rows() {
+            let dim = self.buffer.sum().len();
+            self.buffer = GradientBuffer::new(dim, self.workers).with_row_retention();
+        }
+        self.aggregate = mode;
+        self
+    }
+
+    pub fn aggregate(&self) -> &AggregateMode {
+        &self.aggregate
     }
 
     /// Enable elastic membership: `initial_live` of the `workers` slots
@@ -334,16 +357,41 @@ impl Aggregator {
         if let Some(ctrl) = self.adaptive.as_mut() {
             ctrl.observe(stale, loss, cap);
         }
+        // Norm clipping acts per contribution, at accumulation/apply time,
+        // so it composes with every wire format without densifying. `None`
+        // (the unclipped / non-clip-mode case) takes exactly the pre-clip
+        // code path, keeping the default bitwise-pinned.
+        let clip_factor = match self.aggregate {
+            AggregateMode::Clip(c) => {
+                let norm = grad.sq_norm().sqrt();
+                if norm.is_finite() && norm > c as f64 {
+                    self.stats.clipped += 1;
+                    Some((c as f64 / norm) as f32)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
         match &self.policy {
             Policy::Async => {
-                store.apply_view(grad);
+                match clip_factor {
+                    Some(f) => store.apply_view_scaled(grad, f),
+                    None => store.apply_view(grad),
+                }
                 self.stats.applied_async += 1;
                 Outcome::AppliedNow
             }
             Policy::Sync => {
                 let quorum = self.quorum();
-                self.buffer
-                    .push_view(grad, worker, base_version, store.version());
+                match clip_factor {
+                    Some(f) => self
+                        .buffer
+                        .push_view_scaled(grad, f, worker, base_version, store.version()),
+                    None => self
+                        .buffer
+                        .push_view(grad, worker, base_version, store.version()),
+                }
                 if self.buffer.distinct_workers() >= quorum {
                     self.flush(store)
                 } else {
@@ -353,8 +401,14 @@ impl Aggregator {
             }
             Policy::Hybrid { schedule, strict } => {
                 let k = schedule.k(self.stats.arrivals - 1, cap);
-                self.buffer
-                    .push_view(grad, worker, base_version, store.version());
+                match clip_factor {
+                    Some(f) => self
+                        .buffer
+                        .push_view_scaled(grad, f, worker, base_version, store.version()),
+                    None => self
+                        .buffer
+                        .push_view(grad, worker, base_version, store.version()),
+                }
                 if self.buffer.len() >= k {
                     self.flush(store)
                 } else if *strict {
@@ -366,8 +420,14 @@ impl Aggregator {
             }
             Policy::HybridAdaptive { strict, .. } => {
                 let k = self.adaptive.as_ref().map(|a| a.k()).unwrap_or(1).min(cap);
-                self.buffer
-                    .push_view(grad, worker, base_version, store.version());
+                match clip_factor {
+                    Some(f) => self
+                        .buffer
+                        .push_view_scaled(grad, f, worker, base_version, store.version()),
+                    None => self
+                        .buffer
+                        .push_view(grad, worker, base_version, store.version()),
+                }
                 if self.buffer.len() >= k {
                     self.flush(store)
                 } else if *strict {
@@ -385,7 +445,24 @@ impl Aggregator {
         let distinct = self.buffer.distinct_workers();
         let mean_staleness = self.buffer.mean_staleness();
         // apply_mean bumps the version, which publishes the new snapshot.
-        store.apply_mean(self.buffer.sum(), count);
+        match self.aggregate {
+            // Mean keeps the exact pre-defense flush (bitwise-pinned);
+            // clip already scaled each contribution at accumulation time.
+            AggregateMode::Mean | AggregateMode::Clip(_) => {
+                store.apply_mean(self.buffer.sum(), count);
+            }
+            // Robust flushes apply the coordinate-wise estimate as a
+            // single-gradient step: θ ← θ − lr · estimate, same version /
+            // publish semantics as the mean flush.
+            AggregateMode::Trimmed(f) => {
+                let trim = (f * count as f64).floor() as usize;
+                store.apply_mean(self.buffer.robust_estimate(trim), 1);
+            }
+            AggregateMode::Median => {
+                let trim = (count - 1) / 2;
+                store.apply_mean(self.buffer.robust_estimate(trim), 1);
+            }
+        }
         self.buffer.clear();
         self.stats.flushes += 1;
         self.stats.flushed_gradients += count as u64;
@@ -792,6 +869,121 @@ mod tests {
         assert_eq!(agg.membership_epoch(), 0);
         assert_eq!(agg.current_k(), 3, "static barrier must not renormalize");
         assert_eq!(ps.version(), 0);
+    }
+
+    #[test]
+    fn mean_mode_is_bitwise_identical_to_default() {
+        // `--aggregate mean` must take exactly the pre-defense code path.
+        use crate::util::rng::Pcg64;
+        let sched = Schedule::Step { step: 3 };
+        let policy = Policy::Hybrid {
+            schedule: sched,
+            strict: false,
+        };
+        let mut plain = Aggregator::new(policy.clone(), 4, 4);
+        let mut modal =
+            Aggregator::new(policy, 4, 4).with_aggregate(AggregateMode::Mean);
+        let mut ps_a = store(4);
+        let mut ps_b = store(4);
+        let mut rng = Pcg64::seeded(3);
+        let mut g = vec![0.0f32; 4];
+        for i in 0..40 {
+            rng.fill_normal(&mut g, 1.0);
+            let (va, vb) = (ps_a.version(), ps_b.version());
+            let oa = plain.on_gradient(&mut ps_a, &g, i % 4, va, 1.0);
+            let ob = modal.on_gradient(&mut ps_b, &g, i % 4, vb, 1.0);
+            assert_eq!(oa, ob);
+        }
+        assert_eq!(ps_a.theta(), ps_b.theta());
+        assert_eq!(ps_a.version(), ps_b.version());
+    }
+
+    #[test]
+    fn trimmed_flush_survives_a_poisoned_contribution() {
+        let sched = Schedule::Constant { k: 4 };
+        let mut agg = Aggregator::new(
+            Policy::Hybrid {
+                schedule: sched,
+                strict: false,
+            },
+            1,
+            4,
+        )
+        .with_aggregate(AggregateMode::Trimmed(0.25));
+        let mut ps = store(1);
+        agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0);
+        agg.on_gradient(&mut ps, &[1.2], 1, 0, 1.0);
+        agg.on_gradient(&mut ps, &[0.8], 2, 0, 1.0);
+        // worker 3 is Byzantine: a huge reversed gradient
+        let out = agg.on_gradient(&mut ps, &[-1000.0], 3, 0, 1.0);
+        assert!(matches!(out, Outcome::Flushed { count: 4, .. }));
+        // trim ⌊0.25·4⌋ = 1 per end: mean(1.0, 1.2) over the survivors
+        // θ = -0.1 · 1.1; a mean flush would have moved θ *up* by ~25.
+        assert!((ps.theta()[0] + 0.11).abs() < 1e-6, "{:?}", ps.theta());
+    }
+
+    #[test]
+    fn median_flush_takes_the_middle() {
+        let mut agg = Aggregator::new(Policy::Sync, 1, 3)
+            .with_aggregate(AggregateMode::Median);
+        let mut ps = store(1);
+        agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0);
+        agg.on_gradient(&mut ps, &[2.0], 1, 0, 1.0);
+        let out = agg.on_gradient(&mut ps, &[900.0], 2, 0, 1.0);
+        assert!(matches!(out, Outcome::Flushed { count: 3, .. }));
+        // median(1, 2, 900) = 2 → θ = -0.1 · 2
+        assert!((ps.theta()[0] + 0.2).abs() < 1e-6, "{:?}", ps.theta());
+    }
+
+    #[test]
+    fn clip_scales_oversized_gradients_everywhere() {
+        // Async: applied immediately, scaled to the radius.
+        let mut agg =
+            Aggregator::new(Policy::Async, 2, 2).with_aggregate(AggregateMode::Clip(1.0));
+        let mut ps = store(2);
+        agg.on_gradient(&mut ps, &[3.0, 4.0], 0, 0, 1.0); // ‖g‖ = 5 → ×0.2
+        assert_eq!(agg.stats.clipped, 1);
+        assert!((ps.theta()[0] + 0.1 * 0.6).abs() < 1e-6);
+        assert!((ps.theta()[1] + 0.1 * 0.8).abs() < 1e-6);
+        // within the radius: untouched, not counted
+        agg.on_gradient(&mut ps, &[0.1, 0.0], 1, 1, 1.0);
+        assert_eq!(agg.stats.clipped, 1);
+        // Buffered policy: clipped at accumulation, mean flush over the
+        // clipped contributions.
+        let mut agg = Aggregator::new(Policy::Sync, 1, 2)
+            .with_aggregate(AggregateMode::Clip(1.0));
+        let mut ps = store(1);
+        agg.on_gradient(&mut ps, &[1.0], 0, 0, 1.0);
+        let out = agg.on_gradient(&mut ps, &[-100.0], 1, 0, 1.0);
+        assert!(matches!(out, Outcome::Flushed { count: 2, .. }));
+        assert_eq!(agg.stats.clipped, 1);
+        // mean(1.0, -1.0) = 0 → θ unchanged by the attack
+        assert!((ps.theta()[0]).abs() < 1e-6, "{:?}", ps.theta());
+    }
+
+    #[test]
+    fn clip_sparse_view_matches_dense_clip() {
+        use crate::coordinator::compress::GradView;
+        let mut a =
+            Aggregator::new(Policy::Async, 4, 1).with_aggregate(AggregateMode::Clip(1.0));
+        let mut b =
+            Aggregator::new(Policy::Async, 4, 1).with_aggregate(AggregateMode::Clip(1.0));
+        let mut ps_a = store(4);
+        let mut ps_b = store(4);
+        let dense = [3.0f32, 0.0, -4.0, 0.0];
+        a.on_gradient(&mut ps_a, &dense, 0, 0, 1.0);
+        b.on_gradient_view(
+            &mut ps_b,
+            GradView::Sparse {
+                idx: &[0, 2],
+                val: &[3.0, -4.0],
+            },
+            0,
+            0,
+            1.0,
+        );
+        assert_eq!(ps_a.theta(), ps_b.theta());
+        assert_eq!(a.stats.clipped, b.stats.clipped);
     }
 
     #[test]

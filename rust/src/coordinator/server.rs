@@ -25,6 +25,7 @@
 //! only the shard slices whose version actually changed. While θ is frozen
 //! (hybrid buffering) the reply is `Unchanged` and nobody copies anything.
 
+use super::buffer::AggregateMode;
 use super::clock::Clock;
 use super::compress::ShardGrad;
 use super::metrics::RunMetrics;
@@ -56,18 +57,58 @@ pub struct ShardStatus {
     pub epoch: AtomicU64,
 }
 
-/// Shared status gauges for a whole run: one [`ShardStatus`] per shard.
-/// Handed to the shard threads (writers) and the serve frontend (reader);
-/// `None` in contexts nobody polls (in-process experiments, the simulator).
+/// Staleness histogram bucket count: log2 buckets 0, 1, 2–3, 4–7, 8–15,
+/// and ≥16. Staleness under async policies is bounded by in-flight
+/// submissions (≈ workers), so six buckets resolve the whole useful range.
+pub const STALE_BUCKETS: usize = 6;
+
+/// Histogram bucket index for a staleness value (log2, saturating).
+pub fn stale_bucket(staleness: u64) -> usize {
+    ((64 - staleness.leading_zeros()) as usize).min(STALE_BUCKETS - 1)
+}
+
+/// One worker's arrival gauges for the ops plane: submission count,
+/// staleness aggregates and histogram (enough for `hybrid-sgd status` to
+/// print a mean / max / distribution of staleness per worker and spot
+/// stragglers) and non-finite rejections (suspected-Byzantine workers).
+/// Written by shard 0 only — all shards observe the same arrival sequence
+/// (lockstep), so one shard's view stands for the run and nothing is
+/// double-counted.
+#[derive(Debug, Default)]
+pub struct WorkerStatus {
+    /// Gradient submissions seen from this worker.
+    pub grads: AtomicU64,
+    /// Submissions dropped at the boundary as non-finite (NaN/Inf).
+    pub rejected: AtomicU64,
+    /// Sum of staleness (shard version − base version) over submissions.
+    pub stale_sum: AtomicU64,
+    /// Maximum staleness observed from this worker.
+    pub stale_max: AtomicU64,
+    /// Staleness histogram: log2 buckets (see [`stale_bucket`]).
+    pub stale_hist: [AtomicU64; STALE_BUCKETS],
+}
+
+/// Shared status gauges for a whole run: one [`ShardStatus`] per shard,
+/// plus one [`WorkerStatus`] per worker slot when built via
+/// [`StatusBoard::with_workers`]. Handed to the shard threads (writers)
+/// and the serve frontend (reader); `None` in contexts nobody polls
+/// (in-process experiments, the simulator).
 #[derive(Debug)]
 pub struct StatusBoard {
     pub shards: Vec<ShardStatus>,
+    pub workers: Vec<WorkerStatus>,
 }
 
 impl StatusBoard {
     pub fn new(shards: usize) -> StatusBoard {
+        StatusBoard::with_workers(shards, 0)
+    }
+
+    /// A board that additionally carries per-worker staleness gauges.
+    pub fn with_workers(shards: usize, workers: usize) -> StatusBoard {
         StatusBoard {
             shards: (0..shards).map(|_| ShardStatus::default()).collect(),
+            workers: (0..workers).map(|_| WorkerStatus::default()).collect(),
         }
     }
 }
@@ -131,6 +172,11 @@ pub struct ServerConfig {
     pub elastic: bool,
     /// Barrier-denominator floor under elastic membership (≥ 1).
     pub min_quorum: usize,
+    /// Server-side aggregation mode (`mean` | `clip:<c>` | `trimmed:<f>` |
+    /// `median`). `Mean` — the default — reproduces the historical
+    /// sum-then-flush path bitwise; the robust modes are the Byzantine
+    /// defenses of DESIGN.md §2.10.
+    pub aggregate: AggregateMode,
     /// Invoked after every reply send with the destination worker id. The
     /// reactor frontend installs its wakeup hook here so acks leave within
     /// one loop iteration instead of a poll tick; `None` (in-process runs,
@@ -151,6 +197,12 @@ pub struct ShardReport {
     pub flushes: u64,
     pub mean_staleness: f64,
     pub per_worker_grads: Vec<u64>,
+    /// Submissions dropped at the boundary as non-finite (NaN/Inf).
+    pub rejected: u64,
+    /// Contributions scaled down by norm clipping (`--aggregate clip:<c>`;
+    /// judged on this shard's slice norm, so shards may differ — shard 0
+    /// is canonical in the merged report).
+    pub clipped: u64,
     /// Wire bytes this shard's deliveries carried (its slice of shared
     /// full-dim payloads; its own entries of pre-split sparse ones).
     pub bytes_received: u64,
@@ -171,6 +223,10 @@ pub struct ServerReport {
     pub flushes: u64,
     pub mean_staleness: f64,
     pub per_worker_grads: Vec<u64>,
+    /// Non-finite submissions rejected at the boundary (shard 0's count).
+    pub rejected: u64,
+    /// Norm-clipped contributions (shard 0's count).
+    pub clipped: u64,
     pub per_shard_updates: Vec<u64>,
     /// Total wire bytes received across all shards.
     pub bytes_received: u64,
@@ -188,6 +244,8 @@ impl ServerReport {
         m.flushes = self.flushes;
         m.mean_staleness = self.mean_staleness;
         m.per_worker_grads = self.per_worker_grads.clone();
+        m.rejected_grads = self.rejected;
+        m.clipped_grads = self.clipped;
         m.shards = self.per_shard_updates.len();
         m.per_shard_updates = self.per_shard_updates.clone();
         m.bytes_received = self.bytes_received;
@@ -222,6 +280,8 @@ pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> Ser
         flushes: first.flushes,
         mean_staleness: first.mean_staleness,
         per_worker_grads: first.per_worker_grads.clone(),
+        rejected: first.rejected,
+        clipped: first.clipped,
         k_trajectory: first.k_trajectory.clone(),
         version_trajectory: first.version_trajectory.clone(),
         membership: first.membership.clone(),
@@ -253,7 +313,8 @@ pub fn run_shard(
 ) -> ShardReport {
     debug_assert_eq!(init.len(), range.len());
     let mut store = ParamStore::with_cell(init, cfg.lr, cell);
-    let mut agg = Aggregator::new(cfg.policy.clone(), range.len(), cfg.workers);
+    let mut agg = Aggregator::new(cfg.policy.clone(), range.len(), cfg.workers)
+        .with_aggregate(cfg.aggregate.clone());
     if let Some(k) = cfg.k_max {
         agg = agg.with_k_max(k);
     }
@@ -272,6 +333,7 @@ pub fn run_shard(
     let mut last_trace: Option<Duration> = None;
     let mut released_on_stop = false;
     let mut bytes_received = 0u64;
+    let mut rejected = 0u64;
 
     loop {
         match grad_rx.recv_timeout(Duration::from_millis(20)) {
@@ -319,54 +381,95 @@ pub fn run_shard(
                 } = msg;
                 per_worker[worker] += 1;
                 bytes_received += grad.wire_bytes(range.len()) as u64;
-                let outcome = agg.on_gradient_view(
-                    &mut store,
-                    grad.view(range.clone()),
-                    worker,
-                    base_version,
-                    loss,
-                );
-                // Release the shared payload buffer before replying so the
-                // worker's `Arc::try_unwrap` recycling never races a shard.
-                drop(grad);
-                let updated = Reply::Updated {
-                    shard,
-                    version: store.version(),
-                };
-                match outcome {
-                    Outcome::AppliedNow => {
-                        send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
+                let staleness = store.version().saturating_sub(base_version);
+                let finite = grad.is_finite();
+                if shard == 0 {
+                    if let Some(board) = &cfg.status {
+                        // Per-worker ops gauges: shard 0 writes for the
+                        // run (all shards see the same arrivals).
+                        if let Some(ws) = board.workers.get(worker) {
+                            ws.grads.fetch_add(1, Ordering::Relaxed);
+                            ws.stale_sum.fetch_add(staleness, Ordering::Relaxed);
+                            ws.stale_max.fetch_max(staleness, Ordering::Relaxed);
+                            ws.stale_hist[stale_bucket(staleness)]
+                                .fetch_add(1, Ordering::Relaxed);
+                            if !finite {
+                                ws.rejected.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
                     }
-                    Outcome::Buffered => {
-                        // θ frozen since the last flush: if the worker
-                        // already holds this version there is nothing to do.
-                        if base_version == store.version() {
-                            send(
-                                &reply_txs[worker],
-                                Reply::Unchanged { shard },
-                                &cfg.reply_notify,
-                                worker,
-                            );
-                        } else {
+                }
+                if !finite {
+                    // Poisoned payload (NaN/Inf anywhere in it): drop the
+                    // submission before it can touch the aggregation plane.
+                    // `is_finite` inspects the *whole* payload, not this
+                    // shard's slice, so every shard reaches the same
+                    // verdict and lockstep is preserved. The submitter
+                    // still gets a normal reply — a dropped gradient must
+                    // never hang or kill anything (DESIGN.md §2.10).
+                    rejected += 1;
+                    drop(grad);
+                    let reply = if base_version == store.version() {
+                        Reply::Unchanged { shard }
+                    } else {
+                        Reply::Updated {
+                            shard,
+                            version: store.version(),
+                        }
+                    };
+                    send(&reply_txs[worker], reply, &cfg.reply_notify, worker);
+                } else {
+                    let outcome = agg.on_gradient_view(
+                        &mut store,
+                        grad.view(range.clone()),
+                        worker,
+                        base_version,
+                        loss,
+                    );
+                    // Release the shared payload buffer before replying so
+                    // the worker's `Arc::try_unwrap` recycling never races
+                    // a shard.
+                    drop(grad);
+                    let updated = Reply::Updated {
+                        shard,
+                        version: store.version(),
+                    };
+                    match outcome {
+                        Outcome::AppliedNow => {
                             send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
                         }
-                    }
-                    Outcome::BufferedBlocked => {
-                        blocked.push(worker);
-                    }
-                    Outcome::Flushed { count, k_at_flush, .. } => {
-                        if shard == 0 {
-                            log_debug!(
-                                "server",
-                                "flush of {count} gradients at K={k_at_flush}, v={}",
-                                store.version()
-                            );
+                        Outcome::Buffered => {
+                            // θ frozen since the last flush: if the worker
+                            // already holds this version there is nothing
+                            // to do.
+                            if base_version == store.version() {
+                                send(
+                                    &reply_txs[worker],
+                                    Reply::Unchanged { shard },
+                                    &cfg.reply_notify,
+                                    worker,
+                                );
+                            } else {
+                                send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
+                            }
                         }
-                        send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
-                        for w in blocked.drain(..) {
-                            send(&reply_txs[w], updated, &cfg.reply_notify, w);
+                        Outcome::BufferedBlocked => {
+                            blocked.push(worker);
                         }
-                        k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
+                        Outcome::Flushed { count, k_at_flush, .. } => {
+                            if shard == 0 {
+                                log_debug!(
+                                    "server",
+                                    "flush of {count} gradients at K={k_at_flush}, v={}",
+                                    store.version()
+                                );
+                            }
+                            send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
+                            for w in blocked.drain(..) {
+                                send(&reply_txs[w], updated, &cfg.reply_notify, w);
+                            }
+                            k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
+                        }
                     }
                 }
                 let now = clock.now();
@@ -416,6 +519,8 @@ pub fn run_shard(
             0.0
         },
         per_worker_grads: per_worker,
+        rejected,
+        clipped: stats.clipped,
         bytes_received,
         k_trajectory: k_traj,
         version_trajectory: v_traj,
@@ -451,6 +556,17 @@ mod tests {
         elastic: bool,
         events: Vec<ShardEvent>,
     ) -> (ShardReport, Vec<Vec<Reply>>, Arc<SnapshotCell>) {
+        run_scripted_cfg(policy, workers, elastic, AggregateMode::Mean, events)
+    }
+
+    /// [`run_scripted_events`] with an explicit aggregation mode.
+    fn run_scripted_cfg(
+        policy: Policy,
+        workers: usize,
+        elastic: bool,
+        aggregate: AggregateMode,
+        events: Vec<ShardEvent>,
+    ) -> (ShardReport, Vec<Vec<Reply>>, Arc<SnapshotCell>) {
         let (gtx, grx) = mpsc::channel();
         let mut rtxs = Vec::new();
         let mut rrxs = Vec::new();
@@ -468,6 +584,7 @@ mod tests {
             trace_interval: Duration::from_millis(1),
             elastic,
             min_quorum: 1,
+            aggregate,
             reply_notify: None,
             status: None,
         };
@@ -649,6 +766,7 @@ mod tests {
             trace_interval: Duration::from_millis(1),
             elastic: false,
             min_quorum: 1,
+            aggregate: AggregateMode::Mean,
             reply_notify: None,
             status: None,
         };
@@ -689,6 +807,115 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_submission_is_rejected_not_fatal() {
+        let bad = ShardMsg {
+            worker: 0,
+            base_version: 0,
+            loss: 1.0,
+            grad: ShardGrad::Dense(Arc::new(vec![f32::NAN, 1.0])),
+        };
+        let (report, replies, cell) = run_scripted(Policy::Async, 1, vec![bad, msg(0, 0)]);
+        // The poisoned payload was dropped at the boundary: only the good
+        // gradient is counted or moves θ, and the shard thread survived.
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.gradients_total, 1);
+        assert_eq!(report.updates_total, 1);
+        // The rejected submitter still got a reply so it never hangs.
+        assert_eq!(replies[0].len(), 2);
+        assert_eq!(replies[0][0], Reply::Unchanged { shard: 0 });
+        assert!((cell.load().theta[0] + 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trimmed_flush_shrugs_off_an_attacker_on_the_server_path() {
+        // Sync barrier of 4; worker 3 submits a hugely negative gradient.
+        // trimmed:0.25 drops one contribution per coordinate-wise tail, so
+        // the flush applies the honest mean: θ = −0.1·1 per coordinate.
+        let poisoned = ShardMsg {
+            worker: 3,
+            base_version: 0,
+            loss: 1.0,
+            grad: ShardGrad::Dense(Arc::new(vec![-1000.0, -1000.0])),
+        };
+        let (report, _, cell) = run_scripted_cfg(
+            Policy::Sync,
+            4,
+            false,
+            AggregateMode::Trimmed(0.25),
+            vec![msg(0, 0), msg(1, 0), msg(2, 0), poisoned]
+                .into_iter()
+                .map(ShardEvent::Grad)
+                .collect(),
+        );
+        assert_eq!(report.flushes, 1);
+        let snap = cell.load();
+        assert!((snap.theta[0] + 0.1).abs() < 1e-6, "got {}", snap.theta[0]);
+        assert!((snap.theta[1] + 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn status_board_tracks_per_worker_staleness_and_rejections() {
+        let (gtx, grx) = mpsc::channel();
+        let mut rtxs = Vec::new();
+        let mut rrxs = Vec::new();
+        for _ in 0..2 {
+            let (tx, rx) = mpsc::channel();
+            rtxs.push(tx);
+            rrxs.push(rx);
+        }
+        let board = Arc::new(StatusBoard::with_workers(1, 2));
+        let cfg = ServerConfig {
+            policy: Policy::Async,
+            workers: 2,
+            lr: 0.1,
+            k_max: None,
+            trace_interval: Duration::from_millis(1),
+            elastic: false,
+            min_quorum: 1,
+            aggregate: AggregateMode::Mean,
+            reply_notify: None,
+            status: Some(Arc::clone(&board)),
+        };
+        gtx.send(ShardEvent::Grad(msg(0, 0))).unwrap();
+        gtx.send(ShardEvent::Grad(msg(0, 1))).unwrap();
+        // worker 1's gradient is 2 versions stale when it arrives
+        gtx.send(ShardEvent::Grad(msg(1, 0))).unwrap();
+        gtx.send(ShardEvent::Grad(ShardMsg {
+            worker: 1,
+            base_version: 3,
+            loss: 1.0,
+            grad: ShardGrad::Dense(Arc::new(vec![f32::INFINITY, 0.0])),
+        }))
+        .unwrap();
+        drop(gtx);
+        let stop = AtomicBool::new(false);
+        let cell = Arc::new(SnapshotCell::new(vec![0.0; 2]));
+        let clock = crate::coordinator::clock::RealClock::start();
+        let report = run_shard(0, 0..2, vec![0.0; 2], cell, &cfg, grx, rtxs, &stop, &clock);
+        assert_eq!(report.rejected, 1);
+        let w0 = &board.workers[0];
+        let w1 = &board.workers[1];
+        assert_eq!(w0.grads.load(Ordering::Relaxed), 2);
+        assert_eq!(w0.stale_sum.load(Ordering::Relaxed), 0);
+        assert_eq!(w0.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(w1.grads.load(Ordering::Relaxed), 2);
+        assert_eq!(w1.stale_sum.load(Ordering::Relaxed), 2);
+        assert_eq!(w1.stale_max.load(Ordering::Relaxed), 2);
+        assert_eq!(w1.rejected.load(Ordering::Relaxed), 1);
+        // Histogram: w0's two arrivals were staleness 0; w1 saw one
+        // staleness-0 and one staleness-2 arrival (bucket 2 = "2-3").
+        assert_eq!(w0.stale_hist[0].load(Ordering::Relaxed), 2);
+        assert_eq!(w1.stale_hist[0].load(Ordering::Relaxed), 1);
+        assert_eq!(w1.stale_hist[2].load(Ordering::Relaxed), 1);
+        assert_eq!(stale_bucket(0), 0);
+        assert_eq!(stale_bucket(1), 1);
+        assert_eq!(stale_bucket(7), 3);
+        assert_eq!(stale_bucket(16), 5);
+        assert_eq!(stale_bucket(u64::MAX), 5);
+        drop(rrxs);
+    }
+
+    #[test]
     fn merge_concatenates_shard_params() {
         let layout = ShardLayout::new(4, 2);
         let mk = |shard: usize, params: Vec<f32>| ShardReport {
@@ -699,6 +926,8 @@ mod tests {
             flushes: 2,
             mean_staleness: 0.5,
             per_worker_grads: vec![5, 5],
+            rejected: 1,
+            clipped: 2,
             bytes_received: 40,
             k_trajectory: crate::util::stats::Series::new(),
             version_trajectory: crate::util::stats::Series::new(),
@@ -715,6 +944,9 @@ mod tests {
         assert_eq!(merged.per_shard_updates, vec![7, 7]);
         // bytes-on-wire sum across shards, not shard 0 only
         assert_eq!(merged.bytes_received, 80);
+        // rejection/clip counters are shard-0 canonical like the rest
+        assert_eq!(merged.rejected, 1);
+        assert_eq!(merged.clipped, 2);
     }
 
     #[test]

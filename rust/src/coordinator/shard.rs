@@ -134,6 +134,20 @@ impl ShardedAggregator {
         self
     }
 
+    /// Select the flush-time aggregation mode on every shard (see
+    /// [`Aggregator::with_aggregate`]). Trimmed-mean/median act
+    /// coordinate-wise, so they keep the sharding-invisibility invariant;
+    /// norm clipping is computed over each shard's slice independently
+    /// (documented in DESIGN.md §2.10).
+    pub fn with_aggregate(mut self, mode: super::buffer::AggregateMode) -> Self {
+        self.shards = self
+            .shards
+            .into_iter()
+            .map(|(agg, ps)| (agg.with_aggregate(mode.clone()), ps))
+            .collect();
+        self
+    }
+
     /// Enable elastic membership on every shard (see
     /// [`Aggregator::with_elastic`]).
     pub fn with_elastic(mut self, initial_live: usize, min_quorum: usize) -> Self {
@@ -503,6 +517,61 @@ mod tests {
             .collect();
         assert_eq!(finals[0], finals[1]);
         assert_eq!(finals[0], finals[2]);
+    }
+
+    /// Robust aggregation is coordinate-wise, so it keeps the
+    /// sharding-invisibility invariant: trimmed-mean and median flushes
+    /// produce bitwise the same parameters for every shard count, even
+    /// with a Byzantine worker in the stream.
+    #[test]
+    fn robust_modes_agree_across_shard_counts_bitwise() {
+        use crate::coordinator::buffer::AggregateMode;
+        for mode in [AggregateMode::Trimmed(0.25), AggregateMode::Median] {
+            let dim = 21;
+            let workers = 4;
+            let mut rng = Pcg64::seeded(55);
+            let mut init = vec![0.0f32; dim];
+            rng.fill_normal(&mut init, 1.0);
+            let policy = Policy::Hybrid {
+                schedule: Schedule::Constant { k: 4 },
+                strict: false,
+            };
+            let mut machines: Vec<ShardedAggregator> = [1usize, 2, 4]
+                .iter()
+                .map(|&s| {
+                    ShardedAggregator::new(policy.clone(), &init, 0.1, workers, s)
+                        .with_aggregate(mode.clone())
+                })
+                .collect();
+            let mut grad = vec![0.0f32; dim];
+            for i in 0..80 {
+                rng.fill_normal(&mut grad, 1.0);
+                let w = i % workers;
+                if w == 3 {
+                    // Byzantine: scaled sign-flip
+                    for g in grad.iter_mut() {
+                        *g *= -50.0;
+                    }
+                }
+                let v = machines[0].version();
+                for m in &mut machines {
+                    assert_eq!(m.version(), v);
+                    m.on_gradient(&grad, w, v, 1.0);
+                }
+            }
+            let finals: Vec<Vec<f32>> = machines
+                .iter_mut()
+                .map(|m| {
+                    m.drain();
+                    m.final_params()
+                })
+                .collect();
+            assert_eq!(finals[0], finals[1], "{mode}: S=2 diverged");
+            assert_eq!(finals[0], finals[2], "{mode}: S=4 diverged");
+            // and the defense actually defended: θ stayed bounded
+            let norm: f64 = finals[0].iter().map(|&v| v as f64 * v as f64).sum();
+            assert!(norm.sqrt() < 100.0, "{mode}: θ blew up: {}", norm.sqrt());
+        }
     }
 
     /// Sharding is invisible to the math: S ∈ {2, 5} produce bitwise the

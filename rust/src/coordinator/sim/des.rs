@@ -32,7 +32,8 @@
 //! `Aggregator::on_gradient` call, the same reply classification
 //! (`AppliedNow`/`Buffered`/`BufferedBlocked`/`Flushed`, including the
 //! stale-submitter refresh rule while buffering), the same blocked-worker
-//! release at flush, and the same end-of-run drain. Workers hold a local θ
+//! release at flush, the same non-finite payload rejection at the server
+//! boundary (DESIGN.md §2.10), and the same end-of-run drain. Workers hold a local θ
 //! copy, refresh only shard slices whose version changed, and start their
 //! next gradient once all `S` shard replies are in — the zero-latency
 //! analogue of the channel protocol.
@@ -156,6 +157,9 @@ struct ShardSim {
     /// Workers parked at a barrier, with the epoch of their submission.
     blocked: Vec<(usize, u64)>,
     per_worker: Vec<u64>,
+    /// Non-finite payloads rejected at this shard's boundary (the same
+    /// guard as the threaded `run_shard`; shard 0 is canonical).
+    rejected: u64,
     k_traj: Series,
     v_traj: Series,
     last_trace: Option<Duration>,
@@ -243,11 +247,15 @@ impl<'a> Simulation<'a> {
             if train.elastic {
                 agg = agg.with_elastic(train.workers, train.min_quorum);
             }
+            if !train.aggregate.is_mean() {
+                agg = agg.with_aggregate(train.aggregate.clone());
+            }
             shards.push(ShardSim {
                 agg,
                 store: ParamStore::new(inputs.init_params[range].to_vec(), train.lr),
                 blocked: Vec::new(),
                 per_worker: vec![0; total_slots],
+                rejected: 0,
                 k_traj: Series::new(),
                 v_traj: Series::new(),
                 last_trace: None,
@@ -469,6 +477,8 @@ impl<'a> Simulation<'a> {
                 0.0
             };
             self.metrics.per_worker_grads = sh0.per_worker.clone();
+            self.metrics.rejected_grads = sh0.rejected;
+            self.metrics.clipped_grads = sh0.agg.stats.clipped;
             self.metrics.k_trajectory = std::mem::take(&mut sh0.k_traj);
             self.metrics.version_trajectory = std::mem::take(&mut sh0.v_traj);
         }
@@ -629,7 +639,7 @@ impl<'a> Simulation<'a> {
         let wk = &mut self.workers[w];
         let mut secs = self.grad_time.as_secs_f64();
         if wk.delayed {
-            secs += self.train.delay.sample_secs(&mut wk.rng);
+            secs += self.train.delay.sample_secs_for(w, &mut wk.rng);
         }
         // `compute_floor` pads the whole iteration (compute + delay),
         // exactly as the threaded worker enforces `min_iter`.
@@ -660,6 +670,29 @@ impl<'a> Simulation<'a> {
                 }
             }
         };
+        // Byzantine corruption acts on the *content* of the gradient,
+        // after the honest computation and before encoding — the attacker
+        // controls its own process (including its encoder state), but not
+        // timing or fan-out, so delivery stays in lockstep and the defense
+        // lives on the server side (DESIGN.md §2.10).
+        if self.faults.has_byzantine() {
+            let nan = self.faults.byz_nan(w, at);
+            let mut factor = self.faults.byz_scale_factor(w, at);
+            if self.faults.byz_flip(w, at) {
+                factor = -factor;
+            }
+            let wk = &mut self.workers[w];
+            if nan {
+                for g in wk.grad_buf.iter_mut() {
+                    *g = f32::NAN;
+                }
+            } else if factor != 1.0 {
+                let f = factor as f32;
+                for g in wk.grad_buf.iter_mut() {
+                    *g *= f;
+                }
+            }
+        }
         // Encode into per-shard wire payloads through the worker's encoder.
         // Local compression state (error feedback) advances here, *before*
         // any transport fault: the worker compressed and sent; whether the
@@ -759,40 +792,52 @@ impl<'a> Simulation<'a> {
         {
             let sh = &mut self.shards[shard];
             sh.per_worker[worker] += 1;
-            let outcome = sh.agg.on_gradient_view(
-                &mut sh.store,
-                grad.view(range),
-                worker,
-                base_version,
-                loss,
-            );
-            let version = sh.store.version();
-            match outcome {
-                Outcome::AppliedNow => {
-                    if !ghost {
-                        replies.push((worker, epoch, true));
-                    }
+            if !grad.is_finite() {
+                // Non-finite payload: rejected at the server boundary, never
+                // aggregated (same guard as the threaded `run_shard`). The
+                // whole-payload check gives every shard the same verdict, so
+                // the lockstep invariant survives, and the submitter still
+                // gets a reply (refreshed only if θ moved since it read).
+                sh.rejected += 1;
+                if !ghost {
+                    replies.push((worker, epoch, base_version != sh.store.version()));
                 }
-                Outcome::Buffered => {
-                    // θ frozen since the last flush: refresh only a stale
-                    // submitter (same rule as the threaded server).
-                    if !ghost {
-                        replies.push((worker, epoch, base_version != version));
+            } else {
+                let outcome = sh.agg.on_gradient_view(
+                    &mut sh.store,
+                    grad.view(range),
+                    worker,
+                    base_version,
+                    loss,
+                );
+                let version = sh.store.version();
+                match outcome {
+                    Outcome::AppliedNow => {
+                        if !ghost {
+                            replies.push((worker, epoch, true));
+                        }
                     }
-                }
-                Outcome::BufferedBlocked => {
-                    if !ghost {
-                        sh.blocked.push((worker, epoch));
+                    Outcome::Buffered => {
+                        // θ frozen since the last flush: refresh only a stale
+                        // submitter (same rule as the threaded server).
+                        if !ghost {
+                            replies.push((worker, epoch, base_version != version));
+                        }
                     }
-                }
-                Outcome::Flushed { .. } => {
-                    if !ghost {
-                        replies.push((worker, epoch, true));
+                    Outcome::BufferedBlocked => {
+                        if !ghost {
+                            sh.blocked.push((worker, epoch));
+                        }
                     }
-                    for (bw, be) in sh.blocked.drain(..) {
-                        replies.push((bw, be, true));
+                    Outcome::Flushed { .. } => {
+                        if !ghost {
+                            replies.push((worker, epoch, true));
+                        }
+                        for (bw, be) in sh.blocked.drain(..) {
+                            replies.push((bw, be, true));
+                        }
+                        sh.k_traj.push(t, sh.agg.current_k() as f64);
                     }
-                    sh.k_traj.push(t, sh.agg.current_k() as f64);
                 }
             }
             if sh
@@ -1206,6 +1251,70 @@ mod tests {
         // Elastic churn replays bitwise like everything else.
         let n = simulate(&scn, &inputs).unwrap();
         assert_eq!(m, n);
+    }
+
+    #[test]
+    fn byzantine_attacker_diverges_mean_but_not_trimmed() {
+        let init = vec![0.0f32; 4];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 4]);
+        // Worker 3 flips and amplifies its gradients 20×. Under the plain
+        // mean flush the poisoned contribution dominates every round and θ
+        // runs away from the bowl exponentially.
+        let attack = "workers=4 policy=sync secs=2 grad-ms=10 lr=0.1 faults=byz-scale:3:-20@0";
+        let mean = simulate(&Scenario::parse(attack).unwrap(), &inputs).unwrap();
+        let mean_loss = *mean.test_loss.v.last().unwrap();
+        assert!(
+            !(mean_loss < 10.0),
+            "plain mean should diverge under the attack, got loss {mean_loss}"
+        );
+
+        // The identical attack with a trimmed-mean flush: the outlier is
+        // cut per coordinate and the run converges as if it were clean.
+        let defended = format!("{attack} aggregate=trimmed:0.25");
+        let scn = Scenario::parse(&defended).unwrap();
+        let trimmed = simulate(&scn, &inputs).unwrap();
+        let trimmed_loss = *trimmed.test_loss.v.last().unwrap();
+        assert!(
+            trimmed_loss < 1e-2,
+            "trimmed mean should converge under the attack, got loss {trimmed_loss}"
+        );
+        assert!(trimmed.final_params.iter().all(|p| p.is_finite()));
+        // The defended run replays bitwise from its logged scenario line.
+        let again = simulate(&Scenario::parse(&scn.to_string()).unwrap(), &inputs).unwrap();
+        assert_eq!(trimmed, again);
+    }
+
+    #[test]
+    fn nan_poisoning_is_rejected_and_the_run_stays_healthy() {
+        let init = vec![0.0f32; 4];
+        let eval = quad_eval_set();
+        let inputs = quad_inputs(&init, &eval, vec![1.0; 4]);
+        let scn = Scenario::parse(
+            "workers=2 policy=async secs=2 grad-ms=10 lr=0.2 faults=byz-nan:1@1",
+        )
+        .unwrap();
+        let m = simulate(&scn, &inputs).unwrap();
+        // Every payload worker 1 sends after t=1 is rejected at the server
+        // boundary: counted, never aggregated, and the run stays healthy.
+        assert!(m.rejected_grads > 0, "rejected {}", m.rejected_grads);
+        assert_eq!(
+            m.gradients_total + m.rejected_grads,
+            m.per_worker_grads.iter().sum::<u64>(),
+            "accepted + rejected must account for every arrival"
+        );
+        assert!(m.final_params.iter().all(|p| p.is_finite()));
+        let final_loss = *m.test_loss.v.last().unwrap();
+        assert!(final_loss < 1e-3, "loss {final_loss}");
+        // Rejection still replies, so the poisoned worker keeps iterating
+        // instead of hanging on a reply that never comes.
+        assert!(
+            m.per_worker_grads[1] > m.per_worker_grads[0] / 2,
+            "{:?}",
+            m.per_worker_grads
+        );
+        let n = simulate(&scn, &inputs).unwrap();
+        assert_eq!(m, n, "byzantine runs replay bitwise");
     }
 
     #[test]

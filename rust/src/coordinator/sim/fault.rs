@@ -13,10 +13,24 @@
 //! | `drop:W@T1..T2:P`     | each submission of `W` in the window is lost w.p. `P`|
 //! | `dup:W@T1..T2:P`      | each submission is delivered twice w.p. `P`          |
 //! | `stall:S@T1..T2`      | shard server `S` stalls; arrivals queue until `T2`   |
+//! | `byz-scale:W:F@T`     | Byzantine: `W` submits gradients scaled by `F`       |
+//! | `byz-flip:W@T`        | Byzantine: `W` submits sign-flipped gradients        |
+//! | `byz-nan:W@T`         | Byzantine: `W` poisons its gradients with NaN        |
 //!
 //! `W` may be `*` (every worker). Times are seconds with an optional `s`
 //! suffix (`5`, `5s`, `1.5`). Example:
 //! `crash:3@5s,stall:0@1..1.5,slow:*@2..4*8,leave:1@8,join:+2@5`.
+//!
+//! The `byz-*` clauses take either an open-ended onset (`@T`: Byzantine
+//! from `T` to the end of the run) or a bounded window (`@T1..T2`). They
+//! corrupt the *content* of a submission, never its timing or fan-out:
+//! the attacker still computes a real gradient on its shard of the data,
+//! corrupts it, and sends the corrupted payload to every shard at the
+//! normal time. Delivery therefore preserves the lockstep invariant —
+//! every shard sees the same arrival sequence — and the defense lives
+//! entirely on the server side (`aggregate=` in the scenario; DESIGN.md
+//! §2.10). NaN payloads are rejected at the server boundary and counted,
+//! never applied.
 //!
 //! `leave`/`join` are membership churn, not transport faults: they require
 //! `elastic=on` in the scenario (validated there), joiners take fresh
@@ -84,6 +98,27 @@ pub enum FaultSpec {
         from: Duration,
         until: Duration,
     },
+    /// Byzantine: submissions of `worker` are scaled by `factor` inside the
+    /// window (`until == None` = until the end of the run).
+    ByzScale {
+        worker: Option<usize>,
+        factor: f64,
+        from: Duration,
+        until: Option<Duration>,
+    },
+    /// Byzantine: submissions of `worker` are sign-flipped inside the window.
+    ByzFlip {
+        worker: Option<usize>,
+        from: Duration,
+        until: Option<Duration>,
+    },
+    /// Byzantine: submissions of `worker` are poisoned with NaN inside the
+    /// window (exercises the server-side non-finite rejection path).
+    ByzNan {
+        worker: Option<usize>,
+        from: Duration,
+        until: Option<Duration>,
+    },
 }
 
 fn parse_secs(s: &str) -> anyhow::Result<Duration> {
@@ -114,6 +149,18 @@ fn parse_window(s: &str) -> anyhow::Result<(Duration, Duration)> {
     Ok((from, until))
 }
 
+/// Parse `T` (open-ended onset) or `T1..T2` (bounded window).
+fn parse_open_window(s: &str) -> anyhow::Result<(Duration, Option<Duration>)> {
+    match s.split_once("..") {
+        Some((a, b)) => {
+            let (from, until) = (parse_secs(a)?, parse_secs(b)?);
+            anyhow::ensure!(from < until, "empty window `{s}`");
+            Ok((from, Some(until)))
+        }
+        None => Ok((parse_secs(s)?, None)),
+    }
+}
+
 fn fmt_secs(d: &Duration) -> String {
     format!("{}", d.as_secs_f64())
 }
@@ -122,6 +169,13 @@ fn fmt_who(w: &Option<usize>) -> String {
     match w {
         Some(i) => i.to_string(),
         None => "*".to_string(),
+    }
+}
+
+fn fmt_open_window(from: &Duration, until: &Option<Duration>) -> String {
+    match until {
+        Some(u) => format!("{}..{}", fmt_secs(from), fmt_secs(u)),
+        None => fmt_secs(from),
     }
 }
 
@@ -205,9 +259,47 @@ impl FaultSpec {
                 let (from, until) = parse_window(window)?;
                 Ok(FaultSpec::Stall { shard, from, until })
             }
+            "byz-scale" => {
+                let (who, rest) = rest.split_once(':').ok_or_else(|| {
+                    anyhow::anyhow!("bad byz-scale clause `{s}` (expected `byz-scale:W:F@T`)")
+                })?;
+                let (factor, window) = rest.split_once('@').ok_or_else(err)?;
+                let worker = parse_who(who)?;
+                let factor: f64 = factor.parse().map_err(|_| err())?;
+                anyhow::ensure!(
+                    factor.is_finite(),
+                    "byz-scale factor must be finite, got `{factor}`"
+                );
+                let (from, until) = parse_open_window(window)?;
+                Ok(FaultSpec::ByzScale {
+                    worker,
+                    factor,
+                    from,
+                    until,
+                })
+            }
+            "byz-flip" | "byz-nan" => {
+                let (who, window) = rest.split_once('@').ok_or_else(err)?;
+                let worker = parse_who(who)?;
+                let (from, until) = parse_open_window(window)?;
+                Ok(if kind == "byz-flip" {
+                    FaultSpec::ByzFlip {
+                        worker,
+                        from,
+                        until,
+                    }
+                } else {
+                    FaultSpec::ByzNan {
+                        worker,
+                        from,
+                        until,
+                    }
+                })
+            }
             _ => anyhow::bail!(
                 "unknown fault kind `{kind}` \
-                 (crash | restart | leave | join | slow | drop | dup | stall)"
+                 (crash | restart | leave | join | slow | drop | dup | stall \
+                  | byz-scale | byz-flip | byz-nan)"
             ),
         }
     }
@@ -259,6 +351,37 @@ impl std::fmt::Display for FaultSpec {
             FaultSpec::Stall { shard, from, until } => {
                 write!(f, "stall:{shard}@{}..{}", fmt_secs(from), fmt_secs(until))
             }
+            FaultSpec::ByzScale {
+                worker,
+                factor,
+                from,
+                until,
+            } => write!(
+                f,
+                "byz-scale:{}:{factor}@{}",
+                fmt_who(worker),
+                fmt_open_window(from, until)
+            ),
+            FaultSpec::ByzFlip {
+                worker,
+                from,
+                until,
+            } => write!(
+                f,
+                "byz-flip:{}@{}",
+                fmt_who(worker),
+                fmt_open_window(from, until)
+            ),
+            FaultSpec::ByzNan {
+                worker,
+                from,
+                until,
+            } => write!(
+                f,
+                "byz-nan:{}@{}",
+                fmt_who(worker),
+                fmt_open_window(from, until)
+            ),
         }
     }
 }
@@ -296,6 +419,10 @@ impl FaultPlan {
 
     fn in_window(at: Duration, from: Duration, until: Duration) -> bool {
         at >= from && at < until
+    }
+
+    fn in_open_window(at: Duration, from: Duration, until: &Option<Duration>) -> bool {
+        at >= from && until.map_or(true, |u| at < u)
     }
 
     /// Combined slowdown factor for `worker` at time `at` (product of all
@@ -357,6 +484,52 @@ impl FaultPlan {
         p
     }
 
+    /// Combined Byzantine scale factor for a submission of `worker` at `at`
+    /// (product of all active `byz-scale` clauses; 1.0 = honest).
+    pub fn byz_scale_factor(&self, worker: usize, at: Duration) -> f64 {
+        let mut f = 1.0;
+        for s in &self.specs {
+            if let FaultSpec::ByzScale {
+                worker: who,
+                factor,
+                from,
+                until,
+            } = s
+            {
+                if Self::hits(who, worker) && Self::in_open_window(at, *from, until) {
+                    f *= factor;
+                }
+            }
+        }
+        f
+    }
+
+    /// Whether a submission of `worker` at `at` is sign-flipped.
+    pub fn byz_flip(&self, worker: usize, at: Duration) -> bool {
+        self.specs.iter().any(|s| {
+            matches!(s, FaultSpec::ByzFlip { worker: who, from, until }
+                if Self::hits(who, worker) && Self::in_open_window(at, *from, until))
+        })
+    }
+
+    /// Whether a submission of `worker` at `at` is poisoned with NaN.
+    pub fn byz_nan(&self, worker: usize, at: Duration) -> bool {
+        self.specs.iter().any(|s| {
+            matches!(s, FaultSpec::ByzNan { worker: who, from, until }
+                if Self::hits(who, worker) && Self::in_open_window(at, *from, until))
+        })
+    }
+
+    /// Whether any clause is a Byzantine content corruption.
+    pub fn has_byzantine(&self) -> bool {
+        self.specs.iter().any(|s| {
+            matches!(
+                s,
+                FaultSpec::ByzScale { .. } | FaultSpec::ByzFlip { .. } | FaultSpec::ByzNan { .. }
+            )
+        })
+    }
+
     /// When a gradient arriving at `shard` at time `at` is actually
     /// processed: rolled forward past every stall window it lands in (fixed
     /// point, so overlapping/chained windows compose).
@@ -394,7 +567,10 @@ impl FaultPlan {
                 | FaultSpec::Leave { worker, .. } => Some(*worker),
                 FaultSpec::Slow { worker, .. }
                 | FaultSpec::Drop { worker, .. }
-                | FaultSpec::Duplicate { worker, .. } => *worker,
+                | FaultSpec::Duplicate { worker, .. }
+                | FaultSpec::ByzScale { worker, .. }
+                | FaultSpec::ByzFlip { worker, .. }
+                | FaultSpec::ByzNan { worker, .. } => *worker,
                 FaultSpec::Stall { .. } | FaultSpec::Join { .. } => None,
             })
             .max()
@@ -584,6 +760,73 @@ mod tests {
         assert_eq!(plan.deliver_time(0, secs(3.0)), secs(3.0));
         assert_eq!(plan.deliver_time(1, secs(1.5)), secs(1.5));
         assert_eq!(plan.deliver_time(1, secs(5.2)), secs(6.0));
+    }
+
+    #[test]
+    fn byzantine_clauses_parse_roundtrip_and_query() {
+        let plan =
+            FaultPlan::parse("byz-scale:2:10@1,byz-flip:*@2..4,byz-nan:1@3,byz-scale:2:-1@0..5")
+                .unwrap();
+        assert_eq!(
+            plan.specs[0],
+            FaultSpec::ByzScale {
+                worker: Some(2),
+                factor: 10.0,
+                from: secs(1.0),
+                until: None
+            }
+        );
+        assert_eq!(
+            plan.specs[1],
+            FaultSpec::ByzFlip {
+                worker: None,
+                from: secs(2.0),
+                until: Some(secs(4.0))
+            }
+        );
+        assert!(plan.has_byzantine());
+        assert_eq!(plan.max_worker(), Some(2));
+        // Display → parse is bitwise the identity.
+        assert_eq!(
+            plan.to_string(),
+            "byz-scale:2:10@1,byz-flip:*@2..4,byz-nan:1@3,byz-scale:2:-1@0..5"
+        );
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+
+        // Scale factors compose multiplicatively across active clauses.
+        assert_eq!(plan.byz_scale_factor(2, secs(0.5)), -1.0);
+        assert_eq!(plan.byz_scale_factor(2, secs(1.5)), -10.0);
+        assert_eq!(plan.byz_scale_factor(2, secs(6.0)), 10.0, "open-ended onset");
+        assert_eq!(plan.byz_scale_factor(0, secs(6.0)), 1.0, "other worker honest");
+        // Flip window is half-open; `*` hits everyone.
+        assert!(!plan.byz_flip(0, secs(1.99)));
+        assert!(plan.byz_flip(0, secs(2.0)));
+        assert!(plan.byz_flip(3, secs(3.9)));
+        assert!(!plan.byz_flip(3, secs(4.0)));
+        // NaN poisoning is per-worker and open-ended.
+        assert!(plan.byz_nan(1, secs(100.0)));
+        assert!(!plan.byz_nan(1, secs(2.9)));
+        assert!(!plan.byz_nan(2, secs(100.0)));
+
+        let honest = FaultPlan::parse("crash:0@1").unwrap();
+        assert!(!honest.has_byzantine());
+        assert_eq!(honest.byz_scale_factor(0, secs(2.0)), 1.0);
+    }
+
+    #[test]
+    fn byzantine_clauses_reject_malformed_input() {
+        for bad in [
+            "byz-scale:1@2",        // missing the factor
+            "byz-scale:1:inf@2",    // non-finite factor
+            "byz-scale:1:nan@2",    // non-finite factor
+            "byz-scale:1:2",        // no onset time
+            "byz-flip:1",           // no onset time
+            "byz-flip:1@4..2",      // empty window
+            "byz-nan:x@2",          // bad worker id
+            "byz-nan:1@-2",         // negative time
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
     }
 
     #[test]

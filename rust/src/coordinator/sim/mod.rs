@@ -2,7 +2,8 @@
 //!
 //! Layering:
 //! - [`fault`] — fault clauses (crash / restart / straggler burst / drop /
-//!   duplicate / shard stall) and their compact text encoding.
+//!   duplicate / shard stall / Byzantine scale, sign-flip and NaN
+//!   poisoning) and their compact text encoding.
 //! - [`scenario`] — the one-line scenario DSL: `workers=8 shards=2
 //!   policy=hybrid:step:50 secs=10 faults=crash:3@5` fully determines a
 //!   run.

@@ -24,17 +24,22 @@
 //! | `delay-frac` | fraction of workers subject to delays     | 0              |
 //! | `delay-mean` | delay Normal mean (seconds)               | 0              |
 //! | `delay-std`  | delay Normal σ (seconds)                  | 0              |
+//! | `delay-dist` | delay family (`normal`, `lognormal`)      | `normal`       |
+//! | `delay-regions` | WAN regional correlation groups (0 = off) | 0          |
 //! | `faults`     | a [`FaultPlan`] clause list               | none           |
 //! | `compress`   | gradient [`WireFormat`] (`dense`, `topk:<k|frac>`, `int8`, `topk+int8:<k|frac>`) | `dense` |
 //! | `elastic`    | `on`/`off`: renormalize K and barriers to live membership | `off` |
 //! | `quorum`     | barrier-denominator floor under `elastic` | 1              |
+//! | `aggregate`  | server aggregation (`mean`, `clip:<c>`, `trimmed:<f>`, `median`) | `mean` |
+//! | `partition`  | data partition (`iid`, `dirichlet:<alpha>`) | `iid`        |
 //!
 //! `Display` renders the canonical form; `parse(display(s))` is the
 //! identity, so scenarios can be logged from one run and replayed in
 //! another (EXPERIMENTS.md records sweeps this way).
 
+use super::super::buffer::AggregateMode;
 use super::super::compress::WireFormat;
-use super::super::delay::DelayModel;
+use super::super::delay::{DelayDist, DelayModel};
 use super::super::policy::Policy;
 use super::super::threshold::Schedule;
 use super::super::trainer::TrainConfig;
@@ -118,6 +123,12 @@ impl Scenario {
                 }
                 "delay-mean" => scn.train.delay.mean = v.parse().map_err(|_| num("delay-mean"))?,
                 "delay-std" => scn.train.delay.std = v.parse().map_err(|_| num("delay-std"))?,
+                "delay-dist" => scn.train.delay.dist = DelayDist::parse(v)?,
+                "delay-regions" => {
+                    scn.train.delay.regions = v.parse().map_err(|_| num("delay-regions"))?
+                }
+                "aggregate" => scn.train.aggregate = AggregateMode::parse(v)?,
+                "partition" => scn.train.partition = crate::data::Partition::parse(v)?,
                 "faults" => scn.faults = FaultPlan::parse(v)?,
                 "compress" => scn.train.wire = WireFormat::parse(v)?,
                 "elastic" => {
@@ -154,6 +165,15 @@ impl Scenario {
             "eval interval must be > 0"
         );
         anyhow::ensure!(self.train.min_quorum >= 1, "quorum must be >= 1");
+        // Mirrors trainer::validate_config: the robust estimators need a
+        // round of retained rows to trim across, which async never forms.
+        anyhow::ensure!(
+            !(self.train.aggregate.retains_rows()
+                && matches!(self.train.policy, Policy::Async)),
+            "aggregate={} needs a buffering policy (sync or hybrid): async applies \
+             each gradient on arrival, so there is no round to trim across",
+            self.train.aggregate
+        );
         if self.faults.has_membership() {
             anyhow::ensure!(
                 self.train.elastic,
@@ -224,6 +244,18 @@ impl std::fmt::Display for Scenario {
                 " delay-frac={} delay-mean={} delay-std={}",
                 t.delay.affected_fraction, t.delay.mean, t.delay.std
             )?;
+        }
+        if t.delay.dist != DelayDist::Normal {
+            write!(f, " delay-dist={}", t.delay.dist)?;
+        }
+        if t.delay.regions != 0 {
+            write!(f, " delay-regions={}", t.delay.regions)?;
+        }
+        if !t.aggregate.is_mean() {
+            write!(f, " aggregate={}", t.aggregate)?;
+        }
+        if !t.partition.is_iid() {
+            write!(f, " partition={}", t.partition)?;
         }
         if !t.wire.is_dense() {
             write!(f, " compress={}", t.wire)?;
@@ -356,6 +388,58 @@ mod tests {
         let line = plain.to_string();
         assert!(!line.contains("elastic="), "{line}");
         assert!(!line.contains("quorum="), "{line}");
+    }
+
+    #[test]
+    fn robustness_keys_parse_and_roundtrip() {
+        let s = Scenario::parse(
+            "workers=8 policy=sync aggregate=trimmed:0.25 partition=dirichlet:0.3 \
+             delay-frac=1 delay-mean=-2 delay-std=0.5 delay-dist=lognormal delay-regions=3 \
+             faults=byz-scale:7:10@1",
+        )
+        .unwrap();
+        assert_eq!(s.train.aggregate, AggregateMode::Trimmed(0.25));
+        assert_eq!(s.train.partition, crate::data::Partition::Dirichlet(0.3));
+        assert_eq!(s.train.delay.dist, DelayDist::LogNormal);
+        assert_eq!(s.train.delay.regions, 3);
+        assert!(s.faults.has_byzantine());
+        let logged = s.to_string();
+        assert!(logged.contains("aggregate=trimmed:0.25"), "{logged}");
+        assert!(logged.contains("partition=dirichlet:0.3"), "{logged}");
+        assert!(logged.contains("delay-dist=lognormal"), "{logged}");
+        assert!(logged.contains("delay-regions=3"), "{logged}");
+        assert!(logged.contains("faults=byz-scale:7:10@1"), "{logged}");
+        let replay = Scenario::parse(&logged).unwrap();
+        assert_eq!(replay.train.aggregate, s.train.aggregate);
+        assert_eq!(replay.train.partition, s.train.partition);
+        assert_eq!(replay.train.delay, s.train.delay);
+        assert_eq!(replay.faults, s.faults);
+        // Defaults stay silent: a plain scenario logs none of the new keys.
+        let plain = Scenario::parse("workers=2").unwrap().to_string();
+        for key in ["aggregate=", "partition=", "delay-dist=", "delay-regions="] {
+            assert!(!plain.contains(key), "{plain}");
+        }
+    }
+
+    #[test]
+    fn robustness_keys_reject_bad_input() {
+        for bad in [
+            "aggregate=mode7",                  // unknown mode
+            "aggregate=trimmed:0.5",            // trim fraction out of range
+            "aggregate=clip:0",                 // clip radius must be > 0
+            "partition=dirichlet:0",            // alpha must be > 0
+            "partition=sorted",                 // unknown scheme
+            "delay-dist=pareto",                // unknown family
+            "delay-regions=x",                  // not a count
+            "workers=4 faults=byz-nan:4@1",     // byz names worker out of range
+            // robust estimators need a round to trim across
+            "policy=async aggregate=median",
+            "policy=async aggregate=trimmed:0.1",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        // clip composes with async: it acts per contribution, not per round.
+        assert!(Scenario::parse("policy=async aggregate=clip:1").is_ok());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! the metric series. This is the function every example, experiment and
 //! benchmark drives.
 
+use super::buffer::AggregateMode;
 use super::clock::{Clock, RealClock};
 use super::compress::WireFormat;
 use super::delay::DelayModel;
@@ -120,6 +121,18 @@ pub struct TrainConfig {
     /// only living in memory until the end-of-run dump. `None` (the
     /// default) reproduces the in-memory-only behaviour bitwise.
     pub stream: Option<Arc<MetricsStream>>,
+    /// Server-side aggregation mode (`--aggregate mean|clip:<c>|
+    /// trimmed:<f>|median`). `Mean` — the default — reproduces the
+    /// historical sum-then-flush path bitwise; the robust modes are the
+    /// Byzantine defenses of DESIGN.md §2.10 and require a buffering
+    /// policy (sync or hybrid).
+    pub aggregate: AggregateMode,
+    /// How synthetic training data is split across workers
+    /// (`partition=iid|dirichlet:<alpha>`): round-robin IID (the default,
+    /// bitwise-identical to the historical sharding) or Dirichlet
+    /// label-skewed non-IID shards. Consumed by the batch-source builders,
+    /// carried here so one scenario string describes the whole run.
+    pub partition: crate::data::Partition,
 }
 
 impl TrainConfig {
@@ -140,8 +153,34 @@ impl TrainConfig {
             elastic: false,
             min_quorum: 1,
             stream: None,
+            aggregate: AggregateMode::Mean,
+            partition: crate::data::Partition::Iid,
         }
     }
+}
+
+/// Config validation shared by [`train`], [`serve_with`] and the
+/// simulator's scenario checks.
+pub(crate) fn validate_config(cfg: &TrainConfig) -> anyhow::Result<()> {
+    if cfg.elastic {
+        anyhow::ensure!(
+            cfg.min_quorum <= cfg.workers,
+            "--min-quorum {} can never be met with {} worker slots \
+             (the barrier would stall forever)",
+            cfg.min_quorum,
+            cfg.workers
+        );
+    }
+    // The robust estimators need a buffered round to trim across; the
+    // async policy applies every gradient immediately and never flushes.
+    anyhow::ensure!(
+        !(cfg.aggregate.retains_rows() && matches!(cfg.policy, Policy::Async)),
+        "--aggregate {} needs a buffering policy (sync or hybrid): \
+         async applies each gradient on arrival, so there is no round to \
+         trim across",
+        cfg.aggregate
+    );
+    Ok(())
 }
 
 /// Raises the stop flag on *every* exit from a training thread scope
@@ -176,15 +215,7 @@ pub struct RunInputs<'a> {
 /// For a *fully* deterministic single-threaded run of the same pipeline in
 /// virtual time, see [`super::sim::simulate`].
 pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics> {
-    if cfg.elastic {
-        anyhow::ensure!(
-            cfg.min_quorum <= cfg.workers,
-            "--min-quorum {} can never be met with {} worker slots \
-             (the barrier would stall forever)",
-            cfg.min_quorum,
-            cfg.workers
-        );
-    }
+    validate_config(cfg)?;
     let clock_owned = RealClock::start();
     let clock: &dyn Clock = &clock_owned;
     let stop = AtomicBool::new(false);
@@ -218,6 +249,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         trace_interval: Duration::from_millis(200),
         elastic: cfg.elastic,
         min_quorum: cfg.min_quorum,
+        aggregate: cfg.aggregate.clone(),
         reply_notify: None,
         status: None,
     };
@@ -418,15 +450,7 @@ pub fn serve_with(
     net: &crate::transport::NetOptions,
     kind: crate::transport::FrontendKind,
 ) -> anyhow::Result<RunMetrics> {
-    if cfg.elastic {
-        anyhow::ensure!(
-            cfg.min_quorum <= cfg.workers,
-            "--min-quorum {} can never be met with {} worker slots \
-             (the barrier would stall forever)",
-            cfg.min_quorum,
-            cfg.workers
-        );
-    }
+    validate_config(cfg)?;
     let clock_owned = RealClock::start();
     let clock: &dyn Clock = &clock_owned;
     let stop = Arc::new(AtomicBool::new(false));
@@ -456,7 +480,7 @@ pub fn serve_with(
     // The read-only ops plane: shard threads publish gauges, the frontend
     // answers StatusRequest probes from them — no shared locks, no
     // gradient-plane involvement.
-    let status = Arc::new(StatusBoard::new(layout.shards()));
+    let status = Arc::new(StatusBoard::with_workers(layout.shards(), cfg.workers));
     let mut server_cfg = ServerConfig {
         policy: cfg.policy.clone(),
         workers: cfg.workers,
@@ -465,6 +489,7 @@ pub fn serve_with(
         trace_interval: Duration::from_millis(200),
         elastic: cfg.elastic,
         min_quorum: cfg.min_quorum,
+        aggregate: cfg.aggregate.clone(),
         reply_notify: None,
         status: Some(Arc::clone(&status)),
     };
@@ -937,6 +962,47 @@ mod tests {
         let min = *m.per_shard_updates.iter().min().unwrap();
         // At most one in-flight message per worker per shard at shutdown.
         assert!(max - min <= 3, "shard updates diverged: {:?}", m.per_shard_updates);
+    }
+
+    #[test]
+    fn robust_aggregate_needs_a_buffering_policy() {
+        let mut cfg = TrainConfig::quick(Policy::Async, 2, 0.1);
+        cfg.aggregate = AggregateMode::Median;
+        assert!(validate_config(&cfg).is_err());
+        cfg.aggregate = AggregateMode::Trimmed(0.25);
+        assert!(validate_config(&cfg).is_err());
+        // Clipping is per-contribution, so it composes with async fine.
+        cfg.aggregate = AggregateMode::Clip(1.0);
+        assert!(validate_config(&cfg).is_ok());
+        cfg.policy = Policy::Sync;
+        cfg.aggregate = AggregateMode::Median;
+        assert!(validate_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn trimmed_run_trains_end_to_end() {
+        let spec = ClusterSpec {
+            n_samples: 600,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(11);
+        let full = generate(&spec, &mut rng);
+        let (train, test) = full.split(0.8, &mut rng);
+        let dims = vec![20, 32, 10];
+        let init = MlpEngine::init_params(&dims, &mut rng);
+        let test_set = EvalSet::from_dataset(&test, 100, &mut rng);
+        let probe = EvalSet::from_dataset(&train, 100, &mut rng);
+        let train = Arc::new(train);
+        let inputs = mlp_inputs(train, &test_set, &probe, &init, dims, 16, 4);
+        let mut cfg = TrainConfig::quick(Policy::Sync, 4, 1.0);
+        cfg.delay = DelayModel::none();
+        cfg.lr = 0.05;
+        cfg.aggregate = AggregateMode::Trimmed(0.25);
+        let m = train_run(&cfg, &inputs);
+        assert!(m.flushes > 0, "no barrier rounds completed");
+        assert!(m.final_params.iter().all(|v| v.is_finite()));
+        let last_acc = *m.test_acc.v.last().unwrap();
+        assert!(last_acc > 20.0, "trimmed-mean run did not learn: acc {last_acc}");
     }
 
     #[test]

@@ -164,7 +164,7 @@ pub fn run_worker(
             }
         };
         if cfg.delayed {
-            let d = cfg.delay.sample(&mut rng);
+            let d = cfg.delay.sample_for(cfg.id, &mut rng);
             if !d.is_zero() {
                 report.delay_slept += d.as_secs_f64();
                 // Sleep in small slices so shutdown stays responsive even

@@ -13,6 +13,51 @@ pub mod tokens;
 
 use crate::util::rng::Pcg64;
 
+/// How training samples are split across workers
+/// (`partition=iid|dirichlet:<alpha>` in the scenario DSL).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Partition {
+    /// Round-robin dealing — the historical default, class-balanced.
+    Iid,
+    /// Label-skewed non-IID shards: per class, worker shares are drawn
+    /// from Dirichlet(α·1`_W`). Small α concentrates each class on few
+    /// workers (heterogeneous federated-style shards); large α recovers
+    /// near-IID balance.
+    Dirichlet(f64),
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> anyhow::Result<Partition> {
+        if s == "iid" {
+            return Ok(Partition::Iid);
+        }
+        if let Some(rest) = s.strip_prefix("dirichlet:") {
+            let alpha: f64 = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad dirichlet alpha `{rest}`"))?;
+            anyhow::ensure!(
+                alpha.is_finite() && alpha > 0.0,
+                "dirichlet alpha must be a positive finite number, got `{rest}`"
+            );
+            return Ok(Partition::Dirichlet(alpha));
+        }
+        anyhow::bail!("unknown partition `{s}` (expected `iid` or `dirichlet:<alpha>`)")
+    }
+
+    pub fn is_iid(&self) -> bool {
+        matches!(self, Partition::Iid)
+    }
+}
+
+impl std::fmt::Display for Partition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Partition::Iid => write!(f, "iid"),
+            Partition::Dirichlet(a) => write!(f, "dirichlet:{a}"),
+        }
+    }
+}
+
 /// An in-memory supervised dataset: `n` samples of `dim` features + label.
 #[derive(Clone, Debug)]
 pub struct Dataset {
@@ -68,6 +113,63 @@ impl Dataset {
         let mut shards = vec![Vec::new(); w];
         for i in 0..self.len() {
             shards[i % w].push(i);
+        }
+        shards
+    }
+
+    /// Shards for `w` workers under a [`Partition`]. `Iid` delegates to
+    /// [`Dataset::shard_indices`] (bitwise the historical sharding);
+    /// `Dirichlet(α)` draws, per class, worker shares from Dirichlet(α·1
+    /// `_W`) (seeded — same seed, same shards) and deals that class's
+    /// shuffled samples out proportionally. Every sample lands in exactly
+    /// one shard; a worker left with nothing steals one sample from the
+    /// richest shard so the `Batcher`'s non-empty invariant holds.
+    pub fn partition_indices(&self, w: usize, p: &Partition, seed: u64) -> Vec<Vec<usize>> {
+        let alpha = match p {
+            Partition::Iid => return self.shard_indices(w),
+            Partition::Dirichlet(a) => *a,
+        };
+        let mut rng = Pcg64::new(seed, 0xD161);
+        let mut shards = vec![Vec::new(); w];
+        for class in 0..self.classes.max(1) {
+            let mut members: Vec<usize> = (0..self.len())
+                .filter(|&i| self.y[i] as usize == class)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            rng.shuffle(&mut members);
+            let weights: Vec<f64> = (0..w).map(|_| rng.gamma(alpha)).collect();
+            let total: f64 = weights.iter().sum();
+            // Deep-subnormal α can underflow every draw to zero; fall
+            // back to even shares rather than divide by zero.
+            let (weights, total) = if total.is_finite() && total > 0.0 {
+                (weights, total)
+            } else {
+                (vec![1.0; w], w as f64)
+            };
+            let n = members.len() as f64;
+            let mut start = 0usize;
+            let mut cum = 0.0;
+            for (j, wt) in weights.iter().enumerate() {
+                cum += *wt;
+                let end = if j + 1 == w {
+                    members.len()
+                } else {
+                    (((cum / total) * n).round() as usize).clamp(start, members.len())
+                };
+                shards[j].extend_from_slice(&members[start..end]);
+                start = end;
+            }
+        }
+        for j in 0..w {
+            if shards[j].is_empty() {
+                let rich = (0..w).max_by_key(|&i| shards[i].len()).unwrap();
+                if shards[rich].len() > 1 {
+                    let taken = shards[rich].pop().unwrap();
+                    shards[j].push(taken);
+                }
+            }
         }
         shards
     }
@@ -230,5 +332,62 @@ mod tests {
     fn histogram_counts() {
         let d = toy(10);
         assert_eq!(class_histogram(&d.y, 2), vec![5, 5]);
+    }
+
+    #[test]
+    fn partition_parse_roundtrip() {
+        for s in ["iid", "dirichlet:0.1", "dirichlet:5"] {
+            let p = Partition::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+        assert!(Partition::parse("dirichlet:0").is_err());
+        assert!(Partition::parse("dirichlet:-1").is_err());
+        assert!(Partition::parse("dirichlet:nan").is_err());
+        assert!(Partition::parse("zipf:2").is_err());
+        assert!(Partition::Iid.is_iid());
+        assert!(!Partition::Dirichlet(0.5).is_iid());
+    }
+
+    #[test]
+    fn iid_partition_is_the_historical_sharding() {
+        let d = toy(100);
+        assert_eq!(
+            d.partition_indices(3, &Partition::Iid, 42),
+            d.shard_indices(3)
+        );
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_and_skews() {
+        let d = toy(400);
+        let p = Partition::Dirichlet(0.05);
+        let shards = d.partition_indices(4, &p, 7);
+        // Same seed → same shards (the sim's replay depends on it).
+        assert_eq!(shards, d.partition_indices(4, &p, 7));
+        // Exact cover: every sample in exactly one shard, none empty.
+        let mut seen = vec![false; d.len()];
+        for s in &shards {
+            assert!(!s.is_empty(), "a worker was starved of data");
+            for &i in s {
+                assert!(!seen[i], "sample {i} dealt twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "not every sample was dealt");
+        // Label skew: with α = 0.05 over 4 workers, some worker holds far
+        // more than the IID quarter of class 0.
+        let max_share = shards
+            .iter()
+            .map(|s| s.iter().filter(|&&i| d.y[i] == 0).count())
+            .max()
+            .unwrap() as f64
+            / 200.0;
+        assert!(max_share > 0.4, "no label skew: max class-0 share {max_share}");
+        // ... and a large α is close to balanced.
+        let balanced = d.partition_indices(4, &Partition::Dirichlet(1000.0), 7);
+        for s in &balanced {
+            let share = s.iter().filter(|&&i| d.y[i] == 0).count() as f64 / 200.0;
+            assert!((share - 0.25).abs() < 0.1, "α→∞ should be near-IID: {share}");
+        }
     }
 }

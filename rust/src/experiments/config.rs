@@ -7,7 +7,8 @@
 //! restores the original numbers; the *relative* comparison (identical init,
 //! identical budget across algorithms) is what the tables measure.
 
-use crate::coordinator::{DelayModel, WireFormat};
+use crate::coordinator::{AggregateMode, DelayModel, WireFormat};
+use crate::data::Partition;
 
 /// Virtual-time simulation parameters (`--sim`): run on the deterministic
 /// discrete-event simulator instead of the threaded trainer. `secs` then
@@ -126,6 +127,14 @@ pub struct ExpConfig {
     pub steps: Option<u64>,
     /// When set, runs execute on the virtual-time simulator (`--sim`).
     pub sim: Option<SimParams>,
+    /// Server-side aggregation mode (`--aggregate`); `mean` reproduces the
+    /// historical flush bitwise, the rest are Byzantine defenses
+    /// (DESIGN.md §2.10).
+    pub aggregate: AggregateMode,
+    /// How training data is dealt across workers (`--partition`); `iid`
+    /// reproduces the historical contiguous sharding bitwise,
+    /// `dirichlet:<alpha>` skews class proportions per worker.
+    pub partition: Partition,
 }
 
 /// The paper's K cap (25 workers) is reached after step×(25−1) arrivals; at
@@ -189,6 +198,8 @@ impl ExpConfig {
             compress: WireFormat::Dense,
             steps: None,
             sim: None,
+            aggregate: AggregateMode::Mean,
+            partition: Partition::Iid,
         }
     }
 

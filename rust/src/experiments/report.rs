@@ -34,6 +34,20 @@ COMMON OPTIONS:
   --policy async|sync|hybrid:step:500|hybrid-strict:<sched>|adaptive[:t]  (train only)
   --workers N      --batch N     --lr F        --secs F
   --rounds N       --seed N      --step-mult F --delay-std F
+  --delay-dist normal|lognormal  per-gradient delay family (default normal;
+                                 lognormal = heavy-tailed WAN-RTT shape, with
+                                 the mean/--delay-std pair read in log-space)
+  --delay-regions N              WAN regional correlation groups: workers map
+                                 round-robin onto N regions sharing one fixed
+                                 delay multiplier each (default 0 = off)
+  --aggregate MODE               server aggregation: mean | clip:<c> |
+                                 trimmed:<f> | median  (default mean; the
+                                 robust modes defend against Byzantine
+                                 gradients — DESIGN.md §2.10; trimmed/median
+                                 need a buffering policy, i.e. not async)
+  --partition iid|dirichlet:<a>  data dealing across workers (default iid;
+                                 dirichlet skews class shares per worker —
+                                 small alpha = heterogeneous shards)
   --shards N                     parameter-server shards (default 1)
   --compress FMT                 gradient wire format: dense | topk:<k|frac> | int8
                                  | topk+int8:<k|frac>  (default dense; topk uses
@@ -41,7 +55,11 @@ COMMON OPTIONS:
   --sim                          run on the deterministic virtual-time simulator
                                  (--secs becomes virtual seconds; bitwise-reproducible)
   --fault-spec SPEC              inject faults, e.g. \"crash:3@5,stall:0@1..2,slow:*@2..4*8\"
-                                 (implies --sim; see coordinator::sim::FaultPlan)
+                                 (implies --sim; see coordinator::sim::FaultPlan).
+                                 Byzantine clauses: byz-scale:W:F@T (scaled
+                                 gradients), byz-flip:W@T (sign-flipped),
+                                 byz-nan:W@T (NaN-poisoned; rejected and
+                                 counted at the server boundary)
   --grad-ms F                    virtual per-gradient compute time in ms (sim, default 5)
   --steps N                      stop after N gradient submissions per worker
                                  (deterministic budget; --secs stays the hard
@@ -114,6 +132,16 @@ fn config_from(args: &Args, default_dataset: DatasetKind) -> anyhow::Result<ExpC
     }
     if let Some(std) = args.get("delay-std") {
         cfg.delay = DelayModel::paper_default().with_std(std.parse()?);
+    }
+    if let Some(d) = args.get("delay-dist") {
+        cfg.delay.dist = crate::coordinator::DelayDist::parse(d)?;
+    }
+    cfg.delay.regions = args.usize_or("delay-regions", cfg.delay.regions);
+    if let Some(a) = args.get("aggregate") {
+        cfg.aggregate = crate::coordinator::AggregateMode::parse(a)?;
+    }
+    if let Some(p) = args.get("partition") {
+        cfg.partition = crate::data::Partition::parse(p)?;
     }
     if args.flag("sim") || args.get("fault-spec").is_some() || args.get("grad-ms").is_some() {
         // Validate the fault spec at parse time so typos fail fast.
@@ -242,6 +270,8 @@ fn train_config_from(args: &Args, cfg: &ExpConfig) -> anyhow::Result<crate::coor
         elastic: args.flag("elastic"),
         min_quorum,
         stream: metrics_stream_from(args)?,
+        aggregate: cfg.aggregate.clone(),
+        partition: cfg.partition.clone(),
     })
 }
 
@@ -305,6 +335,18 @@ fn print_run(tc: &crate::coordinator::TrainConfig, m: &crate::coordinator::RunMe
     }
     println!("grads/sec       : {:.1}", m.grads_per_sec());
     println!("mean staleness  : {:.2}", m.mean_staleness);
+    if !tc.aggregate.is_mean() {
+        println!("aggregate       : {}", tc.aggregate);
+    }
+    if m.rejected_grads > 0 {
+        println!(
+            "rejected grads  : {} (non-finite payloads dropped at the server boundary)",
+            m.rejected_grads
+        );
+    }
+    if m.clipped_grads > 0 {
+        println!("clipped grads   : {}", m.clipped_grads);
+    }
     if !tc.wire.is_dense() {
         println!("wire format     : {}", tc.wire);
     }
@@ -443,7 +485,9 @@ fn workload_batch_source(
     cfg: &ExpConfig,
 ) -> std::sync::Arc<dyn Fn(usize) -> Box<dyn crate::coordinator::worker::BatchSource> + Send + Sync>
 {
-    let shards = w.train_set.shard_indices(cfg.workers);
+    let shards = w
+        .train_set
+        .partition_indices(cfg.workers, &cfg.partition, cfg.seed);
     let train = std::sync::Arc::clone(&w.train_set);
     let batch = cfg.batch;
     let seed = cfg.seed;

@@ -107,7 +107,9 @@ impl Workload {
         cfg: &ExpConfig,
         round: usize,
     ) -> Arc<dyn Fn(usize) -> Box<dyn BatchSource> + Send + Sync> {
-        let shards = self.train_set.shard_indices(cfg.workers);
+        let shards = self
+            .train_set
+            .partition_indices(cfg.workers, &cfg.partition, cfg.seed);
         let train = Arc::clone(&self.train_set);
         let batch = cfg.batch;
         let seed = cfg.seed.wrapping_add(round as u64 * 7919);
@@ -257,6 +259,8 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 elastic: false,
                 min_quorum: 1,
                 stream: None,
+                aggregate: cfg.aggregate.clone(),
+                partition: cfg.partition.clone(),
             };
             let inputs = RunInputs {
                 worker_engine: Arc::clone(&workload.worker_engine),

@@ -242,6 +242,42 @@ pub(crate) fn render_status(
         }
     }
     w.end_array();
+    // Per-worker arrival/staleness gauges (shard 0's view; see
+    // `WorkerStatus`). Omitted entirely when the board carries no worker
+    // slots so pre-existing consumers see an unchanged document.
+    if let Some(board) = status {
+        if !board.workers.is_empty() {
+            w.key("per_worker");
+            w.begin_array();
+            for (i, ws) in board.workers.iter().enumerate() {
+                let grads = ws.grads.load(Ordering::Relaxed);
+                w.begin_object();
+                w.key("worker");
+                w.num(i as f64);
+                w.key("grads");
+                w.num(grads as f64);
+                w.key("rejected");
+                w.num(ws.rejected.load(Ordering::Relaxed) as f64);
+                w.key("staleness_mean");
+                w.num(if grads > 0 {
+                    ws.stale_sum.load(Ordering::Relaxed) as f64 / grads as f64
+                } else {
+                    0.0
+                });
+                w.key("staleness_max");
+                w.num(ws.stale_max.load(Ordering::Relaxed) as f64);
+                // Log2 buckets: 0, 1, 2-3, 4-7, 8-15, >=16.
+                w.key("staleness_hist");
+                w.begin_array();
+                for b in &ws.stale_hist {
+                    w.num(b.load(Ordering::Relaxed) as f64);
+                }
+                w.end_array();
+                w.end_object();
+            }
+            w.end_array();
+        }
+    }
     w.key("bytes");
     w.begin_object();
     w.key("grad_frame_bytes");
@@ -445,5 +481,51 @@ mod tests {
             },
         );
         assert!(matches!(err, Err(TransportError::Closed(_))));
+    }
+
+    #[test]
+    fn status_document_carries_per_worker_staleness() {
+        use std::sync::atomic::Ordering;
+        let layout = ShardLayout::new(4, 1);
+        let board = StatusBoard::with_workers(1, 2);
+        let w1 = &board.workers[1];
+        w1.grads.store(4, Ordering::Relaxed);
+        w1.rejected.store(1, Ordering::Relaxed);
+        w1.stale_sum.store(6, Ordering::Relaxed);
+        w1.stale_max.store(3, Ordering::Relaxed);
+        w1.stale_hist[0].store(2, Ordering::Relaxed);
+        w1.stale_hist[2].store(2, Ordering::Relaxed);
+        let doc = render_status(
+            "test",
+            &layout,
+            2,
+            2,
+            2,
+            0,
+            0,
+            Duration::from_secs(1),
+            Some(&board),
+        );
+        assert!(doc.contains("\"per_worker\":["));
+        // Worker 0 never submitted: zeros, mean guarded against 0/0.
+        assert!(doc.contains("\"worker\":0,\"grads\":0,\"rejected\":0,\"staleness_mean\":0"));
+        assert!(doc.contains(
+            "\"worker\":1,\"grads\":4,\"rejected\":1,\"staleness_mean\":1.5,\
+             \"staleness_max\":3,\"staleness_hist\":[2,0,2,0,0,0]"
+        ));
+        // A board without worker slots omits the section entirely.
+        let bare = StatusBoard::new(1);
+        let doc = render_status(
+            "test",
+            &layout,
+            2,
+            2,
+            2,
+            0,
+            0,
+            Duration::from_secs(1),
+            Some(&bare),
+        );
+        assert!(!doc.contains("per_worker"));
     }
 }

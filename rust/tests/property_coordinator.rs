@@ -955,6 +955,135 @@ fn prop_membership_clause_dsl_roundtrips_and_rejects_garbage() {
     });
 }
 
+/// Satellite property (robust aggregation, ISSUE 8): with fewer attackers
+/// than the trim width, the coordinate-wise trimmed mean / median flush
+/// estimate lies between honest order statistics, so ‖θ‖∞ grows at most
+/// `flushes × lr × B` where B bounds the honest gradient coordinates —
+/// no matter how large the Byzantine contributions are. Attackers here
+/// send ±1e6-scaled gradients every round under the sync barrier.
+#[test]
+fn prop_robust_aggregation_bounds_theta_under_byzantine_minority() {
+    use hybrid_sgd::coordinator::AggregateMode;
+
+    check("robust-bounds-theta", 60, |g| {
+        let workers = g.usize_in(4, 10);
+        // Strict Byzantine minority: a attackers with a <= (W-1)/2, so a
+        // trim width of a (trimmed) or (W-1)/2 (median) removes them all.
+        let attackers = g.usize_in(1, (workers - 1) / 2);
+        let mode = if g.bool() {
+            // floor(f*W) == attackers and f < 0.5 for every a <= (W-1)/2.
+            AggregateMode::Trimmed((attackers as f64 + 0.4) / workers as f64)
+        } else {
+            AggregateMode::Median
+        };
+        let dim = g.usize_in(1, 24);
+        let lr = g.f64_in(0.01, 0.3) as f32;
+        let rounds = g.usize_in(3, 15);
+        let mut agg =
+            Aggregator::new(Policy::Sync, dim, workers).with_aggregate(mode.clone());
+        let mut ps = ParamStore::new(vec![0.0; dim], lr);
+        let mut honest_bound = 0.0f32;
+        for round in 0..rounds {
+            for w in 0..workers {
+                let mut grad = g.vec_f32(dim, 1.0);
+                if w < attackers {
+                    let factor = if g.bool() { 1e6f32 } else { -1e6 };
+                    for x in grad.iter_mut() {
+                        *x *= factor;
+                    }
+                } else {
+                    for &x in &grad {
+                        honest_bound = honest_bound.max(x.abs());
+                    }
+                }
+                let v = ps.version();
+                agg.on_gradient(&mut ps, &grad, w, v, 1.0);
+            }
+            prop_assert!(
+                ps.version() == (round + 1) as u64,
+                "{mode}: expected one flush per round, version {} after round {round}",
+                ps.version()
+            );
+            let bound = (round + 1) as f32 * lr * honest_bound * 1.05 + 1e-4;
+            for (j, &x) in ps.theta().iter().enumerate() {
+                prop_assert!(
+                    x.is_finite() && x.abs() <= bound,
+                    "{mode} W={workers} a={attackers}: |theta[{j}]|={} \
+                     escaped the honest bound {bound} after {} flushes",
+                    x.abs(),
+                    round + 1
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite property (robust aggregation, ISSUE 8): on attack-free
+/// streams, selecting `aggregate=mean` explicitly is bitwise-identical to
+/// the historical default path — same outcomes, same versions, same final
+/// parameters — for every policy family and S ∈ {1, 2, 4}. The defense
+/// machinery must be invisible unless a non-mean mode is chosen.
+#[test]
+fn prop_explicit_mean_aggregate_is_bitwise_default() {
+    use hybrid_sgd::coordinator::{AdaptiveConfig, AggregateMode};
+
+    check("mean-aggregate-bitwise-default", 40, |g| {
+        let workers = g.usize_in(1, 8);
+        let dim = g.usize_in(1, 40);
+        let policy = match g.rng.below(4) {
+            0 => Policy::Async,
+            1 => Policy::Sync,
+            2 => Policy::Hybrid {
+                schedule: random_schedule(g),
+                strict: g.bool(),
+            },
+            _ => Policy::HybridAdaptive {
+                cfg: AdaptiveConfig {
+                    window: g.usize_in(2, 40),
+                    ..Default::default()
+                },
+                strict: false,
+            },
+        };
+        let lr = g.f64_in(0.01, 0.2) as f32;
+        let init = g.vec_f32(dim, 1.0);
+        for shards in [1usize, 2, 4] {
+            let mut default_m =
+                ShardedAggregator::new(policy.clone(), &init, lr, workers, shards);
+            let mut explicit_m =
+                ShardedAggregator::new(policy.clone(), &init, lr, workers, shards)
+                    .with_aggregate(AggregateMode::Mean);
+            let n = g.usize_in(1, 200);
+            for i in 0..n {
+                let grad = g.vec_f32(dim, 1.0);
+                let w = g.usize_in(0, workers - 1);
+                let loss = g.f64_in(0.0, 4.0) as f32;
+                let (vd, ve) = (default_m.version(), explicit_m.version());
+                prop_assert!(vd == ve, "{policy} S={shards}: version diverged");
+                let out_d = default_m.on_gradient(&grad, w, vd, loss);
+                let out_e = explicit_m.on_gradient(&grad, w, ve, loss);
+                prop_assert!(
+                    out_d == out_e,
+                    "{policy} S={shards}: outcome diverged at arrival {i}: \
+                     {out_d:?} vs {out_e:?}"
+                );
+            }
+            default_m.drain();
+            explicit_m.drain();
+            prop_assert!(
+                default_m.version() == explicit_m.version(),
+                "{policy} S={shards}: update counts diverged"
+            );
+            prop_assert!(
+                default_m.final_params() == explicit_m.final_params(),
+                "{policy} S={shards}: explicit mean is not bitwise the default"
+            );
+        }
+        Ok(())
+    });
+}
+
 /// Strict hybrid at K = W with exactly one outstanding gradient per worker
 /// behaves like sync: every flush contains W distinct workers.
 #[test]
