@@ -350,6 +350,153 @@ fn write_transport_baseline(cases: &[TransportCase], conn_cases: &[ConnCase]) {
     }
 }
 
+/// One tracing-overhead case for the `BENCH_trace.json` baseline.
+struct TraceOverheadCase {
+    name: &'static str,
+    ops_per_sec: f64,
+    p50_ns: f64,
+}
+
+/// Tracing overhead on the submit hot path (the ISSUE 9 gate). Four
+/// variants of the same per-arrival sequence — enqueue stamp probe,
+/// async `on_gradient`, queue/apply span records — at the mid-size
+/// model:
+///
+///   submit_plain         no trace plumbing at all (pre-tracing shape)
+///   submit_trace_off     the shipped code shape with `trace = None`
+///   submit_trace_ring    recording into the flight-recorder ring
+///   submit_trace_export  recording while another thread drains/exports
+///
+/// The acceptance gate pins `submit_trace_off` within 2% of
+/// `submit_plain` on p50 per gradient (relaxed to 10% under BENCH_QUICK,
+/// whose 200 ms budget leaves real scheduler noise in a CI runner).
+fn bench_trace_overhead(b: &mut Bencher) -> Vec<TraceOverheadCase> {
+    use hybrid_sgd::util::trace::{chrome_trace_json, Stage, TraceRing};
+    println!("\n== gradient-lifecycle tracing: submit-path overhead ==");
+    let dim = 52_138;
+    let mut rng = Pcg64::seeded(9);
+    let mut grad = vec![0.0f32; dim];
+    rng.fill_normal(&mut grad, 1.0);
+    let grad = Arc::new(grad);
+
+    // One measured iteration = `BATCH` submit sequences, amortizing the
+    // harness's per-iteration timer reads below the 2% gate.
+    const BATCH: usize = 16;
+    let case = |r: &hybrid_sgd::util::bench::BenchResult, name: &'static str| TraceOverheadCase {
+        name,
+        ops_per_sec: BATCH as f64 / r.mean_secs(),
+        p50_ns: r.p50_ns / BATCH as f64,
+    };
+    let run = |b: &mut Bencher, name: &'static str, trace: Option<Arc<TraceRing>>| {
+        let mut ps = ParamStore::new(vec![0.1; dim], 0.01);
+        let mut agg = Aggregator::new(Policy::Async, dim, 8);
+        let mut w = 0usize;
+        let mut seq = 0u64;
+        let grad = Arc::clone(&grad);
+        let r = b.bench(name, move || {
+            for _ in 0..BATCH {
+                // The exact shape the frontends and shards run: an
+                // Option probe for the enqueue stamp, spans only when
+                // a ring is installed.
+                let enq = trace.as_ref().map_or(0, |tr| tr.real_now());
+                let v = ps.version();
+                agg.on_gradient(&mut ps, black_box(&grad), w % 8, v, 1.0);
+                if let Some(tr) = &trace {
+                    let now = tr.real_now();
+                    tr.span(Stage::Queue, (w % 8) as u32, 0, enq, now, seq, 0);
+                    tr.span(Stage::Apply, (w % 8) as u32, 0, now, tr.real_now(), seq, 0);
+                }
+                w += 1;
+                seq += 1;
+            }
+        });
+        case(&r, name)
+    };
+
+    let plain = {
+        let mut ps = ParamStore::new(vec![0.1; dim], 0.01);
+        let mut agg = Aggregator::new(Policy::Async, dim, 8);
+        let mut w = 0usize;
+        let grad = Arc::clone(&grad);
+        let r = b.bench("submit_plain", move || {
+            for _ in 0..BATCH {
+                let v = ps.version();
+                agg.on_gradient(&mut ps, black_box(&grad), w % 8, v, 1.0);
+                w += 1;
+            }
+        });
+        case(&r, "submit_plain")
+    };
+    let off = run(b, "submit_trace_off", None);
+    let on = run(b, "submit_trace_ring", Some(Arc::new(TraceRing::new(1 << 16))));
+
+    // Worst case: a drain thread continuously serializing the ring into
+    // Chrome JSON while the submit path keeps recording.
+    let export_ring = Arc::new(TraceRing::new(1 << 16));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let drainer = {
+        let ring = Arc::clone(&export_ring);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut bytes = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                bytes += chrome_trace_json(&ring.drain()).len();
+            }
+            bytes
+        })
+    };
+    let exporting = run(b, "submit_trace_export", Some(Arc::clone(&export_ring)));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    black_box(drainer.join().unwrap());
+
+    let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+    let limit = if quick { 1.10 } else { 1.02 };
+    let ratio = off.p50_ns / plain.p50_ns;
+    println!(
+        "  trace-off overhead: {:+.2}% on p50 per gradient (gate +{:.0}%{})",
+        (ratio - 1.0) * 100.0,
+        (limit - 1.0) * 100.0,
+        if quick { ", quick-noise headroom" } else { "" }
+    );
+    assert!(
+        ratio <= limit,
+        "tracing-off submit path regressed: p50 {:.1} ns/gradient vs plain {:.1} ({:+.2}%)",
+        off.p50_ns,
+        plain.p50_ns,
+        (ratio - 1.0) * 100.0
+    );
+    vec![plain, off, on, exporting]
+}
+
+/// Emit the tracing-overhead baseline when asked
+/// (`BENCH_TRACE_OUT=../BENCH_trace.json cargo bench --bench
+/// bench_hotpath`; cargo runs bench binaries with cwd = rust/).
+fn write_trace_baseline(cases: &[TraceOverheadCase]) {
+    let Ok(path) = std::env::var("BENCH_TRACE_OUT") else {
+        return;
+    };
+    let mut rows = Vec::new();
+    for c in cases {
+        rows.push(Json::from_pairs(vec![
+            ("name", Json::Str(c.name.to_string())),
+            ("dim", Json::Num(52_138.0)),
+            ("ops_per_sec", Json::Num(c.ops_per_sec)),
+        ]));
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_hotpath/trace_overhead".to_string())),
+        (
+            "quick",
+            Json::Bool(std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")),
+        ),
+        ("cases", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let mut b = Bencher::new();
     println!("== L3 parameter-server hot path ==");
@@ -469,6 +616,9 @@ fn main() {
     let transport_cases = bench_transport_frames(&mut b);
     let conn_cases = bench_connection_scaling();
     write_transport_baseline(&transport_cases, &conn_cases);
+
+    let trace_cases = bench_trace_overhead(&mut b);
+    write_trace_baseline(&trace_cases);
 
     b.summary();
     // Headline check: the hybrid PS step on the largest model must be far

@@ -42,6 +42,12 @@ impl RealClock {
             start: Instant::now(),
         }
     }
+
+    /// The anchor instant — lets components without a `Clock` handle
+    /// (e.g. the trace ring's frontend stamping) share this timebase.
+    pub fn started_at(&self) -> Instant {
+        self.start
+    }
 }
 
 impl Clock for RealClock {

@@ -33,6 +33,7 @@ use super::params::{ParamStore, SnapshotCell};
 use super::policy::{Aggregator, Outcome, Policy};
 use super::shard::ShardLayout;
 use crate::log_debug;
+use crate::util::trace::{Stage, TraceRing};
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -97,7 +98,25 @@ pub struct WorkerStatus {
 pub struct StatusBoard {
     pub shards: Vec<ShardStatus>,
     pub workers: Vec<WorkerStatus>,
+    /// Byte-counter samples for the sliding-window rate: parallel
+    /// `(uptime_ms + 1, lifetime bytes)` slots (0 = never written) pushed
+    /// by the status renderer, throttled to ~one per 250 ms. 32 slots at
+    /// that cadence comfortably cover the 5 s window.
+    rate_t_ms: [AtomicU64; RATE_SAMPLES],
+    rate_bytes: [AtomicU64; RATE_SAMPLES],
+    rate_cursor: AtomicU64,
 }
+
+/// Sample slots in the byte-rate ring (see [`StatusBoard::push_rate_sample`]).
+pub const RATE_SAMPLES: usize = 32;
+
+/// The byte-rate window: `bytes_per_sec` in the status document averages
+/// over roughly this much recent history instead of the whole run.
+pub const RATE_WINDOW: Duration = Duration::from_secs(5);
+
+/// Minimum spacing between recorded rate samples (rapid pollers reuse the
+/// newest slot's information instead of flushing the window).
+pub const RATE_SAMPLE_SPACING: Duration = Duration::from_millis(250);
 
 impl StatusBoard {
     pub fn new(shards: usize) -> StatusBoard {
@@ -109,7 +128,64 @@ impl StatusBoard {
         StatusBoard {
             shards: (0..shards).map(|_| ShardStatus::default()).collect(),
             workers: (0..workers).map(|_| WorkerStatus::default()).collect(),
+            rate_t_ms: std::array::from_fn(|_| AtomicU64::new(0)),
+            rate_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
+            rate_cursor: AtomicU64::new(0),
         }
+    }
+
+    /// Record a `(uptime, lifetime gradient-plane bytes)` sample for the
+    /// sliding-window rate, throttled to one per [`RATE_SAMPLE_SPACING`].
+    /// Called from the status renderer — every poll or subscription push
+    /// feeds the window, so a 250 ms follower sees a live rate while an
+    /// unpolled server pays nothing. Relaxed atomics: a torn slot under
+    /// concurrent pollers at worst discards one sample at read time.
+    pub fn push_rate_sample(&self, uptime: Duration, bytes: u64) {
+        let t_ms = uptime.as_millis() as u64;
+        let cur = self.rate_cursor.load(Ordering::Relaxed);
+        if cur > 0 {
+            let newest = self.rate_t_ms[(cur as usize - 1) % RATE_SAMPLES].load(Ordering::Relaxed);
+            if newest != 0 && t_ms + 1 < newest + RATE_SAMPLE_SPACING.as_millis() as u64 {
+                return;
+            }
+        }
+        let slot = self.rate_cursor.fetch_add(1, Ordering::Relaxed) as usize % RATE_SAMPLES;
+        self.rate_bytes[slot].store(bytes, Ordering::Relaxed);
+        self.rate_t_ms[slot].store(t_ms + 1, Ordering::Relaxed);
+    }
+
+    /// The sliding-window byte rate: bytes/sec between the oldest and the
+    /// newest sample inside [`RATE_WINDOW`] of `now`. `None` until two
+    /// samples span the window (callers fall back to the lifetime mean).
+    pub fn window_bytes_per_sec(&self, now: Duration) -> Option<f64> {
+        let now_ms = now.as_millis() as u64;
+        let horizon = now_ms.saturating_sub(RATE_WINDOW.as_millis() as u64);
+        let mut oldest: Option<(u64, u64)> = None;
+        let mut newest: Option<(u64, u64)> = None;
+        for (t, b) in self.rate_t_ms.iter().zip(&self.rate_bytes) {
+            let t = t.load(Ordering::Relaxed);
+            if t == 0 {
+                continue; // never written
+            }
+            let t = t - 1;
+            if t < horizon || t > now_ms {
+                continue; // outside the window (or a torn/stale pair)
+            }
+            let b = b.load(Ordering::Relaxed);
+            if oldest.map_or(true, |(ot, _)| t < ot) {
+                oldest = Some((t, b));
+            }
+            if newest.map_or(true, |(nt, _)| t > nt) {
+                newest = Some((t, b));
+            }
+        }
+        let ((t0, b0), (t1, b1)) = (oldest?, newest?);
+        // A window needs actual extent; equal stamps or counter regression
+        // (torn slots) fall back to the lifetime mean.
+        if t1 <= t0 || b1 < b0 {
+            return None;
+        }
+        Some((b1 - b0) as f64 / ((t1 - t0) as f64 / 1000.0))
     }
 }
 
@@ -126,6 +202,12 @@ pub struct ShardMsg {
     /// controller; telemetry otherwise).
     pub loss: f32,
     pub grad: ShardGrad,
+    /// Trace stamp: when this submission was enqueued on the shard
+    /// channel, in nanoseconds on the run clock's timebase (in-process
+    /// workers stamp with their `Clock`; the serve frontends stamp with
+    /// the trace ring's epoch, which shares the run clock's anchor).
+    /// `0` = unstamped (tracing off) — no queue span is recorded.
+    pub enq_ns: u64,
 }
 
 /// What travels on a shard's channel: gradient submissions plus — under
@@ -186,6 +268,11 @@ pub struct ServerConfig {
     /// K / buffer / version / membership gauges here (relaxed stores) after
     /// every event; `None` costs nothing and changes nothing.
     pub status: Option<Arc<StatusBoard>>,
+    /// Gradient-lifecycle flight recorder. When set, each shard thread
+    /// records queue/accumulate/apply/flush-wait spans and flush &
+    /// membership instants, stamped through `clock` so sim traces are
+    /// deterministic; `None` (the default) costs one branch per event.
+    pub trace: Option<Arc<TraceRing>>,
 }
 
 /// What one shard thread hands back when the run ends.
@@ -323,8 +410,10 @@ pub fn run_shard(
         // idempotent joins); departures and re-joins arrive as events.
         agg = agg.with_elastic(cfg.workers, cfg.min_quorum);
     }
-    // Workers blocked at a barrier, released on flush (or stop).
-    let mut blocked: Vec<usize> = Vec::with_capacity(cfg.workers);
+    // Workers blocked at a barrier, released on flush (or stop). The
+    // second element is the trace park stamp (ns; 0 when tracing is off)
+    // so the release can record each worker's flush-wait span.
+    let mut blocked: Vec<(usize, u64)> = Vec::with_capacity(cfg.workers);
     let mut per_worker = vec![0u64; cfg.workers];
     let mut k_traj = crate::util::stats::Series::new();
     let mut v_traj = crate::util::stats::Series::new();
@@ -340,6 +429,16 @@ pub fn run_shard(
             Ok(ShardEvent::Join { worker }) => {
                 if cfg.elastic && agg.member_join(worker) {
                     membership.push(clock.now().as_secs_f64(), agg.live() as f64);
+                    if let Some(tr) = &cfg.trace {
+                        tr.instant(
+                            Stage::Join,
+                            worker as u32,
+                            shard as u32,
+                            clock.now().as_nanos() as u64,
+                            agg.membership_epoch(),
+                            agg.live() as u64,
+                        );
+                    }
                 }
             }
             Ok(ShardEvent::Leave { worker }) => {
@@ -349,8 +448,18 @@ pub fn run_shard(
                         // The departed worker is never waited on again:
                         // out of the barrier denominator, out of the
                         // blocked list.
-                        blocked.retain(|&w| w != worker);
+                        blocked.retain(|&(w, _)| w != worker);
                         membership.push(clock.now().as_secs_f64(), agg.live() as f64);
+                        if let Some(tr) = &cfg.trace {
+                            tr.instant(
+                                Stage::Leave,
+                                worker as u32,
+                                shard as u32,
+                                clock.now().as_nanos() as u64,
+                                agg.membership_epoch(),
+                                agg.live() as u64,
+                            );
+                        }
                     }
                     if let Some(Outcome::Flushed { count, k_at_flush, .. }) = flushed {
                         if shard == 0 {
@@ -365,7 +474,32 @@ pub fn run_shard(
                             shard,
                             version: store.version(),
                         };
-                        for w in blocked.drain(..) {
+                        let rel_ns = cfg
+                            .trace
+                            .as_ref()
+                            .map_or(0, |_| clock.now().as_nanos() as u64);
+                        if let Some(tr) = &cfg.trace {
+                            tr.instant(
+                                Stage::Flush,
+                                worker as u32,
+                                shard as u32,
+                                rel_ns,
+                                store.version(),
+                                count as u64,
+                            );
+                        }
+                        for (w, park) in blocked.drain(..) {
+                            if let Some(tr) = &cfg.trace {
+                                tr.span(
+                                    Stage::FlushWait,
+                                    w as u32,
+                                    shard as u32,
+                                    park,
+                                    rel_ns,
+                                    per_worker[w],
+                                    store.version(),
+                                );
+                            }
                             send(&reply_txs[w], updated, &cfg.reply_notify, w);
                         }
                         k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
@@ -378,9 +512,29 @@ pub fn run_shard(
                     base_version,
                     loss,
                     grad,
+                    enq_ns,
                 } = msg;
                 per_worker[worker] += 1;
                 bytes_received += grad.wire_bytes(range.len()) as u64;
+                // Dequeue stamp, read once and reused below (tracing off:
+                // no clock read, no ring touch — just these branches).
+                let t_deq = cfg
+                    .trace
+                    .as_ref()
+                    .map_or(0, |_| clock.now().as_nanos() as u64);
+                if let Some(tr) = &cfg.trace {
+                    if enq_ns != 0 {
+                        tr.span(
+                            Stage::Queue,
+                            worker as u32,
+                            shard as u32,
+                            enq_ns,
+                            t_deq,
+                            per_worker[worker],
+                            grad.wire_bytes(range.len()) as u64,
+                        );
+                    }
+                }
                 let staleness = store.version().saturating_sub(base_version);
                 let finite = grad.is_finite();
                 if shard == 0 {
@@ -430,15 +584,42 @@ pub fn run_shard(
                     // the worker's `Arc::try_unwrap` recycling never races
                     // a shard.
                     drop(grad);
+                    // Post-aggregation stamp for the accumulate/apply span.
+                    let t_agg = cfg
+                        .trace
+                        .as_ref()
+                        .map_or(0, |_| clock.now().as_nanos() as u64);
                     let updated = Reply::Updated {
                         shard,
                         version: store.version(),
                     };
                     match outcome {
                         Outcome::AppliedNow => {
+                            if let Some(tr) = &cfg.trace {
+                                tr.span(
+                                    Stage::Apply,
+                                    worker as u32,
+                                    shard as u32,
+                                    t_deq,
+                                    t_agg,
+                                    per_worker[worker],
+                                    store.version(),
+                                );
+                            }
                             send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
                         }
                         Outcome::Buffered => {
+                            if let Some(tr) = &cfg.trace {
+                                tr.span(
+                                    Stage::Accumulate,
+                                    worker as u32,
+                                    shard as u32,
+                                    t_deq,
+                                    t_agg,
+                                    per_worker[worker],
+                                    agg.buffered() as u64,
+                                );
+                            }
                             // θ frozen since the last flush: if the worker
                             // already holds this version there is nothing
                             // to do.
@@ -454,7 +635,18 @@ pub fn run_shard(
                             }
                         }
                         Outcome::BufferedBlocked => {
-                            blocked.push(worker);
+                            if let Some(tr) = &cfg.trace {
+                                tr.span(
+                                    Stage::Accumulate,
+                                    worker as u32,
+                                    shard as u32,
+                                    t_deq,
+                                    t_agg,
+                                    per_worker[worker],
+                                    agg.buffered() as u64,
+                                );
+                            }
+                            blocked.push((worker, t_agg));
                         }
                         Outcome::Flushed { count, k_at_flush, .. } => {
                             if shard == 0 {
@@ -464,8 +656,38 @@ pub fn run_shard(
                                     store.version()
                                 );
                             }
+                            if let Some(tr) = &cfg.trace {
+                                tr.span(
+                                    Stage::Apply,
+                                    worker as u32,
+                                    shard as u32,
+                                    t_deq,
+                                    t_agg,
+                                    per_worker[worker],
+                                    store.version(),
+                                );
+                                tr.instant(
+                                    Stage::Flush,
+                                    worker as u32,
+                                    shard as u32,
+                                    t_agg,
+                                    store.version(),
+                                    count as u64,
+                                );
+                            }
                             send(&reply_txs[worker], updated, &cfg.reply_notify, worker);
-                            for w in blocked.drain(..) {
+                            for (w, park) in blocked.drain(..) {
+                                if let Some(tr) = &cfg.trace {
+                                    tr.span(
+                                        Stage::FlushWait,
+                                        w as u32,
+                                        shard as u32,
+                                        park,
+                                        t_agg,
+                                        per_worker[w],
+                                        store.version(),
+                                    );
+                                }
                                 send(&reply_txs[w], updated, &cfg.reply_notify, w);
                             }
                             k_traj.push(clock.now().as_secs_f64(), agg.current_k() as f64);
@@ -495,7 +717,22 @@ pub fn run_shard(
                 shard,
                 version: store.version(),
             };
-            for w in blocked.drain(..) {
+            let rel_ns = cfg
+                .trace
+                .as_ref()
+                .map_or(0, |_| clock.now().as_nanos() as u64);
+            for (w, park) in blocked.drain(..) {
+                if let Some(tr) = &cfg.trace {
+                    tr.span(
+                        Stage::FlushWait,
+                        w as u32,
+                        shard as u32,
+                        park,
+                        rel_ns,
+                        per_worker[w],
+                        store.version(),
+                    );
+                }
                 send(&reply_txs[w], reply, &cfg.reply_notify, w);
             }
             released_on_stop = true;
@@ -587,6 +824,7 @@ mod tests {
             aggregate,
             reply_notify: None,
             status: None,
+            trace: None,
         };
         for ev in events {
             gtx.send(ev).unwrap();
@@ -630,6 +868,7 @@ mod tests {
             base_version: v,
             loss: 1.0,
             grad: ShardGrad::Dense(Arc::new(vec![1.0, 1.0])),
+            enq_ns: 0,
         }
     }
 
@@ -715,6 +954,7 @@ mod tests {
                 base_version: 0,
                 loss: 1.0,
                 grad: ShardGrad::Dense(Arc::clone(&shared)),
+                enq_ns: 0,
             }],
         );
         assert_eq!(report.gradients_total, 1);
@@ -742,6 +982,7 @@ mod tests {
                 base_version: 0,
                 loss: 1.0,
                 grad: ShardGrad::Sparse(Arc::new(sparse)),
+                enq_ns: 0,
             }],
         );
         assert_eq!(report.updates_total, 1);
@@ -769,6 +1010,7 @@ mod tests {
             aggregate: AggregateMode::Mean,
             reply_notify: None,
             status: None,
+            trace: None,
         };
         let stop2 = Arc::clone(&stop);
         let cell = Arc::new(SnapshotCell::new(vec![0.0]));
@@ -793,6 +1035,7 @@ mod tests {
             base_version: 0,
             loss: 0.0,
             grad: ShardGrad::Dense(Arc::new(vec![1.0])),
+            enq_ns: 0,
         }))
         .unwrap();
         std::thread::sleep(Duration::from_millis(50));
@@ -813,6 +1056,7 @@ mod tests {
             base_version: 0,
             loss: 1.0,
             grad: ShardGrad::Dense(Arc::new(vec![f32::NAN, 1.0])),
+            enq_ns: 0,
         };
         let (report, replies, cell) = run_scripted(Policy::Async, 1, vec![bad, msg(0, 0)]);
         // The poisoned payload was dropped at the boundary: only the good
@@ -836,6 +1080,7 @@ mod tests {
             base_version: 0,
             loss: 1.0,
             grad: ShardGrad::Dense(Arc::new(vec![-1000.0, -1000.0])),
+            enq_ns: 0,
         };
         let (report, _, cell) = run_scripted_cfg(
             Policy::Sync,
@@ -875,6 +1120,7 @@ mod tests {
             aggregate: AggregateMode::Mean,
             reply_notify: None,
             status: Some(Arc::clone(&board)),
+            trace: None,
         };
         gtx.send(ShardEvent::Grad(msg(0, 0))).unwrap();
         gtx.send(ShardEvent::Grad(msg(0, 1))).unwrap();
@@ -885,6 +1131,7 @@ mod tests {
             base_version: 3,
             loss: 1.0,
             grad: ShardGrad::Dense(Arc::new(vec![f32::INFINITY, 0.0])),
+            enq_ns: 0,
         }))
         .unwrap();
         drop(gtx);
@@ -912,6 +1159,71 @@ mod tests {
         assert_eq!(stale_bucket(7), 3);
         assert_eq!(stale_bucket(16), 5);
         assert_eq!(stale_bucket(u64::MAX), 5);
+        drop(rrxs);
+    }
+
+    #[test]
+    fn trace_ring_records_the_shard_side_lifecycle() {
+        use crate::util::trace::TraceRing;
+        let (gtx, grx) = mpsc::channel();
+        let mut rtxs = Vec::new();
+        let mut rrxs = Vec::new();
+        for _ in 0..2 {
+            let (tx, rx) = mpsc::channel();
+            rtxs.push(tx);
+            rrxs.push(rx);
+        }
+        let ring = Arc::new(TraceRing::new(256));
+        let cfg = ServerConfig {
+            policy: Policy::Sync,
+            workers: 2,
+            lr: 0.1,
+            k_max: None,
+            trace_interval: Duration::from_millis(1),
+            elastic: false,
+            min_quorum: 1,
+            aggregate: AggregateMode::Mean,
+            reply_notify: None,
+            status: None,
+            trace: Some(Arc::clone(&ring)),
+        };
+        // Stamped submissions: worker 0 blocks at the barrier, worker 1
+        // completes it (flush). enq_ns = 1 (any nonzero stamp works).
+        for w in 0..2 {
+            gtx.send(ShardEvent::Grad(ShardMsg {
+                worker: w,
+                base_version: 0,
+                loss: 1.0,
+                grad: ShardGrad::Dense(Arc::new(vec![1.0, 1.0])),
+                enq_ns: 1,
+            }))
+            .unwrap();
+        }
+        drop(gtx);
+        let stop = AtomicBool::new(false);
+        let cell = Arc::new(SnapshotCell::new(vec![0.0; 2]));
+        let clock = crate::coordinator::clock::RealClock::start();
+        let report = run_shard(0, 0..2, vec![0.0; 2], cell, &cfg, grx, rtxs, &stop, &clock);
+        assert_eq!(report.flushes, 1);
+        let dump = ring.drain();
+        let count = |st: Stage| dump.events.iter().filter(|e| e.stage == st).count();
+        // one queue span per stamped submission
+        assert_eq!(count(Stage::Queue), 2);
+        // worker 0 accumulated + waited for the flush worker 1 triggered
+        assert_eq!(count(Stage::Accumulate), 1);
+        assert_eq!(count(Stage::FlushWait), 1);
+        assert_eq!(count(Stage::Apply), 1);
+        assert_eq!(count(Stage::Flush), 1);
+        let fw = dump
+            .events
+            .iter()
+            .find(|e| e.stage == Stage::FlushWait)
+            .unwrap();
+        assert_eq!(fw.worker, 0);
+        // live histograms saw the spans too
+        let sums = ring.stage_summaries();
+        assert_eq!(sums[Stage::Queue as usize].count, 2);
+        assert_eq!(sums[Stage::Apply as usize].count, 1);
         drop(rrxs);
     }
 

@@ -52,6 +52,7 @@ use super::scenario::Scenario;
 use crate::engine::GradEngine;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Series;
+use crate::util::trace::Stage;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::time::Duration;
@@ -154,8 +155,9 @@ impl EventQueue {
 struct ShardSim {
     agg: Aggregator,
     store: ParamStore,
-    /// Workers parked at a barrier, with the epoch of their submission.
-    blocked: Vec<(usize, u64)>,
+    /// Workers parked at a barrier, with the epoch of their submission and
+    /// the virtual instant they parked (FlushWait span start).
+    blocked: Vec<(usize, u64, Duration)>,
     per_worker: Vec<u64>,
     /// Non-finite payloads rejected at this shard's boundary (the same
     /// guard as the threaded `run_shard`; shard 0 is canonical).
@@ -332,6 +334,7 @@ impl<'a> Simulation<'a> {
                 continue; // steps=0 edge: the worker never submits
             }
             let d = sim.iter_time(w, Duration::ZERO);
+            sim.trace_compute(w, Duration::ZERO, d);
             sim.queue.push(d, Event::Submit { worker: w, epoch: 0 });
         }
         Ok(sim)
@@ -567,6 +570,7 @@ impl<'a> Simulation<'a> {
             if self.budget_left(w) {
                 let d = self.iter_time(w, at);
                 let epoch = self.workers[w].epoch;
+                self.trace_compute(w, at, at + d);
                 self.queue.push(at + d, Event::Submit { worker: w, epoch });
             }
         }
@@ -606,18 +610,62 @@ impl<'a> Simulation<'a> {
         at: Duration,
     ) -> anyhow::Result<()> {
         let t = at.as_secs_f64();
+        let t_ns = at.as_nanos() as u64;
         let mut replies: Vec<(usize, u64, bool)> = Vec::new();
         {
+            let trace = self.train.trace.as_deref();
             let sh = &mut self.shards[shard];
             if join {
-                sh.agg.member_join(worker);
+                if sh.agg.member_join(worker) {
+                    if let Some(tr) = trace {
+                        tr.instant(
+                            Stage::Join,
+                            worker as u32,
+                            shard as u32,
+                            t_ns,
+                            sh.agg.membership_epoch(),
+                            sh.agg.live() as u64,
+                        );
+                    }
+                }
             } else {
                 let (changed, flushed) = sh.agg.member_leave(&mut sh.store, worker);
                 if changed {
-                    sh.blocked.retain(|&(bw, _)| bw != worker);
+                    sh.blocked.retain(|&(bw, _, _)| bw != worker);
+                    if let Some(tr) = trace {
+                        tr.instant(
+                            Stage::Leave,
+                            worker as u32,
+                            shard as u32,
+                            t_ns,
+                            sh.agg.membership_epoch(),
+                            sh.agg.live() as u64,
+                        );
+                    }
                 }
                 if let Some(Outcome::Flushed { .. }) = flushed {
-                    for (bw, be) in sh.blocked.drain(..) {
+                    if let Some(tr) = trace {
+                        tr.instant(
+                            Stage::Flush,
+                            worker as u32,
+                            shard as u32,
+                            t_ns,
+                            sh.agg.stats.flushes,
+                            sh.store.version(),
+                        );
+                    }
+                    for (bw, be, bat) in sh.blocked.drain(..) {
+                        if let Some(tr) = trace {
+                            tr.span(
+                                Stage::FlushWait,
+                                bw as u32,
+                                shard as u32,
+                                bat.as_nanos() as u64,
+                                t_ns,
+                                be,
+                                0,
+                            );
+                        }
                         replies.push((bw, be, true));
                     }
                     sh.k_traj.push(t, sh.agg.current_k() as f64);
@@ -707,6 +755,20 @@ impl<'a> Simulation<'a> {
         };
         self.metrics.bytes_sent += wire_bytes;
         self.metrics.bytes_dense_equiv += self.layout.dim() as u64 * 4;
+        // Encoding is instantaneous in virtual time: a zero-duration span
+        // marks the submission point and carries the wire bytes.
+        if let Some(tr) = &self.train.trace {
+            let t_ns = at.as_nanos() as u64;
+            tr.span(
+                Stage::Encode,
+                w as u32,
+                0,
+                t_ns,
+                t_ns,
+                self.workers[w].sent,
+                wire_bytes,
+            );
+        }
         // The submission is out (whatever the transport then does to it):
         // this is the threaded worker's `grads_sent`, and what a `steps`
         // budget counts.
@@ -720,6 +782,7 @@ impl<'a> Simulation<'a> {
             self.faults_dropped += 1;
             if self.budget_left(w) {
                 let d = self.iter_time(w, at);
+                self.trace_compute(w, at, at + d);
                 self.queue.push(at + d, Event::Submit { worker: w, epoch });
             } else if self.train.elastic {
                 // The dropped submission spent the budget: clean departure.
@@ -742,6 +805,17 @@ impl<'a> Simulation<'a> {
             let deliver_at = self.faults.deliver_time(s, at);
             let base_version = self.workers[w].versions[s];
             let grad = self.workers[w].payloads[s].clone();
+            if let Some(tr) = &self.train.trace {
+                tr.span(
+                    Stage::Wire,
+                    w as u32,
+                    s as u32,
+                    at.as_nanos() as u64,
+                    deliver_at.as_nanos() as u64,
+                    self.workers[w].sent,
+                    0,
+                );
+            }
             self.queue.push(
                 deliver_at,
                 Event::Deliver {
@@ -787,9 +861,11 @@ impl<'a> Simulation<'a> {
         let range = self.layout.range(shard);
         self.metrics.bytes_received += grad.wire_bytes(range.len()) as u64;
         let t = at.as_secs_f64();
+        let t_ns = at.as_nanos() as u64;
         // (worker, epoch, parameters-changed) replies this arrival produces.
         let mut replies: Vec<(usize, u64, bool)> = Vec::new();
         {
+            let trace = self.train.trace.as_deref();
             let sh = &mut self.shards[shard];
             sh.per_worker[worker] += 1;
             if !grad.is_finite() {
@@ -813,11 +889,33 @@ impl<'a> Simulation<'a> {
                 let version = sh.store.version();
                 match outcome {
                     Outcome::AppliedNow => {
+                        if let Some(tr) = trace {
+                            tr.span(
+                                Stage::Apply,
+                                worker as u32,
+                                shard as u32,
+                                t_ns,
+                                t_ns,
+                                base_version,
+                                version,
+                            );
+                        }
                         if !ghost {
                             replies.push((worker, epoch, true));
                         }
                     }
                     Outcome::Buffered => {
+                        if let Some(tr) = trace {
+                            tr.span(
+                                Stage::Accumulate,
+                                worker as u32,
+                                shard as u32,
+                                t_ns,
+                                t_ns,
+                                base_version,
+                                sh.agg.buffered() as u64,
+                            );
+                        }
                         // θ frozen since the last flush: refresh only a stale
                         // submitter (same rule as the threaded server).
                         if !ghost {
@@ -825,15 +923,56 @@ impl<'a> Simulation<'a> {
                         }
                     }
                     Outcome::BufferedBlocked => {
+                        if let Some(tr) = trace {
+                            tr.span(
+                                Stage::Accumulate,
+                                worker as u32,
+                                shard as u32,
+                                t_ns,
+                                t_ns,
+                                base_version,
+                                sh.agg.buffered() as u64,
+                            );
+                        }
                         if !ghost {
-                            sh.blocked.push((worker, epoch));
+                            sh.blocked.push((worker, epoch, at));
                         }
                     }
                     Outcome::Flushed { .. } => {
+                        if let Some(tr) = trace {
+                            tr.span(
+                                Stage::Apply,
+                                worker as u32,
+                                shard as u32,
+                                t_ns,
+                                t_ns,
+                                base_version,
+                                sh.store.version(),
+                            );
+                            tr.instant(
+                                Stage::Flush,
+                                worker as u32,
+                                shard as u32,
+                                t_ns,
+                                sh.agg.stats.flushes,
+                                sh.store.version(),
+                            );
+                        }
                         if !ghost {
                             replies.push((worker, epoch, true));
                         }
-                        for (bw, be) in sh.blocked.drain(..) {
+                        for (bw, be, bat) in sh.blocked.drain(..) {
+                            if let Some(tr) = trace {
+                                tr.span(
+                                    Stage::FlushWait,
+                                    bw as u32,
+                                    shard as u32,
+                                    bat.as_nanos() as u64,
+                                    t_ns,
+                                    be,
+                                    0,
+                                );
+                            }
                             replies.push((bw, be, true));
                         }
                         sh.k_traj.push(t, sh.agg.current_k() as f64);
@@ -885,6 +1024,7 @@ impl<'a> Simulation<'a> {
         if self.budget_left(w) {
             let d = self.iter_time(w, at);
             let epoch = self.workers[w].epoch;
+            self.trace_compute(w, at, at + d);
             self.queue.push(at + d, Event::Submit { worker: w, epoch });
         } else if self.train.elastic && !self.workers[w].crashed {
             // Budget spent: the worker will never submit again, so under
@@ -954,6 +1094,7 @@ impl<'a> Simulation<'a> {
         if self.budget_left(w) {
             let d = self.iter_time(w, at);
             let epoch = self.workers[w].epoch;
+            self.trace_compute(w, at, at + d);
             self.queue.push(at + d, Event::Submit { worker: w, epoch });
         }
         Ok(())
@@ -1006,6 +1147,23 @@ impl<'a> Simulation<'a> {
     /// budget (always true without one).
     fn budget_left(&self, w: usize) -> bool {
         self.train.steps.map_or(true, |n| self.workers[w].sent < n)
+    }
+
+    /// Record the Compute span of worker `w`'s next gradient (scheduled to
+    /// land at `end`). Pure observation: it never touches simulation
+    /// state, so traced and untraced runs stay bitwise identical.
+    fn trace_compute(&self, w: usize, start: Duration, end: Duration) {
+        if let Some(tr) = &self.train.trace {
+            tr.span(
+                Stage::Compute,
+                w as u32,
+                0,
+                start.as_nanos() as u64,
+                end.as_nanos() as u64,
+                self.workers[w].sent,
+                0,
+            );
+        }
     }
 }
 

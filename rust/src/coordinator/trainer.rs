@@ -133,6 +133,11 @@ pub struct TrainConfig {
     /// label-skewed non-IID shards. Consumed by the batch-source builders,
     /// carried here so one scenario string describes the whole run.
     pub partition: crate::data::Partition,
+    /// Gradient-lifecycle flight recorder (`--trace FILE`): when set, the
+    /// workers, shard servers and frontends stamp span/instant events into
+    /// this ring (DESIGN.md §2.11). `None` (the default) keeps the hot
+    /// path free of clock reads and reproduces the untraced run bitwise.
+    pub trace: Option<Arc<crate::util::trace::TraceRing>>,
 }
 
 impl TrainConfig {
@@ -155,6 +160,7 @@ impl TrainConfig {
             stream: None,
             aggregate: AggregateMode::Mean,
             partition: crate::data::Partition::Iid,
+            trace: None,
         }
     }
 }
@@ -216,8 +222,18 @@ pub struct RunInputs<'a> {
 /// virtual time, see [`super::sim::simulate`].
 pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics> {
     validate_config(cfg)?;
-    let clock_owned = RealClock::start();
-    let clock: &dyn Clock = &clock_owned;
+    let clock_owned = Arc::new(RealClock::start());
+    let clock: &dyn Clock = clock_owned.as_ref();
+    // Trace timestamps and log lines share the run's timebase: the ring's
+    // epoch is the clock anchor, and the logger reads run-relative time for
+    // the duration of the run (restored on exit by the guard).
+    if let Some(tr) = &cfg.trace {
+        tr.set_epoch(clock_owned.started_at());
+    }
+    let _log_clock = crate::util::logging::set_run_clock({
+        let c = Arc::clone(&clock_owned);
+        Arc::new(move || c.now())
+    });
     let stop = AtomicBool::new(false);
     let layout = ShardLayout::new(inputs.init_params.len(), cfg.shards);
     let cells = shard_cells(inputs.init_params, &layout);
@@ -252,6 +268,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         aggregate: cfg.aggregate.clone(),
         reply_notify: None,
         status: None,
+        trace: cfg.trace.clone(),
     };
 
     let mut metrics = RunMetrics {
@@ -290,6 +307,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
                 min_iter: cfg.compute_floor,
                 wire: cfg.wire.clone(),
                 max_grads: cfg.steps,
+                trace: cfg.trace.clone(),
             };
             let endpoints = ShardEndpoints {
                 layout: layout.clone(),
@@ -451,8 +469,18 @@ pub fn serve_with(
     kind: crate::transport::FrontendKind,
 ) -> anyhow::Result<RunMetrics> {
     validate_config(cfg)?;
-    let clock_owned = RealClock::start();
-    let clock: &dyn Clock = &clock_owned;
+    let clock_owned = Arc::new(RealClock::start());
+    let clock: &dyn Clock = clock_owned.as_ref();
+    // Anchor the trace ring and the logger on this run's clock, exactly as
+    // in [`train`]; the frontends (which hold no `Clock`) stamp arrivals
+    // through the ring's epoch so both timebases agree.
+    if let Some(tr) = &cfg.trace {
+        tr.set_epoch(clock_owned.started_at());
+    }
+    let _log_clock = crate::util::logging::set_run_clock({
+        let c = Arc::clone(&clock_owned);
+        Arc::new(move || c.now())
+    });
     let stop = Arc::new(AtomicBool::new(false));
     let layout = ShardLayout::new(inputs.init_params.len(), cfg.shards);
     let cells = shard_cells(inputs.init_params, &layout);
@@ -492,6 +520,7 @@ pub fn serve_with(
         aggregate: cfg.aggregate.clone(),
         reply_notify: None,
         status: Some(Arc::clone(&status)),
+        trace: cfg.trace.clone(),
     };
 
     let listen_addr = listener.local_addr()?;
@@ -507,6 +536,7 @@ pub fn serve_with(
         net.clone(),
         cfg.elastic,
         Some(status),
+        cfg.trace.clone(),
     )?;
     // The reactor sleeps in poll(2); replies wake it immediately instead of
     // waiting out the tick. The threaded frontend's blocking pumps need no
@@ -643,10 +673,18 @@ pub fn join_remote(
     worker_engine: crate::engine::EngineFactory,
     batch_source: Arc<dyn Fn(usize) -> Box<dyn BatchSource> + Send + Sync>,
     expected_workers: Option<usize>,
+    trace: Option<Arc<crate::util::trace::TraceRing>>,
 ) -> anyhow::Result<super::worker::WorkerReport> {
     use crate::transport::{TcpTransport, Transport, TransportError};
-    let clock_owned = RealClock::start();
-    let clock: &dyn Clock = &clock_owned;
+    let clock_owned = Arc::new(RealClock::start());
+    let clock: &dyn Clock = clock_owned.as_ref();
+    if let Some(tr) = &trace {
+        tr.set_epoch(clock_owned.started_at());
+    }
+    let _log_clock = crate::util::logging::set_run_clock({
+        let c = Arc::clone(&clock_owned);
+        Arc::new(move || c.now())
+    });
     let mut transport = TcpTransport::connect(connect, &wire.to_string(), net.clone())?;
     let info = transport.attach_info();
     if let Some(w) = expected_workers {
@@ -705,6 +743,7 @@ pub fn join_remote(
         min_iter: compute_floor,
         wire,
         max_grads: steps,
+        trace,
     };
     // Deadline watchdog: the worker loop only checks a stop flag.
     let stop = Arc::new(AtomicBool::new(false));

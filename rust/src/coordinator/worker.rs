@@ -25,6 +25,7 @@ use crate::data::Batcher;
 use crate::engine::GradEngine;
 use crate::transport::{Transport, TransportError};
 use crate::util::rng::Pcg64;
+use crate::util::trace::{Stage, TraceRing};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -87,6 +88,11 @@ pub struct WorkerConfig {
     /// `None` = run until the stop flag). Deterministic runs use a step
     /// budget instead of a wall-clock one.
     pub max_grads: Option<u64>,
+    /// Gradient-lifecycle flight recorder: when set, the loop records
+    /// compute/encode/wire spans (stamped through the injected `Clock`)
+    /// and stamps each submission's channel-enqueue time. `None` — the
+    /// default — keeps the hot path free of clock reads.
+    pub trace: Option<Arc<TraceRing>>,
 }
 
 /// The worker's view of the sharded parameter server.
@@ -182,10 +188,29 @@ pub fn run_worker(
                 clock.sleep(cfg.min_iter - elapsed);
             }
         }
+        // Compute span covers grad + injected delay + pacing floor — the
+        // paper's heterogeneity lives in this stage by design.
+        let seq = report.grads_sent;
+        let t_compute_end = cfg
+            .trace
+            .as_ref()
+            .map_or(0, |_| clock.now().as_nanos() as u64);
+        if let Some(tr) = &cfg.trace {
+            tr.span(
+                Stage::Compute,
+                cfg.id as u32,
+                0,
+                iter_start.as_nanos() as u64,
+                t_compute_end,
+                seq,
+                0,
+            );
+        }
         // Encode and fan the gradient out to every shard. Dense: Arc clones
         // of one buffer, the spare swaps in so the worker always owns a
         // compute buffer. Compressed: the encoder splits per shard into its
         // recycled payload buffers.
+        let bytes_before = report.bytes_sent;
         let shared = match encoder.as_mut() {
             None => {
                 let arc =
@@ -199,12 +224,35 @@ pub fn run_worker(
                 None
             }
         };
+        let t_encode_end = cfg
+            .trace
+            .as_ref()
+            .map_or(0, |_| clock.now().as_nanos() as u64);
+        if let Some(tr) = &cfg.trace {
+            tr.span(
+                Stage::Encode,
+                cfg.id as u32,
+                0,
+                t_compute_end,
+                t_encode_end,
+                seq,
+                report.bytes_sent - bytes_before,
+            );
+        }
         let mut round_lost = false;
         for s in 0..shards {
             let grad = match &shared {
                 Some(arc) => ShardGrad::Dense(Arc::clone(arc)),
                 None => payloads[s].clone(),
             };
+            // Stamp the channel-enqueue instant so the shard thread can
+            // record the queue span (0 = unstamped, tracing off). Over
+            // TCP the stamp is dropped at encode; the serving frontend
+            // re-stamps arrival on its own (epoch-shared) timebase.
+            let enq_ns = cfg
+                .trace
+                .as_ref()
+                .map_or(0, |_| clock.now().as_nanos() as u64);
             match transport.submit(
                 s,
                 ShardMsg {
@@ -212,6 +260,7 @@ pub fn run_worker(
                     base_version: versions[s],
                     loss,
                     grad,
+                    enq_ns,
                 },
             ) {
                 Ok(()) => {}
@@ -253,6 +302,18 @@ pub fn run_worker(
                 }
                 Err(TransportError::Closed(_)) => break 'outer,
             }
+        }
+        // Wire span: submit fan-out until the last shard reply landed.
+        if let Some(tr) = &cfg.trace {
+            tr.span(
+                Stage::Wire,
+                cfg.id as u32,
+                0,
+                t_encode_end,
+                clock.now().as_nanos() as u64,
+                seq,
+                shards as u64,
+            );
         }
         // Every shard dropped its clone before replying: recycle the dense
         // buffer (the fallback allocation only triggers on shutdown races).
@@ -333,6 +394,7 @@ mod tests {
             min_iter: Duration::ZERO,
             wire: WireFormat::Dense,
             max_grads: None,
+            trace: None,
         };
         let layout = ShardLayout::new(2, 1);
         let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
@@ -387,6 +449,7 @@ mod tests {
             min_iter: Duration::ZERO,
             wire: WireFormat::Dense,
             max_grads: None,
+            trace: None,
         };
         let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
         let endpoints = ShardEndpoints {
@@ -424,6 +487,67 @@ mod tests {
     }
 
     #[test]
+    fn traced_worker_records_compute_encode_wire_and_stamps_enqueue() {
+        use crate::util::trace::{Stage, TraceRing};
+        let (gtx, grx) = mpsc::channel::<ShardEvent>();
+        let (rtx, rrx) = mpsc::channel::<Reply>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let ring = Arc::new(TraceRing::new(256));
+        let cfg = WorkerConfig {
+            id: 3,
+            delayed: false,
+            delay: DelayModel::none(),
+            seed: 9,
+            min_iter: Duration::ZERO,
+            wire: WireFormat::Dense,
+            max_grads: Some(2),
+            trace: Some(Arc::clone(&ring)),
+        };
+        let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
+        let endpoints = ShardEndpoints {
+            layout: ShardLayout::new(2, 1),
+            grad_txs: vec![gtx],
+            cells: vec![cell],
+        };
+        let stop2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            let engine = Box::new(QuadraticEngine::new(vec![1.0, 1.0], 1, 0.0, 0));
+            let source = Box::new(ConstSource {
+                x: vec![],
+                y: vec![],
+            });
+            let clock = crate::coordinator::clock::RealClock::start();
+            let mut transport = crate::transport::InProcTransport::new(endpoints, rrx);
+            run_worker(&cfg, engine, source, vec![0.0, 0.0], &mut transport, &stop2, &clock)
+        });
+        for _ in 0..2 {
+            let msg = expect_grad(grx.recv_timeout(Duration::from_secs(2)).unwrap());
+            assert!(msg.enq_ns > 0, "traced submissions carry an enqueue stamp");
+            drop(msg);
+            rtx.send(Reply::Unchanged { shard: 0 }).unwrap();
+        }
+        drop(rtx);
+        let report = h.join().unwrap();
+        assert_eq!(report.grads_sent, 2);
+        let dump = ring.drain();
+        let count = |st: Stage| dump.events.iter().filter(|e| e.stage == st).count();
+        assert_eq!(count(Stage::Compute), 2);
+        assert_eq!(count(Stage::Encode), 2);
+        assert_eq!(count(Stage::Wire), 2);
+        // every event belongs to this worker, with monotone per-stage seqs
+        for ev in &dump.events {
+            assert_eq!(ev.worker, 3);
+        }
+        // dense submissions bill dim × 4 bytes in the encode aux
+        let enc = dump
+            .events
+            .iter()
+            .find(|e| e.stage == Stage::Encode)
+            .unwrap();
+        assert_eq!(enc.aux, 8);
+    }
+
+    #[test]
     fn compressed_worker_sends_sparse_payloads_and_counts_bytes() {
         use crate::coordinator::compress::KSpec;
         let (gtx, grx) = mpsc::channel::<ShardEvent>();
@@ -437,6 +561,7 @@ mod tests {
             min_iter: Duration::ZERO,
             wire: WireFormat::TopK(KSpec::Count(1)),
             max_grads: None,
+            trace: None,
         };
         let cell = Arc::new(SnapshotCell::new(vec![0.0, 0.0]));
         let endpoints = ShardEndpoints {

@@ -22,6 +22,9 @@ COMMANDS:
   serve                        run the parameter server over TCP (workers `join`)
   join                         run one gradient worker against a `serve` process
   status                       poll a `serve` process's read-only ops endpoint
+                               (--follow streams push-based deltas instead)
+  trace <FILE>                 analyze a --trace export: critical-path table
+                               per stage (--connect streams live summaries)
   compare                      run hybrid vs async vs sync, print charts
   table <1-5>                  regenerate a paper table
   figure <4-10>                regenerate a paper figure
@@ -77,6 +80,18 @@ COMMON OPTIONS:
                                  bit-for-bit via coordinator::replay_stream
   --metrics-cap N                with --metrics-stream: keep only the newest ~N
                                  samples per series in memory (the file keeps all)
+  --trace FILE                   flight-record the gradient lifecycle (compute /
+                                 encode / wire / queue / accumulate / flush-wait
+                                 / apply spans plus flush & membership instants)
+                                 and export Chrome trace_event JSON to FILE when
+                                 the run ends (train / serve / join; open in
+                                 ui.perfetto.dev or feed `hybrid-sgd trace`).
+                                 Under --sim timestamps are virtual, so the same
+                                 seeded scenario exports byte-identical traces.
+  --trace-capacity N             flight-recorder ring size in events (default
+                                 65536, rounded up to a power of two; wraparound
+                                 overwrites the oldest events and the export
+                                 reports them as dropped)
   --quick                        smoke scale (seconds)
   --paper-scale                  the paper's 25 workers x 5 rounds x 100 s
   --out DIR                      results directory (default results/)
@@ -94,7 +109,14 @@ MULTI-PROCESS (see EXPERIMENTS.md for the localhost recipe):
   thread-per-connection frontend (same wire protocol, comparison baseline).
   Ops plane: status --connect HOST:PORT prints the server's live status
   document (membership, per-shard K(n)/buffer/version, byte rates) without
-  taking a worker slot; --path workers.active extracts one value.
+  taking a worker slot; --path workers.active extracts one value. Add
+  --follow to subscribe instead of polling: the server pushes one delta
+  per --interval-ms (default 1000, floor 10) until --count N deltas arrive
+  or the run ends. `trace --connect HOST:PORT` follows the same stream but
+  prints only the per-stage p50/p99 latency summaries (needs a server
+  started with --trace). `trace FILE` analyzes an exported trace offline:
+  validates the document and prints the critical-path breakdown;
+  --require-stages compute,apply makes missing stages an error (CI).
 ";
 
 /// Build an `ExpConfig` from CLI options.
@@ -187,6 +209,7 @@ pub fn cli_main() -> anyhow::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("join") => cmd_join(&args),
         Some("status") => cmd_status(&args),
+        Some("trace") => cmd_trace(&args),
         Some("compare") => cmd_compare(&args),
         Some("table") => cmd_table(&args),
         Some("figure") => cmd_figure(&args),
@@ -272,7 +295,35 @@ fn train_config_from(args: &Args, cfg: &ExpConfig) -> anyhow::Result<crate::coor
         stream: metrics_stream_from(args)?,
         aggregate: cfg.aggregate.clone(),
         partition: cfg.partition.clone(),
+        trace: trace_ring_from(args)?,
     })
+}
+
+/// The optional gradient-lifecycle flight recorder (`--trace FILE`): a
+/// shared ring the run stamps span events into, exported as Chrome
+/// `trace_event` JSON to `FILE` when the run completes. `--trace-capacity`
+/// overrides the default ring size (rounded up to a power of two).
+fn trace_ring_from(
+    args: &Args,
+) -> anyhow::Result<Option<std::sync::Arc<crate::util::trace::TraceRing>>> {
+    if args.get("trace").is_none() {
+        anyhow::ensure!(
+            args.get("trace-capacity").is_none(),
+            "--trace-capacity needs --trace FILE (there is no ring to size)"
+        );
+        return Ok(None);
+    }
+    let ring = match args.get("trace-capacity") {
+        Some(cap) => {
+            let n: usize = cap.parse().map_err(|_| {
+                anyhow::anyhow!("bad --trace-capacity `{cap}` (expected a positive integer)")
+            })?;
+            anyhow::ensure!(n > 0, "--trace-capacity must be at least 1");
+            crate::util::trace::TraceRing::new(n)
+        }
+        None => crate::util::trace::TraceRing::with_default_capacity(),
+    };
+    Ok(Some(std::sync::Arc::new(ring)))
 }
 
 /// The optional JSONL metrics sink (`--metrics-stream FILE`), with
@@ -317,6 +368,24 @@ fn write_metrics_out(args: &Args, m: &crate::coordinator::RunMetrics) -> anyhow:
         std::fs::write(path, m.to_json().to_string_pretty())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Export the flight recorder to the `--trace FILE` path once the run is
+/// over (train, serve and join share this tail).
+fn write_trace_out(
+    args: &Args,
+    ring: &Option<std::sync::Arc<crate::util::trace::TraceRing>>,
+) -> anyhow::Result<()> {
+    let (Some(path), Some(ring)) = (args.get("trace"), ring) else {
+        return Ok(());
+    };
+    let dump = crate::util::trace::export_chrome_trace(ring, path)?;
+    println!(
+        "wrote {path} ({} span/instant events, {} dropped)",
+        dump.events.len(),
+        dump.dropped
+    );
     Ok(())
 }
 
@@ -387,6 +456,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     print_run(&tc, &m);
     write_metrics_out(args, &m)?;
+    write_trace_out(args, &tc.trace)?;
     Ok(())
 }
 
@@ -419,6 +489,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let m = crate::coordinator::serve_with(&tc, &inputs, listener, &net_options(args), kind)?;
     print_run(&tc, &m);
     write_metrics_out(args, &m)?;
+    write_trace_out(args, &tc.trace)?;
     Ok(())
 }
 
@@ -439,6 +510,7 @@ fn cmd_join(args: &Args) -> anyhow::Result<()> {
     // Hard deadline: the server's budget plus the dial allowance, so a
     // worker never outlives a hung run.
     let deadline = std::time::Duration::from_secs_f64(cfg.secs) + net.connect_timeout;
+    let trace = trace_ring_from(args)?;
     let report = crate::coordinator::join_remote(
         connect,
         &net,
@@ -451,11 +523,13 @@ fn cmd_join(args: &Args) -> anyhow::Result<()> {
         std::sync::Arc::clone(&workload.worker_engine),
         workload_batch_source(&workload, &cfg),
         Some(cfg.workers),
+        trace.clone(),
     )?;
     println!("grads sent      : {}", report.grads_sent);
     println!("refreshes       : {}", report.refreshes);
     println!("unchanged acks  : {}", report.unchanged_replies);
     println!("bytes sent      : {} (frame granularity)", report.bytes_sent);
+    write_trace_out(args, &trace)?;
     Ok(())
 }
 
@@ -463,10 +537,16 @@ fn cmd_join(args: &Args) -> anyhow::Result<()> {
 /// read-only ops endpoint. The document is validated by our own JSON
 /// parser before a byte of it is printed; `--path a.b[2]` extracts one
 /// value with the lazy reader instead of printing the whole document.
+/// `--follow` subscribes instead of polling: the server pushes one
+/// delta per `--interval-ms` and this prints each as a sequenced line
+/// until `--count` deltas arrive (or forever without it).
 fn cmd_status(args: &Args) -> anyhow::Result<()> {
     let connect = args
         .get("connect")
         .ok_or_else(|| anyhow::anyhow!("status needs --connect HOST:PORT"))?;
+    if args.flag("follow") {
+        return cmd_status_follow(args, connect);
+    }
     let doc = crate::transport::tcp::query_status(connect, &net_options(args))?;
     let json = crate::util::json::parse(&doc)
         .map_err(|e| anyhow::anyhow!("server sent a malformed status document: {e}"))?;
@@ -478,6 +558,293 @@ fn cmd_status(args: &Args) -> anyhow::Result<()> {
         None => println!("{}", json.to_string_pretty()),
     }
     Ok(())
+}
+
+/// Shared `--interval-ms` / `--count` handling for the two follower
+/// modes (`status --follow` and `trace --connect`).
+fn follow_limits(args: &Args) -> anyhow::Result<(u32, Option<u64>)> {
+    let interval = args.u64_or("interval-ms", 1000);
+    anyhow::ensure!(
+        interval >= 1 && interval <= u64::from(u32::MAX),
+        "--interval-ms must be between 1 and {}",
+        u32::MAX
+    );
+    let count = match args.get("count") {
+        Some(c) => {
+            let n: u64 = c.parse().map_err(|_| {
+                anyhow::anyhow!("bad --count `{c}` (expected a positive integer)")
+            })?;
+            anyhow::ensure!(n > 0, "--count must be at least 1");
+            Some(n)
+        }
+        None => None,
+    };
+    Ok((interval as u32, count))
+}
+
+fn cmd_status_follow(args: &Args, connect: &str) -> anyhow::Result<()> {
+    let (interval_ms, count) = follow_limits(args)?;
+    let path = args.get("path").map(str::to_owned);
+    let mut seen = 0u64;
+    let mut failure: Option<anyhow::Error> = None;
+    crate::transport::tcp::follow_status(connect, &net_options(args), interval_ms, |seq, doc| {
+        // The callback only steers the stream (true = keep following);
+        // errors are parked and surfaced once `follow_status` returns.
+        let line = (|| -> anyhow::Result<String> {
+            let json = crate::util::json::parse(doc)
+                .map_err(|e| anyhow::anyhow!("server sent a malformed status delta: {e}"))?;
+            match &path {
+                Some(p) => match crate::util::json::scan_path(doc, p)? {
+                    Some(v) => Ok(v.to_string_compact()),
+                    None => anyhow::bail!("path `{p}` is not present in the status delta"),
+                },
+                None => Ok(json.to_string_compact()),
+            }
+        })();
+        match line {
+            Ok(line) => {
+                println!("[{seq}] {line}");
+                seen += 1;
+                count.map_or(true, |n| seen < n)
+            }
+            Err(e) => {
+                failure = Some(e);
+                false
+            }
+        }
+    })?;
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    if let Some(n) = count {
+        anyhow::ensure!(
+            seen >= n,
+            "stream ended after {seen} of {n} requested deltas"
+        );
+    }
+    Ok(())
+}
+
+/// The gradient-lifecycle span stages in pipeline order — the order the
+/// critical-path table prints them in.
+const LIFECYCLE_ORDER: [&str; 7] = [
+    "compute",
+    "encode",
+    "wire",
+    "queue",
+    "accumulate",
+    "flush_wait",
+    "apply",
+];
+
+/// `hybrid-sgd trace FILE`: offline analyzer for a `--trace` export.
+/// Validates the Chrome trace document with our own JSON parser and
+/// prints a critical-path breakdown (count / total / p50 / p99 / share
+/// per stage). `--require-stages a,b` turns a missing stage into an
+/// error — CI runs it against the multiprocess smoke capture. With
+/// `--connect HOST:PORT` it instead follows a serving process and
+/// prints the live per-stage latency summaries from each status delta.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    if let Some(connect) = args.get("connect") {
+        return cmd_trace_live(args, connect);
+    }
+    let path = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: trace FILE [--require-stages a,b] | trace --connect HOST:PORT")
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("could not read {path}: {e}"))?;
+    let report = analyze_trace(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if let Some(req) = args.get("require-stages") {
+        for stage in req.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            anyhow::ensure!(
+                report.spans.contains_key(stage) || report.instants.contains_key(stage),
+                "required stage `{stage}` never appears in the trace"
+            );
+        }
+    }
+    print!("{}", report.render());
+    Ok(())
+}
+
+/// Per-stage aggregates extracted from a Chrome trace export.
+struct TraceReport {
+    /// Span durations in microseconds, keyed by stage name.
+    spans: std::collections::BTreeMap<String, Vec<f64>>,
+    /// Instant counts, keyed by stage name.
+    instants: std::collections::BTreeMap<String, u64>,
+    recorded: u64,
+    dropped: u64,
+}
+
+/// Parse and validate a Chrome trace export: object shape, event phases,
+/// non-negative timestamps/durations. Returns the per-stage aggregates.
+fn analyze_trace(text: &str) -> anyhow::Result<TraceReport> {
+    use crate::util::json::Json;
+    let doc = crate::util::json::parse(text)
+        .map_err(|e| anyhow::anyhow!("not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("no `traceEvents` array (not a --trace export?)"))?;
+    let num = |ev: &Json, key: &str| -> Option<f64> { ev.get(key).and_then(Json::as_f64) };
+    let mut report = TraceReport {
+        spans: Default::default(),
+        instants: Default::default(),
+        recorded: doc.get("recorded").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        dropped: doc.get("dropped").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+    };
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no `ph` phase"))?;
+        if ph == "M" {
+            continue; // process_name metadata
+        }
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i} ({ph}) has no `name`"))?;
+        let ts = num(ev, "ts")
+            .ok_or_else(|| anyhow::anyhow!("event {i} ({name}) has no numeric `ts`"))?;
+        anyhow::ensure!(ts >= 0.0, "event {i} ({name}) has negative ts {ts}");
+        match ph {
+            "X" => {
+                let dur = num(ev, "dur").ok_or_else(|| {
+                    anyhow::anyhow!("span event {i} ({name}) has no numeric `dur`")
+                })?;
+                anyhow::ensure!(dur >= 0.0, "event {i} ({name}) has negative dur {dur}");
+                report.spans.entry(name.to_string()).or_default().push(dur);
+            }
+            "i" => *report.instants.entry(name.to_string()).or_default() += 1,
+            other => anyhow::bail!("event {i} ({name}) has unknown phase `{other}`"),
+        }
+    }
+    anyhow::ensure!(
+        !report.spans.is_empty() || !report.instants.is_empty(),
+        "the trace contains no span or instant events"
+    );
+    Ok(report)
+}
+
+/// Nearest-rank percentile of an unsorted sample (q in 0..=1).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    let rank = ((n as f64 * q).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+impl TraceReport {
+    /// The critical-path table: lifecycle stages in pipeline order (then
+    /// any others alphabetically), share = fraction of total span time.
+    fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "events          : {} recorded, {} dropped by wraparound",
+            self.recorded, self.dropped
+        );
+        let grand: f64 = self.spans.values().flatten().sum();
+        let _ = writeln!(
+            out,
+            "{:<12} {:>7} {:>12} {:>10} {:>10} {:>7}",
+            "stage", "count", "total_us", "p50_us", "p99_us", "share"
+        );
+        let ordered = LIFECYCLE_ORDER
+            .iter()
+            .copied()
+            .filter(|s| self.spans.contains_key(*s))
+            .chain(
+                self.spans
+                    .keys()
+                    .map(String::as_str)
+                    .filter(|s| !LIFECYCLE_ORDER.contains(s)),
+            );
+        for stage in ordered {
+            let mut durs = self.spans[stage].clone();
+            durs.sort_by(f64::total_cmp);
+            let total: f64 = durs.iter().sum();
+            let share = if grand > 0.0 { 100.0 * total / grand } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "{:<12} {:>7} {:>12.1} {:>10.1} {:>10.1} {:>6.1}%",
+                stage,
+                durs.len(),
+                total,
+                percentile(&durs, 0.50),
+                percentile(&durs, 0.99),
+                share
+            );
+        }
+        if !self.instants.is_empty() {
+            let list: Vec<String> = self
+                .instants
+                .iter()
+                .map(|(name, n)| format!("{name}={n}"))
+                .collect();
+            let _ = writeln!(out, "instants        : {}", list.join(" "));
+        }
+        out
+    }
+}
+
+/// `hybrid-sgd trace --connect HOST:PORT`: follow a traced serving
+/// process and print the per-stage p50/p99 summaries carried in each
+/// pushed status delta.
+fn cmd_trace_live(args: &Args, connect: &str) -> anyhow::Result<()> {
+    let (interval_ms, count) = follow_limits(args)?;
+    let mut seen = 0u64;
+    let mut failure: Option<anyhow::Error> = None;
+    crate::transport::tcp::follow_status(connect, &net_options(args), interval_ms, |seq, doc| {
+        match live_stage_line(doc) {
+            Ok(line) => {
+                println!("[{seq}] {line}");
+                seen += 1;
+                count.map_or(true, |n| seen < n)
+            }
+            Err(e) => {
+                failure = Some(e);
+                false
+            }
+        }
+    })?;
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    if let Some(n) = count {
+        anyhow::ensure!(
+            seen >= n,
+            "stream ended after {seen} of {n} requested deltas"
+        );
+    }
+    Ok(())
+}
+
+/// One line of live per-stage summaries from a status delta's `stages`
+/// object (present only when the server was started with `--trace`).
+fn live_stage_line(doc: &str) -> anyhow::Result<String> {
+    use crate::util::json::Json;
+    let json = crate::util::json::parse(doc)
+        .map_err(|e| anyhow::anyhow!("server sent a malformed status delta: {e}"))?;
+    let stages = json.get("stages").ok_or_else(|| {
+        anyhow::anyhow!("the status delta has no `stages` — start the server with --trace FILE")
+    })?;
+    let mut parts: Vec<String> = Vec::new();
+    for stage in LIFECYCLE_ORDER {
+        let Some(s) = stages.get(stage) else { continue };
+        let field = |k: &str| s.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        parts.push(format!(
+            "{stage}: n={} p50={}us p99={}us",
+            field("count") as u64,
+            field("p50_us") as u64,
+            field("p99_us") as u64
+        ));
+    }
+    if parts.is_empty() {
+        return Ok("(no spans recorded yet)".to_string());
+    }
+    Ok(parts.join(" | "))
 }
 
 fn workload_batch_source(

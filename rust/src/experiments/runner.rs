@@ -261,6 +261,7 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 stream: None,
                 aggregate: cfg.aggregate.clone(),
                 partition: cfg.partition.clone(),
+                trace: None,
             };
             let inputs = RunInputs {
                 worker_engine: Arc::clone(&workload.worker_engine),

@@ -56,6 +56,7 @@ use crate::coordinator::params::SnapshotCell;
 use crate::coordinator::server::{Reply, ShardEvent, ShardMsg, StatusBoard};
 use crate::coordinator::shard::ShardLayout;
 use crate::coordinator::worker::ShardEndpoints;
+use crate::util::trace::TraceRing;
 use std::fmt;
 use std::net::TcpListener;
 use std::sync::atomic::AtomicBool;
@@ -110,14 +111,17 @@ impl Frontend {
         net: NetOptions,
         elastic: bool,
         status: Option<Arc<StatusBoard>>,
+        trace: Option<Arc<TraceRing>>,
     ) -> std::io::Result<Frontend> {
         match kind {
             FrontendKind::Reactor => reactor::TcpFrontend::start(
                 listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic, status,
+                trace,
             )
             .map(Frontend::Reactor),
             FrontendKind::Threaded => tcp::ThreadedFrontend::start(
                 listener, layout, grad_txs, cells, reply_rxs, delayed, stop, net, elastic, status,
+                trace,
             )
             .map(Frontend::Threaded),
         }
@@ -182,6 +186,7 @@ pub(crate) fn render_status(
     submissions: u64,
     uptime: Duration,
     status: Option<&StatusBoard>,
+    trace: Option<&TraceRing>,
 ) -> String {
     use crate::util::json::Utf8JsonWriter;
     use std::sync::atomic::Ordering;
@@ -280,18 +285,38 @@ pub(crate) fn render_status(
     }
     w.key("bytes");
     w.begin_object();
+    // Lifetime total (frame granularity, headers included).
     w.key("grad_frame_bytes");
     w.num(grad_frame_bytes as f64);
     w.key("submissions");
     w.num(submissions as f64);
-    w.key("bytes_per_sec");
+    // `bytes_per_sec` is a sliding-window rate over ~the last 5 s of
+    // samples (each render records one, throttled — a 250 ms follower or
+    // poller keeps the window live). The lifetime mean is the fallback
+    // before two samples span the window, and stays available under its
+    // own key: dividing the lifetime total by the whole uptime reports a
+    // long-dead transfer rate on any run with idle phases.
     let secs = uptime.as_secs_f64();
-    w.num(if secs > 0.0 {
+    let lifetime = if secs > 0.0 {
         grad_frame_bytes as f64 / secs
     } else {
         0.0
+    };
+    let windowed = status.and_then(|b| {
+        b.push_rate_sample(uptime, grad_frame_bytes);
+        b.window_bytes_per_sec(uptime)
     });
+    w.key("bytes_per_sec");
+    w.num(windowed.unwrap_or(lifetime));
+    w.key("bytes_per_sec_lifetime");
+    w.num(lifetime);
     w.end_object();
+    // Per-stage gradient-lifecycle latency summaries (p50/p99 from the
+    // flight recorder's log2 histograms) when the run is traced.
+    if let Some(ring) = trace {
+        w.key("stages");
+        ring.write_stages_json(&mut w);
+    }
     w.end_object();
     w.finish()
 }
@@ -436,6 +461,7 @@ mod tests {
                 base_version: 7,
                 loss: 0.5,
                 grad: ShardGrad::Dense(Arc::clone(&shared)),
+                enq_ns: 0,
             },
         )
         .unwrap();
@@ -478,6 +504,7 @@ mod tests {
                 base_version: 0,
                 loss: 0.0,
                 grad: ShardGrad::Dense(Arc::new(vec![0.0; 4])),
+                enq_ns: 0,
             },
         );
         assert!(matches!(err, Err(TransportError::Closed(_))));
@@ -505,6 +532,7 @@ mod tests {
             0,
             Duration::from_secs(1),
             Some(&board),
+            None,
         );
         assert!(doc.contains("\"per_worker\":["));
         // Worker 0 never submitted: zeros, mean guarded against 0/0.
@@ -525,7 +553,81 @@ mod tests {
             0,
             Duration::from_secs(1),
             Some(&bare),
+            None,
         );
         assert!(!doc.contains("per_worker"));
+    }
+
+    #[test]
+    fn bytes_per_sec_windows_over_recent_samples_not_the_whole_uptime() {
+        use crate::util::json::scan_path;
+        let layout = ShardLayout::new(4, 1);
+        let board = StatusBoard::new(1);
+        let doc_at = |secs: f64, bytes: u64| {
+            render_status(
+                "test",
+                &layout,
+                1,
+                1,
+                1,
+                bytes,
+                0,
+                Duration::from_secs_f64(secs),
+                Some(&board),
+                None,
+            )
+        };
+        let rate = |doc: &str| {
+            scan_path(doc, "bytes.bytes_per_sec")
+                .unwrap()
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // First render: one sample — falls back to the lifetime mean.
+        let first = doc_at(100.0, 1_000_000);
+        assert_eq!(rate(&first), 10_000.0);
+        assert_eq!(
+            scan_path(&first, "bytes.bytes_per_sec_lifetime")
+                .unwrap()
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            10_000.0
+        );
+        assert_eq!(
+            scan_path(&first, "bytes.grad_frame_bytes")
+                .unwrap()
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1_000_000.0
+        );
+        // 2 s later, 2 MB more moved: the window reports ~1 MB/s while the
+        // lifetime mean (3 MB over 102 s) would claim ~30 KB/s.
+        let doc = doc_at(102.0, 3_000_000);
+        assert_eq!(rate(&doc), 1_000_000.0);
+        // An idle stretch beyond the window drops back to the lifetime
+        // mean (the stale samples age out rather than reporting the old
+        // burst forever).
+        let doc = doc_at(200.0, 3_000_000);
+        assert_eq!(rate(&doc), 15_000.0);
+        // Untraced runs carry no stages section; traced runs do.
+        assert!(!doc.contains("\"stages\""));
+        let ring = crate::util::trace::TraceRing::new(64);
+        ring.span(crate::util::trace::Stage::Apply, 0, 0, 0, 2_000_000, 1, 1);
+        let traced = render_status(
+            "test",
+            &layout,
+            1,
+            1,
+            1,
+            0,
+            0,
+            Duration::from_secs(1),
+            None,
+            Some(&ring),
+        );
+        assert!(traced.contains("\"stages\":{\"apply\":{\"count\":1"));
     }
 }

@@ -33,6 +33,8 @@ const TAG_LEAVE: u8 = 9;
 const TAG_EVICT: u8 = 10;
 const TAG_STATUS_REQ: u8 = 11;
 const TAG_STATUS: u8 = 12;
+const TAG_SUBSCRIBE: u8 = 13;
+const TAG_STATUS_DELTA: u8 = 14;
 
 /// Gradient payload tags (inside `SubmitGrad`).
 const GRAD_DENSE: u8 = 0;
@@ -124,6 +126,16 @@ pub enum Msg {
     /// in DESIGN.md §2.9). JSON rather than fixed fields so dashboards can
     /// evolve without a wire-protocol bump.
     Status { json: String },
+    /// Client → server: push-based ops plane — stream status documents at
+    /// `interval_ms` (clamped server-side) instead of being polled. Like
+    /// `StatusRequest`, answerable before a `Hello`; the first
+    /// [`Msg::StatusDelta`] is pushed immediately on subscription.
+    Subscribe { interval_ms: u32 },
+    /// Server → client: one pushed status snapshot. `seq` numbers the
+    /// deltas on this connection from 0, so a follower can detect gaps.
+    /// The document is byte-identical to what a `StatusRequest` answered
+    /// at the same instant would carry (DESIGN.md §2.11).
+    StatusDelta { seq: u64, json: String },
 }
 
 /// Typed decode errors for the message layer.
@@ -520,6 +532,16 @@ impl Msg {
                 put_u32(out, json.len() as u32);
                 out.extend_from_slice(json.as_bytes());
             }
+            Msg::Subscribe { interval_ms } => {
+                out.push(TAG_SUBSCRIBE);
+                put_u32(out, *interval_ms);
+            }
+            Msg::StatusDelta { seq, json } => {
+                out.push(TAG_STATUS_DELTA);
+                put_u64(out, *seq);
+                put_u32(out, json.len() as u32);
+                out.extend_from_slice(json.as_bytes());
+            }
         }
     }
 
@@ -585,6 +607,17 @@ impl Msg {
                     .map_err(|_| WireError::Invalid("status document is not UTF-8".into()))?
                     .to_string();
                 Msg::Status { json }
+            }
+            TAG_SUBSCRIBE => Msg::Subscribe {
+                interval_ms: r.u32()?,
+            },
+            TAG_STATUS_DELTA => {
+                let seq = r.u64()?;
+                let n = r.u32()? as usize;
+                let json = std::str::from_utf8(r.take(n)?)
+                    .map_err(|_| WireError::Invalid("status delta is not UTF-8".into()))?
+                    .to_string();
+                Msg::StatusDelta { seq, json }
             }
             t => return Err(WireError::UnknownMsg(t)),
         };
@@ -737,6 +770,47 @@ mod tests {
         Msg::StatusRequest.encode_into(&mut sr);
         sr.push(7);
         assert!(matches!(Msg::decode(&sr), Err(WireError::Invalid(_))));
+    }
+
+    #[test]
+    fn subscription_messages_roundtrip_and_reject_malformed_frames() {
+        // Subscribe carries the requested push interval verbatim.
+        for interval_ms in [0u32, 1, 250, u32::MAX] {
+            match roundtrip(&Msg::Subscribe { interval_ms }) {
+                Msg::Subscribe { interval_ms: i } => assert_eq!(i, interval_ms),
+                other => panic!("{other:?}"),
+            }
+        }
+        // StatusDelta: sequence number + the pushed document.
+        let doc = r#"{"workers":{"active":2},"stages":{"apply":{"count":7}}}"#;
+        match roundtrip(&Msg::StatusDelta { seq: 41, json: doc.into() }) {
+            Msg::StatusDelta { seq, json } => {
+                assert_eq!(seq, 41);
+                assert_eq!(json, doc);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Truncations anywhere in the frame are typed errors, not panics.
+        let mut buf = Vec::new();
+        Msg::StatusDelta { seq: 7, json: doc.into() }.encode_into(&mut buf);
+        for cut in [1, 5, 9, 12, buf.len() - 1] {
+            assert!(matches!(
+                Msg::decode(&buf[..cut]),
+                Err(WireError::Truncated { .. })
+            ));
+        }
+        // A delta whose payload is not UTF-8 is rejected as Invalid.
+        let mut bad = Vec::new();
+        bad.push(TAG_STATUS_DELTA);
+        put_u64(&mut bad, 0);
+        put_u32(&mut bad, 2);
+        bad.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(matches!(Msg::decode(&bad), Err(WireError::Invalid(_))));
+        // Trailing garbage after a Subscribe is rejected.
+        let mut sub = Vec::new();
+        Msg::Subscribe { interval_ms: 100 }.encode_into(&mut sub);
+        sub.push(0);
+        assert!(matches!(Msg::decode(&sub), Err(WireError::Invalid(_))));
     }
 
     #[test]

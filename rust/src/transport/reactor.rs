@@ -43,6 +43,7 @@ use crate::coordinator::params::SnapshotCell;
 use crate::coordinator::server::{Reply, ShardEvent, ShardMsg, StatusBoard};
 use crate::coordinator::shard::ShardLayout;
 use crate::log_warn;
+use crate::util::trace::{Stage, TraceRing};
 use std::collections::{BinaryHeap, VecDeque};
 use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -253,6 +254,8 @@ enum TimerKind {
     /// Armed at accept, so it also bounds the handshake and the drain of a
     /// refused connection that never reads its refusal.
     Liveness,
+    /// Push the next `StatusDelta` to a subscribed connection.
+    StatusPush,
 }
 
 struct TimerEntry {
@@ -340,6 +343,15 @@ struct Conn {
     /// When the next idle heartbeat is due; pushed out by any queued frame.
     next_hb: Instant,
     hb_seq: u64,
+    /// Active status subscription, if any: push interval and the sequence
+    /// number of the next delta.
+    sub: Option<Sub>,
+}
+
+/// Status-subscription state for one connection.
+struct Sub {
+    interval: Duration,
+    seq: u64,
 }
 
 /// One worker slot — same fields and classification semantics as the
@@ -393,6 +405,7 @@ impl TcpFrontend {
         net: NetOptions,
         elastic: bool,
         status: Option<Arc<StatusBoard>>,
+        trace: Option<Arc<TraceRing>>,
     ) -> std::io::Result<TcpFrontend> {
         listener.set_nonblocking(true)?;
         let (waker, wake_rx) = Waker::pair()?;
@@ -420,6 +433,7 @@ impl TcpFrontend {
             net,
             elastic,
             status,
+            trace,
             started: Instant::now(),
             counters: Arc::clone(&counters),
             conns: Vec::new(),
@@ -514,6 +528,9 @@ struct Reactor {
     /// Per-shard live counters published by `run_shard` (the ops plane);
     /// `None` when serving without a status board (unit tests).
     status: Option<Arc<StatusBoard>>,
+    /// Flight recorder for the gradient lifecycle; `None` keeps the hot
+    /// path free of clock reads (`--trace` off).
+    trace: Option<Arc<TraceRing>>,
     /// When serving began (uptime / bytes-per-second basis).
     started: Instant,
     counters: Arc<Counters>,
@@ -658,6 +675,7 @@ impl Reactor {
                         last_frame: self.now,
                         next_hb: self.now + self.net.hb_interval,
                         hb_seq: 0,
+                        sub: None,
                     });
                     // One self-rearming liveness timer per connection: it
                     // bounds the handshake, steady-state silence and the
@@ -724,7 +742,7 @@ impl Reactor {
         let msg = Msg::decode(&self.payload).map_err(|e| format!("dropping corrupt stream: {e}"))?;
         match conn.phase {
             Phase::Handshake => self.on_hello(conn, idx, msg),
-            Phase::Attached { worker } => self.on_worker_msg(conn, worker, msg, frame_bytes),
+            Phase::Attached { worker } => self.on_worker_msg(conn, idx, worker, msg, frame_bytes),
             Phase::Draining => Ok(()), // refused peer still talking: ignore
         }
     }
@@ -742,6 +760,16 @@ impl Reactor {
             let json = self.status_doc();
             self.queue(conn, &Msg::Status { json });
             return Ok(());
+        }
+        // A subscription likewise stays in the handshake phase: the
+        // follower never takes a worker slot, it just receives pushed
+        // deltas (and keeps itself alive with heartbeat frames).
+        if let Msg::Subscribe { interval_ms } = msg {
+            self.subscribe(conn, idx, interval_ms);
+            return Ok(());
+        }
+        if conn.sub.is_some() && matches!(msg, Msg::Heartbeat { .. }) {
+            return Ok(()); // follower keepalive
         }
         let (requested, wire) = match msg {
             Msg::Hello { worker, wire, .. } => (worker, wire),
@@ -827,6 +855,7 @@ impl Reactor {
     fn on_worker_msg(
         &mut self,
         conn: &mut Conn,
+        idx: usize,
         worker: usize,
         msg: Msg,
         frame_bytes: u64,
@@ -871,12 +900,16 @@ impl Reactor {
                 if shard == 0 {
                     self.counters.submissions.fetch_add(1, Ordering::Relaxed);
                 }
+                // Stamp the shard-queue entry time so `run_shard` can
+                // close the Queue span; 0 (untraced) suppresses it.
+                let enq_ns = self.trace.as_ref().map_or(0, |tr| tr.real_now());
                 if self.grad_txs[shard]
                     .send(ShardEvent::Grad(ShardMsg {
                         worker,
                         base_version,
                         loss,
                         grad,
+                        enq_ns,
                     }))
                     .is_err()
                 {
@@ -911,6 +944,11 @@ impl Reactor {
                 let json = self.status_doc();
                 self.queue(conn, &Msg::Status { json });
             }
+            Msg::Subscribe { interval_ms } => {
+                // Attached workers may subscribe too; deltas interleave
+                // with acks on the same outbound queue.
+                self.subscribe(conn, idx, interval_ms);
+            }
             other => {
                 log_warn!("transport", "worker {worker} sent unexpected {other:?}");
             }
@@ -930,7 +968,28 @@ impl Reactor {
             self.counters.submissions.load(Ordering::Relaxed),
             self.started.elapsed(),
             self.status.as_deref(),
+            self.trace.as_deref(),
         )
+    }
+
+    /// Begin (or retime) a status subscription: push the first delta
+    /// immediately, then one per interval from the timer wheel. The
+    /// interval floor bounds how hard one follower can drive the loop.
+    fn subscribe(&mut self, conn: &mut Conn, idx: usize, interval_ms: u32) {
+        let interval = Duration::from_millis(u64::from(interval_ms.max(10)));
+        let first = conn.sub.is_none();
+        let sub = conn.sub.get_or_insert(Sub { interval, seq: 0 });
+        sub.interval = interval;
+        let seq = sub.seq;
+        sub.seq += 1;
+        let json = self.status_doc();
+        self.queue(conn, &Msg::StatusDelta { seq, json });
+        // Re-subscribing only retimes: the old timer keeps firing and
+        // simply pushes at the (updated) cadence it reads off the Conn.
+        if first {
+            self.timers
+                .arm(self.now + interval, idx, conn.gen, TimerKind::StatusPush);
+        }
     }
 
     /// Encode `msg` and append it, framed, onto `conn`'s write queue.
@@ -1025,6 +1084,17 @@ impl Reactor {
                         self.timers.arm(next, e.conn, conn.gen, TimerKind::Liveness);
                     }
                 }
+                TimerKind::StatusPush => {
+                    if let Some(sub) = &mut conn.sub {
+                        let seq = sub.seq;
+                        sub.seq += 1;
+                        let interval = sub.interval;
+                        let json = self.status_doc();
+                        self.queue(&mut conn, &Msg::StatusDelta { seq, json });
+                        self.timers
+                            .arm(now + interval, e.conn, conn.gen, TimerKind::StatusPush);
+                    }
+                }
             }
             match close {
                 None => self.conns[e.conn] = Some(conn),
@@ -1071,6 +1141,13 @@ impl Reactor {
             );
         }
         if let Phase::Attached { worker } = conn.phase {
+            // A for-cause close of an attached worker is an eviction from
+            // the frontend's perspective (the shard records the Leave).
+            if !reason.is_empty() {
+                if let Some(tr) = &self.trace {
+                    tr.instant(Stage::Evict, worker as u32, 0, tr.real_now(), 0, 0);
+                }
+            }
             // Suppressed once the run is stopping: end-of-run disconnects
             // are not membership churn.
             if self.elastic && !self.stop.load(Ordering::Relaxed) {
@@ -1253,6 +1330,7 @@ mod tests {
             quick_net(),
             elastic,
             Some(Arc::new(StatusBoard::new(2))),
+            None,
         )
         .unwrap();
         (frontend, addr, grad_rxs, reply_txs, stop)
@@ -1333,6 +1411,7 @@ mod tests {
                 base_version: 3,
                 loss: 0.5,
                 grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+                enq_ns: 0,
             },
         )
         .unwrap();
@@ -1404,6 +1483,7 @@ mod tests {
                 base_version: 0,
                 loss: 0.0,
                 grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+                enq_ns: 0,
             },
         )
         .unwrap();
@@ -1582,6 +1662,7 @@ mod tests {
                 base_version: 0,
                 loss: 0.0,
                 grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+                enq_ns: 0,
             },
         )
         .unwrap();
@@ -1625,6 +1706,36 @@ mod tests {
         assert_eq!(stats.grad_frame_bytes, 0);
         assert_eq!(stats.submissions, 0);
         drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn reactor_subscription_pushes_incrementing_deltas_without_a_slot() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_reactor(1, false);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut reader = FrameReader::new();
+        let mut payload = Vec::new();
+        let mut msg_buf = Vec::new();
+        let mut frame_buf = Vec::new();
+        Msg::Subscribe { interval_ms: 20 }.encode_into(&mut msg_buf);
+        encode_frame_into(&msg_buf, &mut frame_buf);
+        s.write_all(&frame_buf).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        for expect_seq in 0..3u64 {
+            let msg = read_msg_blocking(&mut s, &mut reader, &mut payload, deadline).unwrap();
+            let Msg::StatusDelta { seq, json } = msg else {
+                panic!("expected StatusDelta, got {msg:?}");
+            };
+            assert_eq!(seq, expect_seq);
+            let doc = crate::util::json::parse(&json).expect("delta must parse");
+            assert_eq!(doc.get("frontend").and_then(|j| j.as_str()), Some("reactor"));
+        }
+        // The follower never consumed the worker slot.
+        let t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
+        drop(t);
+        drop(s);
         frontend.shutdown();
     }
 

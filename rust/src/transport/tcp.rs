@@ -42,6 +42,7 @@ use crate::coordinator::params::SnapshotCell;
 use crate::coordinator::server::{Reply, ShardEvent, ShardMsg, StatusBoard};
 use crate::coordinator::shard::ShardLayout;
 use crate::log_warn;
+use crate::util::trace::{Stage, TraceRing};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -220,6 +221,76 @@ pub fn query_status(addr: &str, net: &NetOptions) -> anyhow::Result<String> {
             Msg::Status { json } => return Ok(json),
             Msg::Heartbeat { .. } => {} // idle server chatter: keep waiting
             other => anyhow::bail!("expected Status, got {other:?}"),
+        }
+    }
+}
+
+/// Dial `addr`, subscribe to status pushes at `interval_ms`, and hand
+/// each `StatusDelta` to `on_delta` until it returns `false`, the server
+/// shuts down, or the stream dies (the transport behind
+/// `hybrid-sgd status --follow`). Sends heartbeats so the server's
+/// liveness check keeps the follower alive between deltas.
+pub fn follow_status(
+    addr: &str,
+    net: &NetOptions,
+    interval_ms: u32,
+    mut on_delta: impl FnMut(u64, &str) -> bool,
+) -> anyhow::Result<()> {
+    let mut stream = dial_with_backoff(addr, net.connect_timeout)?;
+    stream.set_nodelay(true).ok();
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    Msg::Subscribe { interval_ms }.encode_into(&mut msg_buf);
+    encode_frame_into(&msg_buf, &mut frame_buf);
+    stream.write_all(&frame_buf)?;
+    let mut reader = FrameReader::new();
+    let mut payload = Vec::new();
+    stream.set_read_timeout(Some(POLL))?;
+    let mut chunk = [0u8; 16 * 1024];
+    let mut last_rx = Instant::now();
+    let mut last_hb = Instant::now();
+    let mut hb_seq = 0u64;
+    // Deltas may arrive slower than the heartbeat timeout: tolerate a
+    // couple of missed intervals before declaring the server gone.
+    let silence_cap = net
+        .hb_timeout
+        .max(Duration::from_millis(u64::from(interval_ms) * 2 + 1000));
+    loop {
+        if last_hb.elapsed() >= net.hb_interval {
+            last_hb = Instant::now();
+            hb_seq += 1;
+            Msg::Heartbeat { seq: hb_seq }.encode_into(&mut msg_buf);
+            frame_buf.clear();
+            encode_frame_into(&msg_buf, &mut frame_buf);
+            stream.write_all(&frame_buf)?;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()), // server closed
+            Ok(n) => {
+                last_rx = Instant::now();
+                reader.feed(&chunk[..n]);
+                while reader.next_frame(&mut payload)? {
+                    match Msg::decode(&payload)? {
+                        Msg::StatusDelta { seq, json } => {
+                            if !on_delta(seq, &json) {
+                                return Ok(());
+                            }
+                        }
+                        Msg::Heartbeat { .. } => {}
+                        Msg::Shutdown => return Ok(()), // run over
+                        other => anyhow::bail!("expected StatusDelta, got {other:?}"),
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if last_rx.elapsed() > silence_cap {
+                    anyhow::bail!("server silent past the subscription interval");
+                }
+            }
+            Err(e) => return Err(e.into()),
         }
     }
 }
@@ -819,6 +890,9 @@ struct Shared {
     /// Per-shard live counters published by `run_shard` (the ops plane);
     /// `None` when serving without a status board (unit tests).
     status: Option<Arc<StatusBoard>>,
+    /// Flight recorder for the gradient lifecycle; `None` keeps the hot
+    /// path free of clock reads (`--trace` off).
+    trace: Option<Arc<TraceRing>>,
     /// When serving began (uptime / bytes-per-second basis).
     started: Instant,
     /// Submission frames received, frame-granularity bytes.
@@ -864,6 +938,7 @@ impl ThreadedFrontend {
         net: NetOptions,
         elastic: bool,
         status: Option<Arc<StatusBoard>>,
+        trace: Option<Arc<TraceRing>>,
     ) -> std::io::Result<ThreadedFrontend> {
         listener.set_nonblocking(true)?;
         let slots = reply_rxs
@@ -886,6 +961,7 @@ impl ThreadedFrontend {
             net,
             elastic,
             status,
+            trace,
             started: Instant::now(),
             grad_frame_bytes: AtomicU64::new(0),
             submissions: AtomicU64::new(0),
@@ -1003,7 +1079,77 @@ fn status_doc(shared: &Shared) -> String {
         shared.submissions.load(Ordering::Relaxed),
         shared.started.elapsed(),
         shared.status.as_deref(),
+        shared.trace.as_deref(),
     )
+}
+
+/// Push loop for a handshake-phase status subscriber: one `StatusDelta`
+/// immediately, then one per interval, until the follower disconnects,
+/// goes silent past the heartbeat timeout, or the run stops. The follower
+/// keeps itself alive with `Heartbeat` frames; a fresh `Subscribe`
+/// retimes the cadence.
+fn follow_loop(
+    mut stream: TcpStream,
+    shared: &Shared,
+    interval_ms: u32,
+    mut reader: FrameReader,
+    mut payload: Vec<u8>,
+) -> anyhow::Result<()> {
+    let mut interval = Duration::from_millis(u64::from(interval_ms.max(10)));
+    let mut msg_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    let mut push = |seq: u64, stream: &mut TcpStream, msg_buf: &mut Vec<u8>, frame_buf: &mut Vec<u8>| {
+        let json = status_doc(shared);
+        Msg::StatusDelta { seq, json }.encode_into(msg_buf);
+        frame_buf.clear();
+        encode_frame_into(msg_buf, frame_buf);
+        stream.write_all(frame_buf)
+    };
+    let mut seq = 0u64;
+    push(seq, &mut stream, &mut msg_buf, &mut frame_buf)?;
+    seq += 1;
+    let mut next = Instant::now() + interval;
+    let state = ConnState::new();
+    state.mark_rx();
+    stream.set_read_timeout(Some(POLL))?;
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        if Instant::now() >= next {
+            push(seq, &mut stream, &mut msg_buf, &mut frame_buf)?;
+            seq += 1;
+            next = Instant::now() + interval;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()), // follower left
+            Ok(n) => {
+                state.mark_rx();
+                reader.feed(&chunk[..n]);
+                while reader.next_frame(&mut payload)? {
+                    match Msg::decode(&payload)? {
+                        Msg::Heartbeat { .. } => {} // follower keepalive
+                        Msg::Subscribe { interval_ms } => {
+                            interval = Duration::from_millis(u64::from(interval_ms.max(10)));
+                            next = Instant::now();
+                        }
+                        Msg::Shutdown => return Ok(()), // clean goodbye
+                        other => anyhow::bail!("follower sent unexpected {other:?}"),
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.silent_for() > shared.net.hb_timeout {
+                    anyhow::bail!("follower silent past the heartbeat timeout");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
 }
 
 /// Serve one worker connection end to end. Returns when the worker
@@ -1025,6 +1171,12 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
         let _ = write_msg(&s, &Msg::Status { json }, &mut msg_buf, &mut frame_buf);
         let _ = s.get_mut().unwrap().flush();
         return Ok(());
+    }
+    // A subscription likewise stays off the worker slots: this handler
+    // thread becomes the follower's push loop until it disconnects, the
+    // run stops, or it goes silent past the heartbeat timeout.
+    if let Msg::Subscribe { interval_ms } = hello {
+        return follow_loop(stream, shared, interval_ms, reader, payload);
     }
     let (requested, wire) = match hello {
         Msg::Hello { worker, wire, .. } => (worker, wire),
@@ -1178,6 +1330,13 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) -> anyhow::Result<()> {
     );
 
     // --- teardown ---
+    // A for-cause exit of an attached worker (corrupt stream, liveness
+    // lapse) is an eviction from the frontend's perspective.
+    if result.is_err() {
+        if let Some(tr) = &shared.trace {
+            tr.instant(Stage::Evict, id as u32, 0, tr.real_now(), 0, 0);
+        }
+    }
     conn_dead.store(true, Ordering::Relaxed);
     drop(out_tx); // writer drains, sends Shutdown if stopping, exits
     let _ = writer.join();
@@ -1215,9 +1374,23 @@ fn server_read_loop(
     state: &ConnState,
     out_tx: &Sender<Msg>,
 ) -> anyhow::Result<()> {
+    // Active status subscription of this (attached) worker, if any:
+    // (interval, next delta seq, next push due). Serviced on every loop
+    // iteration, so cadence granularity is the poll slice.
+    let mut sub: Option<(Duration, u64, Instant)> = None;
     loop {
         if shared.stop.load(Ordering::Relaxed) {
             return Ok(());
+        }
+        if let Some((interval, seq, next)) = sub.as_mut() {
+            if Instant::now() >= *next {
+                let json = status_doc(shared);
+                if out_tx.send(Msg::StatusDelta { seq: *seq, json }).is_err() {
+                    return Ok(());
+                }
+                *seq += 1;
+                *next = Instant::now() + *interval;
+            }
         }
         match stream.read(chunk) {
             Ok(0) => return Ok(()), // worker left
@@ -1271,12 +1444,18 @@ fn server_read_loop(
                             if shard == 0 {
                                 shared.submissions.fetch_add(1, Ordering::Relaxed);
                             }
+                            // Stamp the shard-queue entry time so
+                            // `run_shard` can close the Queue span; 0
+                            // (untraced) suppresses it.
+                            let enq_ns =
+                                shared.trace.as_ref().map_or(0, |tr| tr.real_now());
                             if shared.grad_txs[shard]
                                 .send(ShardEvent::Grad(ShardMsg {
                                     worker: id,
                                     base_version,
                                     loss,
                                     grad,
+                                    enq_ns,
                                 }))
                                 .is_err()
                             {
@@ -1317,6 +1496,18 @@ fn server_read_loop(
                             if out_tx.send(Msg::Status { json }).is_err() {
                                 return Ok(());
                             }
+                        }
+                        Msg::Subscribe { interval_ms } => {
+                            // Attached workers may subscribe too; deltas
+                            // interleave with acks on the writer channel.
+                            let interval =
+                                Duration::from_millis(u64::from(interval_ms.max(10)));
+                            let seq = sub.as_ref().map_or(0, |&(_, s, _)| s);
+                            let json = status_doc(shared);
+                            if out_tx.send(Msg::StatusDelta { seq, json }).is_err() {
+                                return Ok(());
+                            }
+                            sub = Some((interval, seq + 1, Instant::now() + interval));
                         }
                         other => {
                             log_warn!("transport", "worker {id} sent unexpected {other:?}");
@@ -1473,6 +1664,7 @@ mod tests {
             quick_net(),
             elastic,
             Some(Arc::new(StatusBoard::new(2))),
+            None,
         )
         .unwrap();
         (frontend, addr, grad_rxs, reply_txs, stop)
@@ -1533,6 +1725,7 @@ mod tests {
                 base_version: 3,
                 loss: 0.5,
                 grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+                enq_ns: 0,
             },
         )
         .unwrap();
@@ -1590,6 +1783,41 @@ mod tests {
         let stats = frontend.stats();
         assert_eq!(stats.grad_frame_bytes, 0);
         assert_eq!(stats.submissions, 0);
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
+    fn follow_status_streams_deltas_that_match_a_poll() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_frontend(1);
+        let mut seqs = Vec::new();
+        let mut docs = Vec::new();
+        follow_status(&addr, &quick_net(), 20, |seq, json| {
+            seqs.push(seq);
+            docs.push(json.to_string());
+            docs.len() < 3
+        })
+        .unwrap();
+        assert_eq!(seqs, vec![0, 1, 2]);
+        // Pushed deltas are the same document a poll would have produced
+        // at that instant: same renderer, same fields.
+        let polled = query_status(&addr, &quick_net()).unwrap();
+        let polled = crate::util::json::parse(&polled).unwrap();
+        for doc in &docs {
+            let json = crate::util::json::parse(doc).expect("delta must parse");
+            assert_eq!(
+                json.get("frontend").and_then(|j| j.as_str()),
+                polled.get("frontend").and_then(|j| j.as_str()),
+            );
+            assert_eq!(
+                json.get("workers").and_then(|w| w.get("slots")).and_then(|j| j.as_f64()),
+                polled.get("workers").and_then(|w| w.get("slots")).and_then(|j| j.as_f64()),
+            );
+        }
+        // The follower never consumed the worker slot.
+        let t = TcpTransport::connect(&addr, "dense", quick_net()).unwrap();
+        assert_eq!(t.attach_info().worker, 0);
         drop(t);
         frontend.shutdown();
     }
@@ -1658,6 +1886,7 @@ mod tests {
                 base_version: 0,
                 loss: 0.0,
                 grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+                enq_ns: 0,
             },
         )
         .unwrap();
@@ -1803,6 +2032,7 @@ mod tests {
                 base_version: 0,
                 loss: 0.0,
                 grad: ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
+                enq_ns: 0,
             },
         )
         .unwrap();

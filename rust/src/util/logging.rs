@@ -1,13 +1,16 @@
-//! Leveled stderr logging with wall-clock offsets.
+//! Leveled stderr logging with run-relative timestamps.
 //!
 //! Tiny on purpose: the coordinator logs lifecycle events and per-flush
 //! diagnostics; `HYBRID_SGD_LOG=debug|info|warn|off` selects the level
-//! (default `info`). Timestamps are seconds since process start so traces
-//! from a training run line up with the metric series.
+//! (default `info`). While a run is active its injected `Clock` is
+//! registered here ([`set_run_clock`]), so log timestamps share the run's
+//! timebase — real offsets under the trainer, *virtual* time under the
+//! simulator — and line up with the metric series and trace exports.
+//! Outside a run, timestamps fall back to seconds since process start.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
-use std::time::Instant;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
 #[repr(u8)]
@@ -41,8 +44,44 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+type RunClock = Arc<dyn Fn() -> Duration + Send + Sync>;
+
+/// The active run's clock, if any: (registration token, reader). Tokens
+/// make un-registration race-safe when runs overlap (tests run trainers
+/// concurrently): dropping a guard only clears the entry it installed.
+static RUN_CLOCK: Mutex<Option<(u64, RunClock)>> = Mutex::new(None);
+static RUN_CLOCK_TOKEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Route log timestamps through a run's injected clock until the returned
+/// guard drops. A later registration displaces an earlier one (the newest
+/// run wins); the displaced guard's drop is then a no-op.
+pub fn set_run_clock(f: RunClock) -> RunClockGuard {
+    let token = RUN_CLOCK_TOKEN.fetch_add(1, Ordering::Relaxed);
+    *RUN_CLOCK.lock().unwrap() = Some((token, f));
+    RunClockGuard { token }
+}
+
+/// Clears the [`set_run_clock`] registration on drop (if still current).
+pub struct RunClockGuard {
+    token: u64,
+}
+
+impl Drop for RunClockGuard {
+    fn drop(&mut self) {
+        let mut slot = RUN_CLOCK.lock().unwrap();
+        if matches!(*slot, Some((t, _)) if t == self.token) {
+            *slot = None;
+        }
+    }
+}
+
 pub fn elapsed_secs() -> f64 {
-    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+    let run = RUN_CLOCK.lock().unwrap().as_ref().map(|(_, f)| Arc::clone(f));
+    match run {
+        // Call outside the lock: the reader may be arbitrary user code.
+        Some(f) => f().as_secs_f64(),
+        None => START.get_or_init(Instant::now).elapsed().as_secs_f64(),
+    }
 }
 
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments) {
@@ -95,5 +134,24 @@ mod tests {
         let a = elapsed_secs();
         let b = elapsed_secs();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn run_clock_overrides_then_restores_the_wall_offset() {
+        {
+            let _g = set_run_clock(Arc::new(|| Duration::from_secs(1234)));
+            assert_eq!(elapsed_secs(), 1234.0);
+        }
+        // Guard dropped: back to the (small) process-start offset.
+        assert!(elapsed_secs() < 1234.0);
+        // A newer registration displaces an older one, and the older
+        // guard's late drop must not clear the newer clock.
+        let g1 = set_run_clock(Arc::new(|| Duration::from_secs(1)));
+        let g2 = set_run_clock(Arc::new(|| Duration::from_secs(2)));
+        assert_eq!(elapsed_secs(), 2.0);
+        drop(g1);
+        assert_eq!(elapsed_secs(), 2.0);
+        drop(g2);
+        assert!(elapsed_secs() < 1.0 || elapsed_secs() != 2.0);
     }
 }

@@ -10,3 +10,4 @@ pub mod plot;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod trace;

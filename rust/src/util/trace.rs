@@ -1,0 +1,680 @@
+//! Gradient-lifecycle flight recorder.
+//!
+//! A fixed-capacity, lock-free ring of span/instant events covering the
+//! full life of a gradient — worker compute → encode → wire → shard queue →
+//! buffer accumulate → flush wait → apply/publish — plus flush, membership
+//! and eviction instants. Writers claim slots with one atomic
+//! `fetch_add` on a power-of-two cursor and never block; when the ring
+//! wraps, the oldest events are overwritten (flight-recorder semantics)
+//! and accounted as dropped. Every recorded span also feeds a per-stage
+//! log2-bucketed latency histogram (the staleness-histogram shape from
+//! the status document, widened to microsecond scale), so p50/p99 per
+//! stage are available live without draining the ring.
+//!
+//! Timestamps are nanoseconds on the run's injected [`Clock`] timebase:
+//! threaded/TCP runs stamp with `clock.now()` (and frontends, which have
+//! no clock, stamp through [`TraceRing::real_now`] against an epoch set
+//! to the same `Instant` the run's `RealClock` started), while the DES
+//! simulator stamps with virtual event times — so a seeded `--sim` run
+//! exports a bitwise-identical trace on every replay.
+//!
+//! The export format is Chrome `trace_event` JSON (load in
+//! `chrome://tracing` or Perfetto); the offline `hybrid-sgd trace`
+//! analyzer reads the same file back and prints a critical-path table.
+
+use crate::util::json::Utf8JsonWriter;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Number of lifecycle stages (spans + instants).
+pub const STAGE_COUNT: usize = 11;
+
+/// Stages that are spans (have a duration) — the first `SPAN_COUNT`
+/// discriminants of [`Stage`]; the rest are instants.
+pub const SPAN_COUNT: usize = 7;
+
+/// Latency histogram buckets: log2 of microseconds, bucket `b` covering
+/// `[2^(b-1), 2^b)` µs (bucket 0 = sub-microsecond). 24 buckets reach
+/// ~8.4 s, far beyond any per-stage latency this system produces.
+pub const LAT_BUCKETS: usize = 24;
+
+/// One stage of the gradient lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// Worker: forward/backward on one minibatch (includes the modeled
+    /// straggler delay and compute floor — the paper's heterogeneity).
+    Compute = 0,
+    /// Worker: wire-format gradient encoding (per-shard split/quantize).
+    Encode = 1,
+    /// Worker: submit fan-out until the last shard reply arrives.
+    Wire = 2,
+    /// Server: enqueue on the shard channel until `run_shard` dequeues.
+    Queue = 3,
+    /// Server: aggregation buffered the gradient (no publish yet).
+    Accumulate = 4,
+    /// Server: a blocked worker's wait from park to flush release.
+    FlushWait = 5,
+    /// Server: aggregation applied and published a new snapshot.
+    Apply = 6,
+    /// Instant: a synchronous flush/barrier fired (aux = k applied).
+    Flush = 7,
+    /// Instant: elastic membership join.
+    Join = 8,
+    /// Instant: elastic membership leave.
+    Leave = 9,
+    /// Instant: a frontend evicted a worker (timeout / slot reuse).
+    Evict = 10,
+}
+
+/// All stages, in discriminant order (spans first, then instants).
+pub const STAGES: [Stage; STAGE_COUNT] = [
+    Stage::Compute,
+    Stage::Encode,
+    Stage::Wire,
+    Stage::Queue,
+    Stage::Accumulate,
+    Stage::FlushWait,
+    Stage::Apply,
+    Stage::Flush,
+    Stage::Join,
+    Stage::Leave,
+    Stage::Evict,
+];
+
+impl Stage {
+    /// Lower-case stable name (wire/status/export identifier).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Compute => "compute",
+            Stage::Encode => "encode",
+            Stage::Wire => "wire",
+            Stage::Queue => "queue",
+            Stage::Accumulate => "accumulate",
+            Stage::FlushWait => "flush_wait",
+            Stage::Apply => "apply",
+            Stage::Flush => "flush",
+            Stage::Join => "join",
+            Stage::Leave => "leave",
+            Stage::Evict => "evict",
+        }
+    }
+
+    /// True for stages with a duration; instants are zero-length.
+    pub fn is_span(self) -> bool {
+        (self as u8) < SPAN_COUNT as u8
+    }
+
+    /// Inverse of `name` (used by the offline analyzer).
+    pub fn from_name(s: &str) -> Option<Stage> {
+        STAGES.iter().copied().find(|st| st.name() == s)
+    }
+
+    fn from_u8(v: u8) -> Option<Stage> {
+        STAGES.get(v as usize).copied()
+    }
+}
+
+/// One drained event. `t_ns`/`dur_ns` are on the run clock's timebase;
+/// `seq` is the writer's own submission counter (monotone per writer);
+/// `aux` is stage-specific (flush k, snapshot version, wire bytes, …).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub stage: Stage,
+    pub t_ns: u64,
+    pub dur_ns: u64,
+    pub worker: u32,
+    pub shard: u32,
+    pub seq: u64,
+    pub aux: u64,
+}
+
+/// The result of draining the ring: events in claim (record) order plus
+/// the drop accounting. Conservation: `recorded == retained + dropped`.
+#[derive(Clone, Debug)]
+pub struct TraceDump {
+    pub events: Vec<TraceEvent>,
+    /// Total events ever recorded (claims issued).
+    pub recorded: u64,
+    /// Events readable at drain time (== `events.len()`).
+    pub retained: u64,
+    /// Overwritten by wraparound or torn by an in-flight writer.
+    pub dropped: u64,
+}
+
+/// Bucket index for a latency of `us` microseconds: log2, saturating.
+/// Same `leading_zeros` shape as the staleness histogram in the status
+/// document, widened from 6 to [`LAT_BUCKETS`] buckets.
+pub fn lat_bucket(us: u64) -> usize {
+    ((64 - us.leading_zeros()) as usize).min(LAT_BUCKETS - 1)
+}
+
+/// Inclusive upper bound (µs) of bucket `b` — the quantile estimate
+/// reported for any sample that landed in it.
+pub fn bucket_bound_us(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// Estimate a quantile (`q` in 0..=1) from log2 bucket counts: the upper
+/// bound of the first bucket whose cumulative count reaches `q * total`.
+pub fn quantile_from_buckets(buckets: &[u64; LAT_BUCKETS], q: f64) -> u64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((total as f64) * q).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (b, &c) in buckets.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return bucket_bound_us(b);
+        }
+    }
+    bucket_bound_us(LAT_BUCKETS - 1)
+}
+
+/// Live per-stage summary derived from the histograms (ring not drained).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageSummary {
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+/// One ring slot. Writers fill the payload words `Relaxed`, then publish
+/// with a `Release` store of `stamp = claim + 1` (0 = never written /
+/// write in progress). `check` mixes every payload word with the claim,
+/// so a slot assembled from two racing writers after a full ring lap is
+/// detected at drain time and dropped instead of surfacing torn data.
+#[derive(Debug)]
+struct Slot {
+    stamp: AtomicU64,
+    t_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    /// kind(8) | worker(28) | shard(28)
+    meta: AtomicU64,
+    seq: AtomicU64,
+    aux: AtomicU64,
+    check: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            stamp: AtomicU64::new(0),
+            t_ns: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            aux: AtomicU64::new(0),
+            check: AtomicU64::new(0),
+        }
+    }
+}
+
+fn mix(claim: u64, t: u64, d: u64, m: u64, s: u64, a: u64) -> u64 {
+    let mut h = 0x9E37_79B9_7F4A_7C15u64;
+    for w in [claim, t, d, m, s, a] {
+        h = (h ^ w).wrapping_mul(0x100_0000_01B3).rotate_left(23);
+    }
+    h
+}
+
+fn pack_meta(stage: Stage, worker: u32, shard: u32) -> u64 {
+    ((stage as u64) << 56) | ((worker as u64 & 0x0FFF_FFFF) << 28) | (shard as u64 & 0x0FFF_FFFF)
+}
+
+/// The flight recorder. Shared as `Arc<TraceRing>`; recording is a claim
+/// `fetch_add` plus a handful of `Relaxed` stores — it never blocks, and
+/// a missing ring (`Option::None` on the hot paths) costs one branch.
+pub struct TraceRing {
+    head: AtomicU64,
+    mask: u64,
+    slots: Vec<Slot>,
+    hist: Vec<[AtomicU64; LAT_BUCKETS]>,
+    epoch: OnceLock<Instant>,
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing")
+            .field("capacity", &self.slots.len())
+            .field("recorded", &self.head.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl TraceRing {
+    /// `capacity` is rounded up to the next power of two (min 8).
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.max(8).next_power_of_two();
+        let mut slots = Vec::with_capacity(cap);
+        for _ in 0..cap {
+            slots.push(Slot::new());
+        }
+        let mut hist = Vec::with_capacity(SPAN_COUNT);
+        for _ in 0..SPAN_COUNT {
+            hist.push(std::array::from_fn(|_| AtomicU64::new(0)));
+        }
+        TraceRing {
+            head: AtomicU64::new(0),
+            mask: (cap - 1) as u64,
+            slots,
+            hist,
+            epoch: OnceLock::new(),
+        }
+    }
+
+    /// Default capacity: 64 Ki events (~3.5 MiB), several minutes of a
+    /// busy run before wraparound.
+    pub fn with_default_capacity() -> TraceRing {
+        TraceRing::new(1 << 16)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Anchor the real-time epoch — callers that have no `Clock` handle
+    /// (the transport frontends) stamp with [`Self::real_now`] instead.
+    /// Set this to the run `RealClock`'s start instant so both timebases
+    /// agree; only the first call wins.
+    pub fn set_epoch(&self, at: Instant) {
+        let _ = self.epoch.set(at);
+    }
+
+    /// Nanoseconds since the epoch (self-anchoring on first use if
+    /// [`Self::set_epoch`] was never called).
+    pub fn real_now(&self) -> u64 {
+        let e = *self.epoch.get_or_init(Instant::now);
+        Instant::now().saturating_duration_since(e).as_nanos() as u64
+    }
+
+    /// Total events ever recorded.
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record a span. `start_ns`..`end_ns` on the run clock's timebase.
+    pub fn span(
+        &self,
+        stage: Stage,
+        worker: u32,
+        shard: u32,
+        start_ns: u64,
+        end_ns: u64,
+        seq: u64,
+        aux: u64,
+    ) {
+        debug_assert!(stage.is_span());
+        let dur = end_ns.saturating_sub(start_ns);
+        let h = &self.hist[stage as usize];
+        h[lat_bucket(dur / 1_000)].fetch_add(1, Ordering::Relaxed);
+        self.record(stage, worker, shard, start_ns, dur, seq, aux);
+    }
+
+    /// Record an instant (zero-duration marker).
+    pub fn instant(&self, stage: Stage, worker: u32, shard: u32, t_ns: u64, seq: u64, aux: u64) {
+        debug_assert!(!stage.is_span());
+        self.record(stage, worker, shard, t_ns, 0, seq, aux);
+    }
+
+    fn record(
+        &self,
+        stage: Stage,
+        worker: u32,
+        shard: u32,
+        t_ns: u64,
+        dur_ns: u64,
+        seq: u64,
+        aux: u64,
+    ) {
+        let claim = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(claim & self.mask) as usize];
+        let meta = pack_meta(stage, worker, shard);
+        // Invalidate first so a concurrent drain never accepts a
+        // half-updated slot under the *old* stamp.
+        slot.stamp.store(0, Ordering::Release);
+        slot.t_ns.store(t_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.seq.store(seq, Ordering::Relaxed);
+        slot.aux.store(aux, Ordering::Relaxed);
+        slot.check
+            .store(mix(claim, t_ns, dur_ns, meta, seq, aux), Ordering::Relaxed);
+        slot.stamp.store(claim + 1, Ordering::Release);
+    }
+
+    /// Snapshot the readable window. Events come back in claim (record)
+    /// order, so each writer's events appear in its program order; slots
+    /// overwritten by wraparound or caught mid-write are dropped, never
+    /// surfaced torn (the per-slot checksum rejects a slot assembled
+    /// from two racing writers).
+    pub fn drain(&self) -> TraceDump {
+        let recorded = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let lo = recorded.saturating_sub(cap);
+        let mut events = Vec::with_capacity((recorded - lo) as usize);
+        for claim in lo..recorded {
+            let slot = &self.slots[(claim & self.mask) as usize];
+            if slot.stamp.load(Ordering::Acquire) != claim + 1 {
+                continue; // overwritten by a later lap, or mid-write
+            }
+            let t_ns = slot.t_ns.load(Ordering::Relaxed);
+            let dur_ns = slot.dur_ns.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let seq = slot.seq.load(Ordering::Relaxed);
+            let aux = slot.aux.load(Ordering::Relaxed);
+            let check = slot.check.load(Ordering::Relaxed);
+            // Re-validate after the payload reads: a writer racing this
+            // drain flips the stamp to 0 before touching the payload.
+            if slot.stamp.load(Ordering::Acquire) != claim + 1 {
+                continue;
+            }
+            if check != mix(claim, t_ns, dur_ns, meta, seq, aux) {
+                continue;
+            }
+            let stage = match Stage::from_u8((meta >> 56) as u8) {
+                Some(s) => s,
+                None => continue,
+            };
+            events.push(TraceEvent {
+                stage,
+                t_ns,
+                dur_ns,
+                worker: ((meta >> 28) & 0x0FFF_FFFF) as u32,
+                shard: (meta & 0x0FFF_FFFF) as u32,
+                seq,
+                aux,
+            });
+        }
+        let retained = events.len() as u64;
+        TraceDump {
+            events,
+            recorded,
+            retained,
+            dropped: recorded - retained,
+        }
+    }
+
+    /// Raw histogram counts for one span stage.
+    pub fn hist_counts(&self, stage: Stage) -> [u64; LAT_BUCKETS] {
+        debug_assert!(stage.is_span());
+        std::array::from_fn(|b| self.hist[stage as usize][b].load(Ordering::Relaxed))
+    }
+
+    /// Live per-stage {count, p50, p99} from the histograms.
+    pub fn stage_summaries(&self) -> [StageSummary; SPAN_COUNT] {
+        std::array::from_fn(|s| {
+            let buckets: [u64; LAT_BUCKETS] =
+                std::array::from_fn(|b| self.hist[s][b].load(Ordering::Relaxed));
+            StageSummary {
+                count: buckets.iter().sum(),
+                p50_us: quantile_from_buckets(&buckets, 0.50),
+                p99_us: quantile_from_buckets(&buckets, 0.99),
+            }
+        })
+    }
+
+    /// Append the live `"stages"` object to a status document being
+    /// built: `{"compute":{"count":..,"p50_us":..,"p99_us":..},...}`,
+    /// span stages with at least one sample only.
+    pub fn write_stages_json(&self, w: &mut Utf8JsonWriter) {
+        let sums = self.stage_summaries();
+        w.begin_object();
+        for (i, sum) in sums.iter().enumerate() {
+            if sum.count == 0 {
+                continue;
+            }
+            w.key(STAGES[i].name());
+            w.begin_object();
+            w.key("count").num(sum.count as f64);
+            w.key("p50_us").num(sum.p50_us as f64);
+            w.key("p99_us").num(sum.p99_us as f64);
+            w.end_object();
+        }
+        w.end_object();
+    }
+}
+
+// ---- Chrome trace_event export -------------------------------------------
+
+/// Serialize a dump as Chrome `trace_event` JSON (object form, complete
+/// "X" events for spans and "i" instants, µs timestamps). Worker-side
+/// stages land on pid 1 / tid = worker id, server-side stages on pid 2 /
+/// tid = shard id, so the two planes render as separate process lanes.
+/// Byte-determinism: output depends only on the dump contents, so two
+/// identical seeded sim runs export identical bytes.
+pub fn chrome_trace_json(dump: &TraceDump) -> String {
+    let mut w = Utf8JsonWriter::new();
+    w.begin_object();
+    w.key("displayTimeUnit").str("ms");
+    w.key("recorded").num(dump.recorded as f64);
+    w.key("retained").num(dump.retained as f64);
+    w.key("dropped").num(dump.dropped as f64);
+    w.key("traceEvents");
+    w.begin_array();
+    for (pid, name) in [(1u32, "workers"), (2u32, "shards")] {
+        w.begin_object();
+        w.key("name").str("process_name");
+        w.key("ph").str("M");
+        w.key("pid").num(pid as f64);
+        w.key("args");
+        w.begin_object();
+        w.key("name").str(name);
+        w.end_object();
+        w.end_object();
+    }
+    for ev in &dump.events {
+        let worker_side = matches!(ev.stage, Stage::Compute | Stage::Encode | Stage::Wire);
+        let (pid, tid) = if worker_side {
+            (1u32, ev.worker)
+        } else {
+            (2u32, ev.shard)
+        };
+        w.begin_object();
+        w.key("name").str(ev.stage.name());
+        w.key("cat").str("grad");
+        w.key("ph").str(if ev.stage.is_span() { "X" } else { "i" });
+        w.key("ts").num(ev.t_ns as f64 / 1000.0);
+        if ev.stage.is_span() {
+            w.key("dur").num(ev.dur_ns as f64 / 1000.0);
+        } else {
+            w.key("s").str("p");
+        }
+        w.key("pid").num(pid as f64);
+        w.key("tid").num(tid as f64);
+        w.key("args");
+        w.begin_object();
+        w.key("worker").num(ev.worker as f64);
+        w.key("shard").num(ev.shard as f64);
+        w.key("seq").num(ev.seq as f64);
+        w.key("aux").num(ev.aux as f64);
+        w.key("t_ns").num(ev.t_ns as f64);
+        w.key("dur_ns").num(ev.dur_ns as f64);
+        w.end_object();
+        w.end_object();
+    }
+    w.end_array();
+    w.end_object();
+    w.finish()
+}
+
+/// Drain `ring` and write the Chrome trace to `path`.
+pub fn export_chrome_trace(ring: &TraceRing, path: &str) -> std::io::Result<TraceDump> {
+    let dump = ring.drain();
+    std::fs::write(path, chrome_trace_json(&dump))?;
+    Ok(dump)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lat_bucket_is_log2_saturating() {
+        assert_eq!(lat_bucket(0), 0);
+        assert_eq!(lat_bucket(1), 1);
+        assert_eq!(lat_bucket(2), 2);
+        assert_eq!(lat_bucket(3), 2);
+        assert_eq!(lat_bucket(4), 3);
+        assert_eq!(lat_bucket(1023), 10);
+        assert_eq!(lat_bucket(1024), 11);
+        assert_eq!(lat_bucket(u64::MAX), LAT_BUCKETS - 1);
+        // bucket b covers [2^(b-1), 2^b): its bound is the last value in it
+        for b in 1..LAT_BUCKETS - 1 {
+            assert_eq!(lat_bucket(bucket_bound_us(b)), b);
+            assert_eq!(lat_bucket(bucket_bound_us(b) + 1), b + 1);
+        }
+    }
+
+    #[test]
+    fn quantiles_come_from_cumulative_bucket_mass() {
+        let mut buckets = [0u64; LAT_BUCKETS];
+        assert_eq!(quantile_from_buckets(&buckets, 0.5), 0);
+        // 90 samples in bucket 3 (4..8 µs), 10 in bucket 10 (512..1024 µs)
+        buckets[3] = 90;
+        buckets[10] = 10;
+        assert_eq!(quantile_from_buckets(&buckets, 0.50), bucket_bound_us(3));
+        assert_eq!(quantile_from_buckets(&buckets, 0.90), bucket_bound_us(3));
+        assert_eq!(quantile_from_buckets(&buckets, 0.99), bucket_bound_us(10));
+    }
+
+    #[test]
+    fn ring_drains_in_claim_order_with_conservation() {
+        let ring = TraceRing::new(8);
+        for i in 0..5u64 {
+            ring.span(Stage::Compute, 1, 0, i * 100, i * 100 + 50, i, 0);
+        }
+        let d = ring.drain();
+        assert_eq!(d.recorded, 5);
+        assert_eq!(d.retained, 5);
+        assert_eq!(d.dropped, 0);
+        assert_eq!(d.recorded, d.retained + d.dropped);
+        let seqs: Vec<u64> = d.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        // overflow the ring: oldest events are dropped, newest retained
+        for i in 5..20u64 {
+            ring.span(Stage::Compute, 1, 0, i * 100, i * 100 + 50, i, 0);
+        }
+        let d = ring.drain();
+        assert_eq!(d.recorded, 20);
+        assert_eq!(d.retained, 8);
+        assert_eq!(d.dropped, 12);
+        let seqs: Vec<u64> = d.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn histograms_feed_stage_summaries() {
+        let ring = TraceRing::new(64);
+        // 3 applies at ~4 µs, 1 at ~1 ms
+        for i in 0..3 {
+            ring.span(Stage::Apply, 0, 2, 0, 4_000, i, 0);
+        }
+        ring.span(Stage::Apply, 0, 2, 0, 1_000_000, 3, 0);
+        let s = ring.stage_summaries();
+        assert_eq!(s[Stage::Apply as usize].count, 4);
+        assert_eq!(s[Stage::Apply as usize].p50_us, bucket_bound_us(lat_bucket(4)));
+        assert_eq!(s[Stage::Apply as usize].p99_us, bucket_bound_us(lat_bucket(1_000)));
+        assert_eq!(s[Stage::Compute as usize].count, 0);
+        // the stages JSON only carries sampled stages
+        let mut w = Utf8JsonWriter::new();
+        ring.write_stages_json(&mut w);
+        let json = w.finish();
+        assert!(json.contains("\"apply\":{\"count\":4"));
+        assert!(!json.contains("compute"));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_both_planes() {
+        let ring = TraceRing::new(64);
+        ring.span(Stage::Compute, 3, 0, 1_000, 2_000, 0, 0);
+        ring.span(Stage::Apply, 3, 1, 2_500, 2_600, 0, 7);
+        ring.instant(Stage::Flush, 0, 1, 2_700, 0, 4);
+        let json = chrome_trace_json(&ring.drain());
+        let doc = crate::util::json::parse(&json).expect("chrome trace parses");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name metadata + 3 events
+        assert_eq!(events.len(), 5);
+        assert_eq!(doc.get("dropped").unwrap().as_usize(), Some(0));
+        let apply = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("apply"))
+            .unwrap();
+        assert_eq!(apply.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(apply.get("pid").unwrap().as_usize(), Some(2));
+        assert_eq!(apply.get("tid").unwrap().as_usize(), Some(1));
+        let flush = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("flush"))
+            .unwrap();
+        assert_eq!(flush.get("ph").unwrap().as_str(), Some("i"));
+        // determinism: serializing the same dump twice is byte-identical
+        assert_eq!(json, chrome_trace_json(&ring.drain()));
+    }
+
+    /// The satellite property test: N concurrent writers, a ring far
+    /// smaller than the event volume. The ring must never block or
+    /// surface torn events; counts must conserve and each writer's
+    /// retained sequence must be monotone in claim order.
+    #[test]
+    fn ring_never_blocks_or_tears_under_concurrent_writers() {
+        const WRITERS: u64 = 8;
+        const PER_WRITER: u64 = 20_000;
+        let ring = Arc::new(TraceRing::new(1 << 10));
+        let mut handles = Vec::new();
+        for w in 0..WRITERS {
+            let ring = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for seq in 0..PER_WRITER {
+                    // Every field is derived from (writer, seq) so a torn
+                    // slot would be internally inconsistent.
+                    let t = w * 1_000_000 + seq * 10;
+                    ring.span(Stage::Wire, w as u32, (w % 4) as u32, t, t + w + seq, seq, w ^ seq);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = ring.drain();
+        // conservation: every claim is accounted for exactly once
+        assert_eq!(d.recorded, WRITERS * PER_WRITER);
+        assert_eq!(d.recorded, d.retained + d.dropped);
+        assert_eq!(d.retained, d.events.len() as u64);
+        assert!(d.retained > 0, "a full ring of events must survive");
+        let mut last_seq = vec![None::<u64>; WRITERS as usize];
+        for ev in &d.events {
+            let w = ev.worker as u64;
+            // no tearing: all fields agree with the writer's derivation
+            assert_eq!(ev.shard as u64, w % 4, "torn event: {ev:?}");
+            assert_eq!(ev.t_ns, w * 1_000_000 + ev.seq * 10, "torn event: {ev:?}");
+            assert_eq!(ev.dur_ns, w + ev.seq, "torn event: {ev:?}");
+            assert_eq!(ev.aux, w ^ ev.seq, "torn event: {ev:?}");
+            // per-writer sequences are strictly monotone in claim order
+            if let Some(prev) = last_seq[w as usize] {
+                assert!(ev.seq > prev, "writer {w}: seq {} after {prev}", ev.seq);
+            }
+            last_seq[w as usize] = Some(ev.seq);
+        }
+        // histograms saw every span even when the ring wrapped
+        let sums = ring.stage_summaries();
+        assert_eq!(sums[Stage::Wire as usize].count, WRITERS * PER_WRITER);
+    }
+
+    #[test]
+    fn real_now_is_monotone_against_the_epoch() {
+        let ring = TraceRing::new(8);
+        ring.set_epoch(Instant::now());
+        let a = ring.real_now();
+        let b = ring.real_now();
+        assert!(b >= a);
+    }
+}

@@ -1,9 +1,9 @@
 //! Populate the committed benchmark baselines from a quick-budget run in
 //! the tier-1 environment.
 //!
-//! The authoring container has no Rust toolchain, so `BENCH_compress.json`
-//! and `BENCH_transport.json` ship with exact byte counts but
-//! `ops_per_sec: null`. The tier-1 suite is the first place the code
+//! The authoring container has no Rust toolchain, so `BENCH_compress.json`,
+//! `BENCH_transport.json` and `BENCH_trace.json` ship with exact byte
+//! counts but `ops_per_sec: null`. The tier-1 suite is the first place the code
 //! actually runs; this test re-measures each case with a small fixed
 //! budget and writes the numbers into the baseline files (only filling
 //! nulls — a populated file is left alone except for a consistency check
@@ -172,6 +172,76 @@ fn measure_transport_cases() -> BTreeMap<(String, String), (f64, usize)> {
             );
         }
     }
+    out
+}
+
+/// The `BENCH_trace.json` case set (key = name), mirroring
+/// `bench_hotpath`'s tracing-overhead section: the per-arrival submit
+/// sequence under each tracing configuration.
+fn measure_trace_cases() -> BTreeMap<String, f64> {
+    use hybrid_sgd::coordinator::params::ParamStore;
+    use hybrid_sgd::coordinator::{Aggregator, Policy};
+    use hybrid_sgd::util::trace::{chrome_trace_json, Stage, TraceRing};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let dim = 52_138;
+    let mut rng = Pcg64::seeded(9);
+    let mut grad = vec![0.0f32; dim];
+    rng.fill_normal(&mut grad, 1.0);
+    let mut out = BTreeMap::new();
+
+    {
+        let mut ps = ParamStore::new(vec![0.1; dim], 0.01);
+        let mut agg = Aggregator::new(Policy::Async, dim, 8);
+        let mut w = 0usize;
+        let ops = measure(|| {
+            let v = ps.version();
+            agg.on_gradient(&mut ps, &grad, w % 8, v, 1.0);
+            w += 1;
+        });
+        out.insert("submit_plain".to_string(), ops);
+    }
+
+    let mut traced = |trace: Option<Arc<TraceRing>>| {
+        let mut ps = ParamStore::new(vec![0.1; dim], 0.01);
+        let mut agg = Aggregator::new(Policy::Async, dim, 8);
+        let mut w = 0usize;
+        let mut seq = 0u64;
+        measure(|| {
+            let enq = trace.as_ref().map_or(0, |tr| tr.real_now());
+            let v = ps.version();
+            agg.on_gradient(&mut ps, &grad, w % 8, v, 1.0);
+            if let Some(tr) = &trace {
+                let now = tr.real_now();
+                tr.span(Stage::Queue, (w % 8) as u32, 0, enq, now, seq, 0);
+                tr.span(Stage::Apply, (w % 8) as u32, 0, now, tr.real_now(), seq, 0);
+            }
+            w += 1;
+            seq += 1;
+        })
+    };
+    let off = traced(None);
+    let ring = traced(Some(Arc::new(TraceRing::new(1 << 16))));
+    let export_ring = Arc::new(TraceRing::new(1 << 16));
+    let stop = Arc::new(AtomicBool::new(false));
+    let drainer = {
+        let ring = Arc::clone(&export_ring);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut bytes = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                bytes += chrome_trace_json(&ring.drain()).len();
+            }
+            bytes
+        })
+    };
+    let exporting = traced(Some(export_ring));
+    stop.store(true, Ordering::Relaxed);
+    std::hint::black_box(drainer.join().unwrap());
+
+    out.insert("submit_trace_off".to_string(), off);
+    out.insert("submit_trace_ring".to_string(), ring);
+    out.insert("submit_trace_export".to_string(), exporting);
     out
 }
 
@@ -382,4 +452,13 @@ fn populate_bench_baselines_from_quick_run() {
 
     // The serving-frontend scaling rows (ISSUE 6) live outside `cases`.
     populate_connections(&root.join("BENCH_transport.json"));
+
+    // The tracing-overhead rows (ISSUE 9). `dim` is exact and pinned by
+    // the bench itself; only ops_per_sec is measured here.
+    let trace = measure_trace_cases();
+    populate(&root.join("BENCH_trace.json"), "dim", |case| {
+        let name = case.get("name")?.as_str()?.to_string();
+        let ops = *trace.get(&name)?;
+        Some((ops, None))
+    });
 }

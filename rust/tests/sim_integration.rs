@@ -536,3 +536,59 @@ fn metrics_stream_replays_a_sim_run_bitwise_with_bounded_memory() {
     assert_eq!(replayed.test_loss, reference.test_loss);
     assert_eq!(replayed.train_loss, reference.train_loss);
 }
+
+/// Acceptance for the gradient-lifecycle flight recorder (`--trace`):
+/// tracing is pure observation, so a traced run's metrics equal the
+/// untraced run's bitwise, and the same seeded scenario exports
+/// byte-identical Chrome traces across runs (virtual timestamps only —
+/// no wall-clock read can leak into the export).
+#[test]
+fn traced_sim_exports_byte_identical_chrome_traces() {
+    use hybrid_sgd::util::trace::{chrome_trace_json, TraceRing};
+    use std::sync::Arc;
+
+    let fx = fixture(9);
+    let inputs = inputs_for(&fx, 4);
+    let spec = "workers=4 shards=2 policy=hybrid:step:50 secs=2 seed=7 grad-ms=5 \
+                delay-frac=0.5 delay-std=0.25 elastic=on \
+                faults=crash:3@1,restart:3@1.4,stall:1@0.6..0.7";
+    let untraced = simulate(&scenario(spec), &inputs).unwrap();
+
+    let run_traced = || {
+        let ring = Arc::new(TraceRing::new(1 << 15));
+        let mut scn = scenario(spec);
+        scn.train.trace = Some(Arc::clone(&ring));
+        let m = simulate(&scn, &inputs).unwrap();
+        (m, chrome_trace_json(&ring.drain()))
+    };
+    let (m1, json1) = run_traced();
+    let (m2, json2) = run_traced();
+    assert_eq!(m1, untraced, "tracing must not perturb the run");
+    assert_eq!(
+        json1, json2,
+        "same seeded scenario must export byte-identical traces"
+    );
+
+    // The export actually covers the lifecycle: worker-side spans, the
+    // shard-side apply, and the flush instants the hybrid policy emits.
+    for stage in ["compute", "encode", "wire", "apply", "flush"] {
+        assert!(
+            json1.contains(&format!("\"name\":\"{stage}\"")),
+            "stage `{stage}` never appears in the export"
+        );
+    }
+    // The fault plan's crash surfaces as a membership transition.
+    assert!(
+        json1.contains("\"name\":\"leave\""),
+        "crash at t=1 must record a leave instant"
+    );
+
+    // The offline analyzer in the CLI consumes this same document; its
+    // core invariant (recorded == retained + dropped) holds here too.
+    let doc = hybrid_sgd::util::json::parse(&json1).unwrap();
+    let recorded = doc.get("recorded").and_then(|v| v.as_f64()).unwrap();
+    let retained = doc.get("retained").and_then(|v| v.as_f64()).unwrap();
+    let dropped = doc.get("dropped").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(recorded, retained + dropped);
+    assert!(retained > 0.0, "a traced run must retain events");
+}

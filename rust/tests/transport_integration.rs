@@ -107,6 +107,7 @@ fn tcp_dense_matches_inproc_bitwise_with_frame_overhead() {
                 std::sync::Arc::clone(&inputs.worker_engine),
                 std::sync::Arc::clone(&inputs.batch_source),
                 Some(1),
+                None,
             )
             .expect("join_remote");
             assert_eq!(report.grads_sent, 25);
@@ -170,6 +171,7 @@ fn tcp_topk_two_workers_train_over_localhost() {
                     engine,
                     source,
                     Some(2),
+                    None,
                 )
             }));
         }
@@ -233,6 +235,7 @@ fn tcp_elastic_sync_survives_early_worker_departure() {
                     engine,
                     source,
                     Some(2),
+                    None,
                 )
             });
             joins.push((steps, handle));
