@@ -83,6 +83,10 @@ fn run_native(fx: &Fixture, policy: Policy, secs: f64, compute_ms: f64) -> RunMe
         elastic: false,
         min_quorum: 1,
         stream: None,
+        aggregate: hybrid_sgd::coordinator::AggregateMode::Mean,
+        partition: hybrid_sgd::data::Partition::Iid,
+        trace: None,
+        param_dtype: hybrid_sgd::coordinator::ParamDtype::F32,
     };
     train(&cfg, &inputs).expect("run failed")
 }
@@ -222,6 +226,10 @@ fn main() {
                 elastic: false,
                 min_quorum: 1,
                 stream: None,
+                aggregate: hybrid_sgd::coordinator::AggregateMode::Mean,
+                partition: hybrid_sgd::data::Partition::Iid,
+                trace: None,
+                param_dtype: hybrid_sgd::coordinator::ParamDtype::F32,
             };
             let m = train(&cfg, &inputs).expect("xla run failed");
             report("AOT XLA (jnp)", &m);

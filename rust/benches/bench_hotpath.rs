@@ -215,12 +215,13 @@ fn bench_transport_frames(b: &mut Bencher) -> Vec<TransportCase> {
         for (fmt, grad, shard_len) in payloads {
             let mut msg_buf = Vec::new();
             let mut frame_buf = Vec::new();
-            encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf);
+            encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf).unwrap();
             frame_buf.clear();
             encode_frame_into(&msg_buf, &mut frame_buf);
             let bytes_per_frame = frame_buf.len();
             let r = b.bench(&format!("frame encode {fmt} {label}"), || {
-                encode_submit_into(0, 1, 2, 0.5, black_box(&grad), 0..shard_len, &mut msg_buf);
+                encode_submit_into(0, 1, 2, 0.5, black_box(&grad), 0..shard_len, &mut msg_buf)
+                    .unwrap();
                 frame_buf.clear();
                 encode_frame_into(&msg_buf, &mut frame_buf);
             });
@@ -497,6 +498,216 @@ fn write_trace_baseline(cases: &[TraceOverheadCase]) {
     }
 }
 
+/// One publish-cost case for the `BENCH_memory.json` baseline.
+struct MemoryCase {
+    name: &'static str,
+    dim: usize,
+    dtype: &'static str,
+    ops_per_sec: f64,
+    /// Steady-state bytes copied/converted into the published snapshot per
+    /// publish (exact and hardware-independent: dense re-copies every
+    /// block, a sparse update re-copies only its dirty blocks).
+    bytes_per_publish: usize,
+}
+
+/// One peak-RSS observation. VmHWM is a process-monotone high-water mark,
+/// so dims must run ascending and each row means "peak over all work up to
+/// and including this dim".
+struct RssCase {
+    dim: usize,
+    model_bytes: usize,
+    peak_rss_bytes: u64,
+}
+
+/// Big-model memory path (ISSUE 10): steady-state snapshot publish cost of
+/// the block-recycling pipeline — dense full-dim updates vs sparse updates
+/// dirtying ~1% of blocks — at f32 and f16 snapshot dtypes, plus peak-RSS
+/// observations per dim. Full runs add the 1e8-coordinate case in the
+/// recommended big-model configuration only (f16 snapshots, sparse
+/// updates): dense there needs a 400 MB gradient and an f32 snapshot
+/// pipeline peaks at 3× model — exactly what DESIGN.md §2.12 tells
+/// operators to avoid — and running it would poison the monotone VmHWM
+/// reading for the configuration that matters.
+fn bench_memory(b: &mut Bencher) -> (Vec<MemoryCase>, Vec<RssCase>) {
+    use hybrid_sgd::coordinator::params::{block_count, BLOCK_ELEMS};
+    use hybrid_sgd::coordinator::{peak_rss_bytes, ParamDtype, SnapshotCell};
+    println!("\n== big-model memory path: snapshot publish + peak RSS ==");
+    let quick = std::env::var("BENCH_QUICK").map_or(false, |v| v == "1");
+    let mut cases: Vec<MemoryCase> = Vec::new();
+    let mut rss: Vec<RssCase> = Vec::new();
+
+    // The cell starts empty so construction peaks at master + one
+    // snapshot, not master + f32 clone + snapshot.
+    let store = |dim: usize, dtype: ParamDtype| {
+        let cell = Arc::new(SnapshotCell::new(Vec::new()));
+        ParamStore::with_cell_dtype(vec![0.1; dim], 0.01, cell, dtype)
+    };
+    // ~1% of blocks dirty: one coordinate in every 100th block (never the
+    // trailing partial block, so each dirty block re-copies BLOCK_ELEMS).
+    let sparse_idx = |dim: usize| -> Vec<u32> {
+        let touched = (block_count(dim) / 100).max(1);
+        (0..touched as u32).map(|i| i * 100 * BLOCK_ELEMS as u32).collect()
+    };
+    // Steady-state bytes per publish, read off the store's own accounting
+    // after the timed loop has reached the buffer-recycle steady state.
+    let per_publish = |ps: &mut ParamStore, mut op: &mut dyn FnMut(&mut ParamStore)| -> usize {
+        let (p0, b0) = (ps.publishes(), ps.snapshot_bytes_published());
+        for _ in 0..4 {
+            op(ps);
+        }
+        ((ps.snapshot_bytes_published() - b0) / (ps.publishes() - p0)) as usize
+    };
+
+    for &dim in &[1_000_000usize, 10_000_000] {
+        let idx = sparse_idx(dim);
+        let val = vec![1e-3f32; idx.len()];
+        let mut grad = vec![0.0f32; dim];
+        Pcg64::seeded(11).fill_normal(&mut grad, 1.0);
+
+        let mut dense_f32 = 0usize;
+        let mut delta_f32 = 0usize;
+        for dtype in [ParamDtype::F32, ParamDtype::F16] {
+            let dname = dtype.as_str();
+            let mut ps = store(dim, dtype);
+            let r = b.bench(&format!("publish dense d={dim} {dname}"), || {
+                ps.apply_single(black_box(&grad));
+            });
+            let dense = per_publish(&mut ps, &mut |ps| ps.apply_single(&grad));
+            cases.push(MemoryCase {
+                name: "publish_dense",
+                dim,
+                dtype: dname,
+                ops_per_sec: 1e9 / r.mean_ns,
+                bytes_per_publish: dense,
+            });
+
+            let mut ps = store(dim, dtype);
+            let r = b.bench(&format!("publish delta1pct d={dim} {dname}"), || {
+                ps.apply_view(GradView::Sparse {
+                    idx: black_box(&idx),
+                    val: &val,
+                });
+            });
+            let delta = per_publish(&mut ps, &mut |ps| {
+                ps.apply_view(GradView::Sparse {
+                    idx: &idx,
+                    val: &val,
+                })
+            });
+            cases.push(MemoryCase {
+                name: "publish_delta1pct",
+                dim,
+                dtype: dname,
+                ops_per_sec: 1e9 / r.mean_ns,
+                bytes_per_publish: delta,
+            });
+
+            // Acceptance: buffer recycling makes a sparse update publish in
+            // O(dirty blocks), not O(dim) — ≥ 50× fewer snapshot bytes than
+            // the dense re-copy at 1% block density.
+            assert!(
+                dense >= 50 * delta,
+                "delta publish must cut snapshot bytes ≥ 50× at 1% dirty blocks: \
+                 dense {dense} vs delta {delta} (d={dim} {dname})"
+            );
+            if dtype == ParamDtype::F32 {
+                dense_f32 = dense;
+                delta_f32 = delta;
+            }
+        }
+        println!(
+            "      bytes/publish d={dim}: dense f32 {dense_f32}, delta f32 {delta_f32} ({:.0}x), f16 halves both",
+            dense_f32 as f64 / delta_f32 as f64
+        );
+        rss.push(RssCase {
+            dim,
+            model_bytes: dim * 4,
+            peak_rss_bytes: peak_rss_bytes(),
+        });
+    }
+
+    if !quick {
+        let dim = 100_000_000usize;
+        let idx = sparse_idx(dim);
+        let val = vec![1e-3f32; idx.len()];
+        let mut ps = store(dim, ParamDtype::F16);
+        let r = b.bench(&format!("publish delta1pct d={dim} f16"), || {
+            ps.apply_view(GradView::Sparse {
+                idx: black_box(&idx),
+                val: &val,
+            });
+        });
+        let delta = per_publish(&mut ps, &mut |ps| {
+            ps.apply_view(GradView::Sparse {
+                idx: &idx,
+                val: &val,
+            })
+        });
+        cases.push(MemoryCase {
+            name: "publish_delta1pct",
+            dim,
+            dtype: "f16",
+            ops_per_sec: 1e9 / r.mean_ns,
+            bytes_per_publish: delta,
+        });
+        let hwm = peak_rss_bytes();
+        rss.push(RssCase {
+            dim,
+            model_bytes: dim * 4,
+            peak_rss_bytes: hwm,
+        });
+        if hwm > 0 {
+            println!(
+                "      peak RSS at d=1e8/f16: {:.0} MB = {:.2}x model bytes \
+                 (f32 master + published f16 snapshot + one recycled spare)",
+                hwm as f64 / 1e6,
+                hwm as f64 / (dim as f64 * 4.0)
+            );
+        }
+    }
+    (cases, rss)
+}
+
+/// Emit the memory baseline when asked
+/// (`BENCH_MEMORY_OUT=../BENCH_memory.json cargo bench --bench
+/// bench_hotpath`; cargo runs bench binaries with cwd = rust/).
+fn write_memory_baseline(cases: &[MemoryCase], rss: &[RssCase]) {
+    let Ok(path) = std::env::var("BENCH_MEMORY_OUT") else {
+        return;
+    };
+    let mut rows = Vec::new();
+    for c in cases {
+        rows.push(Json::from_pairs(vec![
+            ("name", Json::Str(c.name.to_string())),
+            ("dim", Json::Num(c.dim as f64)),
+            ("dtype", Json::Str(c.dtype.to_string())),
+            ("ops_per_sec", Json::Num(c.ops_per_sec)),
+            ("bytes_per_publish", Json::Num(c.bytes_per_publish as f64)),
+        ]));
+    }
+    let mut rss_rows = Vec::new();
+    for r in rss {
+        rss_rows.push(Json::from_pairs(vec![
+            ("dim", Json::Num(r.dim as f64)),
+            ("model_bytes", Json::Num(r.model_bytes as f64)),
+            ("peak_rss_bytes", Json::Num(r.peak_rss_bytes as f64)),
+        ]));
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("bench_hotpath/memory".to_string())),
+        (
+            "quick",
+            Json::Bool(std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")),
+        ),
+        ("cases", Json::Arr(rows)),
+        ("peak_rss", Json::Arr(rss_rows)),
+    ]);
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let mut b = Bencher::new();
     println!("== L3 parameter-server hot path ==");
@@ -547,7 +758,7 @@ fn main() {
         let mut local = vec![0.0f32; dim];
         b.bench(&format!("snapshot refresh d={dim}"), || {
             let snap = cell.load();
-            local.copy_from_slice(&snap.theta);
+            snap.copy_to(&mut local);
             black_box(&local);
         });
         b.bench(&format!("snapshot load only d={dim}"), || {
@@ -619,6 +830,9 @@ fn main() {
 
     let trace_cases = bench_trace_overhead(&mut b);
     write_trace_baseline(&trace_cases);
+
+    let (memory_cases, rss_cases) = bench_memory(&mut b);
+    write_memory_baseline(&memory_cases, &rss_cases);
 
     b.summary();
     // Headline check: the hybrid PS step on the largest model must be far

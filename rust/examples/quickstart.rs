@@ -77,6 +77,10 @@ fn main() -> anyhow::Result<()> {
         elastic: false,
         min_quorum: 1,
         stream: None,
+        aggregate: hybrid_sgd::coordinator::AggregateMode::Mean,
+        partition: hybrid_sgd::data::Partition::Iid,
+        trace: None,
+        param_dtype: hybrid_sgd::coordinator::ParamDtype::F32,
     };
     let _ = Schedule::Step { step: 1 }; // (see threshold.rs for all schedules)
 

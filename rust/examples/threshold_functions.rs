@@ -96,6 +96,10 @@ fn main() -> anyhow::Result<()> {
             elastic: false,
             min_quorum: 1,
             stream: None,
+            aggregate: hybrid_sgd::coordinator::AggregateMode::Mean,
+            partition: hybrid_sgd::data::Partition::Iid,
+            trace: None,
+            param_dtype: hybrid_sgd::coordinator::ParamDtype::F32,
         };
         let m = train(&cfg, &inputs)?;
         let (tr, te, acc) = m.final_metrics().unwrap_or((f64::NAN, f64::NAN, f64::NAN));

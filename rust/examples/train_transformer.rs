@@ -102,6 +102,10 @@ fn main() -> anyhow::Result<()> {
         elastic: false,
         min_quorum: 1,
         stream: None,
+        aggregate: hybrid_sgd::coordinator::AggregateMode::Mean,
+        partition: hybrid_sgd::data::Partition::Iid,
+        trace: None,
+        param_dtype: hybrid_sgd::coordinator::ParamDtype::F32,
     };
 
     println!("training for ~{secs:.0}s (~{steps} gradient steps) ...\n");

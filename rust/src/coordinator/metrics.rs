@@ -134,6 +134,29 @@ pub fn replay_stream(path: &Path) -> anyhow::Result<RunMetrics> {
     Ok(m)
 }
 
+/// Peak resident-set size of the current process, in bytes. Reads the
+/// `VmHWM` high-water mark from `/proc/self/status` (Linux); returns 0
+/// anywhere the file or the line is missing — callers treat 0 as "not
+/// measured", never as "no memory used".
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            // Format: "VmHWM:     12345 kB"
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
 /// Everything measured during one training run.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -183,6 +206,22 @@ pub struct RunMetrics {
     /// Elastic-membership transitions over the run (joins + leaves +
     /// evictions; 0 for static-membership runs).
     pub membership_epochs: u64,
+    /// Snapshot publications across all shards (each is one copy of the
+    /// dirty blocks into the snapshot pool).
+    pub snapshot_publishes: u64,
+    /// Bytes copied into published snapshots across all shards — the
+    /// memory-traffic cost of the publish path. With delta tracking this
+    /// is proportional to *dirty* blocks, not `dim`, per publish.
+    pub snapshot_bytes_published: u64,
+    /// Bytes of parameter state workers pulled via refresh. Logical
+    /// (4 B × slice length) on transports without wire accounting; actual
+    /// snapshot-response payload bytes on TCP, where the delta protocol
+    /// makes this much smaller than refreshes × slice size.
+    pub refresh_bytes: u64,
+    /// Peak resident-set size of this process (bytes; Linux `VmHWM`, 0
+    /// where unavailable). Excluded from equality — it is a property of
+    /// the machine and allocator, not of the run.
+    pub peak_rss_bytes: u64,
     /// Final parameters after the end-of-run drain (concatenated in shard
     /// order). The multi-process acceptance tests compare runs bitwise on
     /// this field; empty when a path does not report them.
@@ -222,6 +261,9 @@ impl PartialEq for RunMetrics {
             && self.bytes_sent == other.bytes_sent
             && self.bytes_received == other.bytes_received
             && self.bytes_dense_equiv == other.bytes_dense_equiv
+            && self.snapshot_publishes == other.snapshot_publishes
+            && self.snapshot_bytes_published == other.snapshot_bytes_published
+            && self.refresh_bytes == other.refresh_bytes
             && self.final_params.len() == other.final_params.len()
             && self
                 .final_params
@@ -325,6 +367,16 @@ impl RunMetrics {
             ("bytes_sent", Json::Num(self.bytes_sent as f64)),
             ("bytes_received", Json::Num(self.bytes_received as f64)),
             ("bytes_dense_equiv", Json::Num(self.bytes_dense_equiv as f64)),
+            (
+                "snapshot_publishes",
+                Json::Num(self.snapshot_publishes as f64),
+            ),
+            (
+                "snapshot_bytes_published",
+                Json::Num(self.snapshot_bytes_published as f64),
+            ),
+            ("refresh_bytes", Json::Num(self.refresh_bytes as f64)),
+            ("peak_rss_bytes", Json::Num(self.peak_rss_bytes as f64)),
             // f32 values are exact in f64, and the JSON writer prints
             // shortest-roundtrip floats, so this survives a JSON round
             // trip bit-for-bit (the multi-process tests rely on it).
@@ -386,6 +438,9 @@ mod tests {
         m.bytes_dense_equiv = 50_000;
         m.membership.push(0.5, 2.0);
         m.membership_epochs = 1;
+        m.snapshot_publishes = 12;
+        m.snapshot_bytes_published = 4096;
+        m.refresh_bytes = 2048;
         m
     }
 
@@ -474,8 +529,25 @@ mod tests {
         let a = sample();
         let mut b = sample();
         b.stream = Some(Arc::new(MetricsStream::create(&path).unwrap()));
+        // Peak RSS is machine-dependent, so it must not break equality
+        // either — two identical runs on different hosts compare equal.
+        b.peak_rss_bytes = 123_456_789;
         assert_eq!(a, b);
+        // The snapshot/refresh counters, by contrast, are deterministic
+        // under the simulator and *do* participate.
+        b.refresh_bytes += 1;
+        assert_ne!(a, b);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn peak_rss_reads_nonzero_on_linux() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            // Any running process has touched at least a page.
+            assert!(rss > 0, "VmHWM parse returned 0 on Linux");
+            assert_eq!(rss % 1024, 0, "VmHWM is reported in kB");
+        }
     }
 
     #[test]
@@ -490,6 +562,13 @@ mod tests {
         assert_eq!(parsed.usize_field("membership_epochs").unwrap(), 1);
         assert_eq!(parsed.usize_field("rejected_grads").unwrap(), 3);
         assert_eq!(parsed.usize_field("clipped_grads").unwrap(), 4);
+        assert_eq!(parsed.usize_field("snapshot_publishes").unwrap(), 12);
+        assert_eq!(
+            parsed.usize_field("snapshot_bytes_published").unwrap(),
+            4096
+        );
+        assert_eq!(parsed.usize_field("refresh_bytes").unwrap(), 2048);
+        assert_eq!(parsed.usize_field("peak_rss_bytes").unwrap(), 0);
         assert_eq!(
             parsed
                 .get("membership")

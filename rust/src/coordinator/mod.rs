@@ -54,8 +54,8 @@ pub use compress::{
 };
 pub use delay::{DelayDist, DelayModel};
 pub use membership::Membership;
-pub use metrics::{replay_stream, MetricsStream, RunMetrics, SeriesId};
-pub use params::{ParamSnapshot, SnapshotCell};
+pub use metrics::{peak_rss_bytes, replay_stream, MetricsStream, RunMetrics, SeriesId};
+pub use params::{ParamDtype, ParamSnapshot, SnapshotCell};
 pub use policy::{Aggregator, Outcome, Policy};
 pub use server::ShardEvent;
 pub use shard::{ShardLayout, ShardedAggregator};

@@ -8,14 +8,364 @@
 //! under a nanosecond-scale lock. The publisher pays one memcpy per update
 //! into a recycled buffer (no steady-state allocation); readers copy out
 //! only when the version actually changed.
+//!
+//! Big-model path (DESIGN.md §2.12): θ is tracked in fixed-size blocks of
+//! [`BLOCK_ELEMS`] coordinates, each stamped with the version at which it
+//! last changed. `publish()` copies only the blocks that moved since the
+//! recycled buffer's content version (sparse updates touch O(nnz) blocks,
+//! not O(dim)), and the published `block_versions` let the transport serve
+//! delta refreshes: a reader at version `have` needs exactly the blocks
+//! with `block_versions[b] > have`. Snapshots optionally store parameters
+//! in half precision ([`ParamDtype::F16`]/[`ParamDtype::Bf16`]) — master
+//! weights stay f32, only published copies and the wire shrink.
 
+use std::ops::Range;
 use std::sync::{Arc, Mutex};
+
+/// Coordinates per dirty-tracking block (16 KiB of f32). Small enough that
+/// a sparse top-k update dirties a sliver of a big shard, large enough that
+/// per-block bookkeeping is noise (one u64 per 16 KiB).
+pub const BLOCK_ELEMS: usize = 4096;
+
+/// How many retired snapshot buffers `publish()` keeps for reuse. Two, not
+/// one: with a single spare, one pinned reader (an evaluator holding the
+/// previous snapshot) turns every publish into a fresh full-dim allocation.
+pub const SPARE_POOL_CAP: usize = 2;
+
+/// Number of [`BLOCK_ELEMS`]-sized blocks covering `len` coordinates.
+pub fn block_count(len: usize) -> usize {
+    (len + BLOCK_ELEMS - 1) / BLOCK_ELEMS
+}
+
+/// Coordinate range of block `b` within a vector of `len` coordinates.
+pub fn block_range(b: usize, len: usize) -> Range<usize> {
+    let start = b * BLOCK_ELEMS;
+    start..((start + BLOCK_ELEMS).min(len))
+}
+
+/// Storage precision of *published* parameter snapshots (and therefore of
+/// snapshot wire payloads). Master weights in the store are always f32.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ParamDtype {
+    #[default]
+    F32,
+    F16,
+    Bf16,
+}
+
+impl ParamDtype {
+    pub fn parse(s: &str) -> Option<ParamDtype> {
+        match s {
+            "f32" => Some(ParamDtype::F32),
+            "f16" => Some(ParamDtype::F16),
+            "bf16" => Some(ParamDtype::Bf16),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ParamDtype::F32 => "f32",
+            ParamDtype::F16 => "f16",
+            ParamDtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Wire tag (one byte in `Msg::SnapshotDelta`).
+    pub fn tag(&self) -> u8 {
+        match self {
+            ParamDtype::F32 => 0,
+            ParamDtype::F16 => 1,
+            ParamDtype::Bf16 => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<ParamDtype> {
+        match t {
+            0 => Some(ParamDtype::F32),
+            1 => Some(ParamDtype::F16),
+            2 => Some(ParamDtype::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored coordinate.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            ParamDtype::F32 => 4,
+            ParamDtype::F16 | ParamDtype::Bf16 => 2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Half-precision conversions (hand-rolled: std has no f16/bf16). Both are
+// round-to-nearest-even, the IEEE default, so converting the same f32 twice
+// always yields the same bits — unchanged blocks stay bitwise-stable across
+// delta publishes.
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even. Overflow saturates to
+/// ±Inf; NaN maps to a quiet NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    if (bits & 0x7fff_ffff) > 0x7f80_0000 {
+        return sign | 0x7e00; // NaN
+    }
+    let exp = ((bits >> 23) & 0xff) as i32 - 127 + 15;
+    let man = bits & 0x007f_ffff;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // Inf or overflow
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflows past subnormal range: ±0
+        }
+        // Subnormal result: shift the full 24-bit significand into place.
+        let man = man | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        return sign | (half + up as u32) as u16;
+    }
+    let half = ((exp as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    // A carry out of the mantissa bumps the exponent (possibly to Inf),
+    // which is exactly correct rounding behaviour.
+    sign | (half + up as u32) as u16
+}
+
+/// IEEE binary16 bits → f32 (exact: every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize into the f32 exponent range.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // Inf / NaN
+    } else {
+        sign | ((exp as u32 + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits (truncate the mantissa to 7 bits), round-to-nearest
+/// -even. NaN keeps its sign and is forced quiet.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    (bits.wrapping_add(0x7fff + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Decode `bytes` (little-endian coordinates of `dtype`) into `out`.
+/// Panics if the byte count does not match `out.len() * elem_bytes` —
+/// callers validate lengths at the wire boundary first.
+pub fn decode_block_into(dtype: ParamDtype, bytes: &[u8], out: &mut [f32]) {
+    assert_eq!(bytes.len(), out.len() * dtype.elem_bytes());
+    match dtype {
+        ParamDtype::F32 => {
+            for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                *o = f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+        }
+        ParamDtype::F16 => {
+            for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+            }
+        }
+        ParamDtype::Bf16 => {
+            for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                *o = bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+            }
+        }
+    }
+}
+
+/// Published parameter payload in its storage precision.
+#[derive(Clone, Debug)]
+pub enum SnapshotData {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Bf16(Vec<u16>),
+}
+
+impl SnapshotData {
+    fn with_len(dtype: ParamDtype, len: usize) -> SnapshotData {
+        match dtype {
+            ParamDtype::F32 => SnapshotData::F32(vec![0.0; len]),
+            ParamDtype::F16 => SnapshotData::F16(vec![0; len]),
+            ParamDtype::Bf16 => SnapshotData::Bf16(vec![0; len]),
+        }
+    }
+
+    fn from_theta(dtype: ParamDtype, theta: &[f32]) -> SnapshotData {
+        match dtype {
+            ParamDtype::F32 => SnapshotData::F32(theta.to_vec()),
+            ParamDtype::F16 => {
+                SnapshotData::F16(theta.iter().map(|&x| f32_to_f16_bits(x)).collect())
+            }
+            ParamDtype::Bf16 => {
+                SnapshotData::Bf16(theta.iter().map(|&x| f32_to_bf16_bits(x)).collect())
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> ParamDtype {
+        match self {
+            SnapshotData::F32(_) => ParamDtype::F32,
+            SnapshotData::F16(_) => ParamDtype::F16,
+            SnapshotData::Bf16(_) => ParamDtype::Bf16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            SnapshotData::F32(v) => v.len(),
+            SnapshotData::F16(v) | SnapshotData::Bf16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy coordinates `r` from master weights into this buffer,
+    /// converting to the storage precision. Returns bytes written.
+    fn copy_block_from(&mut self, theta: &[f32], r: Range<usize>) -> usize {
+        let n = r.len();
+        match self {
+            SnapshotData::F32(v) => v[r.clone()].copy_from_slice(&theta[r]),
+            SnapshotData::F16(v) => {
+                for (d, &s) in v[r.clone()].iter_mut().zip(&theta[r]) {
+                    *d = f32_to_f16_bits(s);
+                }
+            }
+            SnapshotData::Bf16(v) => {
+                for (d, &s) in v[r.clone()].iter_mut().zip(&theta[r]) {
+                    *d = f32_to_bf16_bits(s);
+                }
+            }
+        }
+        n * self.dtype().elem_bytes()
+    }
+
+    /// Dequantize coordinates `r` into an f32 slice of the same length.
+    pub fn copy_to_f32(&self, r: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(r.len(), out.len());
+        match self {
+            SnapshotData::F32(v) => out.copy_from_slice(&v[r]),
+            SnapshotData::F16(v) => {
+                for (o, &h) in out.iter_mut().zip(&v[r]) {
+                    *o = f16_bits_to_f32(h);
+                }
+            }
+            SnapshotData::Bf16(v) => {
+                for (o, &h) in out.iter_mut().zip(&v[r]) {
+                    *o = bf16_bits_to_f32(h);
+                }
+            }
+        }
+    }
+
+    /// Append the little-endian wire bytes of coordinates `r`.
+    pub fn extend_wire_bytes(&self, r: Range<usize>, out: &mut Vec<u8>) {
+        match self {
+            SnapshotData::F32(v) => {
+                for &x in &v[r] {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            SnapshotData::F16(v) | SnapshotData::Bf16(v) => {
+                for &h in &v[r] {
+                    out.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+        }
+    }
+}
 
 /// An immutable published view of one shard's parameters.
 #[derive(Clone, Debug)]
 pub struct ParamSnapshot {
-    pub theta: Vec<f32>,
+    pub data: SnapshotData,
     pub version: u64,
+    /// Version at which each [`BLOCK_ELEMS`]-sized block last changed.
+    /// A reader at version `have` is brought current by exactly the blocks
+    /// with `block_versions[b] > have`.
+    pub block_versions: Vec<u64>,
+}
+
+impl ParamSnapshot {
+    fn full(data: SnapshotData, version: u64) -> ParamSnapshot {
+        let blocks = block_count(data.len());
+        ParamSnapshot {
+            data,
+            version,
+            block_versions: vec![version; blocks],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dtype(&self) -> ParamDtype {
+        self.data.dtype()
+    }
+
+    /// The parameters as f32. Panics unless the snapshot stores f32 —
+    /// half-precision readers go through [`ParamSnapshot::copy_to`].
+    pub fn theta(&self) -> &[f32] {
+        match &self.data {
+            SnapshotData::F32(v) => v,
+            other => panic!(
+                "snapshot stores {}, not f32; use copy_to",
+                other.dtype().as_str()
+            ),
+        }
+    }
+
+    /// Full dequantizing copy into a same-length f32 buffer.
+    pub fn copy_to(&self, out: &mut [f32]) {
+        self.data.copy_to_f32(0..self.len(), out);
+    }
+
+    /// Indices of the blocks a reader at version `have` is missing.
+    pub fn blocks_newer_than(&self, have: u64) -> Vec<usize> {
+        self.block_versions
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > have)
+            .map(|(b, _)| b)
+            .collect()
+    }
 }
 
 /// Single-writer / multi-reader snapshot slot: the writer swaps in a fresh
@@ -27,13 +377,10 @@ pub struct SnapshotCell {
 }
 
 impl SnapshotCell {
-    /// A cell holding version 0 of the given parameters.
+    /// A cell holding version 0 of the given parameters (f32 storage).
     pub fn new(init: Vec<f32>) -> SnapshotCell {
         SnapshotCell {
-            slot: Mutex::new(Arc::new(ParamSnapshot {
-                theta: init,
-                version: 0,
-            })),
+            slot: Mutex::new(Arc::new(ParamSnapshot::full(SnapshotData::F32(init), 0))),
         }
     }
 
@@ -55,8 +402,20 @@ impl SnapshotCell {
     /// Publish an explicit (θ, version) pair directly. Test/bench helper —
     /// production code publishes through [`ParamStore`] for recycling.
     pub(crate) fn publish_raw(&self, theta: Vec<f32>, version: u64) {
-        self.swap(Arc::new(ParamSnapshot { theta, version }));
+        self.swap(Arc::new(ParamSnapshot::full(
+            SnapshotData::F32(theta),
+            version,
+        )));
     }
+}
+
+/// A retired snapshot buffer waiting for reuse: its contents are exactly
+/// the published parameters at `version`, so the next publish only has to
+/// re-copy blocks that changed after that.
+struct SpareBuf {
+    version: u64,
+    data: SnapshotData,
+    block_versions: Vec<u64>,
 }
 
 /// Versioned parameters with in-place SGD updates (one shard's slice of θ).
@@ -64,32 +423,59 @@ pub struct ParamStore {
     theta: Vec<f32>,
     version: u64,
     lr: f32,
+    dtype: ParamDtype,
+    /// Version at which each block of `theta` last changed (master-side
+    /// mirror of the published `block_versions`).
+    block_versions: Vec<u64>,
     /// Where snapshots are published for workers and the evaluator.
     cell: Arc<SnapshotCell>,
-    /// Recycled buffer for the next publication (avoids re-allocating).
-    spare: Option<Vec<f32>>,
+    /// Recycled buffers for upcoming publications (cap [`SPARE_POOL_CAP`]).
+    pool: Vec<SpareBuf>,
+    /// Lifetime publish count and bytes actually copied into snapshots
+    /// (delta publishes copy only dirty blocks, so this is << dim·4·versions
+    /// for sparse workloads).
+    publishes: u64,
+    bytes_published: u64,
 }
 
 impl ParamStore {
     pub fn new(init: Vec<f32>, lr: f32) -> Self {
+        Self::with_dtype(init, lr, ParamDtype::F32)
+    }
+
+    pub fn with_dtype(init: Vec<f32>, lr: f32, dtype: ParamDtype) -> Self {
         let cell = Arc::new(SnapshotCell::new(init.clone()));
-        Self::with_cell(init, lr, cell)
+        Self::with_cell_dtype(init, lr, cell, dtype)
     }
 
     /// Construct around an externally created cell (the trainer hands the
     /// same cell to the workers and the evaluator). The cell is reset to
     /// version 0 with `init`.
     pub fn with_cell(init: Vec<f32>, lr: f32, cell: Arc<SnapshotCell>) -> Self {
-        cell.swap(Arc::new(ParamSnapshot {
-            theta: init.clone(),
-            version: 0,
-        }));
+        Self::with_cell_dtype(init, lr, cell, ParamDtype::F32)
+    }
+
+    pub fn with_cell_dtype(
+        init: Vec<f32>,
+        lr: f32,
+        cell: Arc<SnapshotCell>,
+        dtype: ParamDtype,
+    ) -> Self {
+        cell.swap(Arc::new(ParamSnapshot::full(
+            SnapshotData::from_theta(dtype, &init),
+            0,
+        )));
+        let blocks = block_count(init.len());
         ParamStore {
+            block_versions: vec![0; blocks],
             theta: init,
             version: 0,
             lr,
+            dtype,
             cell,
-            spare: None,
+            pool: Vec::new(),
+            publishes: 0,
+            bytes_published: 0,
         }
     }
 
@@ -109,8 +495,23 @@ impl ParamStore {
         self.lr
     }
 
+    pub fn dtype(&self) -> ParamDtype {
+        self.dtype
+    }
+
+    /// Master weights — always f32 regardless of snapshot dtype.
     pub fn theta(&self) -> &[f32] {
         &self.theta
+    }
+
+    /// Lifetime number of snapshot publications.
+    pub fn publishes(&self) -> u64 {
+        self.publishes
+    }
+
+    /// Lifetime bytes memcpy'd/converted into published snapshots.
+    pub fn snapshot_bytes_published(&self) -> u64 {
+        self.bytes_published
     }
 
     /// Handle readers use to follow this store's snapshots.
@@ -123,11 +524,32 @@ impl ParamStore {
         self.apply_view(super::compress::GradView::Dense(grad));
     }
 
+    /// Stamp the blocks `grad` touches with the version the pending update
+    /// will have. Dense and full-dim quantized views touch everything;
+    /// sparse views dirty only the blocks holding their nnz coordinates.
+    fn mark_dirty(&mut self, grad: &super::compress::GradView<'_>) {
+        let next = self.version + 1;
+        match grad {
+            super::compress::GradView::Dense(_) | super::compress::GradView::Quant { .. } => {
+                for v in &mut self.block_versions {
+                    *v = next;
+                }
+            }
+            super::compress::GradView::Sparse { idx, .. }
+            | super::compress::GradView::SparseQuant { idx, .. } => {
+                for &i in idx.iter() {
+                    self.block_versions[i as usize / BLOCK_ELEMS] = next;
+                }
+            }
+        }
+    }
+
     /// [`ParamStore::apply_single`] for a gradient in any wire format:
     /// dense runs the exact SGD loop as always; sparse views update only
     /// their nnz coordinates (O(nnz), not O(dim)); quantized views
     /// dequantize on the fly.
     pub fn apply_view(&mut self, grad: super::compress::GradView<'_>) {
+        self.mark_dirty(&grad);
         grad.apply_to(&mut self.theta, self.lr);
         self.bump();
     }
@@ -137,6 +559,7 @@ impl ParamStore {
     /// async policy (`factor = min(1, c/‖g‖)`, DESIGN.md §2.10); O(nnz)
     /// for sparse arms, never densifies.
     pub fn apply_view_scaled(&mut self, grad: super::compress::GradView<'_>, factor: f32) {
+        self.mark_dirty(&grad);
         grad.apply_to(&mut self.theta, self.lr * factor);
         self.bump();
     }
@@ -146,6 +569,10 @@ impl ParamStore {
     pub fn apply_mean(&mut self, sum: &[f32], count: usize) {
         debug_assert_eq!(sum.len(), self.theta.len());
         debug_assert!(count > 0);
+        let next = self.version + 1;
+        for v in &mut self.block_versions {
+            *v = next;
+        }
         let scale = self.lr / count as f32;
         for (t, &s) in self.theta.iter_mut().zip(sum) {
             *t -= scale * s;
@@ -160,22 +587,60 @@ impl ParamStore {
         self.publish();
     }
 
-    /// Push the current θ into the published snapshot. The buffer of the
-    /// previous snapshot is recycled once the last reader drops it, so the
-    /// steady state is one memcpy and zero allocations per update.
+    /// Push the current θ into the published snapshot. Retired snapshot
+    /// buffers are recycled once the last reader drops them; because a
+    /// recycled buffer still holds the exact published contents of its
+    /// version, only blocks dirtied after that version are re-copied — a
+    /// sparse update on a 1e8-coordinate shard publishes in O(nnz), and the
+    /// steady state allocates nothing.
     pub fn publish(&mut self) {
-        let mut buf = self
-            .spare
-            .take()
-            .unwrap_or_else(|| Vec::with_capacity(self.theta.len()));
-        buf.clear();
-        buf.extend_from_slice(&self.theta);
+        // Freshest recycled buffer first: fewest stale blocks to re-copy.
+        let spare = if self.pool.is_empty() {
+            None
+        } else {
+            let mut best = 0;
+            for i in 1..self.pool.len() {
+                if self.pool[i].version > self.pool[best].version {
+                    best = i;
+                }
+            }
+            Some(self.pool.swap_remove(best))
+        };
+        let (data, block_versions) = match spare {
+            Some(mut s) => {
+                debug_assert_eq!(s.data.len(), self.theta.len());
+                for (b, &v) in self.block_versions.iter().enumerate() {
+                    if v > s.version {
+                        let r = block_range(b, self.theta.len());
+                        self.bytes_published += s.data.copy_block_from(&self.theta, r) as u64;
+                    }
+                }
+                s.block_versions.copy_from_slice(&self.block_versions);
+                (s.data, s.block_versions)
+            }
+            None => {
+                let mut data = SnapshotData::with_len(self.dtype, self.theta.len());
+                for b in 0..self.block_versions.len() {
+                    let r = block_range(b, self.theta.len());
+                    self.bytes_published += data.copy_block_from(&self.theta, r) as u64;
+                }
+                (data, self.block_versions.clone())
+            }
+        };
+        self.publishes += 1;
         let old = self.cell.swap(Arc::new(ParamSnapshot {
-            theta: buf,
+            data,
             version: self.version,
+            block_versions,
         }));
         if let Ok(snap) = Arc::try_unwrap(old) {
-            self.spare = Some(snap.theta);
+            if self.pool.len() < SPARE_POOL_CAP {
+                self.pool.push(SpareBuf {
+                    version: snap.version,
+                    data: snap.data,
+                    block_versions: snap.block_versions,
+                });
+            }
         }
     }
 }
@@ -203,7 +668,7 @@ mod tests {
         assert_eq!(ps.theta(), &[0.0, 2.0, 4.0]);
         assert_eq!(ps.version(), 1);
         // snapshot published, exactly as for dense applications
-        assert_eq!(ps.cell().load().theta, vec![0.0, 2.0, 4.0]);
+        assert_eq!(ps.cell().load().theta(), &[0.0, 2.0, 4.0]);
     }
 
     #[test]
@@ -221,7 +686,7 @@ mod tests {
         assert_eq!(cell.load().version, 0);
         ps.apply_single(&[2.0]);
         let snap = cell.load();
-        assert_eq!(snap.theta, vec![4.0]);
+        assert_eq!(snap.theta(), &[4.0]);
         assert_eq!(snap.version, 1);
     }
 
@@ -233,22 +698,48 @@ mod tests {
         ps.apply_single(&[1.0]);
         ps.apply_single(&[1.0]);
         assert_eq!(pinned.version, 0);
-        assert_eq!(pinned.theta, vec![0.0]);
+        assert_eq!(pinned.theta(), &[0.0]);
         assert_eq!(cell.load().version, 2);
-        assert_eq!(cell.load().theta, vec![-2.0]);
+        assert_eq!(cell.load().theta(), &[-2.0]);
     }
 
     #[test]
     fn publish_recycles_buffers() {
         let mut ps = ParamStore::new(vec![0.0; 64], 1.0);
         // No reader pins snapshots, so after a warm-up update every further
-        // publish reuses the recycled buffer (observable via capacity).
+        // publish reuses a recycled buffer (observable via the pool).
         ps.apply_single(&[1.0; 64]);
         for _ in 0..100 {
             ps.apply_single(&[1.0; 64]);
         }
         assert_eq!(ps.cell().load().version, 101);
-        assert!(ps.spare.is_some(), "publish should recycle the old buffer");
+        assert!(!ps.pool.is_empty(), "publish should recycle the old buffer");
+    }
+
+    #[test]
+    fn publish_recycles_buffers_under_reader_pin() {
+        // One pinned reader must not force an allocation per publish: the
+        // pool (cap 2) keeps a second buffer in rotation. Steady state is
+        // detectable as the pool staying non-empty across publishes while
+        // the pin is held.
+        let mut ps = ParamStore::new(vec![0.0; 64], 1.0);
+        let cell = ps.cell();
+        ps.apply_single(&[1.0; 64]);
+        ps.apply_single(&[1.0; 64]); // warm the pool
+        let _pinned = cell.load(); // evaluator parks on the current snapshot
+        for i in 0..100 {
+            ps.apply_single(&[1.0; 64]);
+            if i > 0 {
+                // After the first pinned publish the free snapshot and the
+                // pool rotate: every further publish finds a spare.
+                assert!(
+                    !ps.pool.is_empty(),
+                    "pinned reader degraded publish to allocation-per-update (i={i})"
+                );
+            }
+        }
+        assert_eq!(ps.cell().load().version, 102);
+        assert_eq!(_pinned.version, 2);
     }
 
     #[test]
@@ -259,8 +750,245 @@ mod tests {
             ps.apply_single(&[0.0, 0.0]);
         }
         let snap = cell.load();
-        assert_eq!(snap.theta, vec![1.0, 2.0]);
+        assert_eq!(snap.theta(), &[1.0, 2.0]);
         assert_eq!(snap.version, 1);
         assert_eq!(cell.version(), 1);
+    }
+
+    // -- block versioning ---------------------------------------------------
+
+    #[test]
+    fn block_geometry() {
+        assert_eq!(block_count(0), 0);
+        assert_eq!(block_count(1), 1);
+        assert_eq!(block_count(BLOCK_ELEMS), 1);
+        assert_eq!(block_count(BLOCK_ELEMS + 1), 2);
+        assert_eq!(block_range(0, 10), 0..10);
+        assert_eq!(block_range(1, BLOCK_ELEMS + 10), BLOCK_ELEMS..BLOCK_ELEMS + 10);
+    }
+
+    #[test]
+    fn sparse_update_dirties_only_its_blocks() {
+        use crate::coordinator::compress::GradView;
+        let dim = 3 * BLOCK_ELEMS;
+        let mut ps = ParamStore::new(vec![0.0; dim], 1.0);
+        // touch one coordinate in block 2 only
+        let idx = [2 * BLOCK_ELEMS as u32 + 7];
+        ps.apply_view(GradView::Sparse {
+            idx: &idx,
+            val: &[1.0],
+        });
+        let snap = ps.cell().load();
+        assert_eq!(snap.block_versions, vec![0, 0, 1]);
+        assert_eq!(snap.blocks_newer_than(0), vec![2]);
+        assert!(snap.blocks_newer_than(1).is_empty());
+        // The first publish finds no recycled buffer (one-time warm-up full
+        // copy); the second recycles the v0 buffer and copies only the
+        // dirty block.
+        assert_eq!(ps.snapshot_bytes_published(), (dim * 4) as u64);
+        drop(snap);
+        ps.apply_view(GradView::Sparse {
+            idx: &idx,
+            val: &[1.0],
+        });
+        assert_eq!(
+            ps.snapshot_bytes_published(),
+            (dim * 4 + BLOCK_ELEMS * 4) as u64,
+            "delta publish must copy only the dirty block"
+        );
+        let snap = ps.cell().load();
+        assert_eq!(snap.block_versions, vec![0, 0, 2]);
+    }
+
+    #[test]
+    fn dense_update_dirties_everything() {
+        let dim = 2 * BLOCK_ELEMS;
+        let mut ps = ParamStore::new(vec![0.0; dim], 1.0);
+        ps.apply_single(&vec![1.0; dim]);
+        let snap = ps.cell().load();
+        assert_eq!(snap.block_versions, vec![1, 1]);
+        assert_eq!(snap.blocks_newer_than(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn delta_publish_matches_master_bitwise() {
+        use crate::coordinator::compress::GradView;
+        // Interleave sparse and dense updates; every published snapshot
+        // must equal the master weights exactly.
+        let dim = 2 * BLOCK_ELEMS + 17;
+        let mut ps = ParamStore::new((0..dim).map(|i| i as f32 * 0.25).collect(), 0.01);
+        let cell = ps.cell();
+        let mut rng: u64 = 42;
+        for step in 0..50 {
+            if step % 7 == 3 {
+                ps.apply_single(&vec![0.125; dim]);
+            } else {
+                let mut idx = Vec::new();
+                let mut val = Vec::new();
+                for _ in 0..5 {
+                    rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    idx.push((rng % dim as u64) as u32);
+                    val.push(((rng >> 32) as i32 as f32) * 1e-9);
+                }
+                idx.sort_unstable();
+                idx.dedup();
+                val.truncate(idx.len());
+                ps.apply_view(GradView::Sparse {
+                    idx: &idx,
+                    val: &val,
+                });
+            }
+            let snap = cell.load();
+            assert_eq!(snap.version, ps.version());
+            assert_eq!(snap.theta(), ps.theta(), "step {step}");
+        }
+    }
+
+    // -- half-precision conversions -----------------------------------------
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.1035156e-5] {
+            let h = f32_to_f16_bits(x);
+            assert_eq!(f16_bits_to_f32(h), x, "x={x}");
+        }
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(
+            f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)),
+            f32::NEG_INFINITY
+        );
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // overflow saturates to Inf
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        // subnormal range survives
+        let tiny = 5.9604645e-8; // smallest f16 subnormal
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; the
+        // even mantissa (1.0) wins.
+        let halfway = f32::from_bits(0x3f80_1000);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(halfway)), 1.0);
+        // 1 + 3·2^-11 is halfway with an odd low bit: rounds up.
+        let halfway_odd = f32::from_bits(0x3f80_3000);
+        assert_eq!(
+            f32_to_f16_bits(halfway_odd),
+            f32_to_f16_bits(f32::from_bits(0x3f80_4000))
+        );
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_rounding() {
+        for &x in &[0.0f32, -0.0, 1.0, -2.5, 3.0e38, 1.18e-38] {
+            let b = f32_to_bf16_bits(x);
+            let y = bf16_bits_to_f32(b);
+            if x == 0.0 {
+                assert_eq!(y, x);
+            } else {
+                assert!((y - x).abs() / x.abs() < 1.0 / 128.0, "x={x} y={y}");
+            }
+        }
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)), f32::INFINITY);
+        // round-to-nearest-even at the 8-bit mantissa boundary
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::from_bits(0x3f80_8000))), 1.0);
+        // near-max f32 overflows to Inf rather than wrapping
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::MAX)), f32::INFINITY);
+    }
+
+    #[test]
+    fn half_precision_relative_error_bound() {
+        // Property: for normal-range values the conversion error is bounded
+        // by the precision of the target mantissa — 2^-11 for f16 (10+1
+        // bits), 2^-8 for bf16 (7+1 bits). This is the documented eval-
+        // divergence bound from DESIGN.md §2.12.
+        let mut rng: u64 = 0x9e3779b97f4a7c15;
+        for _ in 0..10_000 {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // uniform in ±[2^-10, 2^10): comfortably inside both formats'
+            // normal ranges
+            let mant = ((rng >> 40) as f32 / (1u64 << 24) as f32) + 1.0; // [1,2)
+            let e = ((rng >> 8) % 21) as i32 - 10;
+            let sign = if rng & 1 == 0 { 1.0 } else { -1.0 };
+            let x = sign * mant * (e as f32).exp2();
+            let f16_err = (f16_bits_to_f32(f32_to_f16_bits(x)) - x).abs() / x.abs();
+            assert!(f16_err <= 1.0 / 2048.0, "f16 err {f16_err} at {x}");
+            let bf_err = (bf16_bits_to_f32(f32_to_bf16_bits(x)) - x).abs() / x.abs();
+            assert!(bf_err <= 1.0 / 256.0, "bf16 err {bf_err} at {x}");
+        }
+    }
+
+    #[test]
+    fn f16_store_publishes_half_precision_deltas() {
+        use crate::coordinator::compress::GradView;
+        let dim = BLOCK_ELEMS + 5;
+        let init: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
+        let mut ps = ParamStore::with_dtype(init.clone(), 0.1, ParamDtype::F16);
+        let cell = ps.cell();
+        // version 0 snapshot is already f16
+        let snap0 = cell.load();
+        assert_eq!(snap0.dtype(), ParamDtype::F16);
+        let mut got = vec![0.0f32; dim];
+        snap0.copy_to(&mut got);
+        for (g, x) in got.iter().zip(&init) {
+            assert_eq!(*g, f16_bits_to_f32(f32_to_f16_bits(*x)));
+        }
+        // sparse update republishes only one block, and the snapshot equals
+        // a from-scratch conversion of the master weights (unchanged blocks
+        // are bitwise-stable because the conversion is deterministic)
+        ps.apply_view(GradView::Sparse {
+            idx: &[3],
+            val: &[1.0],
+        });
+        let snap1 = cell.load();
+        snap1.copy_to(&mut got);
+        for (i, (g, x)) in got.iter().zip(ps.theta()).enumerate() {
+            assert_eq!(*g, f16_bits_to_f32(f32_to_f16_bits(*x)), "coord {i}");
+        }
+        assert_eq!(snap1.block_versions, vec![1, 0]);
+        // bytes: one-time warm-up full copy at 2 B/coord...
+        assert_eq!(ps.snapshot_bytes_published(), (dim * 2) as u64);
+        drop(snap0);
+        drop(snap1);
+        // ...then deltas copy one block at 2 B/coord
+        ps.apply_view(GradView::Sparse {
+            idx: &[7],
+            val: &[1.0],
+        });
+        assert_eq!(
+            ps.snapshot_bytes_published(),
+            (dim * 2 + BLOCK_ELEMS * 2) as u64
+        );
+    }
+
+    #[test]
+    fn decode_block_roundtrips_wire_bytes() {
+        let theta: Vec<f32> = (0..100).map(|i| (i as f32) * 0.37 - 18.0).collect();
+        for dtype in [ParamDtype::F32, ParamDtype::F16, ParamDtype::Bf16] {
+            let data = SnapshotData::from_theta(dtype, &theta);
+            let mut wire = Vec::new();
+            data.extend_wire_bytes(20..60, &mut wire);
+            assert_eq!(wire.len(), 40 * dtype.elem_bytes());
+            let mut out = vec![0.0f32; 40];
+            decode_block_into(dtype, &wire, &mut out);
+            let mut want = vec![0.0f32; 40];
+            data.copy_to_f32(20..60, &mut want);
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn dtype_parse_and_tags() {
+        assert_eq!(ParamDtype::parse("f32"), Some(ParamDtype::F32));
+        assert_eq!(ParamDtype::parse("f16"), Some(ParamDtype::F16));
+        assert_eq!(ParamDtype::parse("bf16"), Some(ParamDtype::Bf16));
+        assert_eq!(ParamDtype::parse("f64"), None);
+        for d in [ParamDtype::F32, ParamDtype::F16, ParamDtype::Bf16] {
+            assert_eq!(ParamDtype::from_tag(d.tag()), Some(d));
+            assert_eq!(ParamDtype::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(ParamDtype::from_tag(9), None);
     }
 }

@@ -29,7 +29,7 @@ use super::buffer::AggregateMode;
 use super::clock::Clock;
 use super::compress::ShardGrad;
 use super::metrics::RunMetrics;
-use super::params::{ParamStore, SnapshotCell};
+use super::params::{ParamDtype, ParamStore, SnapshotCell};
 use super::policy::{Aggregator, Outcome, Policy};
 use super::shard::ShardLayout;
 use crate::log_debug;
@@ -56,6 +56,11 @@ pub struct ShardStatus {
     pub live: AtomicU64,
     /// Membership transitions applied by this shard.
     pub epoch: AtomicU64,
+    /// Snapshots published into this shard's cell.
+    pub snap_publishes: AtomicU64,
+    /// Bytes those publishes copied into the snapshot pool (dirty blocks
+    /// only — the big-model memory-path meter, DESIGN.md §2.12).
+    pub snap_bytes: AtomicU64,
 }
 
 /// Staleness histogram bucket count: log2 buckets 0, 1, 2–3, 4–7, 8–15,
@@ -243,6 +248,11 @@ pub struct ServerConfig {
     pub policy: Policy,
     pub workers: usize,
     pub lr: f32,
+    /// Storage precision of *published snapshots* (master weights and the
+    /// update path stay f32). [`ParamDtype::F32`] — the default — keeps
+    /// every existing path bitwise; the half formats halve snapshot memory
+    /// and refresh bytes for big models (DESIGN.md §2.12).
+    pub dtype: ParamDtype,
     /// Threshold cap; defaults to the worker count. Under `elastic` the
     /// effective cap additionally tracks live membership.
     pub k_max: Option<usize>,
@@ -300,6 +310,11 @@ pub struct ShardReport {
     pub membership: crate::util::stats::Series,
     /// Membership transitions this shard applied.
     pub membership_epochs: u64,
+    /// Snapshots this shard published into its cell.
+    pub publishes: u64,
+    /// Bytes those publishes copied into the snapshot pool (dirty blocks
+    /// only — full dim × elem bytes would be the dense-copy cost).
+    pub snapshot_bytes_published: u64,
 }
 
 /// The merged run-level report across all shards.
@@ -321,6 +336,10 @@ pub struct ServerReport {
     pub version_trajectory: crate::util::stats::Series,
     pub membership: crate::util::stats::Series,
     pub membership_epochs: u64,
+    /// Snapshot publishes summed across all shards.
+    pub publishes: u64,
+    /// Snapshot-pool bytes copied by publishes, summed across all shards.
+    pub snapshot_bytes_published: u64,
 }
 
 impl ServerReport {
@@ -340,6 +359,8 @@ impl ServerReport {
         m.version_trajectory = self.version_trajectory.clone();
         m.membership = self.membership.clone();
         m.membership_epochs = self.membership_epochs;
+        m.snapshot_publishes = self.publishes;
+        m.snapshot_bytes_published = self.snapshot_bytes_published;
         m.final_params = self.final_params.clone();
     }
 }
@@ -360,6 +381,10 @@ pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> Ser
     }
     let per_shard_updates = reports.iter().map(|r| r.updates_total).collect();
     let bytes_received = reports.iter().map(|r| r.bytes_received).sum();
+    // Snapshot-pool traffic is physical per-shard work (unlike the logical
+    // counters, which are lockstep-identical): sum it.
+    let publishes = reports.iter().map(|r| r.publishes).sum();
+    let snapshot_bytes_published = reports.iter().map(|r| r.snapshot_bytes_published).sum();
     let first = &reports[0];
     ServerReport {
         updates_total: first.updates_total,
@@ -375,6 +400,8 @@ pub fn merge_reports(layout: &ShardLayout, mut reports: Vec<ShardReport>) -> Ser
         membership_epochs: first.membership_epochs,
         per_shard_updates,
         bytes_received,
+        publishes,
+        snapshot_bytes_published,
         final_params,
     }
 }
@@ -399,7 +426,12 @@ pub fn run_shard(
     clock: &dyn Clock,
 ) -> ShardReport {
     debug_assert_eq!(init.len(), range.len());
-    let mut store = ParamStore::with_cell(init, cfg.lr, cell);
+    let mut store = ParamStore::with_cell_dtype(init, cfg.lr, cell, cfg.dtype);
+    // Publish-instant bookkeeping (tracing only): counters as of the last
+    // event, so each published snapshot yields one instant with the bytes
+    // that publish actually copied.
+    let mut last_publishes = store.publishes();
+    let mut last_pub_bytes = store.snapshot_bytes_published();
     let mut agg = Aggregator::new(cfg.policy.clone(), range.len(), cfg.workers)
         .with_aggregate(cfg.aggregate.clone());
     if let Some(k) = cfg.k_max {
@@ -703,6 +735,25 @@ pub fn run_shard(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
+        // One instant per snapshot publish, stamped after the event that
+        // produced it (aux = pool bytes that publish copied — dirty blocks
+        // only on the delta path). Tracing off: two integer loads.
+        if let Some(tr) = &cfg.trace {
+            let pubs = store.publishes();
+            if pubs != last_publishes {
+                let bytes = store.snapshot_bytes_published();
+                tr.instant(
+                    Stage::Publish,
+                    0,
+                    shard as u32,
+                    clock.now().as_nanos() as u64,
+                    store.version(),
+                    bytes - last_pub_bytes,
+                );
+                last_publishes = pubs;
+                last_pub_bytes = bytes;
+            }
+        }
         if let Some(board) = &cfg.status {
             let st = &board.shards[shard];
             st.k.store(agg.current_k() as u64, Ordering::Relaxed);
@@ -710,6 +761,9 @@ pub fn run_shard(
             st.version.store(store.version(), Ordering::Relaxed);
             st.live.store(agg.live() as u64, Ordering::Relaxed);
             st.epoch.store(agg.membership_epoch(), Ordering::Relaxed);
+            st.snap_publishes.store(store.publishes(), Ordering::Relaxed);
+            st.snap_bytes
+                .store(store.snapshot_bytes_published(), Ordering::Relaxed);
         }
         if stop.load(Ordering::Relaxed) && !released_on_stop {
             // Release barrier-blocked workers so they can see the stop flag.
@@ -742,6 +796,18 @@ pub fn run_shard(
     // Apply whatever is still buffered so no gradient is silently dropped.
     agg.drain(&mut store);
     store.publish();
+    if let Some(tr) = &cfg.trace {
+        if store.publishes() != last_publishes {
+            tr.instant(
+                Stage::Publish,
+                0,
+                shard as u32,
+                clock.now().as_nanos() as u64,
+                store.version(),
+                store.snapshot_bytes_published() - last_pub_bytes,
+            );
+        }
+    }
     v_traj.push(clock.now().as_secs_f64(), store.version() as f64);
 
     let stats = &agg.stats;
@@ -763,6 +829,9 @@ pub fn run_shard(
         version_trajectory: v_traj,
         membership,
         membership_epochs: agg.membership_epoch(),
+        publishes: store.publishes(),
+        snapshot_bytes_published: store.snapshot_bytes_published(),
+        // Master weights: always f32, whatever the snapshot dtype.
         final_params: store.theta().to_vec(),
     }
 }
@@ -817,6 +886,7 @@ mod tests {
             policy,
             workers,
             lr: 0.1,
+            dtype: ParamDtype::F32,
             k_max: None,
             trace_interval: Duration::from_millis(1),
             elastic,
@@ -886,7 +956,7 @@ mod tests {
         // The cell carries the final parameters without any reply copies.
         let snap = cell.load();
         assert_eq!(snap.version, 3);
-        assert!((snap.theta[0] + 0.3).abs() < 1e-6);
+        assert!((snap.theta()[0] + 0.3).abs() < 1e-6);
     }
 
     #[test]
@@ -901,7 +971,7 @@ mod tests {
             assert_eq!(r[0], Reply::Updated { shard: 0, version: 1 });
         }
         // mean grad = 1 → θ = -0.1, readable via the snapshot cell
-        assert!((cell.load().theta[0] + 0.1).abs() < 1e-6);
+        assert!((cell.load().theta()[0] + 0.1).abs() < 1e-6);
     }
 
     #[test]
@@ -989,8 +1059,8 @@ mod tests {
         assert_eq!(report.bytes_received, 8);
         assert!(matches!(replies[0][0], Reply::Updated { .. }));
         let snap = cell.load();
-        assert_eq!(snap.theta[0], 0.0);
-        assert!((snap.theta[1] + 0.2).abs() < 1e-6); // θ₁ −= 0.1·2.0
+        assert_eq!(snap.theta()[0], 0.0);
+        assert!((snap.theta()[1] + 0.2).abs() < 1e-6); // θ₁ −= 0.1·2.0
     }
 
     #[test]
@@ -1003,6 +1073,7 @@ mod tests {
             policy: Policy::Sync,
             workers: 2,
             lr: 0.1,
+            dtype: ParamDtype::F32,
             k_max: None,
             trace_interval: Duration::from_millis(1),
             elastic: false,
@@ -1067,7 +1138,7 @@ mod tests {
         // The rejected submitter still got a reply so it never hangs.
         assert_eq!(replies[0].len(), 2);
         assert_eq!(replies[0][0], Reply::Unchanged { shard: 0 });
-        assert!((cell.load().theta[0] + 0.1).abs() < 1e-6);
+        assert!((cell.load().theta()[0] + 0.1).abs() < 1e-6);
     }
 
     #[test]
@@ -1094,8 +1165,8 @@ mod tests {
         );
         assert_eq!(report.flushes, 1);
         let snap = cell.load();
-        assert!((snap.theta[0] + 0.1).abs() < 1e-6, "got {}", snap.theta[0]);
-        assert!((snap.theta[1] + 0.1).abs() < 1e-6);
+        assert!((snap.theta()[0] + 0.1).abs() < 1e-6, "got {}", snap.theta()[0]);
+        assert!((snap.theta()[1] + 0.1).abs() < 1e-6);
     }
 
     #[test]
@@ -1113,6 +1184,7 @@ mod tests {
             policy: Policy::Async,
             workers: 2,
             lr: 0.1,
+            dtype: ParamDtype::F32,
             k_max: None,
             trace_interval: Duration::from_millis(1),
             elastic: false,
@@ -1178,6 +1250,7 @@ mod tests {
             policy: Policy::Sync,
             workers: 2,
             lr: 0.1,
+            dtype: ParamDtype::F32,
             k_max: None,
             trace_interval: Duration::from_millis(1),
             elastic: false,
@@ -1245,6 +1318,8 @@ mod tests {
             version_trajectory: crate::util::stats::Series::new(),
             membership: crate::util::stats::Series::new(),
             membership_epochs: 0,
+            publishes: 7,
+            snapshot_bytes_published: 16,
         };
         // Deliberately out of order: merge must sort by shard id.
         let merged = merge_reports(
@@ -1256,6 +1331,9 @@ mod tests {
         assert_eq!(merged.per_shard_updates, vec![7, 7]);
         // bytes-on-wire sum across shards, not shard 0 only
         assert_eq!(merged.bytes_received, 80);
+        // snapshot-pool traffic sums across shards too
+        assert_eq!(merged.publishes, 14);
+        assert_eq!(merged.snapshot_bytes_published, 32);
         // rejection/clip counters are shard-0 canonical like the rest
         assert_eq!(merged.rejected, 1);
         assert_eq!(merged.clipped, 2);
@@ -1282,7 +1360,7 @@ mod tests {
         assert_eq!(replies[0], vec![Reply::Updated { shard: 0, version: 1 }]);
         assert_eq!(replies[1], vec![Reply::Updated { shard: 0, version: 1 }]);
         assert!(replies[2].is_empty(), "the departed worker gets no reply");
-        assert!((cell.load().theta[0] + 0.1).abs() < 1e-6);
+        assert!((cell.load().theta()[0] + 0.1).abs() < 1e-6);
         // Membership telemetry recorded the transition.
         assert_eq!(report.membership_epochs, 1);
         assert_eq!(report.membership.v, vec![2.0]);

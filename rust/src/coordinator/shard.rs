@@ -94,7 +94,7 @@ pub fn assemble_params(
     let mut min_version = u64::MAX;
     for (cell, r) in cells.iter().zip(layout.ranges()) {
         let snap = cell.load();
-        out[r].copy_from_slice(&snap.theta);
+        snap.copy_to(&mut out[r]);
         min_version = min_version.min(snap.version);
     }
     min_version

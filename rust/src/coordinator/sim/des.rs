@@ -1044,12 +1044,17 @@ impl<'a> Simulation<'a> {
             workers,
             shards,
             layout,
+            metrics,
             ..
         } = self;
         let wk = &mut workers[w];
         for (s, r) in layout.ranges().enumerate() {
             if wk.needs_refresh[s] {
                 let store = &shards[s].store;
+                // Logical pull volume (4 B × slice), matching the threaded
+                // in-process accounting — deterministic, so it participates
+                // in the bitwise RunMetrics reproducibility guarantee.
+                metrics.refresh_bytes += (r.len() * 4) as u64;
                 wk.params[r].copy_from_slice(store.theta());
                 wk.versions[s] = store.version();
                 wk.needs_refresh[s] = false;

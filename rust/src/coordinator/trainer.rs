@@ -8,6 +8,7 @@ use super::clock::{Clock, RealClock};
 use super::compress::WireFormat;
 use super::delay::DelayModel;
 use super::metrics::{MetricsStream, RunMetrics, SeriesId};
+use super::params::ParamDtype;
 use super::policy::Policy;
 use super::server::{merge_reports, run_shard, Reply, ServerConfig, ShardEvent, StatusBoard};
 use super::shard::{assemble_params, shard_cells, ShardLayout};
@@ -138,6 +139,12 @@ pub struct TrainConfig {
     /// this ring (DESIGN.md §2.11). `None` (the default) keeps the hot
     /// path free of clock reads and reproduces the untraced run bitwise.
     pub trace: Option<Arc<crate::util::trace::TraceRing>>,
+    /// Snapshot storage precision (`--param-dtype f32|f16|bf16`): master
+    /// weights and the update path stay f32; published snapshots (and
+    /// their wire payloads) use this dtype. `F32` — the default —
+    /// reproduces every existing path bitwise; the half formats halve
+    /// big-model snapshot memory and refresh traffic (DESIGN.md §2.12).
+    pub param_dtype: ParamDtype,
 }
 
 impl TrainConfig {
@@ -161,6 +168,7 @@ impl TrainConfig {
             aggregate: AggregateMode::Mean,
             partition: crate::data::Partition::Iid,
             trace: None,
+            param_dtype: ParamDtype::F32,
         }
     }
 }
@@ -186,6 +194,44 @@ pub(crate) fn validate_config(cfg: &TrainConfig) -> anyhow::Result<()> {
          trim across",
         cfg.aggregate
     );
+    Ok(())
+}
+
+/// Startup guard for the TCP paths (serve and join): a gradient submission
+/// travels as ONE frame per shard, so a geometry whose worst-case
+/// `SubmitGrad` payload exceeds the frame limit would not fail until the
+/// first gradient poisons the stream mid-run. Caught here at config time
+/// instead, with the fix spelled out. Snapshot refreshes no longer
+/// constrain the geometry — oversized slices are chunked into
+/// `SnapshotDelta` frames (DESIGN.md §2.12) — so only the gradient plane
+/// binds. In-process and simulated runs never hit the framing layer and
+/// are not subject to this check.
+pub fn validate_net_geometry(dim: usize, shards: usize, wire: &WireFormat) -> anyhow::Result<()> {
+    use crate::transport::frame::MAX_PAYLOAD;
+    let layout = ShardLayout::new(dim, shards);
+    let max_len = layout.ranges().map(|r| r.len()).max().unwrap_or(0);
+    // Worst-case encoded SubmitGrad payload (25 B submit header + grad
+    // arm); for the sparse arms the worst case is every kept coordinate
+    // landing in the largest shard.
+    let (bytes, per_coord) = match wire {
+        WireFormat::Dense => (30 + 4 * max_len, 4usize),
+        WireFormat::Int8 => (34 + max_len, 1),
+        WireFormat::TopK(k) => (34 + 8 * k.resolve(dim).min(max_len), 8),
+        WireFormat::TopKInt8(k) => (38 + 5 * k.resolve(dim).min(max_len), 5),
+    };
+    if bytes > MAX_PAYLOAD {
+        // Largest shard that fits this wire format, with header headroom;
+        // splitting to that size always fits (sparse worst cases shrink
+        // with the shard).
+        let fit_len = (MAX_PAYLOAD - 64) / per_coord;
+        let need = (dim + fit_len - 1) / fit_len;
+        anyhow::bail!(
+            "wire format `{wire}` needs up to {bytes} B for one gradient frame of the \
+             largest shard ({max_len} of {dim} coordinates over {shards} shard(s)), \
+             above the {MAX_PAYLOAD} B frame limit; run both serve and join with \
+             --shards {need} (or more), or pick a sparser --wire"
+        );
+    }
     Ok(())
 }
 
@@ -261,6 +307,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         policy: cfg.policy.clone(),
         workers: cfg.workers,
         lr: cfg.lr,
+        dtype: cfg.param_dtype,
         k_max: cfg.k_max,
         trace_interval: Duration::from_millis(200),
         elastic: cfg.elastic,
@@ -390,10 +437,12 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
         stop.store(true, Ordering::Relaxed);
         let mut bytes_sent = 0u64;
         let mut submissions = 0u64;
+        let mut refresh_bytes = 0u64;
         for h in worker_handles {
             if let Ok(r) = h.join() {
                 bytes_sent += r.bytes_sent;
                 submissions += r.grads_sent;
+                refresh_bytes += r.refresh_bytes;
             }
         }
         let reports = shard_handles
@@ -402,6 +451,7 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
             .collect::<Vec<_>>();
         merge_reports(&layout, reports).fill(&mut metrics);
         metrics.bytes_sent = bytes_sent;
+        metrics.refresh_bytes = refresh_bytes;
         metrics.bytes_dense_equiv = submissions * inputs.init_params.len() as u64 * 4;
         // Final sample on the drained parameters.
         eval_loop.sample(&mut metrics, &mut params_buf)?;
@@ -409,6 +459,8 @@ pub fn train(cfg: &TrainConfig, inputs: &RunInputs) -> anyhow::Result<RunMetrics
     });
     result?;
     metrics.wall_time = clock.now().as_secs_f64();
+    // Machine-level gauge, excluded from RunMetrics equality.
+    metrics.peak_rss_bytes = super::metrics::peak_rss_bytes();
     if metrics.bytes_sent > 0 {
         let (t, v) = (metrics.wall_time, metrics.wire_compression());
         metrics.record(SeriesId::CompressionRatio, t, v);
@@ -469,6 +521,7 @@ pub fn serve_with(
     kind: crate::transport::FrontendKind,
 ) -> anyhow::Result<RunMetrics> {
     validate_config(cfg)?;
+    validate_net_geometry(inputs.init_params.len(), cfg.shards, &cfg.wire)?;
     let clock_owned = Arc::new(RealClock::start());
     let clock: &dyn Clock = clock_owned.as_ref();
     // Anchor the trace ring and the logger on this run's clock, exactly as
@@ -513,6 +566,7 @@ pub fn serve_with(
         policy: cfg.policy.clone(),
         workers: cfg.workers,
         lr: cfg.lr,
+        dtype: cfg.param_dtype,
         k_max: cfg.k_max,
         trace_interval: Duration::from_millis(200),
         elastic: cfg.elastic,
@@ -633,6 +687,10 @@ pub fn serve_with(
     });
     result?;
     metrics.wall_time = clock.now().as_secs_f64();
+    // Machine-level gauge, excluded from RunMetrics equality. Workers'
+    // refresh bytes live in their own processes; `refresh_bytes` stays 0
+    // here (each `join` process reports its own pull volume).
+    metrics.peak_rss_bytes = super::metrics::peak_rss_bytes();
     if metrics.bytes_sent > 0 {
         let (t, v) = (metrics.wall_time, metrics.wire_compression());
         metrics.record(SeriesId::CompressionRatio, t, v);
@@ -702,6 +760,7 @@ pub fn join_remote(
         engine.param_count(),
         info.dim
     );
+    validate_net_geometry(info.dim, info.shards, &wire)?;
     let source = batch_source(info.worker);
     log_info!(
         "trainer",
@@ -765,10 +824,11 @@ pub fn join_remote(
     let _ = watchdog.join();
     log_info!(
         "trainer",
-        "worker {} done: {} grads, {} refreshes, {} B sent (frame granularity)",
+        "worker {} done: {} grads, {} refreshes ({} B pulled), {} B sent (frame granularity)",
         info.worker,
         report.grads_sent,
         report.refreshes,
+        report.refresh_bytes,
         report.bytes_sent
     );
     Ok(report)
@@ -1042,6 +1102,38 @@ mod tests {
         assert!(m.final_params.iter().all(|v| v.is_finite()));
         let last_acc = *m.test_acc.v.last().unwrap();
         assert!(last_acc > 20.0, "trimmed-mean run did not learn: acc {last_acc}");
+    }
+
+    #[test]
+    fn net_geometry_guard_catches_oversized_gradient_frames() {
+        use crate::coordinator::compress::WireFormat;
+        // 1e8 dense f32 coordinates on one shard: ~400 MB per gradient
+        // frame, far past the 64 MiB limit. The error must name the limit
+        // and the --shards workaround.
+        let dim = 100_000_000;
+        let err = validate_net_geometry(dim, 1, &WireFormat::Dense).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--shards"), "no workaround in: {msg}");
+        assert!(
+            msg.contains(&crate::transport::frame::MAX_PAYLOAD.to_string()),
+            "limit not named in: {msg}"
+        );
+        // Enough shards (or a 1-byte/coordinate format with a few) fits.
+        assert!(validate_net_geometry(dim, 8, &WireFormat::Dense).is_ok());
+        assert!(validate_net_geometry(dim, 2, &WireFormat::Int8).is_ok());
+        // Sparse formats are bounded by k, not dim.
+        let topk = WireFormat::parse("topk:100000").unwrap();
+        assert!(validate_net_geometry(dim, 1, &topk).is_ok());
+        // ...unless k itself blows the frame; splitting shards still fixes
+        // it because the per-shard worst case shrinks with the shard.
+        let huge_k = WireFormat::parse("topk:20000000").unwrap();
+        assert!(validate_net_geometry(dim, 1, &huge_k).is_err());
+        assert!(validate_net_geometry(dim, 16, &huge_k).is_ok());
+        // Small models are untouched on every format.
+        for w in ["dense", "int8", "topk:0.01", "topk+int8:0.01"] {
+            let w = WireFormat::parse(w).unwrap();
+            assert!(validate_net_geometry(52_138, 1, &w).is_ok());
+        }
     }
 
     #[test]

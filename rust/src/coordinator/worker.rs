@@ -117,6 +117,10 @@ pub struct WorkerReport {
     /// Bytes-on-wire this worker's submissions carried (summed over the
     /// per-shard payloads of every submission).
     pub bytes_sent: u64,
+    /// Bytes of parameter state pulled via refresh: logical (4 B × slice
+    /// length per refresh) in process, actual snapshot-response payload
+    /// bytes over TCP (where deltas ship only dirty blocks).
+    pub refresh_bytes: u64,
 }
 
 /// Run one worker until `stop` is set (or its `max_grads` budget is
@@ -337,6 +341,7 @@ pub fn run_worker(
                     Ok(version) => {
                         versions[s] = version;
                         report.refreshes += 1;
+                        report.refresh_bytes += (layout.range(s).len() * 4) as u64;
                         *flag = false;
                     }
                     Err(TransportError::Closed(_)) => break 'outer,
@@ -352,6 +357,9 @@ pub fn run_worker(
     // the in-process path keeps the logical payload byte counts above.
     if let Some((sent, _received)) = transport.wire_counters() {
         report.bytes_sent = sent;
+    }
+    if let Some(bytes) = transport.refresh_wire_bytes() {
+        report.refresh_bytes = bytes;
     }
     report
 }

@@ -7,7 +7,7 @@
 //! restores the original numbers; the *relative* comparison (identical init,
 //! identical budget across algorithms) is what the tables measure.
 
-use crate::coordinator::{AggregateMode, DelayModel, WireFormat};
+use crate::coordinator::{AggregateMode, DelayModel, ParamDtype, WireFormat};
 use crate::data::Partition;
 
 /// Virtual-time simulation parameters (`--sim`): run on the deterministic
@@ -135,6 +135,15 @@ pub struct ExpConfig {
     /// reproduces the historical contiguous sharding bitwise,
     /// `dirichlet:<alpha>` skews class proportions per worker.
     pub partition: Partition,
+    /// Storage precision of published parameter snapshots
+    /// (`--param-dtype f32|f16|bf16`); master weights stay f32 and `f32`
+    /// reproduces the historical pipeline bitwise (DESIGN.md §2.12).
+    pub param_dtype: ParamDtype,
+    /// Override of the native MLP's hidden width (`--hidden H` ⇒ dims
+    /// [20, H, H, 10]); `None` keeps the paper's [20, 64, 64, 10]. Native
+    /// engine only — big-model memory/geometry testing (DESIGN.md §2.12),
+    /// e.g. H=4096 puts one unsharded slice just past the 64 MiB frame cap.
+    pub hidden: Option<usize>,
 }
 
 /// The paper's K cap (25 workers) is reached after step×(25−1) arrivals; at
@@ -200,6 +209,8 @@ impl ExpConfig {
             sim: None,
             aggregate: AggregateMode::Mean,
             partition: Partition::Iid,
+            param_dtype: ParamDtype::F32,
+            hidden: None,
         }
     }
 

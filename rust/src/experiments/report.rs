@@ -55,6 +55,16 @@ COMMON OPTIONS:
   --compress FMT                 gradient wire format: dense | topk:<k|frac> | int8
                                  | topk+int8:<k|frac>  (default dense; topk uses
                                  error feedback — see coordinator::compress)
+  --param-dtype f32|f16|bf16     storage precision of published parameter
+                                 snapshots (default f32 = bitwise-identical
+                                 to the historical pipeline; f16/bf16 halve
+                                 snapshot + refresh-wire memory — master
+                                 weights stay f32, DESIGN.md §2.12)
+  --hidden N                     native MLP hidden width: dims [20, N, N, 10]
+                                 (default 64 = the paper's model; big-model
+                                 geometry testing — N=4096 puts one unsharded
+                                 slice past the 64 MiB frame cap, exercising
+                                 chunked delta refresh. join must repeat it)
   --sim                          run on the deterministic virtual-time simulator
                                  (--secs becomes virtual seconds; bitwise-reproducible)
   --fault-spec SPEC              inject faults, e.g. \"crash:3@5,stall:0@1..2,slow:*@2..4*8\"
@@ -164,6 +174,17 @@ fn config_from(args: &Args, default_dataset: DatasetKind) -> anyhow::Result<ExpC
     }
     if let Some(p) = args.get("partition") {
         cfg.partition = crate::data::Partition::parse(p)?;
+    }
+    if let Some(d) = args.get("param-dtype") {
+        cfg.param_dtype = crate::coordinator::ParamDtype::parse(d)
+            .ok_or_else(|| anyhow::anyhow!("bad --param-dtype `{d}` (expected f32|f16|bf16)"))?;
+    }
+    if let Some(h) = args.get("hidden") {
+        let h: usize = h
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --hidden `{h}` (expected a positive width)"))?;
+        anyhow::ensure!(h > 0, "--hidden must be positive");
+        cfg.hidden = Some(h);
     }
     if args.flag("sim") || args.get("fault-spec").is_some() || args.get("grad-ms").is_some() {
         // Validate the fault spec at parse time so typos fail fast.
@@ -296,6 +317,7 @@ fn train_config_from(args: &Args, cfg: &ExpConfig) -> anyhow::Result<crate::coor
         aggregate: cfg.aggregate.clone(),
         partition: cfg.partition.clone(),
         trace: trace_ring_from(args)?,
+        param_dtype: cfg.param_dtype,
     })
 }
 
@@ -360,6 +382,7 @@ fn net_options(args: &Args) -> crate::transport::NetOptions {
             args.u64_or("connect-timeout-ms", 10_000),
         ),
         reconnect_attempts: args.u64_or("reconnect-attempts", 2) as u32,
+        ..crate::transport::NetOptions::default()
     }
 }
 

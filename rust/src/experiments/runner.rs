@@ -60,6 +60,10 @@ impl Workload {
         let model = cfg.dataset.model();
         let (worker_engine, eval_engine, init) = match &cfg.engine {
             EngineKind::Xla { variant } => {
+                anyhow::ensure!(
+                    cfg.hidden.is_none(),
+                    "--hidden reshapes the native MLP; XLA artifacts have fixed shapes"
+                );
                 let dir = crate::runtime::default_artifact_dir();
                 let manifest = crate::runtime::Manifest::load(&dir)?;
                 let entry = manifest.model(model)?;
@@ -72,7 +76,10 @@ impl Workload {
                     cfg.dataset == DatasetKind::Random,
                     "native engine only implements the MLP (random dataset)"
                 );
-                let dims: Vec<usize> = MLP_DIMS.to_vec();
+                let dims: Vec<usize> = match cfg.hidden {
+                    Some(h) => vec![MLP_DIMS[0], h, h, MLP_DIMS[3]],
+                    None => MLP_DIMS.to_vec(),
+                };
                 let init = MlpEngine::init_params(&dims, &mut rng);
                 let batch = cfg.batch;
                 let dims_w = dims.clone();
@@ -262,6 +269,7 @@ pub fn run_comparison_algos(cfg: &ExpConfig, algos: &[Algo]) -> anyhow::Result<C
                 aggregate: cfg.aggregate.clone(),
                 partition: cfg.partition.clone(),
                 trace: None,
+                param_dtype: cfg.param_dtype,
             };
             let inputs = RunInputs {
                 worker_engine: Arc::clone(&workload.worker_engine),

@@ -77,6 +77,7 @@ pub fn measure_conn_throughput(
         hb_timeout: Duration::from_secs(300),
         connect_timeout: Duration::from_secs(5),
         reconnect_attempts: 0,
+        ..NetOptions::default()
     };
     let frontend = Frontend::start(
         kind,
@@ -89,6 +90,7 @@ pub fn measure_conn_throughput(
         Arc::clone(&stop),
         net,
         false,
+        None,
         None,
     )?;
     let notify = frontend.reply_notifier();
@@ -201,7 +203,8 @@ fn client_run(
         shards: 0,
         wire: "dense".to_string(),
     }
-    .encode_into(&mut msg_buf);
+    .encode_into(&mut msg_buf)
+    .map_err(|e| other_err(format!("loadgen encode: {e}")))?;
     frame_buf.clear();
     encode_frame_into(&msg_buf, &mut frame_buf);
     stream.write_all(&frame_buf)?;
@@ -222,7 +225,8 @@ fn client_run(
                       frame_buf: &mut Vec<u8>|
      -> std::io::Result<Instant> {
         seq += 1;
-        encode_submit_into(0, seq, 0, 0.0, &grad, 0..dim, msg_buf);
+        encode_submit_into(0, seq, 0, 0.0, &grad, 0..dim, msg_buf)
+            .map_err(|e| other_err(format!("loadgen encode: {e}")))?;
         frame_buf.clear();
         encode_frame_into(msg_buf, frame_buf);
         let at = Instant::now();
@@ -260,7 +264,7 @@ fn client_run(
     }
     let elapsed = start.elapsed();
     // A clean goodbye lets the frontend free the slot without logging.
-    Msg::Shutdown.encode_into(&mut msg_buf);
+    let _ = Msg::Shutdown.encode_into(&mut msg_buf);
     frame_buf.clear();
     encode_frame_into(&msg_buf, &mut frame_buf);
     let _ = stream.write_all(&frame_buf);

@@ -243,10 +243,23 @@ pub(crate) fn render_status(
             w.num(st.buffered.load(Ordering::Relaxed) as f64);
             w.key("version");
             w.num(st.version.load(Ordering::Relaxed) as f64);
+            // Snapshot-pool traffic: publish count and bytes copied. With
+            // delta tracking the bytes grow with *dirty* blocks per
+            // publish, not shard dim — the big-model memory gauge.
+            w.key("snap_publishes");
+            w.num(st.snap_publishes.load(Ordering::Relaxed) as f64);
+            w.key("snap_bytes");
+            w.num(st.snap_bytes.load(Ordering::Relaxed) as f64);
             w.end_object();
         }
     }
     w.end_array();
+    // Process-level memory high-water mark (0 where /proc is absent).
+    w.key("memory");
+    w.begin_object();
+    w.key("peak_rss_bytes");
+    w.num(crate::coordinator::metrics::peak_rss_bytes() as f64);
+    w.end_object();
     // Per-worker arrival/staleness gauges (shard 0's view; see
     // `WorkerStatus`). Omitted entirely when the board carries no worker
     // slots so pre-existing consumers see an unchanged document.
@@ -375,6 +388,15 @@ pub trait Transport: Send {
     fn wire_counters(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Snapshot-response payload bytes this transport consumed serving
+    /// refreshes, when it measures them. `None` (the in-process default)
+    /// keeps the caller's logical 4 B × slice-length accounting; TCP
+    /// reports actual payloads, where the delta protocol ships only dirty
+    /// blocks instead of whole slices.
+    fn refresh_wire_bytes(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// The default transport: the in-process channel protocol, verbatim.
@@ -422,7 +444,7 @@ impl Transport for InProcTransport {
 
     fn refresh(&mut self, shard: usize, out: &mut [f32]) -> Result<u64, TransportError> {
         let snap = self.endpoints.cells[shard].load();
-        out.copy_from_slice(&snap.theta);
+        snap.copy_to(out);
         Ok(snap.version)
     }
 }

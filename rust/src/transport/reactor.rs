@@ -36,7 +36,10 @@
 //! DESIGN.md §2.8.
 
 use super::frame::{encode_frame_into, FrameReader, FRAME_OVERHEAD};
-use super::msg::{encode_snapshot_slice_into, Msg, WORKER_UNASSIGNED};
+use super::msg::{
+    encode_snapshot_slice_into, snapshot_response_msgs, snapshot_serves_full, Msg,
+    WORKER_UNASSIGNED,
+};
 use super::tcp::{FrontendStats, NetOptions};
 use crate::coordinator::compress::ShardGrad;
 use crate::coordinator::params::SnapshotCell;
@@ -916,7 +919,7 @@ impl Reactor {
                     return Err(String::new()); // shards gone: run is over
                 }
             }
-            Msg::SnapshotRequest { shard, .. } => {
+            Msg::SnapshotRequest { shard, version } => {
                 let shard = shard as usize;
                 if shard >= self.layout.shards() {
                     return Err(format!(
@@ -925,14 +928,30 @@ impl Reactor {
                     ));
                 }
                 let snap = self.cells[shard].load();
-                // Frame straight out of the snapshot — no theta clone.
-                encode_snapshot_slice_into(
-                    shard as u32,
-                    snap.version,
-                    &snap.theta,
-                    &mut self.scratch,
-                );
-                self.queue_scratch(conn);
+                if snapshot_serves_full(&snap, self.net.snap_full_max) {
+                    // Legacy small-f32 reply: frame straight out of the
+                    // snapshot — no theta clone. Cannot overflow a length
+                    // field (the slice fits one ≤64 MiB frame).
+                    encode_snapshot_slice_into(
+                        shard as u32,
+                        snap.version,
+                        snap.theta(),
+                        &mut self.scratch,
+                    )
+                    .expect("full-slice reply within the frame limit");
+                    self.queue_scratch(conn);
+                } else {
+                    // Oversized or half-precision: chunked delta stream,
+                    // only the blocks newer than the worker's version.
+                    for m in snapshot_response_msgs(
+                        shard as u32,
+                        &snap,
+                        version,
+                        self.net.snap_full_max,
+                    ) {
+                        self.queue(conn, &m);
+                    }
+                }
             }
             Msg::Heartbeat { .. } => {}
             Msg::Shutdown => return Err(String::new()), // clean client exit
@@ -994,7 +1013,12 @@ impl Reactor {
 
     /// Encode `msg` and append it, framed, onto `conn`'s write queue.
     fn queue(&mut self, conn: &mut Conn, msg: &Msg) {
-        msg.encode_into(&mut self.scratch);
+        if let Err(e) = msg.encode_into(&mut self.scratch) {
+            // Server-built messages stay within the u32 length fields by
+            // construction; drop rather than corrupt the stream if not.
+            log_warn!("transport", "dropping unencodable {e}");
+            return;
+        }
         self.queue_scratch(conn);
     }
 
@@ -1281,6 +1305,7 @@ mod tests {
             hb_timeout: Duration::from_millis(400),
             connect_timeout: Duration::from_secs(3),
             reconnect_attempts: 1,
+            ..NetOptions::default()
         }
     }
 
@@ -1367,7 +1392,7 @@ mod tests {
             shards: 0,
             wire: "dense".into(),
         }
-        .encode_into(&mut msg_buf);
+        .encode_into(&mut msg_buf).unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();
         let deadline = Instant::now() + Duration::from_secs(3);
@@ -1441,6 +1466,52 @@ mod tests {
     }
 
     #[test]
+    fn reactor_oversized_slice_refreshes_via_chunked_delta() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // Same acceptance as the threaded frontend's test: a shard slice
+        // above the 64 MiB frame cap must stream as chunked SnapshotDelta
+        // frames through the reactor's non-blocking write queue and
+        // reconstruct bitwise.
+        let dim = crate::transport::frame::MAX_PAYLOAD / 4 + 1;
+        let theta: Vec<f32> = (0..dim as u32)
+            .map(|i| f32::from_bits(i.wrapping_mul(0x9E37_79B9) >> 1))
+            .collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("{}", listener.local_addr().unwrap());
+        let (grad_tx, _grad_rx) = mpsc::channel();
+        let (_reply_tx, reply_rx) = mpsc::channel();
+        let cells = vec![Arc::new(SnapshotCell::new(theta.clone()))];
+        let stop = Arc::new(AtomicBool::new(false));
+        let net = NetOptions {
+            hb_timeout: Duration::from_secs(60),
+            ..quick_net()
+        };
+        let frontend = TcpFrontend::start(
+            listener,
+            ShardLayout::new(dim, 1),
+            vec![grad_tx],
+            cells,
+            vec![reply_rx],
+            vec![false],
+            Arc::clone(&stop),
+            net.clone(),
+            false,
+            None,
+            None,
+        )
+        .unwrap();
+        let mut t = TcpTransport::connect(&addr, "dense", net).unwrap();
+        let mut out = vec![0.0f32; dim];
+        let v = t.refresh(0, &mut out).unwrap();
+        assert_eq!(v, 0);
+        for (i, (a, b)) in out.iter().zip(&theta).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
     fn reactor_second_worker_attaches_and_extra_is_refused() {
         crate::util::logging::set_level(crate::util::logging::Level::Off);
         let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_reactor(2, false);
@@ -1470,7 +1541,7 @@ mod tests {
         }));
         let mut msg_buf = Vec::new();
         let mut frame_buf = Vec::new();
-        encode_submit_into(0, 0, 0, 0.0, &evil, 0..1000, &mut msg_buf);
+        encode_submit_into(0, 0, 0, 0.0, &evil, 0..1000, &mut msg_buf).unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();
         assert!(grad_rxs[0].recv_timeout(Duration::from_millis(300)).is_err());
@@ -1560,7 +1631,8 @@ mod tests {
             &ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
             0..2,
             &mut msg_buf,
-        );
+        )
+        .unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();
         let grad = recv_grad(&grad_rxs[0], Duration::from_secs(2));
@@ -1718,7 +1790,7 @@ mod tests {
         let mut payload = Vec::new();
         let mut msg_buf = Vec::new();
         let mut frame_buf = Vec::new();
-        Msg::Subscribe { interval_ms: 20 }.encode_into(&mut msg_buf);
+        Msg::Subscribe { interval_ms: 20 }.encode_into(&mut msg_buf).unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();
         let deadline = Instant::now() + Duration::from_secs(3);

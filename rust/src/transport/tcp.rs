@@ -34,8 +34,11 @@
 //! with the in-process counters — see DESIGN.md §2.6 for the exact
 //! per-submission overhead formula.
 
-use super::frame::{encode_frame_into, FrameReader, FRAME_OVERHEAD};
-use super::msg::{encode_submit_into, Msg, WORKER_UNASSIGNED};
+use super::frame::{encode_frame_into, FrameReader, FRAME_OVERHEAD, MAX_PAYLOAD};
+use super::msg::{
+    apply_snapshot_delta, encode_submit_into, snapshot_response_msgs, snapshot_slice_bytes, Msg,
+    SNAP_DELTA_HEADER_BYTES, WORKER_UNASSIGNED,
+};
 use super::{Transport, TransportError};
 use crate::coordinator::compress::ShardGrad;
 use crate::coordinator::params::SnapshotCell;
@@ -69,6 +72,11 @@ pub struct NetOptions {
     /// How many full redial sequences a lost connection is granted before
     /// the transport reports itself closed.
     pub reconnect_attempts: u32,
+    /// Largest legacy full-`SnapshotSlice` payload (bytes) a refresh reply
+    /// may use; bigger slices — and every half-precision snapshot — are
+    /// served as chunked `SnapshotDelta` frames instead. Defaults to the
+    /// frame limit; tests shrink it to force chunking at small dims.
+    pub snap_full_max: usize,
 }
 
 impl Default for NetOptions {
@@ -78,6 +86,7 @@ impl Default for NetOptions {
             hb_timeout: Duration::from_secs(5),
             connect_timeout: Duration::from_secs(10),
             reconnect_attempts: 2,
+            snap_full_max: MAX_PAYLOAD,
         }
     }
 }
@@ -128,7 +137,8 @@ fn write_msg(
     msg_buf: &mut Vec<u8>,
     frame_buf: &mut Vec<u8>,
 ) -> std::io::Result<usize> {
-    msg.encode_into(msg_buf);
+    msg.encode_into(msg_buf)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
     frame_buf.clear();
     encode_frame_into(msg_buf, frame_buf);
     let mut s = stream.lock().unwrap();
@@ -210,7 +220,7 @@ pub fn query_status(addr: &str, net: &NetOptions) -> anyhow::Result<String> {
     stream.set_nodelay(true).ok();
     let mut msg_buf = Vec::new();
     let mut frame_buf = Vec::new();
-    Msg::StatusRequest.encode_into(&mut msg_buf);
+    Msg::StatusRequest.encode_into(&mut msg_buf)?;
     encode_frame_into(&msg_buf, &mut frame_buf);
     stream.write_all(&frame_buf)?;
     let mut reader = FrameReader::new();
@@ -240,7 +250,7 @@ pub fn follow_status(
     stream.set_nodelay(true).ok();
     let mut msg_buf = Vec::new();
     let mut frame_buf = Vec::new();
-    Msg::Subscribe { interval_ms }.encode_into(&mut msg_buf);
+    Msg::Subscribe { interval_ms }.encode_into(&mut msg_buf)?;
     encode_frame_into(&msg_buf, &mut frame_buf);
     stream.write_all(&frame_buf)?;
     let mut reader = FrameReader::new();
@@ -259,7 +269,7 @@ pub fn follow_status(
         if last_hb.elapsed() >= net.hb_interval {
             last_hb = Instant::now();
             hb_seq += 1;
-            Msg::Heartbeat { seq: hb_seq }.encode_into(&mut msg_buf);
+            Msg::Heartbeat { seq: hb_seq }.encode_into(&mut msg_buf)?;
             frame_buf.clear();
             encode_frame_into(&msg_buf, &mut frame_buf);
             stream.write_all(&frame_buf)?;
@@ -299,11 +309,48 @@ pub fn follow_status(
 // client
 // ---------------------------------------------------------------------------
 
+/// One snapshot-plane message routed to the refresh path: a legacy full
+/// slice (one message = one complete response) or one chunk of a delta
+/// stream (the chunk flagged `done` terminates the response).
+enum SnapUpdate {
+    Full {
+        shard: usize,
+        version: u64,
+        theta: Vec<f32>,
+    },
+    Delta {
+        shard: usize,
+        version: u64,
+        dtype: u8,
+        done: bool,
+        block_elems: u32,
+        idx: Vec<u32>,
+        lens: Vec<u32>,
+        data: Vec<u8>,
+    },
+}
+
+impl SnapUpdate {
+    fn shard(&self) -> usize {
+        match self {
+            SnapUpdate::Full { shard, .. } | SnapUpdate::Delta { shard, .. } => *shard,
+        }
+    }
+
+    /// Whether this message completes a snapshot response.
+    fn terminal(&self) -> bool {
+        match self {
+            SnapUpdate::Full { .. } => true,
+            SnapUpdate::Delta { done, .. } => *done,
+        }
+    }
+}
+
 /// One established client connection.
 struct ClientConn {
     write: Arc<Mutex<TcpStream>>,
     acks_rx: Receiver<Reply>,
-    snaps_rx: Receiver<(usize, u64, Vec<f32>)>,
+    snaps_rx: Receiver<SnapUpdate>,
     state: Arc<ConnState>,
     reader: Option<JoinHandle<()>>,
     hb: Option<JoinHandle<()>>,
@@ -356,6 +403,24 @@ pub struct TcpTransport {
     submit_bytes: u64,
     /// Received bytes of connections already torn down.
     recv_bytes_prev: u64,
+    /// Per-shard version of the last snapshot *fully applied* to the
+    /// worker's buffer — what `refresh` claims in `SnapshotRequest` so the
+    /// server can reply with only the blocks that moved. Only advanced on a
+    /// complete application; a partial delta stream leaves it stale so the
+    /// next request re-fetches every block that changed since.
+    have_versions: Vec<u64>,
+    /// Per-shard count of snapshot responses requested but not yet fully
+    /// consumed. Responses arrive in request order (one writer, FIFO), so
+    /// when this is > 1 the incoming stream belongs to an older, abandoned
+    /// request (e.g. a refresh that timed out mid-stream) and must be
+    /// skipped through its terminal chunk. Reset on reconnect: a fresh
+    /// connection has no outstanding responses.
+    snap_pending: Vec<u64>,
+    /// Snapshot-response payload bytes consumed by `refresh` (full slices
+    /// and delta chunks, message payload granularity). With the delta
+    /// protocol this measures blocks actually shipped, not slice sizes —
+    /// the worker reports it at run end via `refresh_wire_bytes`.
+    refresh_bytes: u64,
 }
 
 /// Outcome of one attach attempt: an established connection, or the
@@ -399,6 +464,9 @@ impl TcpTransport {
             frame_buf: Vec::new(),
             submit_bytes: 0,
             recv_bytes_prev: 0,
+            have_versions: vec![0; info.shards],
+            snap_pending: vec![0; info.shards],
+            refresh_bytes: 0,
         })
     }
 
@@ -439,7 +507,7 @@ impl TcpTransport {
                 shards: 0,
                 wire: wire_desc.to_string(),
             };
-            hello.encode_into(&mut msg_buf);
+            hello.encode_into(&mut msg_buf)?;
             frame_buf.clear();
             encode_frame_into(&msg_buf, &mut frame_buf);
             stream.write_all(&frame_buf)?;
@@ -470,7 +538,10 @@ impl TcpTransport {
                     "server refused the attach (no free worker slot, or the run is over)"
                 ),
                 Msg::Evict { .. } => return Ok(Attach::Evicted),
-                Msg::GradAck { .. } | Msg::SnapshotSlice { .. } | Msg::Heartbeat { .. } => {}
+                Msg::GradAck { .. }
+                | Msg::SnapshotSlice { .. }
+                | Msg::SnapshotDelta { .. }
+                | Msg::Heartbeat { .. } => {}
                 other => anyhow::bail!("expected Welcome, got {other:?}"),
             }
         };
@@ -557,6 +628,10 @@ impl TcpTransport {
                     self.recv_bytes_prev +=
                         self.conn.state.bytes_received.load(Ordering::Relaxed);
                     self.conn = conn; // old conn Drop joins its threads
+                    // The fresh connection has no outstanding snapshot
+                    // responses; `have_versions` survives — the worker's
+                    // buffer still holds whatever was last fully applied.
+                    self.snap_pending.iter_mut().for_each(|p| *p = 0);
                     log_warn!(
                         "transport",
                         "worker {} reconnected to {} (attempt {})",
@@ -628,7 +703,8 @@ impl Transport for TcpTransport {
             &msg.grad,
             range,
             &mut self.msg_buf,
-        );
+        )
+        .map_err(|e| TransportError::Closed(format!("unencodable gradient: {e}")))?;
         self.seq += 1;
         self.frame_buf.clear();
         encode_frame_into(&self.msg_buf, &mut self.frame_buf);
@@ -665,15 +741,21 @@ impl Transport for TcpTransport {
         }
     }
 
+    /// Fetch the latest published snapshot into `out`. `out` must still
+    /// hold the result of this transport's previous successful refresh of
+    /// `shard` (the worker's parameter slice does) — the request claims
+    /// that version, and a delta reply only carries the blocks that moved
+    /// since. `have_versions` advances *only* when a response is applied
+    /// completely, so a refresh abandoned mid-stream (timeout, apply
+    /// error) self-repairs: the next request re-claims the old version and
+    /// the server re-sends every block that changed after it.
     fn refresh(&mut self, shard: usize, out: &mut [f32]) -> Result<u64, TransportError> {
         if self.dead() {
             return Err(self.handle_loss());
         }
-        // Drop slices from an abandoned request (e.g. pre-reconnect).
-        while self.conn.snaps_rx.try_recv().is_ok() {}
         let req = Msg::SnapshotRequest {
             shard: shard as u32,
-            version: 0,
+            version: self.have_versions[shard],
         };
         if write_msg(
             &self.conn.write,
@@ -686,6 +768,9 @@ impl Transport for TcpTransport {
             self.conn.state.dead.store(true, Ordering::Relaxed);
             return Err(self.handle_loss());
         }
+        self.snap_pending[shard] += 1;
+        // Version of the delta stream currently being applied to `out`.
+        let mut applying: Option<u64> = None;
         let deadline = Instant::now() + self.net.hb_timeout;
         loop {
             let remaining = deadline.saturating_duration_since(Instant::now());
@@ -693,19 +778,78 @@ impl Transport for TcpTransport {
                 return Err(TransportError::Timeout);
             }
             match self.conn.snaps_rx.recv_timeout(remaining.min(POLL.max(Duration::from_millis(50)))) {
-                Ok((s, version, theta)) => {
-                    if s != shard {
-                        continue; // stale slice from a drained request
+                Ok(upd) => {
+                    let s = upd.shard();
+                    if s >= self.snap_pending.len() {
+                        continue; // impossible shard id: drop
                     }
-                    if theta.len() != out.len() {
-                        return Err(TransportError::Closed(format!(
-                            "snapshot slice for shard {s} has {} params, expected {}",
-                            theta.len(),
-                            out.len()
-                        )));
+                    // Responses arrive in request order, so while more than
+                    // one response is outstanding for a shard the incoming
+                    // stream answers an older, abandoned request — skip it
+                    // whole; its terminal chunk retires that response.
+                    if s != shard || self.snap_pending[s] > 1 {
+                        if upd.terminal() {
+                            self.snap_pending[s] = self.snap_pending[s].saturating_sub(1);
+                        }
+                        continue;
                     }
-                    out.copy_from_slice(&theta);
-                    return Ok(version);
+                    match upd {
+                        SnapUpdate::Full { version, theta, .. } => {
+                            self.snap_pending[shard] -= 1;
+                            self.refresh_bytes += snapshot_slice_bytes(theta.len()) as u64;
+                            if theta.len() != out.len() {
+                                return Err(TransportError::Closed(format!(
+                                    "snapshot slice for shard {shard} has {} params, expected {}",
+                                    theta.len(),
+                                    out.len()
+                                )));
+                            }
+                            out.copy_from_slice(&theta);
+                            self.have_versions[shard] = version;
+                            return Ok(version);
+                        }
+                        SnapUpdate::Delta {
+                            version,
+                            dtype,
+                            done,
+                            block_elems,
+                            idx,
+                            lens,
+                            data,
+                            ..
+                        } => {
+                            self.refresh_bytes +=
+                                (SNAP_DELTA_HEADER_BYTES + 8 * idx.len() + data.len()) as u64;
+                            // One response is built from one published
+                            // snapshot; a version change mid-stream means
+                            // the stream is not self-consistent.
+                            if applying.map_or(false, |v| v != version) {
+                                return Err(TransportError::Closed(format!(
+                                    "snapshot delta stream for shard {shard} changed \
+                                     version mid-flight ({} -> {version})",
+                                    applying.unwrap()
+                                )));
+                            }
+                            applying = Some(version);
+                            if let Err(e) = apply_snapshot_delta(
+                                dtype,
+                                block_elems,
+                                &idx,
+                                &lens,
+                                &data,
+                                out,
+                            ) {
+                                return Err(TransportError::Closed(format!(
+                                    "snapshot delta for shard {shard}: {e}"
+                                )));
+                            }
+                            if done {
+                                self.snap_pending[shard] -= 1;
+                                self.have_versions[shard] = version;
+                                return Ok(version);
+                            }
+                        }
+                    }
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if self.dead() {
@@ -722,6 +866,10 @@ impl Transport for TcpTransport {
             self.recv_bytes_prev + self.conn.state.bytes_received.load(Ordering::Relaxed);
         Some((self.submit_bytes, received))
     }
+
+    fn refresh_wire_bytes(&self) -> Option<u64> {
+        Some(self.refresh_bytes)
+    }
 }
 
 /// Client reader thread: decode frames, route replies and snapshots, track
@@ -732,7 +880,7 @@ fn client_read_loop(
     mut reader: FrameReader,
     state: Arc<ConnState>,
     acks_tx: Sender<Reply>,
-    snaps_tx: Sender<(usize, u64, Vec<f32>)>,
+    snaps_tx: Sender<SnapUpdate>,
     hb_timeout: Duration,
 ) {
     let _ = stream.set_read_timeout(Some(POLL));
@@ -775,7 +923,36 @@ fn client_read_loop(
                                 version,
                                 theta,
                             }) => {
-                                if snaps_tx.send((shard as usize, version, theta)).is_err() {
+                                let upd = SnapUpdate::Full {
+                                    shard: shard as usize,
+                                    version,
+                                    theta,
+                                };
+                                if snaps_tx.send(upd).is_err() {
+                                    break 'outer;
+                                }
+                            }
+                            Ok(Msg::SnapshotDelta {
+                                shard,
+                                version,
+                                dtype,
+                                done,
+                                block_elems,
+                                idx,
+                                lens,
+                                data,
+                            }) => {
+                                let upd = SnapUpdate::Delta {
+                                    shard: shard as usize,
+                                    version,
+                                    dtype,
+                                    done,
+                                    block_elems,
+                                    idx,
+                                    lens,
+                                    data,
+                                };
+                                if snaps_tx.send(upd).is_err() {
                                     break 'outer;
                                 }
                             }
@@ -1100,7 +1277,9 @@ fn follow_loop(
     let mut frame_buf = Vec::new();
     let mut push = |seq: u64, stream: &mut TcpStream, msg_buf: &mut Vec<u8>, frame_buf: &mut Vec<u8>| {
         let json = status_doc(shared);
-        Msg::StatusDelta { seq, json }.encode_into(msg_buf);
+        Msg::StatusDelta { seq, json }
+            .encode_into(msg_buf)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
         frame_buf.clear();
         encode_frame_into(msg_buf, frame_buf);
         stream.write_all(frame_buf)
@@ -1462,7 +1641,7 @@ fn server_read_loop(
                                 return Ok(()); // shards gone: run is over
                             }
                         }
-                        Msg::SnapshotRequest { shard, .. } => {
+                        Msg::SnapshotRequest { shard, version } => {
                             let shard = shard as usize;
                             anyhow::ensure!(
                                 shard < shared.layout.shards(),
@@ -1470,15 +1649,15 @@ fn server_read_loop(
                                 shared.layout.shards()
                             );
                             let snap = shared.cells[shard].load();
-                            if out_tx
-                                .send(Msg::SnapshotSlice {
-                                    shard: shard as u32,
-                                    version: snap.version,
-                                    theta: snap.theta.clone(),
-                                })
-                                .is_err()
-                            {
-                                return Ok(());
+                            for m in snapshot_response_msgs(
+                                shard as u32,
+                                &snap,
+                                version,
+                                shared.net.snap_full_max,
+                            ) {
+                                if out_tx.send(m).is_err() {
+                                    return Ok(());
+                                }
                             }
                         }
                         Msg::Heartbeat { .. } => {}
@@ -1604,6 +1783,7 @@ mod tests {
             hb_timeout: Duration::from_millis(400),
             connect_timeout: Duration::from_secs(3),
             reconnect_attempts: 1,
+            ..NetOptions::default()
         }
     }
 
@@ -1757,6 +1937,60 @@ mod tests {
     }
 
     #[test]
+    fn oversized_slice_refreshes_via_chunked_delta() {
+        crate::util::logging::set_level(crate::util::logging::Level::Off);
+        // A shard slice whose full SnapshotSlice payload exceeds the 64 MiB
+        // frame cap used to poison the stream with FrameError::TooLarge
+        // mid-run. It must now arrive as multiple chunked SnapshotDelta
+        // frames and reconstruct bitwise.
+        let dim = crate::transport::frame::MAX_PAYLOAD / 4 + 1;
+        let theta: Vec<f32> = (0..dim as u32)
+            .map(|i| f32::from_bits(i.wrapping_mul(0x9E37_79B9) >> 1))
+            .collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("{}", listener.local_addr().unwrap());
+        let (grad_tx, _grad_rx) = mpsc::channel();
+        let (_reply_tx, reply_rx) = mpsc::channel();
+        let cells = vec![Arc::new(SnapshotCell::new(theta.clone()))];
+        let stop = Arc::new(AtomicBool::new(false));
+        // Moving ~67 MiB through framing + CRC needs more than the quick
+        // heartbeat budget in debug builds.
+        let net = NetOptions {
+            hb_timeout: Duration::from_secs(60),
+            ..quick_net()
+        };
+        let frontend = ThreadedFrontend::start(
+            listener,
+            ShardLayout::new(dim, 1),
+            vec![grad_tx],
+            cells,
+            vec![reply_rx],
+            vec![false],
+            Arc::clone(&stop),
+            net.clone(),
+            false,
+            None,
+            None,
+        )
+        .unwrap();
+        let mut t = TcpTransport::connect(&addr, "dense", net).unwrap();
+        let mut out = vec![0.0f32; dim];
+        let v = t.refresh(0, &mut out).unwrap();
+        assert_eq!(v, 0);
+        for (i, (a, b)) in out.iter().zip(&theta).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
+        // The pull crossed the old single-frame ceiling, in pieces.
+        let pulled = t.refresh_wire_bytes().unwrap();
+        assert!(
+            pulled as usize > crate::transport::frame::MAX_PAYLOAD,
+            "chunked refresh moved {pulled} B"
+        );
+        drop(t);
+        frontend.shutdown();
+    }
+
+    #[test]
     fn status_endpoint_answers_without_taking_a_slot() {
         crate::util::logging::set_level(crate::util::logging::Level::Off);
         let (frontend, addr, _grad_rxs, _reply_txs, _stop) = spawn_frontend(1);
@@ -1859,7 +2093,7 @@ mod tests {
             shards: 0,
             wire: "dense".into(),
         }
-        .encode_into(&mut msg_buf);
+        .encode_into(&mut msg_buf).unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();
         let deadline = Instant::now() + Duration::from_secs(3);
@@ -1870,7 +2104,7 @@ mod tests {
             idx: vec![999],
             val: vec![1.0],
         }));
-        encode_submit_into(0, 0, 0, 0.0, &evil, 0..1000, &mut msg_buf);
+        encode_submit_into(0, 0, 0, 0.0, &evil, 0..1000, &mut msg_buf).unwrap();
         frame_buf.clear();
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();
@@ -1925,6 +2159,7 @@ mod tests {
                 quick_net(),
                 false,
                 None,
+                None,
             )
             .unwrap();
             std::thread::sleep(Duration::from_millis(400));
@@ -1961,7 +2196,7 @@ mod tests {
                 dim: 2,
                 delayed: false,
             }
-            .encode_into(&mut msg_buf);
+            .encode_into(&mut msg_buf).unwrap();
             encode_frame_into(&msg_buf, &mut frame_buf);
             s.write_all(&frame_buf).unwrap();
             // hold the socket open, silently, long enough to trip the
@@ -2071,7 +2306,7 @@ mod tests {
             shards: 0,
             wire: "dense".into(),
         }
-        .encode_into(&mut msg_buf);
+        .encode_into(&mut msg_buf).unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();
         let deadline = Instant::now() + Duration::from_secs(3);
@@ -2132,7 +2367,8 @@ mod tests {
             &ShardGrad::Dense(Arc::new(vec![1.0, 2.0, 3.0, 4.0])),
             0..2,
             &mut msg_buf,
-        );
+        )
+        .unwrap();
         // encode_submit_into fills msg_buf with the message; frame it.
         encode_frame_into(&msg_buf, &mut frame_buf);
         s.write_all(&frame_buf).unwrap();

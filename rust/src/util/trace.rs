@@ -28,7 +28,7 @@ use std::sync::OnceLock;
 use std::time::Instant;
 
 /// Number of lifecycle stages (spans + instants).
-pub const STAGE_COUNT: usize = 11;
+pub const STAGE_COUNT: usize = 12;
 
 /// Stages that are spans (have a duration) — the first `SPAN_COUNT`
 /// discriminants of [`Stage`]; the rest are instants.
@@ -66,6 +66,9 @@ pub enum Stage {
     Leave = 9,
     /// Instant: a frontend evicted a worker (timeout / slot reuse).
     Evict = 10,
+    /// Instant: the shard published a fresh snapshot (aux = bytes copied
+    /// into the snapshot pool — the delta path's memory traffic).
+    Publish = 11,
 }
 
 /// All stages, in discriminant order (spans first, then instants).
@@ -81,6 +84,7 @@ pub const STAGES: [Stage; STAGE_COUNT] = [
     Stage::Join,
     Stage::Leave,
     Stage::Evict,
+    Stage::Publish,
 ];
 
 impl Stage {
@@ -98,6 +102,7 @@ impl Stage {
             Stage::Join => "join",
             Stage::Leave => "leave",
             Stage::Evict => "evict",
+            Stage::Publish => "publish",
         }
     }
 

@@ -2,8 +2,8 @@
 //! the tier-1 environment.
 //!
 //! The authoring container has no Rust toolchain, so `BENCH_compress.json`,
-//! `BENCH_transport.json` and `BENCH_trace.json` ship with exact byte
-//! counts but `ops_per_sec: null`. The tier-1 suite is the first place the code
+//! `BENCH_transport.json`, `BENCH_trace.json` and `BENCH_memory.json` ship
+//! with exact byte counts but `ops_per_sec: null`. The tier-1 suite is the first place the code
 //! actually runs; this test re-measures each case with a small fixed
 //! budget and writes the numbers into the baseline files (only filling
 //! nulls — a populated file is left alone except for a consistency check
@@ -149,12 +149,12 @@ fn measure_transport_cases() -> BTreeMap<(String, String), (f64, usize)> {
         for (fmt, grad, shard_len) in payloads {
             let mut msg_buf = Vec::new();
             let mut frame_buf = Vec::new();
-            encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf);
+            encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf).unwrap();
             frame_buf.clear();
             encode_frame_into(&msg_buf, &mut frame_buf);
             let frame_bytes = frame_buf.len();
             let ops = measure(|| {
-                encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf);
+                encode_submit_into(0, 1, 2, 0.5, &grad, 0..shard_len, &mut msg_buf).unwrap();
                 frame_buf.clear();
                 encode_frame_into(&msg_buf, &mut frame_buf);
             });
@@ -242,6 +242,66 @@ fn measure_trace_cases() -> BTreeMap<String, f64> {
     out.insert("submit_trace_off".to_string(), off);
     out.insert("submit_trace_ring".to_string(), ring);
     out.insert("submit_trace_export".to_string(), exporting);
+    out
+}
+
+/// The `BENCH_memory.json` case set (key = (name, dim, dtype)), mirroring
+/// `bench_hotpath`'s memory section at the quick dims. Returns ops/sec
+/// plus the exact steady-state bytes-per-publish for the byte-column
+/// consistency check. The `peak_rss` rows are deliberately left alone:
+/// VmHWM in a shared debug test process says nothing about the bench's
+/// memory story (see the file's note).
+fn measure_memory_cases() -> BTreeMap<(String, usize, String), (f64, usize)> {
+    use hybrid_sgd::coordinator::params::{block_count, ParamStore, BLOCK_ELEMS};
+    use hybrid_sgd::coordinator::{ParamDtype, SnapshotCell};
+    let mut out = BTreeMap::new();
+    for &dim in &[1_000_000usize, 10_000_000] {
+        let touched = (block_count(dim) / 100).max(1);
+        let idx: Vec<u32> = (0..touched as u32).map(|i| i * 100 * BLOCK_ELEMS as u32).collect();
+        let val = vec![1e-3f32; touched];
+        let mut grad = vec![0.0f32; dim];
+        Pcg64::seeded(11).fill_normal(&mut grad, 1.0);
+        for dtype in [ParamDtype::F32, ParamDtype::F16] {
+            // Empty initial cell: same construction shape as the bench.
+            let cell = Arc::new(SnapshotCell::new(Vec::new()));
+            let mut ps = ParamStore::with_cell_dtype(vec![0.1; dim], 0.01, cell, dtype);
+            let ops = measure(|| ps.apply_single(&grad));
+            let (p0, b0) = (ps.publishes(), ps.snapshot_bytes_published());
+            for _ in 0..4 {
+                ps.apply_single(&grad);
+            }
+            let per = ((ps.snapshot_bytes_published() - b0) / (ps.publishes() - p0)) as usize;
+            out.insert(
+                ("publish_dense".to_string(), dim, dtype.as_str().to_string()),
+                (ops, per),
+            );
+
+            let cell = Arc::new(SnapshotCell::new(Vec::new()));
+            let mut ps = ParamStore::with_cell_dtype(vec![0.1; dim], 0.01, cell, dtype);
+            let ops = measure(|| {
+                ps.apply_view(GradView::Sparse {
+                    idx: &idx,
+                    val: &val,
+                })
+            });
+            let (p0, b0) = (ps.publishes(), ps.snapshot_bytes_published());
+            for _ in 0..4 {
+                ps.apply_view(GradView::Sparse {
+                    idx: &idx,
+                    val: &val,
+                });
+            }
+            let per = ((ps.snapshot_bytes_published() - b0) / (ps.publishes() - p0)) as usize;
+            out.insert(
+                (
+                    "publish_delta1pct".to_string(),
+                    dim,
+                    dtype.as_str().to_string(),
+                ),
+                (ops, per),
+            );
+        }
+    }
     out
 }
 
@@ -461,4 +521,20 @@ fn populate_bench_baselines_from_quick_run() {
         let ops = *trace.get(&name)?;
         Some((ops, None))
     });
+
+    // The big-model memory-path rows (ISSUE 10). bytes_per_publish is
+    // exact steady-state accounting; keep the committed column honest.
+    // Cases outside the quick dims (the full-run 1e8 row) stay null here.
+    let memory = measure_memory_cases();
+    populate(
+        &root.join("BENCH_memory.json"),
+        "bytes_per_publish",
+        |case| {
+            let name = case.get("name")?.as_str()?.to_string();
+            let dim = case.get("dim")?.as_usize()?;
+            let dtype = case.get("dtype")?.as_str()?.to_string();
+            let (ops, bytes) = *memory.get(&(name, dim, dtype))?;
+            Some((ops, Some(bytes)))
+        },
+    );
 }

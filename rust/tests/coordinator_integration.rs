@@ -38,6 +38,10 @@ fn train_cfg(
         elastic: false,
         min_quorum: 1,
         stream: None,
+        aggregate: hybrid_sgd::coordinator::AggregateMode::Mean,
+        partition: hybrid_sgd::data::Partition::Iid,
+        trace: None,
+        param_dtype: hybrid_sgd::coordinator::ParamDtype::F32,
     }
 }
 

@@ -171,7 +171,8 @@ fn prop_submit_roundtrips_bitwise_across_formats_and_shards() {
                     &payloads[s],
                     range.clone(),
                     &mut msg_buf,
-                );
+                )
+                .map_err(|e| e.to_string())?;
                 frame.clear();
                 encode_frame_into(&msg_buf, &mut frame);
                 let (framed, consumed) = decode_frame(&frame).map_err(|e| e.to_string())?;
@@ -314,6 +315,7 @@ fn slow_loris_is_evicted_without_stalling_other_connections() {
         hb_timeout: Duration::from_millis(400),
         connect_timeout: Duration::from_secs(5),
         reconnect_attempts: 0,
+        ..NetOptions::default()
     };
     let frontend = Frontend::start(
         FrontendKind::Reactor,
@@ -326,6 +328,7 @@ fn slow_loris_is_evicted_without_stalling_other_connections() {
         Arc::clone(&stop),
         net.clone(),
         true, // elastic: eviction is announced as a Leave
+        None,
         None,
     )
     .expect("start reactor");
@@ -361,7 +364,8 @@ fn slow_loris_is_evicted_without_stalling_other_connections() {
             shards: 0,
             wire: "dense".to_string(),
         }
-        .encode_into(&mut msg_buf);
+        .encode_into(&mut msg_buf)
+        .unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         loris.write_all(&frame_buf).unwrap();
     }
@@ -375,7 +379,7 @@ fn slow_loris_is_evicted_without_stalling_other_connections() {
         // every ~550 ms: always slower than the 400 ms liveness window.
         let mut msg_buf = Vec::new();
         let mut frame_buf = Vec::new();
-        Msg::Heartbeat { seq: 1 }.encode_into(&mut msg_buf);
+        Msg::Heartbeat { seq: 1 }.encode_into(&mut msg_buf).unwrap();
         encode_frame_into(&msg_buf, &mut frame_buf);
         let mut i = 0usize;
         loop {
@@ -452,7 +456,8 @@ fn prop_msg_truncation_is_typed() {
         let mut payloads = Vec::new();
         enc.encode(&grad, &layout, &mut payloads);
         let mut msg_buf = Vec::new();
-        encode_submit_into(0, 0, 0, 0.0, &payloads[0], 0..dim, &mut msg_buf);
+        encode_submit_into(0, 0, 0, 0.0, &payloads[0], 0..dim, &mut msg_buf)
+            .map_err(|e| e.to_string())?;
         for cut in 0..msg_buf.len() {
             match Msg::decode(&msg_buf[..cut]) {
                 Err(WireError::Truncated { .. }) => {}

@@ -41,7 +41,8 @@ fn raw_attach(addr: &str) -> TcpStream {
         shards: 0,
         wire: "dense".to_string(),
     }
-    .encode_into(&mut msg_buf);
+    .encode_into(&mut msg_buf)
+    .expect("encode hello");
     encode_frame_into(&msg_buf, &mut frame_buf);
     stream.write_all(&frame_buf).expect("send hello");
     let mut reader = FrameReader::new();
@@ -85,6 +86,7 @@ fn reactor_thread_count_is_constant_in_connections() {
         hb_timeout: Duration::from_secs(300),
         connect_timeout: Duration::from_secs(5),
         reconnect_attempts: 0,
+        ..NetOptions::default()
     };
     let frontend = Frontend::start(
         FrontendKind::Reactor,
@@ -97,6 +99,7 @@ fn reactor_thread_count_is_constant_in_connections() {
         Arc::clone(&stop),
         net,
         false,
+        None,
         None,
     )
     .expect("start reactor");

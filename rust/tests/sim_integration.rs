@@ -465,6 +465,10 @@ fn trainconfig_scenario_equivalence() {
         elastic: false,
         min_quorum: 1,
         stream: None,
+        aggregate: hybrid_sgd::coordinator::AggregateMode::Mean,
+        partition: hybrid_sgd::data::Partition::Iid,
+        trace: None,
+        param_dtype: hybrid_sgd::coordinator::ParamDtype::F32,
     };
     let via_struct = Scenario {
         train: tc,

@@ -51,6 +51,7 @@ fn quick_net() -> NetOptions {
         hb_timeout: Duration::from_secs(3),
         connect_timeout: Duration::from_secs(5),
         reconnect_attempts: 2,
+        ..NetOptions::default()
     }
 }
 
@@ -133,6 +134,61 @@ fn tcp_dense_matches_inproc_bitwise_with_frame_overhead() {
         );
         assert_eq!(m_tcp.bytes_sent, m_tcp.bytes_received);
         assert_eq!(m_tcp.bytes_dense_equiv, m_inproc.bytes_dense_equiv);
+    }
+}
+
+#[test]
+fn tcp_delta_snapshots_match_full_snapshots_bitwise() {
+    // Acceptance for the big-model refresh path: with `--param-dtype f32`,
+    // serving every snapshot response as chunked SnapshotDelta frames
+    // (snap_full_max = 0) must leave the learning outcome bitwise-identical
+    // to the legacy full-SnapshotSlice protocol — the delta path is a wire
+    // optimization, never a numeric one.
+    let fx = fixture(35);
+    let inputs = inputs_for(&fx, 1);
+    for shards in [1usize, 2] {
+        let tc = steps_cfg(1, shards, 25);
+        let mut finals: Vec<Vec<u32>> = Vec::new();
+        let mut refresh_bytes: Vec<u64> = Vec::new();
+        for snap_full_max in [usize::MAX, 0] {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = format!("{}", listener.local_addr().unwrap());
+            let net = NetOptions {
+                snap_full_max,
+                ..quick_net()
+            };
+            let m = std::thread::scope(|s| {
+                let tc_ref = &tc;
+                let inputs_ref = &inputs;
+                let net_ref = &net;
+                let server = s.spawn(move || serve(tc_ref, inputs_ref, listener, net_ref));
+                let report = join_remote(
+                    &addr,
+                    &net,
+                    WireFormat::Dense,
+                    DelayModel::none(),
+                    tc.seed,
+                    Duration::ZERO,
+                    Some(25),
+                    Duration::from_secs(30),
+                    std::sync::Arc::clone(&inputs.worker_engine),
+                    std::sync::Arc::clone(&inputs.batch_source),
+                    Some(1),
+                    None,
+                )
+                .expect("join_remote");
+                assert_eq!(report.grads_sent, 25);
+                refresh_bytes.push(report.refresh_bytes);
+                server.join().expect("server thread").expect("serve run")
+            });
+            finals.push(bits(&m.final_params));
+        }
+        assert_eq!(
+            finals[0], finals[1],
+            "S={shards}: delta-snapshot run diverged from the full-snapshot run"
+        );
+        // Both protocols measured their pull volume over the wire.
+        assert!(refresh_bytes.iter().all(|&b| b > 0), "S={shards}");
     }
 }
 
